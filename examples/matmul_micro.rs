@@ -1,0 +1,46 @@
+//! The §V matrix-multiplication micro-benchmark on the real runtimes,
+//! all four approaches of Fig 2 plus the cutoff variant of Fig 4.
+//!
+//! ```bash
+//! cargo run --release --example matmul_micro
+//! ```
+//!
+//! Every approach is verified against the sequential result. Wall
+//! clock on this container reflects runtime overhead (1 core); the
+//! 63-core curves come from `gprm exp fig2 fig3 fig4`.
+
+use gprm::apps::matmul::{run_matmul, MatmulApproach, MatmulExec};
+use gprm::coordinator::kernel::Registry;
+use gprm::coordinator::{GprmConfig, GprmRuntime};
+use gprm::omp::OmpRuntime;
+
+fn main() {
+    let threads = 8;
+    let gprm = GprmRuntime::new(
+        GprmConfig { n_tiles: threads, pin: false },
+        Registry::new(),
+    );
+    let omp = OmpRuntime::new(threads);
+    let exec = MatmulExec { gprm: Some(&gprm), omp: Some(&omp) };
+
+    for (m, n) in [(2000usize, 20usize), (500, 50), (128, 100)] {
+        println!("--- {m} jobs of size {n}x{n} ---");
+        for approach in [
+            MatmulApproach::Sequential,
+            MatmulApproach::OmpForStatic,
+            MatmulApproach::OmpForDynamic,
+            MatmulApproach::OmpTask { cutoff: 1 },
+            MatmulApproach::OmpTask { cutoff: (m / threads).max(1) },
+            MatmulApproach::GprmParFor,
+        ] {
+            let (dt, err) = run_matmul(approach, m, n, &exec);
+            assert_eq!(err, 0.0, "{approach} diverged from sequential");
+            let mflops =
+                2.0 * m as f64 * n as f64 * n as f64 / dt.as_secs_f64() / 1e6;
+            println!("{approach:<28} {dt:>10.2?}  {mflops:>9.1} Mflop/s  ✓");
+        }
+    }
+    gprm.shutdown();
+    omp.shutdown();
+    println!("matmul_micro OK");
+}

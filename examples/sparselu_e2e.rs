@@ -1,0 +1,125 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sparselu_e2e
+//! ```
+//!
+//! * L1/L2: block kernels written in JAX/Pallas, AOT-lowered to HLO
+//!   text (`make artifacts`), loaded and executed via PJRT;
+//! * L3: the GPRM coordinator schedules the SparseLU task graph with
+//!   the paper's hybrid worksharing-tasking (Listings 5–6);
+//! * verification: ‖A − L·U‖/‖A‖ on the factorised matrix, plus a
+//!   cross-check against the sequential BOTS reference.
+//!
+//! Also runs the OpenMP-tasking baseline (Fig 5) on the same input
+//! and reports both wall-clock times. (On this 1-core container the
+//! times show overhead, not speedup — the 63-tile performance story
+//! is `gprm exp`, which runs the calibrated TILEPro64 simulator.)
+
+use gprm::apps::sparselu::{sparselu_gprm, sparselu_omp, LuBackend, LuRunConfig};
+use gprm::coordinator::kernel::Registry;
+use gprm::coordinator::{GprmConfig, GprmRuntime};
+use gprm::linalg::genmat::genmat;
+use gprm::linalg::lu::sparselu_seq;
+use gprm::linalg::verify::{assert_blocked_close, lu_residual_sparse};
+use gprm::omp::OmpRuntime;
+use gprm::runtime::{default_artifact_dir, EngineService};
+
+fn main() {
+    let nb = 12; // blocks per dimension
+    let bs = 16; // block size → 192×192 matrix
+    let threads = 8;
+
+    println!("=== SparseLU end-to-end: {nb}x{nb} blocks of {bs}x{bs} ===");
+    let a0 = genmat(nb, bs);
+    println!(
+        "input: {}x{} matrix, {}/{} blocks allocated ({:.1}% sparse)",
+        nb * bs,
+        nb * bs,
+        a0.allocated_blocks(),
+        nb * nb,
+        a0.sparsity() * 100.0
+    );
+    let dense0 = a0.to_dense();
+
+    // Sequential BOTS reference.
+    let mut a_seq = a0.deep_clone();
+    let t0 = std::time::Instant::now();
+    sparselu_seq(&mut a_seq);
+    println!("sequential reference: {:?}", t0.elapsed());
+
+    // PJRT engine over the AOT artifacts; precompile the bs=16
+    // executables so first-use compilation stays off the timings
+    // (EXPERIMENTS.md §Perf L3#1).
+    let engine = EngineService::start(default_artifact_dir()).expect(
+        "PJRT engine failed to start — did you run `make artifacts`?",
+    );
+    let t0 = std::time::Instant::now();
+    let n = engine.precompile(Some(bs)).expect("precompile");
+    println!(
+        "PJRT platform: {}; precompiled {n} executables in {:?}",
+        engine.platform(),
+        t0.elapsed()
+    );
+
+    // Fairness: one untimed warmup factorisation so both timed runs
+    // see an equally warm engine (allocator + code paths).
+    {
+        let gprm = GprmRuntime::new(
+            GprmConfig { n_tiles: threads, pin: false },
+            Registry::new(),
+        );
+        let mut warm = a0.deep_clone();
+        sparselu_gprm(
+            &gprm,
+            &mut warm,
+            &LuRunConfig { backend: LuBackend::Pjrt(&engine), contiguous: false },
+        );
+        gprm.shutdown();
+    }
+
+    // GPRM + PJRT: the paper's runtime over the Pallas kernels.
+    let gprm = GprmRuntime::new(
+        GprmConfig { n_tiles: threads, pin: false },
+        Registry::new(),
+    );
+    let mut a_gprm = a0.deep_clone();
+    let t0 = std::time::Instant::now();
+    sparselu_gprm(
+        &gprm,
+        &mut a_gprm,
+        &LuRunConfig { backend: LuBackend::Pjrt(&engine), contiguous: false },
+    );
+    let t_gprm = t0.elapsed();
+    let stats = gprm.stats_total();
+    println!(
+        "gprm({threads} tiles) + pjrt: {t_gprm:?} ({} packets, {} tasks)",
+        stats.packets, stats.tasks
+    );
+    gprm.shutdown();
+
+    // OpenMP baseline + PJRT on the same input.
+    let omp = OmpRuntime::new(threads);
+    let mut a_omp = a0.deep_clone();
+    let t0 = std::time::Instant::now();
+    sparselu_omp(
+        &omp,
+        &mut a_omp,
+        &LuRunConfig { backend: LuBackend::Pjrt(&engine), contiguous: false },
+    );
+    println!("omp({threads} threads) + pjrt: {:?}", t0.elapsed());
+    omp.shutdown();
+
+    // Verification 1: mathematical residual.
+    let res = lu_residual_sparse(&dense0, &a_gprm);
+    println!("gprm+pjrt residual ‖A−LU‖/‖A‖ = {res:.3e}");
+    assert!(res < 1e-3, "residual too large");
+
+    // Verification 2: all three agree (PJRT f32 vs rust f32 kernels
+    // round differently at the ulp level).
+    let d1 = assert_blocked_close(&a_gprm, &a_seq, 2e-2);
+    let d2 = assert_blocked_close(&a_omp, &a_seq, 2e-2);
+    println!("max |gprm − seq| = {d1:.2e}, max |omp − seq| = {d2:.2e}");
+
+    println!("sparselu_e2e OK");
+}

@@ -1,0 +1,124 @@
+"""AOT lowering: JAX → HLO **text** artifacts + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/gen_hlo.py).
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Writes one ``<name>.hlo.txt`` per (op, block-size) pair plus
+``manifest.json`` describing every artifact (consumed by
+``rust/src/runtime``).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Block sizes the evaluation uses (paper Fig 6: 4000/NB for
+# NB ∈ {50,100,200,400,500} → 80,40,20,10,8) plus powers of two for
+# the examples.
+BLOCK_SIZES = [8, 10, 16, 20, 32, 40, 64, 80]
+MATMUL_SIZES = [64, 128, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *shapes):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def build_artifacts(out_dir: str, block_sizes=None, matmul_sizes=None):
+    """Lower every artifact into `out_dir`; returns the manifest."""
+    block_sizes = block_sizes or BLOCK_SIZES
+    matmul_sizes = matmul_sizes or MATMUL_SIZES
+    os.makedirs(out_dir, exist_ok=True)
+    ops = []
+
+    def emit(name, text, op, bs, arity, outputs):
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        ops.append(
+            {
+                "name": name,
+                "file": path,
+                "op": op,
+                "bs": bs,
+                "arity": arity,
+                "outputs": outputs,
+            }
+        )
+
+    for bs in block_sizes:
+        s = (bs, bs)
+        emit(f"lu0_bs{bs}", lower(model.lu0_block, s), "lu0", bs, 1, 1)
+        emit(f"fwd_bs{bs}", lower(model.fwd_block, s, s), "fwd", bs, 2, 1)
+        emit(f"bdiv_bs{bs}", lower(model.bdiv_block, s, s), "bdiv", bs, 2, 1)
+        emit(
+            f"bmod_bs{bs}",
+            lower(model.bmod_block, s, s, s),
+            "bmod",
+            bs,
+            3,
+            1,
+        )
+        emit(
+            f"lustep_bs{bs}",
+            lower(model.lu_step, s, s, s, s),
+            "lustep",
+            bs,
+            4,
+            4,
+        )
+    for n in matmul_sizes:
+        emit(
+            f"matmul_n{n}",
+            lower(model.matmul_model, (n, n), (n, n)),
+            "matmul",
+            n,
+            2,
+            1,
+        )
+
+    manifest = {"version": 1, "dtype": "f32", "ops": ops}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--block-sizes",
+        default=",".join(map(str, BLOCK_SIZES)),
+        help="comma-separated block sizes",
+    )
+    args = ap.parse_args()
+    bss = [int(x) for x in args.block_sizes.split(",") if x]
+    manifest = build_artifacts(args.out, block_sizes=bss)
+    n = len(manifest["ops"])
+    print(f"wrote {n} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

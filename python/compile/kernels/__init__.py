@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for the SparseLU block operations and the MatMul
+micro-benchmark, plus the pure-jnp oracle (`ref`).
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT client
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md);
+real-TPU efficiency is estimated from the BlockSpec structure in
+DESIGN.md §Perf.
+"""
+
+from . import ref  # noqa: F401
+from .lu_block import bdiv, fwd, lu0  # noqa: F401
+from .bmod import bmod  # noqa: F401
+from .matmul import matmul  # noqa: F401

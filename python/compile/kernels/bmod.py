@@ -1,0 +1,81 @@
+"""The ``bmod`` Pallas kernel — the paper's compute hot-spot
+(`inner ← inner − row·col`, a GEMM-subtract: 2·bs³ flops per call and
+~NB³/12 calls per factorisation).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the TILEPro64
+executes bmod as a scalar VLIW loop out of its per-tile L2; on a TPU
+the same operation is an MXU matmul. The kernel tiles the (i, j)
+output space across the grid with a K-reduction as the fastest-moving
+grid dimension, accumulating in the VMEM-resident output block —
+the BlockSpec plays the role the per-tile cache plays in the paper.
+For the evaluation's block sizes (8…80) a single 128×128-aligned tile
+suffices; larger blocks split into `TILE`-sized tiles.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly tile edge. Blocks ≤ TILE run as a single program.
+TILE = 128
+
+
+def _bmod_kernel_single(row_ref, col_ref, inner_ref, o_ref):
+    o_ref[...] = inner_ref[...] - row_ref[...] @ col_ref[...]
+
+
+def _bmod_kernel_tiled(row_ref, col_ref, inner_ref, o_ref, *, nk):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = inner_ref[...]
+
+    o_ref[...] = o_ref[...] - row_ref[...] @ col_ref[...]
+    _ = nk
+
+
+@jax.jit
+def bmod(row, col, inner):
+    """inner ← inner − row·col for one `bs×bs` block triple."""
+    bs = row.shape[0]
+    assert row.shape == col.shape == inner.shape == (bs, bs)
+    if bs <= TILE:
+        return pl.pallas_call(
+            _bmod_kernel_single,
+            out_shape=jax.ShapeDtypeStruct((bs, bs), inner.dtype),
+            interpret=True,
+        )(row, col, inner)
+    assert bs % TILE == 0, f"large blocks must be multiples of {TILE}"
+    nt = bs // TILE
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_bmod_kernel_tiled, nk=nt),
+        grid=(nt, nt, nt),
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (i, k)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (k, j)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bs, bs), inner.dtype),
+        interpret=True,
+    )(row, col, inner)
+
+
+def vmem_bytes(bs: int) -> int:
+    """VMEM working set of one bmod program instance (f32):
+    row + col + inner + out tiles."""
+    t = min(bs, TILE)
+    return 4 * (t * t) * 4
+
+
+def mxu_utilization_estimate(bs: int) -> float:
+    """Fraction of MXU lanes a `bs×bs` matmul tile can fill (128×128
+    systolic array): (bs/128)² capped at 1. The paper's small blocks
+    (8…20) underfill the MXU — the same granularity effect the paper
+    studies on the TILEPro64, transposed to TPU hardware."""
+    t = min(bs, TILE)
+    return (t / TILE) ** 2
+
+
+_ = jnp  # referenced by doctests/imports

@@ -1,0 +1,99 @@
+"""Pallas kernels for the three panel operations: ``lu0`` (diagonal
+factorisation), ``fwd`` (unit-lower solve) and ``bdiv`` (upper solve
+from the right).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): these are small
+sequential solves — on a TPU they run as single-tile VMEM-resident
+kernels (one `bs×bs` f32 block is at most 80·80·4 = 25.6 KB, far under
+the ~16 MB VMEM budget), with the k-loop expressed as an in-register
+`fori_loop` of rank-1 updates feeding the VPU; the MXU hot-spot is
+`bmod` (see bmod.py).
+"""
+
+import functools
+
+import jax
+import jax.lax as lax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lu0_kernel(a_ref, o_ref):
+    a = a_ref[...]
+    bs = a.shape[0]
+    idx = lax.iota(jnp.int32, bs)
+
+    def step(k, a):
+        pivot = a[k, k]
+        below = idx > k
+        lcol = jnp.where(below, a[:, k] / pivot, a[:, k])
+        a = a.at[:, k].set(lcol)
+        # rank-1 elimination of the trailing submatrix
+        lmask = jnp.where(below, lcol, 0.0)
+        urow = jnp.where(idx > k, a[k, :], 0.0)
+        return a - jnp.outer(lmask, urow)
+
+    o_ref[...] = lax.fori_loop(0, bs, step, a)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lu0(diag):
+    """Unpivoted LU of one block; returns packed L\\U."""
+    bs = diag.shape[0]
+    assert diag.shape == (bs, bs)
+    return pl.pallas_call(
+        _lu0_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), diag.dtype),
+        interpret=True,
+    )(diag)
+
+
+def _fwd_kernel(diag_ref, col_ref, o_ref):
+    diag = diag_ref[...]
+    bs = diag.shape[0]
+    idx = lax.iota(jnp.int32, bs)
+
+    def step(k, c):
+        # Row k of c is final; eliminate it from rows below.
+        lk = jnp.where(idx > k, diag[:, k], 0.0)
+        return c - jnp.outer(lk, c[k, :])
+
+    o_ref[...] = lax.fori_loop(0, bs, step, col_ref[...])
+
+
+@jax.jit
+def fwd(diag, col):
+    """col ← L(diag)⁻¹ · col (forward substitution, unit diagonal)."""
+    bs = diag.shape[0]
+    assert diag.shape == col.shape == (bs, bs)
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), col.dtype),
+        interpret=True,
+    )(diag, col)
+
+
+def _bdiv_kernel(diag_ref, row_ref, o_ref):
+    diag = diag_ref[...]
+    bs = diag.shape[0]
+    idx = lax.iota(jnp.int32, bs)
+
+    def step(k, r):
+        rk = r[:, k] / diag[k, k]
+        r = r.at[:, k].set(rk)
+        uk = jnp.where(idx > k, diag[k, :], 0.0)
+        return r - jnp.outer(rk, uk)
+
+    o_ref[...] = lax.fori_loop(0, bs, step, row_ref[...])
+
+
+@jax.jit
+def bdiv(diag, row):
+    """row ← row · U(diag)⁻¹ (back substitution from the right)."""
+    bs = diag.shape[0]
+    assert diag.shape == row.shape == (bs, bs)
+    return pl.pallas_call(
+        _bdiv_kernel,
+        out_shape=jax.ShapeDtypeStruct((bs, bs), row.dtype),
+        interpret=True,
+    )(diag, row)

@@ -1,0 +1,53 @@
+"""Tiled Pallas GEMM for the MatMul micro-benchmark (paper §V).
+
+C = A·B with A: m×n, B: n×p. The grid tiles (m, p) with a K-reduction
+as the innermost grid dimension; shapes must divide the tile (the L2
+wrapper in model.py pads otherwise).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = o_ref[...] + a_ref[...] @ b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def matmul(a, b, tile: int = 128):
+    """C = A·B, tiled `tile×tile` with K-accumulation in the output
+    block. Falls back to a single program when shapes are small."""
+    m, n = a.shape
+    n2, p = b.shape
+    assert n == n2, "inner dims must agree"
+    if m <= tile and n <= tile and p <= tile:
+        return pl.pallas_call(
+            lambda a_ref, b_ref, o_ref: o_ref.__setitem__(
+                ..., a_ref[...] @ b_ref[...]
+            ),
+            out_shape=jax.ShapeDtypeStruct((m, p), a.dtype),
+            interpret=True,
+        )(a, b)
+    assert m % tile == 0 and n % tile == 0 and p % tile == 0, (
+        f"shapes ({m},{n},{p}) must be multiples of {tile}; "
+        "use model.matmul_padded for arbitrary shapes"
+    )
+    grid = (m // tile, p // tile, n // tile)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tile, tile), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the block kernels.
+
+These are written against *independent* formulations (triangular
+solves, plain matmul) so a bug shared with the Pallas kernels cannot
+cancel out: ``fwd``/``bdiv`` go through
+``jax.scipy.linalg.solve_triangular``, ``bmod`` is a bare GEMM, and
+``lu0`` is validated in tests by L·U reconstruction on top of the
+loop reference here.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+
+def lu0_ref(diag):
+    """Unpivoted LU (Doolittle), packed L\\U."""
+    bs = diag.shape[0]
+
+    def step(k, a):
+        pivot = a[k, k]
+        scale = jnp.where(jnp.arange(bs) > k, 1.0 / pivot, 0.0)
+        lcol = a[:, k] * scale
+        a = a.at[:, k].set(jnp.where(jnp.arange(bs) > k, lcol, a[:, k]))
+        urow = jnp.where(jnp.arange(bs) > k, a[k, :], 0.0)
+        lmask = jnp.where(jnp.arange(bs) > k, a[:, k], 0.0)
+        return a - jnp.outer(lmask, urow)
+
+    return lax.fori_loop(0, bs, step, diag)
+
+
+def fwd_ref(diag, col):
+    """col ← L(diag)⁻¹ · col with unit-lower L packed in ``diag``."""
+    return solve_triangular(diag, col, lower=True, unit_diagonal=True)
+
+
+def bdiv_ref(diag, row):
+    """row ← row · U(diag)⁻¹ with upper U packed in ``diag``."""
+    # X·U = row  ⇔  Uᵀ·Xᵀ = rowᵀ (lower-triangular solve).
+    return solve_triangular(diag.T, row.T, lower=True, unit_diagonal=False).T
+
+
+def bmod_ref(row, col, inner):
+    """inner ← inner − row·col (Schur update)."""
+    return inner - row @ col
+
+
+def matmul_ref(a, b):
+    """Plain GEMM for the micro-benchmark kernel."""
+    return a @ b
+
+
+def split_lu(packed):
+    """Packed L\\U → (unit-lower L, upper U)."""
+    l = jnp.tril(packed, -1) + jnp.eye(packed.shape[0], dtype=packed.dtype)
+    u = jnp.triu(packed)
+    return l, u

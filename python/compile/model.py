@@ -1,0 +1,69 @@
+"""L2: the JAX compute graphs composed from the L1 kernels.
+
+Build-time only — `aot.py` lowers these once to HLO text and the rust
+coordinator executes the artifacts via PJRT; Python never runs on the
+request path.
+
+The SparseLU "model" is the per-elimination-step panel update: given
+the diagonal block and one (row-panel, col-panel, inner) block triple,
+apply lu0/fwd/bdiv/bmod. The rust coordinator owns the outer kk loop,
+the sparsity-driven task creation and the worksharing — that *is* the
+paper's contribution and lives at L3.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bdiv, bmod, fwd, lu0, matmul
+
+
+def lu0_block(diag):
+    """Artifact `lu0_bs{bs}`: factorise one diagonal block."""
+    return (lu0(diag),)
+
+
+def fwd_block(diag, col):
+    """Artifact `fwd_bs{bs}`."""
+    return (fwd(diag, col),)
+
+
+def bdiv_block(diag, row):
+    """Artifact `bdiv_bs{bs}`."""
+    return (bdiv(diag, row),)
+
+
+def bmod_block(row, col, inner):
+    """Artifact `bmod_bs{bs}`."""
+    return (bmod(row, col, inner),)
+
+
+def lu_step(diag, row_blk, col_blk, inner):
+    """Artifact `lustep_bs{bs}`: one fused elimination micro-step on a
+    2×2 block quadrant — lu0 + fwd + bdiv + bmod in a single XLA
+    program (fusion demo + fewer PJRT round-trips for the e2e path):
+
+        [diag    row_blk]      [LU(diag)   L⁻¹·row_blk          ]
+        [col_blk inner  ]  →   [col_blk·U⁻¹  inner − col'·row'  ]
+    """
+    d = lu0(diag)
+    r = fwd(d, row_blk)
+    c = bdiv(d, col_blk)
+    i = bmod(c, r, inner)
+    return d, r, c, i
+
+
+def matmul_model(a, b):
+    """Artifact `matmul_n{n}`: the §V micro-benchmark GEMM."""
+    return (matmul(a, b),)
+
+
+def matmul_padded(a, b, tile: int = 128):
+    """Arbitrary-shape GEMM: pad up to the tile grid, run the kernel,
+    slice back. Used by tests; artifacts export the aligned shapes."""
+    m, n = a.shape
+    _, p = b.shape
+    pm, pn, pp = (-m % tile), (-n % tile), (-p % tile)
+    if max(m + pm, n + pn, p + pp) <= tile:
+        return matmul(a, b, tile=tile)
+    a2 = jnp.pad(a, ((0, pm), (0, pn)))
+    b2 = jnp.pad(b, ((0, pn), (0, pp)))
+    return matmul(a2, b2, tile=tile)[:m, :p]

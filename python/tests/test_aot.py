@@ -1,0 +1,73 @@
+"""AOT pipeline: artifacts lower to valid HLO text + manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_artifacts(
+        str(out), block_sizes=[4, 8], matmul_sizes=[64]
+    )
+    return str(out), manifest
+
+
+def test_manifest_lists_all_ops(built):
+    out, manifest = built
+    names = {o["name"] for o in manifest["ops"]}
+    for bs in (4, 8):
+        for op in ("lu0", "fwd", "bdiv", "bmod", "lustep"):
+            assert f"{op}_bs{bs}" in names
+    assert "matmul_n64" in names
+    # 5 ops × 2 sizes + 1 matmul
+    assert len(manifest["ops"]) == 11
+
+
+def test_hlo_text_is_parseable_shape(built):
+    out, manifest = built
+    for op in manifest["ops"]:
+        path = os.path.join(out, op["file"])
+        text = open(path).read()
+        assert "HloModule" in text, op["name"]
+        assert "ENTRY" in text, op["name"]
+        # tuple return (return_tuple=True)
+        assert "tuple" in text.lower(), op["name"]
+
+
+def test_manifest_roundtrips_json(built):
+    out, manifest = built
+    loaded = json.load(open(os.path.join(out, "manifest.json")))
+    assert loaded == manifest
+    assert loaded["version"] == 1
+    for op in loaded["ops"]:
+        assert set(op) == {"name", "file", "op", "bs", "arity", "outputs"}
+
+
+def test_bmod_artifact_matches_kernel(built):
+    """Execute the lowered HLO via jax's own CPU client and compare
+    against the live kernel — the same numbers the rust runtime will
+    see."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from compile.kernels import bmod
+
+    rng = np.random.default_rng(0)
+    a, b, c = (
+        jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+        for _ in range(3)
+    )
+    live = bmod(a, b, c)
+    # Round-trip through the same lowering used for artifacts.
+    lowered = jax.jit(lambda x, y, z: (bmod(x, y, z),)).lower(a, b, c)
+    compiled = lowered.compile()
+    (art,) = compiled(a, b, c)
+    np.testing.assert_allclose(
+        np.asarray(live), np.asarray(art), rtol=1e-6
+    )

@@ -1,0 +1,80 @@
+"""L2 correctness: the composed model graphs (shapes + semantics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, dominant=False):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-2.0, 2.0, size=shape).astype(np.float32)
+    if dominant:
+        a += np.eye(shape[0], dtype=np.float32) * shape[0]
+    return jnp.asarray(a)
+
+
+@pytest.mark.parametrize("bs", [4, 8, 16])
+def test_lu_step_matches_oracle_pipeline(bs):
+    diag = rand((bs, bs), 1, dominant=True)
+    row = rand((bs, bs), 2)
+    col = rand((bs, bs), 3)
+    inner = rand((bs, bs), 4)
+    d, r, c, i = model.lu_step(diag, row, col, inner)
+    d2 = ref.lu0_ref(diag)
+    r2 = ref.fwd_ref(d2, row)
+    c2 = ref.bdiv_ref(d2, col)
+    i2 = ref.bmod_ref(c2, r2, inner)
+    for got, want in [(d, d2), (r, r2), (c, c2), (i, i2)]:
+        assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=5e-3, atol=5e-3
+        )
+
+
+def test_lu_step_is_one_block_lu():
+    """Factorising a 2bs×2bs matrix via one lu_step + final lu0 must
+    match the dense factorisation of the whole matrix."""
+    bs = 8
+    n = 2 * bs
+    a = rand((n, n), 5, dominant=True)
+    diag = a[:bs, :bs]
+    row = a[:bs, bs:]
+    col = a[bs:, :bs]
+    inner = a[bs:, bs:]
+    d, r, c, i = model.lu_step(diag, row, col, inner)
+    from compile.kernels import lu0
+
+    i_done = lu0(i)
+    packed = jnp.block([[d, r], [c, i_done]])
+    want = ref.lu0_ref(a)
+    assert_allclose(
+        np.asarray(packed), np.asarray(want), rtol=2e-2, atol=2e-2
+    )
+
+
+@pytest.mark.parametrize(
+    "m,n,p", [(5, 7, 3), (130, 50, 20), (200, 300, 100)]
+)
+def test_matmul_padded_arbitrary_shapes(m, n, p):
+    a = rand((m, n), m + n)
+    b = rand((n, p), n + p)
+    assert_allclose(
+        np.asarray(model.matmul_padded(a, b)),
+        np.asarray(a @ b),
+        rtol=2e-3,
+        atol=2e-3,
+    )
+
+
+def test_block_wrappers_are_tuples():
+    bs = 4
+    d = rand((bs, bs), 9, dominant=True)
+    out = model.lu0_block(d)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (bs, bs)

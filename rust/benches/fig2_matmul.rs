@@ -1,0 +1,23 @@
+//! Bench: regenerate paper Fig 2 (MatMul micro-benchmark, four
+//! approaches across job sizes) on the TILEPro64 simulator, and time
+//! the simulator itself with the in-crate harness.
+//!
+//! `cargo bench --bench fig2_matmul`
+
+use gprm::bench::Bench;
+use gprm::harness::{run_experiment, Scale};
+
+fn main() {
+    // The figure itself, at paper scale.
+    let report = run_experiment("fig2", Scale(1.0));
+    println!("{}", report.render());
+    assert!(report.all_pass(), "fig2 shape checks failed");
+
+    // Simulator throughput (how fast we can regenerate the figure).
+    let b = Bench::quick();
+    let r = b.measure_once("fig2 full regeneration", || {
+        let rep = run_experiment("fig2", Scale(1.0));
+        gprm::bench::black_box(rep.tables.len());
+    });
+    println!("{}", r.report());
+}

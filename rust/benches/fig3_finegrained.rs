@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Fig 3 (speedup for 200,000 fine-grained
+//! jobs at 63 threads).
+//!
+//! `cargo bench --bench fig3_finegrained`
+
+use gprm::harness::{run_experiment, Scale};
+
+fn main() {
+    let report = run_experiment("fig3", Scale(1.0));
+    println!("{}", report.render());
+    assert!(report.all_pass(), "fig3 shape checks failed");
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Fig 4 (the cutoff sweep rescuing OpenMP
+//! tasking on 200,000 jobs of 50×50 and 100×100).
+//!
+//! `cargo bench --bench fig4_cutoff`
+
+use gprm::harness::{run_experiment, Scale};
+
+fn main() {
+    let report = run_experiment("fig4", Scale(1.0));
+    println!("{}", report.render());
+    assert!(report.all_pass(), "fig4 shape checks failed");
+}

@@ -1,0 +1,62 @@
+//! Bench: regenerate paper Fig 6 (SparseLU 4000×4000 execution time
+//! vs block count, GPRM vs OpenMP tasks) and, as a wall-clock
+//! complement, time the *real* host-thread SparseLU implementations
+//! on a reduced matrix with the in-crate harness.
+//!
+//! `cargo bench --bench fig6_sparselu`
+
+use gprm::apps::sparselu::{sparselu_gprm, sparselu_omp, LuRunConfig};
+use gprm::bench::Bench;
+use gprm::coordinator::kernel::Registry;
+use gprm::coordinator::{GprmConfig, GprmRuntime};
+use gprm::harness::{run_experiment, Scale};
+use gprm::linalg::genmat::genmat;
+use gprm::linalg::lu::sparselu_seq;
+use gprm::omp::OmpRuntime;
+
+fn main() {
+    // Simulator: the figure at a scale that keeps NB=500 (~10M tasks)
+    // tractable in CI; pass GPRM_FULL=1 for paper scale.
+    let scale = if std::env::var("GPRM_FULL").is_ok() {
+        Scale(1.0)
+    } else {
+        Scale(0.4)
+    };
+    let report = run_experiment("fig6", scale);
+    println!("{}", report.render());
+    assert!(report.all_pass(), "fig6 shape checks failed");
+
+    // Host wall-clock: the real runtimes on a 400×400 matrix
+    // (25 blocks of 16), dominated by runtime overhead on 1 core.
+    let threads = 8;
+    let b = Bench::quick();
+    let a0 = genmat(25, 16);
+
+    let r = b.measure_once("host sparselu seq   25x25 bs=16", || {
+        let mut a = a0.deep_clone();
+        sparselu_seq(&mut a);
+        gprm::bench::black_box(a.allocated_blocks());
+    });
+    println!("{}", r.report());
+
+    let gprm = GprmRuntime::new(
+        GprmConfig { n_tiles: threads, pin: false },
+        Registry::new(),
+    );
+    let r = b.measure_once("host sparselu gprm  25x25 bs=16", || {
+        let mut a = a0.deep_clone();
+        sparselu_gprm(&gprm, &mut a, &LuRunConfig::default());
+        gprm::bench::black_box(a.allocated_blocks());
+    });
+    println!("{}", r.report());
+    gprm.shutdown();
+
+    let omp = OmpRuntime::new(threads);
+    let r = b.measure_once("host sparselu omp   25x25 bs=16", || {
+        let mut a = a0.deep_clone();
+        sparselu_omp(&omp, &mut a, &LuRunConfig::default());
+        gprm::bench::black_box(a.allocated_blocks());
+    });
+    println!("{}", r.report());
+    omp.shutdown();
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Fig 7 (SparseLU speedup vs concurrency
+//! level up to 128, GPRM round-robin + contiguous vs OpenMP tasks).
+//!
+//! `cargo bench --bench fig7_scaling`
+
+use gprm::harness::{run_experiment, Scale};
+
+fn main() {
+    let report = run_experiment("fig7", Scale(1.0));
+    println!("{}", report.render());
+    assert!(report.all_pass(), "fig7 shape checks failed");
+
+    // Table I accompanies Fig 6/7 in the paper; regenerate it here
+    // too so `cargo bench` covers every table and figure.
+    let report = run_experiment("table1", Scale(1.0));
+    println!("{}", report.render());
+    assert!(report.all_pass(), "table1 shape checks failed");
+}

@@ -1,0 +1,148 @@
+//! Runtime-overhead microbenchmarks — the quantities the whole paper
+//! is about: per-task cost in GPRM vs per-task cost in the OpenMP
+//! model, worksharing per-iteration cost, and PJRT dispatch cost.
+//! These feed EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench overhead`
+
+use gprm::bench::{black_box, Bench};
+use gprm::coordinator::kernel::Registry;
+use gprm::coordinator::{par_for, GprmConfig, GprmRuntime, Prog};
+use gprm::omp::OmpRuntime;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn main() {
+    let b = Bench::default();
+    let threads = 4;
+
+    // --- GPRM -----------------------------------------------------------
+    let gprm = GprmRuntime::new(
+        GprmConfig { n_tiles: threads, pin: false },
+        Registry::new(),
+    );
+
+    // Cost of one par_invoke round trip (CL native tasks + barrier).
+    let r = b.measure("gprm par_invoke(CL) round-trip", || {
+        gprm.par_invoke(threads, |_| {}).unwrap();
+    });
+    println!("{}", r.report());
+
+    // Per-task cost: 64 native tasks per round trip.
+    let counter = AtomicU64::new(0);
+    let r = b.measure("gprm 64 native tasks", || {
+        gprm.par_invoke(64, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+    });
+    println!("{}", r.report());
+
+    // Compiled-program reuse: evaluate a 3-node S-expression.
+    let mut reg = Registry::new();
+    reg.register(std::sync::Arc::new(
+        gprm::coordinator::ClosureKernel::new("k").method("id", |a| {
+            a.first().cloned().unwrap_or(gprm::coordinator::Value::Unit)
+        }),
+    ));
+    let rt2 = GprmRuntime::new(GprmConfig { n_tiles: threads, pin: false }, reg);
+    let prog = Prog::call(
+        "k",
+        "id",
+        vec![Prog::call("k", "id", vec![Prog::lit(1i64)])],
+    );
+    let compiled = rt2.compile(&prog).unwrap();
+    let r = b.measure("gprm 2-task bytecode eval (compiled)", || {
+        black_box(rt2.run_compiled(&compiled).unwrap());
+    });
+    println!("{}", r.report());
+
+    // par_for per-iteration overhead (pure, no runtime).
+    let r = b.measure("par_for 10k iterations (listing 1)", || {
+        let mut acc = 0u64;
+        par_for(0, 10_000, 1, 4, |i| acc += i as u64);
+        black_box(acc);
+    });
+    println!("{}", r.report());
+
+    // --- OpenMP model ----------------------------------------------------
+    let omp = OmpRuntime::new(threads);
+
+    // Empty region fork/join.
+    let r = b.measure("omp empty parallel region", || {
+        omp.parallel(|_| {}).unwrap();
+    });
+    println!("{}", r.report());
+
+    // 64 empty tasks through the central queue.
+    let sum = AtomicU64::new(0);
+    let sum_ref = &sum;
+    let r = b.measure("omp 64 tasks via central queue", || {
+        omp.parallel(|ctx| {
+            ctx.single(|| {
+                for _ in 0..64 {
+                    ctx.task(move |_| {
+                        sum_ref.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+        })
+        .unwrap();
+    });
+    println!("{}", r.report());
+
+    // taskwait latency.
+    let r = b.measure("omp task + taskwait", || {
+        omp.parallel(|ctx| {
+            ctx.single(|| {
+                ctx.task(|_| {});
+                ctx.taskwait();
+            });
+        })
+        .unwrap();
+    });
+    println!("{}", r.report());
+
+    // --- PJRT ------------------------------------------------------------
+    let dir = gprm::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let mut eng = gprm::runtime::BlockEngine::new(&dir).unwrap();
+        let bs = 8usize;
+        let blk: Vec<f32> = (0..bs * bs).map(|i| i as f32 * 0.01 + 1.0).collect();
+        // warm the compile cache
+        let mut i0 = blk.clone();
+        eng.bmod(bs, &blk, &blk, &mut i0).unwrap();
+        let r = b.measure("pjrt bmod bs=8 dispatch", || {
+            let mut inner = blk.clone();
+            eng.bmod(bs, &blk, &blk, &mut inner).unwrap();
+            black_box(inner[0]);
+        });
+        println!("{}", r.report());
+
+        let mut big = vec![0.0f32; 80 * 80];
+        for (i, v) in big.iter_mut().enumerate() {
+            *v = (i % 83) as f32 * 0.02 + 1.0;
+        }
+        let mut i0 = big.clone();
+        eng.bmod(80, &big, &big, &mut i0).unwrap();
+        let r = b.measure("pjrt bmod bs=80 dispatch", || {
+            let mut inner = big.clone();
+            eng.bmod(80, &big, &big, &mut inner).unwrap();
+            black_box(inner[0]);
+        });
+        println!("{}", r.report());
+
+        // rust kernel for comparison.
+        let r = b.measure("rust bmod bs=80 (in-process)", || {
+            let mut inner = big.clone();
+            gprm::linalg::lu::bmod(&big, &big, &mut inner, 80);
+            black_box(inner[0]);
+        });
+        println!("{}", r.report());
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+    }
+
+    gprm.shutdown();
+    rt2.shutdown();
+    omp.shutdown();
+}

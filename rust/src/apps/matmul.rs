@@ -1,0 +1,214 @@
+//! The Matrix-Multiplication micro-benchmark (paper §V, Listings 3–4).
+//!
+//! `A: m×n`, `B: n×p` (the paper fixes `p = n`), parallelised over the
+//! first loop: `m` jobs of `p·n` dot-product work each.
+
+use crate::coordinator::{worksharing, GprmRuntime};
+use crate::linalg::dense::{matmul_rows_into, DenseMatrix};
+use crate::omp::{DynamicSched, OmpRuntime};
+
+/// The four approaches of Fig 2, plus the cutoff variant of Fig 4
+/// (Listing 4: only `m/cutoff` tasks are created).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatmulApproach {
+    /// Single-threaded Listing 3 (the speedup baseline).
+    Sequential,
+    /// I: `omp for` (static schedule).
+    OmpForStatic,
+    /// II: `omp for schedule(dynamic, 1)`.
+    OmpForDynamic,
+    /// III: one `omp task` per `cutoff` rows (`cutoff = 1` is the
+    /// untuned tasking of Fig 2/3).
+    OmpTask { cutoff: usize },
+    /// IV: GPRM `par_for` over CL worksharing task instances.
+    GprmParFor,
+}
+
+impl std::fmt::Display for MatmulApproach {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MatmulApproach::Sequential => write!(f, "sequential"),
+            MatmulApproach::OmpForStatic => write!(f, "omp-for-static"),
+            MatmulApproach::OmpForDynamic => write!(f, "omp-for-dynamic1"),
+            MatmulApproach::OmpTask { cutoff } => {
+                write!(f, "omp-task(cutoff={cutoff})")
+            }
+            MatmulApproach::GprmParFor => write!(f, "gprm-par-for"),
+        }
+    }
+}
+
+/// Run one approach on pre-built inputs, writing into `c` (must be
+/// zeroed by the caller). The runtimes are borrowed so benchmarks can
+/// reuse warm thread pools (both the GPRM pool and an OpenMP team are
+/// created once per process in the originals).
+pub struct MatmulExec<'rt> {
+    pub gprm: Option<&'rt GprmRuntime>,
+    pub omp: Option<&'rt OmpRuntime>,
+}
+
+impl<'rt> MatmulExec<'rt> {
+    pub fn run(
+        &self,
+        approach: MatmulApproach,
+        a: &DenseMatrix,
+        b: &DenseMatrix,
+        c: &mut DenseMatrix,
+    ) {
+        let (m, n, p) = (a.rows(), a.cols(), b.cols());
+        assert_eq!(b.rows(), n);
+        assert_eq!((c.rows(), c.cols()), (m, p));
+        let (av, bv) = (a.as_slice(), b.as_slice());
+        match approach {
+            MatmulApproach::Sequential => {
+                matmul_rows_into(av, bv, c.as_mut_slice(), 0, m, n, p);
+            }
+            MatmulApproach::OmpForStatic => {
+                let rt = self.omp.expect("omp runtime required");
+                let cc = CPtr(c.as_mut_slice().as_mut_ptr());
+                rt.parallel(|ctx| {
+                    ctx.for_static(0, m, |i| unsafe {
+                        row_job(av, bv, &cc, i, n, p);
+                    });
+                })
+                .expect("omp region failed");
+            }
+            MatmulApproach::OmpForDynamic => {
+                let rt = self.omp.expect("omp runtime required");
+                let cc = CPtr(c.as_mut_slice().as_mut_ptr());
+                let sched = DynamicSched::new(0, m, 1);
+                rt.parallel(|ctx| {
+                    ctx.for_dynamic(&sched, |i| unsafe {
+                        row_job(av, bv, &cc, i, n, p);
+                    });
+                })
+                .expect("omp region failed");
+            }
+            MatmulApproach::OmpTask { cutoff } => {
+                let rt = self.omp.expect("omp runtime required");
+                let cutoff = cutoff.max(1);
+                let cc = CPtr(c.as_mut_slice().as_mut_ptr());
+                let ccref = &cc;
+                rt.parallel(|ctx| {
+                    // Listing 4: the generating thread creates
+                    // m/cutoff tasks, each covering `cutoff` rows.
+                    ctx.single(|| {
+                        let mut i = 0;
+                        while i < m {
+                            let hi = (i + cutoff).min(m);
+                            ctx.task(move |_| unsafe {
+                                for row in i..hi {
+                                    row_job(av, bv, ccref, row, n, p);
+                                }
+                            });
+                            i = hi;
+                        }
+                    });
+                })
+                .expect("omp region failed");
+            }
+            MatmulApproach::GprmParFor => {
+                let rt = self.gprm.expect("gprm runtime required");
+                let cl = rt.concurrency_level();
+                let cc = CPtr(c.as_mut_slice().as_mut_ptr());
+                let ccref = &cc;
+                rt.par_invoke(cl, |ind| {
+                    worksharing::par_for(0, m, ind, cl, |i| unsafe {
+                        row_job(av, bv, ccref, i, n, p);
+                    });
+                })
+                .expect("gprm par_invoke failed");
+            }
+        }
+    }
+}
+
+/// One micro-benchmark job: row `i` of `C += A·B` (Listing 3 body).
+///
+/// SAFETY: callers partition rows disjointly (each `i` is owned by
+/// exactly one thread under every schedule above), so the row slices
+/// never alias.
+unsafe fn row_job(a: &[f32], b: &[f32], c: &CPtr, i: usize, n: usize, p: usize) {
+    let row = std::slice::from_raw_parts_mut(c.0.add(i * p), p);
+    for (j, cij) in row.iter_mut().enumerate() {
+        let mut acc = *cij;
+        for k in 0..n {
+            acc += a[i * n + k] * b[k * p + j];
+        }
+        *cij = acc;
+    }
+}
+
+/// Shareable raw pointer to C's storage (disjoint row writes).
+struct CPtr(*mut f32);
+unsafe impl Sync for CPtr {}
+unsafe impl Send for CPtr {}
+
+/// Convenience: build inputs, run, verify against the sequential
+/// result, return (wall-time, max-abs-error).
+pub fn run_matmul(
+    approach: MatmulApproach,
+    m: usize,
+    n: usize,
+    exec: &MatmulExec,
+) -> (std::time::Duration, f32) {
+    let a = DenseMatrix::bots_random(m, n, 11);
+    let b = DenseMatrix::bots_random(n, n, 22);
+    let mut c = DenseMatrix::zeros(m, n);
+    let t0 = std::time::Instant::now();
+    exec.run(approach, &a, &b, &mut c);
+    let dt = t0.elapsed();
+    let mut want = DenseMatrix::zeros(m, n);
+    MatmulExec { gprm: None, omp: None }.run(
+        MatmulApproach::Sequential,
+        &a,
+        &b,
+        &mut want,
+    );
+    (dt, c.max_abs_diff(&want))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GprmConfig;
+    use crate::coordinator::kernel::Registry;
+
+    fn rigs() -> (GprmRuntime, OmpRuntime) {
+        (
+            GprmRuntime::new(
+                GprmConfig { n_tiles: 4, pin: false },
+                Registry::new(),
+            ),
+            OmpRuntime::new(4),
+        )
+    }
+
+    #[test]
+    fn all_approaches_agree() {
+        let (gprm, omp) = rigs();
+        let exec = MatmulExec { gprm: Some(&gprm), omp: Some(&omp) };
+        for approach in [
+            MatmulApproach::Sequential,
+            MatmulApproach::OmpForStatic,
+            MatmulApproach::OmpForDynamic,
+            MatmulApproach::OmpTask { cutoff: 1 },
+            MatmulApproach::OmpTask { cutoff: 7 },
+            MatmulApproach::GprmParFor,
+        ] {
+            let (_dt, err) = run_matmul(approach, 33, 17, &exec);
+            assert_eq!(err, 0.0, "{approach} diverged");
+        }
+        gprm.shutdown();
+        omp.shutdown();
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(MatmulApproach::GprmParFor.to_string(), "gprm-par-for");
+        assert_eq!(
+            MatmulApproach::OmpTask { cutoff: 5 }.to_string(),
+            "omp-task(cutoff=5)"
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! The paper's two evaluation workloads, runnable on every runtime
+//! this crate provides (host threads, real kernels) — the simulator
+//! counterparts live in [`crate::tilesim`].
+//!
+//! * [`matmul`] — the §V micro-benchmark: `C = A·B` as `m` row-jobs,
+//!   under the four approaches of Fig 2 (+ cutoff variant of Fig 4).
+//! * [`sparselu`] — the §VI SparseLU factorisation: sequential
+//!   (BOTS reference), OpenMP tasking (Fig 5 port), and GPRM hybrid
+//!   worksharing-tasking (Listings 5–6 port), optionally executing
+//!   block kernels through the PJRT artifacts.
+
+pub mod matmul;
+pub mod sparselu;
+
+pub use matmul::{run_matmul, MatmulApproach};
+pub use sparselu::{
+    sparselu_gprm, sparselu_omp, LuBackend, LuRunConfig,
+};

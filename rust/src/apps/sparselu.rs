@@ -1,0 +1,346 @@
+//! SparseLU factorisation on the real runtimes (paper §VI).
+//!
+//! Three implementations over the same [`BlockedSparseMatrix`]:
+//!
+//! * sequential — `linalg::lu::sparselu_seq` (BOTS reference);
+//! * OpenMP tasking — a faithful port of the paper's Fig 5: one
+//!   `single` producer walks the blocks, spawning a task per non-empty
+//!   block, with `taskwait` barriers between phases;
+//! * GPRM hybrid worksharing-tasking — the port of Listings 5–6:
+//!   per elimination step, `CL/2 + CL/2` worksharing task instances
+//!   run `par_for` over the fwd/bdiv domains and `CL` instances run
+//!   `par_nested_for` (or the contiguous variants) over the bmod
+//!   domain.
+//!
+//! Block kernels execute either in-process (pure rust, [`LuBackend::Rust`])
+//! or through the AOT-compiled JAX/Pallas artifacts via PJRT
+//! ([`LuBackend::Pjrt`]).
+
+use crate::coordinator::{worksharing, GprmRuntime};
+use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
+use crate::linalg::lu::{bdiv, bmod, fwd, lu0};
+use crate::omp::OmpRuntime;
+use crate::runtime::EngineService;
+
+/// How block kernels execute.
+pub enum LuBackend<'e> {
+    /// Pure-rust kernels (default; what the simulator models).
+    Rust,
+    /// The PJRT executables compiled from the Pallas kernels.
+    Pjrt(&'e EngineService),
+}
+
+impl<'e> LuBackend<'e> {
+    fn lu0(&self, d: &mut [f32], bs: usize) {
+        match self {
+            LuBackend::Rust => lu0(d, bs),
+            LuBackend::Pjrt(svc) => svc.lu0(bs, d).expect("pjrt lu0"),
+        }
+    }
+
+    fn fwd(&self, d: &[f32], c: &mut [f32], bs: usize) {
+        match self {
+            LuBackend::Rust => fwd(d, c, bs),
+            LuBackend::Pjrt(svc) => svc.fwd(bs, d, c).expect("pjrt fwd"),
+        }
+    }
+
+    fn bdiv(&self, d: &[f32], r: &mut [f32], bs: usize) {
+        match self {
+            LuBackend::Rust => bdiv(d, r, bs),
+            LuBackend::Pjrt(svc) => svc.bdiv(bs, d, r).expect("pjrt bdiv"),
+        }
+    }
+
+    fn bmod(&self, r: &[f32], c: &[f32], i: &mut [f32], bs: usize) {
+        match self {
+            LuBackend::Rust => bmod(r, c, i, bs),
+            LuBackend::Pjrt(svc) => {
+                svc.bmod(bs, r, c, i).expect("pjrt bmod")
+            }
+        }
+    }
+}
+
+/// Options shared by the parallel drivers.
+pub struct LuRunConfig<'e> {
+    pub backend: LuBackend<'e>,
+    /// Contiguous instead of round-robin worksharing (GPRM only).
+    pub contiguous: bool,
+}
+
+impl Default for LuRunConfig<'static> {
+    fn default() -> Self {
+        Self { backend: LuBackend::Rust, contiguous: false }
+    }
+}
+
+/// OpenMP-tasking SparseLU — paper Fig 5, using our `omp` runtime.
+/// Factorises `a` in place.
+pub fn sparselu_omp(rt: &OmpRuntime, a: &mut BlockedSparseMatrix, cfg: &LuRunConfig) {
+    let nb = a.nb();
+    let bs = a.bs();
+    let shared = SharedBlocked::new(std::mem::replace(
+        a,
+        BlockedSparseMatrix::empty(1, 1),
+    ));
+    let sh = &shared;
+    let backend = &cfg.backend;
+    rt.parallel(|ctx| {
+        ctx.single(|| {
+            for kk in 0..nb {
+                // lu0: executed by the generating thread (Fig 5 calls
+                // it inline, not as a task).
+                {
+                    // SAFETY: single producer, no tasks in flight yet.
+                    let m = unsafe { sh.get_mut() };
+                    backend.lu0(m.block_mut(kk, kk).unwrap(), bs);
+                }
+                // fwd phase over row kk.
+                for jj in kk + 1..nb {
+                    if sh.get().is_allocated(kk, jj) {
+                        ctx.task(move |_| {
+                            // SAFETY: tasks write disjoint (kk,jj)
+                            // blocks; diag finalised before spawn.
+                            let m = unsafe { sh.get_mut() };
+                            let diag =
+                                m.block(kk, kk).unwrap().as_ptr();
+                            let diag = unsafe {
+                                std::slice::from_raw_parts(diag, bs * bs)
+                            };
+                            backend.fwd(
+                                diag,
+                                m.block_mut(kk, jj).unwrap(),
+                                bs,
+                            );
+                        });
+                    }
+                }
+                // bdiv phase over column kk.
+                for ii in kk + 1..nb {
+                    if sh.get().is_allocated(ii, kk) {
+                        ctx.task(move |_| {
+                            let m = unsafe { sh.get_mut() };
+                            let diag =
+                                m.block(kk, kk).unwrap().as_ptr();
+                            let diag = unsafe {
+                                std::slice::from_raw_parts(diag, bs * bs)
+                            };
+                            backend.bdiv(
+                                diag,
+                                m.block_mut(ii, kk).unwrap(),
+                                bs,
+                            );
+                        });
+                    }
+                }
+                ctx.taskwait();
+                // bmod phase over the trailing submatrix.
+                for ii in kk + 1..nb {
+                    if !sh.get().is_allocated(ii, kk) {
+                        continue;
+                    }
+                    for jj in kk + 1..nb {
+                        if !sh.get().is_allocated(kk, jj) {
+                            continue;
+                        }
+                        ctx.task(move |_| {
+                            // SAFETY: unique (ii,jj) per task within
+                            // the phase; row/col finalised by the
+                            // preceding taskwait.
+                            let m = unsafe { sh.get_mut() };
+                            let row = m.block(ii, kk).unwrap().as_ptr();
+                            let col = m.block(kk, jj).unwrap().as_ptr();
+                            let (row, col) = unsafe {
+                                (
+                                    std::slice::from_raw_parts(row, bs * bs),
+                                    std::slice::from_raw_parts(col, bs * bs),
+                                )
+                            };
+                            let inner = m.allocate_clean_block(ii, jj);
+                            backend.bmod(row, col, inner, bs);
+                        });
+                    }
+                }
+                ctx.taskwait();
+            }
+        });
+    })
+    .expect("omp sparselu region failed");
+    *a = shared.into_inner();
+}
+
+/// GPRM hybrid worksharing-tasking SparseLU — paper Listings 5–6.
+/// Factorises `a` in place.
+pub fn sparselu_gprm(
+    rt: &GprmRuntime,
+    a: &mut BlockedSparseMatrix,
+    cfg: &LuRunConfig,
+) {
+    let nb = a.nb();
+    let bs = a.bs();
+    let cl = rt.concurrency_level();
+    let shared = SharedBlocked::new(std::mem::replace(
+        a,
+        BlockedSparseMatrix::empty(1, 1),
+    ));
+    let sh = &shared;
+    let backend = &cfg.backend;
+    let contiguous = cfg.contiguous;
+    for kk in 0..nb {
+        // #pragma gprm seq — lu0 first.
+        {
+            let m = unsafe { sh.get_mut() };
+            backend.lu0(m.block_mut(kk, kk).unwrap(), bs);
+        }
+        // fwd_bdiv_tasks: CL instances; the first half runs fwd over
+        // row kk with CL/2-way worksharing, the second half bdiv over
+        // column kk (Listing 5 passes CL/2 as each lane's concurrency
+        // level).
+        let half = (cl / 2).max(1);
+        rt.par_invoke(2 * half, |ind| {
+            let lane_fwd = ind < half;
+            let lane_ind = if lane_fwd { ind } else { ind - half };
+            let work = |j: usize| {
+                // Listing 6: fwd_work checks allocation itself.
+                let m = unsafe { sh.get_mut() };
+                let diag = m.block(kk, kk).unwrap().as_ptr();
+                let diag =
+                    unsafe { std::slice::from_raw_parts(diag, bs * bs) };
+                if lane_fwd {
+                    if m.is_allocated(kk, j) {
+                        backend.fwd(diag, m.block_mut(kk, j).unwrap(), bs);
+                    }
+                } else if m.is_allocated(j, kk) {
+                    backend.bdiv(diag, m.block_mut(j, kk).unwrap(), bs);
+                }
+            };
+            if contiguous {
+                worksharing::par_for_contiguous(kk + 1, nb, lane_ind, half, work);
+            } else {
+                worksharing::par_for(kk + 1, nb, lane_ind, half, work);
+            }
+        })
+        .expect("gprm fwd/bdiv phase failed");
+        // bmod_tasks: CL instances over the nested (ii, jj) domain.
+        rt.par_invoke(cl, |ind| {
+            let work = |ii: usize, jj: usize| {
+                let m = unsafe { sh.get_mut() };
+                if m.is_allocated(ii, kk) && m.is_allocated(kk, jj) {
+                    let row = m.block(ii, kk).unwrap().as_ptr();
+                    let col = m.block(kk, jj).unwrap().as_ptr();
+                    let (row, col) = unsafe {
+                        (
+                            std::slice::from_raw_parts(row, bs * bs),
+                            std::slice::from_raw_parts(col, bs * bs),
+                        )
+                    };
+                    let inner = m.allocate_clean_block(ii, jj);
+                    backend.bmod(row, col, inner, bs);
+                }
+            };
+            if contiguous {
+                worksharing::par_nested_for_contiguous(
+                    kk + 1,
+                    nb,
+                    kk + 1,
+                    nb,
+                    ind,
+                    cl,
+                    work,
+                );
+            } else {
+                worksharing::par_nested_for(
+                    kk + 1,
+                    nb,
+                    kk + 1,
+                    nb,
+                    ind,
+                    cl,
+                    work,
+                );
+            }
+        })
+        .expect("gprm bmod phase failed");
+    }
+    *a = shared.into_inner();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::genmat::genmat;
+    use crate::linalg::lu::sparselu_seq;
+    use crate::linalg::verify::{assert_blocked_close, lu_residual_sparse};
+
+    fn check_against_seq(factorise: impl FnOnce(&mut BlockedSparseMatrix)) {
+        let nb = 10;
+        let bs = 8;
+        let mut a = genmat(nb, bs);
+        let orig = a.to_dense();
+        let mut want = a.deep_clone();
+        sparselu_seq(&mut want);
+        factorise(&mut a);
+        // Identical schedule-independent result (f32-exact: same
+        // operations in the same per-block order).
+        assert_blocked_close(&a, &want, 1e-4);
+        // And mathematically correct.
+        let res = lu_residual_sparse(&orig, &a);
+        assert!(res < 1e-4, "residual {res}");
+    }
+
+    #[test]
+    fn omp_matches_sequential() {
+        let rt = OmpRuntime::new(4);
+        check_against_seq(|a| {
+            sparselu_omp(&rt, a, &LuRunConfig::default())
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn gprm_matches_sequential() {
+        let rt = GprmRuntime::with_tiles(6);
+        check_against_seq(|a| {
+            sparselu_gprm(&rt, a, &LuRunConfig::default())
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn gprm_contiguous_matches_sequential() {
+        let rt = GprmRuntime::with_tiles(6);
+        check_against_seq(|a| {
+            sparselu_gprm(
+                &rt,
+                a,
+                &LuRunConfig { backend: LuBackend::Rust, contiguous: true },
+            )
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn gprm_single_tile_degenerate() {
+        let rt = GprmRuntime::with_tiles(1);
+        check_against_seq(|a| {
+            sparselu_gprm(&rt, a, &LuRunConfig::default())
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn fill_in_matches_structure_prediction() {
+        use crate::linalg::genmat::genmat_pattern;
+        use crate::linalg::lu::lu_task_counts;
+        let nb = 8;
+        let rt = OmpRuntime::new(3);
+        let mut a = genmat(nb, 4);
+        sparselu_omp(&rt, &mut a, &LuRunConfig::default());
+        // Predicted final pattern from the structural walk:
+        let counts = lu_task_counts(&genmat_pattern(nb), nb);
+        let total_bmod: usize = counts.bmod.iter().sum();
+        assert!(total_bmod > 0);
+        rt.shutdown();
+    }
+}

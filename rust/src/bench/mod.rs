@@ -1,0 +1,144 @@
+//! A criterion-style measurement harness (criterion itself is not in
+//! the offline crate set): warmup, calibrated iteration counts, and
+//! summary statistics over wall-clock samples.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    /// Warmup time before sampling.
+    pub warmup: Duration,
+    /// Number of recorded samples.
+    pub samples: usize,
+    /// Target time per sample (iterations are batched to reach it).
+    pub sample_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            samples: 12,
+            sample_time: Duration::from_millis(60),
+        }
+    }
+}
+
+/// One benchmark result: per-iteration nanoseconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub ns: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (±{:>5.1}%, {} samples × {} iters)",
+            self.name,
+            crate::util::fmt_ns(self.ns.median),
+            self.ns.rsd() * 100.0,
+            self.ns.n,
+            self.iters_per_sample,
+        )
+    }
+}
+
+impl Bench {
+    /// Quick profile for long-running benchmark bodies.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            sample_time: Duration::from_millis(30),
+        }
+    }
+
+    /// Measure `f`, batching iterations per sample.
+    pub fn measure(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        // Warmup + calibration.
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < self.warmup {
+            f();
+            cal_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / cal_iters.max(1) as f64;
+        let iters = ((self.sample_time.as_nanos() as f64 / per_iter).ceil()
+            as u64)
+            .max(1);
+        // Sampling.
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            ns: Summary::of(&samples),
+        }
+    }
+
+    /// Measure a body that runs once per sample (no batching) — for
+    /// expensive bodies like a whole factorisation.
+    pub fn measure_once(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        f(); // warmup
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters_per_sample: 1,
+            ns: Summary::of(&samples),
+        }
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value (ports
+/// `criterion::black_box` onto `std::hint::black_box`).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            sample_time: Duration::from_millis(2),
+        };
+        let r = b.measure("spin", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.ns.median > 0.0);
+        assert!(r.iters_per_sample >= 1);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn measure_once_counts_samples() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            samples: 4,
+            sample_time: Duration::from_millis(1),
+        };
+        let mut n = 0;
+        let r = b.measure_once("once", || n += 1);
+        assert_eq!(n, 5); // 1 warmup + 4 samples
+        assert_eq!(r.ns.n, 4);
+    }
+}

@@ -1,0 +1,161 @@
+//! Task kernels — the `GPRM::Kernel` namespace analogue (paper §II).
+//!
+//! "A task kernel is typically a complex, self-contained entity
+//! offering a specific functionality to the system, which on its own
+//! is not aware of the rest of the system." Kernels are registered
+//! with the runtime by name; the communication code calls their
+//! methods. Method dispatch is resolved to indices at program compile
+//! time, so the hot path never touches strings.
+
+use super::value::Value;
+use std::sync::Arc;
+
+/// A task kernel: a named object exposing methods callable from
+/// communication code. Implementations must be `Send + Sync` because
+/// any tile may host any of the kernel's task instances.
+pub trait TaskKernel: Send + Sync {
+    /// Kernel name, as referenced from communication code
+    /// (`name.method`).
+    fn name(&self) -> &str;
+
+    /// Method names in index order.
+    fn methods(&self) -> &[&'static str];
+
+    /// Invoke method `idx` (an index into [`Self::methods`]).
+    /// Run-to-completion semantics: the hosting tile thread executes
+    /// this synchronously.
+    fn call(&self, idx: usize, args: &[Value]) -> Value;
+}
+
+/// A kernel assembled from named closures — convenient for tests,
+/// examples and ad-hoc task code.
+pub struct ClosureKernel {
+    name: String,
+    method_names: Vec<&'static str>,
+    bodies: Vec<Box<dyn Fn(&[Value]) -> Value + Send + Sync>>,
+}
+
+impl ClosureKernel {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            method_names: Vec::new(),
+            bodies: Vec::new(),
+        }
+    }
+
+    /// Add a method.
+    pub fn method(
+        mut self,
+        name: &'static str,
+        f: impl Fn(&[Value]) -> Value + Send + Sync + 'static,
+    ) -> Self {
+        self.method_names.push(name);
+        self.bodies.push(Box::new(f));
+        self
+    }
+}
+
+impl TaskKernel for ClosureKernel {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn methods(&self) -> &[&'static str] {
+        &self.method_names
+    }
+
+    fn call(&self, idx: usize, args: &[Value]) -> Value {
+        (self.bodies[idx])(args)
+    }
+}
+
+/// The kernel registry: fixed at runtime construction (kernels are
+/// "created before the actual program starts", like the GPRM thread
+/// pool).
+#[derive(Clone, Default)]
+pub struct Registry {
+    kernels: Vec<Arc<dyn TaskKernel>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, k: Arc<dyn TaskKernel>) {
+        assert!(
+            self.lookup_kernel(k.name()).is_none(),
+            "duplicate kernel name {:?}",
+            k.name()
+        );
+        self.kernels.push(k);
+    }
+
+    pub fn lookup_kernel(&self, name: &str) -> Option<usize> {
+        self.kernels.iter().position(|k| k.name() == name)
+    }
+
+    /// Resolve `kernel.method` to `(kernel_idx, method_idx)`.
+    pub fn resolve(&self, kernel: &str, method: &str) -> Option<(usize, usize)> {
+        let ki = self.lookup_kernel(kernel)?;
+        let mi = self.kernels[ki].methods().iter().position(|m| *m == method)?;
+        Some((ki, mi))
+    }
+
+    pub fn get(&self, idx: usize) -> &Arc<dyn TaskKernel> {
+        &self.kernels[idx]
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arith() -> Arc<dyn TaskKernel> {
+        Arc::new(
+            ClosureKernel::new("arith")
+                .method("add", |a| {
+                    Value::Int(a.iter().map(|v| v.int()).sum())
+                })
+                .method("mul", |a| {
+                    Value::Int(a.iter().map(|v| v.int()).product())
+                }),
+        )
+    }
+
+    #[test]
+    fn closure_kernel_dispatch() {
+        let k = arith();
+        assert_eq!(k.name(), "arith");
+        assert_eq!(k.methods(), &["add", "mul"]);
+        assert_eq!(k.call(0, &[Value::Int(2), Value::Int(3)]), Value::Int(5));
+        assert_eq!(k.call(1, &[Value::Int(2), Value::Int(3)]), Value::Int(6));
+    }
+
+    #[test]
+    fn registry_resolution() {
+        let mut r = Registry::new();
+        r.register(arith());
+        assert_eq!(r.resolve("arith", "mul"), Some((0, 1)));
+        assert_eq!(r.resolve("arith", "nope"), None);
+        assert_eq!(r.resolve("nope", "add"), None);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate kernel")]
+    fn duplicate_names_rejected() {
+        let mut r = Registry::new();
+        r.register(arith());
+        r.register(arith());
+    }
+}

@@ -1,0 +1,46 @@
+//! The GPRM runtime — the paper's core contribution (§II–III).
+//!
+//! GPRM structures a program as **task code** (kernel classes offering
+//! methods) plus **communication code** (S-expressions compiled to
+//! bytecode). Conceptually the machine is a set of *tiles*, one per
+//! core, each a *task node* (task kernel + task manager) fed by a FIFO
+//! of packets. The task manager is a reduction engine: it evaluates a
+//! node's bytecode by **parallel dispatch** of request packets for its
+//! argument subexpressions to their owning tiles, and fires the kernel
+//! once all argument results have arrived (run-to-completion).
+//!
+//! Module map:
+//!
+//! * [`value`] — dynamic values flowing through packets.
+//! * [`kernel`] — the `TaskKernel` trait (the `GPRM::Kernel` namespace
+//!   analogue) and the kernel registry.
+//! * [`program`] — the expression/"bytecode" representation, the
+//!   builder API (with `seq` / `par` / compile-time `unroll`), and the
+//!   task→tile assignment (the *task description*).
+//! * [`sexpr`] — textual S-expression front-end.
+//! * [`packet`] — request/result packets.
+//! * [`tile`] — the tile event loop + activation records.
+//! * [`pool`] — the pinned thread pool (one thread per core).
+//! * [`runtime`] — [`runtime::GprmRuntime`], the public entry point.
+//! * [`worksharing`] — `par_for` / `par_nested_for` and contiguous
+//!   variants (paper §III, Listings 1–2).
+//! * [`stats`] — per-tile counters used by benches and tests.
+
+pub mod value;
+pub mod kernel;
+pub mod program;
+pub mod sexpr;
+pub mod packet;
+pub mod stats;
+pub mod tile;
+pub mod pool;
+pub mod runtime;
+pub mod worksharing;
+
+pub use kernel::{ClosureKernel, TaskKernel};
+pub use program::{Prog, Program};
+pub use runtime::{GprmConfig, GprmRuntime};
+pub use value::Value;
+pub use worksharing::{
+    par_for, par_for_contiguous, par_nested_for, par_nested_for_contiguous,
+};

@@ -1,0 +1,180 @@
+//! The GPRM thread pool: one tile per "core", created once before the
+//! program starts (paper §II: "At the beginning, a pool of threads is
+//! created before the actual program starts"), optionally pinned
+//! (paper §VII-A).
+
+use super::kernel::Registry;
+use super::packet::Packet;
+use super::stats::{StatsSnapshot, TileStats};
+use super::tile::{tile_loop, TileContext};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+/// A running pool of tile threads.
+pub struct Pool {
+    senders: Arc<Vec<mpsc::Sender<Packet>>>,
+    handles: Vec<JoinHandle<()>>,
+    stats: Vec<Arc<TileStats>>,
+}
+
+impl Pool {
+    /// Spawn `n_tiles` tile threads sharing `registry`. If `pin`, tile
+    /// `i` is pinned to host core `i % available_cores` (on Linux).
+    pub fn new(n_tiles: usize, registry: Registry, pin: bool) -> Self {
+        assert!(n_tiles > 0);
+        let mut txs = Vec::with_capacity(n_tiles);
+        let mut rxs = Vec::with_capacity(n_tiles);
+        for _ in 0..n_tiles {
+            let (tx, rx) = mpsc::channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let senders = Arc::new(txs);
+        let stats: Vec<Arc<TileStats>> =
+            (0..n_tiles).map(|_| Arc::new(TileStats::default())).collect();
+        let ncores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut handles = Vec::with_capacity(n_tiles);
+        for (id, rx) in rxs.into_iter().enumerate() {
+            let ctx = TileContext {
+                id,
+                senders: senders.clone(),
+                registry: registry.clone(),
+                stats: stats[id].clone(),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("gprm-tile-{id}"))
+                .spawn(move || {
+                    if pin {
+                        pin_to_core(id % ncores);
+                    }
+                    tile_loop(ctx, rx);
+                })
+                .expect("failed to spawn tile thread");
+            handles.push(handle);
+        }
+        Self { senders, handles, stats }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Send a packet to tile `t`'s FIFO.
+    pub fn send(&self, t: usize, pkt: Packet) {
+        self.senders[t].send(pkt).expect("tile FIFO closed");
+    }
+
+    /// Per-tile stats snapshots.
+    pub fn stats(&self) -> Vec<StatsSnapshot> {
+        self.stats.iter().map(|s| s.snapshot()).collect()
+    }
+
+    /// Aggregate stats over all tiles.
+    pub fn stats_total(&self) -> StatsSnapshot {
+        self.stats()
+            .into_iter()
+            .fold(StatsSnapshot::default(), StatsSnapshot::merge)
+    }
+
+    /// Orderly shutdown: stop every tile and join the threads.
+    pub fn shutdown(mut self) {
+        for t in self.senders.iter() {
+            let _ = t.send(Packet::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for t in self.senders.iter() {
+            let _ = t.send(Packet::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pin the calling thread to one core (Linux `sched_setaffinity`).
+/// No-op elsewhere.
+#[cfg(target_os = "linux")]
+pub fn pin_to_core(core: usize) {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_SET(core, &mut set);
+        // 0 = current thread. Failure (e.g. restricted cpuset) is
+        // non-fatal: pinning is a performance hint.
+        libc::sched_setaffinity(
+            0,
+            std::mem::size_of::<libc::cpu_set_t>(),
+            &set,
+        );
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_core(_core: usize) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::ClosureKernel;
+    use crate::coordinator::packet::RetAddr;
+    use crate::coordinator::program::Prog;
+    use crate::coordinator::value::Value;
+
+    fn registry() -> Registry {
+        let mut r = Registry::new();
+        r.register(Arc::new(ClosureKernel::new("id").method("of", |a| {
+            a.first().cloned().unwrap_or(Value::Unit)
+        })));
+        r
+    }
+
+    #[test]
+    fn pool_executes_request() {
+        let pool = Pool::new(4, registry(), false);
+        let prog = Arc::new(
+            Prog::call("id", "of", vec![Prog::lit(42i64)])
+                .compile(&registry(), 4)
+                .unwrap(),
+        );
+        let (tx, rx) = mpsc::channel();
+        pool.send(
+            prog.nodes[prog.root].tile,
+            Packet::Request { prog: prog.clone(), node: prog.root, ret: RetAddr::Root(tx) },
+        );
+        let v = rx.recv().unwrap().unwrap();
+        assert_eq!(v, Value::Int(42));
+        let total = pool.stats_total();
+        assert_eq!(total.tasks, 1);
+        assert!(total.packets >= 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = Pool::new(8, registry(), false);
+        assert_eq!(pool.n_tiles(), 8);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn drop_also_shuts_down() {
+        let _pool = Pool::new(2, registry(), false);
+        // dropping must not hang
+    }
+
+    #[test]
+    fn pinning_smoke() {
+        // Must not crash even on a 1-core box.
+        let pool = Pool::new(2, registry(), true);
+        pool.shutdown();
+        pin_to_core(0);
+    }
+}

@@ -1,0 +1,326 @@
+//! Communication-code representation and its "bytecode" compilation
+//! (paper §II).
+//!
+//! A GPRM task is an S-expression such as `(S1 (S2 10) 20)`; the
+//! compiler flattens the tree into per-node *code packets* and assigns
+//! every task node to a tile — the *task description*. The builder API
+//! ([`Prog`]) constructs the same trees programmatically and is what
+//! `#pragma gprm unroll` lowers to: loops over task spawns are
+//! evaluated at **compile time** ([`Prog::unroll`]).
+
+use super::kernel::Registry;
+use super::value::Value;
+use std::sync::Arc;
+
+/// A native task body: a rust closure playing the role of a C++ task
+/// kernel method bound to one index (the hybrid worksharing-tasking
+/// fast path used by `GprmRuntime::par_invoke`).
+pub type NativeFn = Arc<dyn Fn(usize) -> Value + Send + Sync>;
+
+/// Builder-level expression (communication code AST).
+#[derive(Clone)]
+pub enum Prog {
+    /// Literal constant.
+    Const(Value),
+    /// Kernel method call; `tile` optionally pins the task to a tile
+    /// ("it is straightforward to specify which task to be run on
+    /// which thread initially", §VII-B).
+    Call {
+        kernel: String,
+        method: String,
+        args: Vec<Prog>,
+        tile: Option<usize>,
+    },
+    /// `#pragma gprm seq` — evaluate children one after another;
+    /// value of the last child.
+    Seq(Vec<Prog>),
+    /// Default GPRM evaluation — children evaluated in parallel;
+    /// value is the list of child values.
+    Par(Vec<Prog>),
+    /// Native closure task (see [`NativeFn`]).
+    Native { f: NativeFn, ind: usize, tile: Option<usize> },
+}
+
+impl Prog {
+    pub fn lit(v: impl Into<Value>) -> Prog {
+        Prog::Const(v.into())
+    }
+
+    pub fn call(kernel: &str, method: &str, args: Vec<Prog>) -> Prog {
+        Prog::Call {
+            kernel: kernel.into(),
+            method: method.into(),
+            args,
+            tile: None,
+        }
+    }
+
+    /// Pin a `Call`/`Native` node to a tile.
+    pub fn on_tile(self, t: usize) -> Prog {
+        match self {
+            Prog::Call { kernel, method, args, .. } => {
+                Prog::Call { kernel, method, args, tile: Some(t) }
+            }
+            Prog::Native { f, ind, .. } => {
+                Prog::Native { f, ind, tile: Some(t) }
+            }
+            other => other,
+        }
+    }
+
+    pub fn seq(items: Vec<Prog>) -> Prog {
+        Prog::Seq(items)
+    }
+
+    pub fn par(items: Vec<Prog>) -> Prog {
+        Prog::Par(items)
+    }
+
+    /// `#pragma gprm unroll`: compile-time loop evaluation — the body
+    /// closure is expanded for every index *now*, producing a `par`
+    /// node of the spawned tasks (paper Listing 5).
+    pub fn unroll(
+        range: std::ops::Range<usize>,
+        body: impl Fn(usize) -> Prog,
+    ) -> Prog {
+        Prog::Par(range.map(body).collect())
+    }
+
+    /// Native closure task with an index argument.
+    pub fn native(ind: usize, f: NativeFn) -> Prog {
+        Prog::Native { f, ind, tile: None }
+    }
+
+    /// Compile against a registry onto `n_tiles` tiles.
+    pub fn compile(
+        &self,
+        registry: &Registry,
+        n_tiles: usize,
+    ) -> Result<Program, String> {
+        assert!(n_tiles > 0);
+        let mut c = Compiler { registry, n_tiles, next_tile: 0, nodes: Vec::new() };
+        let root = c.lower(self)?;
+        // Locality post-pass: control/const nodes live on the tile of
+        // their first task child (falling back to 0), so reduction
+        // traffic stays near the work.
+        let mut prog = Program { nodes: c.nodes, root };
+        fixup_control_tiles(&mut prog);
+        Ok(prog)
+    }
+}
+
+/// Compiled node operation.
+pub enum NodeOp {
+    Const(Value),
+    Call { kernel: usize, method: usize },
+    Native { f: NativeFn, ind: usize },
+    Seq,
+    Par,
+}
+
+/// One compiled code packet.
+pub struct Node {
+    pub op: NodeOp,
+    /// Child node ids (arguments).
+    pub args: Vec<usize>,
+    /// Hosting tile (the task description entry for this node).
+    pub tile: usize,
+}
+
+/// A compiled program: flat node store + root id.
+pub struct Program {
+    pub nodes: Vec<Node>,
+    pub root: usize,
+}
+
+impl Program {
+    /// Total number of task nodes (Call + Native), i.e. tasks the
+    /// reduction engine will fire.
+    pub fn task_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, NodeOp::Call { .. } | NodeOp::Native { .. }))
+            .count()
+    }
+
+    /// The task→tile assignment restricted to task nodes, in node
+    /// order. Used by tests to verify the round-robin description.
+    pub fn task_tiles(&self) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, NodeOp::Call { .. } | NodeOp::Native { .. }))
+            .map(|n| n.tile)
+            .collect()
+    }
+}
+
+struct Compiler<'a> {
+    registry: &'a Registry,
+    n_tiles: usize,
+    next_tile: usize,
+    nodes: Vec<Node>,
+}
+
+impl<'a> Compiler<'a> {
+    fn alloc_task_tile(&mut self, explicit: Option<usize>) -> usize {
+        match explicit {
+            Some(t) => t % self.n_tiles,
+            None => {
+                let t = self.next_tile % self.n_tiles;
+                self.next_tile += 1;
+                t
+            }
+        }
+    }
+
+    fn lower(&mut self, p: &Prog) -> Result<usize, String> {
+        let node = match p {
+            Prog::Const(v) => {
+                Node { op: NodeOp::Const(v.clone()), args: vec![], tile: 0 }
+            }
+            Prog::Call { kernel, method, args, tile } => {
+                let (ki, mi) = self
+                    .registry
+                    .resolve(kernel, method)
+                    .ok_or_else(|| format!("unknown task {kernel}.{method}"))?;
+                let mut arg_ids = Vec::with_capacity(args.len());
+                for a in args {
+                    arg_ids.push(self.lower(a)?);
+                }
+                let t = self.alloc_task_tile(*tile);
+                Node {
+                    op: NodeOp::Call { kernel: ki, method: mi },
+                    args: arg_ids,
+                    tile: t,
+                }
+            }
+            Prog::Native { f, ind, tile } => {
+                let t = self.alloc_task_tile(*tile);
+                Node {
+                    op: NodeOp::Native { f: f.clone(), ind: *ind },
+                    args: vec![],
+                    tile: t,
+                }
+            }
+            Prog::Seq(items) | Prog::Par(items) => {
+                let is_seq = matches!(p, Prog::Seq(_));
+                let mut arg_ids = Vec::with_capacity(items.len());
+                for a in items {
+                    arg_ids.push(self.lower(a)?);
+                }
+                Node {
+                    op: if is_seq { NodeOp::Seq } else { NodeOp::Par },
+                    args: arg_ids,
+                    tile: 0, // fixed up in the post-pass
+                }
+            }
+        };
+        self.nodes.push(node);
+        Ok(self.nodes.len() - 1)
+    }
+}
+
+fn fixup_control_tiles(prog: &mut Program) {
+    // Children are lowered before parents, so one forward pass sees
+    // children already fixed.
+    for i in 0..prog.nodes.len() {
+        if matches!(prog.nodes[i].op, NodeOp::Seq | NodeOp::Par) {
+            let t = prog.nodes[i]
+                .args
+                .iter()
+                .map(|&c| prog.nodes[c].tile)
+                .next()
+                .unwrap_or(0);
+            prog.nodes[i].tile = t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::ClosureKernel;
+
+    fn reg() -> Registry {
+        let mut r = Registry::new();
+        r.register(Arc::new(
+            ClosureKernel::new("k")
+                .method("f", |a| Value::Int(a.iter().map(|v| v.int()).sum()))
+                .method("g", |_| Value::Unit),
+        ));
+        r
+    }
+
+    #[test]
+    fn round_robin_task_description() {
+        // (par (k.f) (k.f) (k.f) (k.f) (k.f)) on 3 tiles → 0 1 2 0 1.
+        let p = Prog::par((0..5).map(|_| Prog::call("k", "f", vec![])).collect());
+        let prog = p.compile(&reg(), 3).unwrap();
+        assert_eq!(prog.task_tiles(), vec![0, 1, 2, 0, 1]);
+        assert_eq!(prog.task_count(), 5);
+    }
+
+    #[test]
+    fn explicit_pinning_wins() {
+        let p = Prog::par(vec![
+            Prog::call("k", "f", vec![]).on_tile(7),
+            Prog::call("k", "f", vec![]),
+        ]);
+        let prog = p.compile(&reg(), 4).unwrap();
+        assert_eq!(prog.task_tiles(), vec![3, 0]); // 7 % 4 = 3
+    }
+
+    #[test]
+    fn unknown_task_rejected() {
+        let p = Prog::call("k", "nope", vec![]);
+        assert!(p.compile(&reg(), 2).is_err());
+        let p2 = Prog::call("zzz", "f", vec![]);
+        assert!(p2.compile(&reg(), 2).is_err());
+    }
+
+    #[test]
+    fn unroll_is_compile_time() {
+        let p = Prog::unroll(0..4, |i| {
+            Prog::call("k", "f", vec![Prog::lit(i as i64)])
+        });
+        let prog = p.compile(&reg(), 63).unwrap();
+        assert_eq!(prog.task_count(), 4);
+        // Each unrolled task got consecutive tiles.
+        assert_eq!(prog.task_tiles(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn control_nodes_follow_first_child() {
+        let p = Prog::seq(vec![
+            Prog::call("k", "f", vec![]).on_tile(5),
+            Prog::call("k", "g", vec![]),
+        ]);
+        let prog = p.compile(&reg(), 8).unwrap();
+        let root = &prog.nodes[prog.root];
+        assert!(matches!(root.op, NodeOp::Seq));
+        assert_eq!(root.tile, 5);
+    }
+
+    #[test]
+    fn nested_args_compile() {
+        // (k.f (k.f 10) 20) — the paper's canonical example shape.
+        let p = Prog::call(
+            "k",
+            "f",
+            vec![
+                Prog::call("k", "f", vec![Prog::lit(10i64)]),
+                Prog::lit(20i64),
+            ],
+        );
+        let prog = p.compile(&reg(), 2).unwrap();
+        assert_eq!(prog.task_count(), 2);
+        // Root call has two args: a call node and a const node.
+        let root = &prog.nodes[prog.root];
+        assert_eq!(root.args.len(), 2);
+        assert!(matches!(
+            prog.nodes[root.args[0]].op,
+            NodeOp::Call { .. }
+        ));
+        assert!(matches!(prog.nodes[root.args[1]].op, NodeOp::Const(_)));
+    }
+}

@@ -1,0 +1,318 @@
+//! [`GprmRuntime`] — the public entry point to the GPRM machine.
+//!
+//! Construction spawns the tile pool (one thread per core, paper §II);
+//! [`GprmRuntime::run`] evaluates communication code; and
+//! [`GprmRuntime::par_invoke`] is the hybrid worksharing-tasking fast
+//! path: it spawns exactly *CL* tasks, "each of which with their own
+//! indices", which the caller combines with the [`super::worksharing`]
+//! constructs (paper §II–III).
+
+use super::kernel::Registry;
+use super::packet::{Packet, RetAddr, TaskResult};
+use super::pool::Pool;
+use super::program::{NativeFn, Prog, Program};
+use super::stats::StatsSnapshot;
+use super::value::Value;
+use std::sync::{mpsc, Arc};
+
+/// Runtime configuration.
+#[derive(Clone, Debug)]
+pub struct GprmConfig {
+    /// Number of tiles = threads = "cores". The paper's default on the
+    /// TILEPro64 is 63 (one tile reserved for PCI).
+    pub n_tiles: usize,
+    /// Pin tile threads to host cores (paper §VII-A).
+    pub pin: bool,
+}
+
+impl Default for GprmConfig {
+    fn default() -> Self {
+        Self { n_tiles: 63, pin: false }
+    }
+}
+
+impl GprmConfig {
+    pub fn with_tiles(n_tiles: usize) -> Self {
+        Self { n_tiles, ..Self::default() }
+    }
+}
+
+/// The Glasgow Parallel Reduction Machine.
+pub struct GprmRuntime {
+    pool: Pool,
+    registry: Registry,
+    config: GprmConfig,
+}
+
+impl GprmRuntime {
+    /// Spawn the machine: `config.n_tiles` tile threads hosting
+    /// `registry`'s task kernels.
+    pub fn new(config: GprmConfig, registry: Registry) -> Self {
+        let pool = Pool::new(config.n_tiles, registry.clone(), config.pin);
+        Self { pool, registry, config }
+    }
+
+    /// Convenience: default config, no kernels (native tasks only).
+    pub fn with_tiles(n_tiles: usize) -> Self {
+        Self::new(GprmConfig::with_tiles(n_tiles), Registry::new())
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.config.n_tiles
+    }
+
+    /// The concurrency level — "normally … the same as the number of
+    /// threads, which is itself … the number of cores in GPRM" (§II).
+    pub fn concurrency_level(&self) -> usize {
+        self.config.n_tiles
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Compile communication code against this machine.
+    pub fn compile(&self, prog: &Prog) -> Result<Arc<Program>, String> {
+        Ok(Arc::new(prog.compile(&self.registry, self.config.n_tiles)?))
+    }
+
+    /// Compile and evaluate communication code; blocks until the root
+    /// task completes. Errors carry the panic message of a failed task
+    /// kernel.
+    pub fn run(&self, prog: &Prog) -> TaskResult {
+        let compiled = self.compile(prog).map_err(|e| format!("compile: {e}"))?;
+        self.run_compiled(&compiled)
+    }
+
+    /// Evaluate an already-compiled program (hot loops compile once).
+    pub fn run_compiled(&self, prog: &Arc<Program>) -> TaskResult {
+        let (tx, rx) = mpsc::channel();
+        let root_tile = prog.nodes[prog.root].tile;
+        self.pool.send(
+            root_tile,
+            Packet::Request {
+                prog: prog.clone(),
+                node: prog.root,
+                ret: RetAddr::Root(tx),
+            },
+        );
+        rx.recv().map_err(|_| "machine shut down".to_string())?
+    }
+
+    /// The hybrid worksharing-tasking entry point: spawn exactly `cl`
+    /// tasks, task `ind` initially hosted on tile `ind % n_tiles`, each
+    /// running `f(ind)`; block until all complete.
+    ///
+    /// This is GPRM's remedy for fine-grained tasks (§II): "instead of
+    /// creating tasks in a loop … one can create as many tasks as the
+    /// concurrency level, each of which with their own indices",
+    /// combined with `par_for`-style constructs inside `f`.
+    ///
+    /// Panics inside `f` are reported as `Err`.
+    pub fn par_invoke<'env, F>(&self, cl: usize, f: F) -> Result<(), String>
+    where
+        F: Fn(usize) + Send + Sync + 'env,
+    {
+        assert!(cl > 0, "concurrency level must be positive");
+        // SAFETY (lifetime erasure): `run` blocks until the root `par`
+        // node's result arrives, and a `par` activation replies only
+        // after *all* children have responded — including failed ones
+        // (see tile.rs). Hence no task can run `f` after this frame
+        // returns, and extending the closure's lifetime to 'static for
+        // the duration of the blocking call is sound.
+        let f_arc: Arc<dyn Fn(usize) -> Value + Send + Sync + 'env> =
+            Arc::new(move |i| {
+                f(i);
+                Value::Unit
+            });
+        let f_static: NativeFn = unsafe {
+            std::mem::transmute::<
+                Arc<dyn Fn(usize) -> Value + Send + Sync + 'env>,
+                Arc<dyn Fn(usize) -> Value + Send + Sync + 'static>,
+            >(f_arc)
+        };
+        let prog = Prog::par(
+            (0..cl)
+                .map(|i| Prog::native(i, f_static.clone()).on_tile(i))
+                .collect(),
+        );
+        self.run(&prog).map(|_| ())
+    }
+
+    /// Per-tile statistics snapshots.
+    pub fn stats(&self) -> Vec<StatsSnapshot> {
+        self.pool.stats()
+    }
+
+    /// Aggregate statistics.
+    pub fn stats_total(&self) -> StatsSnapshot {
+        self.pool.stats_total()
+    }
+
+    /// Stop all tiles and join threads.
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::ClosureKernel;
+    use crate::coordinator::sexpr;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn arith_runtime(n_tiles: usize) -> GprmRuntime {
+        let mut r = Registry::new();
+        r.register(Arc::new(
+            ClosureKernel::new("a")
+                .method("add", |v| Value::Int(v.iter().map(|x| x.int()).sum()))
+                .method("mul", |v| {
+                    Value::Int(v.iter().map(|x| x.int()).product())
+                })
+                .method("boom", |_| panic!("deliberate failure")),
+        ));
+        GprmRuntime::new(GprmConfig { n_tiles, pin: false }, r)
+    }
+
+    #[test]
+    fn evaluates_nested_sexpr() {
+        let rt = arith_runtime(4);
+        // (a.add (a.mul 6 7) 100) = 142
+        let p = sexpr::parse("(a.add (a.mul 6 7) 100)").unwrap();
+        assert_eq!(rt.run(&p).unwrap(), Value::Int(142));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn parallel_arguments_all_evaluate() {
+        let rt = arith_runtime(8);
+        // add of 20 parallel muls
+        let args: Vec<Prog> = (1..=20)
+            .map(|i| Prog::call("a", "mul", vec![Prog::lit(i as i64), Prog::lit(2i64)]))
+            .collect();
+        let p = Prog::call("a", "add", args);
+        assert_eq!(rt.run(&p).unwrap(), Value::Int(2 * (1..=21).sum::<i64>() - 42));
+        // simpler: 2*(1+..+20) = 420
+        rt.shutdown();
+    }
+
+    #[test]
+    fn seq_returns_last() {
+        let rt = arith_runtime(2);
+        let p = sexpr::parse("(seq (a.add 1 2) (a.add 3 4))").unwrap();
+        assert_eq!(rt.run(&p).unwrap(), Value::Int(7));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn par_returns_list() {
+        let rt = arith_runtime(2);
+        let p = sexpr::parse("(par (a.add 1 2) (a.mul 3 4))").unwrap();
+        assert_eq!(
+            rt.run(&p).unwrap(),
+            Value::List(vec![Value::Int(3), Value::Int(12)])
+        );
+        rt.shutdown();
+    }
+
+    #[test]
+    fn kernel_panic_propagates() {
+        let rt = arith_runtime(3);
+        let p = sexpr::parse("(a.add (a.boom) 1)").unwrap();
+        let e = rt.run(&p).unwrap_err();
+        assert!(e.contains("deliberate failure"), "{e}");
+        // Machine still usable afterwards.
+        let p2 = sexpr::parse("(a.add 1 1)").unwrap();
+        assert_eq!(rt.run(&p2).unwrap(), Value::Int(2));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn par_invoke_runs_all_indices() {
+        let rt = GprmRuntime::with_tiles(7);
+        let hits: Vec<AtomicUsize> = (0..7).map(|_| AtomicUsize::new(0)).collect();
+        rt.par_invoke(7, |ind| {
+            hits[ind].fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn par_invoke_borrows_stack_data() {
+        let rt = GprmRuntime::with_tiles(4);
+        let data: Vec<u64> = (0..100).collect();
+        let sums = std::sync::Mutex::new(vec![0u64; 4]);
+        rt.par_invoke(4, |ind| {
+            let mut s = 0;
+            let mut i = ind;
+            while i < data.len() {
+                s += data[i];
+                i += 4;
+            }
+            sums.lock().unwrap()[ind] = s;
+        })
+        .unwrap();
+        let total: u64 = sums.lock().unwrap().iter().sum();
+        assert_eq!(total, (0..100).sum::<u64>());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn par_invoke_propagates_panic() {
+        let rt = GprmRuntime::with_tiles(4);
+        let e = rt
+            .par_invoke(4, |ind| {
+                if ind == 2 {
+                    panic!("task 2 died");
+                }
+            })
+            .unwrap_err();
+        assert!(e.contains("task 2 died"), "{e}");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn cl_larger_than_tiles_wraps() {
+        let rt = GprmRuntime::with_tiles(3);
+        let hits = AtomicUsize::new(0);
+        rt.par_invoke(9, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 9);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn run_compiled_reuse() {
+        let rt = arith_runtime(2);
+        let p = sexpr::parse("(a.add 20 22)").unwrap();
+        let compiled = rt.compile(&p).unwrap();
+        for _ in 0..10 {
+            assert_eq!(rt.run_compiled(&compiled).unwrap(), Value::Int(42));
+        }
+        // 10 runs × 1 task each.
+        assert_eq!(rt.stats_total().tasks, 10);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn unroll_pragma_spawns_tasks() {
+        let rt = arith_runtime(8);
+        // #pragma gprm unroll over n: add(mul(n, n)) for n in 1..=5
+        let p = Prog::call(
+            "a",
+            "add",
+            (1..=5i64)
+                .map(|n| Prog::call("a", "mul", vec![Prog::lit(n), Prog::lit(n)]))
+                .collect(),
+        );
+        assert_eq!(rt.run(&p).unwrap(), Value::Int(55));
+        rt.shutdown();
+    }
+}

@@ -1,0 +1,197 @@
+//! Textual S-expression front-end for communication code (paper §II:
+//! "a task is a list of bytecodes representing an S-expression, e.g.
+//! `(S1 (S2 10) 20)`").
+//!
+//! Grammar:
+//!
+//! ```text
+//! expr   := atom | list
+//! list   := '(' head expr* ')'
+//! head   := 'seq' | 'par' | kernel '.' method
+//! atom   := integer | float | string
+//! ```
+//!
+//! `(seq e1 e2 …)` and `(par e1 e2 …)` map to the `seq` pragma and the
+//! default parallel evaluation respectively.
+
+use super::program::Prog;
+use super::value::Value;
+
+/// Parse a single S-expression into a [`Prog`].
+pub fn parse(src: &str) -> Result<Prog, String> {
+    let mut toks = tokenize(src)?;
+    toks.reverse(); // pop from the back
+    let e = parse_expr(&mut toks)?;
+    if !toks.is_empty() {
+        return Err(format!("trailing tokens: {:?}", toks.last().unwrap()));
+    }
+    Ok(e)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    LParen,
+    RParen,
+    Atom(String),
+    Str(String),
+}
+
+fn tokenize(src: &str) -> Result<Vec<Tok>, String> {
+    let mut out = Vec::new();
+    let mut chars = src.chars().peekable();
+    while let Some(&c) = chars.peek() {
+        match c {
+            '(' => {
+                chars.next();
+                out.push(Tok::LParen);
+            }
+            ')' => {
+                chars.next();
+                out.push(Tok::RParen);
+            }
+            ';' => {
+                // comment to end of line
+                for c in chars.by_ref() {
+                    if c == '\n' {
+                        break;
+                    }
+                }
+            }
+            '"' => {
+                chars.next();
+                let mut s = String::new();
+                loop {
+                    match chars.next() {
+                        None => return Err("unterminated string".into()),
+                        Some('"') => break,
+                        Some(c) => s.push(c),
+                    }
+                }
+                out.push(Tok::Str(s));
+            }
+            c if c.is_whitespace() => {
+                chars.next();
+            }
+            _ => {
+                let mut s = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c.is_whitespace() || c == '(' || c == ')' || c == ';' {
+                        break;
+                    }
+                    s.push(c);
+                    chars.next();
+                }
+                out.push(Tok::Atom(s));
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn parse_expr(toks: &mut Vec<Tok>) -> Result<Prog, String> {
+    match toks.pop() {
+        None => Err("unexpected end of input".into()),
+        Some(Tok::RParen) => Err("unexpected ')'".into()),
+        Some(Tok::Str(s)) => Ok(Prog::lit(Value::Str(s))),
+        Some(Tok::Atom(a)) => atom_to_lit(&a),
+        Some(Tok::LParen) => {
+            let head = match toks.pop() {
+                Some(Tok::Atom(a)) => a,
+                other => {
+                    return Err(format!("expected operator, got {other:?}"))
+                }
+            };
+            let mut items = Vec::new();
+            loop {
+                match toks.last() {
+                    None => return Err("missing ')'".into()),
+                    Some(Tok::RParen) => {
+                        toks.pop();
+                        break;
+                    }
+                    _ => items.push(parse_expr(toks)?),
+                }
+            }
+            match head.as_str() {
+                "seq" => Ok(Prog::seq(items)),
+                "par" => Ok(Prog::par(items)),
+                _ => {
+                    let (kernel, method) = head.split_once('.').ok_or(
+                        format!("operator {head:?} is not kernel.method"),
+                    )?;
+                    Ok(Prog::call(kernel, method, items))
+                }
+            }
+        }
+    }
+}
+
+fn atom_to_lit(a: &str) -> Result<Prog, String> {
+    if let Ok(i) = a.parse::<i64>() {
+        return Ok(Prog::lit(i));
+    }
+    if let Ok(f) = a.parse::<f64>() {
+        return Ok(Prog::lit(f));
+    }
+    Err(format!("bare symbol {a:?} outside operator position"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kernel::{ClosureKernel, Registry};
+    use std::sync::Arc;
+
+    fn reg() -> Registry {
+        let mut r = Registry::new();
+        r.register(Arc::new(
+            ClosureKernel::new("S1").method("run", |a| {
+                Value::Int(a.iter().map(|v| v.int()).sum())
+            }),
+        ));
+        r
+    }
+
+    #[test]
+    fn parses_paper_example_shape() {
+        // (S1.run (S1.run 10) 20)
+        let p = parse("(S1.run (S1.run 10) 20)").unwrap();
+        let prog = p.compile(&reg(), 4).unwrap();
+        assert_eq!(prog.task_count(), 2);
+    }
+
+    #[test]
+    fn seq_par_forms() {
+        let p = parse("(seq (par (S1.run 1) (S1.run 2)) (S1.run 3))").unwrap();
+        assert!(matches!(p, Prog::Seq(_)));
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let p = parse("(S1.run \"hi\" 2) ; trailing comment\n").unwrap();
+        match p {
+            Prog::Call { args, .. } => assert_eq!(args.len(), 2),
+            _ => panic!("expected call"),
+        }
+    }
+
+    #[test]
+    fn floats() {
+        match parse("(S1.run 2.5)").unwrap() {
+            Prog::Call { args, .. } => {
+                assert!(matches!(args[0], Prog::Const(Value::Float(f)) if f == 2.5))
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("(S1.run").is_err()); // missing )
+        assert!(parse(")").is_err());
+        assert!(parse("(noDot 1)").is_err());
+        assert!(parse("sym").is_err());
+        assert!(parse("(S1.run 1) extra").is_err());
+        assert!(parse("(S1.run \"open").is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! Per-tile counters (benches and the §Perf iteration log read these).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters maintained by one tile's event loop. All relaxed — they
+/// are diagnostics, not synchronisation.
+#[derive(Default, Debug)]
+pub struct TileStats {
+    /// Packets dequeued (requests + responses).
+    pub packets: AtomicU64,
+    /// Task kernels fired (Call + Native nodes).
+    pub tasks: AtomicU64,
+    /// Nanoseconds spent inside task kernels.
+    pub kernel_ns: AtomicU64,
+    /// Activation records created.
+    pub activations: AtomicU64,
+}
+
+impl TileStats {
+    pub fn add_packet(&self) {
+        self.packets.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_task(&self, kernel_ns: u64) {
+        self.tasks.fetch_add(1, Ordering::Relaxed);
+        self.kernel_ns.fetch_add(kernel_ns, Ordering::Relaxed);
+    }
+
+    pub fn add_activation(&self) {
+        self.activations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot as plain numbers.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            packets: self.packets.load(Ordering::Relaxed),
+            tasks: self.tasks.load(Ordering::Relaxed),
+            kernel_ns: self.kernel_ns.load(Ordering::Relaxed),
+            activations: self.activations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-number snapshot of [`TileStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub packets: u64,
+    pub tasks: u64,
+    pub kernel_ns: u64,
+    pub activations: u64,
+}
+
+impl StatsSnapshot {
+    pub fn merge(self, other: StatsSnapshot) -> StatsSnapshot {
+        StatsSnapshot {
+            packets: self.packets + other.packets,
+            tasks: self.tasks + other.tasks,
+            kernel_ns: self.kernel_ns + other.kernel_ns,
+            activations: self.activations + other.activations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = TileStats::default();
+        s.add_packet();
+        s.add_packet();
+        s.add_task(100);
+        s.add_activation();
+        let snap = s.snapshot();
+        assert_eq!(snap.packets, 2);
+        assert_eq!(snap.tasks, 1);
+        assert_eq!(snap.kernel_ns, 100);
+        assert_eq!(snap.activations, 1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let a = StatsSnapshot { packets: 1, tasks: 2, kernel_ns: 3, activations: 4 };
+        let b = StatsSnapshot { packets: 10, tasks: 20, kernel_ns: 30, activations: 40 };
+        let m = a.merge(b);
+        assert_eq!(m.packets, 11);
+        assert_eq!(m.tasks, 22);
+        assert_eq!(m.kernel_ns, 33);
+        assert_eq!(m.activations, 44);
+    }
+}

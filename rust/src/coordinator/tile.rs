@@ -1,0 +1,351 @@
+//! The tile event loop — task manager + reduction engine (paper §II).
+//!
+//! "Each tile consists of a task node and a FIFO queue for incoming
+//! packets. Every tile runs in its own thread and blocks on the FIFO.
+//! … The reduction engine, i.e. the task manager, evaluates the
+//! bytecode via parallel dispatch of packets requesting computations
+//! to other tiles."
+//!
+//! Evaluation protocol per node kind:
+//!
+//! * `Const`  — replied immediately (constants live in the bytecode).
+//! * `Native` — the closure runs to completion on this tile.
+//! * `Call`   — an *activation record* is created; request packets for
+//!   all non-constant arguments are dispatched **in parallel**; when
+//!   the last response arrives the kernel fires.
+//! * `Par`    — like `Call` but the value is the list of child values.
+//! * `Seq`    — children are dispatched one at a time (`#pragma gprm
+//!   seq`).
+//!
+//! Task-kernel panics are caught and propagated as `Err` results; a
+//! failed activation still waits for its outstanding children before
+//! replying, so borrowed data (see `GprmRuntime::par_invoke`) is never
+//! released while a task can still touch it.
+
+use super::kernel::Registry;
+use super::packet::{Packet, RetAddr, TaskResult};
+use super::program::{NodeOp, Program};
+use super::stats::TileStats;
+use super::value::Value;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Everything a tile thread needs.
+pub struct TileContext {
+    pub id: usize,
+    pub senders: Arc<Vec<mpsc::Sender<Packet>>>,
+    pub registry: Registry,
+    pub stats: Arc<TileStats>,
+}
+
+/// Evaluation mode of an activation.
+enum Mode {
+    /// All children dispatched at once; result = kernel(args).
+    Call { kernel: usize, method: usize },
+    /// All children dispatched at once; result = list of child values.
+    Par,
+    /// Children dispatched one at a time; result = last child value.
+    Seq { next: usize },
+}
+
+/// An in-flight node evaluation.
+struct Activation {
+    prog: Arc<Program>,
+    node: usize,
+    ret: RetAddr,
+    mode: Mode,
+    slots: Vec<Option<Value>>,
+    /// Child requests dispatched but not yet responded.
+    outstanding: usize,
+    /// First error seen (kernel panic in some descendant).
+    failed: Option<String>,
+}
+
+/// The tile event loop. Runs until a `Shutdown` packet arrives.
+pub fn tile_loop(ctx: TileContext, rx: mpsc::Receiver<Packet>) {
+    let mut tile = Tile {
+        ctx,
+        slab: Vec::new(),
+        free: Vec::new(),
+    };
+    while let Ok(pkt) = rx.recv() {
+        tile.ctx.stats.add_packet();
+        match pkt {
+            Packet::Shutdown => break,
+            Packet::Request { prog, node, ret } => tile.on_request(prog, node, ret),
+            Packet::Response { act, slot, value } => tile.on_response(act, slot, value),
+        }
+    }
+}
+
+struct Tile {
+    ctx: TileContext,
+    slab: Vec<Option<Activation>>,
+    free: Vec<usize>,
+}
+
+impl Tile {
+    fn send(&self, tile: usize, pkt: Packet) {
+        // A send can only fail if the destination tile already shut
+        // down, which the runtime's shutdown ordering prevents.
+        self.ctx.senders[tile]
+            .send(pkt)
+            .expect("destination tile FIFO closed");
+    }
+
+    fn reply(&self, ret: RetAddr, value: TaskResult) {
+        match ret {
+            RetAddr::Root(tx) => {
+                // The root may have gone away on error paths; ignore.
+                let _ = tx.send(value);
+            }
+            RetAddr::Tile { tile, act, slot } => {
+                self.send(tile, Packet::Response { act, slot, value });
+            }
+        }
+    }
+
+    /// Execute a task kernel with panic isolation.
+    fn fire_kernel(&self, kernel: usize, method: usize, args: &[Value]) -> TaskResult {
+        let k = self.ctx.registry.get(kernel).clone();
+        let t0 = Instant::now();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            k.call(method, args)
+        }));
+        self.ctx.stats.add_task(t0.elapsed().as_nanos() as u64);
+        r.map_err(|e| panic_message(e.as_ref()))
+    }
+
+    fn fire_native(
+        &self,
+        f: &super::program::NativeFn,
+        ind: usize,
+    ) -> TaskResult {
+        let t0 = Instant::now();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(ind)));
+        self.ctx.stats.add_task(t0.elapsed().as_nanos() as u64);
+        r.map_err(|e| panic_message(e.as_ref()))
+    }
+
+    fn alloc_act(&mut self, a: Activation) -> usize {
+        self.ctx.stats.add_activation();
+        if let Some(i) = self.free.pop() {
+            self.slab[i] = Some(a);
+            i
+        } else {
+            self.slab.push(Some(a));
+            self.slab.len() - 1
+        }
+    }
+
+    fn on_request(&mut self, prog: Arc<Program>, node: usize, ret: RetAddr) {
+        match &prog.nodes[node].op {
+            NodeOp::Const(v) => {
+                let v = v.clone();
+                self.reply(ret, Ok(v));
+            }
+            NodeOp::Native { f, ind } => {
+                let r = self.fire_native(&f.clone(), *ind);
+                self.reply(ret, r);
+            }
+            NodeOp::Call { kernel, method } => {
+                let (kernel, method) = (*kernel, *method);
+                let args = prog.nodes[node].args.clone();
+                let act = self.alloc_act(Activation {
+                    prog: prog.clone(),
+                    node,
+                    ret,
+                    mode: Mode::Call { kernel, method },
+                    slots: vec![None; args.len()],
+                    outstanding: 0,
+                    failed: None,
+                });
+                self.dispatch_all(act);
+                self.try_complete(act);
+            }
+            NodeOp::Par => {
+                let n = prog.nodes[node].args.len();
+                let act = self.alloc_act(Activation {
+                    prog: prog.clone(),
+                    node,
+                    ret,
+                    mode: Mode::Par,
+                    slots: vec![None; n],
+                    outstanding: 0,
+                    failed: None,
+                });
+                self.dispatch_all(act);
+                self.try_complete(act);
+            }
+            NodeOp::Seq => {
+                let n = prog.nodes[node].args.len();
+                let act = self.alloc_act(Activation {
+                    prog: prog.clone(),
+                    node,
+                    ret,
+                    mode: Mode::Seq { next: 0 },
+                    slots: vec![None; n],
+                    outstanding: 0,
+                    failed: None,
+                });
+                self.dispatch_seq_next(act);
+                self.try_complete(act);
+            }
+        }
+    }
+
+    /// Parallel dispatch of every argument (Call / Par): constants are
+    /// filled inline from the bytecode; each non-constant child gets a
+    /// request packet sent to its hosting tile — all before any
+    /// response is waited on.
+    fn dispatch_all(&mut self, act_id: usize) {
+        let (prog, children) = {
+            let a = self.slab[act_id].as_ref().unwrap();
+            (a.prog.clone(), a.prog.nodes[a.node].args.clone())
+        };
+        for (slot, &child) in children.iter().enumerate() {
+            if let NodeOp::Const(v) = &prog.nodes[child].op {
+                let v = v.clone();
+                let a = self.slab[act_id].as_mut().unwrap();
+                a.slots[slot] = Some(v);
+            } else {
+                {
+                    let a = self.slab[act_id].as_mut().unwrap();
+                    a.outstanding += 1;
+                }
+                let dest = prog.nodes[child].tile;
+                self.send(
+                    dest,
+                    Packet::Request {
+                        prog: prog.clone(),
+                        node: child,
+                        ret: RetAddr::Tile { tile: self.ctx.id, act: act_id, slot },
+                    },
+                );
+            }
+        }
+    }
+
+    /// Sequential dispatch (`seq` pragma): advance past constants,
+    /// dispatch the first non-constant child, stop.
+    fn dispatch_seq_next(&mut self, act_id: usize) {
+        loop {
+            let (prog, node, next, failed) = {
+                let a = self.slab[act_id].as_ref().unwrap();
+                let next = match a.mode {
+                    Mode::Seq { next } => next,
+                    _ => unreachable!("dispatch_seq_next on non-seq"),
+                };
+                (a.prog.clone(), a.node, next, a.failed.is_some())
+            };
+            let children = &prog.nodes[node].args;
+            if failed || next >= children.len() {
+                return;
+            }
+            let child = children[next];
+            {
+                let a = self.slab[act_id].as_mut().unwrap();
+                a.mode = Mode::Seq { next: next + 1 };
+            }
+            if let NodeOp::Const(v) = &prog.nodes[child].op {
+                let v = v.clone();
+                let a = self.slab[act_id].as_mut().unwrap();
+                a.slots[next] = Some(v);
+                continue; // advance to the next child inline
+            }
+            {
+                let a = self.slab[act_id].as_mut().unwrap();
+                a.outstanding += 1;
+            }
+            let dest = prog.nodes[child].tile;
+            self.send(
+                dest,
+                Packet::Request {
+                    prog,
+                    node: child,
+                    ret: RetAddr::Tile { tile: self.ctx.id, act: act_id, slot: next },
+                },
+            );
+            return;
+        }
+    }
+
+    fn on_response(&mut self, act: usize, slot: usize, value: TaskResult) {
+        {
+            let a = self.slab[act]
+                .as_mut()
+                .unwrap_or_else(|| panic!("response for dead activation {act}"));
+            a.outstanding -= 1;
+            match value {
+                Ok(v) => a.slots[slot] = Some(v),
+                Err(e) => {
+                    if a.failed.is_none() {
+                        a.failed = Some(e);
+                    }
+                }
+            }
+        }
+        // Seq: dispatch the next child (unless failed).
+        if matches!(
+            self.slab[act].as_ref().unwrap().mode,
+            Mode::Seq { .. }
+        ) {
+            self.dispatch_seq_next(act);
+        }
+        self.try_complete(act);
+    }
+
+    /// If the activation has no outstanding children and nothing left
+    /// to dispatch, produce its value, reply, and free the record.
+    fn try_complete(&mut self, act_id: usize) {
+        let ready = {
+            let a = self.slab[act_id].as_ref().unwrap();
+            if a.outstanding > 0 {
+                false
+            } else {
+                match a.mode {
+                    Mode::Seq { next } => {
+                        a.failed.is_some() || next >= a.prog.nodes[a.node].args.len()
+                    }
+                    _ => true,
+                }
+            }
+        };
+        if !ready {
+            return;
+        }
+        let a = self.slab[act_id].take().unwrap();
+        self.free.push(act_id);
+        let result: TaskResult = if let Some(e) = a.failed {
+            Err(e)
+        } else {
+            match a.mode {
+                Mode::Call { kernel, method } => {
+                    let args: Vec<Value> =
+                        a.slots.into_iter().map(|s| s.expect("slot unfilled")).collect();
+                    self.fire_kernel(kernel, method, &args)
+                }
+                Mode::Par => Ok(Value::List(
+                    a.slots.into_iter().map(|s| s.expect("slot unfilled")).collect(),
+                )),
+                Mode::Seq { .. } => Ok(a
+                    .slots
+                    .into_iter()
+                    .flatten()
+                    .last()
+                    .unwrap_or(Value::Unit)),
+            }
+        };
+        self.reply(a.ret, result);
+    }
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        format!("task kernel panicked: {s}")
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        format!("task kernel panicked: {s}")
+    } else {
+        "task kernel panicked".to_string()
+    }
+}

@@ -1,0 +1,113 @@
+//! Dynamic values carried by GPRM packets (the "numeric constants and
+//! results" of the paper's S-expressions, §II).
+
+use std::fmt;
+
+/// A value flowing through the reduction machine.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// No value (side-effecting task kernels return this).
+    Unit,
+    /// Signed integer (loop indices, block ids, concurrency level).
+    Int(i64),
+    /// Floating point scalar.
+    Float(f64),
+    /// String (mostly diagnostics).
+    Str(String),
+    /// A list — e.g. the collected results of a `par` node.
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Integer accessor that panics with the kernel-author-facing
+    /// message (kernels are internal code; a wrong arity/type is a
+    /// programming error, matching GPRM's C++ static typing).
+    pub fn int(&self) -> i64 {
+        self.as_int().unwrap_or_else(|| panic!("expected Int, got {self:?}"))
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Unit => write!(f, "()"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::List(l) => {
+                write!(f, "(")?;
+                for (i, v) in l.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, " ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(i: i64) -> Self {
+        Value::Int(i)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(i: usize) -> Self {
+        Value::Int(i as i64)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(f: f64) -> Self {
+        Value::Float(f)
+    }
+}
+
+impl From<()> for Value {
+    fn from(_: ()) -> Self {
+        Value::Unit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        assert_eq!(Value::Int(3).as_int(), Some(3));
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(2.5).as_float(), Some(2.5));
+        assert_eq!(Value::Unit.as_int(), None);
+    }
+
+    #[test]
+    fn display_sexpr_style() {
+        let v = Value::List(vec![Value::Int(1), Value::Str("a".into())]);
+        assert_eq!(v.to_string(), "(1 a)");
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Int")]
+    fn int_panics_on_type_error() {
+        Value::Unit.int();
+    }
+}

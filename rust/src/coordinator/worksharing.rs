@@ -1,0 +1,331 @@
+//! GPRM parallel-loop (worksharing) constructs — paper §III.
+//!
+//! "In GPRM, multiple instances of the same task — normally as many as
+//! the concurrency level — are generated, each with a different index
+//! (similar to the global_id in OpenCL). Each of these tasks calls the
+//! parallel loop passing in their own index to specify which parts of
+//! the work should be performed by their host thread."
+//!
+//! * [`par_for`] — round-robin single loop (Listing 1, Fig 1a).
+//! * [`par_nested_for`] — a nested loop treated as one flattened loop
+//!   with the same round-robin pattern (Listing 2).
+//! * [`par_for_contiguous`] / [`par_nested_for_contiguous`] — the
+//!   *contiguous* method (Fig 1b): every thread gets an `m/n` chunk and
+//!   the remainder `m%n` is handed one-by-one to the foremost threads.
+//!
+//! The faithful loop from Listing 1 and a closed-form strided iterator
+//! are both provided; a property test pins their equivalence.
+
+/// Faithful port of paper Listing 1. Calls `work(i)` for every
+/// iteration `i ∈ [start, size)` owned by task index `ind` out of `cl`
+/// (concurrency level), in round-robin order with step 1 (Fig 1a).
+pub fn par_for(
+    start: usize,
+    size: usize,
+    ind: usize,
+    cl: usize,
+    mut work: impl FnMut(usize),
+) {
+    assert!(cl > 0 && ind < cl, "index {ind} out of concurrency level {cl}");
+    // Listing 1 verbatim: `turn` only advances while skipping; once
+    // `turn % CL == ind` the task strides by CL.
+    let mut turn = 0usize;
+    let mut i = start;
+    while i < size {
+        if turn % cl == ind {
+            work(i);
+            i += cl;
+        } else {
+            i += 1;
+            turn += 1;
+        }
+    }
+}
+
+/// Closed form of [`par_for`]: the iterations owned by `ind` are
+/// `start+ind, start+ind+cl, start+ind+2cl, …` (proved equivalent by a
+/// property test).
+pub fn par_for_indices(
+    start: usize,
+    size: usize,
+    ind: usize,
+    cl: usize,
+) -> impl Iterator<Item = usize> {
+    assert!(cl > 0 && ind < cl);
+    (start + ind..size).step_by(cl.max(1)).take_while(move |&i| i < size)
+}
+
+/// Paper Listing 2: a nested `(i, j)` loop treated as a single
+/// flattened loop of `(size1-start1)·(size2-start2)` iterations,
+/// distributed round-robin. Iteration `g` (row-major over `(i, j)`)
+/// belongs to task `ind` iff `g % cl == ind`.
+///
+/// (The listing in the paper carries `turn` across rows so the
+/// round-robin pattern continues seamlessly at row boundaries — i.e.
+/// exactly the flattened-loop semantics implemented here; §III: "A
+/// par_nested_for treats a nested loop as a single loop and follows
+/// the same pattern".)
+#[allow(clippy::too_many_arguments)]
+pub fn par_nested_for(
+    start1: usize,
+    size1: usize,
+    start2: usize,
+    size2: usize,
+    ind: usize,
+    cl: usize,
+    mut work: impl FnMut(usize, usize),
+) {
+    assert!(cl > 0 && ind < cl);
+    if size1 <= start1 || size2 <= start2 {
+        return;
+    }
+    let inner = size2 - start2;
+    let total = (size1 - start1) * inner;
+    let mut g = ind;
+    while g < total {
+        let i = start1 + g / inner;
+        let j = start2 + g % inner;
+        work(i, j);
+        g += cl;
+    }
+}
+
+/// Contiguous partitioning (Fig 1b): thread `ind` gets a block of
+/// `m/n` iterations, and the remainder `m % n` is distributed
+/// one-by-one to the foremost threads. Returns the owned subrange
+/// `[lo, hi)` of `[start, size)`.
+pub fn contiguous_range(
+    start: usize,
+    size: usize,
+    ind: usize,
+    cl: usize,
+) -> (usize, usize) {
+    assert!(cl > 0 && ind < cl);
+    let m = size.saturating_sub(start);
+    let base = m / cl;
+    let rem = m % cl;
+    let extra_before = ind.min(rem);
+    let lo = start + ind * base + extra_before;
+    let len = base + usize::from(ind < rem);
+    (lo, lo + len)
+}
+
+/// Contiguous single loop (Fig 1b).
+pub fn par_for_contiguous(
+    start: usize,
+    size: usize,
+    ind: usize,
+    cl: usize,
+    mut work: impl FnMut(usize),
+) {
+    let (lo, hi) = contiguous_range(start, size, ind, cl);
+    for i in lo..hi {
+        work(i);
+    }
+}
+
+/// Contiguous nested loop: flatten, chunk, un-flatten.
+#[allow(clippy::too_many_arguments)]
+pub fn par_nested_for_contiguous(
+    start1: usize,
+    size1: usize,
+    start2: usize,
+    size2: usize,
+    ind: usize,
+    cl: usize,
+    mut work: impl FnMut(usize, usize),
+) {
+    assert!(cl > 0 && ind < cl);
+    if size1 <= start1 || size2 <= start2 {
+        return;
+    }
+    let inner = size2 - start2;
+    let total = (size1 - start1) * inner;
+    let (lo, hi) = contiguous_range(0, total, ind, cl);
+    for g in lo..hi {
+        work(start1 + g / inner, start2 + g % inner);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    /// Collect iterations from a worksharing run for all indices.
+    fn collect_all(
+        start: usize,
+        size: usize,
+        cl: usize,
+        f: impl Fn(usize, &mut Vec<usize>),
+    ) -> (Vec<usize>, Vec<Vec<usize>>) {
+        let mut per = Vec::new();
+        let mut all = Vec::new();
+        for ind in 0..cl {
+            let mut v = Vec::new();
+            f(ind, &mut v);
+            all.extend(v.iter().copied());
+            per.push(v);
+        }
+        all.sort_unstable();
+        let _ = (start, size);
+        (all, per)
+    }
+
+    #[test]
+    fn par_for_fig1a_example() {
+        // Paper Fig 1: m=9 iterations over n=4 threads, step size 1:
+        // t0:{0,4,8} t1:{1,5} t2:{2,6} t3:{3,7}.
+        let mut per = Vec::new();
+        for ind in 0..4 {
+            let mut v = Vec::new();
+            par_for(0, 9, ind, 4, |i| v.push(i));
+            per.push(v);
+        }
+        assert_eq!(per[0], vec![0, 4, 8]);
+        assert_eq!(per[1], vec![1, 5]);
+        assert_eq!(per[2], vec![2, 6]);
+        assert_eq!(per[3], vec![3, 7]);
+    }
+
+    #[test]
+    fn par_for_contiguous_fig1b_example() {
+        // Fig 1b: contiguous m=9, n=4 → chunks 3,2,2,2.
+        let mut sizes = Vec::new();
+        for ind in 0..4 {
+            let (lo, hi) = contiguous_range(0, 9, ind, 4);
+            sizes.push(hi - lo);
+        }
+        assert_eq!(sizes, vec![3, 2, 2, 2]);
+        assert_eq!(contiguous_range(0, 9, 0, 4), (0, 3));
+        assert_eq!(contiguous_range(0, 9, 3, 4), (7, 9));
+    }
+
+    #[test]
+    fn par_for_covers_exactly_once() {
+        for &(start, size, cl) in
+            &[(0, 100, 7), (3, 50, 4), (0, 5, 8), (10, 10, 3), (0, 1, 1)]
+        {
+            let (all, _) = collect_all(start, size, cl, |ind, v| {
+                par_for(start, size, ind, cl, |i| v.push(i))
+            });
+            let expect: Vec<usize> = (start..size).collect();
+            assert_eq!(all, expect, "start={start} size={size} cl={cl}");
+        }
+    }
+
+    #[test]
+    fn par_for_matches_closed_form() {
+        for &(start, size, cl) in &[(0, 37, 5), (2, 100, 63), (0, 9, 4)] {
+            for ind in 0..cl {
+                let mut v = Vec::new();
+                par_for(start, size, ind, cl, |i| v.push(i));
+                let w: Vec<usize> =
+                    par_for_indices(start, size, ind, cl).collect();
+                assert_eq!(v, w);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_equals_flattened_single() {
+        // par_nested_for over (i, j) must equal par_for over the
+        // flattened index space.
+        let (s1, z1, s2, z2, cl) = (1usize, 5usize, 2usize, 9usize, 4usize);
+        let inner = z2 - s2;
+        for ind in 0..cl {
+            let mut nested = Vec::new();
+            par_nested_for(s1, z1, s2, z2, ind, cl, |i, j| {
+                nested.push((i - s1) * inner + (j - s2))
+            });
+            let mut flat = Vec::new();
+            par_for(0, (z1 - s1) * inner, ind, cl, |g| flat.push(g));
+            assert_eq!(nested, flat, "ind={ind}");
+        }
+    }
+
+    #[test]
+    fn nested_disjoint_cover() {
+        let (s1, z1, s2, z2, cl) = (0usize, 7usize, 0usize, 11usize, 5usize);
+        let mut seen = BTreeSet::new();
+        let mut count = 0usize;
+        for ind in 0..cl {
+            par_nested_for(s1, z1, s2, z2, ind, cl, |i, j| {
+                assert!(seen.insert((i, j)), "duplicate ({i},{j})");
+                count += 1;
+            });
+        }
+        assert_eq!(count, 7 * 11);
+    }
+
+    #[test]
+    fn contiguous_cover_and_balance() {
+        for &(start, size, cl) in &[(0, 100, 7), (5, 64, 63), (0, 3, 8)] {
+            let mut seen = BTreeSet::new();
+            let mut sizes = Vec::new();
+            for ind in 0..cl {
+                let mut n = 0;
+                par_for_contiguous(start, size, ind, cl, |i| {
+                    assert!(seen.insert(i));
+                    n += 1;
+                });
+                sizes.push(n);
+            }
+            assert_eq!(seen.len(), size - start);
+            // Balance: sizes differ by at most 1 and are non-increasing
+            // ("remainder … one-by-one to the foremost threads").
+            let max = *sizes.iter().max().unwrap();
+            let min = *sizes.iter().min().unwrap();
+            assert!(max - min <= 1);
+            for w in sizes.windows(2) {
+                assert!(w[0] >= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn nested_contiguous_cover() {
+        let mut seen = BTreeSet::new();
+        for ind in 0..6 {
+            par_nested_for_contiguous(2, 6, 1, 8, ind, 6, |i, j| {
+                assert!(seen.insert((i, j)));
+                assert!((2..6).contains(&i) && (1..8).contains(&j));
+            });
+        }
+        assert_eq!(seen.len(), 4 * 7);
+    }
+
+    #[test]
+    fn empty_ranges_are_noops() {
+        par_for(5, 5, 0, 4, |_| panic!("no work expected"));
+        par_nested_for(3, 3, 0, 9, 0, 2, |_, _| panic!("no work"));
+        par_nested_for(0, 9, 4, 4, 0, 2, |_, _| panic!("no work"));
+        par_for_contiguous(7, 7, 1, 2, |_| panic!("no work"));
+    }
+
+    #[test]
+    fn starvation_shape_paper_motivation() {
+        // §VI: with par_for over a shrinking outer loop, once
+        // outer_iters < CL some threads starve; par_nested_for keeps
+        // threads busy while outer*inner > CL. Verify that claim.
+        let cl = 8;
+        let outer = 3; // < cl
+        let inner = 5; // outer*inner = 15 > cl
+        let mut starved_par_for = 0;
+        let mut starved_nested = 0;
+        for ind in 0..cl {
+            let mut n = 0;
+            par_for(0, outer, ind, cl, |_| n += 1);
+            if n == 0 {
+                starved_par_for += 1;
+            }
+            let mut m = 0;
+            par_nested_for(0, outer, 0, inner, ind, cl, |_, _| m += 1);
+            if m == 0 {
+                starved_nested += 1;
+            }
+        }
+        assert_eq!(starved_par_for, cl - outer); // 5 threads idle
+        assert_eq!(starved_nested, 0); // everyone works
+    }
+}

@@ -1,0 +1,615 @@
+//! The six reproduction experiments (Fig 2, 3, 4, 6, 7 and Table I).
+//!
+//! All run on the virtual-time TILEPro64 substrate at the paper's
+//! machine configuration (63 usable tiles, 866 MHz). `Scale` shrinks
+//! workloads for tests and smoke runs; shape checks are calibrated to
+//! hold from `Scale(0.1)` upwards.
+
+use super::report::{spd, vsec, ExperimentReport, ShapeCheck, Table};
+use crate::tilesim::{
+    GprmAssign, GprmSim, OmpSim, OmpStrategy, Phase, Workload,
+};
+
+/// Workload scale factor: 1.0 = the paper's sizes.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    fn jobs(&self, full: usize) -> usize {
+        ((full as f64 * self.0) as usize).max(200)
+    }
+
+    /// Scale the *block count* while preserving the paper's *block
+    /// sizes* (bs = 4000/NB_full): the granularity regime — the thing
+    /// Fig 6/7/Table I study — is a per-task property, so shrinking
+    /// the matrix and the grid together keeps every per-task ratio
+    /// intact while cutting total task count by `scale^1.5`.
+    fn nb(&self, full: usize) -> usize {
+        ((full as f64 * self.0.sqrt()) as usize).clamp(12, full)
+    }
+}
+
+/// All experiment ids in paper order, plus the cost-model ablation
+/// (not a paper figure; attributes the OpenMP collapse to mechanisms).
+pub const ALL_EXPERIMENTS: &[&str] =
+    &["fig2", "fig3", "fig4", "fig6", "table1", "fig7", "ablation"];
+
+/// Dispatch by id.
+pub fn run_experiment(id: &str, scale: Scale) -> ExperimentReport {
+    match id {
+        "fig2" => fig2(scale),
+        "fig3" => fig3(scale),
+        "fig4" => fig4(scale),
+        "fig6" => fig6(scale),
+        "table1" => table1(scale),
+        "fig7" => fig7(scale),
+        "ablation" => ablation(scale),
+        other => panic!("unknown experiment {other:?} (want one of {ALL_EXPERIMENTS:?})"),
+    }
+}
+
+// --- shared helpers ----------------------------------------------------
+
+fn matmul_phase(m: usize, n: usize, cutoff: usize) -> impl Iterator<Item = Phase> {
+    std::iter::once(Workload::matmul_jobs(m, n, n, cutoff))
+}
+
+fn seq_matmul(m: usize, n: usize) -> u64 {
+    OmpSim::tilepro(1, OmpStrategy::ForStatic)
+        .run(matmul_phase(m, n, 1), 0, 0)
+        .cycles
+}
+
+fn omp_matmul(threads: usize, strat: OmpStrategy, m: usize, n: usize, cutoff: usize) -> u64 {
+    OmpSim::tilepro(threads, strat)
+        .run(matmul_phase(m, n, cutoff), 0, 0)
+        .cycles
+}
+
+fn gprm_matmul(cl: usize, m: usize, n: usize) -> u64 {
+    GprmSim::tilepro(cl).run(matmul_phase(m, n, 1), 0, 0).cycles
+}
+
+fn seq_sparselu(nb: usize, bs: usize) -> u64 {
+    OmpSim::tilepro(1, OmpStrategy::ForStatic)
+        .run(Workload::sparselu(nb, bs), nb * nb, (bs * bs * 4) as u64)
+        .cycles
+}
+
+fn omp_sparselu(threads: usize, nb: usize, bs: usize) -> u64 {
+    OmpSim::tilepro(threads, OmpStrategy::Tasks)
+        .run(Workload::sparselu(nb, bs), nb * nb, (bs * bs * 4) as u64)
+        .cycles
+}
+
+fn gprm_sparselu(cl: usize, assign: GprmAssign, nb: usize, bs: usize) -> u64 {
+    let mut sim = GprmSim::tilepro(cl);
+    sim.assign = assign;
+    sim.run(Workload::sparselu(nb, bs), nb * nb, (bs * bs * 4) as u64)
+        .cycles
+}
+
+// --- Fig 2: matmul, four approaches across job sizes --------------------
+
+fn fig2(scale: Scale) -> ExperimentReport {
+    let m = scale.jobs(6300);
+    let sizes = [50usize, 100, 200, 400];
+    let mut t = Table::new(
+        "Fig 2 — MatMul micro-benchmark, 63 threads (virtual seconds)",
+        &[
+            "job n×n", "seq", "omp-for", "omp-dyn1", "omp-task", "gprm",
+            "gprm vs best-omp",
+        ],
+    );
+    let mut best_ratios = Vec::new();
+    let mut task_ratios = Vec::new();
+    for n in sizes {
+        let seq = seq_matmul(m, n);
+        let f = omp_matmul(63, OmpStrategy::ForStatic, m, n, 1);
+        let d = omp_matmul(63, OmpStrategy::ForDynamic { chunk: 1 }, m, n, 1);
+        let k = omp_matmul(63, OmpStrategy::Tasks, m, n, 1);
+        let g = gprm_matmul(63, m, n);
+        let best_omp = f.min(d).min(k);
+        best_ratios.push(best_omp as f64 / g as f64);
+        task_ratios.push(k as f64 / g as f64);
+        t.row(vec![
+            format!("{n}x{n}"),
+            vsec(seq),
+            vsec(f),
+            vsec(d),
+            vsec(k),
+            vsec(g),
+            spd(best_omp as f64 / g as f64),
+        ]);
+    }
+    let checks = vec![
+        ShapeCheck::new(
+            "GPRM at least matches the best OpenMP variant at every size",
+            best_ratios.iter().all(|&r| r > 0.999),
+            format!("best-omp/gprm {best_ratios:.2?}"),
+        ),
+        ShapeCheck::new(
+            "tasking gap shrinks as jobs grow",
+            task_ratios.first() > task_ratios.last(),
+            format!(
+                "small {:.2} vs large {:.2}",
+                task_ratios[0], task_ratios[3]
+            ),
+        ),
+        ShapeCheck::new(
+            "small-job advantage over omp tasking is multiples (paper: 2.8x-11x)",
+            task_ratios[0] > 2.5,
+            format!("{:.2}x at 50x50", task_ratios[0]),
+        ),
+    ];
+    ExperimentReport { id: "fig2".into(), tables: vec![t], checks }
+}
+
+// --- Fig 3: fine-grained jobs, speedup --------------------------------
+
+fn fig3(scale: Scale) -> ExperimentReport {
+    let m = scale.jobs(200_000);
+    let sizes = [5usize, 10, 20, 50];
+    let mut t = Table::new(
+        &format!("Fig 3 — speedup vs sequential, {m} fine-grained jobs, 63 threads"),
+        &["job n×n", "omp-for", "omp-task", "gprm"],
+    );
+    let mut omp_task_spd = Vec::new();
+    let mut gprm_spd = Vec::new();
+    for n in sizes {
+        let seq = seq_matmul(m, n) as f64;
+        let f = seq / omp_matmul(63, OmpStrategy::ForStatic, m, n, 1) as f64;
+        let k = seq / omp_matmul(63, OmpStrategy::Tasks, m, n, 1) as f64;
+        let g = seq / gprm_matmul(63, m, n) as f64;
+        omp_task_spd.push(k);
+        gprm_spd.push(g);
+        t.row(vec![format!("{n}x{n}"), spd(f), spd(k), spd(g)]);
+    }
+    let checks = vec![
+        ShapeCheck::new(
+            "untuned omp-task degrades below sequential for tiny jobs",
+            omp_task_spd[0] < 1.0,
+            format!("{:.2}x at 5x5", omp_task_spd[0]),
+        ),
+        ShapeCheck::new(
+            "GPRM keeps speedup > 1 for every size",
+            gprm_spd.iter().all(|&s| s > 1.0),
+            format!("{gprm_spd:.2?}"),
+        ),
+        ShapeCheck::new(
+            "GPRM beats omp-task by an order of magnitude on fine grain",
+            gprm_spd[0] / omp_task_spd[0] > 10.0,
+            format!("{:.1}x", gprm_spd[0] / omp_task_spd[0]),
+        ),
+    ];
+    ExperimentReport { id: "fig3".into(), tables: vec![t], checks }
+}
+
+// --- Fig 4: the cutoff sweep -------------------------------------------
+
+fn fig4(scale: Scale) -> ExperimentReport {
+    let m = scale.jobs(200_000);
+    let cutoffs = [1usize, 2, 5, 10, 20, 50, 100, 200, 500, 1000, 2000];
+    let mut tables = Vec::new();
+    let mut checks = Vec::new();
+    for n in [50usize, 100] {
+        let seq = seq_matmul(m, n) as f64;
+        let mut t = Table::new(
+            &format!("Fig 4 — omp-task cutoff sweep, {m} jobs of {n}x{n}, 63 threads"),
+            &["cutoff", "tasks", "time (s)", "speedup vs seq"],
+        );
+        let mut best = f64::MIN;
+        let mut none = 0.0;
+        for &c in &cutoffs {
+            let cyc = omp_matmul(63, OmpStrategy::Tasks, m, n, c);
+            let s = seq / cyc as f64;
+            if c == 1 {
+                none = s;
+            }
+            best = best.max(s);
+            t.row(vec![
+                c.to_string(),
+                m.div_ceil(c).to_string(),
+                vsec(cyc),
+                spd(s),
+            ]);
+        }
+        let gprm = seq / gprm_matmul(63, m, n) as f64;
+        checks.push(ShapeCheck::new(
+            &format!("{n}x{n}: a good cutoff rescues omp-task (paper: 38.6x/10.8x)"),
+            best / none > 4.0,
+            format!("best {best:.2}x vs none {none:.2}x → {:.1}x gain", best / none),
+        ));
+        checks.push(ShapeCheck::new(
+            &format!("{n}x{n}: tuned omp-task still does not beat GPRM"),
+            gprm >= best * 0.95,
+            format!("gprm {gprm:.2}x vs tuned omp {best:.2}x"),
+        ));
+        tables.push(t);
+    }
+    ExperimentReport { id: "fig4".into(), tables, checks }
+}
+
+// --- Fig 6: SparseLU exec time vs block count ---------------------------
+
+fn fig6(scale: Scale) -> ExperimentReport {
+    let dim = 4000usize;
+    let full_nbs = [50usize, 100, 200, 400, 500];
+    // Block size preserved at the paper's values; block count scaled.
+    let cases: Vec<(usize, usize)> = full_nbs
+        .iter()
+        .map(|&nb| (scale.nb(nb), dim / nb))
+        .collect();
+    let mut t = Table::new(
+        "Fig 6 — SparseLU 4000x4000, exec time (virtual s), 63 threads/CL",
+        &["NB", "BS", "omp-task", "gprm par_nested_for", "gprm contiguous"],
+    );
+    let mut omp_times = Vec::new();
+    let mut gprm_times = Vec::new();
+    let nbs: Vec<usize> = cases.iter().map(|c| c.0).collect();
+    for &(nb, bs) in &cases {
+        let o = omp_sparselu(63, nb, bs);
+        let g = gprm_sparselu(63, GprmAssign::RoundRobin, nb, bs);
+        let c = gprm_sparselu(63, GprmAssign::Contiguous, nb, bs);
+        omp_times.push(o);
+        gprm_times.push(g.min(c));
+        t.row(vec![
+            nb.to_string(),
+            bs.to_string(),
+            vsec(o),
+            vsec(g),
+            vsec(c),
+        ]);
+    }
+    let last = nbs.len() - 1;
+    let checks = vec![
+        ShapeCheck::new(
+            "OpenMP degrades drastically as blocks shrink",
+            omp_times[last] as f64 / omp_times[0] as f64 > 2.0,
+            format!(
+                "NB={} is {:.1}x slower than NB={}",
+                nbs[last],
+                omp_times[last] as f64 / omp_times[0] as f64,
+                nbs[0]
+            ),
+        ),
+        ShapeCheck::new(
+            "GPRM handles the smallest blocks multiples faster (paper: 6.2x)",
+            omp_times[last] as f64 / gprm_times[last] as f64 > 3.0,
+            format!(
+                "{:.1}x at NB={}",
+                omp_times[last] as f64 / gprm_times[last] as f64,
+                nbs[last]
+            ),
+        ),
+        ShapeCheck::new(
+            "GPRM wins wherever blocks are small, and never loses badly",
+            omp_times
+                .iter()
+                .zip(&gprm_times)
+                .skip(2)
+                .all(|(o, g)| o > g)
+                && omp_times
+                    .iter()
+                    .zip(&gprm_times)
+                    .all(|(o, g)| (*g as f64) < *o as f64 * 1.3),
+            format!(
+                "omp/gprm {:?}",
+                omp_times
+                    .iter()
+                    .zip(&gprm_times)
+                    .map(|(o, g)| format!("{:.2}", *o as f64 / *g as f64))
+                    .collect::<Vec<_>>()
+            ),
+        ),
+    ];
+    ExperimentReport { id: "fig6".into(), tables: vec![t], checks }
+}
+
+// --- Table I: best thread count ------------------------------------------
+
+fn table1(scale: Scale) -> ExperimentReport {
+    let dim = 4000usize;
+    let full_nbs = [50usize, 100, 200, 400, 500];
+    let cases: Vec<(usize, usize)> = full_nbs
+        .iter()
+        .map(|&nb| (scale.nb(nb), dim / nb))
+        .collect();
+    let threads = [1usize, 2, 4, 8, 16, 32, 63, 64];
+    let mut t = Table::new(
+        "Table I — thread count giving the best SparseLU time",
+        &["NB", "omp best #threads", "omp best (s)", "omp @63 (s)", "gprm best CL", "gprm @63 (s)"],
+    );
+    let mut omp_best_threads = Vec::new();
+    let mut gprm_best_cl = Vec::new();
+    for &(nb, bs) in &cases {
+        let (mut bt, mut bc) = (1, u64::MAX);
+        let mut at63 = 0;
+        for &th in &threads {
+            let c = omp_sparselu(th, nb, bs);
+            if th == 63 {
+                at63 = c;
+            }
+            if c < bc {
+                bc = c;
+                bt = th;
+            }
+        }
+        let (mut gt, mut gc) = (1, u64::MAX);
+        for &cl in &threads {
+            let c = gprm_sparselu(cl, GprmAssign::RoundRobin, nb, bs);
+            if c < gc {
+                gc = c;
+                gt = cl;
+            }
+        }
+        omp_best_threads.push(bt);
+        gprm_best_cl.push(gt);
+        t.row(vec![
+            nb.to_string(),
+            bt.to_string(),
+            vsec(bc),
+            vsec(at63),
+            gt.to_string(),
+            vsec(gprm_sparselu(63, GprmAssign::RoundRobin, nb, bs)),
+        ]);
+    }
+    let checks = vec![
+        ShapeCheck::new(
+            "omp's best thread count collapses as blocks shrink (paper: 64,63,32,16,8)",
+            omp_best_threads.windows(2).all(|w| w[0] >= w[1])
+                && *omp_best_threads.last().unwrap()
+                    < *omp_best_threads.first().unwrap(),
+            format!("{omp_best_threads:?}"),
+        ),
+        ShapeCheck::new(
+            "GPRM's best CL stays at the core count (no tuning needed)",
+            gprm_best_cl.iter().all(|&c| c >= 63),
+            format!("{gprm_best_cl:?}"),
+        ),
+    ];
+    ExperimentReport { id: "table1".into(), tables: vec![t], checks }
+}
+
+// --- Fig 7: speedup vs concurrency level ---------------------------------
+
+fn fig7(scale: Scale) -> ExperimentReport {
+    let dim = 4000usize;
+    let cases = [
+        (scale.nb(50), dim / 50),
+        (scale.nb(100), dim / 100),
+    ];
+    let cls = [1usize, 2, 4, 8, 16, 32, 63, 64, 96, 126, 128];
+    let mut tables = Vec::new();
+    let mut checks = Vec::new();
+    for (nb, bs) in cases {
+        let seq = seq_sparselu(nb, bs) as f64;
+        let mut t = Table::new(
+            &format!("Fig 7 — SparseLU speedup vs concurrency level, NB={nb}, BS={bs}"),
+            &["CL/threads", "gprm rr", "gprm contiguous", "omp-task"],
+        );
+        let mut g63 = 0.0;
+        let mut g126 = 0.0;
+        let mut g128 = 0.0;
+        let mut omp_best = f64::MIN;
+        for &cl in &cls {
+            let g = seq / gprm_sparselu(cl, GprmAssign::RoundRobin, nb, bs) as f64;
+            let c = seq / gprm_sparselu(cl, GprmAssign::Contiguous, nb, bs) as f64;
+            let o = seq / omp_sparselu(cl, nb, bs) as f64;
+            omp_best = omp_best.max(o);
+            if cl == 63 {
+                g63 = g;
+            }
+            if cl == 126 {
+                g126 = g;
+            }
+            if cl == 128 {
+                g128 = g;
+            }
+            t.row(vec![cl.to_string(), spd(g), spd(c), spd(o)]);
+        }
+        checks.push(ShapeCheck::new(
+            &format!("NB={nb}: GPRM at CL=63 beats OpenMP's best (paper: ~2x)"),
+            g63 > omp_best,
+            format!("gprm {g63:.2}x vs omp best {omp_best:.2}x"),
+        ));
+        // The factor-of-core-count effect needs enough tasks per
+        // worksharing index to matter; below NB=20 the domains are too
+        // small for CL≥126 to be meaningful at all.
+        if nb >= 20 {
+            checks.push(ShapeCheck::new(
+                &format!("NB={nb}: factors of 63 are sweet spots (CL=126 ≈> CL=128)"),
+                g126 >= g128 * 0.98,
+                format!("126 → {g126:.2}x, 128 → {g128:.2}x"),
+            ));
+        }
+        tables.push(t);
+    }
+    ExperimentReport { id: "fig7".into(), tables, checks }
+}
+
+// --- Ablation: which mechanism drives the OpenMP collapse? --------------
+
+fn ablation(scale: Scale) -> ExperimentReport {
+    use crate::tilesim::CostModel;
+    // The Fig-6 NB=200 configuration (20×20 blocks), scaled.
+    let nb = scale.nb(200);
+    let bs = 20usize;
+    let blocks = nb * nb;
+    let bb = (bs * bs * 4) as u64;
+
+    let run_omp = |cost: CostModel| -> u64 {
+        let mut sim = OmpSim::tilepro(63, OmpStrategy::Tasks);
+        sim.cost = cost;
+        sim.run(Workload::sparselu(nb, bs), blocks, bb).cycles
+    };
+    let run_gprm = |cost: CostModel, assign: GprmAssign| -> u64 {
+        let mut sim = GprmSim::tilepro(63);
+        sim.cost = cost;
+        sim.assign = assign;
+        sim.run(Workload::sparselu(nb, bs), blocks, bb).cycles
+    };
+
+    let full = run_omp(CostModel::default());
+    let no_contention = run_omp(CostModel {
+        omp_lock_contention: 0.0,
+        ..CostModel::default()
+    });
+    let no_create = run_omp(CostModel {
+        omp_task_create: 0.0,
+        omp_scan_iter: 0.0,
+        ..CostModel::default()
+    });
+    let no_locks = run_omp(CostModel {
+        omp_lock_base: 0.0,
+        omp_lock_contention: 0.0,
+        ..CostModel::default()
+    });
+    let ideal = run_omp(CostModel {
+        omp_lock_base: 0.0,
+        omp_lock_contention: 0.0,
+        omp_task_create: 0.0,
+        omp_scan_iter: 0.0,
+        ..CostModel::default()
+    });
+
+    let gprm_full = run_gprm(CostModel::default(), GprmAssign::RoundRobin);
+    let gprm_free = run_gprm(
+        CostModel {
+            gprm_packet: 0.0,
+            gprm_iter_check: 0.0,
+            gprm_task_fire: 0.0,
+            ..CostModel::default()
+        },
+        GprmAssign::RoundRobin,
+    );
+    let gprm_adaptive =
+        run_gprm(CostModel::default(), GprmAssign::Adaptive);
+
+    let mut t = Table::new(
+        &format!("Ablation — SparseLU NB={nb}, BS={bs}, 63 threads/CL: mechanism attribution"),
+        &["variant", "time (s)", "vs full"],
+    );
+    for (name, c) in [
+        ("omp-task full model", full),
+        ("omp-task, lock contention off", no_contention),
+        ("omp-task, task-create+scan off", no_create),
+        ("omp-task, all lock costs off", no_locks),
+        ("omp-task, all runtime costs off", ideal),
+        ("gprm rr full model", gprm_full),
+        ("gprm rr, all gprm costs off", gprm_free),
+        ("gprm adaptive re-hosting", gprm_adaptive),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            vsec(c),
+            format!("{:.2}x", full as f64 / c as f64),
+        ]);
+    }
+    let checks = vec![
+        ShapeCheck::new(
+            "lock contention is the dominant OpenMP mechanism",
+            (full - no_contention) > (full - no_create),
+            format!(
+                "contention saves {:.3}s vs create {:.3}s",
+                (full - no_contention) as f64 / 866e6,
+                (full - no_create) as f64 / 866e6
+            ),
+        ),
+        ShapeCheck::new(
+            "zero-overhead OpenMP converges toward GPRM",
+            (ideal as f64) < gprm_full as f64 * 2.0,
+            format!(
+                "ideal omp {:.3}s vs gprm {:.3}s",
+                ideal as f64 / 866e6,
+                gprm_full as f64 / 866e6
+            ),
+        ),
+        ShapeCheck::new(
+            "GPRM's own overheads are small (model self-consistency)",
+            (gprm_full as f64) < gprm_free as f64 * 1.5,
+            format!(
+                "full {:.3}s vs free {:.3}s",
+                gprm_full as f64 / 866e6,
+                gprm_free as f64 / 866e6
+            ),
+        ),
+        ShapeCheck::new(
+            "adaptive re-hosting does not hurt at CL=63",
+            (gprm_adaptive as f64) <= gprm_full as f64 * 1.05,
+            format!(
+                "adaptive {:.3}s vs rr {:.3}s",
+                gprm_adaptive as f64 / 866e6,
+                gprm_full as f64 / 866e6
+            ),
+        ),
+    ];
+    ExperimentReport { id: "ablation".into(), tables: vec![t], checks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Scaled-down versions of every experiment must reproduce the
+    // paper's shape claims. Full scale runs via `gprm exp` / benches.
+    #[test]
+    fn fig2_shape_holds_scaled() {
+        let r = fig2(Scale(0.15));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn fig3_shape_holds_scaled() {
+        let r = fig3(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn fig4_shape_holds_scaled() {
+        let r = fig4(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn fig6_shape_holds_scaled() {
+        let r = fig6(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn table1_shape_holds_scaled() {
+        let r = table1(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn fig7_shape_holds_scaled() {
+        let r = fig7(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn ablation_shape_holds_scaled() {
+        let r = ablation(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn dispatch_and_ids() {
+        for id in ALL_EXPERIMENTS {
+            // Just ensure dispatch works on the cheapest scale for the
+            // lighter experiments; heavy ones covered above.
+            if *id == "fig2" {
+                let r = run_experiment(id, Scale(0.05));
+                assert_eq!(&r.id, id);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown experiment")]
+    fn unknown_id_panics() {
+        run_experiment("fig99", Scale(0.1));
+    }
+}

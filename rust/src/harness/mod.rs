@@ -1,0 +1,10 @@
+//! Experiment drivers: one entry point per paper figure/table, each
+//! regenerating the corresponding rows/series on the TILEPro64
+//! simulator substrate and checking the paper's qualitative *shape*
+//! claims (see DESIGN.md §5).
+
+pub mod experiments;
+pub mod report;
+
+pub use experiments::{run_experiment, Scale, ALL_EXPERIMENTS};
+pub use report::{ExperimentReport, ShapeCheck, Table};

@@ -1,0 +1,163 @@
+//! Plain-text tables and shape checks for the experiment reports.
+
+/// A printable result table (one per paper figure/table).
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  "),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A qualitative reproduction criterion (who-wins / crossover / rough
+/// factor) with its outcome.
+#[derive(Clone, Debug)]
+pub struct ShapeCheck {
+    pub what: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+impl ShapeCheck {
+    pub fn new(what: &str, pass: bool, detail: String) -> Self {
+        Self { what: what.to_string(), pass, detail }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "  [{}] {} — {}",
+            if self.pass { "PASS" } else { "FAIL" },
+            self.what,
+            self.detail
+        )
+    }
+}
+
+/// A full experiment result.
+#[derive(Clone, Debug)]
+pub struct ExperimentReport {
+    pub id: String,
+    pub tables: Vec<Table>,
+    pub checks: Vec<ShapeCheck>,
+}
+
+impl ExperimentReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for t in &self.tables {
+            s.push_str(&t.render());
+        }
+        if !self.checks.is_empty() {
+            s.push_str("\nshape checks:\n");
+            for c in &self.checks {
+                s.push_str(&c.render());
+                s.push('\n');
+            }
+        }
+        s
+    }
+
+    pub fn all_pass(&self) -> bool {
+        self.checks.iter().all(|c| c.pass)
+    }
+}
+
+/// Format a cycle count as virtual seconds on the TILEPro64.
+pub fn vsec(cycles: u64) -> String {
+    format!("{:.3}", cycles as f64 / 866e6)
+}
+
+/// Format a speedup.
+pub fn spd(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(vec!["12345".into(), "1".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("12345"));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn checks_render() {
+        let c = ShapeCheck::new("gprm wins", true, "2.5x".into());
+        assert!(c.render().contains("PASS"));
+        let r = ExperimentReport {
+            id: "fig2".into(),
+            tables: vec![],
+            checks: vec![c],
+        };
+        assert!(r.all_pass());
+        assert!(r.render().contains("gprm wins"));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(vsec(866_000_000), "1.000");
+        assert_eq!(spd(2.5), "2.50x");
+    }
+}

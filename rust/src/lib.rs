@@ -1,0 +1,31 @@
+//! # GPRM-RS
+//!
+//! Reproduction of *"A Parallel Task-based Approach to Linear Algebra"*
+//! (Tousimojarad & Vanderbauwhede, ISPDC 2014).
+//!
+//! The crate provides:
+//!
+//! * [`coordinator`] — the GPRM runtime: tiles, FIFOs, a bytecode
+//!   reduction engine with parallel argument dispatch, and the
+//!   `par_for` / `par_nested_for` worksharing constructs.
+//! * [`omp`] — an OpenMP-3.0-style tasking/worksharing baseline.
+//! * [`tilesim`] — a TILEPro64-like discrete-event many-core simulator
+//!   used as the measurement substrate (see DESIGN.md §2).
+//! * [`linalg`] — dense / blocked-sparse matrices, the BOTS SparseLU
+//!   generator, and the lu0/fwd/bdiv/bmod block kernels.
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   block kernels in `artifacts/`.
+//! * [`apps`] — the paper's two workloads (SparseLU, MatMul) on every
+//!   runtime.
+//! * [`bench`] / [`harness`] — measurement harness and the per-figure
+//!   experiment drivers.
+pub mod util;
+pub mod testkit;
+pub mod linalg;
+pub mod coordinator;
+pub mod omp;
+pub mod tilesim;
+pub mod runtime;
+pub mod apps;
+pub mod bench;
+pub mod harness;

@@ -1,0 +1,243 @@
+//! The BOTS-style blocked sparse matrix (paper §VI).
+//!
+//! The matrix is an `NB×NB` grid of blocks; each block is either
+//! unallocated (`None`, a structurally-zero `BS×BS` region) or an owned
+//! dense `BS×BS` tile. During factorisation the `bmod` phase allocates
+//! *fill-in* blocks on demand (`allocate_clean_block` in BOTS).
+
+use super::dense::DenseMatrix;
+
+/// One dense `BS×BS` tile, row-major.
+pub type Block = Box<[f32]>;
+
+/// Blocked sparse matrix: `NB×NB` grid of optional `BS×BS` blocks.
+pub struct BlockedSparseMatrix {
+    nb: usize,
+    bs: usize,
+    blocks: Vec<Option<Block>>,
+}
+
+impl BlockedSparseMatrix {
+    /// Fully-empty matrix.
+    pub fn empty(nb: usize, bs: usize) -> Self {
+        assert!(nb > 0 && bs > 0);
+        let mut blocks = Vec::with_capacity(nb * nb);
+        blocks.resize_with(nb * nb, || None);
+        Self { nb, bs, blocks }
+    }
+
+    /// Number of blocks per dimension (`NB`, "number of blocks" in the
+    /// paper; `bots_arg_size` in BOTS).
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+
+    /// Block edge length (`bots_arg_size_1` in BOTS).
+    pub fn bs(&self) -> usize {
+        self.bs
+    }
+
+    /// Full matrix dimension `nb*bs`.
+    pub fn dim(&self) -> usize {
+        self.nb * self.bs
+    }
+
+    #[inline]
+    fn idx(&self, ii: usize, jj: usize) -> usize {
+        debug_assert!(ii < self.nb && jj < self.nb);
+        ii * self.nb + jj
+    }
+
+    /// Is block `(ii, jj)` allocated?
+    pub fn is_allocated(&self, ii: usize, jj: usize) -> bool {
+        self.blocks[self.idx(ii, jj)].is_some()
+    }
+
+    /// Borrow block `(ii, jj)`.
+    pub fn block(&self, ii: usize, jj: usize) -> Option<&[f32]> {
+        self.blocks[self.idx(ii, jj)].as_deref()
+    }
+
+    /// Mutably borrow block `(ii, jj)`.
+    pub fn block_mut(&mut self, ii: usize, jj: usize) -> Option<&mut [f32]> {
+        let i = self.idx(ii, jj);
+        self.blocks[i].as_deref_mut()
+    }
+
+    /// Install a block (replacing any existing one).
+    pub fn set_block(&mut self, ii: usize, jj: usize, data: Block) {
+        assert_eq!(data.len(), self.bs * self.bs, "block shape mismatch");
+        let i = self.idx(ii, jj);
+        self.blocks[i] = Some(data);
+    }
+
+    /// BOTS `allocate_clean_block`: ensure `(ii, jj)` exists (zeroed if
+    /// fresh) and return it mutably. This is the fill-in path of `bmod`.
+    pub fn allocate_clean_block(&mut self, ii: usize, jj: usize) -> &mut [f32] {
+        let i = self.idx(ii, jj);
+        let bs = self.bs;
+        self.blocks[i]
+            .get_or_insert_with(|| vec![0.0f32; bs * bs].into_boxed_slice())
+    }
+
+    /// Take block `(ii, jj)` out of the matrix (used by runtimes that
+    /// ship blocks to PJRT and re-install results).
+    pub fn take_block(&mut self, ii: usize, jj: usize) -> Option<Block> {
+        let i = self.idx(ii, jj);
+        self.blocks[i].take()
+    }
+
+    /// Count of allocated blocks.
+    pub fn allocated_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// Structural sparsity in `[0,1]`: fraction of *unallocated* blocks.
+    /// The paper reports 85% at NB=50 and 89% at NB=100.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.allocated_blocks() as f64 / (self.nb * self.nb) as f64
+    }
+
+    /// Expand to a dense matrix (zeros where unallocated).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let n = self.dim();
+        let mut d = DenseMatrix::zeros(n, n);
+        for ii in 0..self.nb {
+            for jj in 0..self.nb {
+                if let Some(b) = self.block(ii, jj) {
+                    for r in 0..self.bs {
+                        for c in 0..self.bs {
+                            d[(ii * self.bs + r, jj * self.bs + c)] =
+                                b[r * self.bs + c];
+                        }
+                    }
+                }
+            }
+        }
+        d
+    }
+
+    /// Deep copy.
+    pub fn deep_clone(&self) -> Self {
+        Self {
+            nb: self.nb,
+            bs: self.bs,
+            blocks: self.blocks.iter().map(|b| b.clone()).collect(),
+        }
+    }
+
+    /// The allocation pattern as a boolean grid (row-major `nb*nb`).
+    pub fn pattern(&self) -> Vec<bool> {
+        self.blocks.iter().map(|b| b.is_some()).collect()
+    }
+
+    /// Unsafe split used by the parallel factorisation: returns raw
+    /// pointers to the block storage so distinct blocks can be updated
+    /// from different threads. Safety is the scheduler's obligation —
+    /// the LU dependency structure guarantees disjointness (fwd writes
+    /// row kk, bdiv writes column kk, bmod writes (ii>kk, jj>kk), and
+    /// within a phase each task touches a distinct block).
+    pub fn block_ptr(&self, ii: usize, jj: usize) -> Option<*const f32> {
+        self.blocks[self.idx(ii, jj)].as_ref().map(|b| b.as_ptr())
+    }
+}
+
+/// A shareable handle for the parallel SparseLU phases: wraps the
+/// matrix so worker threads can mutate *disjoint* blocks concurrently.
+///
+/// The LU schedule guarantees disjoint writes per phase; readers only
+/// read blocks finalised in earlier phases. This mirrors what the
+/// OpenMP/BOTS C code does with bare `float**` and is encapsulated
+/// here behind one audited unsafe boundary.
+pub struct SharedBlocked {
+    inner: std::cell::UnsafeCell<BlockedSparseMatrix>,
+}
+
+// SAFETY: see struct docs — phase structure guarantees data-race
+// freedom; each phase's tasks write disjoint blocks and synchronise
+// with a barrier (taskwait / GPRM seq) before the next phase reads.
+unsafe impl Sync for SharedBlocked {}
+unsafe impl Send for SharedBlocked {}
+
+impl SharedBlocked {
+    pub fn new(m: BlockedSparseMatrix) -> Self {
+        Self { inner: std::cell::UnsafeCell::new(m) }
+    }
+
+    /// Shared view (reads of blocks finalised in earlier phases).
+    ///
+    /// SAFETY: caller must not alias a concurrent `get_mut` write to
+    /// the same block.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self) -> &mut BlockedSparseMatrix {
+        &mut *self.inner.get()
+    }
+
+    pub fn get(&self) -> &BlockedSparseMatrix {
+        unsafe { &*self.inner.get() }
+    }
+
+    pub fn into_inner(self) -> BlockedSparseMatrix {
+        self.inner.into_inner()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_alloc() {
+        let mut m = BlockedSparseMatrix::empty(4, 3);
+        assert_eq!(m.nb(), 4);
+        assert_eq!(m.bs(), 3);
+        assert_eq!(m.dim(), 12);
+        assert_eq!(m.allocated_blocks(), 0);
+        assert!((m.sparsity() - 1.0).abs() < 1e-12);
+        assert!(!m.is_allocated(1, 2));
+        let b = m.allocate_clean_block(1, 2);
+        assert!(b.iter().all(|&x| x == 0.0));
+        b[0] = 5.0;
+        assert!(m.is_allocated(1, 2));
+        assert_eq!(m.allocated_blocks(), 1);
+        // idempotent: second call returns the same (non-zeroed) block
+        assert_eq!(m.allocate_clean_block(1, 2)[0], 5.0);
+    }
+
+    #[test]
+    fn set_take_roundtrip() {
+        let mut m = BlockedSparseMatrix::empty(2, 2);
+        m.set_block(0, 1, vec![1., 2., 3., 4.].into_boxed_slice());
+        let b = m.take_block(0, 1).unwrap();
+        assert_eq!(&*b, &[1., 2., 3., 4.]);
+        assert!(!m.is_allocated(0, 1));
+    }
+
+    #[test]
+    fn to_dense_placement() {
+        let mut m = BlockedSparseMatrix::empty(2, 2);
+        m.set_block(1, 0, vec![1., 2., 3., 4.].into_boxed_slice());
+        let d = m.to_dense();
+        assert_eq!(d[(2, 0)], 1.0);
+        assert_eq!(d[(2, 1)], 2.0);
+        assert_eq!(d[(3, 0)], 3.0);
+        assert_eq!(d[(3, 1)], 4.0);
+        assert_eq!(d[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn deep_clone_is_independent() {
+        let mut m = BlockedSparseMatrix::empty(2, 2);
+        m.allocate_clean_block(0, 0)[0] = 1.0;
+        let c = m.deep_clone();
+        m.block_mut(0, 0).unwrap()[0] = 9.0;
+        assert_eq!(c.block(0, 0).unwrap()[0], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "block shape mismatch")]
+    fn set_block_shape_checked() {
+        let mut m = BlockedSparseMatrix::empty(2, 2);
+        m.set_block(0, 0, vec![0.0; 3].into_boxed_slice());
+    }
+}

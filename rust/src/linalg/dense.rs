@@ -1,0 +1,282 @@
+//! Dense `f32` row-major matrices and the matmul micro-benchmark
+//! kernels (paper §V, Listing 3).
+
+use std::fmt;
+
+/// A dense row-major `f32` matrix.
+#[derive(Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for DenseMatrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "DenseMatrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl DenseMatrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data: data.to_vec() }
+    }
+
+    /// Deterministic pseudo-random matrix in `[-2, 2)` using the BOTS
+    /// LCG (`init_val = 3125*init_val % 65536`), so inputs match the
+    /// paper's generator family.
+    pub fn bots_random(rows: usize, cols: usize, seed: u32) -> Self {
+        let mut v = if seed == 0 { 1325 } else { seed } as u64;
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            v = (3125 * v) % 65536;
+            data.push((v as f32 - 32768.0) / 16384.0);
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `C = A · B`, naive triple loop — the exact micro-benchmark body
+    /// from paper Listing 3 (ikj order for the accumulating variant is
+    /// in [`matmul_opt`]).
+    pub fn matmul(&self, b: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, b.rows, "inner dims must agree");
+        let mut c = DenseMatrix::zeros(self.rows, b.cols);
+        matmul_rows_into(
+            self.as_slice(),
+            b.as_slice(),
+            c.as_mut_slice(),
+            0,
+            self.rows,
+            self.cols,
+            b.cols,
+        );
+        c
+    }
+
+    /// Cache-friendlier ikj-order matmul used by the optimized hot
+    /// path; same result as [`Self::matmul`] up to f32 rounding.
+    pub fn matmul_opt(&self, b: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, b.rows);
+        let mut c = DenseMatrix::zeros(self.rows, b.cols);
+        matmul_rows_into_ikj(
+            self.as_slice(),
+            b.as_slice(),
+            c.as_mut_slice(),
+            0,
+            self.rows,
+            self.cols,
+            b.cols,
+        );
+        c
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Largest absolute elementwise difference against `other`.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DenseMatrix {
+    type Output = f32;
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DenseMatrix {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Row-range matmul: computes rows `[row_start, row_end)` of
+/// `C += A·B` with the paper's naive ijk loop. This is the *job* unit
+/// of the micro-benchmark: parallelising the `i` loop makes `m` jobs of
+/// size `p·n` each (paper §V).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_rows_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    row_start: usize,
+    row_end: usize,
+    n: usize,
+    p: usize,
+) {
+    for i in row_start..row_end {
+        for j in 0..p {
+            let mut acc = c[i * p + j];
+            for k in 0..n {
+                acc += a[i * n + k] * b[k * p + j];
+            }
+            c[i * p + j] = acc;
+        }
+    }
+}
+
+/// ikj-order row-range matmul — the optimized variant (streams `B`
+/// rows instead of striding columns).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_rows_into_ikj(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    row_start: usize,
+    row_end: usize,
+    n: usize,
+    p: usize,
+) {
+    for i in row_start..row_end {
+        let crow = &mut c[i * p..(i + 1) * p];
+        for k in 0..n {
+            let aik = a[i * n + k];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[k * p..(k + 1) * p];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// Flop count of one micro-benchmark *job* (one row of `C`, paper §V):
+/// `p` dot products of length `n` → `2·n·p` flops.
+pub fn matmul_job_flops(n: usize, p: usize) -> u64 {
+    2 * (n as u64) * (p as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_eye_indexing() {
+        let z = DenseMatrix::zeros(3, 4);
+        assert_eq!(z.rows(), 3);
+        assert_eq!(z.cols(), 4);
+        assert!(z.as_slice().iter().all(|&x| x == 0.0));
+        let e = DenseMatrix::eye(3);
+        assert_eq!(e[(1, 1)], 1.0);
+        assert_eq!(e[(1, 2)], 0.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = DenseMatrix::bots_random(5, 5, 7);
+        let i = DenseMatrix::eye(5);
+        let ai = a.matmul(&i);
+        assert_eq!(a, ai);
+        let ia = i.matmul(&a);
+        assert_eq!(a, ia);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // Same check the reference load_hlo uses: [[1,2],[3,4]]·ones + 0.
+        let a = DenseMatrix::from_slice(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = DenseMatrix::from_slice(2, 2, &[1.0; 4]);
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        // (2x3)·(3x4) against hand-computed values.
+        let a = DenseMatrix::from_slice(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = DenseMatrix::from_slice(
+            3,
+            4,
+            &[1., 0., 0., 1., 0., 1., 0., 2., 0., 0., 1., 3.],
+        );
+        let c = a.matmul(&b);
+        assert_eq!(c.as_slice(), &[1., 2., 3., 14., 4., 5., 6., 32.]);
+    }
+
+    #[test]
+    fn opt_matches_naive() {
+        let a = DenseMatrix::bots_random(17, 23, 1);
+        let b = DenseMatrix::bots_random(23, 11, 2);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_opt(&b);
+        assert!(c1.max_abs_diff(&c2) < 1e-4, "ikj must match ijk");
+    }
+
+    #[test]
+    fn bots_random_range_and_determinism() {
+        let a = DenseMatrix::bots_random(8, 8, 0);
+        let b = DenseMatrix::bots_random(8, 8, 0);
+        assert_eq!(a, b);
+        assert!(a.as_slice().iter().all(|&x| (-2.0..2.0).contains(&x)));
+        // BOTS LCG starting at 1325: first value (3125*1325)%65536=11857
+        // → (11857-32768)/16384.
+        assert!((a.as_slice()[0] - (11857.0 - 32768.0) / 16384.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_range_partial() {
+        let a = DenseMatrix::bots_random(6, 4, 3);
+        let b = DenseMatrix::bots_random(4, 5, 4);
+        let full = a.matmul(&b);
+        let mut c = DenseMatrix::zeros(6, 5);
+        matmul_rows_into(a.as_slice(), b.as_slice(), c.as_mut_slice(), 0, 3, 4, 5);
+        matmul_rows_into(a.as_slice(), b.as_slice(), c.as_mut_slice(), 3, 6, 4, 5);
+        assert!(full.max_abs_diff(&c) < 1e-5);
+    }
+
+    #[test]
+    fn fro_norm_and_flops() {
+        let a = DenseMatrix::from_slice(1, 2, &[3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(matmul_job_flops(10, 20), 400);
+    }
+}

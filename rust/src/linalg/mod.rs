@@ -1,0 +1,25 @@
+//! Linear-algebra substrate for the SparseLU / MatMul workloads.
+//!
+//! Everything the paper's evaluation needs, built from scratch:
+//!
+//! * [`dense`] — a small dense `f32` matrix type with naive and
+//!   cache-blocked matmul (the micro-benchmark of paper §V).
+//! * [`blocked`] — the BOTS-style blocked sparse matrix: an `NB×NB`
+//!   grid of optionally-allocated `BS×BS` blocks (paper §VI).
+//! * [`genmat`] — a faithful port of the BOTS `sparselu` input
+//!   generator (same structural sparsity: ~85% at NB=50, ~89% at
+//!   NB=100).
+//! * [`lu`] — the four block kernels `lu0`, `fwd`, `bdiv`, `bmod`
+//!   exactly as in BOTS, plus sequential blocked-sparse and dense LU
+//!   reference drivers.
+//! * [`verify`] — ‖L·U − A‖ reconstruction checks used by tests and
+//!   the end-to-end example.
+
+pub mod dense;
+pub mod blocked;
+pub mod genmat;
+pub mod lu;
+pub mod verify;
+
+pub use blocked::BlockedSparseMatrix;
+pub use dense::DenseMatrix;

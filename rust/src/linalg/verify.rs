@@ -1,0 +1,133 @@
+//! Factorisation verification: reconstruct `L·U` from a packed LU and
+//! measure the relative residual against the original matrix.
+//!
+//! BOTS itself only cross-checks parallel-vs-sequential results; we
+//! additionally verify against the *mathematical* definition so that a
+//! scheduling bug that reorders dependent kernels cannot silently pass.
+
+use super::blocked::BlockedSparseMatrix;
+use super::dense::DenseMatrix;
+
+/// Split a packed LU (as produced by `lu0`/`dense_lu`) into unit-lower
+/// `L` and upper `U`.
+pub fn split_lu(packed: &DenseMatrix) -> (DenseMatrix, DenseMatrix) {
+    let n = packed.rows();
+    assert_eq!(n, packed.cols());
+    let mut l = DenseMatrix::eye(n);
+    let mut u = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            if j < i {
+                l[(i, j)] = packed[(i, j)];
+            } else {
+                u[(i, j)] = packed[(i, j)];
+            }
+        }
+    }
+    (l, u)
+}
+
+/// Relative residual ‖L·U − A‖_F / ‖A‖_F for a packed dense LU.
+pub fn lu_residual_dense(a: &DenseMatrix, packed: &DenseMatrix) -> f64 {
+    let (l, u) = split_lu(packed);
+    let lu = l.matmul_opt(&u);
+    let n = a.rows();
+    let mut num = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let d = (lu[(i, j)] - a[(i, j)]) as f64;
+            num += d * d;
+        }
+    }
+    num.sqrt() / a.fro_norm().max(1e-30)
+}
+
+/// Relative residual for a packed *blocked sparse* LU against the
+/// dense expansion of the original matrix.
+pub fn lu_residual_sparse(orig_dense: &DenseMatrix, packed: &BlockedSparseMatrix) -> f64 {
+    lu_residual_dense(orig_dense, &packed.to_dense())
+}
+
+/// Assert two blocked matrices have identical structure and
+/// elementwise-close values; returns max abs diff.
+pub fn assert_blocked_close(
+    a: &BlockedSparseMatrix,
+    b: &BlockedSparseMatrix,
+    tol: f32,
+) -> f32 {
+    assert_eq!(a.nb(), b.nb());
+    assert_eq!(a.bs(), b.bs());
+    assert_eq!(a.pattern(), b.pattern(), "allocation patterns differ");
+    let mut worst = 0.0f32;
+    for ii in 0..a.nb() {
+        for jj in 0..a.nb() {
+            if let (Some(x), Some(y)) = (a.block(ii, jj), b.block(ii, jj)) {
+                for (u, v) in x.iter().zip(y) {
+                    let d = (u - v).abs();
+                    if d > worst {
+                        worst = d;
+                    }
+                    assert!(
+                        d <= tol,
+                        "block ({ii},{jj}) differs by {d} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::genmat::genmat;
+    use crate::linalg::lu::{dense_lu, sparselu_seq};
+
+    #[test]
+    fn split_roundtrip() {
+        let packed =
+            DenseMatrix::from_slice(2, 2, &[4.0, 2.0, 0.5, 2.0]);
+        let (l, u) = split_lu(&packed);
+        assert_eq!(l.as_slice(), &[1.0, 0.0, 0.5, 1.0]);
+        assert_eq!(u.as_slice(), &[4.0, 2.0, 0.0, 2.0]);
+        let lu = l.matmul(&u);
+        assert_eq!(lu.as_slice(), &[4.0, 2.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn residual_zero_for_exact() {
+        let a = DenseMatrix::from_slice(2, 2, &[4.0, 2.0, 2.0, 3.0]);
+        let mut p = a.clone();
+        dense_lu(&mut p);
+        assert!(lu_residual_dense(&a, &p) < 1e-7);
+    }
+
+    #[test]
+    fn residual_detects_corruption() {
+        let a = DenseMatrix::from_slice(2, 2, &[4.0, 2.0, 2.0, 3.0]);
+        let mut p = a.clone();
+        dense_lu(&mut p);
+        p[(0, 0)] += 1.0;
+        assert!(lu_residual_dense(&a, &p) > 0.05);
+    }
+
+    #[test]
+    fn blocked_close_detects_structure_diff() {
+        let a = genmat(4, 2);
+        let mut b = genmat(4, 2);
+        sparselu_seq(&mut b);
+        // b has fill-in now → patterns differ → should panic.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            assert_blocked_close(&a, &b, 1.0)
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn blocked_close_passes_for_clones() {
+        let a = genmat(4, 3);
+        let b = a.deep_clone();
+        assert_eq!(assert_blocked_close(&a, &b, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,302 @@
+//! `gprm` — the launcher binary.
+//!
+//! Subcommands:
+//!
+//! * `exp [ids…] [--scale f]` — regenerate the paper's figures/tables
+//!   on the TILEPro64 simulator substrate (fig2 fig3 fig4 fig6 table1
+//!   fig7; default: all, at `--scale 1.0` = paper scale).
+//! * `sparselu` — factorise a BOTS-generated sparse matrix on a real
+//!   runtime (host threads), optionally through the PJRT artifacts.
+//! * `matmul` — the §V micro-benchmark on a real runtime.
+//! * `artifacts` — inspect the AOT artifact manifest / PJRT platform.
+
+use gprm::apps::matmul::{MatmulApproach, MatmulExec};
+use gprm::apps::sparselu::{sparselu_gprm, sparselu_omp, LuBackend, LuRunConfig};
+use gprm::coordinator::kernel::Registry;
+use gprm::coordinator::{GprmConfig, GprmRuntime};
+use gprm::harness::{run_experiment, Scale, ALL_EXPERIMENTS};
+use gprm::linalg::genmat::genmat;
+use gprm::linalg::lu::sparselu_seq;
+use gprm::linalg::verify::lu_residual_sparse;
+use gprm::omp::OmpRuntime;
+use gprm::runtime::{default_artifact_dir, EngineService, Manifest};
+use gprm::util::cli::{usage, Args, OptSpec};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(String::as_str) {
+        Some("exp") => cmd_exp(&argv[1..]),
+        Some("sparselu") => cmd_sparselu(&argv[1..]),
+        Some("matmul") => cmd_matmul(&argv[1..]),
+        Some("artifacts") => cmd_artifacts(&argv[1..]),
+        Some("help") | Some("--help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "gprm — reproduction of 'A Parallel Task-based Approach to Linear \
+         Algebra' (ISPDC 2014)\n\n\
+         USAGE:\n  gprm <exp|sparselu|matmul|artifacts> [options]\n\n\
+         Run `gprm <subcommand> --help` for details."
+    );
+}
+
+fn parse(argv: &[String], flags: &[&str]) -> Result<Args, String> {
+    Args::parse(argv.iter().cloned(), flags)
+}
+
+fn cmd_exp(argv: &[String]) -> i32 {
+    let specs = [OptSpec {
+        name: "scale",
+        help: "workload scale, 1.0 = paper scale",
+        default: Some("1.0"),
+        is_flag: false,
+    }];
+    let args = match parse(argv, &["help"]) {
+        Ok(a) => a,
+        Err(e) => return err_usage("gprm exp", &e, &specs),
+    };
+    if args.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "gprm exp [ids…]",
+                "Regenerate paper figures/tables (simulator)",
+                &specs
+            )
+        );
+        return 0;
+    }
+    let scale = Scale(args.get_parse::<f64>("scale", 1.0).unwrap_or(1.0));
+    let ids: Vec<String> = if args.positional().is_empty() {
+        ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        args.positional().to_vec()
+    };
+    let mut all_ok = true;
+    for id in &ids {
+        let t0 = std::time::Instant::now();
+        let report = run_experiment(id, scale);
+        println!("{}", report.render());
+        println!("  ({} finished in {:.1?})\n", id, t0.elapsed());
+        all_ok &= report.all_pass();
+    }
+    if all_ok {
+        println!("all shape checks PASS");
+        0
+    } else {
+        println!("some shape checks FAILED");
+        1
+    }
+}
+
+fn cmd_sparselu(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec { name: "nb", help: "blocks per dimension", default: Some("25"), is_flag: false },
+        OptSpec { name: "bs", help: "block size", default: Some("16"), is_flag: false },
+        OptSpec { name: "runtime", help: "gprm | omp | seq", default: Some("gprm"), is_flag: false },
+        OptSpec { name: "threads", help: "threads / concurrency level", default: Some("8"), is_flag: false },
+        OptSpec { name: "contiguous", help: "contiguous worksharing (gprm)", default: None, is_flag: true },
+        OptSpec { name: "pjrt", help: "execute block kernels via PJRT artifacts", default: None, is_flag: true },
+        OptSpec { name: "pin", help: "pin gprm tiles to cores", default: None, is_flag: true },
+    ];
+    let args = match parse(argv, &["contiguous", "pjrt", "pin", "help"]) {
+        Ok(a) => a,
+        Err(e) => return err_usage("gprm sparselu", &e, &specs),
+    };
+    if args.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "gprm sparselu",
+                "SparseLU on a real runtime (host threads)",
+                &specs
+            )
+        );
+        return 0;
+    }
+    let nb = args.get_parse("nb", 25usize).unwrap();
+    let bs = args.get_parse("bs", 16usize).unwrap();
+    let runtime = args.get("runtime").unwrap_or("gprm").to_string();
+    let threads = args.get_parse("threads", 8usize).unwrap();
+    let engine = if args.has_flag("pjrt") {
+        match EngineService::start(default_artifact_dir()) {
+            Ok(svc) => {
+                let n = svc.precompile(Some(bs)).unwrap_or(0);
+                println!(
+                    "pjrt platform: {} ({n} executables precompiled)",
+                    svc.platform()
+                );
+                Some(svc)
+            }
+            Err(e) => {
+                eprintln!("cannot start PJRT engine: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        None
+    };
+    let cfg = LuRunConfig {
+        backend: match &engine {
+            Some(svc) => LuBackend::Pjrt(svc),
+            None => LuBackend::Rust,
+        },
+        contiguous: args.has_flag("contiguous"),
+    };
+    println!(
+        "sparselu: {nb}x{nb} blocks of {bs}x{bs} ({} matrix), runtime={runtime}, threads={threads}",
+        nb * bs
+    );
+    let mut a = genmat(nb, bs);
+    let orig = a.to_dense();
+    println!(
+        "matrix: {} / {} blocks allocated ({:.1}% sparse)",
+        a.allocated_blocks(),
+        nb * nb,
+        a.sparsity() * 100.0
+    );
+    let t0 = std::time::Instant::now();
+    match runtime.as_str() {
+        "seq" => sparselu_seq(&mut a),
+        "omp" => {
+            let rt = OmpRuntime::new(threads);
+            sparselu_omp(&rt, &mut a, &cfg);
+            rt.shutdown();
+        }
+        "gprm" => {
+            let rt = GprmRuntime::new(
+                GprmConfig { n_tiles: threads, pin: args.has_flag("pin") },
+                Registry::new(),
+            );
+            sparselu_gprm(&rt, &mut a, &cfg);
+            rt.shutdown();
+        }
+        other => {
+            eprintln!("unknown runtime {other:?}");
+            return 2;
+        }
+    }
+    let dt = t0.elapsed();
+    let res = lu_residual_sparse(&orig, &a);
+    println!(
+        "factorised in {dt:.2?}; fill-in to {} blocks; residual ‖A−LU‖/‖A‖ = {res:.2e}",
+        a.allocated_blocks()
+    );
+    if res < 1e-3 {
+        println!("verification PASS");
+        0
+    } else {
+        println!("verification FAIL");
+        1
+    }
+}
+
+fn cmd_matmul(argv: &[String]) -> i32 {
+    let specs = [
+        OptSpec { name: "m", help: "number of jobs (rows of A)", default: Some("512"), is_flag: false },
+        OptSpec { name: "n", help: "job size (n = p)", default: Some("64"), is_flag: false },
+        OptSpec { name: "approach", help: "seq | omp-for | omp-dyn | omp-task | gprm", default: Some("gprm"), is_flag: false },
+        OptSpec { name: "threads", help: "threads / concurrency level", default: Some("8"), is_flag: false },
+        OptSpec { name: "cutoff", help: "omp-task cutoff", default: Some("1"), is_flag: false },
+    ];
+    let args = match parse(argv, &["help"]) {
+        Ok(a) => a,
+        Err(e) => return err_usage("gprm matmul", &e, &specs),
+    };
+    if args.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "gprm matmul",
+                "MatMul micro-benchmark on a real runtime",
+                &specs
+            )
+        );
+        return 0;
+    }
+    let m = args.get_parse("m", 512usize).unwrap();
+    let n = args.get_parse("n", 64usize).unwrap();
+    let threads = args.get_parse("threads", 8usize).unwrap();
+    let cutoff = args.get_parse("cutoff", 1usize).unwrap();
+    let approach = match args.get("approach").unwrap_or("gprm") {
+        "seq" => MatmulApproach::Sequential,
+        "omp-for" => MatmulApproach::OmpForStatic,
+        "omp-dyn" => MatmulApproach::OmpForDynamic,
+        "omp-task" => MatmulApproach::OmpTask { cutoff },
+        "gprm" => MatmulApproach::GprmParFor,
+        other => {
+            eprintln!("unknown approach {other:?}");
+            return 2;
+        }
+    };
+    let gprm = GprmRuntime::new(
+        GprmConfig { n_tiles: threads, pin: false },
+        Registry::new(),
+    );
+    let omp = OmpRuntime::new(threads);
+    let exec = MatmulExec { gprm: Some(&gprm), omp: Some(&omp) };
+    let (dt, err) = gprm::apps::matmul::run_matmul(approach, m, n, &exec);
+    let flops = 2.0 * m as f64 * n as f64 * n as f64;
+    println!(
+        "{approach}: {m} jobs of {n}x{n} in {dt:.2?} ({:.2} Mflop/s), max-err {err}",
+        flops / dt.as_secs_f64() / 1e6
+    );
+    gprm.shutdown();
+    omp.shutdown();
+    i32::from(err != 0.0)
+}
+
+fn cmd_artifacts(argv: &[String]) -> i32 {
+    let args = match parse(argv, &["help", "probe"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let dir = args
+        .get("dir")
+        .map(Into::into)
+        .unwrap_or_else(default_artifact_dir);
+    match Manifest::load(&dir) {
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+        Ok(m) => {
+            println!("{} artifacts in {:?}:", m.ops.len(), dir);
+            for op in &m.ops {
+                println!(
+                    "  {:<16} op={:<7} bs={:<4} arity={} outputs={}",
+                    op.name, op.op, op.bs, op.arity, op.outputs
+                );
+            }
+            if args.has_flag("probe") {
+                match EngineService::start(&dir) {
+                    Ok(svc) => println!("pjrt platform: {}", svc.platform()),
+                    Err(e) => {
+                        eprintln!("pjrt probe failed: {e:#}");
+                        return 1;
+                    }
+                }
+            }
+            0
+        }
+    }
+}
+
+fn err_usage(prog: &str, e: &str, specs: &[OptSpec]) -> i32 {
+    eprintln!("{e}\n{}", usage(prog, "", specs));
+    2
+}

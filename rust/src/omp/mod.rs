@@ -1,0 +1,23 @@
+//! An OpenMP-3.0-style tasking/worksharing runtime — the paper's
+//! baseline (§V–VI).
+//!
+//! Modeled on the runtime the paper compared against (GCC 4.4.3
+//! libgomp on the TILEPro64): a persistent thread team, a **central
+//! task queue protected by one mutex**, breadth-first task execution
+//! with scheduling points at `task`/`taskwait`/barriers, and
+//! `omp for` worksharing with *static* and *dynamic(chunk)* schedules.
+//!
+//! The centralised queue is deliberate fidelity, not laziness: the
+//! paper's measured phenomena — task-creation overhead on a single
+//! producer and queue contention growing with thread count and task
+//! granularity — are properties of exactly this design.
+//!
+//! * [`runtime`] — [`runtime::OmpRuntime`] (the team), parallel
+//!   regions, `single`, `task`, `taskwait`, barriers.
+//! * [`parallel_for`] — static / dynamic / guided loop schedules.
+
+pub mod parallel_for;
+pub mod runtime;
+
+pub use parallel_for::{static_range, DynamicSched, GuidedSched, Schedule};
+pub use runtime::{OmpRuntime, RegionStats, TeamCtx};

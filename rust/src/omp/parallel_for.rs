@@ -1,0 +1,227 @@
+//! `omp for` loop schedules (paper §V compares *static* — the default
+//! — and *dynamic with chunk_size 1* against GPRM's `par_for`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Loop schedule selector, mirroring `schedule(...)` clauses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// `schedule(static)` — one contiguous chunk per thread.
+    Static,
+    /// `schedule(static, chunk)` — chunks dealt round-robin.
+    StaticChunk(usize),
+    /// `schedule(dynamic, chunk)` — first-come first-served chunks.
+    Dynamic(usize),
+    /// `schedule(guided, min_chunk)` — exponentially shrinking chunks.
+    Guided(usize),
+}
+
+/// The contiguous iteration range thread `tid` owns under
+/// `schedule(static)`: same partitioning rule as GPRM's *contiguous*
+/// method (`m/n` each, remainder to the foremost threads), which is
+/// what libgomp does.
+pub fn static_range(
+    start: usize,
+    end: usize,
+    tid: usize,
+    nthreads: usize,
+) -> (usize, usize) {
+    assert!(nthreads > 0 && tid < nthreads);
+    let m = end.saturating_sub(start);
+    let base = m / nthreads;
+    let rem = m % nthreads;
+    let lo = start + tid * base + tid.min(rem);
+    let len = base + usize::from(tid < rem);
+    (lo, lo + len)
+}
+
+/// Iterate the chunks thread `tid` owns under `schedule(static,
+/// chunk)`: chunk `c` belongs to thread `c % nthreads`.
+pub fn static_chunked(
+    start: usize,
+    end: usize,
+    tid: usize,
+    nthreads: usize,
+    chunk: usize,
+) -> impl Iterator<Item = (usize, usize)> {
+    assert!(nthreads > 0 && tid < nthreads && chunk > 0);
+    let first = start + tid * chunk;
+    (0..)
+        .map(move |round| first + round * nthreads * chunk)
+        .take_while(move |&lo| lo < end)
+        .map(move |lo| (lo, (lo + chunk).min(end)))
+}
+
+/// `schedule(dynamic, chunk)`: a shared atomic cursor; every
+/// `next_chunk` claims the next `chunk` iterations. One instance is
+/// shared by the whole team for one loop.
+pub struct DynamicSched {
+    next: AtomicUsize,
+    end: usize,
+    chunk: usize,
+}
+
+impl DynamicSched {
+    pub fn new(start: usize, end: usize, chunk: usize) -> Self {
+        assert!(chunk > 0);
+        Self { next: AtomicUsize::new(start), end, chunk }
+    }
+
+    /// Claim the next chunk, or `None` when the loop is exhausted.
+    pub fn next_chunk(&self) -> Option<(usize, usize)> {
+        let lo = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+        if lo >= self.end {
+            None
+        } else {
+            Some((lo, (lo + self.chunk).min(self.end)))
+        }
+    }
+
+    /// Drain the schedule from one thread: `work(i)` per iteration.
+    pub fn drain(&self, mut work: impl FnMut(usize)) {
+        while let Some((lo, hi)) = self.next_chunk() {
+            for i in lo..hi {
+                work(i);
+            }
+        }
+    }
+}
+
+/// `schedule(guided, min_chunk)`: chunk = remaining / nthreads,
+/// floored at `min_chunk`.
+pub struct GuidedSched {
+    next: AtomicUsize,
+    end: usize,
+    nthreads: usize,
+    min_chunk: usize,
+}
+
+impl GuidedSched {
+    pub fn new(start: usize, end: usize, nthreads: usize, min_chunk: usize) -> Self {
+        assert!(nthreads > 0 && min_chunk > 0);
+        Self { next: AtomicUsize::new(start), end, nthreads, min_chunk }
+    }
+
+    pub fn next_chunk(&self) -> Option<(usize, usize)> {
+        loop {
+            let lo = self.next.load(Ordering::Relaxed);
+            if lo >= self.end {
+                return None;
+            }
+            let remaining = self.end - lo;
+            let size = (remaining / self.nthreads).max(self.min_chunk).min(remaining);
+            if self
+                .next
+                .compare_exchange_weak(
+                    lo,
+                    lo + size,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                )
+                .is_ok()
+            {
+                return Some((lo, lo + size));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn static_range_partitions() {
+        // 10 iters over 4 threads → 3,3,2,2 contiguous.
+        let parts: Vec<(usize, usize)> =
+            (0..4).map(|t| static_range(0, 10, t, 4)).collect();
+        assert_eq!(parts, vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        // Full disjoint cover for assorted shapes.
+        for &(s, e, n) in &[(0, 100, 7), (5, 6, 3), (0, 0, 4), (2, 65, 63)] {
+            let mut seen = BTreeSet::new();
+            for t in 0..n {
+                let (lo, hi) = static_range(s, e, t, n);
+                for i in lo..hi {
+                    assert!(seen.insert(i));
+                }
+            }
+            assert_eq!(seen.len(), e - s);
+        }
+    }
+
+    #[test]
+    fn static_chunked_round_robin() {
+        // chunk=2, 3 threads, 14 iters: t0 gets [0,2) [6,8) [12,14).
+        let t0: Vec<_> = static_chunked(0, 14, 0, 3, 2).collect();
+        assert_eq!(t0, vec![(0, 2), (6, 8), (12, 14)]);
+        let mut seen = BTreeSet::new();
+        for t in 0..3 {
+            for (lo, hi) in static_chunked(0, 14, t, 3, 2) {
+                for i in lo..hi {
+                    assert!(seen.insert(i));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 14);
+    }
+
+    #[test]
+    fn dynamic_covers_exactly_once() {
+        let s = DynamicSched::new(3, 40, 4);
+        let mut seen = BTreeSet::new();
+        while let Some((lo, hi)) = s.next_chunk() {
+            for i in lo..hi {
+                assert!(seen.insert(i));
+            }
+        }
+        assert_eq!(seen, (3..40).collect());
+        assert_eq!(s.next_chunk(), None);
+    }
+
+    #[test]
+    fn dynamic_concurrent_cover() {
+        let s = std::sync::Arc::new(DynamicSched::new(0, 1000, 1));
+        let claimed = std::sync::Arc::new(
+            (0..1000).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>(),
+        );
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = s.clone();
+            let c = claimed.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some((lo, hi)) = s.next_chunk() {
+                    for i in lo..hi {
+                        c[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for (i, c) in claimed.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "iter {i}");
+        }
+    }
+
+    #[test]
+    fn guided_shrinks_and_covers() {
+        let s = GuidedSched::new(0, 100, 4, 2);
+        let mut chunks = Vec::new();
+        let mut seen = BTreeSet::new();
+        while let Some((lo, hi)) = s.next_chunk() {
+            chunks.push(hi - lo);
+            for i in lo..hi {
+                assert!(seen.insert(i));
+            }
+        }
+        assert_eq!(seen.len(), 100);
+        assert_eq!(chunks[0], 25); // 100/4
+        // Non-increasing until the floor.
+        for w in chunks.windows(2) {
+            assert!(w[0] >= w[1] || w[1] == 2);
+        }
+        assert!(*chunks.last().unwrap() >= 1);
+    }
+}

@@ -1,0 +1,660 @@
+//! The OpenMP-style team runtime: persistent thread team, parallel
+//! regions, `single`, `task` / `taskwait`, and barriers — all built
+//! around a **central mutex-protected task queue** (the libgomp
+//! design the paper benchmarked against).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type RegionFn = Box<dyn Fn(&TeamCtx) + Send + Sync>;
+type TaskFn = Box<dyn FnOnce(&TeamCtx) + Send>;
+
+/// Tasks spawned by one generating task (children awaited by
+/// `taskwait`).
+pub struct TaskGroup {
+    remaining: AtomicUsize,
+}
+
+struct TaskItem {
+    f: TaskFn,
+    group: Arc<TaskGroup>,
+}
+
+/// Counters for one parallel region.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegionStats {
+    /// Tasks pushed to the central queue.
+    pub tasks_spawned: u64,
+    /// Tasks executed (== spawned when the region exits cleanly).
+    pub tasks_executed: u64,
+    /// Largest queue length observed at spawn time — the paper's
+    /// "single thread explores the whole matrix and creates relatively
+    /// small tasks" shows up here.
+    pub peak_queue: u64,
+}
+
+struct JobState {
+    queue: VecDeque<TaskItem>,
+    running_tasks: usize,
+    arrived: usize,
+    complete: bool,
+    barrier_gen: u64,
+    barrier_count: usize,
+}
+
+struct Job {
+    f: RegionFn,
+    n_threads: usize,
+    st: Mutex<JobState>,
+    cv: Condvar,
+    single_claim: AtomicUsize,
+    tasks_spawned: AtomicU64,
+    tasks_executed: AtomicU64,
+    peak_queue: AtomicU64,
+    panicked: Mutex<Option<String>>,
+}
+
+struct Ctrl {
+    generation: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    ctrl_cv: Condvar,
+}
+
+/// A persistent OpenMP-like thread team.
+pub struct OmpRuntime {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    n_threads: usize,
+}
+
+/// Per-thread view of a running parallel region (the `omp_get_*`
+/// surface plus task constructs).
+pub struct TeamCtx<'j> {
+    tid: usize,
+    job: &'j Arc<Job>,
+    /// Children of the currently-executing task are registered here.
+    group: std::cell::RefCell<Arc<TaskGroup>>,
+    /// Singles encountered so far by this thread (claim index).
+    single_seen: std::cell::Cell<usize>,
+}
+
+impl OmpRuntime {
+    /// Spawn a team of `n_threads` workers (pinned never — the paper's
+    /// OpenMP baseline runs unpinned by default; see §VII-A).
+    pub fn new(n_threads: usize) -> Self {
+        assert!(n_threads > 0);
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl { generation: 0, job: None, shutdown: false }),
+            ctrl_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(n_threads);
+        for tid in 0..n_threads {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("omp-worker-{tid}"))
+                    .spawn(move || worker_loop(tid, sh))
+                    .expect("spawn omp worker"),
+            );
+        }
+        Self { shared, handles, n_threads }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Run a parallel region: `f` executes on every team thread;
+    /// returns when all threads and all tasks have finished (the
+    /// implicit barrier at the end of an OpenMP parallel region).
+    ///
+    /// A panic in `f` or in any task is caught and returned as `Err`.
+    pub fn parallel<'env, F>(&self, f: F) -> Result<RegionStats, String>
+    where
+        F: Fn(&TeamCtx) + Sync + 'env,
+    {
+        // SAFETY (lifetime erasure): this function blocks until the
+        // region is complete — every worker has finished `f` and the
+        // task queue is fully drained — so no code can touch `f` or
+        // anything it borrows after we return.
+        let boxed: Box<dyn Fn(&TeamCtx) + Sync + 'env> = Box::new(f);
+        let boxed: RegionFn = unsafe {
+            std::mem::transmute::<
+                Box<dyn Fn(&TeamCtx) + Sync + 'env>,
+                Box<dyn Fn(&TeamCtx) + Send + Sync + 'static>,
+            >(boxed)
+        };
+        let job = Arc::new(Job {
+            f: boxed,
+            n_threads: self.n_threads,
+            st: Mutex::new(JobState {
+                queue: VecDeque::new(),
+                running_tasks: 0,
+                arrived: 0,
+                complete: false,
+                barrier_gen: 0,
+                barrier_count: 0,
+            }),
+            cv: Condvar::new(),
+            single_claim: AtomicUsize::new(0),
+            tasks_spawned: AtomicU64::new(0),
+            tasks_executed: AtomicU64::new(0),
+            peak_queue: AtomicU64::new(0),
+            panicked: Mutex::new(None),
+        });
+        {
+            let mut c = self.shared.ctrl.lock().unwrap();
+            c.generation += 1;
+            c.job = Some(job.clone());
+            self.shared.ctrl_cv.notify_all();
+        }
+        // Wait for completion.
+        {
+            let mut st = job.st.lock().unwrap();
+            while !st.complete {
+                st = job.cv.wait(st).unwrap();
+            }
+        }
+        let panicked = job.panicked.lock().unwrap().take();
+        match panicked {
+            Some(msg) => Err(msg),
+            None => Ok(RegionStats {
+                tasks_spawned: job.tasks_spawned.load(Ordering::Relaxed),
+                tasks_executed: job.tasks_executed.load(Ordering::Relaxed),
+                peak_queue: job.peak_queue.load(Ordering::Relaxed),
+            }),
+        }
+    }
+
+    /// Stop and join all workers.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        {
+            let mut c = self.shared.ctrl.lock().unwrap();
+            c.shutdown = true;
+            self.shared.ctrl_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for OmpRuntime {
+    fn drop(&mut self) {
+        if !self.handles.is_empty() {
+            self.stop();
+        }
+    }
+}
+
+fn worker_loop(tid: usize, shared: Arc<Shared>) {
+    let mut last_gen = 0u64;
+    loop {
+        let job = {
+            let mut c = shared.ctrl.lock().unwrap();
+            loop {
+                if c.shutdown {
+                    return;
+                }
+                if c.generation != last_gen {
+                    last_gen = c.generation;
+                    break c.job.clone().expect("generation without job");
+                }
+                c = shared.ctrl_cv.wait(c).unwrap();
+            }
+        };
+        run_region(tid, &job);
+    }
+}
+
+fn record_panic(job: &Job, e: Box<dyn std::any::Any + Send>) {
+    let msg = if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
+    };
+    let mut p = job.panicked.lock().unwrap();
+    if p.is_none() {
+        *p = Some(msg);
+    }
+}
+
+fn run_region(tid: usize, job: &Arc<Job>) {
+    let ctx = TeamCtx {
+        tid,
+        job,
+        group: std::cell::RefCell::new(Arc::new(TaskGroup {
+            remaining: AtomicUsize::new(0),
+        })),
+        single_seen: std::cell::Cell::new(0),
+    };
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        (job.f)(&ctx)
+    }));
+    if let Err(e) = r {
+        record_panic(job, e);
+    }
+    // Implicit end-of-region barrier, draining tasks while waiting.
+    let mut st = job.st.lock().unwrap();
+    st.arrived += 1;
+    job.cv.notify_all();
+    loop {
+        if let Some(item) = st.queue.pop_front() {
+            st.running_tasks += 1;
+            drop(st);
+            exec_task(tid, job, item);
+            st = job.st.lock().unwrap();
+            st.running_tasks -= 1;
+            job.cv.notify_all();
+            continue;
+        }
+        if st.arrived == job.n_threads && st.running_tasks == 0 {
+            if !st.complete {
+                st.complete = true;
+            }
+            job.cv.notify_all();
+            return;
+        }
+        st = job.cv.wait(st).unwrap();
+    }
+}
+
+/// Execute one task item: fresh child-group context, panic isolation,
+/// parent-group decrement (under the job lock so waiters can't miss
+/// the wakeup).
+fn exec_task(tid: usize, job: &Arc<Job>, item: TaskItem) {
+    let ctx = TeamCtx {
+        tid,
+        job,
+        group: std::cell::RefCell::new(Arc::new(TaskGroup {
+            remaining: AtomicUsize::new(0),
+        })),
+        single_seen: std::cell::Cell::new(usize::MAX / 2), // tasks see no singles
+    };
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        (item.f)(&ctx)
+    }));
+    if let Err(e) = r {
+        record_panic(job, e);
+    }
+    job.tasks_executed.fetch_add(1, Ordering::Relaxed);
+    // Decrement under the lock, then notify taskwaiters.
+    let _st = job.st.lock().unwrap();
+    item.group.remaining.fetch_sub(1, Ordering::Relaxed);
+    job.cv.notify_all();
+}
+
+impl<'j> TeamCtx<'j> {
+    /// `omp_get_thread_num()`.
+    pub fn thread_num(&self) -> usize {
+        self.tid
+    }
+
+    /// `omp_get_num_threads()`.
+    pub fn num_threads(&self) -> usize {
+        self.job.n_threads
+    }
+
+    /// `#pragma omp single nowait`: the first thread to arrive runs
+    /// `f`; returns whether this thread was it.
+    pub fn single(&self, f: impl FnOnce()) -> bool {
+        let idx = self.single_seen.get();
+        self.single_seen.set(idx + 1);
+        if self
+            .job
+            .single_claim
+            .compare_exchange(idx, idx + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            f();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// `#pragma omp task`: push a deferred task to the central queue.
+    /// The task becomes a child of the current task for `taskwait`.
+    pub fn task<'t>(&self, f: impl FnOnce(&TeamCtx) + Send + 't) {
+        // SAFETY (lifetime erasure): tasks are guaranteed to finish
+        // before the enclosing `parallel` returns (end-of-region
+        // barrier drains the queue), and `parallel`'s caller keeps all
+        // borrowed data alive until then.
+        let boxed: Box<dyn FnOnce(&TeamCtx) + Send + 't> = Box::new(f);
+        let boxed: TaskFn = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce(&TeamCtx) + Send + 't>,
+                Box<dyn FnOnce(&TeamCtx) + Send + 'static>,
+            >(boxed)
+        };
+        let group = self.group.borrow().clone();
+        group.remaining.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.job.st.lock().unwrap();
+        st.queue.push_back(TaskItem { f: boxed, group });
+        let qlen = st.queue.len() as u64;
+        self.job.peak_queue.fetch_max(qlen, Ordering::Relaxed);
+        self.job.tasks_spawned.fetch_add(1, Ordering::Relaxed);
+        self.job.cv.notify_one();
+    }
+
+    /// `#pragma omp task if(cond)`: `cond == false` gives an
+    /// *undeferred* task — executed immediately, inline (the standard
+    /// cutoff mechanism, paper §V).
+    pub fn task_if<'t>(&self, cond: bool, f: impl FnOnce(&TeamCtx) + Send + 't) {
+        if cond {
+            self.task(f);
+        } else {
+            f(self);
+        }
+    }
+
+    /// `#pragma omp taskwait`: wait for all children of the current
+    /// task, executing queued tasks meanwhile (a task scheduling
+    /// point).
+    pub fn taskwait(&self) {
+        let group = self.group.borrow().clone();
+        let mut st = self.job.st.lock().unwrap();
+        loop {
+            if group.remaining.load(Ordering::Acquire) == 0 {
+                return;
+            }
+            if let Some(item) = st.queue.pop_front() {
+                st.running_tasks += 1;
+                drop(st);
+                exec_task(self.tid, self.job, item);
+                st = self.job.st.lock().unwrap();
+                st.running_tasks -= 1;
+                self.job.cv.notify_all();
+                continue;
+            }
+            st = self.job.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Team barrier (also a task scheduling point).
+    pub fn barrier(&self) {
+        let mut st = self.job.st.lock().unwrap();
+        let gen = st.barrier_gen;
+        st.barrier_count += 1;
+        if st.barrier_count == self.job.n_threads {
+            st.barrier_count = 0;
+            st.barrier_gen += 1;
+            self.job.cv.notify_all();
+            return;
+        }
+        loop {
+            if st.barrier_gen != gen {
+                return;
+            }
+            if let Some(item) = st.queue.pop_front() {
+                st.running_tasks += 1;
+                drop(st);
+                exec_task(self.tid, self.job, item);
+                st = self.job.st.lock().unwrap();
+                st.running_tasks -= 1;
+                self.job.cv.notify_all();
+                continue;
+            }
+            st = self.job.cv.wait(st).unwrap();
+        }
+    }
+
+    /// `#pragma omp for schedule(static)`: this thread's contiguous
+    /// share of `[start, end)`. No implied barrier (`nowait`); call
+    /// [`Self::barrier`] for the default behaviour.
+    pub fn for_static(&self, start: usize, end: usize, mut work: impl FnMut(usize)) {
+        let (lo, hi) = super::parallel_for::static_range(
+            start,
+            end,
+            self.tid,
+            self.job.n_threads,
+        );
+        for i in lo..hi {
+            work(i);
+        }
+    }
+
+    /// `#pragma omp for schedule(dynamic, chunk)` over a shared
+    /// schedule object.
+    pub fn for_dynamic(
+        &self,
+        sched: &super::parallel_for::DynamicSched,
+        mut work: impl FnMut(usize),
+    ) {
+        while let Some((lo, hi)) = sched.next_chunk() {
+            for i in lo..hi {
+                work(i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::omp::parallel_for::DynamicSched;
+    use std::sync::atomic::AtomicU64 as TestAtomicU64;
+
+    #[test]
+    fn region_runs_on_all_threads() {
+        let rt = OmpRuntime::new(4);
+        let hits: Vec<TestAtomicU64> =
+            (0..4).map(|_| TestAtomicU64::new(0)).collect();
+        rt.parallel(|ctx| {
+            hits[ctx.thread_num()].fetch_add(1, Ordering::Relaxed);
+            assert_eq!(ctx.num_threads(), 4);
+        })
+        .unwrap();
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn single_executes_once_per_region() {
+        let rt = OmpRuntime::new(6);
+        let count = TestAtomicU64::new(0);
+        for _ in 0..3 {
+            rt.parallel(|ctx| {
+                ctx.single(|| {
+                    count.fetch_add(1, Ordering::Relaxed);
+                });
+            })
+            .unwrap();
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn tasks_all_execute() {
+        let rt = OmpRuntime::new(4);
+        let sum = TestAtomicU64::new(0);
+        let sum_ref = &sum;
+        let stats = rt
+            .parallel(|ctx| {
+                ctx.single(|| {
+                    for i in 1..=100u64 {
+                        ctx.task(move |_| {
+                            sum_ref.fetch_add(i, Ordering::Relaxed);
+                        });
+                    }
+                });
+            })
+            .unwrap();
+        assert_eq!(sum.load(Ordering::Relaxed), 5050);
+        assert_eq!(stats.tasks_spawned, 100);
+        assert_eq!(stats.tasks_executed, 100);
+        assert!(stats.peak_queue >= 1);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn taskwait_orders_phases() {
+        // Phase 1 tasks must all complete before phase 2 begins —
+        // exactly the SparseLU fwd/bdiv → bmod dependency.
+        let rt = OmpRuntime::new(8);
+        let phase1 = TestAtomicU64::new(0);
+        let violations = TestAtomicU64::new(0);
+        rt.parallel(|ctx| {
+            ctx.single(|| {
+                for _ in 0..50 {
+                    ctx.task(|_| {
+                        phase1.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+                ctx.taskwait();
+                if phase1.load(Ordering::SeqCst) != 50 {
+                    violations.fetch_add(1, Ordering::SeqCst);
+                }
+                for _ in 0..50 {
+                    ctx.task(|_| {
+                        if phase1.load(Ordering::SeqCst) != 50 {
+                            violations.fetch_add(1, Ordering::SeqCst);
+                        }
+                    });
+                }
+            });
+        })
+        .unwrap();
+        assert_eq!(violations.load(Ordering::SeqCst), 0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn nested_tasks_and_taskwait() {
+        let rt = OmpRuntime::new(4);
+        let leaf = TestAtomicU64::new(0);
+        rt.parallel(|ctx| {
+            ctx.single(|| {
+                for _ in 0..5 {
+                    ctx.task(|tctx| {
+                        for _ in 0..4 {
+                            tctx.task(|_| {
+                                leaf.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                        tctx.taskwait(); // waits only own children
+                    });
+                }
+            });
+        })
+        .unwrap();
+        assert_eq!(leaf.load(Ordering::Relaxed), 20);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn task_if_false_is_inline() {
+        let rt = OmpRuntime::new(2);
+        let stats = rt
+            .parallel(|ctx| {
+                ctx.single(|| {
+                    let marker = std::sync::atomic::AtomicBool::new(false);
+                    ctx.task_if(false, |_| {
+                        marker.store(true, Ordering::Relaxed)
+                    });
+                    assert!(
+                        marker.load(Ordering::Relaxed),
+                        "undeferred task must run inline"
+                    );
+                });
+            })
+            .unwrap();
+        assert_eq!(stats.tasks_spawned, 0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn for_static_covers() {
+        let rt = OmpRuntime::new(3);
+        let hits: Vec<TestAtomicU64> =
+            (0..100).map(|_| TestAtomicU64::new(0)).collect();
+        rt.parallel(|ctx| {
+            ctx.for_static(0, 100, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn for_dynamic_covers() {
+        let rt = OmpRuntime::new(5);
+        let hits: Vec<TestAtomicU64> =
+            (0..97).map(|_| TestAtomicU64::new(0)).collect();
+        let sched = DynamicSched::new(0, 97, 1);
+        rt.parallel(|ctx| {
+            ctx.for_dynamic(&sched, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        rt.shutdown();
+    }
+
+    #[test]
+    fn barrier_synchronises() {
+        let rt = OmpRuntime::new(4);
+        let before = TestAtomicU64::new(0);
+        let errors = TestAtomicU64::new(0);
+        rt.parallel(|ctx| {
+            before.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+            if before.load(Ordering::SeqCst) != 4 {
+                errors.fetch_add(1, Ordering::SeqCst);
+            }
+        })
+        .unwrap();
+        assert_eq!(errors.load(Ordering::SeqCst), 0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn panic_in_task_propagates() {
+        let rt = OmpRuntime::new(3);
+        let e = rt
+            .parallel(|ctx| {
+                ctx.single(|| {
+                    ctx.task(|_| panic!("omp task exploded"));
+                });
+            })
+            .unwrap_err();
+        assert!(e.contains("omp task exploded"), "{e}");
+        // Runtime survives for the next region.
+        rt.parallel(|_| {}).unwrap();
+        rt.shutdown();
+    }
+
+    #[test]
+    fn borrows_environment() {
+        let rt = OmpRuntime::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let total = TestAtomicU64::new(0);
+        rt.parallel(|ctx| {
+            ctx.for_static(0, data.len(), |i| {
+                total.fetch_add(data[i], Ordering::Relaxed);
+            });
+        })
+        .unwrap();
+        assert_eq!(total.load(Ordering::Relaxed), (0..1000).sum::<u64>());
+        rt.shutdown();
+    }
+}

@@ -1,0 +1,207 @@
+//! [`BlockEngine`]: the PJRT CPU client plus a cache of compiled
+//! executables, with typed entry points for the block ops.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per artifact,
+//! compiled lazily on first use and cached for the life of the engine.
+
+use super::manifest::Manifest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// PJRT-backed executor of the AOT block kernels.
+pub struct BlockEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl BlockEngine {
+    /// Create a CPU PJRT client over the artifacts in `dir`.
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let op = self
+                .manifest
+                .ops
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+            let path = self.manifest.path_of(op);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Eagerly compile every artifact matching `bs` (all, if `None`).
+    /// First-use compilation costs ~50 ms per artifact on the CPU
+    /// client — precompiling keeps it off the measured hot path
+    /// (§Perf L3#1).
+    pub fn precompile(&mut self, bs: Option<usize>) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .ops
+            .iter()
+            .filter(|o| bs.is_none_or(|b| o.bs == b))
+            .map(|o| o.name.clone())
+            .collect();
+        let mut n = 0;
+        for name in names {
+            self.executable(&name)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Execute artifact `name` on square `edge×edge` f32 inputs;
+    /// returns the flattened outputs of the result tuple.
+    pub fn exec(
+        &mut self,
+        name: &str,
+        edge: usize,
+        inputs: &[&[f32]],
+    ) -> Result<Vec<Vec<f32>>> {
+        let (arity, outputs) = {
+            let op = self
+                .manifest
+                .ops
+                .iter()
+                .find(|o| o.name == name)
+                .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+            (op.arity, op.outputs)
+        };
+        if inputs.len() != arity {
+            bail!("{name}: expected {arity} inputs, got {}", inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            if data.len() != edge * edge {
+                bail!(
+                    "{name}: input {i} has {} elems, expected {}",
+                    data.len(),
+                    edge * edge
+                );
+            }
+            // Build the 2-D literal in one shot (vec1 + reshape costs
+            // an extra copy + C round trip per argument — §Perf L3#2).
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    data.as_ptr() as *const u8,
+                    data.len() * 4,
+                )
+            };
+            literals.push(
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &[edge, edge],
+                    bytes,
+                )
+                .context("creating input literal")?,
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result")?
+            .to_tuple()
+            .context("decomposing result tuple")?;
+        if tuple.len() != outputs {
+            bail!("{name}: expected {outputs} outputs, got {}", tuple.len());
+        }
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading output"))
+            .collect()
+    }
+
+    // --- typed block ops ------------------------------------------------
+
+    /// `diag ← LU(diag)` in place.
+    pub fn lu0(&mut self, bs: usize, diag: &mut [f32]) -> Result<()> {
+        let out = self.exec(&format!("lu0_bs{bs}"), bs, &[diag])?;
+        diag.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    /// `col ← L(diag)⁻¹ col` in place.
+    pub fn fwd(&mut self, bs: usize, diag: &[f32], col: &mut [f32]) -> Result<()> {
+        let out = self.exec(&format!("fwd_bs{bs}"), bs, &[diag, col])?;
+        col.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    /// `row ← row · U(diag)⁻¹` in place.
+    pub fn bdiv(&mut self, bs: usize, diag: &[f32], row: &mut [f32]) -> Result<()> {
+        let out = self.exec(&format!("bdiv_bs{bs}"), bs, &[diag, row])?;
+        row.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    /// `inner ← inner − row·col` in place.
+    pub fn bmod(
+        &mut self,
+        bs: usize,
+        row: &[f32],
+        col: &[f32],
+        inner: &mut [f32],
+    ) -> Result<()> {
+        let out = self.exec(&format!("bmod_bs{bs}"), bs, &[row, col, inner])?;
+        inner.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    /// Fused 2×2-quadrant elimination step (see `model.lu_step`).
+    #[allow(clippy::type_complexity)]
+    pub fn lustep(
+        &mut self,
+        bs: usize,
+        diag: &[f32],
+        row: &[f32],
+        col: &[f32],
+        inner: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut out =
+            self.exec(&format!("lustep_bs{bs}"), bs, &[diag, row, col, inner])?;
+        let i = out.pop().unwrap();
+        let c = out.pop().unwrap();
+        let r = out.pop().unwrap();
+        let d = out.pop().unwrap();
+        Ok((d, r, c, i))
+    }
+
+    /// `C = A·B` for `n×n` matrices (micro-benchmark artifact).
+    pub fn matmul(&mut self, n: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let mut out = self.exec(&format!("matmul_n{n}"), n, &[a, b])?;
+        Ok(out.pop().unwrap())
+    }
+}

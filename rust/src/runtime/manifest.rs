@@ -1,0 +1,149 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactOp {
+    /// Unique name, e.g. `bmod_bs16`.
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Operation kind: `lu0` / `fwd` / `bdiv` / `bmod` / `lustep` /
+    /// `matmul`.
+    pub op: String,
+    /// Block size (matmul: matrix edge).
+    pub bs: usize,
+    /// Number of `bs×bs` f32 inputs.
+    pub arity: usize,
+    /// Number of outputs in the result tuple.
+    pub outputs: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub ops: Vec<ArtifactOp>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read {path:?}: {e} (run `make artifacts` first)"
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (dir recorded for file resolution).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, String> {
+        let v = Json::parse(text)?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or("manifest missing version")?;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let ops = v
+            .get("ops")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing ops")?
+            .iter()
+            .map(|o| {
+                let s = |k: &str| -> Result<String, String> {
+                    o.get(k)
+                        .and_then(Json::as_str)
+                        .map(str::to_string)
+                        .ok_or_else(|| format!("op missing {k}"))
+                };
+                let n = |k: &str| -> Result<usize, String> {
+                    o.get(k)
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| format!("op missing {k}"))
+                };
+                Ok(ArtifactOp {
+                    name: s("name")?,
+                    file: s("file")?,
+                    op: s("op")?,
+                    bs: n("bs")?,
+                    arity: n("arity")?,
+                    outputs: n("outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Self { dir, ops })
+    }
+
+    /// Find the artifact for `(op, bs)`.
+    pub fn find(&self, op: &str, bs: usize) -> Option<&ArtifactOp> {
+        self.ops.iter().find(|o| o.op == op && o.bs == bs)
+    }
+
+    /// Block sizes available for a given op kind, sorted.
+    pub fn block_sizes(&self, op: &str) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.ops.iter().filter(|o| o.op == op).map(|o| o.bs).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, op: &ArtifactOp) -> PathBuf {
+        self.dir.join(&op.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1, "dtype": "f32",
+        "ops": [
+            {"name":"bmod_bs8","file":"bmod_bs8.hlo.txt","op":"bmod","bs":8,"arity":3,"outputs":1},
+            {"name":"bmod_bs16","file":"bmod_bs16.hlo.txt","op":"bmod","bs":16,"arity":3,"outputs":1},
+            {"name":"lu0_bs8","file":"lu0_bs8.hlo.txt","op":"lu0","bs":8,"arity":1,"outputs":1}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(SAMPLE, "arts".into()).unwrap();
+        assert_eq!(m.ops.len(), 3);
+        let op = m.find("bmod", 16).unwrap();
+        assert_eq!(op.arity, 3);
+        assert_eq!(m.path_of(op), PathBuf::from("arts/bmod_bs16.hlo.txt"));
+        assert!(m.find("bmod", 99).is_none());
+        assert_eq!(m.block_sizes("bmod"), vec![8, 16]);
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(Manifest::parse(r#"{"version":2,"ops":[]}"#, ".".into())
+            .is_err());
+        assert!(Manifest::parse(r#"{"ops":[]}"#, ".".into()).is_err());
+        assert!(Manifest::parse(
+            r#"{"version":1,"ops":[{"name":"x"}]}"#,
+            ".".into()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // Integration sanity when `make artifacts` has run.
+        if let Ok(m) = Manifest::load(crate::runtime::default_artifact_dir())
+        {
+            assert!(m.find("bmod", 8).is_some());
+            assert!(m.find("lustep", 80).is_some());
+            assert!(!m.block_sizes("matmul").is_empty());
+        }
+    }
+}

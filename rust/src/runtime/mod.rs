@@ -1,0 +1,29 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust request
+//! path (Python is never involved at runtime).
+//!
+//! * [`manifest`] — `artifacts/manifest.json` description of every
+//!   compiled op.
+//! * [`client`] — [`client::BlockEngine`]: PJRT CPU client + compiled
+//!   executable cache + typed block-op entry points.
+//! * [`service`] — [`service::EngineService`]: a dedicated executor
+//!   thread owning the engine, callable from any tile thread through a
+//!   cloneable handle (the `xla` crate's wrappers are not `Send`, and
+//!   funnelling block ops through an executor keeps the unsafe surface
+//!   zero).
+
+pub mod client;
+pub mod manifest;
+pub mod service;
+
+pub use client::BlockEngine;
+pub use manifest::{ArtifactOp, Manifest};
+pub use service::EngineService;
+
+/// Default artifact directory (relative to the repo root / cwd).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("GPRM_ARTIFACTS") {
+        return dir.into();
+    }
+    "artifacts".into()
+}

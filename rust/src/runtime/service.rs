@@ -1,0 +1,196 @@
+//! [`EngineService`]: a dedicated executor thread owning the
+//! [`BlockEngine`], callable from any tile/worker thread through a
+//! cloneable, `Send + Sync` handle.
+//!
+//! The `xla` crate's wrapper types are raw-pointer-backed and not
+//! `Send`; rather than asserting thread-safety of the C++ objects, all
+//! PJRT execution funnels through one service thread via channels.
+//! (On this testbed the CPU PJRT client is single-threaded anyway; the
+//! GPRM/OMP schedulers overlap their own coordination with the
+//! engine's compute.)
+
+use super::client::BlockEngine;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+enum Request {
+    Exec {
+        name: String,
+        edge: usize,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>, String>>,
+    },
+    Precompile {
+        bs: Option<usize>,
+        reply: mpsc::Sender<Result<usize, String>>,
+    },
+    Platform {
+        reply: mpsc::Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+pub struct EngineService {
+    tx: Mutex<mpsc::Sender<Request>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EngineService {
+    /// Spawn the service over the artifacts in `dir`. Fails fast if
+    /// the manifest or the PJRT client cannot be created.
+    pub fn start(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut engine = match BlockEngine::new(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Shutdown => break,
+                        Request::Platform { reply } => {
+                            let _ = reply.send(engine.platform());
+                        }
+                        Request::Precompile { bs, reply } => {
+                            let r = engine
+                                .precompile(bs)
+                                .map_err(|e| format!("{e:#}"));
+                            let _ = reply.send(r);
+                        }
+                        Request::Exec { name, edge, inputs, reply } => {
+                            let refs: Vec<&[f32]> =
+                                inputs.iter().map(|v| v.as_slice()).collect();
+                            let r = engine
+                                .exec(&name, edge, &refs)
+                                .map_err(|e| format!("{e:#}"));
+                            let _ = reply.send(r);
+                        }
+                    }
+                }
+            })
+            .expect("spawn pjrt-engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Self { tx: Mutex::new(tx), handle: Some(handle) })
+    }
+
+    fn send(&self, req: Request) {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .expect("pjrt-engine thread gone");
+    }
+
+    /// Execute an artifact (see [`BlockEngine::exec`]); callable from
+    /// any thread.
+    pub fn exec(
+        &self,
+        name: &str,
+        edge: usize,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Exec {
+            name: name.to_string(),
+            edge,
+            inputs,
+            reply,
+        });
+        rx.recv()
+            .map_err(|_| anyhow!("engine thread dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn platform(&self) -> String {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Platform { reply });
+        rx.recv().unwrap_or_else(|_| "unknown".into())
+    }
+
+    /// Eagerly compile artifacts for block size `bs` (all if `None`),
+    /// keeping first-use PJRT compilation off the measured hot path.
+    pub fn precompile(&self, bs: Option<usize>) -> Result<usize> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Precompile { bs, reply });
+        rx.recv()
+            .map_err(|_| anyhow!("engine thread dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    // Typed helpers mirroring BlockEngine's.
+
+    pub fn lu0(&self, bs: usize, diag: &mut [f32]) -> Result<()> {
+        let out = self.exec(&format!("lu0_bs{bs}"), bs, vec![diag.to_vec()])?;
+        diag.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    pub fn fwd(&self, bs: usize, diag: &[f32], col: &mut [f32]) -> Result<()> {
+        let out = self.exec(
+            &format!("fwd_bs{bs}"),
+            bs,
+            vec![diag.to_vec(), col.to_vec()],
+        )?;
+        col.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    pub fn bdiv(&self, bs: usize, diag: &[f32], row: &mut [f32]) -> Result<()> {
+        let out = self.exec(
+            &format!("bdiv_bs{bs}"),
+            bs,
+            vec![diag.to_vec(), row.to_vec()],
+        )?;
+        row.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    pub fn bmod(
+        &self,
+        bs: usize,
+        row: &[f32],
+        col: &[f32],
+        inner: &mut [f32],
+    ) -> Result<()> {
+        let out = self.exec(
+            &format!("bmod_bs{bs}"),
+            bs,
+            vec![row.to_vec(), col.to_vec(), inner.to_vec()],
+        )?;
+        inner.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    pub fn matmul(&self, n: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let mut out = self.exec(
+            &format!("matmul_n{n}"),
+            n,
+            vec![a.to_vec(), b.to_vec()],
+        )?;
+        Ok(out.pop().unwrap())
+    }
+}
+
+impl Drop for EngineService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! A miniature property-testing kit (proptest is unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` on `cases` generated
+//! inputs and, on failure, greedily shrinks the input via the
+//! generator's `shrink` before panicking with the minimal
+//! counterexample.
+
+use crate::util::prng::SplitMix64;
+
+/// A generator of values of type `T` with optional shrinking.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value;
+    /// Candidate "smaller" values; default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform usize in `[lo, hi)`, shrinking toward `lo`.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut SplitMix64) -> usize {
+        rng.range(self.0, self.1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(a)
+            .into_iter()
+            .map(|a2| (a2, b.clone()))
+            .collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Triple of independent generators.
+pub struct Triple<A, B, C>(pub A, pub B, pub C);
+
+impl<A: Gen, B: Gen, C: Gen> Gen for Triple<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+        (
+            self.0.generate(rng),
+            self.1.generate(rng),
+            self.2.generate(rng),
+        )
+    }
+    fn shrink(&self, (a, b, c): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(a)
+            .into_iter()
+            .map(|a2| (a2, b.clone(), c.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink(b)
+                .into_iter()
+                .map(|b2| (a.clone(), b2, c.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink(c)
+                .into_iter()
+                .map(|c2| (a.clone(), b.clone(), c2)),
+        );
+        out
+    }
+}
+
+/// Vec of `len` values from an element generator.
+pub struct VecOf<G>(pub G, pub usize);
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+        (0..self.1).map(|_| self.0.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        // Shrink by halving length.
+        if v.len() > 1 {
+            vec![v[..v.len() / 2].to_vec()]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Run a property over `cases` random inputs (deterministic seed
+/// derived from `name`), shrinking on failure.
+pub fn check<G: Gen>(
+    name: &str,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
+    let seed = name
+        .bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(e) = prop(&v) {
+            // Greedy shrink: keep taking the first failing candidate.
+            let mut cur = v;
+            let mut msg = e;
+            'shrinking: loop {
+                for cand in gen.shrink(&cur) {
+                    if let Err(e2) = prop(&cand) {
+                        cur = cand;
+                        msg = e2;
+                        continue 'shrinking;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}) on minimal input {cur:?}: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 200, &Pair(UsizeRange(0, 100), UsizeRange(0, 100)), |(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            check("find-ge-10", 500, &UsizeRange(0, 1000), |&v| {
+                if v < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 10"))
+                }
+            });
+        });
+        let msg = match r {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Greedy shrink must land on a small counterexample (10..20).
+        assert!(msg.contains("minimal input 1"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_gen_len() {
+        let mut rng = SplitMix64::new(1);
+        let v = VecOf(UsizeRange(0, 5), 7).generate(&mut rng);
+        assert_eq!(v.len(), 7);
+        assert!(v.iter().all(|&x| x < 5));
+    }
+}

@@ -1,0 +1,115 @@
+//! Block-level locality directory: which tile's L2 last produced each
+//! block (the TILEPro64's distributed L3 is the union of the per-tile
+//! L2s; a read of a block homed elsewhere crosses the mesh).
+
+use super::cost::CostModel;
+use super::mesh::Mesh;
+use super::workload::SimTask;
+
+/// "Nobody holds this block yet" (first touch comes from DRAM).
+pub const NO_TILE: u16 = u16::MAX;
+
+/// Last-writer directory over block ids.
+pub struct Directory {
+    home: Vec<u16>,
+    block_bytes: u64,
+}
+
+impl Directory {
+    /// `n_blocks == 0` disables locality tracking (workloads without
+    /// block reuse, e.g. the MatMul jobs).
+    pub fn new(n_blocks: usize, block_bytes: u64) -> Self {
+        Self { home: vec![NO_TILE; n_blocks], block_bytes }
+    }
+
+    /// Extra cycles `task` pays when running on `tile`, then record
+    /// its write. Local reads are free (L2 hit, folded into
+    /// `cycles_per_flop`); remote reads pay a mesh transfer; first
+    /// touches pay the DRAM-ish transfer at mean distance.
+    pub fn access(
+        &mut self,
+        cost: &CostModel,
+        mesh: &Mesh,
+        tile: usize,
+        task: &SimTask,
+    ) -> u64 {
+        if self.home.is_empty() {
+            return 0;
+        }
+        let node = 1 + (tile % (mesh.n_tiles() - 1)); // node 0 = PCI tile
+        let mut extra = 0u64;
+        for &b in task.reads() {
+            let h = self.home[b as usize];
+            if h == NO_TILE {
+                // First touch: stream from a memory controller, mean
+                // half-diameter away.
+                extra +=
+                    cost.transfer(self.block_bytes, mesh.diameter() / 2);
+            } else {
+                let hn = 1 + (h as usize % (mesh.n_tiles() - 1));
+                if hn != node {
+                    extra += cost.transfer(self.block_bytes, mesh.hops(hn, node));
+                }
+            }
+        }
+        if task.write != super::workload::NO_BLOCK {
+            self.home[task.write as usize] = tile as u16;
+        }
+        extra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tilesim::workload::{SimTask, NO_BLOCK};
+
+    fn task(reads: &[u32], write: u32) -> SimTask {
+        let mut r = [0u32; 3];
+        r[..reads.len()].copy_from_slice(reads);
+        SimTask {
+            flops: 0,
+            mem_bytes: 0,
+            reads: r,
+            n_reads: reads.len() as u8,
+            write,
+            iter: 0,
+        }
+    }
+
+    #[test]
+    fn local_reuse_is_free_remote_pays() {
+        let cost = CostModel::default();
+        let mesh = Mesh::TILEPRO64;
+        let mut d = Directory::new(4, 1024);
+        // First touch from DRAM: expensive.
+        let first = d.access(&cost, &mesh, 5, &task(&[2], 2));
+        assert!(first > 0);
+        // Same tile re-reads its own block: free.
+        let again = d.access(&cost, &mesh, 5, &task(&[2], NO_BLOCK));
+        assert_eq!(again, 0);
+        // Another tile reads it: pays mesh transfer.
+        let remote = d.access(&cost, &mesh, 40, &task(&[2], NO_BLOCK));
+        assert!(remote > 0);
+    }
+
+    #[test]
+    fn write_moves_home() {
+        let cost = CostModel::default();
+        let mesh = Mesh::TILEPRO64;
+        let mut d = Directory::new(2, 256);
+        d.access(&cost, &mesh, 3, &task(&[], 0));
+        // Tile 3 owns block 0 now.
+        assert_eq!(d.access(&cost, &mesh, 3, &task(&[0], NO_BLOCK)), 0);
+        d.access(&cost, &mesh, 9, &task(&[], 0));
+        assert!(d.access(&cost, &mesh, 3, &task(&[0], NO_BLOCK)) > 0);
+    }
+
+    #[test]
+    fn disabled_directory_is_free() {
+        let cost = CostModel::default();
+        let mesh = Mesh::TILEPRO64;
+        let mut d = Directory::new(0, 0);
+        assert_eq!(d.access(&cost, &mesh, 1, &task(&[], NO_BLOCK)), 0);
+    }
+}

@@ -1,0 +1,90 @@
+//! TILEPro64 mesh geometry: 64 tiles on an 8×8 grid, XY dimension-
+//! ordered routing (paper §IV: "interconnected via multiple 8×8 mesh
+//! networks").
+
+/// A rectangular tile mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mesh {
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl Mesh {
+    /// The TILEPro64: 8×8.
+    pub const TILEPRO64: Mesh = Mesh { cols: 8, rows: 8 };
+
+    pub fn new(cols: usize, rows: usize) -> Self {
+        assert!(cols > 0 && rows > 0);
+        Self { cols, rows }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    /// Tile id → (x, y).
+    pub fn coords(&self, tile: usize) -> (usize, usize) {
+        debug_assert!(tile < self.n_tiles());
+        (tile % self.cols, tile / self.cols)
+    }
+
+    /// Manhattan (XY-routing) hop count between two tiles.
+    pub fn hops(&self, a: usize, b: usize) -> usize {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Mean hop distance from `tile` to all others — used for the
+    /// expected cost of touching a randomly-homed cache line.
+    pub fn mean_hops_from(&self, tile: usize) -> f64 {
+        let n = self.n_tiles();
+        let total: usize = (0..n).map(|t| self.hops(tile, t)).sum();
+        total as f64 / (n - 1).max(1) as f64
+    }
+
+    /// Network diameter.
+    pub fn diameter(&self) -> usize {
+        (self.cols - 1) + (self.rows - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tilepro_geometry() {
+        let m = Mesh::TILEPRO64;
+        assert_eq!(m.n_tiles(), 64);
+        assert_eq!(m.diameter(), 14);
+        assert_eq!(m.coords(0), (0, 0));
+        assert_eq!(m.coords(63), (7, 7));
+        assert_eq!(m.hops(0, 63), 14);
+        assert_eq!(m.hops(0, 7), 7);
+        assert_eq!(m.hops(9, 9), 0);
+        // symmetric
+        assert_eq!(m.hops(5, 42), m.hops(42, 5));
+    }
+
+    #[test]
+    fn mean_hops_center_smaller_than_corner() {
+        let m = Mesh::TILEPRO64;
+        let corner = m.mean_hops_from(0);
+        let center = m.mean_hops_from(27); // (3,3)
+        assert!(center < corner);
+        assert!(corner > 6.9 && corner < 7.3, "corner mean {corner}");
+    }
+
+    #[test]
+    fn triangle_inequality_sample() {
+        let m = Mesh::new(4, 4);
+        for a in 0..16 {
+            for b in 0..16 {
+                for c in 0..16 {
+                    assert!(m.hops(a, c) <= m.hops(a, b) + m.hops(b, c));
+                }
+            }
+        }
+    }
+}

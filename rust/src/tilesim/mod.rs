@@ -1,0 +1,90 @@
+//! A TILEPro64-like many-core simulator — the measurement substrate
+//! for the paper's 63-core experiments (see DESIGN.md §2 for the
+//! substitution argument).
+//!
+//! The paper's phenomena are *scheduling* phenomena: a single producer
+//! serialising task creation, a central task queue whose lock degrades
+//! under contention, per-task management overhead vs. task
+//! granularity, starvation under shrinking loop bounds, and cache
+//! locality under static vs. dynamic assignment. This module simulates
+//! exactly those mechanisms in virtual time on a parameterised tile
+//! grid:
+//!
+//! * [`mesh`] — the 8×8 mesh geometry and XY-routing hop distances.
+//! * [`cost`] — the calibrated cycle-cost model (clock, cache/NoC
+//!   latencies, lock and task-management costs). All constants are
+//!   documented and tunable; experiments assert *shape*, not absolute
+//!   cycles.
+//! * [`workload`] — phase-structured task DAGs for the two paper
+//!   workloads (MatMul micro-benchmark §V, SparseLU §VI), generated
+//!   from the same BOTS structure as the real factorisation.
+//! * [`sim_gprm`] — virtual-time execution of the GPRM model: CL
+//!   worksharing tasks per phase, static round-robin / contiguous
+//!   assignment, reduction-engine packet costs.
+//! * [`sim_omp`] — virtual-time execution of the OpenMP-3.0 model:
+//!   `omp for` (static / dynamic) and single-producer tasking with a
+//!   contended central queue, plus the cutoff variant.
+//!
+//! Both simulators share [`cost::CostModel`] and the phase-level
+//! memory-bandwidth ceiling, so who-wins comparisons are apples to
+//! apples.
+
+pub mod cost;
+pub mod locality;
+pub mod mesh;
+pub mod sim_gprm;
+pub mod sim_omp;
+pub mod workload;
+
+pub use cost::CostModel;
+pub use mesh::Mesh;
+pub use sim_gprm::{GprmAssign, GprmSim};
+pub use sim_omp::{OmpSim, OmpStrategy};
+pub use workload::{Phase, SimTask, Workload};
+
+/// Virtual-time result of simulating one workload under one runtime.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Makespan in core cycles.
+    pub cycles: u64,
+    /// Tasks (or loop chunks) executed.
+    pub tasks: u64,
+    /// Cycles each tile spent doing useful kernel work.
+    pub busy: Vec<u64>,
+    /// Cycles lost waiting for the central queue lock (OpenMP only).
+    pub lock_wait: u64,
+    /// Cycles the producer spent creating tasks (OpenMP only).
+    pub producer: u64,
+}
+
+impl SimReport {
+    /// Wall-clock seconds at the given core frequency (TILEPro64:
+    /// 866 MHz).
+    pub fn seconds(&self, hz: f64) -> f64 {
+        self.cycles as f64 / hz
+    }
+
+    /// Fraction of total tile-cycles spent on useful work.
+    pub fn efficiency(&self, n_tiles: usize) -> f64 {
+        let total: u64 = self.busy.iter().sum();
+        total as f64 / (self.cycles as f64 * n_tiles as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_conversions() {
+        let r = SimReport {
+            cycles: 866_000_000,
+            tasks: 10,
+            busy: vec![433_000_000; 2],
+            lock_wait: 0,
+            producer: 0,
+        };
+        assert!((r.seconds(866e6) - 1.0).abs() < 1e-9);
+        assert!((r.efficiency(2) - 0.5).abs() < 1e-9);
+    }
+}

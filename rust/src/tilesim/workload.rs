@@ -1,0 +1,355 @@
+//! Phase-structured task workloads for the simulator — the two
+//! evaluation workloads of the paper, generated from the same
+//! structure as the real computations.
+
+use crate::linalg::genmat::bots_null_entry;
+use crate::linalg::lu::{kernel_flops, BlockOp};
+
+/// "No write target" marker for [`SimTask::write`].
+pub const NO_BLOCK: u32 = u32::MAX;
+
+/// One task in virtual time.
+#[derive(Clone, Copy, Debug)]
+pub struct SimTask {
+    /// Useful floating-point work.
+    pub flops: u64,
+    /// Bytes of shared-fabric/DRAM traffic this task generates
+    /// regardless of locality (drives the phase bandwidth floor).
+    pub mem_bytes: u64,
+    /// Block ids read (locality-tracked); only the first `n_reads`
+    /// entries are valid.
+    pub reads: [u32; 3],
+    pub n_reads: u8,
+    /// Block id written (`NO_BLOCK` if none) — updates the directory.
+    pub write: u32,
+    /// Flattened iteration index within the lane's loop domain. Drives
+    /// both worksharing assignment (GPRM) and producer scan order
+    /// (OpenMP).
+    pub iter: u64,
+}
+
+impl SimTask {
+    pub fn reads(&self) -> &[u32] {
+        &self.reads[..self.n_reads as usize]
+    }
+}
+
+/// One parallel loop domain inside a phase. GPRM gives each lane its
+/// own worksharing construct (e.g. fwd and bdiv run as two lanes over
+/// half the concurrency level each, paper Listing 5); OpenMP's
+/// producer scans lanes in order.
+#[derive(Clone, Debug, Default)]
+pub struct Lane {
+    pub tasks: Vec<SimTask>,
+    /// Total loop-domain iterations (including structurally-empty
+    /// ones, which still cost a scan/turn check).
+    pub total_iters: u64,
+}
+
+/// What a phase represents (diagnostics + GPRM lane placement).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Diagonal factorisation — a single task, serial.
+    Lu0,
+    /// fwd + bdiv, two independent lanes.
+    FwdBdiv,
+    /// Trailing Schur update, one (nested) lane.
+    Bmod,
+    /// Independent jobs (MatMul micro-benchmark).
+    Jobs,
+}
+
+/// A barrier-separated phase.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub kind: PhaseKind,
+    pub lanes: Vec<Lane>,
+}
+
+impl Phase {
+    pub fn task_count(&self) -> usize {
+        self.lanes.iter().map(|l| l.tasks.len()).sum()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| &l.tasks)
+            .map(|t| t.flops)
+            .sum()
+    }
+
+    pub fn total_mem_bytes(&self) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| &l.tasks)
+            .map(|t| t.mem_bytes)
+            .sum()
+    }
+}
+
+/// Workload constructors.
+pub struct Workload;
+
+impl Workload {
+    /// The MatMul micro-benchmark (paper §V): `m` independent jobs,
+    /// each one row of `C = A·B` with `A: m×n`, `B: n×p` → `2·n·p`
+    /// flops per job. `cutoff > 1` aggregates that many consecutive
+    /// jobs into one task (paper Listing 4); `cutoff == 1` is the
+    /// plain one-task-per-job form.
+    pub fn matmul_jobs(m: usize, n: usize, p: usize, cutoff: usize) -> Phase {
+        assert!(cutoff >= 1);
+        let job_flops = 2 * (n as u64) * (p as u64);
+        // Shared-fabric traffic: the naive ijk loop strides B's
+        // columns, touching all n·p elements per job. When B fits in
+        // the 8 KB per-tile L1 it stays resident after first touch
+        // (¼ effective traffic); larger B lives line-distributed in
+        // the L2-union L3 across the mesh, so every job re-streams it
+        // through the shared fabric — this is what caps the paper's
+        // naive matmul at single-digit speedups ("one should not
+        // expect to see a linear speedup", §V).
+        let b_bytes = 4 * (n as u64) * (p as u64);
+        let job_mem = if b_bytes <= 8 * 1024 { b_bytes / 4 } else { b_bytes };
+        let n_tasks = m.div_ceil(cutoff);
+        let mut tasks = Vec::with_capacity(n_tasks);
+        for t in 0..n_tasks {
+            let jobs_here = cutoff.min(m - t * cutoff) as u64;
+            tasks.push(SimTask {
+                flops: job_flops * jobs_here,
+                mem_bytes: job_mem * jobs_here,
+                reads: [0; 3],
+                n_reads: 0,
+                write: NO_BLOCK,
+                iter: t as u64,
+            });
+        }
+        Phase {
+            kind: PhaseKind::Jobs,
+            lanes: vec![Lane { tasks, total_iters: n_tasks as u64 }],
+        }
+    }
+
+    /// The SparseLU workload (paper §VI): a lazy iterator of the
+    /// `3·NB` barrier-separated phases (lu0; fwd+bdiv; bmod) with the
+    /// exact BOTS structure including fill-in. Streaming keeps memory
+    /// bounded for NB=500 (~10⁷ bmod tasks overall).
+    pub fn sparselu(nb: usize, bs: usize) -> SparseLuPhases {
+        let mut alloc = Vec::with_capacity(nb * nb);
+        for ii in 0..nb {
+            for jj in 0..nb {
+                alloc.push(!bots_null_entry(ii, jj));
+            }
+        }
+        SparseLuPhases { nb, bs, alloc, kk: 0, sub: 0 }
+    }
+}
+
+/// Lazy phase stream for SparseLU (see [`Workload::sparselu`]).
+pub struct SparseLuPhases {
+    nb: usize,
+    bs: usize,
+    /// Current allocation pattern (updated with fill-in as the
+    /// factorisation structure advances).
+    alloc: Vec<bool>,
+    kk: usize,
+    /// 0 = lu0, 1 = fwd+bdiv, 2 = bmod.
+    sub: u8,
+}
+
+impl SparseLuPhases {
+    fn block_bytes(&self) -> u64 {
+        (self.bs * self.bs * 4) as u64
+    }
+
+    fn id(&self, ii: usize, jj: usize) -> u32 {
+        (ii * self.nb + jj) as u32
+    }
+}
+
+impl Iterator for SparseLuPhases {
+    type Item = Phase;
+
+    fn next(&mut self) -> Option<Phase> {
+        if self.kk >= self.nb {
+            return None;
+        }
+        let (nb, bs, kk) = (self.nb, self.bs, self.kk);
+        let bb = self.block_bytes();
+        let phase = match self.sub {
+            0 => {
+                // lu0 on the diagonal block.
+                let t = SimTask {
+                    flops: kernel_flops(BlockOp::Lu0, bs),
+                    mem_bytes: bb,
+                    reads: [self.id(kk, kk), 0, 0],
+                    n_reads: 1,
+                    write: self.id(kk, kk),
+                    iter: 0,
+                };
+                Phase {
+                    kind: PhaseKind::Lu0,
+                    lanes: vec![Lane { tasks: vec![t], total_iters: 1 }],
+                }
+            }
+            1 => {
+                // fwd over row kk (lane 0) + bdiv over column kk
+                // (lane 1); loop domain is jj/ii ∈ (kk, nb).
+                let mut fwd = Lane {
+                    tasks: Vec::new(),
+                    total_iters: (nb - kk - 1) as u64,
+                };
+                let mut bdiv = Lane {
+                    tasks: Vec::new(),
+                    total_iters: (nb - kk - 1) as u64,
+                };
+                for jj in kk + 1..nb {
+                    if self.alloc[kk * nb + jj] {
+                        fwd.tasks.push(SimTask {
+                            flops: kernel_flops(BlockOp::Fwd, bs),
+                            mem_bytes: bb,
+                            reads: [self.id(kk, kk), self.id(kk, jj), 0],
+                            n_reads: 2,
+                            write: self.id(kk, jj),
+                            iter: (jj - kk - 1) as u64,
+                        });
+                    }
+                }
+                for ii in kk + 1..nb {
+                    if self.alloc[ii * nb + kk] {
+                        bdiv.tasks.push(SimTask {
+                            flops: kernel_flops(BlockOp::Bdiv, bs),
+                            mem_bytes: bb,
+                            reads: [self.id(kk, kk), self.id(ii, kk), 0],
+                            n_reads: 2,
+                            write: self.id(ii, kk),
+                            iter: (ii - kk - 1) as u64,
+                        });
+                    }
+                }
+                Phase { kind: PhaseKind::FwdBdiv, lanes: vec![fwd, bdiv] }
+            }
+            _ => {
+                // bmod over the trailing submatrix: nested (ii, jj)
+                // loop flattened row-major; fill-in updates `alloc`.
+                let side = (nb - kk - 1) as u64;
+                let mut lane = Lane {
+                    tasks: Vec::new(),
+                    total_iters: side * side,
+                };
+                for ii in kk + 1..nb {
+                    if !self.alloc[ii * nb + kk] {
+                        continue;
+                    }
+                    for jj in kk + 1..nb {
+                        if !self.alloc[kk * nb + jj] {
+                            continue;
+                        }
+                        let iter = ((ii - kk - 1) as u64) * side
+                            + (jj - kk - 1) as u64;
+                        // Fill-in allocation happens inside the task
+                        // (BOTS allocate_clean_block) — extra DRAM
+                        // traffic for the fresh block.
+                        let fresh = !self.alloc[ii * nb + jj];
+                        self.alloc[ii * nb + jj] = true;
+                        lane.tasks.push(SimTask {
+                            flops: kernel_flops(BlockOp::Bmod, bs),
+                            mem_bytes: bb * if fresh { 3 } else { 2 },
+                            reads: [
+                                self.id(ii, kk),
+                                self.id(kk, jj),
+                                self.id(ii, jj),
+                            ],
+                            n_reads: 3,
+                            write: self.id(ii, jj),
+                            iter,
+                        });
+                    }
+                }
+                Phase { kind: PhaseKind::Bmod, lanes: vec![lane] }
+            }
+        };
+        self.sub += 1;
+        if self.sub == 3 {
+            self.sub = 0;
+            self.kk += 1;
+        }
+        Some(phase)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::genmat::genmat_pattern;
+    use crate::linalg::lu::lu_task_counts;
+
+    #[test]
+    fn matmul_phase_shape() {
+        let p = Workload::matmul_jobs(10, 50, 50, 1);
+        assert_eq!(p.task_count(), 10);
+        assert_eq!(p.total_flops(), 10 * 2 * 50 * 50);
+        assert_eq!(p.lanes[0].total_iters, 10);
+    }
+
+    #[test]
+    fn matmul_cutoff_aggregates() {
+        let p = Workload::matmul_jobs(103, 20, 20, 10);
+        assert_eq!(p.task_count(), 11); // 10 full + 1 of 3 jobs
+        assert_eq!(p.total_flops(), 103 * 2 * 20 * 20);
+        let last = p.lanes[0].tasks.last().unwrap();
+        assert_eq!(last.flops, 3 * 2 * 20 * 20);
+    }
+
+    #[test]
+    fn sparselu_phase_count_and_structure() {
+        let nb = 10;
+        let phases: Vec<Phase> = Workload::sparselu(nb, 4).collect();
+        assert_eq!(phases.len(), 3 * nb);
+        // Cross-check task counts against the linalg structural walk.
+        let counts = lu_task_counts(&genmat_pattern(nb), nb);
+        for kk in 0..nb {
+            let fb = &phases[3 * kk + 1];
+            assert_eq!(fb.kind, PhaseKind::FwdBdiv);
+            assert_eq!(fb.lanes[0].tasks.len(), counts.fwd[kk], "fwd kk={kk}");
+            assert_eq!(fb.lanes[1].tasks.len(), counts.bdiv[kk], "bdiv kk={kk}");
+            let bm = &phases[3 * kk + 2];
+            assert_eq!(bm.kind, PhaseKind::Bmod);
+            assert_eq!(bm.lanes[0].tasks.len(), counts.bmod[kk], "bmod kk={kk}");
+        }
+    }
+
+    #[test]
+    fn sparselu_flops_scale_with_block_size() {
+        let f8: u64 = Workload::sparselu(8, 8).map(|p| p.total_flops()).sum();
+        let f16: u64 = Workload::sparselu(8, 16).map(|p| p.total_flops()).sum();
+        // Same structure, 8× flops per block (bs³) up to the integer
+        // truncation in lu0's 2b³/3.
+        let ratio = f16 as f64 / f8 as f64;
+        assert!((ratio - 8.0).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn iter_indices_fit_domain() {
+        for phase in Workload::sparselu(12, 2) {
+            for lane in &phase.lanes {
+                for t in &lane.tasks {
+                    assert!(t.iter < lane.total_iters);
+                }
+                // strictly increasing iter order (producer scan order)
+                for w in lane.tasks.windows(2) {
+                    assert!(w[0].iter < w[1].iter);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bmod_reads_three_blocks() {
+        let phases: Vec<Phase> = Workload::sparselu(6, 4).collect();
+        let bm = &phases[2];
+        for t in &bm.lanes[0].tasks {
+            assert_eq!(t.n_reads, 3);
+            assert_ne!(t.write, NO_BLOCK);
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Minimal command-line parsing (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and a generated usage
+//! string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option specification for usage/validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    /// `known_flags` lists option names that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(format!("option --{body} needs a value"));
+                    }
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    return Err(format!("option --{body} needs a value"));
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed getter with default.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("invalid value for --{name}: {v:?}")),
+        }
+    }
+
+    /// Comma-separated list getter, e.g. `--nb 50,100,200`.
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+    {
+        match self.opts.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|_| format!("bad element {p:?} in --{name}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE:\n  {program} [OPTIONS]\n\nOPTIONS:\n");
+    for o in specs {
+        let head = if o.is_flag {
+            format!("  --{}", o.name)
+        } else {
+            format!("  --{} <v>", o.name)
+        };
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("{head:<26}{}{def}\n", o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--nb", "50", "--bs=8", "run"], &[]);
+        assert_eq!(a.get("nb"), Some("50"));
+        assert_eq!(a.get("bs"), Some("8"));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn flags_and_typed() {
+        let a = parse(&["--verbose", "--threads", "63"], &["verbose"]);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        assert_eq!(a.get_parse::<usize>("threads", 1).unwrap(), 63);
+        assert_eq!(a.get_parse::<usize>("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_getter() {
+        let a = parse(&["--nb", "50,100,200"], &[]);
+        assert_eq!(
+            a.get_list::<usize>("nb", &[1]).unwrap(),
+            vec![50, 100, 200]
+        );
+        assert_eq!(a.get_list::<usize>("bs", &[8, 16]).unwrap(), vec![8, 16]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(
+            ["--x".to_string(), "--y".to_string(), "1".to_string()],
+            &[]
+        )
+        .is_err());
+        let a = parse(&["--n", "abc"], &[]);
+        assert!(a.get_parse::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "gprm",
+            "about",
+            &[OptSpec { name: "nb", help: "blocks", default: Some("50"), is_flag: false }],
+        );
+        assert!(u.contains("--nb"));
+        assert!(u.contains("default: 50"));
+    }
+}

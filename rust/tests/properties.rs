@@ -1,0 +1,326 @@
+//! Property-based tests (testkit) over the invariants DESIGN.md §6
+//! calls out: worksharing coverage/disjointness laws, schedule
+//! equivalences, compiler task-description laws, simulator
+//! conservation, and JSON round-trips.
+
+use gprm::coordinator::worksharing::{
+    contiguous_range, par_for, par_for_contiguous, par_for_indices,
+    par_nested_for, par_nested_for_contiguous,
+};
+use gprm::omp::parallel_for::{static_range, DynamicSched};
+use gprm::testkit::{check, Gen, Pair, Triple, UsizeRange};
+use gprm::tilesim::sim_gprm::contiguous_index;
+use gprm::util::json::Json;
+use gprm::util::prng::SplitMix64;
+use std::collections::BTreeSet;
+
+#[test]
+fn prop_par_for_exact_disjoint_cover() {
+    check(
+        "par_for-cover",
+        300,
+        &Triple(UsizeRange(0, 40), UsizeRange(0, 300), UsizeRange(1, 80)),
+        |&(start, len, cl)| {
+            let size = start + len;
+            let mut seen = BTreeSet::new();
+            for ind in 0..cl {
+                par_for(start, size, ind, cl, |i| {
+                    if !seen.insert(i) {
+                        panic!("duplicate {i}");
+                    }
+                });
+            }
+            if seen.len() != len {
+                return Err(format!(
+                    "covered {} of {len} (start={start}, cl={cl})",
+                    seen.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_par_for_matches_closed_form() {
+    check(
+        "par_for-closed-form",
+        300,
+        &Triple(UsizeRange(0, 30), UsizeRange(0, 200), UsizeRange(1, 70)),
+        |&(start, len, cl)| {
+            let size = start + len;
+            for ind in 0..cl {
+                let mut a = Vec::new();
+                par_for(start, size, ind, cl, |i| a.push(i));
+                let b: Vec<usize> =
+                    par_for_indices(start, size, ind, cl).collect();
+                if a != b {
+                    return Err(format!("ind={ind}: {a:?} != {b:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_nested_equals_flattened() {
+    check(
+        "nested-flattened",
+        200,
+        &Triple(UsizeRange(1, 20), UsizeRange(1, 20), UsizeRange(1, 40)),
+        |&(rows, cols, cl)| {
+            for ind in 0..cl {
+                let mut nested = Vec::new();
+                par_nested_for(0, rows, 0, cols, ind, cl, |i, j| {
+                    nested.push(i * cols + j)
+                });
+                let mut flat = Vec::new();
+                par_for(0, rows * cols, ind, cl, |g| flat.push(g));
+                if nested != flat {
+                    return Err(format!("ind={ind}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_contiguous_balance_law() {
+    // Chunk sizes differ by ≤1, are non-increasing, and concatenate to
+    // the full range (Fig 1b).
+    check(
+        "contiguous-balance",
+        300,
+        &Triple(UsizeRange(0, 50), UsizeRange(0, 400), UsizeRange(1, 80)),
+        |&(start, len, cl)| {
+            let size = start + len;
+            let mut expected_lo = start;
+            let mut prev = usize::MAX;
+            for ind in 0..cl {
+                let (lo, hi) = contiguous_range(start, size, ind, cl);
+                if lo != expected_lo {
+                    return Err(format!("gap at ind={ind}"));
+                }
+                let n = hi - lo;
+                if n > prev {
+                    return Err("chunk sizes increased".into());
+                }
+                prev = n;
+                expected_lo = hi;
+            }
+            if expected_lo != size {
+                return Err("chunks do not cover the range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_contiguous_index_agrees_with_range() {
+    check(
+        "contiguous-index",
+        200,
+        &Pair(UsizeRange(1, 300), UsizeRange(1, 80)),
+        |&(total, cl)| {
+            for ind in 0..cl {
+                let (lo, hi) = contiguous_range(0, total, ind, cl);
+                for i in lo..hi {
+                    let got = contiguous_index(i as u64, total as u64, cl);
+                    if got != ind {
+                        return Err(format!("iter {i}: {got} != {ind}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_nested_contiguous_cover() {
+    check(
+        "nested-contiguous-cover",
+        150,
+        &Triple(UsizeRange(1, 15), UsizeRange(1, 15), UsizeRange(1, 40)),
+        |&(rows, cols, cl)| {
+            let mut seen = BTreeSet::new();
+            for ind in 0..cl {
+                par_nested_for_contiguous(0, rows, 0, cols, ind, cl, |i, j| {
+                    seen.insert((i, j));
+                });
+            }
+            if seen.len() != rows * cols {
+                return Err(format!("{} of {}", seen.len(), rows * cols));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_omp_static_vs_gprm_contiguous_identical() {
+    // libgomp static partitioning == GPRM contiguous (both: m/n + one
+    // extra for the foremost rem threads).
+    check(
+        "static-eq-contiguous",
+        300,
+        &Triple(UsizeRange(0, 40), UsizeRange(0, 300), UsizeRange(1, 64)),
+        |&(start, len, n)| {
+            let end = start + len;
+            for tid in 0..n {
+                let a = static_range(start, end, tid, n);
+                let b = contiguous_range(start, end, tid, n);
+                if a != b {
+                    return Err(format!("tid={tid}: {a:?} != {b:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dynamic_sched_covers_any_chunk() {
+    check(
+        "dynamic-cover",
+        150,
+        &Triple(UsizeRange(0, 200), UsizeRange(1, 20), UsizeRange(0, 30)),
+        |&(len, chunk, start)| {
+            let s = DynamicSched::new(start, start + len, chunk);
+            let mut seen = BTreeSet::new();
+            while let Some((lo, hi)) = s.next_chunk() {
+                for i in lo..hi {
+                    if !seen.insert(i) {
+                        return Err(format!("dup {i}"));
+                    }
+                }
+            }
+            if seen.len() != len {
+                return Err(format!("{} of {len}", seen.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_worksharing_starvation_boundary() {
+    // par_for starves exactly max(0, cl - domain) indices;
+    // par_nested_for starves exactly max(0, cl - rows*cols).
+    check(
+        "starvation-count",
+        200,
+        &Triple(UsizeRange(0, 12), UsizeRange(0, 12), UsizeRange(1, 40)),
+        |&(rows, cols, cl)| {
+            let mut starved = 0;
+            for ind in 0..cl {
+                let mut n = 0;
+                par_nested_for(0, rows, 0, cols, ind, cl, |_, _| n += 1);
+                if n == 0 {
+                    starved += 1;
+                }
+            }
+            let expect = cl.saturating_sub(rows * cols);
+            if starved != expect {
+                return Err(format!("starved {starved}, expect {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_structures() {
+    // Build random JSON values from a seeded generator, round-trip
+    // through text.
+    struct JsonGen;
+    impl Gen for JsonGen {
+        type Value = Json;
+        fn generate(&self, rng: &mut SplitMix64) -> Json {
+            fn go(rng: &mut SplitMix64, depth: usize) -> Json {
+                match if depth > 2 { rng.range(0, 4) } else { rng.range(0, 6) } {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.chance(0.5)),
+                    2 => Json::Num((rng.range(0, 100000) as f64) / 8.0),
+                    3 => Json::Str(format!("s{}-\"q\"\n", rng.range(0, 1000))),
+                    4 => Json::Arr(
+                        (0..rng.range(0, 4)).map(|_| go(rng, depth + 1)).collect(),
+                    ),
+                    _ => Json::Obj(
+                        (0..rng.range(0, 4))
+                            .map(|i| (format!("k{i}"), go(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            go(rng, 0)
+        }
+    }
+    check("json-roundtrip", 300, &JsonGen, |v| {
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("parse: {e}"))?;
+        if &back != v {
+            return Err(format!("{back:?} != {v:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_work_conservation_matmul() {
+    use gprm::tilesim::{GprmSim, Workload};
+    check(
+        "sim-conservation",
+        40,
+        &Triple(UsizeRange(1, 2000), UsizeRange(1, 60), UsizeRange(1, 128)),
+        |&(m, n, cl)| {
+            let sim = GprmSim::tilepro(cl);
+            let r = sim.run(
+                std::iter::once(Workload::matmul_jobs(m, n, n, 1)),
+                0,
+                0,
+            );
+            if r.tasks != m as u64 {
+                return Err(format!("{} tasks != {m}", r.tasks));
+            }
+            let busy: u64 = r.busy.iter().sum();
+            let expect = m as u64 * sim.cost.work(2 * (n * n) as u64);
+            if busy != expect {
+                return Err(format!("busy {busy} != {expect}"));
+            }
+            if r.cycles < busy / 63 {
+                return Err("makespan below work bound".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_genmat_structure_deterministic_and_banded() {
+    use gprm::linalg::genmat::{bots_null_entry, genmat_pattern};
+    check("genmat-band", 100, &UsizeRange(1, 120), |&nb| {
+        let p = genmat_pattern(nb);
+        for i in 0..nb {
+            // Tridiagonal band always allocated.
+            if !p[i * nb + i] {
+                return Err(format!("diag {i} empty"));
+            }
+            if i + 1 < nb && (!p[i * nb + i + 1] || !p[(i + 1) * nb + i]) {
+                return Err(format!("band {i} empty"));
+            }
+        }
+        // Pattern symmetric in structure rule.
+        for i in 0..nb.min(30) {
+            for j in 0..nb.min(30) {
+                if bots_null_entry(i, j) != (!p[i * nb + j]) {
+                    return Err(format!("rule mismatch at ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

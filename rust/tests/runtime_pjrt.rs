@@ -1,0 +1,167 @@
+//! Cross-layer integration: the AOT-compiled JAX/Pallas artifacts,
+//! executed through PJRT from rust, must agree with the pure-rust
+//! `linalg` kernels on identical inputs.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees
+//! it).
+
+use gprm::linalg::dense::DenseMatrix;
+use gprm::linalg::lu::{bdiv, bmod, fwd, lu0};
+use gprm::runtime::{default_artifact_dir, BlockEngine, EngineService};
+
+fn have_artifacts() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+fn block(bs: usize, seed: u32) -> Vec<f32> {
+    DenseMatrix::bots_random(bs, bs, seed).as_slice().to_vec()
+}
+
+fn dominant(bs: usize, seed: u32) -> Vec<f32> {
+    let mut b = block(bs, seed);
+    for i in 0..bs {
+        b[i * bs + i] += bs as f32;
+    }
+    b
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_block_ops_match_rust_kernels() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut eng = BlockEngine::new(default_artifact_dir()).unwrap();
+    println!("platform: {}", eng.platform());
+    for &bs in &[8usize, 16, 40, 80] {
+        // lu0
+        let mut d_pjrt = dominant(bs, 1 + bs as u32);
+        let mut d_rust = d_pjrt.clone();
+        eng.lu0(bs, &mut d_pjrt).unwrap();
+        lu0(&mut d_rust, bs);
+        close(&d_pjrt, &d_rust, 1e-3, &format!("lu0 bs={bs}"));
+
+        // fwd
+        let mut c_pjrt = block(bs, 2 + bs as u32);
+        let mut c_rust = c_pjrt.clone();
+        eng.fwd(bs, &d_rust, &mut c_pjrt).unwrap();
+        fwd(&d_rust, &mut c_rust, bs);
+        close(&c_pjrt, &c_rust, 1e-3, &format!("fwd bs={bs}"));
+
+        // bdiv
+        let mut r_pjrt = block(bs, 3 + bs as u32);
+        let mut r_rust = r_pjrt.clone();
+        eng.bdiv(bs, &d_rust, &mut r_pjrt).unwrap();
+        bdiv(&d_rust, &mut r_rust, bs);
+        close(&r_pjrt, &r_rust, 1e-3, &format!("bdiv bs={bs}"));
+
+        // bmod
+        let row = block(bs, 4 + bs as u32);
+        let col = block(bs, 5 + bs as u32);
+        let mut i_pjrt = block(bs, 6 + bs as u32);
+        let mut i_rust = i_pjrt.clone();
+        eng.bmod(bs, &row, &col, &mut i_pjrt).unwrap();
+        bmod(&row, &col, &mut i_rust, bs);
+        close(&i_pjrt, &i_rust, 1e-3, &format!("bmod bs={bs}"));
+    }
+    // Executables are cached, not recompiled per call.
+    let n = eng.compiled_count();
+    let mut d = dominant(8, 99);
+    eng.lu0(8, &mut d).unwrap();
+    assert_eq!(eng.compiled_count(), n);
+}
+
+#[test]
+fn pjrt_lustep_fused_matches_composition() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = BlockEngine::new(default_artifact_dir()).unwrap();
+    let bs = 16;
+    let diag = dominant(bs, 10);
+    let row = block(bs, 11);
+    let col = block(bs, 12);
+    let inner = block(bs, 13);
+    let (d, r, c, i) = eng.lustep(bs, &diag, &row, &col, &inner).unwrap();
+    // Compose with the rust kernels.
+    let mut d2 = diag.clone();
+    lu0(&mut d2, bs);
+    let mut r2 = row.clone();
+    fwd(&d2, &mut r2, bs);
+    let mut c2 = col.clone();
+    bdiv(&d2, &mut c2, bs);
+    let mut i2 = inner.clone();
+    bmod(&c2, &r2, &mut i2, bs);
+    close(&d, &d2, 1e-3, "lustep.d");
+    close(&r, &r2, 1e-3, "lustep.r");
+    close(&c, &c2, 1e-3, "lustep.c");
+    close(&i, &i2, 1e-3, "lustep.i");
+}
+
+#[test]
+fn pjrt_matmul_matches_dense() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = BlockEngine::new(default_artifact_dir()).unwrap();
+    let n = 64;
+    let a = DenseMatrix::bots_random(n, n, 20);
+    let b = DenseMatrix::bots_random(n, n, 21);
+    let c = eng.matmul(n, a.as_slice(), b.as_slice()).unwrap();
+    let want = a.matmul_opt(&b);
+    close(&c, want.as_slice(), 1e-3, "matmul n=64");
+}
+
+#[test]
+fn engine_service_is_multithread_callable() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = std::sync::Arc::new(
+        EngineService::start(default_artifact_dir()).unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..4u32 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let bs = 8;
+            let row = block(bs, 30 + t);
+            let col = block(bs, 40 + t);
+            let mut inner = block(bs, 50 + t);
+            let mut want = inner.clone();
+            svc.bmod(bs, &row, &col, &mut inner).unwrap();
+            bmod(&row, &col, &mut want, bs);
+            close(&inner, &want, 1e-3, "service bmod");
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut eng = BlockEngine::new(default_artifact_dir()).unwrap();
+    // Wrong arity.
+    assert!(eng.exec("bmod_bs8", 8, &[&[0.0; 64][..]]).is_err());
+    // Wrong element count.
+    let bad = vec![0.0f32; 9];
+    assert!(eng
+        .exec("bmod_bs8", 8, &[&bad, &bad, &bad])
+        .is_err());
+    // Unknown artifact.
+    assert!(eng.exec("nope_bs8", 8, &[]).is_err());
+}
