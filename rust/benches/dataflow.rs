@@ -1,0 +1,59 @@
+//! Bench: dataflow (DAG) scheduling vs the paper's phase-barrier
+//! drivers — simulator makespans on the Fig-6-shaped workload, plus
+//! host wall-clock of the real SparseLU drivers.
+//!
+//! `cargo bench --bench dataflow`
+
+use gprm::apps::sparselu::{
+    sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuRunConfig,
+};
+use gprm::bench::Bench;
+use gprm::coordinator::GprmRuntime;
+use gprm::harness::{run_experiment, Scale};
+use gprm::linalg::genmat::genmat;
+use gprm::omp::OmpRuntime;
+
+fn main() {
+    // Simulator: the dataflow experiment at the acceptance scale
+    // (NB=32 is cheap enough to always run unscaled).
+    let report = run_experiment("dataflow", Scale(1.0));
+    println!("{}", report.render());
+    assert!(report.all_pass(), "dataflow shape checks failed");
+
+    // Host wall-clock: phase-barrier vs dataflow on the same matrix.
+    let threads = 8;
+    let b = Bench::quick();
+    let a0 = genmat(25, 16);
+
+    let omp = OmpRuntime::new(threads);
+    let r = b.measure_once("host sparselu omp (barriers) 25x25 bs=16", || {
+        let mut a = a0.deep_clone();
+        sparselu_omp(&omp, &mut a, &LuRunConfig::default());
+        gprm::bench::black_box(a.allocated_blocks());
+    });
+    println!("{}", r.report());
+
+    let r = b.measure_once("host sparselu dataflow-omp  25x25 bs=16", || {
+        let mut a = a0.deep_clone();
+        sparselu_dataflow(&DataflowRt::Omp(&omp), &mut a, &LuRunConfig::default());
+        gprm::bench::black_box(a.allocated_blocks());
+    });
+    println!("{}", r.report());
+    omp.shutdown();
+
+    let gprm = GprmRuntime::with_tiles(threads);
+    let r = b.measure_once("host sparselu gprm (barriers) 25x25 bs=16", || {
+        let mut a = a0.deep_clone();
+        sparselu_gprm(&gprm, &mut a, &LuRunConfig::default());
+        gprm::bench::black_box(a.allocated_blocks());
+    });
+    println!("{}", r.report());
+
+    let r = b.measure_once("host sparselu dataflow-gprm 25x25 bs=16", || {
+        let mut a = a0.deep_clone();
+        sparselu_dataflow(&DataflowRt::Gprm(&gprm), &mut a, &LuRunConfig::default());
+        gprm::bench::black_box(a.allocated_blocks());
+    });
+    println!("{}", r.report());
+    gprm.shutdown();
+}

@@ -5,14 +5,16 @@
 //! * [`matmul`] — the §V micro-benchmark: `C = A·B` as `m` row-jobs,
 //!   under the four approaches of Fig 2 (+ cutoff variant of Fig 4).
 //! * [`sparselu`] — the §VI SparseLU factorisation: sequential
-//!   (BOTS reference), OpenMP tasking (Fig 5 port), and GPRM hybrid
-//!   worksharing-tasking (Listings 5–6 port), optionally executing
-//!   block kernels through the PJRT artifacts.
+//!   (BOTS reference), OpenMP tasking (Fig 5 port), GPRM hybrid
+//!   worksharing-tasking (Listings 5–6 port), and the barrier-free
+//!   dataflow driver over the [`crate::sched`] DAG executor,
+//!   optionally executing block kernels through the PJRT artifacts.
 
 pub mod matmul;
 pub mod sparselu;
 
 pub use matmul::{run_matmul, MatmulApproach};
 pub use sparselu::{
-    sparselu_gprm, sparselu_omp, LuBackend, LuRunConfig,
+    sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuBackend,
+    LuRunConfig,
 };

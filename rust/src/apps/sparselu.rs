@@ -1,6 +1,6 @@
 //! SparseLU factorisation on the real runtimes (paper §VI).
 //!
-//! Three implementations over the same [`BlockedSparseMatrix`]:
+//! Four implementations over the same [`BlockedSparseMatrix`]:
 //!
 //! * sequential — `linalg::lu::sparselu_seq` (BOTS reference);
 //! * OpenMP tasking — a faithful port of the paper's Fig 5: one
@@ -10,7 +10,11 @@
 //!   per elimination step, `CL/2 + CL/2` worksharing task instances
 //!   run `par_for` over the fwd/bdiv domains and `CL` instances run
 //!   `par_nested_for` (or the contiguous variants) over the bmod
-//!   domain.
+//!   domain;
+//! * dataflow — [`sparselu_dataflow`]: no phase barriers at all; the
+//!   [`crate::sched`] DAG executor runs each block kernel the moment
+//!   its data dependencies are satisfied, on either host runtime
+//!   (see DIVERGENCES.md for the departure from the paper).
 //!
 //! Block kernels execute either in-process (pure rust, [`LuBackend::Rust`])
 //! or through the AOT-compiled JAX/Pallas artifacts via PJRT
@@ -18,9 +22,10 @@
 
 use crate::coordinator::{worksharing, GprmRuntime};
 use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
-use crate::linalg::lu::{bdiv, bmod, fwd, lu0};
+use crate::linalg::lu::{bdiv, bmod, fwd, lu0, BlockOp};
 use crate::omp::OmpRuntime;
 use crate::runtime::EngineService;
+use crate::sched::{execute_gprm, execute_omp, ExecStats, TaskGraph, TaskId};
 
 /// How block kernels execute.
 pub enum LuBackend<'e> {
@@ -266,12 +271,92 @@ pub fn sparselu_gprm(
     *a = shared.into_inner();
 }
 
+/// Which host runtime hosts the dataflow executor's workers.
+pub enum DataflowRt<'r> {
+    /// OpenMP-style team: every team thread runs the worker loop.
+    Omp(&'r OmpRuntime),
+    /// GPRM machine: `CL` coordinator tasks map ready tasks onto tiles.
+    Gprm(&'r GprmRuntime),
+}
+
+/// Dataflow (DAG-scheduled) SparseLU — no phase barriers; every block
+/// kernel fires as soon as its dependencies are final. Factorises `a`
+/// in place and returns the executor's statistics (event log included,
+/// so callers can audit the schedule).
+///
+/// Results are bit-identical (f32) to [`sparselu_seq`]: the DAG's
+/// RAW/WAW/WAR chains reproduce the sequential per-block operation
+/// order, only the inter-block interleaving changes.
+///
+/// [`sparselu_seq`]: crate::linalg::lu::sparselu_seq
+pub fn sparselu_dataflow(
+    rt: &DataflowRt,
+    a: &mut BlockedSparseMatrix,
+    cfg: &LuRunConfig,
+) -> ExecStats {
+    let nb = a.nb();
+    let bs = a.bs();
+    let graph = TaskGraph::sparselu(&a.pattern(), nb);
+    let shared = SharedBlocked::new(std::mem::replace(
+        a,
+        BlockedSparseMatrix::empty(1, 1),
+    ));
+    let sh = &shared;
+    let backend = &cfg.backend;
+    let run = |id: TaskId| {
+        let t = *graph.task(id);
+        // SAFETY: the task graph chains every touch of a given block
+        // (RAW/WAW/WAR), so this task has exclusive access to the
+        // block it writes and read-only access to blocks finalised by
+        // its predecessors. Fill-in allocation mutates only the
+        // written block's own slot.
+        let m = unsafe { sh.get_mut() };
+        match t.op {
+            BlockOp::Lu0 => {
+                backend.lu0(m.block_mut(t.kk, t.kk).unwrap(), bs);
+            }
+            BlockOp::Fwd => {
+                let diag = m.block(t.kk, t.kk).unwrap().as_ptr();
+                let diag =
+                    unsafe { std::slice::from_raw_parts(diag, bs * bs) };
+                backend.fwd(diag, m.block_mut(t.kk, t.jj).unwrap(), bs);
+            }
+            BlockOp::Bdiv => {
+                let diag = m.block(t.kk, t.kk).unwrap().as_ptr();
+                let diag =
+                    unsafe { std::slice::from_raw_parts(diag, bs * bs) };
+                backend.bdiv(diag, m.block_mut(t.ii, t.kk).unwrap(), bs);
+            }
+            BlockOp::Bmod => {
+                let row = m.block(t.ii, t.kk).unwrap().as_ptr();
+                let col = m.block(t.kk, t.jj).unwrap().as_ptr();
+                let (row, col) = unsafe {
+                    (
+                        std::slice::from_raw_parts(row, bs * bs),
+                        std::slice::from_raw_parts(col, bs * bs),
+                    )
+                };
+                let inner = m.allocate_clean_block(t.ii, t.jj);
+                backend.bmod(row, col, inner, bs);
+            }
+        }
+    };
+    let stats = match rt {
+        DataflowRt::Omp(omp) => execute_omp(omp, &graph, run),
+        DataflowRt::Gprm(gprm) => execute_gprm(gprm, &graph, run),
+    }
+    .expect("dataflow sparselu failed");
+    *a = shared.into_inner();
+    stats
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::genmat::genmat;
     use crate::linalg::lu::sparselu_seq;
     use crate::linalg::verify::{assert_blocked_close, lu_residual_sparse};
+    use crate::sched::check_event_ordering;
 
     fn check_against_seq(factorise: impl FnOnce(&mut BlockedSparseMatrix)) {
         let nb = 10;
@@ -326,6 +411,58 @@ mod tests {
         check_against_seq(|a| {
             sparselu_gprm(&rt, a, &LuRunConfig::default())
         });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_omp_matches_sequential() {
+        let rt = OmpRuntime::new(4);
+        check_against_seq(|a| {
+            sparselu_dataflow(
+                &DataflowRt::Omp(&rt),
+                a,
+                &LuRunConfig::default(),
+            );
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_gprm_matches_sequential() {
+        let rt = GprmRuntime::with_tiles(6);
+        check_against_seq(|a| {
+            sparselu_dataflow(
+                &DataflowRt::Gprm(&rt),
+                a,
+                &LuRunConfig::default(),
+            );
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_single_worker_degenerate() {
+        let rt = OmpRuntime::new(1);
+        check_against_seq(|a| {
+            sparselu_dataflow(
+                &DataflowRt::Omp(&rt),
+                a,
+                &LuRunConfig::default(),
+            );
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_schedule_is_edge_valid() {
+        let rt = OmpRuntime::new(8);
+        let nb = 10;
+        let mut a = genmat(nb, 4);
+        let graph = TaskGraph::sparselu(&a.pattern(), nb);
+        let stats =
+            sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &LuRunConfig::default());
+        assert_eq!(stats.executed, graph.len());
+        check_event_ordering(&graph, &stats.events).unwrap();
         rt.shutdown();
     }
 

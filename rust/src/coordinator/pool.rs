@@ -102,18 +102,32 @@ impl Drop for Pool {
 
 /// Pin the calling thread to one core (Linux `sched_setaffinity`).
 /// No-op elsewhere.
+///
+/// Hand-rolled FFI: the `libc` crate is not in the offline crate set,
+/// and std already links the platform libc, so declaring the symbol
+/// directly is enough. `cpu_set_t` is a 1024-bit mask on Linux.
 #[cfg(target_os = "linux")]
 pub fn pin_to_core(core: usize) {
+    #[repr(C)]
+    struct CpuSetT {
+        bits: [u64; 16], // 1024 bits
+    }
+    extern "C" {
+        fn sched_setaffinity(
+            pid: i32,
+            cpusetsize: usize,
+            mask: *const CpuSetT,
+        ) -> i32;
+    }
+    if core >= 1024 {
+        return;
+    }
+    let mut set = CpuSetT { bits: [0; 16] };
+    set.bits[core / 64] |= 1u64 << (core % 64);
+    // 0 = current thread. Failure (e.g. restricted cpuset) is
+    // non-fatal: pinning is a performance hint.
     unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_SET(core, &mut set);
-        // 0 = current thread. Failure (e.g. restricted cpuset) is
-        // non-fatal: pinning is a performance hint.
-        libc::sched_setaffinity(
-            0,
-            std::mem::size_of::<libc::cpu_set_t>(),
-            &set,
-        );
+        sched_setaffinity(0, std::mem::size_of::<CpuSetT>(), &set);
     }
 }
 

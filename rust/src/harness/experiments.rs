@@ -30,9 +30,12 @@ impl Scale {
 }
 
 /// All experiment ids in paper order, plus the cost-model ablation
-/// (not a paper figure; attributes the OpenMP collapse to mechanisms).
-pub const ALL_EXPERIMENTS: &[&str] =
-    &["fig2", "fig3", "fig4", "fig6", "table1", "fig7", "ablation"];
+/// (not a paper figure; attributes the OpenMP collapse to mechanisms)
+/// and the dataflow-vs-phase-barrier comparison (not a paper figure;
+/// quantifies what Listings 5–6 pay for their barriers).
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig6", "table1", "fig7", "ablation", "dataflow",
+];
 
 /// Dispatch by id.
 pub fn run_experiment(id: &str, scale: Scale) -> ExperimentReport {
@@ -44,6 +47,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> ExperimentReport {
         "table1" => table1(scale),
         "fig7" => fig7(scale),
         "ablation" => ablation(scale),
+        "dataflow" => dataflow(scale),
         other => panic!("unknown experiment {other:?} (want one of {ALL_EXPERIMENTS:?})"),
     }
 }
@@ -547,6 +551,64 @@ fn ablation(scale: Scale) -> ExperimentReport {
     ExperimentReport { id: "ablation".into(), tables: vec![t], checks }
 }
 
+// --- Dataflow: DAG scheduling vs the paper's phase barriers -------------
+
+fn dataflow(scale: Scale) -> ExperimentReport {
+    use crate::tilesim::DataflowSim;
+    // The acceptance workload: Fig-6-shaped SparseLU with NB=32,
+    // BS=16 (scaled down by NB only, like fig6, so per-task
+    // granularity is preserved).
+    let nb = scale.nb(32);
+    let bs = 16usize;
+    let tile_counts = [4usize, 8, 16, 32, 63];
+    let phased = |tiles: usize, assign: GprmAssign| -> u64 {
+        let mut sim = GprmSim::tilepro(tiles);
+        sim.n_tiles = tiles;
+        sim.assign = assign;
+        sim.run(Workload::sparselu(nb, bs), nb * nb, (bs * bs * 4) as u64)
+            .cycles
+    };
+    let mut t = Table::new(
+        &format!(
+            "Dataflow — SparseLU NB={nb}, BS={bs}: phase-barrier vs DAG makespan"
+        ),
+        &["tiles", "phase rr", "phase contiguous", "dataflow DAG", "DAG gain"],
+    );
+    let mut gains = Vec::new();
+    for &tiles in &tile_counts {
+        let rr = phased(tiles, GprmAssign::RoundRobin);
+        let ct = phased(tiles, GprmAssign::Contiguous);
+        let dag = DataflowSim::tilepro(tiles).run_sparselu(nb, bs).cycles;
+        let best_phase = rr.min(ct);
+        gains.push((tiles, best_phase as f64 / dag as f64));
+        t.row(vec![
+            tiles.to_string(),
+            vsec(rr),
+            vsec(ct),
+            vsec(dag),
+            spd(best_phase as f64 / dag as f64),
+        ]);
+    }
+    let at_scale: Vec<f64> = gains
+        .iter()
+        .filter(|(tiles, _)| *tiles >= 16)
+        .map(|&(_, g)| g)
+        .collect();
+    let checks = vec![
+        ShapeCheck::new(
+            "DAG beats the best phase-barrier schedule at every tile count >= 16",
+            at_scale.iter().all(|&g| g > 1.0),
+            format!("gains {at_scale:.2?}"),
+        ),
+        ShapeCheck::new(
+            "DAG never loses even on few tiles (barriers only cost, never help)",
+            gains.iter().all(|&(_, g)| g > 0.95),
+            format!("{gains:?}"),
+        ),
+    ];
+    ExperimentReport { id: "dataflow".into(), tables: vec![t], checks }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -592,6 +654,19 @@ mod tests {
     #[test]
     fn ablation_shape_holds_scaled() {
         let r = ablation(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn dataflow_shape_holds_scaled() {
+        let r = dataflow(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn dataflow_shape_holds_full_acceptance_config() {
+        // NB=32, BS=16 — the unscaled acceptance workload.
+        let r = dataflow(Scale(1.0));
         assert!(r.all_pass(), "{}", r.render());
     }
 

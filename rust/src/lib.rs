@@ -15,10 +15,34 @@
 //!   generator, and the lu0/fwd/bdiv/bmod block kernels.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   block kernels in `artifacts/`.
+//! * [`sched`] — dataflow (DAG) task scheduling: a `TaskGraph` built
+//!   from per-task read/write block sets and a ready-queue executor
+//!   running on both host runtimes.
 //! * [`apps`] — the paper's two workloads (SparseLU, MatMul) on every
 //!   runtime.
 //! * [`bench`] / [`harness`] — measurement harness and the per-figure
 //!   experiment drivers.
+//!
+//! # Dataflow scheduling
+//!
+//! The paper's SparseLU drivers are *level-synchronous*: each
+//! elimination step runs `lu0`, then a barrier, then all `fwd`/`bdiv`
+//! tasks, then a barrier, then all `bmod` tasks (Fig 5, Listings 5–6).
+//! Whenever a phase has fewer tasks than cores — always true near the
+//! end of the factorisation, and for *every* `fwd`/`bdiv` phase of a
+//! sparse matrix — tiles idle at the barrier.
+//!
+//! [`sched`] replaces the barriers with the true dependence DAG:
+//! [`sched::TaskGraph::sparselu`] records each block task's read/write
+//! sets and derives RAW/WAW/WAR edges, and the ready-queue executor
+//! ([`sched::execute_omp`] / [`sched::execute_gprm`]) runs any task
+//! the moment its predecessors finish. Because edges reproduce the
+//! sequential per-block operation order, results stay bit-identical
+//! (f32) to [`linalg::lu::sparselu_seq`]. The fourth SparseLU
+//! implementation (third parallel driver),
+//! [`apps::sparselu::sparselu_dataflow`], and the simulator strategy
+//! [`tilesim::DataflowSim`] both schedule through this subsystem; see
+//! DIVERGENCES.md for where this deliberately departs from the paper.
 pub mod util;
 pub mod testkit;
 pub mod linalg;
@@ -26,6 +50,7 @@ pub mod coordinator;
 pub mod omp;
 pub mod tilesim;
 pub mod runtime;
+pub mod sched;
 pub mod apps;
 pub mod bench;
 pub mod harness;

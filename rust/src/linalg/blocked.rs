@@ -153,9 +153,18 @@ pub struct SharedBlocked {
     inner: std::cell::UnsafeCell<BlockedSparseMatrix>,
 }
 
-// SAFETY: see struct docs — phase structure guarantees data-race
-// freedom; each phase's tasks write disjoint blocks and synchronise
-// with a barrier (taskwait / GPRM seq) before the next phase reads.
+// SAFETY: see struct docs — two schedules uphold data-race freedom:
+// * phase drivers: each phase's tasks write disjoint blocks and
+//   synchronise with a barrier (taskwait / GPRM seq) before the next
+//   phase reads;
+// * the dataflow driver (`apps::sparselu::sparselu_dataflow`): the
+//   `sched::TaskGraph` chains *every* pair of tasks touching the same
+//   block (RAW/WAW/WAR edges), and the executor's scoreboard mutex
+//   (claim after all predecessors completed under the same lock)
+//   establishes the happens-before between a block's writer and its
+//   readers. If the executor ever drops that mutex for lock-free
+//   claims, it must provide an equivalent release/acquire edge per
+//   dependency or this Sync impl becomes unsound for that caller.
 unsafe impl Sync for SharedBlocked {}
 unsafe impl Send for SharedBlocked {}
 

@@ -11,7 +11,10 @@
 //! * `artifacts` — inspect the AOT artifact manifest / PJRT platform.
 
 use gprm::apps::matmul::{MatmulApproach, MatmulExec};
-use gprm::apps::sparselu::{sparselu_gprm, sparselu_omp, LuBackend, LuRunConfig};
+use gprm::apps::sparselu::{
+    sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuBackend,
+    LuRunConfig,
+};
 use gprm::coordinator::kernel::Registry;
 use gprm::coordinator::{GprmConfig, GprmRuntime};
 use gprm::harness::{run_experiment, Scale, ALL_EXPERIMENTS};
@@ -104,7 +107,7 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
     let specs = [
         OptSpec { name: "nb", help: "blocks per dimension", default: Some("25"), is_flag: false },
         OptSpec { name: "bs", help: "block size", default: Some("16"), is_flag: false },
-        OptSpec { name: "runtime", help: "gprm | omp | seq", default: Some("gprm"), is_flag: false },
+        OptSpec { name: "runtime", help: "gprm | omp | seq | dataflow-omp | dataflow-gprm", default: Some("gprm"), is_flag: false },
         OptSpec { name: "threads", help: "threads / concurrency level", default: Some("8"), is_flag: false },
         OptSpec { name: "contiguous", help: "contiguous worksharing (gprm)", default: None, is_flag: true },
         OptSpec { name: "pjrt", help: "execute block kernels via PJRT artifacts", default: None, is_flag: true },
@@ -180,6 +183,29 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
                 Registry::new(),
             );
             sparselu_gprm(&rt, &mut a, &cfg);
+            rt.shutdown();
+        }
+        "dataflow-omp" => {
+            let rt = OmpRuntime::new(threads);
+            let stats =
+                sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &cfg);
+            println!(
+                "dataflow: {} tasks, peak ready queue {}",
+                stats.executed, stats.peak_ready
+            );
+            rt.shutdown();
+        }
+        "dataflow-gprm" => {
+            let rt = GprmRuntime::new(
+                GprmConfig { n_tiles: threads, pin: args.has_flag("pin") },
+                Registry::new(),
+            );
+            let stats =
+                sparselu_dataflow(&DataflowRt::Gprm(&rt), &mut a, &cfg);
+            println!(
+                "dataflow: {} tasks, peak ready queue {}",
+                stats.executed, stats.peak_ready
+            );
             rt.shutdown();
         }
         other => {

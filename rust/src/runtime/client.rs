@@ -7,7 +7,11 @@
 //! compiled lazily on first use and cached for the life of the engine.
 
 use super::manifest::Manifest;
-use anyhow::{anyhow, bail, Context, Result};
+// The real `xla` crate is not in the offline crate set; the in-repo
+// stub type-checks the same surface and fails fast at runtime (see
+// xla_stub.rs). Swap this alias for `use xla;` once vendored.
+use super::xla_stub as xla;
+use crate::util::anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 
 /// PJRT-backed executor of the AOT block kernels.

@@ -10,7 +10,7 @@
 //! engine's compute.)
 
 use super::client::BlockEngine;
-use anyhow::{anyhow, Result};
+use crate::util::anyhow::{anyhow, Result};
 use std::sync::mpsc;
 use std::sync::Mutex;
 

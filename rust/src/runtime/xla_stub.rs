@@ -1,0 +1,130 @@
+//! Offline stub of the `xla` crate surface [`super::client`] uses.
+//!
+//! The real `xla` crate (PJRT CPU client over the C API) is not in
+//! the offline crate set, so [`super::client`] aliases this module as
+//! `xla`. Every entry point type-checks against the real API but
+//! fails at runtime with an explicit "PJRT unavailable" error, which
+//! surfaces through [`crate::runtime::EngineService::start`] /
+//! `BlockEngine::new` long before any kernel executes. The pure-rust
+//! kernel path ([`crate::apps::sparselu::LuBackend::Rust`]) — the
+//! default everywhere — is unaffected.
+//!
+//! To enable real artifact execution, vendor the `xla` crate and
+//! replace the alias in `client.rs` with `use xla;`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: always "PJRT unavailable".
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: PJRT unavailable — built with the in-repo xla stub \
+         (vendor the `xla` crate to execute AOT artifacts)"
+    )))
+}
+
+/// Stub of `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".into()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Stub of `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Stub of `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub of `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stub of `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Stub of `xla::ElementType` (only the variant the client uses).
+pub enum ElementType {
+    F32,
+}
+
+/// Stub of `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Self> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT unavailable"), "{e}");
+    }
+}

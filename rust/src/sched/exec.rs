@@ -1,0 +1,347 @@
+//! Ready-queue execution of a [`TaskGraph`] on the host runtimes.
+//!
+//! The executor keeps one shared scoreboard: a countdown in-degree per
+//! task and a deque of ready tasks. Workers claim from the front;
+//! completing a task decrements its successors and pushes the newly
+//! ready ones to the *front* (depth-first — the block a worker just
+//! produced is what its successor reads, so the LIFO end is the
+//! cache-friendly, work-stealing-style hot path), while blocked
+//! workers wake through a condvar. There are **no phase barriers**:
+//! a `bmod` of step `kk` can run while `fwd` tasks of step `kk` are
+//! still in flight elsewhere, which is exactly the concurrency the
+//! paper's level-synchronous Listings 5–6 forfeit.
+//!
+//! Two backends drive the same scoreboard:
+//!
+//! * [`execute_omp`] — every team thread of an [`OmpRuntime`] parallel
+//!   region runs the worker loop;
+//! * [`execute_gprm`] — `CL` GPRM coordinator tasks (one per tile via
+//!   [`GprmRuntime::par_invoke`]) each run the worker loop, mapping
+//!   ready tasks onto tiles.
+//!
+//! Every claim and completion is recorded in an event log
+//! ([`ExecStats::events`]) so tests can assert edge ordering.
+
+use super::graph::{TaskGraph, TaskId};
+use crate::coordinator::GprmRuntime;
+use crate::omp::OmpRuntime;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// One scheduler event, in global scoreboard order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Task claimed by a worker (popped from the ready queue).
+    Start(TaskId),
+    /// Task finished; successors (possibly) released.
+    End(TaskId),
+}
+
+/// Outcome of one dataflow execution.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    /// Tasks executed (== graph size on success).
+    pub executed: usize,
+    /// Claim/finish log in scoreboard order.
+    pub events: Vec<Event>,
+    /// Largest ready-queue length observed.
+    pub peak_ready: usize,
+}
+
+/// Check that `events` is a legal schedule of `graph`: each task starts
+/// exactly once, ends exactly once after its start, and starts only
+/// after all its predecessors ended. Used by tests and kept here so
+/// every caller checks the same invariant.
+pub fn check_event_ordering(graph: &TaskGraph, events: &[Event]) -> Result<(), String> {
+    let n = graph.len();
+    let mut started = vec![usize::MAX; n];
+    let mut ended = vec![usize::MAX; n];
+    for (pos, e) in events.iter().enumerate() {
+        match *e {
+            Event::Start(TaskId(t)) => {
+                if started[t] != usize::MAX {
+                    return Err(format!("task {t} started twice"));
+                }
+                started[t] = pos;
+            }
+            Event::End(TaskId(t)) => {
+                if started[t] == usize::MAX {
+                    return Err(format!("task {t} ended before starting"));
+                }
+                if ended[t] != usize::MAX {
+                    return Err(format!("task {t} ended twice"));
+                }
+                ended[t] = pos;
+            }
+        }
+    }
+    for t in 0..n {
+        if started[t] == usize::MAX || ended[t] == usize::MAX {
+            return Err(format!("task {t} never ran"));
+        }
+        for &p in graph.preds(TaskId(t)) {
+            if ended[p] == usize::MAX || ended[p] > started[t] {
+                return Err(format!(
+                    "task {t} started at {} before predecessor {p} ended at {}",
+                    started[t], ended[p]
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+struct Scoreboard {
+    ready: VecDeque<usize>,
+    indegree: Vec<usize>,
+    remaining: usize,
+    events: Vec<Event>,
+    peak_ready: usize,
+    poisoned: bool,
+}
+
+/// The shared ready-queue scoreboard both backends drive.
+struct Dataflow<'g> {
+    graph: &'g TaskGraph,
+    st: Mutex<Scoreboard>,
+    cv: Condvar,
+}
+
+impl<'g> Dataflow<'g> {
+    fn new(graph: &'g TaskGraph) -> Self {
+        let indegree = graph.indegrees();
+        let ready: VecDeque<usize> = graph.roots().into();
+        let n = graph.len();
+        Self {
+            graph,
+            st: Mutex::new(Scoreboard {
+                peak_ready: ready.len(),
+                ready,
+                indegree,
+                remaining: n,
+                events: Vec::with_capacity(2 * n),
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Worker loop: claim → run → release successors, until the graph
+    /// is drained (or a sibling worker poisoned the scoreboard).
+    fn work(&self, run: &(dyn Fn(TaskId) + Sync)) {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if st.remaining == 0 || st.poisoned {
+                return;
+            }
+            let Some(t) = st.ready.pop_front() else {
+                st = self.cv.wait(st).unwrap();
+                continue;
+            };
+            st.events.push(Event::Start(TaskId(t)));
+            drop(st);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run(TaskId(t))
+            }));
+            st = self.st.lock().unwrap();
+            if let Err(e) = r {
+                // Unblock every waiter, then let the runtime's own
+                // panic plumbing report the failure.
+                st.poisoned = true;
+                self.cv.notify_all();
+                drop(st);
+                std::panic::resume_unwind(e);
+            }
+            st.events.push(Event::End(TaskId(t)));
+            st.remaining -= 1;
+            let mut released = 0usize;
+            for &s in self.graph.succs(TaskId(t)) {
+                st.indegree[s] -= 1;
+                if st.indegree[s] == 0 {
+                    // Depth-first: the successor reads what we just
+                    // wrote; front of the deque keeps it hot.
+                    st.ready.push_front(s);
+                    released += 1;
+                }
+            }
+            st.peak_ready = st.peak_ready.max(st.ready.len());
+            // Only wake sleepers when there is something new for them:
+            // fresh ready tasks, or the drain signal. A completion
+            // that releases nothing (fan-in chains late in the
+            // factorisation) would otherwise thundering-herd every
+            // blocked worker through the mutex for no work.
+            if released > 0 || st.remaining == 0 {
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    fn into_stats(self) -> ExecStats {
+        let st = self.st.into_inner().unwrap();
+        ExecStats {
+            executed: self.graph.len() - st.remaining,
+            events: st.events,
+            peak_ready: st.peak_ready,
+        }
+    }
+}
+
+/// Execute `graph` on an OpenMP-style team: every team thread runs the
+/// worker loop inside one parallel region. `run` receives the id of a
+/// claimed task and must perform its kernel; it may be called from any
+/// team thread, one task at a time per thread.
+pub fn execute_omp(
+    rt: &OmpRuntime,
+    graph: &TaskGraph,
+    run: impl Fn(TaskId) + Sync,
+) -> Result<ExecStats, String> {
+    let df = Dataflow::new(graph);
+    let dfr = &df;
+    let runr: &(dyn Fn(TaskId) + Sync) = &run;
+    rt.parallel(|_ctx| dfr.work(runr))?;
+    let stats = df.into_stats();
+    debug_assert_eq!(stats.executed, graph.len());
+    Ok(stats)
+}
+
+/// Execute `graph` on the GPRM machine: `CL` coordinator task
+/// instances (one per tile, wrapping modulo the tile count) each run
+/// the worker loop, pulling ready tasks onto their tile.
+pub fn execute_gprm(
+    rt: &GprmRuntime,
+    graph: &TaskGraph,
+    run: impl Fn(TaskId) + Sync,
+) -> Result<ExecStats, String> {
+    let df = Dataflow::new(graph);
+    let dfr = &df;
+    let runr: &(dyn Fn(TaskId) + Sync) = &run;
+    rt.par_invoke(rt.concurrency_level(), |_ind| dfr.work(runr))?;
+    let stats = df.into_stats();
+    debug_assert_eq!(stats.executed, graph.len());
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::genmat::genmat_pattern;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn lu_graph(nb: usize) -> TaskGraph {
+        TaskGraph::sparselu(&genmat_pattern(nb), nb)
+    }
+
+    #[test]
+    fn omp_executes_every_task_in_edge_order() {
+        let rt = OmpRuntime::new(4);
+        let g = lu_graph(8);
+        let hits = AtomicUsize::new(0);
+        let stats = execute_omp(&rt, &g, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), g.len());
+        assert_eq!(stats.executed, g.len());
+        check_event_ordering(&g, &stats.events).unwrap();
+        rt.shutdown();
+    }
+
+    #[test]
+    fn gprm_executes_every_task_in_edge_order() {
+        let rt = GprmRuntime::with_tiles(6);
+        let g = lu_graph(8);
+        let hits = AtomicUsize::new(0);
+        let stats = execute_gprm(&rt, &g, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), g.len());
+        check_event_ordering(&g, &stats.events).unwrap();
+        rt.shutdown();
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_topological_order() {
+        let rt = OmpRuntime::new(1);
+        let g = lu_graph(6);
+        let stats = execute_omp(&rt, &g, |_| {}).unwrap();
+        check_event_ordering(&g, &stats.events).unwrap();
+        // One worker: events strictly alternate Start/End.
+        for w in stats.events.chunks(2) {
+            assert!(matches!(w[0], Event::Start(_)));
+            assert!(matches!(w[1], Event::End(_)));
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn more_workers_than_tasks_terminates() {
+        let rt = OmpRuntime::new(16);
+        let g = lu_graph(2); // 2x2: a handful of tasks
+        let stats = execute_omp(&rt, &g, |_| {}).unwrap();
+        assert_eq!(stats.executed, g.len());
+        rt.shutdown();
+    }
+
+    #[test]
+    fn panic_in_task_propagates_and_unblocks() {
+        let rt = OmpRuntime::new(4);
+        let g = lu_graph(8);
+        let e = execute_omp(&rt, &g, |t| {
+            if t.0 == 3 {
+                panic!("dataflow task exploded");
+            }
+        })
+        .unwrap_err();
+        assert!(e.contains("dataflow task exploded"), "{e}");
+        // Runtime survives.
+        rt.parallel(|_| {}).unwrap();
+        rt.shutdown();
+    }
+
+    #[test]
+    fn panic_on_gprm_backend_propagates() {
+        let rt = GprmRuntime::with_tiles(4);
+        let g = lu_graph(6);
+        let e = execute_gprm(&rt, &g, |t| {
+            if t.0 == 1 {
+                panic!("gprm dataflow task exploded");
+            }
+        })
+        .unwrap_err();
+        assert!(e.contains("gprm dataflow task exploded"), "{e}");
+        rt.par_invoke(4, |_| {}).unwrap();
+        rt.shutdown();
+    }
+
+    #[test]
+    fn event_checker_rejects_bad_schedules() {
+        let g = lu_graph(4);
+        // Empty log: nothing ran.
+        assert!(check_event_ordering(&g, &[]).is_err());
+        // End before start.
+        assert!(check_event_ordering(&g, &[Event::End(TaskId(0))]).is_err());
+        // A dependent task starting before its predecessor ends.
+        let t = (0..g.len())
+            .find(|&t| !g.preds(TaskId(t)).is_empty())
+            .unwrap();
+        let p = g.preds(TaskId(t))[0];
+        let bad = vec![
+            Event::Start(TaskId(t)),
+            Event::End(TaskId(t)),
+            Event::Start(TaskId(p)),
+            Event::End(TaskId(p)),
+        ];
+        assert!(check_event_ordering(&g, &bad).is_err());
+    }
+
+    #[test]
+    fn peak_ready_reflects_available_parallelism() {
+        let rt = OmpRuntime::new(2);
+        let g = lu_graph(10);
+        let stats = execute_omp(&rt, &g, |_| {}).unwrap();
+        // After the first lu0, a whole fwd+bdiv front becomes ready.
+        assert!(stats.peak_ready > 1, "peak {}", stats.peak_ready);
+        rt.shutdown();
+    }
+}

@@ -1,0 +1,384 @@
+//! Dependency-graph construction from per-task read/write sets.
+//!
+//! [`GraphBuilder`] records, for each block task, which blocks it reads
+//! and which it writes, and derives the dependence edges the way a
+//! superscalar scoreboard would:
+//!
+//! * **RAW** — a task reading block `b` depends on the last writer of
+//!   `b`;
+//! * **WAW** — a task writing `b` depends on the previous writer of
+//!   `b`;
+//! * **WAR** — a task writing `b` depends on every reader of `b` since
+//!   the previous write.
+//!
+//! Tasks are registered in the *sequential* program order, so every
+//! edge points from a lower to a higher task index and the graph is a
+//! DAG by construction; any execution respecting the edges touches
+//! each block in exactly the sequential per-block order, which keeps
+//! parallel results bit-identical (f32) to the sequential reference.
+//!
+//! [`TaskGraph::sparselu`] applies the builder to the BOTS SparseLU
+//! structure (fill-in included) — the DAG that replaces the paper's
+//! phase-barrier Listings 5–6 (see DIVERGENCES.md).
+
+use crate::linalg::lu::BlockOp;
+
+/// Index of a task inside its [`TaskGraph`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct TaskId(pub usize);
+
+/// One block task: which kernel, on which blocks, at which elimination
+/// step.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockTask {
+    pub op: BlockOp,
+    /// Elimination step the task belongs to.
+    pub kk: usize,
+    /// Block row of the task's written block (`kk` for `Lu0`/`Fwd`).
+    pub ii: usize,
+    /// Block column of the written block (`kk` for `Lu0`/`Bdiv`).
+    pub jj: usize,
+    /// `Bmod` only: the written block did not exist before this step
+    /// (BOTS `allocate_clean_block` fill-in path).
+    pub fill_in: bool,
+}
+
+/// Immutable task DAG: tasks plus predecessor/successor adjacency.
+pub struct TaskGraph {
+    nb: usize,
+    tasks: Vec<BlockTask>,
+    preds: Vec<Vec<usize>>,
+    succs: Vec<Vec<usize>>,
+}
+
+impl TaskGraph {
+    /// Build the SparseLU DAG for an `nb×nb` allocation `pattern`
+    /// (row-major booleans), tracking fill-in exactly like the
+    /// sequential factorisation. Task order matches `sparselu_seq`.
+    pub fn sparselu(pattern: &[bool], nb: usize) -> Self {
+        assert_eq!(pattern.len(), nb * nb, "pattern shape");
+        let mut alloc = pattern.to_vec();
+        let mut b = GraphBuilder::new(nb);
+        for kk in 0..nb {
+            b.add_task(
+                BlockTask { op: BlockOp::Lu0, kk, ii: kk, jj: kk, fill_in: false },
+                &[(kk, kk)],
+                &[(kk, kk)],
+            );
+            for jj in kk + 1..nb {
+                if alloc[kk * nb + jj] {
+                    b.add_task(
+                        BlockTask { op: BlockOp::Fwd, kk, ii: kk, jj, fill_in: false },
+                        &[(kk, kk), (kk, jj)],
+                        &[(kk, jj)],
+                    );
+                }
+            }
+            for ii in kk + 1..nb {
+                if alloc[ii * nb + kk] {
+                    b.add_task(
+                        BlockTask { op: BlockOp::Bdiv, kk, ii, jj: kk, fill_in: false },
+                        &[(kk, kk), (ii, kk)],
+                        &[(ii, kk)],
+                    );
+                }
+            }
+            for ii in kk + 1..nb {
+                if !alloc[ii * nb + kk] {
+                    continue;
+                }
+                for jj in kk + 1..nb {
+                    if !alloc[kk * nb + jj] {
+                        continue;
+                    }
+                    let fill_in = !alloc[ii * nb + jj];
+                    alloc[ii * nb + jj] = true;
+                    b.add_task(
+                        BlockTask { op: BlockOp::Bmod, kk, ii, jj, fill_in },
+                        &[(ii, kk), (kk, jj), (ii, jj)],
+                        &[(ii, jj)],
+                    );
+                }
+            }
+        }
+        b.build()
+    }
+
+    pub fn nb(&self) -> usize {
+        self.nb
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn task(&self, id: TaskId) -> &BlockTask {
+        &self.tasks[id.0]
+    }
+
+    pub fn tasks(&self) -> &[BlockTask] {
+        &self.tasks
+    }
+
+    pub fn preds(&self, id: TaskId) -> &[usize] {
+        &self.preds[id.0]
+    }
+
+    pub fn succs(&self, id: TaskId) -> &[usize] {
+        &self.succs[id.0]
+    }
+
+    /// In-degree of every task (fresh copy — executors count it down).
+    pub fn indegrees(&self) -> Vec<usize> {
+        self.preds.iter().map(|p| p.len()).collect()
+    }
+
+    /// Total number of edges.
+    pub fn n_edges(&self) -> usize {
+        self.preds.iter().map(|p| p.len()).sum()
+    }
+
+    /// Tasks with no predecessors (initially ready).
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.tasks.len())
+            .filter(|&t| self.preds[t].is_empty())
+            .collect()
+    }
+}
+
+/// Records tasks in sequential order and derives dependence edges from
+/// their declared read/write sets (see module docs).
+pub struct GraphBuilder {
+    nb: usize,
+    tasks: Vec<BlockTask>,
+    preds: Vec<Vec<usize>>,
+    /// Per block: last task that wrote it.
+    last_writer: Vec<Option<usize>>,
+    /// Per block: tasks that read it since the last write.
+    readers: Vec<Vec<usize>>,
+}
+
+impl GraphBuilder {
+    pub fn new(nb: usize) -> Self {
+        assert!(nb > 0);
+        Self {
+            nb,
+            tasks: Vec::new(),
+            preds: Vec::new(),
+            last_writer: vec![None; nb * nb],
+            readers: vec![Vec::new(); nb * nb],
+        }
+    }
+
+    fn bid(&self, (ii, jj): (usize, usize)) -> usize {
+        debug_assert!(ii < self.nb && jj < self.nb);
+        ii * self.nb + jj
+    }
+
+    /// Register the next task in sequential order with its block
+    /// read/write sets; returns its id. Edges to earlier tasks are
+    /// derived (RAW ∪ WAW ∪ WAR, deduplicated, self-edges dropped —
+    /// a read-modify-write task lists its target in both sets).
+    pub fn add_task(
+        &mut self,
+        meta: BlockTask,
+        reads: &[(usize, usize)],
+        writes: &[(usize, usize)],
+    ) -> TaskId {
+        let id = self.tasks.len();
+        let mut preds: Vec<usize> = Vec::new();
+        for &r in reads {
+            let b = self.bid(r);
+            if let Some(w) = self.last_writer[b] {
+                preds.push(w); // RAW
+            }
+        }
+        for &w in writes {
+            let b = self.bid(w);
+            if let Some(prev) = self.last_writer[b] {
+                preds.push(prev); // WAW
+            }
+            preds.extend(self.readers[b].iter().copied()); // WAR
+        }
+        preds.sort_unstable();
+        preds.dedup();
+        preds.retain(|&p| p != id);
+        // Update the scoreboard *after* deriving edges.
+        for &r in reads {
+            let b = self.bid(r);
+            self.readers[b].push(id);
+        }
+        for &w in writes {
+            let b = self.bid(w);
+            self.last_writer[b] = Some(id);
+            self.readers[b].clear();
+        }
+        self.tasks.push(meta);
+        self.preds.push(preds);
+        TaskId(id)
+    }
+
+    pub fn build(self) -> TaskGraph {
+        let n = self.tasks.len();
+        let mut succs = vec![Vec::new(); n];
+        for (t, ps) in self.preds.iter().enumerate() {
+            for &p in ps {
+                debug_assert!(p < t, "edges must point forward");
+                succs[p].push(t);
+            }
+        }
+        TaskGraph { nb: self.nb, tasks: self.tasks, preds: self.preds, succs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::genmat::genmat_pattern;
+    use crate::linalg::lu::lu_task_counts;
+
+    #[test]
+    fn single_block_is_one_task() {
+        let g = TaskGraph::sparselu(&[true], 1);
+        assert_eq!(g.len(), 1);
+        assert!(g.preds(TaskId(0)).is_empty());
+        assert_eq!(g.roots(), vec![0]);
+    }
+
+    #[test]
+    fn task_counts_match_structural_walk() {
+        let nb = 12;
+        let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+        let counts = lu_task_counts(&genmat_pattern(nb), nb);
+        let want = nb
+            + counts.fwd.iter().sum::<usize>()
+            + counts.bdiv.iter().sum::<usize>()
+            + counts.bmod.iter().sum::<usize>();
+        assert_eq!(g.len(), want);
+    }
+
+    #[test]
+    fn edges_point_forward_and_first_lu0_is_root() {
+        let nb = 10;
+        let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+        for t in 0..g.len() {
+            for &p in g.preds(TaskId(t)) {
+                assert!(p < t, "edge {p} -> {t} must point forward");
+            }
+        }
+        assert_eq!(g.task(TaskId(0)).op, BlockOp::Lu0);
+        assert!(g.preds(TaskId(0)).is_empty());
+        // Succ lists mirror pred lists.
+        let from_preds: usize = g.indegrees().iter().sum();
+        let from_succs: usize =
+            (0..g.len()).map(|t| g.succs(TaskId(t)).len()).sum();
+        assert_eq!(from_preds, from_succs);
+        assert_eq!(from_preds, g.n_edges());
+    }
+
+    #[test]
+    fn fwd_depends_on_its_steps_lu0() {
+        let nb = 6;
+        let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+        for t in 0..g.len() {
+            let task = *g.task(TaskId(t));
+            if task.op == BlockOp::Fwd || task.op == BlockOp::Bdiv {
+                // Some predecessor must be the lu0 of the same step.
+                let has_lu0 = g.preds(TaskId(t)).iter().any(|&p| {
+                    let pt = g.task(TaskId(p));
+                    pt.op == BlockOp::Lu0 && pt.kk == task.kk
+                });
+                assert!(has_lu0, "task {t} ({task:?}) misses its lu0 dep");
+            }
+        }
+    }
+
+    #[test]
+    fn bmod_depends_on_row_and_col_panels() {
+        let nb = 8;
+        let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+        for t in 0..g.len() {
+            let task = *g.task(TaskId(t));
+            if task.op != BlockOp::Bmod {
+                continue;
+            }
+            let dep_on = |op: BlockOp, ii: usize, jj: usize| {
+                g.preds(TaskId(t)).iter().any(|&p| {
+                    let pt = g.task(TaskId(p));
+                    pt.op == op && pt.ii == ii && pt.jj == jj && pt.kk == task.kk
+                })
+            };
+            assert!(
+                dep_on(BlockOp::Bdiv, task.ii, task.kk),
+                "bmod {task:?} misses bdiv dep"
+            );
+            assert!(
+                dep_on(BlockOp::Fwd, task.kk, task.jj),
+                "bmod {task:?} misses fwd dep"
+            );
+        }
+    }
+
+    #[test]
+    fn same_block_tasks_are_chained_in_step_order() {
+        // All writers of one block must form a total order (a chain) —
+        // this is what makes parallel execution f32-identical to seq.
+        let nb = 10;
+        let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+        use std::collections::HashMap;
+        let mut writers: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        for t in 0..g.len() {
+            let task = g.task(TaskId(t));
+            writers.entry((task.ii, task.jj)).or_default().push(t);
+        }
+        for ((ii, jj), ws) in writers {
+            for pair in ws.windows(2) {
+                // Later writer must (transitively) depend on the
+                // earlier; the direct WAW/RAW edge makes it immediate.
+                assert!(
+                    g.preds(TaskId(pair[1])).contains(&pair[0]),
+                    "writers of ({ii},{jj}) not chained: {pair:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn war_edges_derived_for_generic_sets() {
+        // reader of block 0 then writer of block 0: WAR edge.
+        let mut b = GraphBuilder::new(2);
+        let t0 = b.add_task(
+            BlockTask { op: BlockOp::Lu0, kk: 0, ii: 0, jj: 0, fill_in: false },
+            &[(0, 0)],
+            &[(1, 1)],
+        );
+        let t1 = b.add_task(
+            BlockTask { op: BlockOp::Lu0, kk: 0, ii: 0, jj: 0, fill_in: false },
+            &[],
+            &[(0, 0)],
+        );
+        let g = b.build();
+        assert_eq!(g.preds(t1), &[t0.0]);
+        assert_eq!(g.succs(t0), &[t1.0]);
+    }
+
+    #[test]
+    fn fill_in_flagged_once_per_block() {
+        let nb = 10;
+        let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+        use std::collections::HashSet;
+        let mut fresh: HashSet<(usize, usize)> = HashSet::new();
+        let mut n_fill = 0;
+        for t in g.tasks() {
+            if t.fill_in {
+                assert!(fresh.insert((t.ii, t.jj)), "double fill-in {t:?}");
+                n_fill += 1;
+            }
+        }
+        assert!(n_fill > 0, "genmat structure must produce fill-in");
+    }
+}

@@ -24,20 +24,24 @@
 //! * [`sim_omp`] — virtual-time execution of the OpenMP-3.0 model:
 //!   `omp for` (static / dynamic) and single-producer tasking with a
 //!   contended central queue, plus the cutoff variant.
+//! * [`sim_dataflow`] — virtual-time list scheduling of the
+//!   [`crate::sched`] dependence DAG: no phase barriers; isolates what
+//!   the level-synchronous models pay for theirs.
 //!
-//! Both simulators share [`cost::CostModel`] and the phase-level
-//! memory-bandwidth ceiling, so who-wins comparisons are apples to
-//! apples.
+//! All simulators share [`cost::CostModel`] and the memory-bandwidth
+//! ceiling, so who-wins comparisons are apples to apples.
 
 pub mod cost;
 pub mod locality;
 pub mod mesh;
+pub mod sim_dataflow;
 pub mod sim_gprm;
 pub mod sim_omp;
 pub mod workload;
 
 pub use cost::CostModel;
 pub use mesh::Mesh;
+pub use sim_dataflow::DataflowSim;
 pub use sim_gprm::{GprmAssign, GprmSim};
 pub use sim_omp::{OmpSim, OmpStrategy};
 pub use workload::{Phase, SimTask, Workload};

@@ -88,6 +88,52 @@ impl Phase {
     }
 }
 
+/// Build the [`SimTask`] for one SparseLU block kernel — the single
+/// source of truth for the per-op cost encoding (flops, read set,
+/// write target, shared-fabric bytes including the fill-in rule),
+/// shared by the phase-barrier workload stream below and the DAG
+/// simulator ([`crate::tilesim::sim_dataflow`]).
+///
+/// `fresh` (Bmod only) marks a fill-in first-write: the task pays the
+/// extra DRAM traffic of materialising the block. `iter` is the
+/// flattened loop-domain index (0 where the caller has no loop).
+pub fn lu_sim_task(
+    op: BlockOp,
+    nb: usize,
+    bs: usize,
+    kk: usize,
+    ii: usize,
+    jj: usize,
+    fresh: bool,
+    iter: u64,
+) -> SimTask {
+    let bb = (bs * bs * 4) as u64;
+    let id = |a: usize, b: usize| (a * nb + b) as u32;
+    let (reads, n_reads, write, mem_bytes) = match op {
+        BlockOp::Lu0 => ([id(kk, kk), 0, 0], 1, id(kk, kk), bb),
+        BlockOp::Fwd => {
+            ([id(kk, kk), id(kk, jj), 0], 2, id(kk, jj), bb)
+        }
+        BlockOp::Bdiv => {
+            ([id(kk, kk), id(ii, kk), 0], 2, id(ii, kk), bb)
+        }
+        BlockOp::Bmod => (
+            [id(ii, kk), id(kk, jj), id(ii, jj)],
+            3,
+            id(ii, jj),
+            bb * if fresh { 3 } else { 2 },
+        ),
+    };
+    SimTask {
+        flops: kernel_flops(op, bs),
+        mem_bytes,
+        reads,
+        n_reads,
+        write,
+        iter,
+    }
+}
+
 /// Workload constructors.
 pub struct Workload;
 
@@ -156,16 +202,6 @@ pub struct SparseLuPhases {
     sub: u8,
 }
 
-impl SparseLuPhases {
-    fn block_bytes(&self) -> u64 {
-        (self.bs * self.bs * 4) as u64
-    }
-
-    fn id(&self, ii: usize, jj: usize) -> u32 {
-        (ii * self.nb + jj) as u32
-    }
-}
-
 impl Iterator for SparseLuPhases {
     type Item = Phase;
 
@@ -174,18 +210,10 @@ impl Iterator for SparseLuPhases {
             return None;
         }
         let (nb, bs, kk) = (self.nb, self.bs, self.kk);
-        let bb = self.block_bytes();
         let phase = match self.sub {
             0 => {
                 // lu0 on the diagonal block.
-                let t = SimTask {
-                    flops: kernel_flops(BlockOp::Lu0, bs),
-                    mem_bytes: bb,
-                    reads: [self.id(kk, kk), 0, 0],
-                    n_reads: 1,
-                    write: self.id(kk, kk),
-                    iter: 0,
-                };
+                let t = lu_sim_task(BlockOp::Lu0, nb, bs, kk, kk, kk, false, 0);
                 Phase {
                     kind: PhaseKind::Lu0,
                     lanes: vec![Lane { tasks: vec![t], total_iters: 1 }],
@@ -204,26 +232,30 @@ impl Iterator for SparseLuPhases {
                 };
                 for jj in kk + 1..nb {
                     if self.alloc[kk * nb + jj] {
-                        fwd.tasks.push(SimTask {
-                            flops: kernel_flops(BlockOp::Fwd, bs),
-                            mem_bytes: bb,
-                            reads: [self.id(kk, kk), self.id(kk, jj), 0],
-                            n_reads: 2,
-                            write: self.id(kk, jj),
-                            iter: (jj - kk - 1) as u64,
-                        });
+                        fwd.tasks.push(lu_sim_task(
+                            BlockOp::Fwd,
+                            nb,
+                            bs,
+                            kk,
+                            kk,
+                            jj,
+                            false,
+                            (jj - kk - 1) as u64,
+                        ));
                     }
                 }
                 for ii in kk + 1..nb {
                     if self.alloc[ii * nb + kk] {
-                        bdiv.tasks.push(SimTask {
-                            flops: kernel_flops(BlockOp::Bdiv, bs),
-                            mem_bytes: bb,
-                            reads: [self.id(kk, kk), self.id(ii, kk), 0],
-                            n_reads: 2,
-                            write: self.id(ii, kk),
-                            iter: (ii - kk - 1) as u64,
-                        });
+                        bdiv.tasks.push(lu_sim_task(
+                            BlockOp::Bdiv,
+                            nb,
+                            bs,
+                            kk,
+                            ii,
+                            kk,
+                            false,
+                            (ii - kk - 1) as u64,
+                        ));
                     }
                 }
                 Phase { kind: PhaseKind::FwdBdiv, lanes: vec![fwd, bdiv] }
@@ -251,18 +283,16 @@ impl Iterator for SparseLuPhases {
                         // traffic for the fresh block.
                         let fresh = !self.alloc[ii * nb + jj];
                         self.alloc[ii * nb + jj] = true;
-                        lane.tasks.push(SimTask {
-                            flops: kernel_flops(BlockOp::Bmod, bs),
-                            mem_bytes: bb * if fresh { 3 } else { 2 },
-                            reads: [
-                                self.id(ii, kk),
-                                self.id(kk, jj),
-                                self.id(ii, jj),
-                            ],
-                            n_reads: 3,
-                            write: self.id(ii, jj),
+                        lane.tasks.push(lu_sim_task(
+                            BlockOp::Bmod,
+                            nb,
+                            bs,
+                            kk,
+                            ii,
+                            jj,
+                            fresh,
                             iter,
-                        });
+                        ));
                     }
                 }
                 Phase { kind: PhaseKind::Bmod, lanes: vec![lane] }

@@ -1,0 +1,140 @@
+//! A minimal in-repo stand-in for the `anyhow` crate (unavailable in
+//! the offline crate set). Provides the small surface the PJRT
+//! runtime uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` macros.
+//!
+//! Semantics follow `anyhow` where it matters here: `Display` shows
+//! the outermost context, the alternate form (`{:#}`) shows the whole
+//! chain joined by `": "`, and `Debug` (what `unwrap`/`expect` print)
+//! shows the chain with a `Caused by` trailer.
+
+use std::fmt;
+
+/// An error carrying a context chain (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `anyhow::Result`: error type defaults to [`Error`], but remains
+/// overridable (`Result<T, String>` is used in channel payloads).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values, converting the error to
+/// [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// `anyhow!`: build an [`Error`] from a format string or any
+/// displayable value.
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::anyhow::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::anyhow::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::anyhow::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `bail!`: early-return an `Err(anyhow!(...))`.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::anyhow::anyhow!($($arg)*))
+    };
+}
+
+pub(crate) use anyhow;
+pub(crate) use bail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("inner {}", 42))
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by"), "{d}");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                bail!("boom {x}");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(false).unwrap(), 7);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "boom true");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), String> = Err("base".into());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: base");
+    }
+
+    #[test]
+    fn value_form_takes_string() {
+        let e = anyhow!(String::from("already a string"));
+        assert_eq!(e.to_string(), "already a string");
+    }
+}

@@ -1,6 +1,7 @@
 //! Small self-contained utilities (the offline crate set has no clap /
-//! serde / rand, so these are hand-rolled).
+//! serde / rand / anyhow, so these are hand-rolled).
 
+pub mod anyhow;
 pub mod cli;
 pub mod json;
 pub mod prng;

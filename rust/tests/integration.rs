@@ -3,7 +3,9 @@
 //! artifact path).
 
 use gprm::apps::matmul::{run_matmul, MatmulApproach, MatmulExec};
-use gprm::apps::sparselu::{sparselu_gprm, sparselu_omp, LuRunConfig};
+use gprm::apps::sparselu::{
+    sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuRunConfig,
+};
 use gprm::coordinator::kernel::Registry;
 use gprm::coordinator::{ClosureKernel, GprmConfig, GprmRuntime, Prog, Value};
 use gprm::linalg::genmat::genmat;
@@ -14,7 +16,7 @@ use gprm::tilesim::{GprmSim, OmpSim, OmpStrategy, Workload};
 use std::sync::Arc;
 
 #[test]
-fn sparselu_three_runtimes_agree_and_verify() {
+fn sparselu_all_runtimes_agree_and_verify() {
     let nb = 16;
     let bs = 8;
     let a0 = genmat(nb, bs);
@@ -27,16 +29,56 @@ fn sparselu_three_runtimes_agree_and_verify() {
     let omp = OmpRuntime::new(6);
     let mut a_omp = a0.deep_clone();
     sparselu_omp(&omp, &mut a_omp, &LuRunConfig::default());
+
+    // Dataflow driver on both host backends.
+    let mut a_df_omp = a0.deep_clone();
+    sparselu_dataflow(&DataflowRt::Omp(&omp), &mut a_df_omp, &LuRunConfig::default());
     omp.shutdown();
 
     let gprm = GprmRuntime::with_tiles(6);
     let mut a_gprm = a0.deep_clone();
     sparselu_gprm(&gprm, &mut a_gprm, &LuRunConfig::default());
+
+    let mut a_df_gprm = a0.deep_clone();
+    sparselu_dataflow(
+        &DataflowRt::Gprm(&gprm),
+        &mut a_df_gprm,
+        &LuRunConfig::default(),
+    );
     gprm.shutdown();
 
     // Same kernels, same per-block operation order → f32-identical.
     assert_blocked_close(&a_omp, &a_seq, 1e-4);
     assert_blocked_close(&a_gprm, &a_seq, 1e-4);
+    assert_blocked_close(&a_df_omp, &a_seq, 1e-4);
+    assert_blocked_close(&a_df_gprm, &a_seq, 1e-4);
+    assert!(lu_residual_sparse(&dense0, &a_df_omp) < 1e-4);
+    assert!(lu_residual_sparse(&dense0, &a_df_gprm) < 1e-4);
+}
+
+#[test]
+fn sparselu_dataflow_is_deterministic_across_runs() {
+    // Same input, fixed worker count: the dataflow schedule may vary
+    // between runs, but the numeric result must be bit-identical —
+    // the DAG chains pin the per-block operation order.
+    let omp = OmpRuntime::new(7);
+    let gprm = GprmRuntime::with_tiles(7);
+    for rt in [DataflowRt::Omp(&omp), DataflowRt::Gprm(&gprm)] {
+        let mut first = None;
+        for _ in 0..3 {
+            let mut a = genmat(12, 4);
+            sparselu_dataflow(&rt, &mut a, &LuRunConfig::default());
+            let d = a.to_dense();
+            if let Some(f) = &first {
+                let diff = d.max_abs_diff(f);
+                assert_eq!(diff, 0.0, "nondeterministic dataflow result");
+            } else {
+                first = Some(d);
+            }
+        }
+    }
+    omp.shutdown();
+    gprm.shutdown();
 }
 
 #[test]

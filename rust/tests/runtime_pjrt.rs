@@ -2,15 +2,39 @@
 //! executed through PJRT from rust, must agree with the pure-rust
 //! `linalg` kernels on identical inputs.
 //!
-//! Requires `make artifacts` (the Makefile `test` target guarantees
-//! it).
+//! Requires a vendored `xla` crate (`runtime::PJRT_AVAILABLE`) plus
+//! the artifacts from `python/compile/aot.py`; skips cleanly (with a
+//! notice) when either is missing.
 
 use gprm::linalg::dense::DenseMatrix;
 use gprm::linalg::lu::{bdiv, bmod, fwd, lu0};
-use gprm::runtime::{default_artifact_dir, BlockEngine, EngineService};
+use gprm::runtime::{
+    default_artifact_dir, BlockEngine, EngineService, PJRT_AVAILABLE,
+};
 
+/// `true` when PJRT is wired in *and* the AOT artifacts exist;
+/// otherwise prints an explicit skip notice (once per test) so a
+/// green suite is visibly a partial one. Checking `PJRT_AVAILABLE`
+/// first keeps a present artifact directory from turning stubbed
+/// builds (runtime/xla_stub.rs) into hard failures.
 fn have_artifacts() -> bool {
-    default_artifact_dir().join("manifest.json").exists()
+    if !PJRT_AVAILABLE {
+        eprintln!(
+            "skipping PJRT test: built with the in-repo xla stub \
+             (vendor the `xla` crate and flip runtime::PJRT_AVAILABLE \
+             to exercise this path)"
+        );
+        return false;
+    }
+    let manifest = default_artifact_dir().join("manifest.json");
+    if !manifest.exists() {
+        eprintln!(
+            "skipping PJRT test: {manifest:?} not found (compile the \
+             JAX/Pallas kernels via python/compile/aot.py first)"
+        );
+        return false;
+    }
+    true
 }
 
 fn block(bs: usize, seed: u32) -> Vec<f32> {
@@ -38,7 +62,6 @@ fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 #[test]
 fn pjrt_block_ops_match_rust_kernels() {
     if !have_artifacts() {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
         return;
     }
     let mut eng = BlockEngine::new(default_artifact_dir()).unwrap();
