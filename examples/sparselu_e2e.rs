@@ -17,6 +17,7 @@
 //! is `gprm exp`, which runs the calibrated TILEPro64 simulator.)
 
 use gprm::apps::sparselu::{sparselu_gprm, sparselu_omp, LuBackend, LuRunConfig};
+use gprm::sched::ExecOpts;
 use gprm::coordinator::kernel::Registry;
 use gprm::coordinator::{GprmConfig, GprmRuntime};
 use gprm::linalg::genmat::genmat;
@@ -73,7 +74,11 @@ fn main() {
         sparselu_gprm(
             &gprm,
             &mut warm,
-            &LuRunConfig { backend: LuBackend::Pjrt(&engine), contiguous: false },
+            &LuRunConfig {
+                backend: LuBackend::Pjrt(&engine),
+                contiguous: false,
+                exec: ExecOpts::default(),
+            },
         );
         gprm.shutdown();
     }
@@ -88,7 +93,11 @@ fn main() {
     sparselu_gprm(
         &gprm,
         &mut a_gprm,
-        &LuRunConfig { backend: LuBackend::Pjrt(&engine), contiguous: false },
+        &LuRunConfig {
+            backend: LuBackend::Pjrt(&engine),
+            contiguous: false,
+            exec: ExecOpts::default(),
+        },
     );
     let t_gprm = t0.elapsed();
     let stats = gprm.stats_total();
@@ -105,7 +114,11 @@ fn main() {
     sparselu_omp(
         &omp,
         &mut a_omp,
-        &LuRunConfig { backend: LuBackend::Pjrt(&engine), contiguous: false },
+        &LuRunConfig {
+            backend: LuBackend::Pjrt(&engine),
+            contiguous: false,
+            exec: ExecOpts::default(),
+        },
     );
     println!("omp({threads} threads) + pjrt: {:?}", t0.elapsed());
     omp.shutdown();

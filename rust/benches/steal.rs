@@ -1,0 +1,167 @@
+//! Bench: mutex-scoreboard vs lock-free work-stealing executor on the
+//! Fig-6 workload (NB=32, BS=16) at 1/2/4/8/16 workers — tasks/sec and
+//! GFLOP/s (via `kernel_flops`), host wall-clock on both runtimes plus
+//! the tilesim claim-cost models, appended as JSON rows to
+//! `BENCH_sched.json` (the committed baseline rows in the repo root
+//! were produced by the tilesim model; machines with real cores append
+//! `host-wall-clock` rows next to them).
+//!
+//! `cargo bench --bench steal`
+
+use gprm::apps::sparselu::{sparselu_dataflow, DataflowRt, LuRunConfig};
+use gprm::linalg::genmat::{genmat, genmat_pattern};
+use gprm::linalg::lu::kernel_flops;
+use gprm::omp::OmpRuntime;
+use gprm::sched::{ExecOpts, TaskGraph};
+use gprm::tilesim::{CostModel, DataflowSim, SchedModel};
+use std::io::Write as _;
+
+const NB: usize = 32;
+const BS: usize = 16;
+const WORKERS: [usize; 5] = [1, 2, 4, 8, 16];
+
+struct Row {
+    source: &'static str,
+    workers: usize,
+    exec: &'static str,
+    secs: f64,
+    tasks_per_sec: f64,
+    gflops: f64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "{{\"workload\": \"sparselu NB={NB} BS={BS}\", \
+             \"source\": \"{}\", \"workers\": {}, \"exec\": \"{}\", \
+             \"secs\": {:.6}, \"tasks_per_sec\": {:.0}, \
+             \"gflops\": {:.3}}}",
+            self.source, self.workers, self.exec, self.secs,
+            self.tasks_per_sec, self.gflops
+        )
+    }
+}
+
+fn main() {
+    let graph = TaskGraph::sparselu(&genmat_pattern(NB), NB);
+    let n_tasks = graph.len();
+    let total_flops: u64 =
+        graph.tasks().iter().map(|t| kernel_flops(t.op, BS)).sum();
+    println!(
+        "steal bench: SparseLU NB={NB} BS={BS} — {n_tasks} tasks, {:.3} GFLOP",
+        total_flops as f64 / 1e9
+    );
+    let mut rows: Vec<Row> = Vec::new();
+
+    // Tilesim claim-cost models (deterministic; these are the baseline
+    // rows committed in BENCH_sched.json).
+    let hz = CostModel::default().clock_hz;
+    println!("\n== tilesim model (virtual time @866 MHz) ==");
+    for &w in &WORKERS {
+        for (name, sched) in [
+            ("mutex", SchedModel::MutexScoreboard),
+            ("steal", SchedModel::WorkSteal),
+        ] {
+            let r = DataflowSim::with_sched(w, sched).run_sparselu(NB, BS);
+            let secs = r.cycles as f64 / hz;
+            let row = Row {
+                source: "tilesim-model",
+                workers: w,
+                exec: name,
+                secs,
+                tasks_per_sec: n_tasks as f64 / secs,
+                gflops: total_flops as f64 / secs / 1e9,
+            };
+            println!(
+                "  {name:>5} @{w:>2} workers: {secs:>8.4}s  {:>9.0} tasks/s  {:>6.3} GFLOP/s",
+                row.tasks_per_sec, row.gflops
+            );
+            rows.push(row);
+        }
+    }
+
+    // Host wall-clock: whole dataflow factorisations, best of SAMPLES.
+    const SAMPLES: usize = 5;
+    println!("\n== host wall-clock (omp-backed dataflow driver) ==");
+    let a0 = genmat(NB, BS);
+    for &w in &WORKERS {
+        let rt = OmpRuntime::new(w);
+        for (name, exec) in [
+            ("mutex", ExecOpts::mutex_baseline()),
+            ("steal", ExecOpts::default()),
+        ] {
+            let cfg = LuRunConfig { exec, ..Default::default() };
+            // Warmup.
+            let mut a = a0.deep_clone();
+            sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &cfg);
+            let mut best = f64::MAX;
+            for _ in 0..SAMPLES {
+                let mut a = a0.deep_clone();
+                let t0 = std::time::Instant::now();
+                sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &cfg);
+                best = best.min(t0.elapsed().as_secs_f64());
+                gprm::bench::black_box(a.allocated_blocks());
+            }
+            let row = Row {
+                source: "host-wall-clock",
+                workers: w,
+                exec: name,
+                secs: best,
+                tasks_per_sec: n_tasks as f64 / best,
+                gflops: total_flops as f64 / best / 1e9,
+            };
+            println!(
+                "  {name:>5} @{w:>2} workers: {best:>8.4}s  {:>9.0} tasks/s  {:>6.3} GFLOP/s",
+                row.tasks_per_sec, row.gflops
+            );
+            rows.push(row);
+        }
+        rt.shutdown();
+    }
+
+    // Acceptance: work stealing must win on tasks/sec at >= 4 workers
+    // (host rows; the tilesim rows assert the same in unit tests). A
+    // loss anywhere exits nonzero so scripted runs actually gate.
+    let mut failed = false;
+    for &w in WORKERS.iter().filter(|&&w| w >= 4) {
+        let tps = |exec: &str| {
+            rows.iter()
+                .find(|r| {
+                    r.source == "host-wall-clock"
+                        && r.workers == w
+                        && r.exec == exec
+                })
+                .map(|r| r.tasks_per_sec)
+                .unwrap()
+        };
+        let (m, s) = (tps("mutex"), tps("steal"));
+        failed |= s <= m;
+        println!(
+            "  @{w} workers: steal/mutex = {:.2}x {}",
+            s / m,
+            if s > m { "PASS" } else { "FAIL" }
+        );
+    }
+
+    // Append all rows to the repo-root BENCH_sched.json (JSON lines;
+    // the committed file carries the tilesim baseline rows). Anchored
+    // via the manifest dir — `cargo bench` runs with cwd = rust/.
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = manifest
+        .parent()
+        .unwrap_or(manifest)
+        .join("BENCH_sched.json");
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            for r in &rows {
+                let _ = writeln!(f, "{}", r.json());
+            }
+            println!("\nappended {} rows to {path:?}", rows.len());
+        }
+        Err(e) => eprintln!("cannot write {path:?}: {e}"),
+    }
+    if failed {
+        eprintln!("steal bench FAILED: work stealing lost at >= 4 workers");
+        std::process::exit(1);
+    }
+}

@@ -25,7 +25,10 @@ use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
 use crate::linalg::lu::{bdiv, bmod, fwd, lu0, BlockOp};
 use crate::omp::OmpRuntime;
 use crate::runtime::EngineService;
-use crate::sched::{execute_gprm, execute_omp, ExecStats, TaskGraph, TaskId};
+use crate::sched::{
+    execute_gprm_opts, execute_omp_opts, ExecOpts, ExecStats, TaskGraph,
+    TaskId,
+};
 
 /// How block kernels execute.
 pub enum LuBackend<'e> {
@@ -72,11 +75,18 @@ pub struct LuRunConfig<'e> {
     pub backend: LuBackend<'e>,
     /// Contiguous instead of round-robin worksharing (GPRM only).
     pub contiguous: bool,
+    /// Dataflow executor options (dataflow drivers only): work
+    /// stealing vs the mutex-scoreboard baseline, event-log opt-in.
+    pub exec: ExecOpts,
 }
 
 impl Default for LuRunConfig<'static> {
     fn default() -> Self {
-        Self { backend: LuBackend::Rust, contiguous: false }
+        Self {
+            backend: LuBackend::Rust,
+            contiguous: false,
+            exec: ExecOpts::default(),
+        }
     }
 }
 
@@ -108,16 +118,10 @@ pub fn sparselu_omp(rt: &OmpRuntime, a: &mut BlockedSparseMatrix, cfg: &LuRunCon
                             // SAFETY: tasks write disjoint (kk,jj)
                             // blocks; diag finalised before spawn.
                             let m = unsafe { sh.get_mut() };
-                            let diag =
-                                m.block(kk, kk).unwrap().as_ptr();
-                            let diag = unsafe {
-                                std::slice::from_raw_parts(diag, bs * bs)
-                            };
-                            backend.fwd(
-                                diag,
-                                m.block_mut(kk, jj).unwrap(),
-                                bs,
-                            );
+                            let (diag, col) = m
+                                .block_and_mut((kk, kk), (kk, jj))
+                                .unwrap();
+                            backend.fwd(diag, col, bs);
                         });
                     }
                 }
@@ -126,16 +130,10 @@ pub fn sparselu_omp(rt: &OmpRuntime, a: &mut BlockedSparseMatrix, cfg: &LuRunCon
                     if sh.get().is_allocated(ii, kk) {
                         ctx.task(move |_| {
                             let m = unsafe { sh.get_mut() };
-                            let diag =
-                                m.block(kk, kk).unwrap().as_ptr();
-                            let diag = unsafe {
-                                std::slice::from_raw_parts(diag, bs * bs)
-                            };
-                            backend.bdiv(
-                                diag,
-                                m.block_mut(ii, kk).unwrap(),
-                                bs,
-                            );
+                            let (diag, row) = m
+                                .block_and_mut((kk, kk), (ii, kk))
+                                .unwrap();
+                            backend.bdiv(diag, row, bs);
                         });
                     }
                 }
@@ -154,15 +152,10 @@ pub fn sparselu_omp(rt: &OmpRuntime, a: &mut BlockedSparseMatrix, cfg: &LuRunCon
                             // the phase; row/col finalised by the
                             // preceding taskwait.
                             let m = unsafe { sh.get_mut() };
-                            let row = m.block(ii, kk).unwrap().as_ptr();
-                            let col = m.block(kk, jj).unwrap().as_ptr();
-                            let (row, col) = unsafe {
-                                (
-                                    std::slice::from_raw_parts(row, bs * bs),
-                                    std::slice::from_raw_parts(col, bs * bs),
-                                )
-                            };
-                            let inner = m.allocate_clean_block(ii, jj);
+                            m.allocate_clean_block(ii, jj);
+                            let (row, col, inner) = m
+                                .read2_write1((ii, kk), (kk, jj), (ii, jj))
+                                .unwrap();
                             backend.bmod(row, col, inner, bs);
                         });
                     }
@@ -207,17 +200,20 @@ pub fn sparselu_gprm(
             let lane_fwd = ind < half;
             let lane_ind = if lane_fwd { ind } else { ind - half };
             let work = |j: usize| {
-                // Listing 6: fwd_work checks allocation itself.
+                // Listing 6: fwd_work checks allocation itself. The
+                // diagonal block is read in place (split-borrow), the
+                // lane's own (row-kk or column-kk) block written.
                 let m = unsafe { sh.get_mut() };
-                let diag = m.block(kk, kk).unwrap().as_ptr();
-                let diag =
-                    unsafe { std::slice::from_raw_parts(diag, bs * bs) };
                 if lane_fwd {
                     if m.is_allocated(kk, j) {
-                        backend.fwd(diag, m.block_mut(kk, j).unwrap(), bs);
+                        let (diag, col) =
+                            m.block_and_mut((kk, kk), (kk, j)).unwrap();
+                        backend.fwd(diag, col, bs);
                     }
                 } else if m.is_allocated(j, kk) {
-                    backend.bdiv(diag, m.block_mut(j, kk).unwrap(), bs);
+                    let (diag, row) =
+                        m.block_and_mut((kk, kk), (j, kk)).unwrap();
+                    backend.bdiv(diag, row, bs);
                 }
             };
             if contiguous {
@@ -232,15 +228,10 @@ pub fn sparselu_gprm(
             let work = |ii: usize, jj: usize| {
                 let m = unsafe { sh.get_mut() };
                 if m.is_allocated(ii, kk) && m.is_allocated(kk, jj) {
-                    let row = m.block(ii, kk).unwrap().as_ptr();
-                    let col = m.block(kk, jj).unwrap().as_ptr();
-                    let (row, col) = unsafe {
-                        (
-                            std::slice::from_raw_parts(row, bs * bs),
-                            std::slice::from_raw_parts(col, bs * bs),
-                        )
-                    };
-                    let inner = m.allocate_clean_block(ii, jj);
+                    m.allocate_clean_block(ii, jj);
+                    let (row, col, inner) = m
+                        .read2_write1((ii, kk), (kk, jj), (ii, jj))
+                        .unwrap();
                     backend.bmod(row, col, inner, bs);
                 }
             };
@@ -281,8 +272,11 @@ pub enum DataflowRt<'r> {
 
 /// Dataflow (DAG-scheduled) SparseLU — no phase barriers; every block
 /// kernel fires as soon as its dependencies are final. Factorises `a`
-/// in place and returns the executor's statistics (event log included,
-/// so callers can audit the schedule).
+/// in place and returns the executor's statistics. The executor is
+/// selected by `cfg.exec`: lock-free work stealing by default, the
+/// mutex scoreboard as the measurable baseline; the event log is
+/// opt-in (`cfg.exec.record_events`) so the default hot path neither
+/// locks nor allocates per task.
 ///
 /// Results are bit-identical (f32) to [`sparselu_seq`]: the DAG's
 /// RAW/WAW/WAR chains reproduce the sequential per-block operation
@@ -306,44 +300,43 @@ pub fn sparselu_dataflow(
     let run = |id: TaskId| {
         let t = *graph.task(id);
         // SAFETY: the task graph chains every touch of a given block
-        // (RAW/WAW/WAR), so this task has exclusive access to the
-        // block it writes and read-only access to blocks finalised by
-        // its predecessors. Fill-in allocation mutates only the
-        // written block's own slot.
+        // (RAW/WAW/WAR) and the executor carries a release/acquire
+        // edge per dependency (see `SharedBlocked`'s Sync impl), so
+        // this task has exclusive access to the block it writes and
+        // read-only access to blocks finalised by its predecessors.
+        // Fill-in allocation mutates only the written block's own
+        // slot. Within the task the borrows split, zero-copy.
         let m = unsafe { sh.get_mut() };
         match t.op {
             BlockOp::Lu0 => {
                 backend.lu0(m.block_mut(t.kk, t.kk).unwrap(), bs);
             }
             BlockOp::Fwd => {
-                let diag = m.block(t.kk, t.kk).unwrap().as_ptr();
-                let diag =
-                    unsafe { std::slice::from_raw_parts(diag, bs * bs) };
-                backend.fwd(diag, m.block_mut(t.kk, t.jj).unwrap(), bs);
+                let (diag, col) =
+                    m.block_and_mut((t.kk, t.kk), (t.kk, t.jj)).unwrap();
+                backend.fwd(diag, col, bs);
             }
             BlockOp::Bdiv => {
-                let diag = m.block(t.kk, t.kk).unwrap().as_ptr();
-                let diag =
-                    unsafe { std::slice::from_raw_parts(diag, bs * bs) };
-                backend.bdiv(diag, m.block_mut(t.ii, t.kk).unwrap(), bs);
+                let (diag, row) =
+                    m.block_and_mut((t.kk, t.kk), (t.ii, t.kk)).unwrap();
+                backend.bdiv(diag, row, bs);
             }
             BlockOp::Bmod => {
-                let row = m.block(t.ii, t.kk).unwrap().as_ptr();
-                let col = m.block(t.kk, t.jj).unwrap().as_ptr();
-                let (row, col) = unsafe {
-                    (
-                        std::slice::from_raw_parts(row, bs * bs),
-                        std::slice::from_raw_parts(col, bs * bs),
-                    )
-                };
-                let inner = m.allocate_clean_block(t.ii, t.jj);
+                m.allocate_clean_block(t.ii, t.jj);
+                let (row, col, inner) = m
+                    .read2_write1((t.ii, t.kk), (t.kk, t.jj), (t.ii, t.jj))
+                    .unwrap();
                 backend.bmod(row, col, inner, bs);
             }
         }
     };
     let stats = match rt {
-        DataflowRt::Omp(omp) => execute_omp(omp, &graph, run),
-        DataflowRt::Gprm(gprm) => execute_gprm(gprm, &graph, run),
+        DataflowRt::Omp(omp) => {
+            execute_omp_opts(omp, &graph, run, cfg.exec)
+        }
+        DataflowRt::Gprm(gprm) => {
+            execute_gprm_opts(gprm, &graph, run, cfg.exec)
+        }
     }
     .expect("dataflow sparselu failed");
     *a = shared.into_inner();
@@ -399,7 +392,7 @@ mod tests {
             sparselu_gprm(
                 &rt,
                 a,
-                &LuRunConfig { backend: LuBackend::Rust, contiguous: true },
+                &LuRunConfig { contiguous: true, ..Default::default() },
             )
         });
         rt.shutdown();
@@ -422,6 +415,22 @@ mod tests {
                 &DataflowRt::Omp(&rt),
                 a,
                 &LuRunConfig::default(),
+            );
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_omp_mutex_baseline_matches_sequential() {
+        let rt = OmpRuntime::new(4);
+        check_against_seq(|a| {
+            sparselu_dataflow(
+                &DataflowRt::Omp(&rt),
+                a,
+                &LuRunConfig {
+                    exec: ExecOpts::mutex_baseline(),
+                    ..Default::default()
+                },
             );
         });
         rt.shutdown();
@@ -456,13 +465,20 @@ mod tests {
     #[test]
     fn dataflow_schedule_is_edge_valid() {
         let rt = OmpRuntime::new(8);
-        let nb = 10;
-        let mut a = genmat(nb, 4);
-        let graph = TaskGraph::sparselu(&a.pattern(), nb);
-        let stats =
-            sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &LuRunConfig::default());
-        assert_eq!(stats.executed, graph.len());
-        check_event_ordering(&graph, &stats.events).unwrap();
+        for exec in
+            [ExecOpts::default(), ExecOpts::mutex_baseline()]
+        {
+            let nb = 10;
+            let mut a = genmat(nb, 4);
+            let graph = TaskGraph::sparselu(&a.pattern(), nb);
+            let stats = sparselu_dataflow(
+                &DataflowRt::Omp(&rt),
+                &mut a,
+                &LuRunConfig { exec: exec.with_events(), ..Default::default() },
+            );
+            assert_eq!(stats.executed, graph.len());
+            check_event_ordering(&graph, &stats.events).unwrap();
+        }
         rt.shutdown();
     }
 

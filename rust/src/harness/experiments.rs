@@ -554,7 +554,7 @@ fn ablation(scale: Scale) -> ExperimentReport {
 // --- Dataflow: DAG scheduling vs the paper's phase barriers -------------
 
 fn dataflow(scale: Scale) -> ExperimentReport {
-    use crate::tilesim::DataflowSim;
+    use crate::tilesim::{DataflowSim, SchedModel};
     // The acceptance workload: Fig-6-shaped SparseLU with NB=32,
     // BS=16 (scaled down by NB only, like fig6, so per-task
     // granularity is preserved).
@@ -594,6 +594,37 @@ fn dataflow(scale: Scale) -> ExperimentReport {
         .filter(|(tiles, _)| *tiles >= 16)
         .map(|&(_, g)| g)
         .collect();
+    // Executor comparison: PR-1 mutex scoreboard vs the lock-free
+    // work-stealing executor, in tasks/sec (claim-cost models from
+    // `tilesim::sim_dataflow::SchedModel`).
+    let workers = [1usize, 2, 4, 8, 16];
+    let mut t2 = Table::new(
+        &format!(
+            "Executor — SparseLU NB={nb}, BS={bs}: mutex scoreboard vs work stealing"
+        ),
+        &["workers", "mutex (s)", "steal (s)", "mutex ktask/s", "steal ktask/s", "steal gain"],
+    );
+    let hz = crate::tilesim::CostModel::default().clock_hz;
+    let mut steal_gains = Vec::new();
+    for &w in &workers {
+        let mutex = DataflowSim::with_sched(w, SchedModel::MutexScoreboard)
+            .run_sparselu(nb, bs);
+        let steal = DataflowSim::with_sched(w, SchedModel::WorkSteal)
+            .run_sparselu(nb, bs);
+        let ktps = |r: &crate::tilesim::SimReport| {
+            r.tasks as f64 / (r.cycles as f64 / hz) / 1e3
+        };
+        let gain = mutex.cycles as f64 / steal.cycles as f64;
+        steal_gains.push((w, gain));
+        t2.row(vec![
+            w.to_string(),
+            vsec(mutex.cycles),
+            vsec(steal.cycles),
+            format!("{:.0}", ktps(&mutex)),
+            format!("{:.0}", ktps(&steal)),
+            spd(gain),
+        ]);
+    }
     let checks = vec![
         ShapeCheck::new(
             "DAG beats the best phase-barrier schedule at every tile count >= 16",
@@ -605,8 +636,26 @@ fn dataflow(scale: Scale) -> ExperimentReport {
             gains.iter().all(|&(_, g)| g > 0.95),
             format!("{gains:?}"),
         ),
+        ShapeCheck::new(
+            "work stealing beats the mutex scoreboard at every count >= 4 workers",
+            steal_gains
+                .iter()
+                .filter(|&&(w, _)| w >= 4)
+                .all(|&(_, g)| g > 1.02),
+            format!("{steal_gains:?}"),
+        ),
+        ShapeCheck::new(
+            "work stealing never loses, even on 1-2 workers",
+            steal_gains.iter().all(|&(_, g)| g > 0.95),
+            format!("{steal_gains:?}"),
+        ),
+        ShapeCheck::new(
+            "the scoreboard's claim cost grows with workers (steal gain widens)",
+            steal_gains.windows(2).all(|w| w[1].1 > w[0].1),
+            format!("{steal_gains:?}"),
+        ),
     ];
-    ExperimentReport { id: "dataflow".into(), tables: vec![t], checks }
+    ExperimentReport { id: "dataflow".into(), tables: vec![t, t2], checks }
 }
 
 #[cfg(test)]

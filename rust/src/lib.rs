@@ -16,8 +16,9 @@
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   block kernels in `artifacts/`.
 //! * [`sched`] — dataflow (DAG) task scheduling: a `TaskGraph` built
-//!   from per-task read/write block sets and a ready-queue executor
-//!   running on both host runtimes.
+//!   from per-task read/write block sets and a lock-free
+//!   work-stealing executor (Chase–Lev deques) running on both host
+//!   runtimes, with the mutex scoreboard kept as a baseline.
 //! * [`apps`] — the paper's two workloads (SparseLU, MatMul) on every
 //!   runtime.
 //! * [`bench`] / [`harness`] — measurement harness and the per-figure
@@ -34,15 +35,44 @@
 //!
 //! [`sched`] replaces the barriers with the true dependence DAG:
 //! [`sched::TaskGraph::sparselu`] records each block task's read/write
-//! sets and derives RAW/WAW/WAR edges, and the ready-queue executor
-//! ([`sched::execute_omp`] / [`sched::execute_gprm`]) runs any task
-//! the moment its predecessors finish. Because edges reproduce the
-//! sequential per-block operation order, results stay bit-identical
-//! (f32) to [`linalg::lu::sparselu_seq`]. The fourth SparseLU
-//! implementation (third parallel driver),
+//! sets and derives RAW/WAW/WAR edges (stored in a flat CSR layout for
+//! the executor's atomic hot path), and the executor
+//! ([`sched::execute_omp_opts`] / [`sched::execute_gprm_opts`]) runs
+//! any task the moment its predecessors finish. Because edges
+//! reproduce the sequential per-block operation order, results stay
+//! bit-identical (f32) to [`linalg::lu::sparselu_seq`].
+//!
+//! The executor itself is **lock-free work stealing** by default
+//! ([`sched::ExecOpts`]): per-worker Chase–Lev deques
+//! ([`sched::StealDeque`], owner-LIFO for cache-hot depth-first
+//! descent, stealer-FIFO for critical-path-first theft), atomic
+//! per-task in-degree countdowns carrying a release/acquire edge per
+//! dependency, a spin→yield→park idle protocol instead of a condvar,
+//! and an *opt-in* event log (per-worker buffers stitched by an atomic
+//! sequence counter) so the default hot path neither locks nor
+//! allocates. The PR-1 single-mutex scoreboard survives behind
+//! `ExecOpts { steal: false, .. }` as the measurable baseline — the
+//! `dataflow` experiment and `benches/steal.rs` race the two (CLI:
+//! `gprm sparselu --runtime dataflow-omp|dataflow-gprm --steal on|off
+//! --events`).
+//!
+//! The fourth SparseLU implementation (third parallel driver),
 //! [`apps::sparselu::sparselu_dataflow`], and the simulator strategy
 //! [`tilesim::DataflowSim`] both schedule through this subsystem; see
-//! DIVERGENCES.md for where this deliberately departs from the paper.
+//! DIVERGENCES.md for where this deliberately departs from the paper
+//! (the paper's GPRM is steal-free).
+// CI enforces `cargo clippy -- -D warnings`; these style lints are
+// opted out crate-wide because they fight the paper-faithful shapes:
+// index-heavy numeric kernels (the explicit loop bounds document the
+// math), BOTS-style many-parameter task constructors, and registry
+// types whose `new()` deliberately mirrors the C++ original.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::new_without_default,
+    clippy::manual_range_contains
+)]
+
 pub mod util;
 pub mod testkit;
 pub mod linalg;

@@ -122,7 +122,7 @@ impl BlockedSparseMatrix {
         Self {
             nb: self.nb,
             bs: self.bs,
-            blocks: self.blocks.iter().map(|b| b.clone()).collect(),
+            blocks: self.blocks.to_vec(),
         }
     }
 
@@ -131,14 +131,60 @@ impl BlockedSparseMatrix {
         self.blocks.iter().map(|b| b.is_some()).collect()
     }
 
-    /// Unsafe split used by the parallel factorisation: returns raw
-    /// pointers to the block storage so distinct blocks can be updated
-    /// from different threads. Safety is the scheduler's obligation —
-    /// the LU dependency structure guarantees disjointness (fwd writes
-    /// row kk, bdiv writes column kk, bmod writes (ii>kk, jj>kk), and
-    /// within a phase each task touches a distinct block).
-    pub fn block_ptr(&self, ii: usize, jj: usize) -> Option<*const f32> {
-        self.blocks[self.idx(ii, jj)].as_ref().map(|b| b.as_ptr())
+    /// Split-borrow: read block `r` while mutably borrowing block `w`
+    /// from the same matrix — the zero-copy form of the `fwd`/`bdiv`
+    /// call sites, which previously had to `.to_vec()` the diagonal
+    /// block to satisfy the borrow checker. `None` if either block is
+    /// unallocated. Panics if `r == w` (use [`Self::block_mut`]).
+    pub fn block_and_mut(
+        &mut self,
+        r: (usize, usize),
+        w: (usize, usize),
+    ) -> Option<(&[f32], &mut [f32])> {
+        let ri = self.idx(r.0, r.1);
+        let wi = self.idx(w.0, w.1);
+        assert_ne!(ri, wi, "read and write block must be distinct");
+        let (read, write) = if ri < wi {
+            let (lo, hi) = self.blocks.split_at_mut(wi);
+            (lo[ri].as_deref(), hi[0].as_deref_mut())
+        } else {
+            let (lo, hi) = self.blocks.split_at_mut(ri);
+            (hi[0].as_deref(), lo[wi].as_deref_mut())
+        };
+        match (read, write) {
+            (Some(read), Some(write)) => Some((read, write)),
+            _ => None,
+        }
+    }
+
+    /// Split-borrow for `bmod`: shared references to blocks `r1` and
+    /// `r2` plus a mutable reference to block `w`, all from the same
+    /// matrix, with no copies. `w` must already be allocated (call
+    /// [`Self::allocate_clean_block`] first on the fill-in path) and
+    /// distinct from both reads; `r1 == r2` is allowed.
+    pub fn read2_write1(
+        &mut self,
+        r1: (usize, usize),
+        r2: (usize, usize),
+        w: (usize, usize),
+    ) -> Option<(&[f32], &[f32], &mut [f32])> {
+        let i1 = self.idx(r1.0, r1.1);
+        let i2 = self.idx(r2.0, r2.1);
+        let iw = self.idx(w.0, w.1);
+        assert!(
+            i1 != iw && i2 != iw,
+            "write block must not alias a read block"
+        );
+        let p1: *const [f32] = self.blocks[i1].as_deref()?;
+        let p2: *const [f32] = self.blocks[i2].as_deref()?;
+        let pw: *mut [f32] = self.blocks[iw].as_deref_mut()?;
+        // SAFETY: the three slots are distinct `Option<Box<[f32]>>`
+        // entries (iw differs from i1 and i2; boxes own disjoint
+        // heap storage even for i1 == i2, which yields two shared
+        // refs), and all three reborrows are tied to the `&mut self`
+        // borrow of this call, so nothing else can touch the matrix
+        // while they live.
+        unsafe { Some((&*p1, &*p2, &mut *pw)) }
     }
 }
 
@@ -159,12 +205,23 @@ pub struct SharedBlocked {
 //   phase reads;
 // * the dataflow driver (`apps::sparselu::sparselu_dataflow`): the
 //   `sched::TaskGraph` chains *every* pair of tasks touching the same
-//   block (RAW/WAW/WAR edges), and the executor's scoreboard mutex
-//   (claim after all predecessors completed under the same lock)
-//   establishes the happens-before between a block's writer and its
-//   readers. If the executor ever drops that mutex for lock-free
-//   claims, it must provide an equivalent release/acquire edge per
-//   dependency or this Sync impl becomes unsound for that caller.
+//   block (RAW/WAW/WAR edges), and the executor provides a
+//   happens-before edge per dependency:
+//   - mutex scoreboard (`ExecOpts::mutex_baseline`): a task is
+//     claimed only after all predecessors completed under the same
+//     lock;
+//   - lock-free work stealing (the default): a completing task
+//     decrements each successor's in-degree with `Release`; the
+//     worker that observes zero issues an `Acquire` fence
+//     (`sched::exec::StealExec::run_one`) and enqueues the successor
+//     through the Chase–Lev deque, whose publish (`Release` fence
+//     before the `bottom` store) / consume (`Acquire` loads + `SeqCst`
+//     CAS on `top`) pair carries the edge to whichever worker claims
+//     it. Either way the block writes of every predecessor are
+//     visible before the successor's kernel runs.
+//   Any future executor must keep providing an equivalent
+//   release/acquire edge per dependency or this Sync impl becomes
+//   unsound for that caller.
 unsafe impl Sync for SharedBlocked {}
 unsafe impl Send for SharedBlocked {}
 
@@ -248,5 +305,57 @@ mod tests {
     fn set_block_shape_checked() {
         let mut m = BlockedSparseMatrix::empty(2, 2);
         m.set_block(0, 0, vec![0.0; 3].into_boxed_slice());
+    }
+
+    #[test]
+    fn block_and_mut_both_orders() {
+        let mut m = BlockedSparseMatrix::empty(2, 2);
+        m.allocate_clean_block(0, 0)[0] = 1.0;
+        m.allocate_clean_block(1, 1)[0] = 2.0;
+        // read index below write index…
+        let (r, w) = m.block_and_mut((0, 0), (1, 1)).unwrap();
+        assert_eq!(r[0], 1.0);
+        w[0] = 5.0;
+        // …and above it.
+        let (r, w) = m.block_and_mut((1, 1), (0, 0)).unwrap();
+        assert_eq!(r[0], 5.0);
+        w[0] = 7.0;
+        assert_eq!(m.block(0, 0).unwrap()[0], 7.0);
+        // Unallocated read → None.
+        assert!(m.block_and_mut((0, 1), (0, 0)).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "must be distinct")]
+    fn block_and_mut_rejects_alias() {
+        let mut m = BlockedSparseMatrix::empty(2, 2);
+        m.allocate_clean_block(0, 0);
+        let _ = m.block_and_mut((0, 0), (0, 0));
+    }
+
+    #[test]
+    fn read2_write1_zero_copy() {
+        let mut m = BlockedSparseMatrix::empty(2, 2);
+        m.allocate_clean_block(0, 1)[0] = 1.0;
+        m.allocate_clean_block(1, 0)[0] = 2.0;
+        m.allocate_clean_block(1, 1)[0] = 3.0;
+        let (r1, r2, w) = m.read2_write1((0, 1), (1, 0), (1, 1)).unwrap();
+        assert_eq!((r1[0], r2[0], w[0]), (1.0, 2.0, 3.0));
+        w[0] = 10.0 * r1[0] + r2[0];
+        assert_eq!(m.block(1, 1).unwrap()[0], 12.0);
+        // Same block twice as reads is fine (two shared refs).
+        let (r1, r2, _) = m.read2_write1((0, 1), (0, 1), (1, 1)).unwrap();
+        assert_eq!(r1[0], r2[0]);
+        // Missing write target → None.
+        assert!(m.read2_write1((0, 1), (1, 0), (0, 0)).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "must not alias")]
+    fn read2_write1_rejects_alias() {
+        let mut m = BlockedSparseMatrix::empty(2, 2);
+        m.allocate_clean_block(0, 0);
+        m.allocate_clean_block(0, 1);
+        let _ = m.read2_write1((0, 0), (0, 1), (0, 0));
     }
 }

@@ -113,6 +113,14 @@ pub fn bmod(row: &[f32], col: &[f32], inner: &mut [f32], bs: usize) {
     // ikj order: stream `col` rows; identical result to the BOTS ijk
     // loop up to f32 rounding (each C element accumulates the same
     // products; f32 addition order within a k-sum is preserved).
+    //
+    // The j loop is unrolled 4-wide over `chunks_exact` so the
+    // in-order scalar pipeline (and LLVM's vectoriser) sees four
+    // independent fused update chains per iteration. Unrolling is
+    // across *distinct* elements of `inner`, so each element still
+    // accumulates its k-products in exactly the sequential order —
+    // results stay bit-identical to the rolled loop (the determinism
+    // tests assert this against `sparselu_seq`).
     for i in 0..bs {
         let irow = &mut inner[i * bs..(i + 1) * bs];
         for k in 0..bs {
@@ -121,7 +129,17 @@ pub fn bmod(row: &[f32], col: &[f32], inner: &mut [f32], bs: usize) {
                 continue;
             }
             let crow = &col[k * bs..(k + 1) * bs];
-            for (iv, cv) in irow.iter_mut().zip(crow) {
+            let mut ic = irow.chunks_exact_mut(4);
+            let mut cc = crow.chunks_exact(4);
+            for (iv, cv) in ic.by_ref().zip(cc.by_ref()) {
+                iv[0] -= rik * cv[0];
+                iv[1] -= rik * cv[1];
+                iv[2] -= rik * cv[2];
+                iv[3] -= rik * cv[3];
+            }
+            for (iv, cv) in
+                ic.into_remainder().iter_mut().zip(cc.remainder())
+            {
                 *iv -= rik * cv;
             }
         }
@@ -142,31 +160,37 @@ pub fn sparselu_seq(a: &mut BlockedSparseMatrix) {
             let d = a.block_mut(kk, kk).expect("diagonal block must exist");
             lu0(d, bs);
         }
-        // fwd phase: blocks right of the diagonal on row kk.
+        // fwd phase: blocks right of the diagonal on row kk. The
+        // diagonal block is only read, the target only written —
+        // split-borrowed, zero copies.
         for jj in kk + 1..nb {
             if a.is_allocated(kk, jj) {
-                let diag = a.block(kk, kk).unwrap().to_vec();
-                let col = a.block_mut(kk, jj).unwrap();
-                fwd(&diag, col, bs);
+                let (diag, col) =
+                    a.block_and_mut((kk, kk), (kk, jj)).unwrap();
+                fwd(diag, col, bs);
             }
         }
         // bdiv phase: blocks below the diagonal on column kk.
         for ii in kk + 1..nb {
             if a.is_allocated(ii, kk) {
-                let diag = a.block(kk, kk).unwrap().to_vec();
-                let row = a.block_mut(ii, kk).unwrap();
-                bdiv(&diag, row, bs);
+                let (diag, row) =
+                    a.block_and_mut((kk, kk), (ii, kk)).unwrap();
+                bdiv(diag, row, bs);
             }
         }
-        // bmod phase: trailing update (allocates fill-in).
+        // bmod phase: trailing update (allocates fill-in). The row and
+        // column panels are finalised by the phases above and distinct
+        // from the target (ii > kk, jj > kk), so all three borrows
+        // split cleanly.
         for ii in kk + 1..nb {
             if a.is_allocated(ii, kk) {
                 for jj in kk + 1..nb {
                     if a.is_allocated(kk, jj) {
-                        let row = a.block(ii, kk).unwrap().to_vec();
-                        let col = a.block(kk, jj).unwrap().to_vec();
-                        let inner = a.allocate_clean_block(ii, jj);
-                        bmod(&row, &col, inner, bs);
+                        a.allocate_clean_block(ii, jj);
+                        let (row, col, inner) = a
+                            .read2_write1((ii, kk), (kk, jj), (ii, jj))
+                            .unwrap();
+                        bmod(row, col, inner, bs);
                     }
                 }
             }

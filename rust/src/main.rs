@@ -23,6 +23,7 @@ use gprm::linalg::lu::sparselu_seq;
 use gprm::linalg::verify::lu_residual_sparse;
 use gprm::omp::OmpRuntime;
 use gprm::runtime::{default_artifact_dir, EngineService, Manifest};
+use gprm::sched::{check_event_ordering, ExecOpts, ExecStats, TaskGraph};
 use gprm::util::cli::{usage, Args, OptSpec};
 
 fn main() {
@@ -112,8 +113,10 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
         OptSpec { name: "contiguous", help: "contiguous worksharing (gprm)", default: None, is_flag: true },
         OptSpec { name: "pjrt", help: "execute block kernels via PJRT artifacts", default: None, is_flag: true },
         OptSpec { name: "pin", help: "pin gprm tiles to cores", default: None, is_flag: true },
+        OptSpec { name: "steal", help: "dataflow executor: on = lock-free work stealing (default), off = mutex-scoreboard baseline", default: Some("on"), is_flag: false },
+        OptSpec { name: "events", help: "dataflow: record the schedule event log and audit it", default: None, is_flag: true },
     ];
-    let args = match parse(argv, &["contiguous", "pjrt", "pin", "help"]) {
+    let args = match parse(argv, &["contiguous", "pjrt", "pin", "events", "help"]) {
         Ok(a) => a,
         Err(e) => return err_usage("gprm sparselu", &e, &specs),
     };
@@ -150,12 +153,22 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
     } else {
         None
     };
+    let steal = match args.get("steal").unwrap_or("on") {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("--steal must be on|off, got {other:?}");
+            return 2;
+        }
+    };
+    let exec = ExecOpts { steal, record_events: args.has_flag("events") };
     let cfg = LuRunConfig {
         backend: match &engine {
             Some(svc) => LuBackend::Pjrt(svc),
             None => LuBackend::Rust,
         },
         contiguous: args.has_flag("contiguous"),
+        exec,
     };
     println!(
         "sparselu: {nb}x{nb} blocks of {bs}x{bs} ({} matrix), runtime={runtime}, threads={threads}",
@@ -163,6 +176,7 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
     );
     let mut a = genmat(nb, bs);
     let orig = a.to_dense();
+    let pattern0 = a.pattern();
     println!(
         "matrix: {} / {} blocks allocated ({:.1}% sparse)",
         a.allocated_blocks(),
@@ -189,11 +203,10 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             let rt = OmpRuntime::new(threads);
             let stats =
                 sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &cfg);
-            println!(
-                "dataflow: {} tasks, peak ready queue {}",
-                stats.executed, stats.peak_ready
-            );
             rt.shutdown();
+            if !report_dataflow(nb, &pattern0, &cfg.exec, &stats) {
+                return 1;
+            }
         }
         "dataflow-gprm" => {
             let rt = GprmRuntime::new(
@@ -202,11 +215,10 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             );
             let stats =
                 sparselu_dataflow(&DataflowRt::Gprm(&rt), &mut a, &cfg);
-            println!(
-                "dataflow: {} tasks, peak ready queue {}",
-                stats.executed, stats.peak_ready
-            );
             rt.shutdown();
+            if !report_dataflow(nb, &pattern0, &cfg.exec, &stats) {
+                return 1;
+            }
         }
         other => {
             eprintln!("unknown runtime {other:?}");
@@ -318,6 +330,41 @@ fn cmd_artifacts(argv: &[String]) -> i32 {
                 }
             }
             0
+        }
+    }
+}
+
+/// Print dataflow executor statistics and, when the event log was
+/// recorded (`--events`), audit it against the task graph built from
+/// the pre-factorisation allocation pattern. Returns `false` when the
+/// audit fails.
+fn report_dataflow(
+    nb: usize,
+    pattern0: &[bool],
+    exec: &ExecOpts,
+    stats: &ExecStats,
+) -> bool {
+    println!(
+        "dataflow[{}]: {} tasks, peak ready {}",
+        if exec.steal { "work-stealing" } else { "mutex-scoreboard" },
+        stats.executed,
+        stats.peak_ready
+    );
+    if !exec.record_events {
+        return true;
+    }
+    let graph = TaskGraph::sparselu(pattern0, nb);
+    match check_event_ordering(&graph, &stats.events) {
+        Ok(()) => {
+            println!(
+                "event log: {} events, edge order VALID",
+                stats.events.len()
+            );
+            true
+        }
+        Err(e) => {
+            eprintln!("event log INVALID: {e}");
+            false
         }
     }
 }

@@ -1,0 +1,264 @@
+//! A hand-rolled Chase–Lev work-stealing deque over task indices.
+//!
+//! One deque per worker: the **owner** pushes and pops at the bottom
+//! (LIFO — the task it just released is the cache-hot one), **thieves**
+//! steal from the top (FIFO — the oldest, coldest task, which is also
+//! the one closest to the critical path in a depth-first schedule).
+//! This is the owner-LIFO/stealer-FIFO policy that preserves the
+//! depth-first locality of the PR-1 mutex scoreboard without any lock.
+//!
+//! The implementation follows the C11 formulation of Chase–Lev
+//! (Lê, Pop, Cohen & Zappa Nardelli, *Correct and Efficient
+//! Work-Stealing for Weak Memory Models*, PPoPP'13) with one
+//! simplification: the buffer is sized up front for the whole task
+//! graph (`with_capacity(graph.len())`), so the resize path — the only
+//! part of Chase–Lev requiring memory reclamation — is statically
+//! unreachable. `top` and `bottom` grow monotonically apart by at most
+//! the capacity, which the owner `debug_assert`s on every push.
+//!
+//! Memory-ordering contract (verified against the paper's fences):
+//!
+//! * `push` publishes the slot with a `Release` fence before the
+//!   `bottom` store, so a thief that observes the new `bottom`
+//!   (`Acquire`) also observes the slot contents — this is the edge
+//!   that hands a task's released block writes to its stealer.
+//! * `pop` and `steal` race on the last element through a `SeqCst`
+//!   CAS on `top`; the loser observes the CAS failure and retries
+//!   elsewhere. The `SeqCst` fences order the owner's `bottom`
+//!   decrement against the thief's `top` read exactly as in the paper.
+
+use std::sync::atomic::{fence, AtomicIsize, AtomicUsize, Ordering};
+
+/// What a steal attempt returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Steal {
+    /// A task was stolen.
+    Taken(usize),
+    /// The deque was observed empty.
+    Empty,
+    /// Lost a race with the owner or another thief; worth retrying.
+    Abort,
+}
+
+/// Fixed-capacity Chase–Lev deque of `usize` task ids.
+pub struct StealDeque {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    buf: Box<[AtomicUsize]>,
+    mask: isize,
+}
+
+impl StealDeque {
+    /// A deque able to hold `min_cap` tasks at once (rounded up to a
+    /// power of two). Executors size this to the task-graph length, so
+    /// overflow is impossible by construction.
+    pub fn with_capacity(min_cap: usize) -> Self {
+        let cap = min_cap.max(2).next_power_of_two();
+        let buf: Vec<AtomicUsize> =
+            (0..cap).map(|_| AtomicUsize::new(0)).collect();
+        Self {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: buf.into_boxed_slice(),
+            mask: (cap - 1) as isize,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, i: isize) -> &AtomicUsize {
+        &self.buf[(i & self.mask) as usize]
+    }
+
+    /// Owner-only: push `task` at the bottom (LIFO end).
+    ///
+    /// Panics if the deque is full — a hard assert even in release:
+    /// wrapping onto a live slot would silently lose the overwritten
+    /// task (executor hang) or let a thief claim it twice (a data
+    /// race on the block it writes). Executors size the deque to the
+    /// whole task graph, so the branch never fires for them; the cost
+    /// is one cold compare per push.
+    pub fn push(&self, task: usize) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        assert!(
+            b - t <= self.mask,
+            "StealDeque over capacity: sized below graph length"
+        );
+        self.slot(b).store(task, Ordering::Relaxed);
+        // Publish the slot before the new bottom becomes visible.
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner-only: pop from the bottom (LIFO end).
+    pub fn pop(&self) -> Option<usize> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        // Order the bottom decrement against concurrent top reads.
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            let task = self.slot(b).load(Ordering::Relaxed);
+            if t == b {
+                // Last element: race any thief through top.
+                let won = self
+                    .top
+                    .compare_exchange(
+                        t,
+                        t + 1,
+                        Ordering::SeqCst,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok();
+                self.bottom.store(b + 1, Ordering::Relaxed);
+                return won.then_some(task);
+            }
+            Some(task)
+        } else {
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Thief: steal from the top (FIFO end). Any thread but the owner.
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t < b {
+            let task = self.slot(t).load(Ordering::Relaxed);
+            if self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok()
+            {
+                Steal::Taken(task)
+            } else {
+                Steal::Abort
+            }
+        } else {
+            Steal::Empty
+        }
+    }
+
+    /// Approximate occupancy (racy; diagnostics only).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        b <= t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn lifo_for_owner() {
+        let d = StealDeque::with_capacity(8);
+        d.push(1);
+        d.push(2);
+        d.push(3);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), Some(1));
+        assert_eq!(d.pop(), None);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn fifo_for_thief() {
+        let d = StealDeque::with_capacity(8);
+        d.push(1);
+        d.push(2);
+        d.push(3);
+        assert_eq!(d.steal(), Steal::Taken(1));
+        assert_eq!(d.steal(), Steal::Taken(2));
+        // Owner takes the newest, thief took the oldest.
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn capacity_rounds_up_and_wraps() {
+        let d = StealDeque::with_capacity(3); // rounds to 4
+        for round in 0..10 {
+            d.push(round);
+            d.push(round + 100);
+            assert_eq!(d.pop(), Some(round + 100));
+            assert_eq!(d.steal(), Steal::Taken(round));
+        }
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn concurrent_owner_and_thieves_lose_nothing() {
+        // The owner pushes N tasks and pops; 3 thieves steal. Every
+        // task must be claimed exactly once.
+        const N: usize = 20_000;
+        let d = Arc::new(StealDeque::with_capacity(N));
+        let claimed: Arc<Vec<AtomicU64>> =
+            Arc::new((0..N).map(|_| AtomicU64::new(0)).collect());
+        let mut thieves = Vec::new();
+        for _ in 0..3 {
+            let d = d.clone();
+            let claimed = claimed.clone();
+            thieves.push(std::thread::spawn(move || loop {
+                match d.steal() {
+                    Steal::Taken(x) => {
+                        claimed[x].fetch_add(1, Ordering::Relaxed);
+                    }
+                    Steal::Empty => {
+                        if claimed[N - 1].load(Ordering::Relaxed) > 0
+                            || claimed
+                                .iter()
+                                .map(|c| c.load(Ordering::Relaxed))
+                                .sum::<u64>()
+                                == N as u64
+                        {
+                            // Owner finished pushing and the deque
+                            // drained; double-check then exit.
+                            if d.is_empty() {
+                                return;
+                            }
+                        }
+                        std::hint::spin_loop();
+                    }
+                    Steal::Abort => std::hint::spin_loop(),
+                }
+            }));
+        }
+        // Owner: push all, interleaving pops.
+        for i in 0..N {
+            d.push(i);
+            if i % 3 == 0 {
+                if let Some(x) = d.pop() {
+                    claimed[x].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        while let Some(x) = d.pop() {
+            claimed[x].fetch_add(1, Ordering::Relaxed);
+        }
+        for th in thieves {
+            th.join().unwrap();
+        }
+        for (i, c) in claimed.iter().enumerate() {
+            assert_eq!(
+                c.load(Ordering::Relaxed),
+                1,
+                "task {i} claimed {} times",
+                c.load(Ordering::Relaxed)
+            );
+        }
+    }
+}

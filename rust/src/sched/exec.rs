@@ -1,40 +1,97 @@
-//! Ready-queue execution of a [`TaskGraph`] on the host runtimes.
+//! Execution of a [`TaskGraph`] on the host runtimes — a lock-free
+//! work-stealing executor (the default), with the PR-1 single-mutex
+//! scoreboard kept as the measurable baseline.
 //!
-//! The executor keeps one shared scoreboard: a countdown in-degree per
-//! task and a deque of ready tasks. Workers claim from the front;
-//! completing a task decrements its successors and pushes the newly
-//! ready ones to the *front* (depth-first — the block a worker just
-//! produced is what its successor reads, so the LIFO end is the
-//! cache-friendly, work-stealing-style hot path), while blocked
-//! workers wake through a condvar. There are **no phase barriers**:
-//! a `bmod` of step `kk` can run while `fwd` tasks of step `kk` are
-//! still in flight elsewhere, which is exactly the concurrency the
-//! paper's level-synchronous Listings 5–6 forfeit.
+//! # Work-stealing executor ([`ExecOpts::steal`] = `true`)
 //!
-//! Two backends drive the same scoreboard:
+//! The paper's headline claim is that task-*management* efficiency is
+//! what separates GPRM from OpenMP at high core counts. The mutex
+//! scoreboard serialised every claim, completion and event append
+//! through one lock — exactly the central-queue pathology of the
+//! paper's §VI. The lock-free executor removes all of it from the hot
+//! path:
 //!
-//! * [`execute_omp`] — every team thread of an [`OmpRuntime`] parallel
-//!   region runs the worker loop;
-//! * [`execute_gprm`] — `CL` GPRM coordinator tasks (one per tile via
-//!   [`GprmRuntime::par_invoke`]) each run the worker loop, mapping
-//!   ready tasks onto tiles.
+//! * **per-worker Chase–Lev deques** ([`super::deque::StealDeque`]):
+//!   the owner pushes/pops released tasks at the LIFO end (the block a
+//!   worker just produced is what its successor reads — the same
+//!   depth-first cache-hot policy the scoreboard's `push_front` had),
+//!   thieves take the FIFO end;
+//! * **atomic in-degree countdown**: completing a task decrements each
+//!   successor's counter with `Release`; the worker that brings a
+//!   counter to zero issues an `Acquire` fence before enqueueing the
+//!   successor. Together with the deque's publish/consume edge this
+//!   re-establishes, per dependency edge, the happens-before the
+//!   scoreboard mutex used to provide wholesale — the contract the
+//!   `SharedBlocked` `Sync` impl (`linalg/blocked.rs`) relies on;
+//! * **idle protocol** spin → yield → `park_timeout`, replacing the
+//!   condvar. No completion ever signals anybody: a parked worker
+//!   wakes on a bounded timer and re-scans every deque, so the
+//!   worst-case added latency is one park quantum, and only when the
+//!   whole machine was momentarily out of ready tasks. (The mutex
+//!   baseline *does* need wakeups — see the notes in
+//!   [`MutexScoreboard::work`].)
 //!
-//! Every claim and completion is recorded in an event log
-//! ([`ExecStats::events`]) so tests can assert edge ordering.
+//! The event log is **opt-in** ([`ExecOpts::record_events`]). When
+//! enabled, each worker appends to its own pre-locked buffer, tagging
+//! events with a shared atomic sequence counter; buffers are stitched
+//! into one causally-valid order afterwards (the counter is an RMW on
+//! a single atomic, so two ordered events — a predecessor's `End`
+//! before a successor's `Start` — can never observe inverted tags).
+//! When disabled (the default), the hot path allocates nothing and
+//! locks nothing.
 
+use super::deque::{Steal, StealDeque};
 use super::graph::{TaskGraph, TaskId};
 use crate::coordinator::GprmRuntime;
 use crate::omp::OmpRuntime;
 use std::collections::VecDeque;
+
+/// One worker's tagged event buffer (sequence tag, event).
+type EventBuf = Vec<(u64, Event)>;
+use std::sync::atomic::{
+    fence, AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
 use std::sync::{Condvar, Mutex};
 
-/// One scheduler event, in global scoreboard order.
+/// One scheduler event, in (stitched) causal order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Event {
-    /// Task claimed by a worker (popped from the ready queue).
+    /// Task claimed by a worker (popped or stolen).
     Start(TaskId),
     /// Task finished; successors (possibly) released.
     End(TaskId),
+}
+
+/// Executor configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOpts {
+    /// `true` (default): the lock-free work-stealing executor.
+    /// `false`: the PR-1 mutex scoreboard, kept as the comparison
+    /// baseline (`benches/steal.rs` races the two).
+    pub steal: bool,
+    /// Record the `Start`/`End` event log. Off by default: benches and
+    /// the harness run with a silent hot path; tests that audit
+    /// schedules turn it on and feed [`ExecStats::events`] to
+    /// [`check_event_ordering`].
+    pub record_events: bool,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        Self { steal: true, record_events: false }
+    }
+}
+
+impl ExecOpts {
+    /// The mutex-scoreboard baseline, log off.
+    pub fn mutex_baseline() -> Self {
+        Self { steal: false, record_events: false }
+    }
+
+    /// Same executor, with the event log on.
+    pub fn with_events(self) -> Self {
+        Self { record_events: true, ..self }
+    }
 }
 
 /// Outcome of one dataflow execution.
@@ -42,9 +99,11 @@ pub enum Event {
 pub struct ExecStats {
     /// Tasks executed (== graph size on success).
     pub executed: usize,
-    /// Claim/finish log in scoreboard order.
+    /// Claim/finish log in causal order (empty unless
+    /// [`ExecOpts::record_events`]).
     pub events: Vec<Event>,
-    /// Largest ready-queue length observed.
+    /// Largest ready-set size observed (approximate under stealing:
+    /// relaxed counters, exact on the mutex baseline).
     pub peak_ready: usize,
 }
 
@@ -91,6 +150,216 @@ pub fn check_event_ordering(graph: &TaskGraph, events: &[Event]) -> Result<(), S
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Lock-free work-stealing executor
+// ---------------------------------------------------------------------
+
+/// Idle backoff: spin with exponentially more `spin_loop` hints, then
+/// yield the timeslice, then park on a bounded timer. Nobody ever
+/// unparks a worker — new work is discovered by re-scanning the
+/// deques, and termination by the `remaining` counter — so the park
+/// stage is a pure bounded nap, not a lost-wakeup hazard.
+struct Backoff {
+    fails: u32,
+}
+
+impl Backoff {
+    const SPIN_LIMIT: u32 = 6;
+    const YIELD_LIMIT: u32 = 16;
+    const PARK_US: u64 = 50;
+
+    fn new() -> Self {
+        Self { fails: 0 }
+    }
+
+    fn reset(&mut self) {
+        self.fails = 0;
+    }
+
+    fn idle(&mut self) {
+        if self.fails < Self::SPIN_LIMIT {
+            for _ in 0..(1u32 << self.fails) {
+                std::hint::spin_loop();
+            }
+        } else if self.fails < Self::YIELD_LIMIT {
+            std::thread::yield_now();
+        } else {
+            std::thread::park_timeout(std::time::Duration::from_micros(
+                Self::PARK_US,
+            ));
+        }
+        self.fails = self.fails.saturating_add(1);
+    }
+}
+
+/// Shared state of one lock-free execution.
+struct StealExec<'g> {
+    graph: &'g TaskGraph,
+    deques: Vec<StealDeque>,
+    /// Per-task countdown to readiness. `Release` on decrement,
+    /// `Acquire` fence at zero: the claim of a task happens-after
+    /// every predecessor's completion (and hence its block writes).
+    indegree: Vec<AtomicUsize>,
+    /// Unexecuted-task count; reaching zero is the drain signal.
+    remaining: AtomicUsize,
+    poisoned: AtomicBool,
+    /// Ready-set size / high-water mark (relaxed; stats only).
+    ready_len: AtomicUsize,
+    peak_ready: AtomicUsize,
+    /// Event-stitching clock (see module docs).
+    seq: AtomicU64,
+    /// Per-worker event buffers; each worker locks only its own slot,
+    /// once, for the whole run (uncontended by construction). Empty
+    /// when the log is off.
+    logs: Vec<Mutex<EventBuf>>,
+    record: bool,
+}
+
+impl<'g> StealExec<'g> {
+    fn new(graph: &'g TaskGraph, n_workers: usize, record: bool) -> Self {
+        let n = graph.len();
+        let deques: Vec<StealDeque> =
+            (0..n_workers).map(|_| StealDeque::with_capacity(n)).collect();
+        let indegree: Vec<AtomicUsize> = graph
+            .indegrees()
+            .into_iter()
+            .map(AtomicUsize::new)
+            .collect();
+        let roots = graph.roots();
+        // Seed roots round-robin across the deques (single-threaded:
+        // the runtime's region start publishes them to the workers).
+        for (i, &t) in roots.iter().enumerate() {
+            deques[i % n_workers].push(t);
+        }
+        let cap = if record { 2 * n / n_workers.max(1) + 2 } else { 0 };
+        Self {
+            graph,
+            deques,
+            indegree,
+            remaining: AtomicUsize::new(n),
+            poisoned: AtomicBool::new(false),
+            ready_len: AtomicUsize::new(roots.len()),
+            peak_ready: AtomicUsize::new(roots.len()),
+            seq: AtomicU64::new(0),
+            logs: (0..n_workers)
+                .map(|_| Mutex::new(Vec::with_capacity(cap)))
+                .collect(),
+            record,
+        }
+    }
+
+    /// Worker `w`'s loop: pop own deque (LIFO), else steal (FIFO),
+    /// else back off; until the graph drains or a sibling poisons.
+    fn work(&self, w: usize, run: &(dyn Fn(TaskId) + Sync)) {
+        let me = &self.deques[w];
+        let n_workers = self.deques.len();
+        let mut log = if self.record {
+            Some(self.logs[w].lock().unwrap())
+        } else {
+            None
+        };
+        let mut backoff = Backoff::new();
+        loop {
+            if self.poisoned.load(Ordering::Acquire)
+                || self.remaining.load(Ordering::Acquire) == 0
+            {
+                return;
+            }
+            let task = me.pop().or_else(|| self.try_steal(w, n_workers));
+            match task {
+                Some(t) => {
+                    backoff.reset();
+                    self.run_one(t, me, run, log.as_deref_mut());
+                }
+                None => backoff.idle(),
+            }
+        }
+    }
+
+    /// One round of stealing: scan every other deque once, starting
+    /// after our own (`Abort` counts as a miss; the backoff loop
+    /// retries the whole scan).
+    fn try_steal(&self, w: usize, n_workers: usize) -> Option<usize> {
+        for k in 1..n_workers {
+            match self.deques[(w + k) % n_workers].steal() {
+                Steal::Taken(t) => return Some(t),
+                Steal::Empty | Steal::Abort => {}
+            }
+        }
+        None
+    }
+
+    fn run_one(
+        &self,
+        t: usize,
+        me: &StealDeque,
+        run: &(dyn Fn(TaskId) + Sync),
+        mut log: Option<&mut EventBuf>,
+    ) {
+        self.ready_len.fetch_sub(1, Ordering::Relaxed);
+        if let Some(log) = log.as_deref_mut() {
+            let s = self.seq.fetch_add(1, Ordering::Relaxed);
+            log.push((s, Event::Start(TaskId(t))));
+        }
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(TaskId(t))
+        }));
+        if let Err(e) = r {
+            // Unblock every worker, then let the host runtime's own
+            // panic plumbing report the failure.
+            self.poisoned.store(true, Ordering::Release);
+            std::panic::resume_unwind(e);
+        }
+        if let Some(log) = log.as_deref_mut() {
+            let s = self.seq.fetch_add(1, Ordering::Relaxed);
+            log.push((s, Event::End(TaskId(t))));
+        }
+        let mut batch_peak = 0usize;
+        for &s in self.graph.succs(TaskId(t)) {
+            // Release: our block writes become visible to whichever
+            // worker observes this counter reach zero.
+            if self.indegree[s].fetch_sub(1, Ordering::Release) == 1 {
+                // Acquire the writes of *all* predecessors (the
+                // Arc::drop pattern) before publishing the task.
+                fence(Ordering::Acquire);
+                // Count the task ready *before* publishing it: a thief
+                // may claim it (and fetch_sub ready_len) the instant
+                // it lands in the deque, and the counter must never
+                // dip below zero (usize would wrap). The fetch_add's
+                // return value is the ready-set size at its
+                // linearization point — the high-water mark tracks
+                // that, not a post-batch re-read a fast thief could
+                // already have drained.
+                let len = self.ready_len.fetch_add(1, Ordering::Relaxed) + 1;
+                batch_peak = batch_peak.max(len);
+                me.push(s);
+            }
+        }
+        if batch_peak > 0 {
+            self.peak_ready.fetch_max(batch_peak, Ordering::Relaxed);
+        }
+        self.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    fn into_stats(self) -> ExecStats {
+        let executed = self.graph.len() - self.remaining.load(Ordering::Acquire);
+        let mut tagged: Vec<(u64, Event)> = Vec::new();
+        for slot in &self.logs {
+            tagged.extend(slot.lock().unwrap().iter().copied());
+        }
+        tagged.sort_unstable_by_key(|&(s, _)| s);
+        ExecStats {
+            executed,
+            events: tagged.into_iter().map(|(_, e)| e).collect(),
+            peak_ready: self.peak_ready.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mutex scoreboard (PR-1 baseline)
+// ---------------------------------------------------------------------
+
 struct Scoreboard {
     ready: VecDeque<usize>,
     indegree: Vec<usize>,
@@ -100,15 +369,18 @@ struct Scoreboard {
     poisoned: bool,
 }
 
-/// The shared ready-queue scoreboard both backends drive.
-struct Dataflow<'g> {
+/// The single-mutex ready-queue scoreboard — PR-1's executor, retained
+/// behind [`ExecOpts::mutex_baseline`] so the work-stealing gain stays
+/// measurable (`benches/steal.rs`, the `dataflow` experiment).
+struct MutexScoreboard<'g> {
     graph: &'g TaskGraph,
     st: Mutex<Scoreboard>,
     cv: Condvar,
+    record: bool,
 }
 
-impl<'g> Dataflow<'g> {
-    fn new(graph: &'g TaskGraph) -> Self {
+impl<'g> MutexScoreboard<'g> {
+    fn new(graph: &'g TaskGraph, record: bool) -> Self {
         let indegree = graph.indegrees();
         let ready: VecDeque<usize> = graph.roots().into();
         let n = graph.len();
@@ -119,10 +391,11 @@ impl<'g> Dataflow<'g> {
                 ready,
                 indegree,
                 remaining: n,
-                events: Vec::with_capacity(2 * n),
+                events: Vec::with_capacity(if record { 2 * n } else { 0 }),
                 poisoned: false,
             }),
             cv: Condvar::new(),
+            record,
         }
     }
 
@@ -138,7 +411,9 @@ impl<'g> Dataflow<'g> {
                 st = self.cv.wait(st).unwrap();
                 continue;
             };
-            st.events.push(Event::Start(TaskId(t)));
+            if self.record {
+                st.events.push(Event::Start(TaskId(t)));
+            }
             drop(st);
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 run(TaskId(t))
@@ -152,7 +427,9 @@ impl<'g> Dataflow<'g> {
                 drop(st);
                 std::panic::resume_unwind(e);
             }
-            st.events.push(Event::End(TaskId(t)));
+            if self.record {
+                st.events.push(Event::End(TaskId(t)));
+            }
             st.remaining -= 1;
             let mut released = 0usize;
             for &s in self.graph.succs(TaskId(t)) {
@@ -165,13 +442,22 @@ impl<'g> Dataflow<'g> {
                 }
             }
             st.peak_ready = st.peak_ready.max(st.ready.len());
-            // Only wake sleepers when there is something new for them:
-            // fresh ready tasks, or the drain signal. A completion
-            // that releases nothing (fan-in chains late in the
-            // factorisation) would otherwise thundering-herd every
-            // blocked worker through the mutex for no work.
-            if released > 0 || st.remaining == 0 {
+            if st.remaining == 0 {
+                // Drain: every sleeper must observe remaining == 0
+                // and exit, so this one is a broadcast.
                 self.cv.notify_all();
+            } else {
+                // Wake exactly as many sleepers as there are new
+                // tasks. `notify_all` here would thundering-herd every
+                // blocked worker through the mutex to fight over
+                // `released` tasks (and over zero tasks for fan-in
+                // completions late in the factorisation). The
+                // lock-free executor needs neither form of wakeup:
+                // idle workers rediscover work by scanning deques on a
+                // bounded timer, so completions never signal anyone.
+                for _ in 0..released {
+                    self.cv.notify_one();
+                }
             }
         }
     }
@@ -186,39 +472,85 @@ impl<'g> Dataflow<'g> {
     }
 }
 
-/// Execute `graph` on an OpenMP-style team: every team thread runs the
-/// worker loop inside one parallel region. `run` receives the id of a
-/// claimed task and must perform its kernel; it may be called from any
-/// team thread, one task at a time per thread.
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Shared executor-dispatch core: build the executor `opts` selects,
+/// hand `spawn` a per-worker entry point (`spawn` must run it on every
+/// worker and block until all return), then collect the stats. Both
+/// runtime front ends funnel through here so the steal/mutex protocol
+/// lives in one place.
+fn run_with(
+    graph: &TaskGraph,
+    n_workers: usize,
+    opts: ExecOpts,
+    run: &(dyn Fn(TaskId) + Sync),
+    spawn: impl FnOnce(&(dyn Fn(usize) + Sync)) -> Result<(), String>,
+) -> Result<ExecStats, String> {
+    let stats = if opts.steal {
+        let ex = StealExec::new(graph, n_workers, opts.record_events);
+        let exr = &ex;
+        spawn(&|w| exr.work(w, run))?;
+        ex.into_stats()
+    } else {
+        let sb = MutexScoreboard::new(graph, opts.record_events);
+        let sbr = &sb;
+        spawn(&|_w| sbr.work(run))?;
+        sb.into_stats()
+    };
+    debug_assert_eq!(stats.executed, graph.len());
+    Ok(stats)
+}
+
+/// Execute `graph` on an OpenMP-style team with default options
+/// (work-stealing, no event log). See [`execute_omp_opts`].
 pub fn execute_omp(
     rt: &OmpRuntime,
     graph: &TaskGraph,
     run: impl Fn(TaskId) + Sync,
 ) -> Result<ExecStats, String> {
-    let df = Dataflow::new(graph);
-    let dfr = &df;
-    let runr: &(dyn Fn(TaskId) + Sync) = &run;
-    rt.parallel(|_ctx| dfr.work(runr))?;
-    let stats = df.into_stats();
-    debug_assert_eq!(stats.executed, graph.len());
-    Ok(stats)
+    execute_omp_opts(rt, graph, run, ExecOpts::default())
 }
 
-/// Execute `graph` on the GPRM machine: `CL` coordinator task
-/// instances (one per tile, wrapping modulo the tile count) each run
-/// the worker loop, pulling ready tasks onto their tile.
+/// Execute `graph` on an OpenMP-style team: every team thread runs the
+/// worker loop inside one parallel region. `run` receives the id of a
+/// claimed task and must perform its kernel; it may be called from any
+/// team thread, one task at a time per thread.
+pub fn execute_omp_opts(
+    rt: &OmpRuntime,
+    graph: &TaskGraph,
+    run: impl Fn(TaskId) + Sync,
+    opts: ExecOpts,
+) -> Result<ExecStats, String> {
+    run_with(graph, rt.num_threads(), opts, &run, |worker| {
+        rt.parallel(|ctx| worker(ctx.thread_num())).map(|_| ())
+    })
+}
+
+/// Execute `graph` on the GPRM machine with default options
+/// (work-stealing, no event log). See [`execute_gprm_opts`].
 pub fn execute_gprm(
     rt: &GprmRuntime,
     graph: &TaskGraph,
     run: impl Fn(TaskId) + Sync,
 ) -> Result<ExecStats, String> {
-    let df = Dataflow::new(graph);
-    let dfr = &df;
-    let runr: &(dyn Fn(TaskId) + Sync) = &run;
-    rt.par_invoke(rt.concurrency_level(), |_ind| dfr.work(runr))?;
-    let stats = df.into_stats();
-    debug_assert_eq!(stats.executed, graph.len());
-    Ok(stats)
+    execute_gprm_opts(rt, graph, run, ExecOpts::default())
+}
+
+/// Execute `graph` on the GPRM machine: `CL` coordinator task
+/// instances (one per tile, wrapping modulo the tile count) each run
+/// the worker loop, mapping ready tasks onto tiles. Work stealing here
+/// is *our* extension: the paper's GPRM distributes work statically
+/// and steal-free (see DIVERGENCES.md).
+pub fn execute_gprm_opts(
+    rt: &GprmRuntime,
+    graph: &TaskGraph,
+    run: impl Fn(TaskId) + Sync,
+    opts: ExecOpts,
+) -> Result<ExecStats, String> {
+    let cl = rt.concurrency_level();
+    run_with(graph, cl, opts, &run, |worker| rt.par_invoke(cl, worker))
 }
 
 #[cfg(test)]
@@ -231,18 +563,32 @@ mod tests {
         TaskGraph::sparselu(&genmat_pattern(nb), nb)
     }
 
+    fn both_modes() -> [ExecOpts; 2] {
+        [
+            ExecOpts::default().with_events(),
+            ExecOpts::mutex_baseline().with_events(),
+        ]
+    }
+
     #[test]
     fn omp_executes_every_task_in_edge_order() {
         let rt = OmpRuntime::new(4);
         let g = lu_graph(8);
-        let hits = AtomicUsize::new(0);
-        let stats = execute_omp(&rt, &g, |_| {
-            hits.fetch_add(1, Ordering::Relaxed);
-        })
-        .unwrap();
-        assert_eq!(hits.load(Ordering::Relaxed), g.len());
-        assert_eq!(stats.executed, g.len());
-        check_event_ordering(&g, &stats.events).unwrap();
+        for opts in both_modes() {
+            let hits = AtomicUsize::new(0);
+            let stats = execute_omp_opts(
+                &rt,
+                &g,
+                |_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                },
+                opts,
+            )
+            .unwrap();
+            assert_eq!(hits.load(Ordering::Relaxed), g.len());
+            assert_eq!(stats.executed, g.len());
+            check_event_ordering(&g, &stats.events).unwrap();
+        }
         rt.shutdown();
     }
 
@@ -250,13 +596,30 @@ mod tests {
     fn gprm_executes_every_task_in_edge_order() {
         let rt = GprmRuntime::with_tiles(6);
         let g = lu_graph(8);
-        let hits = AtomicUsize::new(0);
-        let stats = execute_gprm(&rt, &g, |_| {
-            hits.fetch_add(1, Ordering::Relaxed);
-        })
-        .unwrap();
-        assert_eq!(hits.load(Ordering::Relaxed), g.len());
-        check_event_ordering(&g, &stats.events).unwrap();
+        for opts in both_modes() {
+            let hits = AtomicUsize::new(0);
+            let stats = execute_gprm_opts(
+                &rt,
+                &g,
+                |_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                },
+                opts,
+            )
+            .unwrap();
+            assert_eq!(hits.load(Ordering::Relaxed), g.len());
+            check_event_ordering(&g, &stats.events).unwrap();
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn event_log_off_by_default_and_hot_path_silent() {
+        let rt = OmpRuntime::new(4);
+        let g = lu_graph(8);
+        let stats = execute_omp(&rt, &g, |_| {}).unwrap();
+        assert_eq!(stats.executed, g.len());
+        assert!(stats.events.is_empty(), "log must be opt-in");
         rt.shutdown();
     }
 
@@ -264,12 +627,14 @@ mod tests {
     fn single_worker_degenerates_to_topological_order() {
         let rt = OmpRuntime::new(1);
         let g = lu_graph(6);
-        let stats = execute_omp(&rt, &g, |_| {}).unwrap();
-        check_event_ordering(&g, &stats.events).unwrap();
-        // One worker: events strictly alternate Start/End.
-        for w in stats.events.chunks(2) {
-            assert!(matches!(w[0], Event::Start(_)));
-            assert!(matches!(w[1], Event::End(_)));
+        for opts in both_modes() {
+            let stats = execute_omp_opts(&rt, &g, |_| {}, opts).unwrap();
+            check_event_ordering(&g, &stats.events).unwrap();
+            // One worker: events strictly alternate Start/End.
+            for w in stats.events.chunks(2) {
+                assert!(matches!(w[0], Event::Start(_)));
+                assert!(matches!(w[1], Event::End(_)));
+            }
         }
         rt.shutdown();
     }
@@ -278,8 +643,10 @@ mod tests {
     fn more_workers_than_tasks_terminates() {
         let rt = OmpRuntime::new(16);
         let g = lu_graph(2); // 2x2: a handful of tasks
-        let stats = execute_omp(&rt, &g, |_| {}).unwrap();
-        assert_eq!(stats.executed, g.len());
+        for opts in both_modes() {
+            let stats = execute_omp_opts(&rt, &g, |_| {}, opts).unwrap();
+            assert_eq!(stats.executed, g.len());
+        }
         rt.shutdown();
     }
 
@@ -287,15 +654,22 @@ mod tests {
     fn panic_in_task_propagates_and_unblocks() {
         let rt = OmpRuntime::new(4);
         let g = lu_graph(8);
-        let e = execute_omp(&rt, &g, |t| {
-            if t.0 == 3 {
-                panic!("dataflow task exploded");
-            }
-        })
-        .unwrap_err();
-        assert!(e.contains("dataflow task exploded"), "{e}");
-        // Runtime survives.
-        rt.parallel(|_| {}).unwrap();
+        for opts in both_modes() {
+            let e = execute_omp_opts(
+                &rt,
+                &g,
+                |t| {
+                    if t.0 == 3 {
+                        panic!("dataflow task exploded");
+                    }
+                },
+                opts,
+            )
+            .unwrap_err();
+            assert!(e.contains("dataflow task exploded"), "{e}");
+            // Runtime survives.
+            rt.parallel(|_| {}).unwrap();
+        }
         rt.shutdown();
     }
 
@@ -303,14 +677,21 @@ mod tests {
     fn panic_on_gprm_backend_propagates() {
         let rt = GprmRuntime::with_tiles(4);
         let g = lu_graph(6);
-        let e = execute_gprm(&rt, &g, |t| {
-            if t.0 == 1 {
-                panic!("gprm dataflow task exploded");
-            }
-        })
-        .unwrap_err();
-        assert!(e.contains("gprm dataflow task exploded"), "{e}");
-        rt.par_invoke(4, |_| {}).unwrap();
+        for opts in both_modes() {
+            let e = execute_gprm_opts(
+                &rt,
+                &g,
+                |t| {
+                    if t.0 == 1 {
+                        panic!("gprm dataflow task exploded");
+                    }
+                },
+                opts,
+            )
+            .unwrap_err();
+            assert!(e.contains("gprm dataflow task exploded"), "{e}");
+            rt.par_invoke(4, |_| {}).unwrap();
+        }
         rt.shutdown();
     }
 
@@ -339,9 +720,43 @@ mod tests {
     fn peak_ready_reflects_available_parallelism() {
         let rt = OmpRuntime::new(2);
         let g = lu_graph(10);
-        let stats = execute_omp(&rt, &g, |_| {}).unwrap();
-        // After the first lu0, a whole fwd+bdiv front becomes ready.
-        assert!(stats.peak_ready > 1, "peak {}", stats.peak_ready);
+        for opts in both_modes() {
+            let stats = execute_omp_opts(&rt, &g, |_| {}, opts).unwrap();
+            // After the first lu0, a whole fwd+bdiv front becomes
+            // ready (stat survives the lock-free rewrite).
+            assert!(stats.peak_ready > 1, "peak {}", stats.peak_ready);
+            assert_eq!(stats.executed, g.len());
+        }
+        rt.shutdown();
+    }
+
+    #[test]
+    fn stealing_spreads_work_across_workers() {
+        // The SparseLU DAG has a single root (the step-0 lu0), and a
+        // worker pushes released tasks onto its *own* deque — so other
+        // workers can only ever get work by stealing; with slow tasks
+        // and a wide graph, more than one thread must end up running.
+        let rt = OmpRuntime::new(4);
+        let g = lu_graph(12);
+        let threads = Mutex::new(std::collections::HashSet::new());
+        let stats = execute_omp_opts(
+            &rt,
+            &g,
+            |_| {
+                // Slow enough that idle workers go hunting.
+                for _ in 0..5_000 {
+                    std::hint::spin_loop();
+                }
+                threads.lock().unwrap().insert(std::thread::current().id());
+            },
+            ExecOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(stats.executed, g.len());
+        assert!(
+            threads.lock().unwrap().len() > 1,
+            "only one worker ever ran a task — stealing is dead"
+        );
         rt.shutdown();
     }
 }

@@ -44,11 +44,25 @@ pub struct BlockTask {
 }
 
 /// Immutable task DAG: tasks plus predecessor/successor adjacency.
+///
+/// Successors are stored in one flat CSR layout (`succ_off` /
+/// `succ_dat`) rather than per-task `Vec`s: the lock-free executor
+/// walks a completed task's successor list while hammering the atomic
+/// in-degree counters, and a single contiguous array keeps that walk
+/// on one or two cache lines with zero pointer chasing. In-degrees
+/// and roots are pre-computed at build time for the same reason —
+/// executors copy them into atomics instead of re-deriving them.
 pub struct TaskGraph {
     nb: usize,
     tasks: Vec<BlockTask>,
     preds: Vec<Vec<usize>>,
-    succs: Vec<Vec<usize>>,
+    /// CSR: successors of task `t` are `succ_dat[succ_off[t]..succ_off[t+1]]`.
+    succ_off: Vec<usize>,
+    succ_dat: Vec<usize>,
+    /// Pre-computed in-degree per task.
+    indeg: Vec<usize>,
+    /// Pre-computed roots (in-degree zero), in task order.
+    roots: Vec<usize>,
 }
 
 impl TaskGraph {
@@ -128,25 +142,25 @@ impl TaskGraph {
         &self.preds[id.0]
     }
 
+    /// Successors of `id` — a contiguous CSR slice, ascending task
+    /// order (the order PR-1's per-task `Vec`s had).
     pub fn succs(&self, id: TaskId) -> &[usize] {
-        &self.succs[id.0]
+        &self.succ_dat[self.succ_off[id.0]..self.succ_off[id.0 + 1]]
     }
 
     /// In-degree of every task (fresh copy — executors count it down).
     pub fn indegrees(&self) -> Vec<usize> {
-        self.preds.iter().map(|p| p.len()).collect()
+        self.indeg.clone()
     }
 
     /// Total number of edges.
     pub fn n_edges(&self) -> usize {
-        self.preds.iter().map(|p| p.len()).sum()
+        self.succ_dat.len()
     }
 
-    /// Tasks with no predecessors (initially ready).
+    /// Tasks with no predecessors (initially ready), in task order.
     pub fn roots(&self) -> Vec<usize> {
-        (0..self.tasks.len())
-            .filter(|&t| self.preds[t].is_empty())
-            .collect()
+        self.roots.clone()
     }
 }
 
@@ -224,14 +238,39 @@ impl GraphBuilder {
 
     pub fn build(self) -> TaskGraph {
         let n = self.tasks.len();
-        let mut succs = vec![Vec::new(); n];
+        // Count out-degrees, prefix-sum into CSR offsets, then fill.
+        // Iterating tasks in ascending order keeps each successor
+        // slice sorted ascending, like PR-1's per-task Vec push order.
+        let mut succ_off = vec![0usize; n + 1];
         for (t, ps) in self.preds.iter().enumerate() {
             for &p in ps {
                 debug_assert!(p < t, "edges must point forward");
-                succs[p].push(t);
+                succ_off[p + 1] += 1;
             }
         }
-        TaskGraph { nb: self.nb, tasks: self.tasks, preds: self.preds, succs }
+        for i in 0..n {
+            succ_off[i + 1] += succ_off[i];
+        }
+        let mut cursor = succ_off.clone();
+        let mut succ_dat = vec![0usize; succ_off[n]];
+        for (t, ps) in self.preds.iter().enumerate() {
+            for &p in ps {
+                succ_dat[cursor[p]] = t;
+                cursor[p] += 1;
+            }
+        }
+        let indeg: Vec<usize> = self.preds.iter().map(Vec::len).collect();
+        let roots: Vec<usize> =
+            (0..n).filter(|&t| indeg[t] == 0).collect();
+        TaskGraph {
+            nb: self.nb,
+            tasks: self.tasks,
+            preds: self.preds,
+            succ_off,
+            succ_dat,
+            indeg,
+            roots,
+        }
     }
 }
 

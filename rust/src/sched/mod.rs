@@ -12,19 +12,27 @@
 //!
 //! * [`graph`] — [`graph::TaskGraph`]: records read/write block sets
 //!   per task and derives RAW/WAW/WAR edges; `TaskGraph::sparselu`
-//!   builds the BOTS SparseLU DAG with fill-in.
-//! * [`exec`] — the ready-queue executor over both host runtimes
-//!   ([`exec::execute_omp`], [`exec::execute_gprm`]) with an event log
-//!   for schedule-validity checks.
+//!   builds the BOTS SparseLU DAG with fill-in, laid out in flat CSR
+//!   form for the executor's atomic hot path.
+//! * [`deque`] — [`deque::StealDeque`]: a hand-rolled, fixed-capacity
+//!   Chase–Lev work-stealing deque (owner-LIFO / stealer-FIFO).
+//! * [`exec`] — the executors over both host runtimes
+//!   ([`exec::execute_omp_opts`], [`exec::execute_gprm_opts`]): the
+//!   lock-free work-stealing executor by default, the PR-1 mutex
+//!   scoreboard behind [`exec::ExecOpts`] as the measurable baseline,
+//!   and an opt-in event log for schedule-validity checks.
 //!
 //! The simulator counterpart is [`crate::tilesim::sim_dataflow`]; the
 //! SparseLU driver wired to this scheduler is
 //! [`crate::apps::sparselu::sparselu_dataflow`].
 
+pub mod deque;
 pub mod exec;
 pub mod graph;
 
+pub use deque::{Steal, StealDeque};
 pub use exec::{
-    check_event_ordering, execute_gprm, execute_omp, Event, ExecStats,
+    check_event_ordering, execute_gprm, execute_gprm_opts, execute_omp,
+    execute_omp_opts, Event, ExecOpts, ExecStats,
 };
 pub use graph::{BlockTask, GraphBuilder, TaskGraph, TaskId};

@@ -64,6 +64,14 @@ pub struct CostModel {
     pub gprm_iter_check: f64,
     /// Kernel fire overhead per task (activation record + call).
     pub gprm_task_fire: f64,
+
+    // --- Dataflow-executor scheduler costs ---------------------------
+    /// One uncontended Chase–Lev deque operation (local push or pop:
+    /// a couple of atomics on an owned cache line).
+    pub steal_deque_op: f64,
+    /// One successful steal: `SeqCst` CAS on a remote deque's `top`
+    /// plus the cache-line transfer across the mesh.
+    pub steal_cost: f64,
 }
 
 impl Default for CostModel {
@@ -84,6 +92,8 @@ impl Default for CostModel {
             gprm_packet: 150.0,
             gprm_iter_check: 3.0,
             gprm_task_fire: 60.0,
+            steal_deque_op: 25.0,
+            steal_cost: 220.0,
         }
     }
 }

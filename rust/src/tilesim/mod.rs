@@ -26,7 +26,9 @@
 //!   contended central queue, plus the cutoff variant.
 //! * [`sim_dataflow`] — virtual-time list scheduling of the
 //!   [`crate::sched`] dependence DAG: no phase barriers; isolates what
-//!   the level-synchronous models pay for theirs.
+//!   the level-synchronous models pay for theirs, and models both
+//!   executor claim-cost regimes (mutex scoreboard vs lock-free work
+//!   stealing with a per-steal mesh penalty).
 //!
 //! All simulators share [`cost::CostModel`] and the memory-bandwidth
 //! ceiling, so who-wins comparisons are apples to apples.
@@ -41,7 +43,7 @@ pub mod workload;
 
 pub use cost::CostModel;
 pub use mesh::Mesh;
-pub use sim_dataflow::DataflowSim;
+pub use sim_dataflow::{DataflowSim, SchedModel};
 pub use sim_gprm::{GprmAssign, GprmSim};
 pub use sim_omp::{OmpSim, OmpStrategy};
 pub use workload::{Phase, SimTask, Workload};

@@ -11,6 +11,22 @@
 //! Comparing [`DataflowSim`] against [`super::GprmSim`] on the same
 //! SparseLU structure therefore isolates exactly what the paper's
 //! level-synchronous Listings 5–6 pay for their barriers.
+//!
+//! On top of the dispatch cost, [`SchedModel`] charges what the
+//! *executor* pays per claim — the host-side counterpart of
+//! `sched::exec`:
+//!
+//! * [`SchedModel::MutexScoreboard`] — the PR-1 baseline: every claim
+//!   and every completion takes the one global lock, each paying the
+//!   contended lock cost (the same cache-line ping-pong model as the
+//!   OpenMP central queue, [`CostModel::lock_op`]);
+//! * [`SchedModel::WorkSteal`] — the lock-free executor: a claim is a
+//!   local deque pop ([`CostModel::steal_deque_op`]); a task that runs
+//!   on a different tile from the one that made it ready additionally
+//!   pays one steal ([`CostModel::steal_cost`], the CAS + remote
+//!   cache-line transfer). This models why work stealing wins: its
+//!   per-claim cost is constant, while the scoreboard's grows with
+//!   the worker count.
 
 use super::cost::CostModel;
 use super::locality::Directory;
@@ -22,18 +38,40 @@ use crate::sched::{BlockTask, TaskGraph, TaskId};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+/// Which executor's claim costs the simulator charges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedModel {
+    /// PR-1 single-mutex scoreboard (claim + completion both locked).
+    MutexScoreboard,
+    /// Lock-free work-stealing executor (the `sched::exec` default).
+    WorkSteal,
+}
+
 /// DAG-scheduling machine simulator.
 pub struct DataflowSim {
     /// Physical tiles.
     pub n_tiles: usize,
     pub cost: CostModel,
     pub mesh: Mesh,
+    /// Executor claim-cost model (default: work stealing).
+    pub sched: SchedModel,
 }
 
 impl DataflowSim {
-    /// A TILEPro64-like machine restricted to `n_tiles` tiles.
+    /// A TILEPro64-like machine restricted to `n_tiles` tiles, with
+    /// the work-stealing executor model.
     pub fn tilepro(n_tiles: usize) -> Self {
-        Self { n_tiles, cost: CostModel::default(), mesh: Mesh::TILEPRO64 }
+        Self::with_sched(n_tiles, SchedModel::WorkSteal)
+    }
+
+    /// Same machine, explicit executor model.
+    pub fn with_sched(n_tiles: usize, sched: SchedModel) -> Self {
+        Self {
+            n_tiles,
+            cost: CostModel::default(),
+            mesh: Mesh::TILEPRO64,
+            sched,
+        }
     }
 
     /// Simulate the BOTS SparseLU structure (the Fig 6 workload when
@@ -52,31 +90,53 @@ impl DataflowSim {
         let mut dir = Directory::new(nb * nb, bb);
         let n = graph.len();
         let mut indeg = graph.indegrees();
+        // Tile that made each task ready: its last-finishing
+        // predecessor's tile; roots are seeded round-robin, matching
+        // the executor's deque seeding. A dispatch elsewhere is a
+        // steal under the work-stealing model.
+        let mut home = vec![0usize; n];
         // Ready tasks, earliest ready-time first (ties by id for
         // determinism). Pops are in nondecreasing ready-time order:
         // successors always become ready no earlier than the task
         // releasing them.
-        let mut ready: BinaryHeap<Reverse<(u64, usize)>> = graph
-            .roots()
-            .into_iter()
-            .map(|t| Reverse((0u64, t)))
-            .collect();
+        let mut ready: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        for (i, &t) in graph.roots().iter().enumerate() {
+            home[t] = i % self.n_tiles;
+            ready.push(Reverse((0u64, t)));
+        }
         let mut tiles: BinaryHeap<Reverse<(u64, usize)>> =
             (0..self.n_tiles).map(|t| Reverse((0u64, t))).collect();
-        let overhead =
+        let dispatch =
             (self.cost.gprm_packet + self.cost.gprm_task_fire) as u64;
         let mut finish = vec![0u64; n];
+        let mut task_tile = vec![0usize; n];
         let mut busy = vec![0u64; self.n_tiles];
         let mut total_bytes = 0u64;
         let mut makespan = 0u64;
         let mut fired = 0u64;
+        let mut lock_wait = 0u64;
         while let Some(Reverse((ready_t, t))) = ready.pop() {
             let Reverse((avail, tile)) = tiles.pop().expect("tile pool");
+            let sched = match self.sched {
+                SchedModel::MutexScoreboard => {
+                    // Claim and completion each take the global lock
+                    // with every other worker hammering it.
+                    let c = 2 * self.cost.lock_op(self.n_tiles - 1);
+                    lock_wait += c;
+                    c
+                }
+                SchedModel::WorkSteal => {
+                    let stolen = tile != home[t];
+                    self.cost.steal_deque_op as u64
+                        + if stolen { self.cost.steal_cost as u64 } else { 0 }
+                }
+            };
             let st = sim_task(graph.task(TaskId(t)), nb, bs);
             let work = self.cost.work(st.flops);
             let extra = dir.access(&self.cost, &self.mesh, tile, &st);
-            let end = ready_t.max(avail) + overhead + work + extra;
+            let end = ready_t.max(avail) + dispatch + sched + work + extra;
             finish[t] = end;
+            task_tile[t] = tile;
             busy[tile] += work;
             total_bytes += st.mem_bytes;
             fired += 1;
@@ -85,12 +145,13 @@ impl DataflowSim {
             for &s in graph.succs(TaskId(t)) {
                 indeg[s] -= 1;
                 if indeg[s] == 0 {
-                    let r = graph
+                    let (r, rp) = graph
                         .preds(TaskId(s))
                         .iter()
-                        .map(|&p| finish[p])
+                        .map(|&p| (finish[p], p))
                         .max()
-                        .unwrap_or(0);
+                        .unwrap_or((0, t));
+                    home[s] = task_tile[rp];
                     ready.push(Reverse((r, s)));
                 }
             }
@@ -99,7 +160,7 @@ impl DataflowSim {
         // Whole-run memory-bandwidth floor (the phase model applies it
         // per phase; one global floor is the best overlap can do).
         let cycles = makespan.max(self.cost.mem_floor(total_bytes));
-        SimReport { cycles, tasks: fired, busy, lock_wait: 0, producer: 0 }
+        SimReport { cycles, tasks: fired, busy, lock_wait, producer: 0 }
     }
 }
 
@@ -141,6 +202,40 @@ mod tests {
                 phased
             );
         }
+    }
+
+    #[test]
+    fn work_stealing_beats_mutex_scoreboard_at_scale() {
+        // The tentpole's acceptance criterion, in virtual time: the
+        // lock-free executor model outruns the scoreboard from 4
+        // workers up, and never loses below that.
+        let (nb, bs) = (32, 16);
+        for tiles in [1usize, 2, 4, 8, 16] {
+            let steal = DataflowSim::tilepro(tiles).run_sparselu(nb, bs);
+            let mutex =
+                DataflowSim::with_sched(tiles, SchedModel::MutexScoreboard)
+                    .run_sparselu(nb, bs);
+            let gain = mutex.cycles as f64 / steal.cycles as f64;
+            if tiles >= 4 {
+                assert!(
+                    gain > 1.02,
+                    "{tiles} tiles: steal {} must beat mutex {} (gain {gain:.3})",
+                    steal.cycles,
+                    mutex.cycles
+                );
+            } else {
+                assert!(gain > 0.95, "{tiles} tiles: gain {gain:.3}");
+            }
+        }
+    }
+
+    #[test]
+    fn mutex_model_reports_lock_wait() {
+        let r = DataflowSim::with_sched(8, SchedModel::MutexScoreboard)
+            .run_sparselu(12, 8);
+        assert!(r.lock_wait > 0, "scoreboard must account lock time");
+        let s = DataflowSim::tilepro(8).run_sparselu(12, 8);
+        assert_eq!(s.lock_wait, 0, "lock-free model has no lock waits");
     }
 
     #[test]
@@ -190,6 +285,25 @@ mod tests {
         let busy: u64 = r.busy.iter().sum();
         assert!(r.cycles >= busy);
         assert_eq!(r.busy.len(), 1);
+    }
+
+    #[test]
+    fn single_tile_never_steals() {
+        // One worker owns every deque push/pop: the steal penalty must
+        // never be charged, so the two models differ exactly by the
+        // per-task claim-cost gap.
+        let (nb, bs) = (8, 8);
+        let steal = DataflowSim::tilepro(1).run_sparselu(nb, bs);
+        let mutex = DataflowSim::with_sched(1, SchedModel::MutexScoreboard)
+            .run_sparselu(nb, bs);
+        let cost = CostModel::default();
+        let per_task_gap =
+            2 * cost.lock_op(0) - cost.steal_deque_op as u64;
+        assert_eq!(
+            mutex.cycles - steal.cycles,
+            per_task_gap * steal.tasks,
+            "single-tile gap must be exactly the claim-cost delta"
+        );
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! blocked-sparse structures (`genmat` over nb ∈ [2, 24]) must give a
 //! DAG whose execution (a) always terminates, (b) respects every
 //! dependence edge, and (c) reproduces the sequential factorisation on
-//! both host runtimes.
+//! both host runtimes — under both the lock-free work-stealing
+//! executor and the mutex-scoreboard baseline, plus a randomized-spin
+//! stress test for the lock-free claim/release protocol.
 
 use gprm::apps::sparselu::{sparselu_dataflow, DataflowRt, LuRunConfig};
 use gprm::coordinator::GprmRuntime;
@@ -10,14 +12,17 @@ use gprm::linalg::genmat::{genmat, genmat_pattern};
 use gprm::linalg::lu::sparselu_seq;
 use gprm::linalg::verify::lu_residual_sparse;
 use gprm::omp::OmpRuntime;
-use gprm::sched::{check_event_ordering, execute_gprm, execute_omp, TaskGraph};
+use gprm::sched::{
+    check_event_ordering, execute_gprm_opts, execute_omp_opts, ExecOpts,
+    TaskGraph,
+};
 use gprm::testkit::{check, Pair, Triple, UsizeRange};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 #[test]
 fn prop_dataflow_executor_never_deadlocks_and_orders_edges_omp() {
-    // (a) + (b) on the OmpRuntime backend: the executor must drain any
-    // genmat-structured DAG and the event log must be edge-valid.
+    // (a) + (b) on the OmpRuntime backend: both executors must drain
+    // any genmat-structured DAG and the event log must be edge-valid.
     check(
         "dataflow-omp-drains",
         25,
@@ -25,23 +30,45 @@ fn prop_dataflow_executor_never_deadlocks_and_orders_edges_omp() {
         |&(nb, workers)| {
             let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
             let rt = OmpRuntime::new(workers);
-            let hits = AtomicUsize::new(0);
-            let r = execute_omp(&rt, &g, |_| {
-                hits.fetch_add(1, Ordering::Relaxed);
-            });
+            for opts in
+                [ExecOpts::default(), ExecOpts::mutex_baseline()]
+            {
+                let hits = AtomicUsize::new(0);
+                let r = execute_omp_opts(
+                    &rt,
+                    &g,
+                    |_| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    },
+                    opts.with_events(),
+                );
+                let stats = match r {
+                    Ok(s) => s,
+                    Err(e) => {
+                        rt.shutdown();
+                        return Err(format!("executor failed: {e}"));
+                    }
+                };
+                if stats.executed != g.len() {
+                    rt.shutdown();
+                    return Err(format!(
+                        "executed {} of {} tasks (steal={})",
+                        stats.executed,
+                        g.len(),
+                        opts.steal
+                    ));
+                }
+                if hits.load(Ordering::Relaxed) != g.len() {
+                    rt.shutdown();
+                    return Err("kernel invocation count mismatch".into());
+                }
+                if let Err(e) = check_event_ordering(&g, &stats.events) {
+                    rt.shutdown();
+                    return Err(format!("steal={}: {e}", opts.steal));
+                }
+            }
             rt.shutdown();
-            let stats = r.map_err(|e| format!("executor failed: {e}"))?;
-            if stats.executed != g.len() {
-                return Err(format!(
-                    "executed {} of {} tasks",
-                    stats.executed,
-                    g.len()
-                ));
-            }
-            if hits.load(Ordering::Relaxed) != g.len() {
-                return Err("kernel invocation count mismatch".into());
-            }
-            check_event_ordering(&g, &stats.events)
+            Ok(())
         },
     );
 }
@@ -56,17 +83,33 @@ fn prop_dataflow_executor_never_deadlocks_and_orders_edges_gprm() {
         |&(nb, tiles)| {
             let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
             let rt = GprmRuntime::with_tiles(tiles);
-            let r = execute_gprm(&rt, &g, |_| {});
-            rt.shutdown();
-            let stats = r.map_err(|e| format!("executor failed: {e}"))?;
-            if stats.executed != g.len() {
-                return Err(format!(
-                    "executed {} of {} tasks",
-                    stats.executed,
-                    g.len()
-                ));
+            for opts in
+                [ExecOpts::default(), ExecOpts::mutex_baseline()]
+            {
+                let r = execute_gprm_opts(&rt, &g, |_| {}, opts.with_events());
+                let stats = match r {
+                    Ok(s) => s,
+                    Err(e) => {
+                        rt.shutdown();
+                        return Err(format!("executor failed: {e}"));
+                    }
+                };
+                if stats.executed != g.len() {
+                    rt.shutdown();
+                    return Err(format!(
+                        "executed {} of {} tasks (steal={})",
+                        stats.executed,
+                        g.len(),
+                        opts.steal
+                    ));
+                }
+                if let Err(e) = check_event_ordering(&g, &stats.events) {
+                    rt.shutdown();
+                    return Err(format!("steal={}: {e}", opts.steal));
+                }
             }
-            check_event_ordering(&g, &stats.events)
+            rt.shutdown();
+            Ok(())
         },
     );
 }
@@ -142,4 +185,123 @@ fn prop_graph_edges_always_point_forward() {
         }
         Ok(())
     });
+}
+
+/// Cheap deterministic per-task spin: xorshift the task id with the
+/// case seed into a busy-wait length, so claim/steal/park interleavings
+/// vary wildly from case to case.
+fn spin_for(task: usize, seed: usize) {
+    let mut x = (task as u64)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(seed as u64 | 1);
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    let iters = (x % 2_000) as u32;
+    for _ in 0..iters {
+        std::hint::spin_loop();
+    }
+}
+
+#[test]
+fn stress_steal_executor_randomized_spins_drain_and_stats() {
+    // Satellite: 100 iterations of randomized per-task spin durations
+    // over nb ∈ [2, 24] on both runtimes. The lock-free executor must
+    // drain every graph, run every task exactly once, and keep the
+    // `executed`/`peak_ready` stats coherent.
+    check(
+        "stress-steal-drains",
+        100,
+        &Triple(UsizeRange(2, 25), UsizeRange(1, 9), UsizeRange(0, 1 << 16)),
+        |&(nb, workers, seed)| {
+            let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+            let hits = AtomicUsize::new(0);
+            let run = |id: gprm::sched::TaskId| {
+                spin_for(id.0, seed);
+                hits.fetch_add(1, Ordering::Relaxed);
+            };
+            let omp = OmpRuntime::new(workers);
+            let s1 = execute_omp_opts(&omp, &g, &run, ExecOpts::default())
+                .map_err(|e| format!("omp: {e}"))?;
+            omp.shutdown();
+            let gprm = GprmRuntime::with_tiles(workers);
+            let s2 = execute_gprm_opts(&gprm, &g, &run, ExecOpts::default())
+                .map_err(|e| format!("gprm: {e}"))?;
+            gprm.shutdown();
+            for (name, s) in [("omp", &s1), ("gprm", &s2)] {
+                if s.executed != g.len() {
+                    return Err(format!(
+                        "{name}: executed {} of {}",
+                        s.executed,
+                        g.len()
+                    ));
+                }
+                if s.peak_ready < 1 || s.peak_ready > g.len() {
+                    return Err(format!(
+                        "{name}: implausible peak_ready {}",
+                        s.peak_ready
+                    ));
+                }
+                if !s.events.is_empty() {
+                    return Err(format!("{name}: log must stay opt-in"));
+                }
+            }
+            if hits.load(Ordering::Relaxed) != 2 * g.len() {
+                return Err("kernel invocation count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stress_steal_executor_bit_identical_factorisation() {
+    // Satellite, part two: 100 random (nb, workers, bs) cases where
+    // the dataflow factorisation — real kernels providing the load —
+    // must remain *bit-identical* to `sparselu_seq` on both runtimes
+    // (the DAG chains every per-block touch, and the executor's
+    // release/acquire edges make each predecessor's writes visible —
+    // any missing fence shows up here as a bit difference or a torn
+    // block).
+    check(
+        "stress-steal-bit-identical",
+        100,
+        &Triple(UsizeRange(2, 25), UsizeRange(2, 9), UsizeRange(0, 1 << 16)),
+        |&(nb, workers, seed)| {
+            let bs = 4 + (seed % 5); // bs ∈ [4, 8]
+            let mut want = genmat(nb, bs);
+            sparselu_seq(&mut want);
+            let want_dense = want.to_dense();
+
+            let omp = OmpRuntime::new(workers);
+            let mut a_omp = genmat(nb, bs);
+            sparselu_dataflow(
+                &DataflowRt::Omp(&omp),
+                &mut a_omp,
+                &LuRunConfig::default(),
+            );
+            omp.shutdown();
+
+            let gprm = GprmRuntime::with_tiles(workers);
+            let mut a_gprm = genmat(nb, bs);
+            sparselu_dataflow(
+                &DataflowRt::Gprm(&gprm),
+                &mut a_gprm,
+                &LuRunConfig::default(),
+            );
+            gprm.shutdown();
+
+            for (name, got) in [("omp", a_omp), ("gprm", a_gprm)] {
+                if got.pattern() != want.pattern() {
+                    return Err(format!("{name}: fill-in pattern differs"));
+                }
+                if got.to_dense().as_slice() != want_dense.as_slice() {
+                    return Err(format!(
+                        "{name}: dataflow result not bit-identical to seq"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }
