@@ -1,19 +1,23 @@
 //! Bench: mutex-scoreboard vs lock-free work-stealing executor on the
-//! Fig-6 workload (NB=32, BS=16) at 1/2/4/8/16 workers — tasks/sec and
-//! GFLOP/s (via `kernel_flops`), host wall-clock on both runtimes plus
-//! the tilesim claim-cost models, appended as JSON rows to
-//! `BENCH_sched.json` (the committed baseline rows in the repo root
-//! were produced by the tilesim model; machines with real cores append
-//! `host-wall-clock` rows next to them).
+//! Fig-6 workload shape (NB=32, BS=16) at 1/2/4/8/16 workers — for
+//! **both** engine workloads (SparseLU and tiled Cholesky; the engine
+//! is kernel-agnostic, so the race uses identical machinery). Reports
+//! tasks/sec and GFLOP/s (flops via each graph's op table), host
+//! wall-clock on the omp runtime plus the tilesim claim-cost models,
+//! appended as JSON rows to `BENCH_sched.json` with a `workload` field
+//! (the committed baseline rows were produced by the tilesim model;
+//! machines with real cores append `host-wall-clock` rows next to
+//! them).
 //!
 //! `cargo bench --bench steal`
 
+use gprm::apps::cholesky::cholesky_dataflow;
 use gprm::apps::sparselu::{sparselu_dataflow, DataflowRt, LuRunConfig};
+use gprm::linalg::cholesky::gen_spd;
 use gprm::linalg::genmat::{genmat, genmat_pattern};
-use gprm::linalg::lu::kernel_flops;
 use gprm::omp::OmpRuntime;
 use gprm::sched::{ExecOpts, TaskGraph};
-use gprm::tilesim::{CostModel, DataflowSim, SchedModel};
+use gprm::tilesim::{CostModel, DataflowSim, SchedModel, SimReport};
 use std::io::Write as _;
 
 const NB: usize = 32;
@@ -21,6 +25,7 @@ const BS: usize = 16;
 const WORKERS: [usize; 5] = [1, 2, 4, 8, 16];
 
 struct Row {
+    workload: &'static str,
     source: &'static str,
     workers: usize,
     exec: &'static str,
@@ -32,39 +37,55 @@ struct Row {
 impl Row {
     fn json(&self) -> String {
         format!(
-            "{{\"workload\": \"sparselu NB={NB} BS={BS}\", \
+            "{{\"workload\": \"{} NB={NB} BS={BS}\", \
              \"source\": \"{}\", \"workers\": {}, \"exec\": \"{}\", \
              \"secs\": {:.6}, \"tasks_per_sec\": {:.0}, \
              \"gflops\": {:.3}}}",
-            self.source, self.workers, self.exec, self.secs,
-            self.tasks_per_sec, self.gflops
+            self.workload, self.source, self.workers, self.exec,
+            self.secs, self.tasks_per_sec, self.gflops
         )
     }
 }
 
-fn main() {
-    let graph = TaskGraph::sparselu(&genmat_pattern(NB), NB);
+/// Total useful flops of a graph, priced through its own op table —
+/// workload-agnostic.
+fn graph_flops(graph: &TaskGraph, bs: usize) -> u64 {
+    graph
+        .tasks()
+        .iter()
+        .map(|t| (graph.ops()[t.op.0].flops)(bs))
+        .sum()
+}
+
+/// Race mutex vs steal for one workload: tilesim model rows + host
+/// wall-clock rows. `host_once` runs one full factorisation on a
+/// fresh input and returns the seconds spent in the factorisation
+/// alone (input cloning excluded from the timed region). Returns true
+/// if stealing lost anywhere at >= 4 workers (host rows).
+fn bench_workload(
+    workload: &'static str,
+    graph: &TaskGraph,
+    sim: &dyn Fn(usize, SchedModel) -> SimReport,
+    host_once: &dyn Fn(&OmpRuntime, ExecOpts) -> f64,
+    rows: &mut Vec<Row>,
+) -> bool {
     let n_tasks = graph.len();
-    let total_flops: u64 =
-        graph.tasks().iter().map(|t| kernel_flops(t.op, BS)).sum();
+    let total_flops = graph_flops(graph, BS);
     println!(
-        "steal bench: SparseLU NB={NB} BS={BS} — {n_tasks} tasks, {:.3} GFLOP",
+        "\n### {workload} NB={NB} BS={BS} — {n_tasks} tasks, {:.3} GFLOP",
         total_flops as f64 / 1e9
     );
-    let mut rows: Vec<Row> = Vec::new();
-
-    // Tilesim claim-cost models (deterministic; these are the baseline
-    // rows committed in BENCH_sched.json).
     let hz = CostModel::default().clock_hz;
-    println!("\n== tilesim model (virtual time @866 MHz) ==");
+    println!("== tilesim model (virtual time @866 MHz) ==");
     for &w in &WORKERS {
         for (name, sched) in [
             ("mutex", SchedModel::MutexScoreboard),
             ("steal", SchedModel::WorkSteal),
         ] {
-            let r = DataflowSim::with_sched(w, sched).run_sparselu(NB, BS);
+            let r = sim(w, sched);
             let secs = r.cycles as f64 / hz;
             let row = Row {
+                workload,
                 source: "tilesim-model",
                 workers: w,
                 exec: name,
@@ -82,27 +103,20 @@ fn main() {
 
     // Host wall-clock: whole dataflow factorisations, best of SAMPLES.
     const SAMPLES: usize = 5;
-    println!("\n== host wall-clock (omp-backed dataflow driver) ==");
-    let a0 = genmat(NB, BS);
+    println!("== host wall-clock (omp-backed dataflow driver) ==");
     for &w in &WORKERS {
         let rt = OmpRuntime::new(w);
         for (name, exec) in [
             ("mutex", ExecOpts::mutex_baseline()),
             ("steal", ExecOpts::default()),
         ] {
-            let cfg = LuRunConfig { exec, ..Default::default() };
-            // Warmup.
-            let mut a = a0.deep_clone();
-            sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &cfg);
+            host_once(&rt, exec); // warmup
             let mut best = f64::MAX;
             for _ in 0..SAMPLES {
-                let mut a = a0.deep_clone();
-                let t0 = std::time::Instant::now();
-                sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &cfg);
-                best = best.min(t0.elapsed().as_secs_f64());
-                gprm::bench::black_box(a.allocated_blocks());
+                best = best.min(host_once(&rt, exec));
             }
             let row = Row {
+                workload,
                 source: "host-wall-clock",
                 workers: w,
                 exec: name,
@@ -120,14 +134,14 @@ fn main() {
     }
 
     // Acceptance: work stealing must win on tasks/sec at >= 4 workers
-    // (host rows; the tilesim rows assert the same in unit tests). A
-    // loss anywhere exits nonzero so scripted runs actually gate.
+    // (host rows; the tilesim rows assert the same in unit tests).
     let mut failed = false;
     for &w in WORKERS.iter().filter(|&&w| w >= 4) {
         let tps = |exec: &str| {
             rows.iter()
                 .find(|r| {
-                    r.source == "host-wall-clock"
+                    r.workload == workload
+                        && r.source == "host-wall-clock"
                         && r.workers == w
                         && r.exec == exec
                 })
@@ -142,10 +156,54 @@ fn main() {
             if s > m { "PASS" } else { "FAIL" }
         );
     }
+    failed
+}
+
+fn main() {
+    let mut rows: Vec<Row> = Vec::new();
+    let mut failed = false;
+
+    // SparseLU — the original acceptance workload.
+    let lu_graph = TaskGraph::sparselu(&genmat_pattern(NB), NB);
+    let a0 = genmat(NB, BS);
+    failed |= bench_workload(
+        "sparselu",
+        &lu_graph,
+        &|w, sched| DataflowSim::with_sched(w, sched).run_sparselu(NB, BS),
+        &|rt, exec| {
+            let mut a = a0.deep_clone();
+            let cfg = LuRunConfig { exec, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            sparselu_dataflow(&DataflowRt::Omp(rt), &mut a, &cfg);
+            let secs = t0.elapsed().as_secs_f64();
+            gprm::bench::black_box(a.allocated_blocks());
+            secs
+        },
+        &mut rows,
+    );
+
+    // Cholesky — the second workload on the same engine; same race.
+    let chol_graph = TaskGraph::cholesky(NB);
+    let c0 = gen_spd(NB, BS);
+    failed |= bench_workload(
+        "cholesky",
+        &chol_graph,
+        &|w, sched| DataflowSim::with_sched(w, sched).run_cholesky(NB, BS),
+        &|rt, exec| {
+            let mut a = c0.deep_clone();
+            let t0 = std::time::Instant::now();
+            cholesky_dataflow(&DataflowRt::Omp(rt), &mut a, exec);
+            let secs = t0.elapsed().as_secs_f64();
+            gprm::bench::black_box(a.allocated_blocks());
+            secs
+        },
+        &mut rows,
+    );
 
     // Append all rows to the repo-root BENCH_sched.json (JSON lines;
-    // the committed file carries the tilesim baseline rows). Anchored
-    // via the manifest dir — `cargo bench` runs with cwd = rust/.
+    // the committed file carries the tilesim baseline rows for both
+    // workloads). Anchored via the manifest dir — `cargo bench` runs
+    // with cwd = rust/.
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     let path = manifest
         .parent()

@@ -1,0 +1,154 @@
+//! Tiled dense Cholesky on the real runtimes — the second workload on
+//! the kernel-agnostic dataflow engine (not in the source paper; see
+//! DIVERGENCES.md).
+//!
+//! Two implementations over the same lower-triangle
+//! [`BlockedSparseMatrix`]:
+//!
+//! * sequential — [`crate::linalg::cholesky::cholesky_seq`] (the
+//!   reference every parallel schedule is compared against);
+//! * dataflow — [`cholesky_dataflow`]: the [`crate::sched`] DAG
+//!   executor fires each POTRF/TRSM/SYRK/GEMM block kernel the moment
+//!   its data dependencies are satisfied, on either host runtime,
+//!   through the same generic kernel-table driver SparseLU uses
+//!   ([`super::dataflow::run_dataflow`]) — proving the engine needs no
+//!   per-workload executor changes.
+//!
+//! Kernels are pure rust (there are no AOT/PJRT artifacts for the
+//! Cholesky ops; the PJRT path remains SparseLU-only).
+
+use super::dataflow::{run_dataflow, BlockKernel, DataflowRt};
+use crate::linalg::blocked::BlockedSparseMatrix;
+use crate::linalg::cholesky::{gemm_nt, potrf, syrk, trsm};
+use crate::sched::{ExecOpts, ExecStats, TaskGraph};
+
+/// Dataflow (DAG-scheduled) tiled Cholesky: factorises `a` (SPD,
+/// lower-triangle blocks allocated, e.g. from
+/// [`crate::linalg::cholesky::gen_spd`]) in place and returns the
+/// executor's statistics. `exec` selects the executor (lock-free work
+/// stealing by default, mutex scoreboard as the baseline) exactly as
+/// for SparseLU.
+///
+/// Results are bit-identical (f32) to
+/// [`cholesky_seq`](crate::linalg::cholesky::cholesky_seq): the DAG
+/// chains every touch of a block in sequential program order.
+pub fn cholesky_dataflow(
+    rt: &DataflowRt,
+    a: &mut BlockedSparseMatrix,
+    exec: ExecOpts,
+) -> ExecStats {
+    let graph = TaskGraph::cholesky(a.nb());
+    let k_potrf = |_: &[&[f32]], w: &mut [f32], bs: usize| potrf(w, bs);
+    let k_trsm =
+        |r: &[&[f32]], w: &mut [f32], bs: usize| trsm(r[0], w, bs);
+    let k_syrk =
+        |r: &[&[f32]], w: &mut [f32], bs: usize| syrk(r[0], w, bs);
+    let k_gemm = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+        gemm_nt(r[0], r[1], w, bs)
+    };
+    // Indexed by OP_POTRF..OP_GEMM, aligned with sched::CHOLESKY_OPS.
+    let kernels: [BlockKernel; 4] = [&k_potrf, &k_trsm, &k_syrk, &k_gemm];
+    run_dataflow(rt, a, &graph, &kernels, exec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::GprmRuntime;
+    use crate::linalg::cholesky::{cholesky_seq, gen_spd, sym_dense};
+    use crate::linalg::verify::chol_residual_sparse;
+    use crate::omp::OmpRuntime;
+    use crate::sched::check_event_ordering;
+
+    fn check_bit_identical(
+        factorise: impl FnOnce(&mut BlockedSparseMatrix),
+    ) {
+        let nb = 8;
+        let bs = 6;
+        let mut a = gen_spd(nb, bs);
+        let orig = sym_dense(&a);
+        let mut want = a.deep_clone();
+        cholesky_seq(&mut want);
+        factorise(&mut a);
+        // Bit-identical: same kernels in the same per-block order.
+        assert_eq!(a.pattern(), want.pattern());
+        assert_eq!(
+            a.to_dense().as_slice(),
+            want.to_dense().as_slice(),
+            "dataflow cholesky differs from sequential"
+        );
+        // And mathematically correct.
+        let res = chol_residual_sparse(&orig, &a);
+        assert!(res < 1e-5, "residual {res}");
+    }
+
+    #[test]
+    fn dataflow_omp_bit_identical_to_seq() {
+        let rt = OmpRuntime::new(4);
+        check_bit_identical(|a| {
+            cholesky_dataflow(
+                &DataflowRt::Omp(&rt),
+                a,
+                ExecOpts::default(),
+            );
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_omp_mutex_baseline_bit_identical_to_seq() {
+        let rt = OmpRuntime::new(4);
+        check_bit_identical(|a| {
+            cholesky_dataflow(
+                &DataflowRt::Omp(&rt),
+                a,
+                ExecOpts::mutex_baseline(),
+            );
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_gprm_bit_identical_to_seq() {
+        let rt = GprmRuntime::with_tiles(6);
+        check_bit_identical(|a| {
+            cholesky_dataflow(
+                &DataflowRt::Gprm(&rt),
+                a,
+                ExecOpts::default(),
+            );
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_single_worker_degenerate() {
+        let rt = OmpRuntime::new(1);
+        check_bit_identical(|a| {
+            cholesky_dataflow(
+                &DataflowRt::Omp(&rt),
+                a,
+                ExecOpts::default(),
+            );
+        });
+        rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_schedule_is_edge_valid() {
+        let rt = OmpRuntime::new(8);
+        for exec in [ExecOpts::default(), ExecOpts::mutex_baseline()] {
+            let nb = 10;
+            let mut a = gen_spd(nb, 4);
+            let graph = TaskGraph::cholesky(nb);
+            let stats = cholesky_dataflow(
+                &DataflowRt::Omp(&rt),
+                &mut a,
+                exec.with_events(),
+            );
+            assert_eq!(stats.executed, graph.len());
+            check_event_ordering(&graph, &stats.events).unwrap();
+        }
+        rt.shutdown();
+    }
+}

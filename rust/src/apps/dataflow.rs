@@ -1,0 +1,102 @@
+//! The generic dataflow driver: runs *any* [`TaskGraph`] over a
+//! [`BlockedSparseMatrix`] by dispatching each task through a
+//! workload-supplied kernel table — the kernel-agnostic core both
+//! [`super::sparselu::sparselu_dataflow`] and
+//! [`super::cholesky::cholesky_dataflow`] funnel through.
+//!
+//! A kernel receives the task's extra read blocks (shared slices) and
+//! its write block (exclusive slice), all split-borrowed zero-copy
+//! from the one matrix. The table is indexed by the task's
+//! [`OpId`](crate::sched::OpId), mirroring the graph's
+//! [`OpSpec`](crate::sched::OpSpec) vocabulary — adding a workload
+//! means a graph constructor plus a kernel table, never an executor
+//! change.
+
+use crate::coordinator::GprmRuntime;
+use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
+use crate::omp::OmpRuntime;
+use crate::sched::{
+    execute_gprm_opts, execute_omp_opts, ExecOpts, ExecStats, TaskGraph,
+    TaskId,
+};
+
+/// Which host runtime hosts the dataflow executor's workers.
+pub enum DataflowRt<'r> {
+    /// OpenMP-style team: every team thread runs the worker loop.
+    Omp(&'r OmpRuntime),
+    /// GPRM machine: `CL` coordinator tasks map ready tasks onto tiles.
+    Gprm(&'r GprmRuntime),
+}
+
+/// One entry of a workload's executable kernel table: `(reads, write,
+/// bs)` — the extra read blocks in task order, then the (exclusive)
+/// write block. Indexed by op id, aligned with the graph's op table.
+pub type BlockKernel<'k> =
+    &'k (dyn Fn(&[&[f32]], &mut [f32], usize) + Sync);
+
+/// Execute `graph` over `a` on the selected host runtime, dispatching
+/// every task through `kernels[task.op]`. Factorises (or otherwise
+/// transforms) `a` in place and returns the executor statistics.
+///
+/// Results are bit-identical (f32) to the workload's sequential
+/// reference: the graph chains every pair of tasks touching the same
+/// block (RAW/WAW/WAR) in sequential program order, so only the
+/// inter-block interleaving varies between runs.
+pub fn run_dataflow(
+    rt: &DataflowRt,
+    a: &mut BlockedSparseMatrix,
+    graph: &TaskGraph,
+    kernels: &[BlockKernel],
+    exec: ExecOpts,
+) -> ExecStats {
+    assert_eq!(graph.nb(), a.nb(), "graph and matrix block grids differ");
+    assert_eq!(
+        graph.ops().len(),
+        kernels.len(),
+        "kernel table must cover the graph's op vocabulary"
+    );
+    let bs = a.bs();
+    let shared = SharedBlocked::new(std::mem::replace(
+        a,
+        BlockedSparseMatrix::empty(1, 1),
+    ));
+    let sh = &shared;
+    let run = |id: TaskId| {
+        let t = *graph.task(id);
+        // SAFETY: the task graph chains every touch of a given block
+        // (RAW/WAW/WAR) and the executor carries a release/acquire
+        // edge per dependency (see `SharedBlocked`'s Sync impl), so
+        // this task has exclusive access to the block it writes and
+        // read-only access to blocks finalised by its predecessors.
+        // Fill-in allocation mutates only the written block's own
+        // slot. Within the task the borrows split, zero-copy.
+        let m = unsafe { sh.get_mut() };
+        if t.alloc_write {
+            m.allocate_clean_block(t.write.0, t.write.1);
+        }
+        let kernel = kernels[t.op.0];
+        match t.reads() {
+            [] => {
+                let w = m.block_mut(t.write.0, t.write.1).unwrap();
+                kernel(&[], w, bs);
+            }
+            &[r0] => {
+                let (r, w) = m.block_and_mut(r0, t.write).unwrap();
+                kernel(&[r], w, bs);
+            }
+            &[r0, r1] => {
+                let (a0, a1, w) =
+                    m.read2_write1(r0, r1, t.write).unwrap();
+                kernel(&[a0, a1], w, bs);
+            }
+            _ => unreachable!("tasks carry at most two extra reads"),
+        }
+    };
+    let stats = match rt {
+        DataflowRt::Omp(omp) => execute_omp_opts(omp, graph, run, exec),
+        DataflowRt::Gprm(gprm) => execute_gprm_opts(gprm, graph, run, exec),
+    }
+    .expect("dataflow execution failed");
+    *a = shared.into_inner();
+    stats
+}

@@ -4,17 +4,25 @@
 //!
 //! * [`matmul`] — the §V micro-benchmark: `C = A·B` as `m` row-jobs,
 //!   under the four approaches of Fig 2 (+ cutoff variant of Fig 4).
+//! * [`dataflow`] — the generic kernel-table driver: runs any
+//!   [`crate::sched::TaskGraph`] over a blocked matrix by dispatching
+//!   tasks through a per-workload kernel table.
 //! * [`sparselu`] — the §VI SparseLU factorisation: sequential
 //!   (BOTS reference), OpenMP tasking (Fig 5 port), GPRM hybrid
 //!   worksharing-tasking (Listings 5–6 port), and the barrier-free
 //!   dataflow driver over the [`crate::sched`] DAG executor,
 //!   optionally executing block kernels through the PJRT artifacts.
+//! * [`cholesky`] — tiled dense Cholesky (sequential + dataflow), the
+//!   second workload on the same engine (see DIVERGENCES.md).
 
+pub mod cholesky;
+pub mod dataflow;
 pub mod matmul;
 pub mod sparselu;
 
+pub use cholesky::cholesky_dataflow;
+pub use dataflow::{run_dataflow, BlockKernel, DataflowRt};
 pub use matmul::{run_matmul, MatmulApproach};
 pub use sparselu::{
-    sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuBackend,
-    LuRunConfig,
+    sparselu_dataflow, sparselu_gprm, sparselu_omp, LuBackend, LuRunConfig,
 };

@@ -13,22 +13,23 @@
 //!   domain;
 //! * dataflow — [`sparselu_dataflow`]: no phase barriers at all; the
 //!   [`crate::sched`] DAG executor runs each block kernel the moment
-//!   its data dependencies are satisfied, on either host runtime
-//!   (see DIVERGENCES.md for the departure from the paper).
+//!   its data dependencies are satisfied, on either host runtime,
+//!   dispatching through the generic kernel table of
+//!   [`super::dataflow::run_dataflow`] (see DIVERGENCES.md for the
+//!   departure from the paper).
 //!
 //! Block kernels execute either in-process (pure rust, [`LuBackend::Rust`])
 //! or through the AOT-compiled JAX/Pallas artifacts via PJRT
 //! ([`LuBackend::Pjrt`]).
 
+use super::dataflow::{run_dataflow, BlockKernel};
+pub use super::dataflow::DataflowRt;
 use crate::coordinator::{worksharing, GprmRuntime};
 use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
-use crate::linalg::lu::{bdiv, bmod, fwd, lu0, BlockOp};
+use crate::linalg::lu::{bdiv, bmod, fwd, lu0};
 use crate::omp::OmpRuntime;
 use crate::runtime::EngineService;
-use crate::sched::{
-    execute_gprm_opts, execute_omp_opts, ExecOpts, ExecStats, TaskGraph,
-    TaskId,
-};
+use crate::sched::{ExecOpts, ExecStats, TaskGraph};
 
 /// How block kernels execute.
 pub enum LuBackend<'e> {
@@ -262,14 +263,6 @@ pub fn sparselu_gprm(
     *a = shared.into_inner();
 }
 
-/// Which host runtime hosts the dataflow executor's workers.
-pub enum DataflowRt<'r> {
-    /// OpenMP-style team: every team thread runs the worker loop.
-    Omp(&'r OmpRuntime),
-    /// GPRM machine: `CL` coordinator tasks map ready tasks onto tiles.
-    Gprm(&'r GprmRuntime),
-}
-
 /// Dataflow (DAG-scheduled) SparseLU — no phase barriers; every block
 /// kernel fires as soon as its dependencies are final. Factorises `a`
 /// in place and returns the executor's statistics. The executor is
@@ -277,6 +270,11 @@ pub enum DataflowRt<'r> {
 /// mutex scoreboard as the measurable baseline; the event log is
 /// opt-in (`cfg.exec.record_events`) so the default hot path neither
 /// locks nor allocates per task.
+///
+/// The graph and dispatch are fully generic
+/// ([`super::dataflow::run_dataflow`]): this function only supplies
+/// the SparseLU kernel table, aligned with the
+/// [`crate::sched::LU_OPS`] op vocabulary.
 ///
 /// Results are bit-identical (f32) to [`sparselu_seq`]: the DAG's
 /// RAW/WAW/WAR chains reproduce the sequential per-block operation
@@ -288,59 +286,19 @@ pub fn sparselu_dataflow(
     a: &mut BlockedSparseMatrix,
     cfg: &LuRunConfig,
 ) -> ExecStats {
-    let nb = a.nb();
-    let bs = a.bs();
-    let graph = TaskGraph::sparselu(&a.pattern(), nb);
-    let shared = SharedBlocked::new(std::mem::replace(
-        a,
-        BlockedSparseMatrix::empty(1, 1),
-    ));
-    let sh = &shared;
+    let graph = TaskGraph::sparselu(&a.pattern(), a.nb());
     let backend = &cfg.backend;
-    let run = |id: TaskId| {
-        let t = *graph.task(id);
-        // SAFETY: the task graph chains every touch of a given block
-        // (RAW/WAW/WAR) and the executor carries a release/acquire
-        // edge per dependency (see `SharedBlocked`'s Sync impl), so
-        // this task has exclusive access to the block it writes and
-        // read-only access to blocks finalised by its predecessors.
-        // Fill-in allocation mutates only the written block's own
-        // slot. Within the task the borrows split, zero-copy.
-        let m = unsafe { sh.get_mut() };
-        match t.op {
-            BlockOp::Lu0 => {
-                backend.lu0(m.block_mut(t.kk, t.kk).unwrap(), bs);
-            }
-            BlockOp::Fwd => {
-                let (diag, col) =
-                    m.block_and_mut((t.kk, t.kk), (t.kk, t.jj)).unwrap();
-                backend.fwd(diag, col, bs);
-            }
-            BlockOp::Bdiv => {
-                let (diag, row) =
-                    m.block_and_mut((t.kk, t.kk), (t.ii, t.kk)).unwrap();
-                backend.bdiv(diag, row, bs);
-            }
-            BlockOp::Bmod => {
-                m.allocate_clean_block(t.ii, t.jj);
-                let (row, col, inner) = m
-                    .read2_write1((t.ii, t.kk), (t.kk, t.jj), (t.ii, t.jj))
-                    .unwrap();
-                backend.bmod(row, col, inner, bs);
-            }
-        }
+    let k_lu0 = |_: &[&[f32]], w: &mut [f32], bs: usize| backend.lu0(w, bs);
+    let k_fwd =
+        |r: &[&[f32]], w: &mut [f32], bs: usize| backend.fwd(r[0], w, bs);
+    let k_bdiv =
+        |r: &[&[f32]], w: &mut [f32], bs: usize| backend.bdiv(r[0], w, bs);
+    let k_bmod = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+        backend.bmod(r[0], r[1], w, bs)
     };
-    let stats = match rt {
-        DataflowRt::Omp(omp) => {
-            execute_omp_opts(omp, &graph, run, cfg.exec)
-        }
-        DataflowRt::Gprm(gprm) => {
-            execute_gprm_opts(gprm, &graph, run, cfg.exec)
-        }
-    }
-    .expect("dataflow sparselu failed");
-    *a = shared.into_inner();
-    stats
+    // Indexed by OP_LU0..OP_BMOD, aligned with sched::LU_OPS.
+    let kernels: [BlockKernel; 4] = [&k_lu0, &k_fwd, &k_bdiv, &k_bmod];
+    run_dataflow(rt, a, &graph, &kernels, cfg.exec)
 }
 
 #[cfg(test)]

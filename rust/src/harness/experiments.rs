@@ -551,26 +551,28 @@ fn ablation(scale: Scale) -> ExperimentReport {
     ExperimentReport { id: "ablation".into(), tables: vec![t], checks }
 }
 
-// --- Dataflow: DAG scheduling vs the paper's phase barriers -------------
+// --- Dataflow: DAG scheduling vs phase barriers, both workloads ---------
 
-fn dataflow(scale: Scale) -> ExperimentReport {
-    use crate::tilesim::{DataflowSim, SchedModel};
-    // The acceptance workload: Fig-6-shaped SparseLU with NB=32,
-    // BS=16 (scaled down by NB only, like fig6, so per-task
-    // granularity is preserved).
-    let nb = scale.nb(32);
-    let bs = 16usize;
+/// One workload's pair of dataflow tables + checks: DAG-vs-phase
+/// makespans across tile counts, and the mutex-scoreboard vs
+/// work-stealing executor comparison. `dag` runs the DAG simulator
+/// under the given claim-cost model; `phased` the level-synchronous
+/// phase simulator under the given assignment. The engine is
+/// kernel-agnostic, so SparseLU and Cholesky share every threshold.
+fn dataflow_workload(
+    name: &str,
+    nb: usize,
+    bs: usize,
+    phased: &dyn Fn(usize, GprmAssign) -> u64,
+    dag: &dyn Fn(usize, crate::tilesim::SchedModel) -> crate::tilesim::SimReport,
+    tables: &mut Vec<Table>,
+    checks: &mut Vec<ShapeCheck>,
+) {
+    use crate::tilesim::SchedModel;
     let tile_counts = [4usize, 8, 16, 32, 63];
-    let phased = |tiles: usize, assign: GprmAssign| -> u64 {
-        let mut sim = GprmSim::tilepro(tiles);
-        sim.n_tiles = tiles;
-        sim.assign = assign;
-        sim.run(Workload::sparselu(nb, bs), nb * nb, (bs * bs * 4) as u64)
-            .cycles
-    };
     let mut t = Table::new(
         &format!(
-            "Dataflow — SparseLU NB={nb}, BS={bs}: phase-barrier vs DAG makespan"
+            "Dataflow — {name} NB={nb}, BS={bs}: phase-barrier vs DAG makespan"
         ),
         &["tiles", "phase rr", "phase contiguous", "dataflow DAG", "DAG gain"],
     );
@@ -578,17 +580,18 @@ fn dataflow(scale: Scale) -> ExperimentReport {
     for &tiles in &tile_counts {
         let rr = phased(tiles, GprmAssign::RoundRobin);
         let ct = phased(tiles, GprmAssign::Contiguous);
-        let dag = DataflowSim::tilepro(tiles).run_sparselu(nb, bs).cycles;
+        let d = dag(tiles, SchedModel::WorkSteal).cycles;
         let best_phase = rr.min(ct);
-        gains.push((tiles, best_phase as f64 / dag as f64));
+        gains.push((tiles, best_phase as f64 / d as f64));
         t.row(vec![
             tiles.to_string(),
             vsec(rr),
             vsec(ct),
-            vsec(dag),
-            spd(best_phase as f64 / dag as f64),
+            vsec(d),
+            spd(best_phase as f64 / d as f64),
         ]);
     }
+    tables.push(t);
     let at_scale: Vec<f64> = gains
         .iter()
         .filter(|(tiles, _)| *tiles >= 16)
@@ -600,20 +603,18 @@ fn dataflow(scale: Scale) -> ExperimentReport {
     let workers = [1usize, 2, 4, 8, 16];
     let mut t2 = Table::new(
         &format!(
-            "Executor — SparseLU NB={nb}, BS={bs}: mutex scoreboard vs work stealing"
+            "Executor — {name} NB={nb}, BS={bs}: mutex scoreboard vs work stealing"
         ),
         &["workers", "mutex (s)", "steal (s)", "mutex ktask/s", "steal ktask/s", "steal gain"],
     );
     let hz = crate::tilesim::CostModel::default().clock_hz;
+    let ktps = |r: &crate::tilesim::SimReport| {
+        r.tasks as f64 / (r.cycles as f64 / hz) / 1e3
+    };
     let mut steal_gains = Vec::new();
     for &w in &workers {
-        let mutex = DataflowSim::with_sched(w, SchedModel::MutexScoreboard)
-            .run_sparselu(nb, bs);
-        let steal = DataflowSim::with_sched(w, SchedModel::WorkSteal)
-            .run_sparselu(nb, bs);
-        let ktps = |r: &crate::tilesim::SimReport| {
-            r.tasks as f64 / (r.cycles as f64 / hz) / 1e3
-        };
+        let mutex = dag(w, SchedModel::MutexScoreboard);
+        let steal = dag(w, SchedModel::WorkSteal);
         let gain = mutex.cycles as f64 / steal.cycles as f64;
         steal_gains.push((w, gain));
         t2.row(vec![
@@ -625,37 +626,84 @@ fn dataflow(scale: Scale) -> ExperimentReport {
             spd(gain),
         ]);
     }
-    let checks = vec![
-        ShapeCheck::new(
-            "DAG beats the best phase-barrier schedule at every tile count >= 16",
-            at_scale.iter().all(|&g| g > 1.0),
-            format!("gains {at_scale:.2?}"),
-        ),
-        ShapeCheck::new(
-            "DAG never loses even on few tiles (barriers only cost, never help)",
-            gains.iter().all(|&(_, g)| g > 0.95),
-            format!("{gains:?}"),
-        ),
-        ShapeCheck::new(
-            "work stealing beats the mutex scoreboard at every count >= 4 workers",
-            steal_gains
-                .iter()
-                .filter(|&&(w, _)| w >= 4)
-                .all(|&(_, g)| g > 1.02),
-            format!("{steal_gains:?}"),
-        ),
-        ShapeCheck::new(
-            "work stealing never loses, even on 1-2 workers",
-            steal_gains.iter().all(|&(_, g)| g > 0.95),
-            format!("{steal_gains:?}"),
-        ),
-        ShapeCheck::new(
-            "the scoreboard's claim cost grows with workers (steal gain widens)",
-            steal_gains.windows(2).all(|w| w[1].1 > w[0].1),
-            format!("{steal_gains:?}"),
-        ),
-    ];
-    ExperimentReport { id: "dataflow".into(), tables: vec![t, t2], checks }
+    tables.push(t2);
+    checks.push(ShapeCheck::new(
+        &format!("{name}: DAG beats the best phase-barrier schedule at every tile count >= 16"),
+        at_scale.iter().all(|&g| g > 1.0),
+        format!("gains {at_scale:.2?}"),
+    ));
+    checks.push(ShapeCheck::new(
+        &format!("{name}: DAG never loses even on few tiles (barriers only cost, never help)"),
+        gains.iter().all(|&(_, g)| g > 0.95),
+        format!("{gains:?}"),
+    ));
+    checks.push(ShapeCheck::new(
+        &format!("{name}: work stealing beats the mutex scoreboard at every count >= 4 workers"),
+        steal_gains
+            .iter()
+            .filter(|&&(w, _)| w >= 4)
+            .all(|&(_, g)| g > 1.02),
+        format!("{steal_gains:?}"),
+    ));
+    checks.push(ShapeCheck::new(
+        &format!("{name}: work stealing never loses, even on 1-2 workers"),
+        steal_gains.iter().all(|&(_, g)| g > 0.95),
+        format!("{steal_gains:?}"),
+    ));
+    checks.push(ShapeCheck::new(
+        &format!("{name}: the scoreboard's claim cost grows with workers (steal gain widens)"),
+        steal_gains.windows(2).all(|w| w[1].1 > w[0].1),
+        format!("{steal_gains:?}"),
+    ));
+}
+
+fn dataflow(scale: Scale) -> ExperimentReport {
+    use crate::tilesim::{DataflowSim, SchedModel};
+    // The acceptance workloads, Fig-6-shaped (scaled down by NB only,
+    // like fig6, so per-task granularity is preserved): SparseLU with
+    // NB=32, BS=16, and tiled dense Cholesky on the same grid — the
+    // second workload riding the same kernel-agnostic engine.
+    let nb = scale.nb(32);
+    let bs = 16usize;
+    let mut tables = Vec::new();
+    let mut checks = Vec::new();
+    let phase_sim = |tiles: usize, assign: GprmAssign| -> GprmSim {
+        let mut sim = GprmSim::tilepro(tiles);
+        sim.n_tiles = tiles;
+        sim.assign = assign;
+        sim
+    };
+    dataflow_workload(
+        "SparseLU",
+        nb,
+        bs,
+        &|tiles, assign| {
+            phase_sim(tiles, assign)
+                .run(Workload::sparselu(nb, bs), nb * nb, (bs * bs * 4) as u64)
+                .cycles
+        },
+        &|workers, sched: SchedModel| {
+            DataflowSim::with_sched(workers, sched).run_sparselu(nb, bs)
+        },
+        &mut tables,
+        &mut checks,
+    );
+    dataflow_workload(
+        "Cholesky",
+        nb,
+        bs,
+        &|tiles, assign| {
+            phase_sim(tiles, assign)
+                .run(Workload::cholesky(nb, bs), nb * nb, (bs * bs * 4) as u64)
+                .cycles
+        },
+        &|workers, sched: SchedModel| {
+            DataflowSim::with_sched(workers, sched).run_cholesky(nb, bs)
+        },
+        &mut tables,
+        &mut checks,
+    );
+    ExperimentReport { id: "dataflow".into(), tables, checks }
 }
 
 #[cfg(test)]

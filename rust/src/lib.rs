@@ -12,15 +12,21 @@
 //! * [`tilesim`] — a TILEPro64-like discrete-event many-core simulator
 //!   used as the measurement substrate (see DESIGN.md §2).
 //! * [`linalg`] — dense / blocked-sparse matrices, the BOTS SparseLU
-//!   generator, and the lu0/fwd/bdiv/bmod block kernels.
+//!   generator, the lu0/fwd/bdiv/bmod block kernels, and the tiled
+//!   Cholesky substrate (potrf/trsm/syrk/gemm kernels, SPD generator,
+//!   sequential reference).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   block kernels in `artifacts/`.
-//! * [`sched`] — dataflow (DAG) task scheduling: a `TaskGraph` built
-//!   from per-task read/write block sets and a lock-free
+//! * [`sched`] — the **kernel-agnostic** dataflow (DAG) engine: a
+//!   `TaskGraph` of opaque op ids + block access sets (RAW/WAW/WAR
+//!   edges derived purely from the access sets) and a lock-free
 //!   work-stealing executor (Chase–Lev deques) running on both host
-//!   runtimes, with the mutex scoreboard kept as a baseline.
+//!   runtimes, with the mutex scoreboard kept as a baseline. Workload
+//!   constructors: `TaskGraph::sparselu`, `TaskGraph::cholesky`.
 //! * [`apps`] — the paper's two workloads (SparseLU, MatMul) on every
-//!   runtime.
+//!   runtime, plus tiled Cholesky on the dataflow engine; all dataflow
+//!   drivers funnel through the generic kernel-table driver
+//!   [`apps::dataflow::run_dataflow`].
 //! * [`bench`] / [`harness`] — measurement harness and the per-figure
 //!   experiment drivers.
 //!
@@ -33,14 +39,28 @@
 //! end of the factorisation, and for *every* `fwd`/`bdiv` phase of a
 //! sparse matrix — tiles idle at the barrier.
 //!
-//! [`sched`] replaces the barriers with the true dependence DAG:
-//! [`sched::TaskGraph::sparselu`] records each block task's read/write
-//! sets and derives RAW/WAW/WAR edges (stored in a flat CSR layout for
-//! the executor's atomic hot path), and the executor
-//! ([`sched::execute_omp_opts`] / [`sched::execute_gprm_opts`]) runs
-//! any task the moment its predecessors finish. Because edges
-//! reproduce the sequential per-block operation order, results stay
-//! bit-identical (f32) to [`linalg::lu::sparselu_seq`].
+//! [`sched`] replaces the barriers with the true dependence DAG — and
+//! the engine is *kernel-agnostic*: a task is an opaque op id plus its
+//! block access sets, edges (RAW/WAW/WAR) are derived purely from the
+//! access sets (stored in a flat CSR layout for the executor's atomic
+//! hot path), and the executor ([`sched::execute_omp_opts`] /
+//! [`sched::execute_gprm_opts`]) runs any task the moment its
+//! predecessors finish, dispatching through a per-workload kernel
+//! table ([`apps::dataflow::run_dataflow`]). Because edges reproduce
+//! the sequential per-block operation order, results stay bit-identical
+//! (f32) to the sequential reference ([`linalg::lu::sparselu_seq`] /
+//! [`linalg::cholesky::cholesky_seq`]).
+//!
+//! Two workloads prove the abstraction: the BOTS SparseLU DAG
+//! ([`sched::TaskGraph::sparselu`], driver
+//! [`apps::sparselu::sparselu_dataflow`], CLI `--app sparselu`) and
+//! tiled dense Cholesky in the style of Buttari et al.
+//! ([`sched::TaskGraph::cholesky`], driver
+//! [`apps::cholesky::cholesky_dataflow`], CLI `--app cholesky`; not in
+//! the source paper — see DIVERGENCES.md). Adding a workload (tiled
+//! QR, …) means one graph constructor plus one kernel table — the
+//! executors, the simulator cost encoding
+//! ([`tilesim::workload::dag_sim_task`]) and the benches are untouched.
 //!
 //! The executor itself is **lock-free work stealing** by default
 //! ([`sched::ExecOpts`]): per-worker Chase–Lev deques
@@ -56,11 +76,11 @@
 //! `gprm sparselu --runtime dataflow-omp|dataflow-gprm --steal on|off
 //! --events`).
 //!
-//! The fourth SparseLU implementation (third parallel driver),
-//! [`apps::sparselu::sparselu_dataflow`], and the simulator strategy
-//! [`tilesim::DataflowSim`] both schedule through this subsystem; see
+//! The simulator strategy [`tilesim::DataflowSim`] schedules any
+//! `TaskGraph` through the same subsystem (`gprm exp dataflow` reports
+//! DAG-vs-phase and steal-vs-mutex tables for both workloads); see
 //! DIVERGENCES.md for where this deliberately departs from the paper
-//! (the paper's GPRM is steal-free).
+//! (the paper's GPRM is steal-free and SparseLU-only).
 // CI enforces `cargo clippy -- -D warnings`; these style lints are
 // opted out crate-wide because they fight the paper-faithful shapes:
 // index-heavy numeric kernels (the explicit loop bounds document the

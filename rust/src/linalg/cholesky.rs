@@ -1,0 +1,375 @@
+//! Tiled dense Cholesky — the second workload on the kernel-agnostic
+//! dataflow engine (Buttari et al., *A Class of Parallel Tiled Linear
+//! Algebra Algorithms for Multicore Architectures*, arXiv:0709.1272;
+//! not part of the source paper — see DIVERGENCES.md).
+//!
+//! Shapes: every argument is one row-major `bs×bs` block. Only the
+//! lower triangle is stored and touched (`(ii, jj)` with `ii ≥ jj`;
+//! diagonal blocks keep junk above their diagonal).
+//!
+//! * `potrf(diag)`        — in-place lower Cholesky of the diagonal
+//!   block: `diag = L·Lᵀ`, `L` packed into the lower triangle.
+//! * `trsm(diag, row)`    — `row ← row · L(diag)⁻ᵀ` (triangular solve
+//!   from the right); applied to blocks **below** the diagonal.
+//! * `syrk(panel, diag)`  — `diag ← diag − panel·panelᵀ` (symmetric
+//!   rank-bs update of a trailing diagonal block, lower part only).
+//! * `gemm_nt(a, b, c)`   — `c ← c − a·bᵀ` (general trailing update).
+
+use super::blocked::BlockedSparseMatrix;
+use super::dense::DenseMatrix;
+
+/// The four Cholesky block-kernel kinds (naming as in LAPACK/PLASMA).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum CholOp {
+    Potrf,
+    Trsm,
+    Syrk,
+    Gemm,
+}
+
+impl CholOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            CholOp::Potrf => "potrf",
+            CholOp::Trsm => "trsm",
+            CholOp::Syrk => "syrk",
+            CholOp::Gemm => "gemm",
+        }
+    }
+}
+
+/// Approximate flop counts per kernel, used by the simulator cost
+/// model and the benchmark reports (same granularity of approximation
+/// as [`crate::linalg::lu::kernel_flops`]).
+pub fn chol_kernel_flops(kind: CholOp, bs: usize) -> u64 {
+    let b = bs as u64;
+    match kind {
+        CholOp::Potrf => b * b * b / 3,
+        CholOp::Trsm | CholOp::Syrk => b * b * b,
+        CholOp::Gemm => 2 * b * b * b,
+    }
+}
+
+/// In-place lower Cholesky of one diagonal block: on return the lower
+/// triangle (diagonal included) holds `L` with `diag = L·Lᵀ`; entries
+/// above the diagonal are left untouched.
+pub fn potrf(diag: &mut [f32], bs: usize) {
+    debug_assert_eq!(diag.len(), bs * bs);
+    for k in 0..bs {
+        let akk = diag[k * bs + k];
+        debug_assert!(akk > 0.0, "non-positive pivot {akk} at k={k}");
+        let lkk = akk.sqrt();
+        diag[k * bs + k] = lkk;
+        for i in k + 1..bs {
+            diag[i * bs + k] /= lkk;
+        }
+        for j in k + 1..bs {
+            let ljk = diag[j * bs + k];
+            if ljk == 0.0 {
+                continue;
+            }
+            for i in j..bs {
+                diag[i * bs + j] -= diag[i * bs + k] * ljk;
+            }
+        }
+    }
+}
+
+/// Triangular solve from the right: `row ← row · L(diag)⁻ᵀ`, where `L`
+/// is the lower-triangular factor packed in `diag` by [`potrf`].
+/// Row-by-row forward substitution, in place.
+pub fn trsm(diag: &[f32], row: &mut [f32], bs: usize) {
+    debug_assert_eq!(diag.len(), bs * bs);
+    debug_assert_eq!(row.len(), bs * bs);
+    for r in 0..bs {
+        let x = &mut row[r * bs..(r + 1) * bs];
+        for c in 0..bs {
+            let mut v = x[c];
+            for j in 0..c {
+                v -= x[j] * diag[c * bs + j];
+            }
+            x[c] = v / diag[c * bs + c];
+        }
+    }
+}
+
+/// Symmetric rank-`bs` update of a trailing diagonal block:
+/// `diag ← diag − panel·panelᵀ`, lower triangle only.
+pub fn syrk(panel: &[f32], diag: &mut [f32], bs: usize) {
+    debug_assert_eq!(panel.len(), bs * bs);
+    debug_assert_eq!(diag.len(), bs * bs);
+    for i in 0..bs {
+        for j in 0..=i {
+            let mut acc = diag[i * bs + j];
+            for k in 0..bs {
+                acc -= panel[i * bs + k] * panel[j * bs + k];
+            }
+            diag[i * bs + j] = acc;
+        }
+    }
+}
+
+/// General trailing update: `c ← c − a·bᵀ`.
+pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], bs: usize) {
+    debug_assert_eq!(a.len(), bs * bs);
+    debug_assert_eq!(b.len(), bs * bs);
+    debug_assert_eq!(c.len(), bs * bs);
+    for i in 0..bs {
+        for j in 0..bs {
+            let mut acc = c[i * bs + j];
+            for k in 0..bs {
+                acc -= a[i * bs + k] * b[j * bs + k];
+            }
+            c[i * bs + j] = acc;
+        }
+    }
+}
+
+/// Sequential tiled Cholesky — the reference every parallel schedule
+/// is compared against (bit-identically: the task DAG chains all
+/// touches of a block in exactly this loop order).
+///
+/// In place: on return the lower-triangle blocks of `a` hold `L` with
+/// `A = L·Lᵀ`. The loop structure mirrors
+/// [`crate::sched::TaskGraph::cholesky`] task for task.
+pub fn cholesky_seq(a: &mut BlockedSparseMatrix) {
+    let nb = a.nb();
+    let bs = a.bs();
+    for kk in 0..nb {
+        potrf(a.block_mut(kk, kk).expect("diagonal block"), bs);
+        for ii in kk + 1..nb {
+            let (diag, row) = a.block_and_mut((kk, kk), (ii, kk)).unwrap();
+            trsm(diag, row, bs);
+        }
+        for ii in kk + 1..nb {
+            {
+                let (panel, diag) =
+                    a.block_and_mut((ii, kk), (ii, ii)).unwrap();
+                syrk(panel, diag, bs);
+            }
+            for jj in kk + 1..ii {
+                let (pi, pj, tgt) = a
+                    .read2_write1((ii, kk), (jj, kk), (ii, jj))
+                    .unwrap();
+                gemm_nt(pi, pj, tgt, bs);
+            }
+        }
+    }
+}
+
+/// Deterministic symmetric positive-definite input: values from the
+/// BOTS LCG (the same generator family as `genmat`), symmetrised, with
+/// the diagonal lifted to strict diagonal dominance (`+2·n`), which
+/// guarantees positive definiteness and keeps the pivot-free f32
+/// factorisation well-conditioned. Only the lower-triangle blocks
+/// (`ii ≥ jj`) are allocated — the Cholesky drivers never touch the
+/// strict upper triangle.
+pub fn gen_spd(nb: usize, bs: usize) -> BlockedSparseMatrix {
+    let n = nb * bs;
+    let mut d = DenseMatrix::zeros(n, n);
+    let mut init_val: u64 = 1325;
+    for i in 0..n {
+        for j in 0..=i {
+            init_val = (3125 * init_val) % 65536;
+            let x = (init_val as f32 - 32768.0) / 16384.0;
+            d[(i, j)] = x;
+            d[(j, i)] = x;
+        }
+    }
+    for i in 0..n {
+        d[(i, i)] = d[(i, i)].abs() + 2.0 * n as f32;
+    }
+    let mut m = BlockedSparseMatrix::empty(nb, bs);
+    for ii in 0..nb {
+        for jj in 0..=ii {
+            let mut block = vec![0.0f32; bs * bs].into_boxed_slice();
+            for r in 0..bs {
+                for c in 0..bs {
+                    block[r * bs + c] = d[(ii * bs + r, jj * bs + c)];
+                }
+            }
+            m.set_block(ii, jj, block);
+        }
+    }
+    m
+}
+
+/// Expand a lower-triangle blocked matrix to its full symmetric dense
+/// form (mirroring the strictly-lower part; diagonal blocks contribute
+/// their lower triangle both ways). This is the `A` the residual check
+/// reconstructs `L·Lᵀ` against.
+pub fn sym_dense(a: &BlockedSparseMatrix) -> DenseMatrix {
+    let n = a.dim();
+    let bs = a.bs();
+    let mut d = DenseMatrix::zeros(n, n);
+    for ii in 0..a.nb() {
+        for jj in 0..=ii {
+            if let Some(b) = a.block(ii, jj) {
+                for r in 0..bs {
+                    for c in 0..bs {
+                        let (gi, gj) = (ii * bs + r, jj * bs + c);
+                        if gi < gj {
+                            continue; // junk above a diag block's diagonal
+                        }
+                        d[(gi, gj)] = b[r * bs + c];
+                        d[(gj, gi)] = b[r * bs + c];
+                    }
+                }
+            }
+        }
+    }
+    d
+}
+
+/// Dense (block-size-`n`) lower Cholesky — the oracle used to validate
+/// the blocked factorisation.
+pub fn dense_cholesky(a: &mut DenseMatrix) {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    potrf(a.as_mut_slice(), n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::verify::chol_residual_sparse;
+
+    #[test]
+    fn potrf_reconstructs_2x2() {
+        // A = [[4,2],[2,3]] → L = [[2,0],[1,sqrt(2)]].
+        let mut d = vec![4.0f32, 2.0, 2.0, 3.0];
+        potrf(&mut d, 2);
+        assert_eq!(d[0], 2.0);
+        assert_eq!(d[2], 1.0);
+        assert!((d[3] - 2.0f32.sqrt()).abs() < 1e-6);
+        // Upper entry untouched.
+        assert_eq!(d[1], 2.0);
+    }
+
+    #[test]
+    fn trsm_solves_against_lt() {
+        let bs = 8;
+        let spd = gen_spd(1, bs);
+        let mut diag = spd.block(0, 0).unwrap().to_vec();
+        potrf(&mut diag, bs);
+        let rhs = DenseMatrix::bots_random(bs, bs, 5);
+        let mut row = rhs.clone();
+        trsm(&diag, row.as_mut_slice(), bs);
+        // Check row · Lᵀ == rhs.
+        let mut l = DenseMatrix::zeros(bs, bs);
+        for i in 0..bs {
+            for j in 0..=i {
+                l[(i, j)] = diag[i * bs + j];
+            }
+        }
+        let mut lt = DenseMatrix::zeros(bs, bs);
+        for i in 0..bs {
+            for j in 0..bs {
+                lt[(i, j)] = l[(j, i)];
+            }
+        }
+        let back = row.matmul(&lt);
+        assert!(back.max_abs_diff(&rhs) < 1e-3);
+    }
+
+    #[test]
+    fn syrk_matches_gemm_on_lower() {
+        let bs = 6;
+        let p = DenseMatrix::bots_random(bs, bs, 2);
+        let c0 = DenseMatrix::bots_random(bs, bs, 3);
+        let mut c_syrk = c0.clone();
+        syrk(p.as_slice(), c_syrk.as_mut_slice(), bs);
+        let mut c_gemm = c0.clone();
+        gemm_nt(p.as_slice(), p.as_slice(), c_gemm.as_mut_slice(), bs);
+        for i in 0..bs {
+            for j in 0..bs {
+                if j <= i {
+                    assert_eq!(c_syrk[(i, j)], c_gemm[(i, j)]);
+                } else {
+                    assert_eq!(c_syrk[(i, j)], c0[(i, j)], "upper touched");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_is_a_bt_subtract() {
+        let bs = 5;
+        let a = DenseMatrix::bots_random(bs, bs, 1);
+        let b = DenseMatrix::bots_random(bs, bs, 2);
+        let c0 = DenseMatrix::bots_random(bs, bs, 3);
+        let mut c = c0.clone();
+        gemm_nt(a.as_slice(), b.as_slice(), c.as_mut_slice(), bs);
+        for i in 0..bs {
+            for j in 0..bs {
+                let mut want = c0[(i, j)];
+                for k in 0..bs {
+                    want -= a[(i, k)] * b[(j, k)];
+                }
+                assert!((c[(i, j)] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_spd_is_symmetric_and_dominant() {
+        let m = gen_spd(4, 3);
+        let n = m.dim();
+        let d = sym_dense(&m);
+        for i in 0..n {
+            let mut off = 0.0f64;
+            for j in 0..n {
+                assert_eq!(d[(i, j)], d[(j, i)]);
+                if i != j {
+                    off += d[(i, j)].abs() as f64;
+                }
+            }
+            assert!(
+                d[(i, i)] as f64 > off,
+                "row {i} not diagonally dominant"
+            );
+        }
+        // Only lower-triangle blocks allocated.
+        for ii in 0..4 {
+            for jj in 0..4 {
+                assert_eq!(m.is_allocated(ii, jj), ii >= jj);
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_dense_oracle() {
+        let mut a = gen_spd(5, 4);
+        let mut d = sym_dense(&a);
+        cholesky_seq(&mut a);
+        dense_cholesky(&mut d);
+        let n = d.rows();
+        let bs = a.bs();
+        let mut worst = 0.0f32;
+        for i in 0..n {
+            for j in 0..=i {
+                let b = a.block(i / bs, j / bs).unwrap();
+                let got = b[(i % bs) * bs + (j % bs)];
+                worst = worst.max((got - d[(i, j)]).abs());
+            }
+        }
+        assert!(worst < 1e-2, "blocked vs dense L diff {worst}");
+    }
+
+    #[test]
+    fn cholesky_seq_residual() {
+        let mut a = gen_spd(6, 5);
+        let orig = sym_dense(&a);
+        cholesky_seq(&mut a);
+        let res = chol_residual_sparse(&orig, &a);
+        assert!(res < 1e-5, "cholesky residual {res}");
+    }
+
+    #[test]
+    fn chol_flops_sane() {
+        assert_eq!(chol_kernel_flops(CholOp::Gemm, 10), 2000);
+        assert_eq!(chol_kernel_flops(CholOp::Trsm, 10), 1000);
+        assert_eq!(chol_kernel_flops(CholOp::Syrk, 10), 1000);
+        assert!(chol_kernel_flops(CholOp::Potrf, 10) < 1000);
+    }
+}

@@ -12,11 +12,16 @@
 //! * [`lu`] — the four block kernels `lu0`, `fwd`, `bdiv`, `bmod`
 //!   exactly as in BOTS, plus sequential blocked-sparse and dense LU
 //!   reference drivers.
-//! * [`verify`] — ‖L·U − A‖ reconstruction checks used by tests and
-//!   the end-to-end example.
+//! * [`cholesky`] — tiled dense Cholesky: the POTRF/TRSM/SYRK/GEMM
+//!   block kernels, an SPD input generator, and the sequential tiled
+//!   reference (the second workload on the dataflow engine; not in the
+//!   source paper — see DIVERGENCES.md).
+//! * [`verify`] — ‖L·U − A‖ / ‖L·Lᵀ − A‖ reconstruction checks used
+//!   by tests and the end-to-end example.
 
 pub mod dense;
 pub mod blocked;
+pub mod cholesky;
 pub mod genmat;
 pub mod lu;
 pub mod verify;

@@ -48,6 +48,51 @@ pub fn lu_residual_sparse(orig_dense: &DenseMatrix, packed: &BlockedSparseMatrix
     lu_residual_dense(orig_dense, &packed.to_dense())
 }
 
+/// Relative residual ‖L·Lᵀ − A‖_F / ‖A‖_F for a packed *blocked
+/// sparse* lower Cholesky (as produced by
+/// [`crate::linalg::cholesky::cholesky_seq`]) against the full
+/// symmetric dense original.
+pub fn chol_residual_sparse(
+    orig_dense: &DenseMatrix,
+    packed: &BlockedSparseMatrix,
+) -> f64 {
+    let n = packed.dim();
+    let bs = packed.bs();
+    assert_eq!(orig_dense.rows(), n);
+    // Extract L (lower triangle incl. diagonal) from the lower blocks.
+    let mut l = DenseMatrix::zeros(n, n);
+    for ii in 0..packed.nb() {
+        for jj in 0..=ii {
+            if let Some(b) = packed.block(ii, jj) {
+                for r in 0..bs {
+                    for c in 0..bs {
+                        let (gi, gj) = (ii * bs + r, jj * bs + c);
+                        if gi >= gj {
+                            l[(gi, gj)] = b[r * bs + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // ‖L·Lᵀ − A‖ via Lᵀ materialised once.
+    let mut lt = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            lt[(i, j)] = l[(j, i)];
+        }
+    }
+    let llt = l.matmul_opt(&lt);
+    let mut num = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let d = (llt[(i, j)] - orig_dense[(i, j)]) as f64;
+            num += d * d;
+        }
+    }
+    num.sqrt() / orig_dense.fro_norm().max(1e-30)
+}
+
 /// Assert two blocked matrices have identical structure and
 /// elementwise-close values; returns max abs diff.
 pub fn assert_blocked_close(
@@ -110,6 +155,17 @@ mod tests {
         dense_lu(&mut p);
         p[(0, 0)] += 1.0;
         assert!(lu_residual_dense(&a, &p) > 0.05);
+    }
+
+    #[test]
+    fn chol_residual_detects_corruption() {
+        use crate::linalg::cholesky::{cholesky_seq, gen_spd, sym_dense};
+        let mut a = gen_spd(3, 4);
+        let orig = sym_dense(&a);
+        cholesky_seq(&mut a);
+        assert!(chol_residual_sparse(&orig, &a) < 1e-5);
+        a.block_mut(1, 0).unwrap()[0] += 5.0;
+        assert!(chol_residual_sparse(&orig, &a) > 1e-3);
     }
 
     #[test]

@@ -5,17 +5,23 @@
 //! * `exp [ids…] [--scale f]` — regenerate the paper's figures/tables
 //!   on the TILEPro64 simulator substrate (fig2 fig3 fig4 fig6 table1
 //!   fig7; default: all, at `--scale 1.0` = paper scale).
-//! * `sparselu` — factorise a BOTS-generated sparse matrix on a real
-//!   runtime (host threads), optionally through the PJRT artifacts.
+//! * `sparselu` — blocked factorisation on a real runtime (host
+//!   threads), optionally through the PJRT artifacts. `--app
+//!   sparselu|cholesky` selects the workload: the BOTS sparse LU or
+//!   tiled dense Cholesky, both scheduled by the same kernel-agnostic
+//!   dataflow engine.
 //! * `matmul` — the §V micro-benchmark on a real runtime.
 //! * `artifacts` — inspect the AOT artifact manifest / PJRT platform.
 
+use gprm::apps::cholesky::cholesky_dataflow;
 use gprm::apps::matmul::{MatmulApproach, MatmulExec};
 use gprm::apps::sparselu::{
     sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuBackend,
     LuRunConfig,
 };
 use gprm::coordinator::kernel::Registry;
+use gprm::linalg::cholesky::{cholesky_seq, gen_spd, sym_dense};
+use gprm::linalg::verify::chol_residual_sparse;
 use gprm::coordinator::{GprmConfig, GprmRuntime};
 use gprm::harness::{run_experiment, Scale, ALL_EXPERIMENTS};
 use gprm::linalg::genmat::genmat;
@@ -51,6 +57,8 @@ fn print_help() {
         "gprm — reproduction of 'A Parallel Task-based Approach to Linear \
          Algebra' (ISPDC 2014)\n\n\
          USAGE:\n  gprm <exp|sparselu|matmul|artifacts> [options]\n\n\
+         `gprm sparselu --app sparselu|cholesky` selects the blocked\n\
+         factorisation workload (both run on the dataflow engine).\n\n\
          Run `gprm <subcommand> --help` for details."
     );
 }
@@ -106,12 +114,13 @@ fn cmd_exp(argv: &[String]) -> i32 {
 
 fn cmd_sparselu(argv: &[String]) -> i32 {
     let specs = [
+        OptSpec { name: "app", help: "workload: sparselu | cholesky (cholesky: seq + dataflow runtimes, rust kernels only)", default: Some("sparselu"), is_flag: false },
         OptSpec { name: "nb", help: "blocks per dimension", default: Some("25"), is_flag: false },
         OptSpec { name: "bs", help: "block size", default: Some("16"), is_flag: false },
         OptSpec { name: "runtime", help: "gprm | omp | seq | dataflow-omp | dataflow-gprm", default: Some("gprm"), is_flag: false },
         OptSpec { name: "threads", help: "threads / concurrency level", default: Some("8"), is_flag: false },
         OptSpec { name: "contiguous", help: "contiguous worksharing (gprm)", default: None, is_flag: true },
-        OptSpec { name: "pjrt", help: "execute block kernels via PJRT artifacts", default: None, is_flag: true },
+        OptSpec { name: "pjrt", help: "execute block kernels via PJRT artifacts (sparselu only)", default: None, is_flag: true },
         OptSpec { name: "pin", help: "pin gprm tiles to cores", default: None, is_flag: true },
         OptSpec { name: "steal", help: "dataflow executor: on = lock-free work stealing (default), off = mutex-scoreboard baseline", default: Some("on"), is_flag: false },
         OptSpec { name: "events", help: "dataflow: record the schedule event log and audit it", default: None, is_flag: true },
@@ -125,7 +134,8 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             "{}",
             usage(
                 "gprm sparselu",
-                "SparseLU on a real runtime (host threads)",
+                "Blocked factorisation on a real runtime (host threads); \
+                 --app selects the workload on the shared dataflow engine",
                 &specs
             )
         );
@@ -135,6 +145,25 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
     let bs = args.get_parse("bs", 16usize).unwrap();
     let runtime = args.get("runtime").unwrap_or("gprm").to_string();
     let threads = args.get_parse("threads", 8usize).unwrap();
+    let steal = match args.get("steal").unwrap_or("on") {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("--steal must be on|off, got {other:?}");
+            return 2;
+        }
+    };
+    let exec = ExecOpts { steal, record_events: args.has_flag("events") };
+    match args.get("app").unwrap_or("sparselu") {
+        "sparselu" => {}
+        "cholesky" => {
+            return run_cholesky_app(nb, bs, &runtime, threads, &args, exec)
+        }
+        other => {
+            eprintln!("--app must be sparselu|cholesky, got {other:?}");
+            return 2;
+        }
+    }
     let engine = if args.has_flag("pjrt") {
         match EngineService::start(default_artifact_dir()) {
             Ok(svc) => {
@@ -153,15 +182,6 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
     } else {
         None
     };
-    let steal = match args.get("steal").unwrap_or("on") {
-        "on" => true,
-        "off" => false,
-        other => {
-            eprintln!("--steal must be on|off, got {other:?}");
-            return 2;
-        }
-    };
-    let exec = ExecOpts { steal, record_events: args.has_flag("events") };
     let cfg = LuRunConfig {
         backend: match &engine {
             Some(svc) => LuBackend::Pjrt(svc),
@@ -204,7 +224,8 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             let stats =
                 sparselu_dataflow(&DataflowRt::Omp(&rt), &mut a, &cfg);
             rt.shutdown();
-            if !report_dataflow(nb, &pattern0, &cfg.exec, &stats) {
+            let graph = || TaskGraph::sparselu(&pattern0, nb);
+            if !report_dataflow(graph, &cfg.exec, &stats) {
                 return 1;
             }
         }
@@ -216,7 +237,8 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             let stats =
                 sparselu_dataflow(&DataflowRt::Gprm(&rt), &mut a, &cfg);
             rt.shutdown();
-            if !report_dataflow(nb, &pattern0, &cfg.exec, &stats) {
+            let graph = || TaskGraph::sparselu(&pattern0, nb);
+            if !report_dataflow(graph, &cfg.exec, &stats) {
                 return 1;
             }
         }
@@ -334,13 +356,79 @@ fn cmd_artifacts(argv: &[String]) -> i32 {
     }
 }
 
-/// Print dataflow executor statistics and, when the event log was
-/// recorded (`--events`), audit it against the task graph built from
-/// the pre-factorisation allocation pattern. Returns `false` when the
-/// audit fails.
-fn report_dataflow(
+/// Factorise an SPD matrix with the tiled-Cholesky workload on the
+/// shared dataflow engine (`--app cholesky`). Supports the seq and
+/// dataflow runtimes; kernels are rust-only (no PJRT artifacts exist
+/// for POTRF/TRSM/SYRK/GEMM).
+fn run_cholesky_app(
     nb: usize,
-    pattern0: &[bool],
+    bs: usize,
+    runtime: &str,
+    threads: usize,
+    args: &Args,
+    exec: ExecOpts,
+) -> i32 {
+    if args.has_flag("pjrt") {
+        eprintln!("--pjrt is sparselu-only (no Cholesky artifacts)");
+        return 2;
+    }
+    println!(
+        "cholesky: {nb}x{nb} blocks of {bs}x{bs} ({} SPD matrix), runtime={runtime}, threads={threads}",
+        nb * bs
+    );
+    let mut a = gen_spd(nb, bs);
+    let orig = sym_dense(&a);
+    let t0 = std::time::Instant::now();
+    match runtime {
+        "seq" => cholesky_seq(&mut a),
+        "dataflow-omp" => {
+            let rt = OmpRuntime::new(threads);
+            let stats =
+                cholesky_dataflow(&DataflowRt::Omp(&rt), &mut a, exec);
+            rt.shutdown();
+            if !report_dataflow(|| TaskGraph::cholesky(nb), &exec, &stats) {
+                return 1;
+            }
+        }
+        "dataflow-gprm" => {
+            let rt = GprmRuntime::new(
+                GprmConfig { n_tiles: threads, pin: args.has_flag("pin") },
+                Registry::new(),
+            );
+            let stats =
+                cholesky_dataflow(&DataflowRt::Gprm(&rt), &mut a, exec);
+            rt.shutdown();
+            if !report_dataflow(|| TaskGraph::cholesky(nb), &exec, &stats) {
+                return 1;
+            }
+        }
+        other => {
+            eprintln!(
+                "cholesky supports seq | dataflow-omp | dataflow-gprm, got {other:?}"
+            );
+            return 2;
+        }
+    }
+    let dt = t0.elapsed();
+    let res = chol_residual_sparse(&orig, &a);
+    println!(
+        "factorised in {dt:.2?}; residual ‖A−LLᵀ‖/‖A‖ = {res:.2e}"
+    );
+    if res < 1e-3 {
+        println!("verification PASS");
+        0
+    } else {
+        println!("verification FAIL");
+        1
+    }
+}
+
+/// Print dataflow executor statistics and, when the event log was
+/// recorded (`--events`), audit it against the workload's task graph
+/// (built lazily — without `--events` no graph is constructed).
+/// Returns `false` when the audit fails.
+fn report_dataflow(
+    graph: impl FnOnce() -> TaskGraph,
     exec: &ExecOpts,
     stats: &ExecStats,
 ) -> bool {
@@ -353,8 +441,7 @@ fn report_dataflow(
     if !exec.record_events {
         return true;
     }
-    let graph = TaskGraph::sparselu(pattern0, nb);
-    match check_event_ordering(&graph, &stats.events) {
+    match check_event_ordering(&graph(), &stats.events) {
         Ok(()) => {
             println!(
                 "event log: {} events, edge order VALID",

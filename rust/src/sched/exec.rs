@@ -222,8 +222,8 @@ impl<'g> StealExec<'g> {
             (0..n_workers).map(|_| StealDeque::with_capacity(n)).collect();
         let indegree: Vec<AtomicUsize> = graph
             .indegrees()
-            .into_iter()
-            .map(AtomicUsize::new)
+            .iter()
+            .map(|&d| AtomicUsize::new(d))
             .collect();
         let roots = graph.roots();
         // Seed roots round-robin across the deques (single-threaded:
@@ -381,8 +381,8 @@ struct MutexScoreboard<'g> {
 
 impl<'g> MutexScoreboard<'g> {
     fn new(graph: &'g TaskGraph, record: bool) -> Self {
-        let indegree = graph.indegrees();
-        let ready: VecDeque<usize> = graph.roots().into();
+        let indegree = graph.indegrees().to_vec();
+        let ready: VecDeque<usize> = graph.roots().iter().copied().collect();
         let n = graph.len();
         Self {
             graph,

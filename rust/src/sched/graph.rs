@@ -1,11 +1,15 @@
 //! Dependency-graph construction from per-task read/write sets.
 //!
-//! [`GraphBuilder`] records, for each block task, which blocks it reads
-//! and which it writes, and derives the dependence edges the way a
-//! superscalar scoreboard would:
+//! The engine is **kernel-agnostic**: a [`Task`] is an opaque op id
+//! (an index into the graph's [`OpSpec`] dispatch vocabulary) plus its
+//! block access sets — which blocks it reads and which single block it
+//! writes (read-modify-write). [`GraphBuilder`] derives the dependence
+//! edges purely from those access sets, the way a superscalar
+//! scoreboard would:
 //!
 //! * **RAW** — a task reading block `b` depends on the last writer of
-//!   `b`;
+//!   `b` (the write target counts as a read: every kernel here is a
+//!   read-modify-write);
 //! * **WAW** — a task writing `b` depends on the previous writer of
 //!   `b`;
 //! * **WAR** — a task writing `b` depends on every reader of `b` since
@@ -17,44 +21,151 @@
 //! each block in exactly the sequential per-block order, which keeps
 //! parallel results bit-identical (f32) to the sequential reference.
 //!
-//! [`TaskGraph::sparselu`] applies the builder to the BOTS SparseLU
-//! structure (fill-in included) — the DAG that replaces the paper's
-//! phase-barrier Listings 5–6 (see DIVERGENCES.md).
+//! Nothing above this line knows which kernels exist. The workload
+//! constructors below instantiate the builder for the two evaluation
+//! workloads: [`TaskGraph::sparselu`] (the BOTS SparseLU structure
+//! with fill-in — the DAG that replaces the paper's phase-barrier
+//! Listings 5–6) and [`TaskGraph::cholesky`] (tiled dense Cholesky in
+//! the style of Buttari et al., arXiv:0709.1272). Executors
+//! ([`super::exec`]) and the simulator ([`crate::tilesim`]) dispatch
+//! through the op table and never match on a concrete kernel, so new
+//! workloads (tiled QR, …) only add a constructor plus a kernel
+//! table — see DIVERGENCES.md.
 
-use crate::linalg::lu::BlockOp;
+use crate::linalg::cholesky::{chol_kernel_flops, CholOp};
+use crate::linalg::lu::{kernel_flops, BlockOp};
 
 /// Index of a task inside its [`TaskGraph`].
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
 pub struct TaskId(pub usize);
 
-/// One block task: which kernel, on which blocks, at which elimination
-/// step.
+/// Index of a kernel inside a workload's op table (`&[OpSpec]`).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct OpId(pub usize);
+
+/// One entry of a workload's kernel-dispatch vocabulary: a display
+/// name plus the flop count the simulator/benches charge per `bs×bs`
+/// block. The *executable* kernels live with the drivers
+/// ([`crate::apps::dataflow::run_dataflow`] takes a table of closures
+/// indexed the same way), so the engine itself stays kernel-agnostic.
 #[derive(Clone, Copy, Debug)]
-pub struct BlockTask {
-    pub op: BlockOp,
-    /// Elimination step the task belongs to.
-    pub kk: usize,
-    /// Block row of the task's written block (`kk` for `Lu0`/`Fwd`).
-    pub ii: usize,
-    /// Block column of the written block (`kk` for `Lu0`/`Bdiv`).
-    pub jj: usize,
-    /// `Bmod` only: the written block did not exist before this step
-    /// (BOTS `allocate_clean_block` fill-in path).
-    pub fill_in: bool,
+pub struct OpSpec {
+    pub name: &'static str,
+    pub flops: fn(usize) -> u64,
 }
 
-/// Immutable task DAG: tasks plus predecessor/successor adjacency.
+/// SparseLU op ids into [`LU_OPS`].
+pub const OP_LU0: OpId = OpId(0);
+pub const OP_FWD: OpId = OpId(1);
+pub const OP_BDIV: OpId = OpId(2);
+pub const OP_BMOD: OpId = OpId(3);
+
+fn flops_lu0(bs: usize) -> u64 {
+    kernel_flops(BlockOp::Lu0, bs)
+}
+fn flops_fwd(bs: usize) -> u64 {
+    kernel_flops(BlockOp::Fwd, bs)
+}
+fn flops_bdiv(bs: usize) -> u64 {
+    kernel_flops(BlockOp::Bdiv, bs)
+}
+fn flops_bmod(bs: usize) -> u64 {
+    kernel_flops(BlockOp::Bmod, bs)
+}
+
+/// The SparseLU kernel vocabulary, indexed by `OP_LU0`…`OP_BMOD`.
+pub const LU_OPS: &[OpSpec] = &[
+    OpSpec { name: "lu0", flops: flops_lu0 },
+    OpSpec { name: "fwd", flops: flops_fwd },
+    OpSpec { name: "bdiv", flops: flops_bdiv },
+    OpSpec { name: "bmod", flops: flops_bmod },
+];
+
+/// Cholesky op ids into [`CHOLESKY_OPS`].
+pub const OP_POTRF: OpId = OpId(0);
+pub const OP_TRSM: OpId = OpId(1);
+pub const OP_SYRK: OpId = OpId(2);
+pub const OP_GEMM: OpId = OpId(3);
+
+fn flops_potrf(bs: usize) -> u64 {
+    chol_kernel_flops(CholOp::Potrf, bs)
+}
+fn flops_trsm(bs: usize) -> u64 {
+    chol_kernel_flops(CholOp::Trsm, bs)
+}
+fn flops_syrk(bs: usize) -> u64 {
+    chol_kernel_flops(CholOp::Syrk, bs)
+}
+fn flops_gemm(bs: usize) -> u64 {
+    chol_kernel_flops(CholOp::Gemm, bs)
+}
+
+/// The tiled-Cholesky kernel vocabulary, indexed by
+/// `OP_POTRF`…`OP_GEMM`.
+pub const CHOLESKY_OPS: &[OpSpec] = &[
+    OpSpec { name: "potrf", flops: flops_potrf },
+    OpSpec { name: "trsm", flops: flops_trsm },
+    OpSpec { name: "syrk", flops: flops_syrk },
+    OpSpec { name: "gemm", flops: flops_gemm },
+];
+
+/// One block task: an op id plus its block access sets. Every kernel
+/// in both workloads reads at most two blocks *besides* its write
+/// target and read-modify-writes exactly one block, so the read set is
+/// a fixed-capacity inline array (the executor hot path never
+/// allocates).
+#[derive(Clone, Copy, Debug)]
+pub struct Task {
+    /// Index into the graph's op table (and the driver's kernel table).
+    pub op: OpId,
+    /// Blocks read (write target excluded); first `n_reads` valid.
+    pub reads: [(usize, usize); 2],
+    pub n_reads: u8,
+    /// The block this task read-modify-writes.
+    pub write: (usize, usize),
+    /// The write block may be structurally absent before this task
+    /// runs; the driver must materialise it zero-filled first (BOTS
+    /// `allocate_clean_block` fill-in). Also the simulator's marker
+    /// for the extra DRAM traffic of a fresh block.
+    pub alloc_write: bool,
+}
+
+impl Task {
+    /// Pack a task from a read-set slice (≤ 2 entries).
+    pub fn new(
+        op: OpId,
+        reads: &[(usize, usize)],
+        write: (usize, usize),
+        alloc_write: bool,
+    ) -> Self {
+        assert!(reads.len() <= 2, "tasks carry at most two extra reads");
+        let mut r = [(0, 0); 2];
+        r[..reads.len()].copy_from_slice(reads);
+        Self { op, reads: r, n_reads: reads.len() as u8, write, alloc_write }
+    }
+
+    /// The valid prefix of the read set (write target excluded).
+    pub fn reads(&self) -> &[(usize, usize)] {
+        &self.reads[..self.n_reads as usize]
+    }
+}
+
+/// Immutable task DAG: tasks plus predecessor/successor adjacency and
+/// the op table describing the kernel vocabulary the tasks index into.
 ///
 /// Successors are stored in one flat CSR layout (`succ_off` /
 /// `succ_dat`) rather than per-task `Vec`s: the lock-free executor
 /// walks a completed task's successor list while hammering the atomic
 /// in-degree counters, and a single contiguous array keeps that walk
 /// on one or two cache lines with zero pointer chasing. In-degrees
-/// and roots are pre-computed at build time for the same reason —
-/// executors copy them into atomics instead of re-deriving them.
+/// and roots are pre-computed at build time and handed out as slices
+/// ([`Self::indegrees`] / [`Self::roots`]) — executors copy them into
+/// their own state instead of re-deriving (or re-allocating) them per
+/// launch.
 pub struct TaskGraph {
     nb: usize,
-    tasks: Vec<BlockTask>,
+    ops: &'static [OpSpec],
+    tasks: Vec<Task>,
     preds: Vec<Vec<usize>>,
     /// CSR: successors of task `t` are `succ_dat[succ_off[t]..succ_off[t+1]]`.
     succ_off: Vec<usize>,
@@ -74,27 +185,15 @@ impl TaskGraph {
         let mut alloc = pattern.to_vec();
         let mut b = GraphBuilder::new(nb);
         for kk in 0..nb {
-            b.add_task(
-                BlockTask { op: BlockOp::Lu0, kk, ii: kk, jj: kk, fill_in: false },
-                &[(kk, kk)],
-                &[(kk, kk)],
-            );
+            b.add_task(OP_LU0, &[], (kk, kk), false);
             for jj in kk + 1..nb {
                 if alloc[kk * nb + jj] {
-                    b.add_task(
-                        BlockTask { op: BlockOp::Fwd, kk, ii: kk, jj, fill_in: false },
-                        &[(kk, kk), (kk, jj)],
-                        &[(kk, jj)],
-                    );
+                    b.add_task(OP_FWD, &[(kk, kk)], (kk, jj), false);
                 }
             }
             for ii in kk + 1..nb {
                 if alloc[ii * nb + kk] {
-                    b.add_task(
-                        BlockTask { op: BlockOp::Bdiv, kk, ii, jj: kk, fill_in: false },
-                        &[(kk, kk), (ii, kk)],
-                        &[(ii, kk)],
-                    );
+                    b.add_task(OP_BDIV, &[(kk, kk)], (ii, kk), false);
                 }
             }
             for ii in kk + 1..nb {
@@ -108,18 +207,51 @@ impl TaskGraph {
                     let fill_in = !alloc[ii * nb + jj];
                     alloc[ii * nb + jj] = true;
                     b.add_task(
-                        BlockTask { op: BlockOp::Bmod, kk, ii, jj, fill_in },
-                        &[(ii, kk), (kk, jj), (ii, jj)],
-                        &[(ii, jj)],
+                        OP_BMOD,
+                        &[(ii, kk), (kk, jj)],
+                        (ii, jj),
+                        fill_in,
                     );
                 }
             }
         }
-        b.build()
+        b.build(LU_OPS)
+    }
+
+    /// Build the tiled dense Cholesky DAG (lower-triangular storage)
+    /// for an `nb×nb` block grid — Buttari et al.'s right-looking
+    /// tiled algorithm. Task order matches
+    /// [`crate::linalg::cholesky::cholesky_seq`], so any edge-
+    /// respecting execution is bit-identical (f32) to it.
+    pub fn cholesky(nb: usize) -> Self {
+        let mut b = GraphBuilder::new(nb);
+        for kk in 0..nb {
+            b.add_task(OP_POTRF, &[], (kk, kk), false);
+            for ii in kk + 1..nb {
+                b.add_task(OP_TRSM, &[(kk, kk)], (ii, kk), false);
+            }
+            for ii in kk + 1..nb {
+                b.add_task(OP_SYRK, &[(ii, kk)], (ii, ii), false);
+                for jj in kk + 1..ii {
+                    b.add_task(
+                        OP_GEMM,
+                        &[(ii, kk), (jj, kk)],
+                        (ii, jj),
+                        false,
+                    );
+                }
+            }
+        }
+        b.build(CHOLESKY_OPS)
     }
 
     pub fn nb(&self) -> usize {
         self.nb
+    }
+
+    /// The kernel vocabulary the tasks' op ids index into.
+    pub fn ops(&self) -> &'static [OpSpec] {
+        self.ops
     }
 
     pub fn len(&self) -> usize {
@@ -130,11 +262,11 @@ impl TaskGraph {
         self.tasks.is_empty()
     }
 
-    pub fn task(&self, id: TaskId) -> &BlockTask {
+    pub fn task(&self, id: TaskId) -> &Task {
         &self.tasks[id.0]
     }
 
-    pub fn tasks(&self) -> &[BlockTask] {
+    pub fn tasks(&self) -> &[Task] {
         &self.tasks
     }
 
@@ -148,9 +280,11 @@ impl TaskGraph {
         &self.succ_dat[self.succ_off[id.0]..self.succ_off[id.0 + 1]]
     }
 
-    /// In-degree of every task (fresh copy — executors count it down).
-    pub fn indegrees(&self) -> Vec<usize> {
-        self.indeg.clone()
+    /// In-degree of every task — a borrow of the precomputed array
+    /// (executors copy it into their own countdown state; nothing is
+    /// allocated per launch).
+    pub fn indegrees(&self) -> &[usize] {
+        &self.indeg
     }
 
     /// Total number of edges.
@@ -158,17 +292,19 @@ impl TaskGraph {
         self.succ_dat.len()
     }
 
-    /// Tasks with no predecessors (initially ready), in task order.
-    pub fn roots(&self) -> Vec<usize> {
-        self.roots.clone()
+    /// Tasks with no predecessors (initially ready), in task order —
+    /// a borrow of the precomputed array.
+    pub fn roots(&self) -> &[usize] {
+        &self.roots
     }
 }
 
 /// Records tasks in sequential order and derives dependence edges from
-/// their declared read/write sets (see module docs).
+/// their declared block access sets (see module docs). Fully
+/// kernel-agnostic: op ids are opaque to the builder.
 pub struct GraphBuilder {
     nb: usize,
-    tasks: Vec<BlockTask>,
+    tasks: Vec<Task>,
     preds: Vec<Vec<usize>>,
     /// Per block: last task that wrote it.
     last_writer: Vec<Option<usize>>,
@@ -193,31 +329,32 @@ impl GraphBuilder {
         ii * self.nb + jj
     }
 
-    /// Register the next task in sequential order with its block
-    /// read/write sets; returns its id. Edges to earlier tasks are
-    /// derived (RAW ∪ WAW ∪ WAR, deduplicated, self-edges dropped —
-    /// a read-modify-write task lists its target in both sets).
+    /// Register the next task in sequential order: op id, blocks read
+    /// besides the target, and the block it read-modify-writes.
+    /// Returns its id. Edges to earlier tasks are derived
+    /// (RAW ∪ WAW ∪ WAR, deduplicated).
     pub fn add_task(
         &mut self,
-        meta: BlockTask,
+        op: OpId,
         reads: &[(usize, usize)],
-        writes: &[(usize, usize)],
+        write: (usize, usize),
+        alloc_write: bool,
     ) -> TaskId {
+        let task = Task::new(op, reads, write, alloc_write);
         let id = self.tasks.len();
         let mut preds: Vec<usize> = Vec::new();
+        let wb = self.bid(write);
+        // RAW: the extra reads plus the rmw read of the target.
         for &r in reads {
             let b = self.bid(r);
             if let Some(w) = self.last_writer[b] {
-                preds.push(w); // RAW
+                preds.push(w);
             }
         }
-        for &w in writes {
-            let b = self.bid(w);
-            if let Some(prev) = self.last_writer[b] {
-                preds.push(prev); // WAW
-            }
-            preds.extend(self.readers[b].iter().copied()); // WAR
+        if let Some(prev) = self.last_writer[wb] {
+            preds.push(prev); // RAW on the target == WAW
         }
+        preds.extend(self.readers[wb].iter().copied()); // WAR
         preds.sort_unstable();
         preds.dedup();
         preds.retain(|&p| p != id);
@@ -226,17 +363,14 @@ impl GraphBuilder {
             let b = self.bid(r);
             self.readers[b].push(id);
         }
-        for &w in writes {
-            let b = self.bid(w);
-            self.last_writer[b] = Some(id);
-            self.readers[b].clear();
-        }
-        self.tasks.push(meta);
+        self.last_writer[wb] = Some(id);
+        self.readers[wb].clear();
+        self.tasks.push(task);
         self.preds.push(preds);
         TaskId(id)
     }
 
-    pub fn build(self) -> TaskGraph {
+    pub fn build(self, ops: &'static [OpSpec]) -> TaskGraph {
         let n = self.tasks.len();
         // Count out-degrees, prefix-sum into CSR offsets, then fill.
         // Iterating tasks in ascending order keeps each successor
@@ -264,6 +398,7 @@ impl GraphBuilder {
             (0..n).filter(|&t| indeg[t] == 0).collect();
         TaskGraph {
             nb: self.nb,
+            ops,
             tasks: self.tasks,
             preds: self.preds,
             succ_off,
@@ -285,7 +420,7 @@ mod tests {
         let g = TaskGraph::sparselu(&[true], 1);
         assert_eq!(g.len(), 1);
         assert!(g.preds(TaskId(0)).is_empty());
-        assert_eq!(g.roots(), vec![0]);
+        assert_eq!(g.roots().to_vec(), vec![0]);
     }
 
     #[test]
@@ -309,7 +444,7 @@ mod tests {
                 assert!(p < t, "edge {p} -> {t} must point forward");
             }
         }
-        assert_eq!(g.task(TaskId(0)).op, BlockOp::Lu0);
+        assert_eq!(g.task(TaskId(0)).op, OP_LU0);
         assert!(g.preds(TaskId(0)).is_empty());
         // Succ lists mirror pred lists.
         let from_preds: usize = g.indegrees().iter().sum();
@@ -325,11 +460,13 @@ mod tests {
         let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
         for t in 0..g.len() {
             let task = *g.task(TaskId(t));
-            if task.op == BlockOp::Fwd || task.op == BlockOp::Bdiv {
-                // Some predecessor must be the lu0 of the same step.
+            if task.op == OP_FWD || task.op == OP_BDIV {
+                // Some predecessor must be the lu0 writing this task's
+                // diagonal read block.
+                let diag = task.reads()[0];
                 let has_lu0 = g.preds(TaskId(t)).iter().any(|&p| {
                     let pt = g.task(TaskId(p));
-                    pt.op == BlockOp::Lu0 && pt.kk == task.kk
+                    pt.op == OP_LU0 && pt.write == diag
                 });
                 assert!(has_lu0, "task {t} ({task:?}) misses its lu0 dep");
             }
@@ -342,23 +479,22 @@ mod tests {
         let g = TaskGraph::sparselu(&genmat_pattern(nb), nb);
         for t in 0..g.len() {
             let task = *g.task(TaskId(t));
-            if task.op != BlockOp::Bmod {
+            if task.op != OP_BMOD {
                 continue;
             }
-            let dep_on = |op: BlockOp, ii: usize, jj: usize| {
-                g.preds(TaskId(t)).iter().any(|&p| {
+            // Predecessors must include the writers of both panels
+            // this bmod reads (the step's bdiv and fwd outputs).
+            for &r in task.reads() {
+                let has_writer = g.preds(TaskId(t)).iter().any(|&p| {
                     let pt = g.task(TaskId(p));
-                    pt.op == op && pt.ii == ii && pt.jj == jj && pt.kk == task.kk
-                })
-            };
-            assert!(
-                dep_on(BlockOp::Bdiv, task.ii, task.kk),
-                "bmod {task:?} misses bdiv dep"
-            );
-            assert!(
-                dep_on(BlockOp::Fwd, task.kk, task.jj),
-                "bmod {task:?} misses fwd dep"
-            );
+                    pt.write == r
+                        && (pt.op == OP_BDIV || pt.op == OP_FWD)
+                });
+                assert!(
+                    has_writer,
+                    "bmod {task:?} misses the writer of its read {r:?}"
+                );
+            }
         }
     }
 
@@ -372,7 +508,7 @@ mod tests {
         let mut writers: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
         for t in 0..g.len() {
             let task = g.task(TaskId(t));
-            writers.entry((task.ii, task.jj)).or_default().push(t);
+            writers.entry(task.write).or_default().push(t);
         }
         for ((ii, jj), ws) in writers {
             for pair in ws.windows(2) {
@@ -388,19 +524,12 @@ mod tests {
 
     #[test]
     fn war_edges_derived_for_generic_sets() {
-        // reader of block 0 then writer of block 0: WAR edge.
+        // reader of block (0,0) then writer of (0,0): WAR edge. The
+        // builder is kernel-agnostic — any op id works.
         let mut b = GraphBuilder::new(2);
-        let t0 = b.add_task(
-            BlockTask { op: BlockOp::Lu0, kk: 0, ii: 0, jj: 0, fill_in: false },
-            &[(0, 0)],
-            &[(1, 1)],
-        );
-        let t1 = b.add_task(
-            BlockTask { op: BlockOp::Lu0, kk: 0, ii: 0, jj: 0, fill_in: false },
-            &[],
-            &[(0, 0)],
-        );
-        let g = b.build();
+        let t0 = b.add_task(OpId(0), &[(0, 0)], (1, 1), false);
+        let t1 = b.add_task(OpId(0), &[], (0, 0), false);
+        let g = b.build(LU_OPS);
         assert_eq!(g.preds(t1), &[t0.0]);
         assert_eq!(g.succs(t0), &[t1.0]);
     }
@@ -413,11 +542,79 @@ mod tests {
         let mut fresh: HashSet<(usize, usize)> = HashSet::new();
         let mut n_fill = 0;
         for t in g.tasks() {
-            if t.fill_in {
-                assert!(fresh.insert((t.ii, t.jj)), "double fill-in {t:?}");
+            if t.alloc_write {
+                assert!(fresh.insert(t.write), "double fill-in {t:?}");
                 n_fill += 1;
             }
         }
         assert!(n_fill > 0, "genmat structure must produce fill-in");
+    }
+
+    #[test]
+    fn cholesky_task_count_closed_form() {
+        // Per step kk with s = nb-kk-1 trailing rows: 1 potrf + s trsm
+        // + s syrk + s(s-1)/2 gemm.
+        for nb in [1usize, 2, 3, 8, 13] {
+            let g = TaskGraph::cholesky(nb);
+            let want: usize = (0..nb)
+                .map(|kk| {
+                    let s = nb - kk - 1;
+                    1 + s + s + s * s.saturating_sub(1) / 2
+                })
+                .sum();
+            assert_eq!(g.len(), want, "nb={nb}");
+            assert_eq!(g.roots().to_vec(), vec![0], "single potrf root");
+        }
+    }
+
+    #[test]
+    fn cholesky_trsm_depends_on_potrf_and_syrk_on_trsm() {
+        let g = TaskGraph::cholesky(8);
+        for t in 0..g.len() {
+            let task = *g.task(TaskId(t));
+            if task.op == OP_TRSM
+                || task.op == OP_SYRK
+                || task.op == OP_GEMM
+            {
+                // Every extra read must have a predecessor writing it.
+                for &r in task.reads() {
+                    let has_writer = g.preds(TaskId(t)).iter().any(|&p| {
+                        g.task(TaskId(p)).write == r
+                    });
+                    assert!(
+                        has_writer,
+                        "task {t} ({task:?}) misses writer of {r:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_touches_only_lower_triangle() {
+        let g = TaskGraph::cholesky(9);
+        for t in g.tasks() {
+            assert!(t.write.0 >= t.write.1, "upper-triangle write {t:?}");
+            for &r in t.reads() {
+                assert!(r.0 >= r.1, "upper-triangle read {t:?}");
+            }
+            assert!(!t.alloc_write, "cholesky has no fill-in");
+        }
+    }
+
+    #[test]
+    fn ops_tables_align_with_op_ids() {
+        assert_eq!(LU_OPS[OP_LU0.0].name, "lu0");
+        assert_eq!(LU_OPS[OP_FWD.0].name, "fwd");
+        assert_eq!(LU_OPS[OP_BDIV.0].name, "bdiv");
+        assert_eq!(LU_OPS[OP_BMOD.0].name, "bmod");
+        assert_eq!(CHOLESKY_OPS[OP_POTRF.0].name, "potrf");
+        assert_eq!(CHOLESKY_OPS[OP_TRSM.0].name, "trsm");
+        assert_eq!(CHOLESKY_OPS[OP_SYRK.0].name, "syrk");
+        assert_eq!(CHOLESKY_OPS[OP_GEMM.0].name, "gemm");
+        let g = TaskGraph::sparselu(&[true], 1);
+        assert_eq!(g.ops()[g.task(TaskId(0)).op.0].name, "lu0");
+        let c = TaskGraph::cholesky(1);
+        assert_eq!(c.ops()[c.task(TaskId(0)).op.0].name, "potrf");
     }
 }

@@ -10,10 +10,15 @@
 //! panel, column panel and target block are final, regardless of what
 //! the rest of the step is doing.
 //!
-//! * [`graph`] — [`graph::TaskGraph`]: records read/write block sets
-//!   per task and derives RAW/WAW/WAR edges; `TaskGraph::sparselu`
-//!   builds the BOTS SparseLU DAG with fill-in, laid out in flat CSR
-//!   form for the executor's atomic hot path.
+//! * [`graph`] — [`graph::TaskGraph`]: a **kernel-agnostic** task DAG.
+//!   Each [`graph::Task`] is an opaque op id (index into the graph's
+//!   [`graph::OpSpec`] vocabulary) plus block read/write access sets;
+//!   [`graph::GraphBuilder`] derives RAW/WAW/WAR edges purely from the
+//!   access sets. `TaskGraph::sparselu` builds the BOTS SparseLU DAG
+//!   with fill-in, `TaskGraph::cholesky` the tiled dense Cholesky DAG,
+//!   both laid out in flat CSR form for the executor's atomic hot
+//!   path. In-degrees and roots are precomputed and handed out as
+//!   slices — nothing allocates per executor launch.
 //! * [`deque`] — [`deque::StealDeque`]: a hand-rolled, fixed-capacity
 //!   Chase–Lev work-stealing deque (owner-LIFO / stealer-FIFO).
 //! * [`exec`] — the executors over both host runtimes
@@ -35,4 +40,8 @@ pub use exec::{
     check_event_ordering, execute_gprm, execute_gprm_opts, execute_omp,
     execute_omp_opts, Event, ExecOpts, ExecStats,
 };
-pub use graph::{BlockTask, GraphBuilder, TaskGraph, TaskId};
+pub use graph::{
+    GraphBuilder, OpId, OpSpec, Task, TaskGraph, TaskId, CHOLESKY_OPS,
+    LU_OPS, OP_BDIV, OP_BMOD, OP_FWD, OP_GEMM, OP_LU0, OP_POTRF, OP_SYRK,
+    OP_TRSM,
+};

@@ -15,20 +15,23 @@
 //!   latencies, lock and task-management costs). All constants are
 //!   documented and tunable; experiments assert *shape*, not absolute
 //!   cycles.
-//! * [`workload`] — phase-structured task DAGs for the two paper
-//!   workloads (MatMul micro-benchmark §V, SparseLU §VI), generated
-//!   from the same BOTS structure as the real factorisation.
+//! * [`workload`] — phase-structured task streams for the paper
+//!   workloads (MatMul micro-benchmark §V, SparseLU §VI) plus a
+//!   level-synchronous tiled Cholesky, all generated from the same
+//!   structure as the real computations and priced by one
+//!   kernel-agnostic encoder ([`workload::dag_sim_task`]).
 //! * [`sim_gprm`] — virtual-time execution of the GPRM model: CL
 //!   worksharing tasks per phase, static round-robin / contiguous
 //!   assignment, reduction-engine packet costs.
 //! * [`sim_omp`] — virtual-time execution of the OpenMP-3.0 model:
 //!   `omp for` (static / dynamic) and single-producer tasking with a
 //!   contended central queue, plus the cutoff variant.
-//! * [`sim_dataflow`] — virtual-time list scheduling of the
-//!   [`crate::sched`] dependence DAG: no phase barriers; isolates what
-//!   the level-synchronous models pay for theirs, and models both
-//!   executor claim-cost regimes (mutex scoreboard vs lock-free work
-//!   stealing with a per-steal mesh penalty).
+//! * [`sim_dataflow`] — virtual-time list scheduling of *any*
+//!   [`crate::sched`] dependence DAG (SparseLU, Cholesky, …): no phase
+//!   barriers; isolates what the level-synchronous models pay for
+//!   theirs, and models both executor claim-cost regimes (mutex
+//!   scoreboard vs lock-free work stealing with a per-steal mesh
+//!   penalty).
 //!
 //! All simulators share [`cost::CostModel`] and the memory-bandwidth
 //! ceiling, so who-wins comparisons are apples to apples.

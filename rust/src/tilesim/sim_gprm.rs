@@ -111,7 +111,7 @@ impl GprmSim {
                 (_, GprmAssign::Contiguous) => {
                     lane.total_iters / lane_cl as u64 + 1
                 }
-                (PhaseKind::Bmod, _) => lane.total_iters / lane_cl as u64 + 1,
+                (PhaseKind::Update, _) => lane.total_iters / lane_cl as u64 + 1,
                 _ => lane.total_iters,
             };
             let scan_cost =

@@ -1,9 +1,19 @@
-//! Phase-structured task workloads for the simulator — the two
-//! evaluation workloads of the paper, generated from the same
-//! structure as the real computations.
+//! Phase-structured task workloads for the simulator — the paper's
+//! two evaluation workloads plus a level-synchronous tiled Cholesky,
+//! all generated from the same structure as the real computations.
+//!
+//! The per-task cost encoding is **kernel-agnostic**: every task —
+//! phase-stream or DAG — is priced by [`dag_sim_task`] from its
+//! generic access sets and op table, so DAG-vs-phase comparisons are
+//! apples-to-apples by construction for any workload.
 
+use crate::linalg::cholesky::CholOp;
 use crate::linalg::genmat::bots_null_entry;
-use crate::linalg::lu::{kernel_flops, BlockOp};
+use crate::linalg::lu::BlockOp;
+use crate::sched::{
+    OpSpec, Task, CHOLESKY_OPS, LU_OPS, OP_BDIV, OP_BMOD, OP_FWD, OP_GEMM,
+    OP_LU0, OP_POTRF, OP_SYRK, OP_TRSM,
+};
 
 /// "No write target" marker for [`SimTask::write`].
 pub const NO_BLOCK: u32 = u32::MAX;
@@ -46,15 +56,19 @@ pub struct Lane {
     pub total_iters: u64,
 }
 
-/// What a phase represents (diagnostics + GPRM lane placement).
+/// What a phase represents (diagnostics + GPRM lane placement). The
+/// kinds are kernel-agnostic roles shared by every factorisation
+/// workload: SparseLU maps lu0 / fwd+bdiv / bmod onto them, tiled
+/// Cholesky maps potrf / trsm / syrk+gemm.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PhaseKind {
     /// Diagonal factorisation — a single task, serial.
-    Lu0,
-    /// fwd + bdiv, two independent lanes.
-    FwdBdiv,
-    /// Trailing Schur update, one (nested) lane.
-    Bmod,
+    Diag,
+    /// Panel solves — one or two independent lanes over a 1-D domain.
+    Panels,
+    /// Trailing update — one nested-domain lane (the scan cost of a
+    /// flattened `par_nested_for`).
+    Update,
     /// Independent jobs (MatMul micro-benchmark).
     Jobs,
 }
@@ -88,15 +102,49 @@ impl Phase {
     }
 }
 
-/// Build the [`SimTask`] for one SparseLU block kernel — the single
-/// source of truth for the per-op cost encoding (flops, read set,
-/// write target, shared-fabric bytes including the fill-in rule),
-/// shared by the phase-barrier workload stream below and the DAG
-/// simulator ([`crate::tilesim::sim_dataflow`]).
+/// Build the [`SimTask`] for one generic DAG task — the single source
+/// of truth for the per-op cost encoding, shared by every phase-
+/// barrier workload stream below and the DAG simulator
+/// ([`crate::tilesim::sim_dataflow`]), for *any* workload on the
+/// kernel-agnostic engine.
 ///
-/// `fresh` (Bmod only) marks a fill-in first-write: the task pays the
-/// extra DRAM traffic of materialising the block. `iter` is the
-/// flattened loop-domain index (0 where the caller has no loop).
+/// Encoding: flops come from the op table; the locality-tracked read
+/// set is the task's extra reads followed by its (read-modify-write)
+/// target; shared-fabric bytes are one block for a streaming kernel,
+/// plus one block per read stream beyond the first, plus one more for
+/// materialising a fresh fill-in block (`alloc_write`) — exactly the
+/// per-op costs the PR-1/PR-2 SparseLU encoding charged, now derived
+/// from access-set shape instead of a kernel match.
+pub fn dag_sim_task(
+    t: &Task,
+    ops: &[OpSpec],
+    nb: usize,
+    bs: usize,
+    iter: u64,
+) -> SimTask {
+    let bb = (bs * bs * 4) as u64;
+    let id = |(a, b): (usize, usize)| (a * nb + b) as u32;
+    let extra = t.n_reads as u64;
+    let mut reads = [0u32; 3];
+    for (slot, &r) in reads.iter_mut().zip(t.reads()) {
+        *slot = id(r);
+    }
+    reads[extra as usize] = id(t.write);
+    SimTask {
+        flops: (ops[t.op.0].flops)(bs),
+        mem_bytes: bb
+            * (1 + extra.saturating_sub(1) + u64::from(t.alloc_write)),
+        reads,
+        n_reads: (extra + 1) as u8,
+        write: id(t.write),
+        iter,
+    }
+}
+
+/// SparseLU wrapper over [`dag_sim_task`]: builds the generic task for
+/// one block kernel and prices it. `fresh` (Bmod only) marks a fill-in
+/// first-write; `iter` is the flattened loop-domain index (0 where the
+/// caller has no loop).
 pub fn lu_sim_task(
     op: BlockOp,
     nb: usize,
@@ -107,31 +155,37 @@ pub fn lu_sim_task(
     fresh: bool,
     iter: u64,
 ) -> SimTask {
-    let bb = (bs * bs * 4) as u64;
-    let id = |a: usize, b: usize| (a * nb + b) as u32;
-    let (reads, n_reads, write, mem_bytes) = match op {
-        BlockOp::Lu0 => ([id(kk, kk), 0, 0], 1, id(kk, kk), bb),
-        BlockOp::Fwd => {
-            ([id(kk, kk), id(kk, jj), 0], 2, id(kk, jj), bb)
+    let t = match op {
+        BlockOp::Lu0 => Task::new(OP_LU0, &[], (kk, kk), false),
+        BlockOp::Fwd => Task::new(OP_FWD, &[(kk, kk)], (kk, jj), false),
+        BlockOp::Bdiv => Task::new(OP_BDIV, &[(kk, kk)], (ii, kk), false),
+        BlockOp::Bmod => {
+            Task::new(OP_BMOD, &[(ii, kk), (kk, jj)], (ii, jj), fresh)
         }
-        BlockOp::Bdiv => {
-            ([id(kk, kk), id(ii, kk), 0], 2, id(ii, kk), bb)
-        }
-        BlockOp::Bmod => (
-            [id(ii, kk), id(kk, jj), id(ii, jj)],
-            3,
-            id(ii, jj),
-            bb * if fresh { 3 } else { 2 },
-        ),
     };
-    SimTask {
-        flops: kernel_flops(op, bs),
-        mem_bytes,
-        reads,
-        n_reads,
-        write,
-        iter,
-    }
+    dag_sim_task(&t, LU_OPS, nb, bs, iter)
+}
+
+/// Cholesky wrapper over [`dag_sim_task`] (block row `ii`, column
+/// `jj`, elimination step `kk`).
+pub fn chol_sim_task(
+    op: CholOp,
+    nb: usize,
+    bs: usize,
+    kk: usize,
+    ii: usize,
+    jj: usize,
+    iter: u64,
+) -> SimTask {
+    let t = match op {
+        CholOp::Potrf => Task::new(OP_POTRF, &[], (kk, kk), false),
+        CholOp::Trsm => Task::new(OP_TRSM, &[(kk, kk)], (ii, kk), false),
+        CholOp::Syrk => Task::new(OP_SYRK, &[(ii, kk)], (ii, ii), false),
+        CholOp::Gemm => {
+            Task::new(OP_GEMM, &[(ii, kk), (jj, kk)], (ii, jj), false)
+        }
+    };
+    dag_sim_task(&t, CHOLESKY_OPS, nb, bs, iter)
 }
 
 /// Workload constructors.
@@ -188,6 +242,16 @@ impl Workload {
         }
         SparseLuPhases { nb, bs, alloc, kk: 0, sub: 0 }
     }
+
+    /// The level-synchronous tiled Cholesky workload: `3·NB`
+    /// barrier-separated phases (potrf; trsm panel; syrk+gemm trailing
+    /// update) over a dense lower-triangle block grid — the
+    /// phase-barrier straw man the Cholesky DAG schedule is compared
+    /// against (same roles as the SparseLU phases; see
+    /// [`PhaseKind`]).
+    pub fn cholesky(nb: usize, bs: usize) -> CholeskyPhases {
+        CholeskyPhases { nb, bs, kk: 0, sub: 0 }
+    }
 }
 
 /// Lazy phase stream for SparseLU (see [`Workload::sparselu`]).
@@ -215,7 +279,7 @@ impl Iterator for SparseLuPhases {
                 // lu0 on the diagonal block.
                 let t = lu_sim_task(BlockOp::Lu0, nb, bs, kk, kk, kk, false, 0);
                 Phase {
-                    kind: PhaseKind::Lu0,
+                    kind: PhaseKind::Diag,
                     lanes: vec![Lane { tasks: vec![t], total_iters: 1 }],
                 }
             }
@@ -258,7 +322,7 @@ impl Iterator for SparseLuPhases {
                         ));
                     }
                 }
-                Phase { kind: PhaseKind::FwdBdiv, lanes: vec![fwd, bdiv] }
+                Phase { kind: PhaseKind::Panels, lanes: vec![fwd, bdiv] }
             }
             _ => {
                 // bmod over the trailing submatrix: nested (ii, jj)
@@ -295,7 +359,88 @@ impl Iterator for SparseLuPhases {
                         ));
                     }
                 }
-                Phase { kind: PhaseKind::Bmod, lanes: vec![lane] }
+                Phase { kind: PhaseKind::Update, lanes: vec![lane] }
+            }
+        };
+        self.sub += 1;
+        if self.sub == 3 {
+            self.sub = 0;
+            self.kk += 1;
+        }
+        Some(phase)
+    }
+}
+
+/// Lazy phase stream for the level-synchronous tiled Cholesky (see
+/// [`Workload::cholesky`]).
+pub struct CholeskyPhases {
+    nb: usize,
+    bs: usize,
+    kk: usize,
+    /// 0 = potrf, 1 = trsm, 2 = syrk+gemm.
+    sub: u8,
+}
+
+impl Iterator for CholeskyPhases {
+    type Item = Phase;
+
+    fn next(&mut self) -> Option<Phase> {
+        if self.kk >= self.nb {
+            return None;
+        }
+        let (nb, bs, kk) = (self.nb, self.bs, self.kk);
+        let side = (nb - kk - 1) as u64;
+        let phase = match self.sub {
+            0 => {
+                let t =
+                    chol_sim_task(CholOp::Potrf, nb, bs, kk, kk, kk, 0);
+                Phase {
+                    kind: PhaseKind::Diag,
+                    lanes: vec![Lane { tasks: vec![t], total_iters: 1 }],
+                }
+            }
+            1 => {
+                // trsm over column kk; loop domain ii ∈ (kk, nb).
+                let mut lane =
+                    Lane { tasks: Vec::new(), total_iters: side };
+                for ii in kk + 1..nb {
+                    lane.tasks.push(chol_sim_task(
+                        CholOp::Trsm,
+                        nb,
+                        bs,
+                        kk,
+                        ii,
+                        kk,
+                        (ii - kk - 1) as u64,
+                    ));
+                }
+                Phase { kind: PhaseKind::Panels, lanes: vec![lane] }
+            }
+            _ => {
+                // Trailing update over the nested (ii, jj ≤ ii)
+                // domain, flattened row-major over the full side×side
+                // grid (upper-triangle iterations are structurally
+                // empty but still cost a scan turn, like LU's empty
+                // bmod slots).
+                let mut lane = Lane {
+                    tasks: Vec::new(),
+                    total_iters: side * side,
+                };
+                for ii in kk + 1..nb {
+                    for jj in kk + 1..=ii {
+                        let iter = ((ii - kk - 1) as u64) * side
+                            + (jj - kk - 1) as u64;
+                        let op = if jj == ii {
+                            CholOp::Syrk
+                        } else {
+                            CholOp::Gemm
+                        };
+                        lane.tasks.push(chol_sim_task(
+                            op, nb, bs, kk, ii, jj, iter,
+                        ));
+                    }
+                }
+                Phase { kind: PhaseKind::Update, lanes: vec![lane] }
             }
         };
         self.sub += 1;
@@ -339,13 +484,67 @@ mod tests {
         let counts = lu_task_counts(&genmat_pattern(nb), nb);
         for kk in 0..nb {
             let fb = &phases[3 * kk + 1];
-            assert_eq!(fb.kind, PhaseKind::FwdBdiv);
+            assert_eq!(fb.kind, PhaseKind::Panels);
             assert_eq!(fb.lanes[0].tasks.len(), counts.fwd[kk], "fwd kk={kk}");
             assert_eq!(fb.lanes[1].tasks.len(), counts.bdiv[kk], "bdiv kk={kk}");
             let bm = &phases[3 * kk + 2];
-            assert_eq!(bm.kind, PhaseKind::Bmod);
+            assert_eq!(bm.kind, PhaseKind::Update);
             assert_eq!(bm.lanes[0].tasks.len(), counts.bmod[kk], "bmod kk={kk}");
         }
+    }
+
+    #[test]
+    fn cholesky_phases_match_dag_task_count() {
+        use crate::sched::TaskGraph;
+        for nb in [2usize, 6, 11] {
+            let phases: Vec<Phase> = Workload::cholesky(nb, 4).collect();
+            assert_eq!(phases.len(), 3 * nb);
+            let phase_tasks: usize =
+                phases.iter().map(|p| p.task_count()).sum();
+            assert_eq!(phase_tasks, TaskGraph::cholesky(nb).len());
+            for kk in 0..nb {
+                assert_eq!(phases[3 * kk].kind, PhaseKind::Diag);
+                assert_eq!(phases[3 * kk + 1].kind, PhaseKind::Panels);
+                assert_eq!(phases[3 * kk + 2].kind, PhaseKind::Update);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_iters_fit_domain_and_increase() {
+        for phase in Workload::cholesky(9, 2) {
+            for lane in &phase.lanes {
+                for t in &lane.tasks {
+                    assert!(t.iter < lane.total_iters);
+                }
+                for w in lane.tasks.windows(2) {
+                    assert!(w[0].iter < w[1].iter);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dag_encoding_matches_lu_wrapper() {
+        // The generic encoder must reproduce the PR-2 SparseLU
+        // encoding exactly (same reads, write, flops, mem bytes).
+        let (nb, bs) = (8usize, 16usize);
+        let bb = (bs * bs * 4) as u64;
+        let t = lu_sim_task(BlockOp::Bmod, nb, bs, 0, 2, 3, true, 7);
+        assert_eq!(t.n_reads, 3);
+        assert_eq!(t.reads(), &[2 * 8, 3, 2 * 8 + 3]);
+        assert_eq!(t.write, 2 * 8 + 3);
+        assert_eq!(t.mem_bytes, 3 * bb);
+        assert_eq!(t.iter, 7);
+        let t = lu_sim_task(BlockOp::Bmod, nb, bs, 0, 2, 3, false, 0);
+        assert_eq!(t.mem_bytes, 2 * bb);
+        let t = lu_sim_task(BlockOp::Lu0, nb, bs, 4, 4, 4, false, 0);
+        assert_eq!(t.reads(), &[4 * 8 + 4]);
+        assert_eq!(t.mem_bytes, bb);
+        let t = lu_sim_task(BlockOp::Fwd, nb, bs, 1, 1, 5, false, 0);
+        assert_eq!(t.reads(), &[8 + 1, 8 + 5]);
+        assert_eq!(t.write, 8 + 5);
+        assert_eq!(t.mem_bytes, bb);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! + workloads + simulator) without PJRT (see runtime_pjrt.rs for the
 //! artifact path).
 
+use gprm::apps::cholesky::cholesky_dataflow;
 use gprm::apps::matmul::{run_matmul, MatmulApproach, MatmulExec};
 use gprm::apps::sparselu::{
     sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuRunConfig,
@@ -54,6 +55,42 @@ fn sparselu_all_runtimes_agree_and_verify() {
     assert_blocked_close(&a_df_gprm, &a_seq, 1e-4);
     assert!(lu_residual_sparse(&dense0, &a_df_omp) < 1e-4);
     assert!(lu_residual_sparse(&dense0, &a_df_gprm) < 1e-4);
+}
+
+#[test]
+fn cholesky_seq_and_dataflow_agree_and_verify() {
+    use gprm::linalg::cholesky::{cholesky_seq, gen_spd, sym_dense};
+    use gprm::linalg::verify::chol_residual_sparse;
+    use gprm::sched::ExecOpts;
+    let nb = 10;
+    let bs = 8;
+    let a0 = gen_spd(nb, bs);
+    let orig = sym_dense(&a0);
+
+    let mut a_seq = a0.deep_clone();
+    cholesky_seq(&mut a_seq);
+    assert!(chol_residual_sparse(&orig, &a_seq) < 1e-5);
+
+    let omp = OmpRuntime::new(6);
+    let gprm = GprmRuntime::with_tiles(6);
+    for (name, rt) in
+        [("omp", DataflowRt::Omp(&omp)), ("gprm", DataflowRt::Gprm(&gprm))]
+    {
+        for exec in [ExecOpts::default(), ExecOpts::mutex_baseline()] {
+            let mut a = a0.deep_clone();
+            cholesky_dataflow(&rt, &mut a, exec);
+            // Bit-identical to the sequential tiled reference on both
+            // executors (the PR's acceptance criterion).
+            assert_eq!(
+                a.to_dense().as_slice(),
+                a_seq.to_dense().as_slice(),
+                "{name} steal={} differs from seq",
+                exec.steal
+            );
+        }
+    }
+    omp.shutdown();
+    gprm.shutdown();
 }
 
 #[test]

@@ -3,20 +3,25 @@
 //! DAG whose execution (a) always terminates, (b) respects every
 //! dependence edge, and (c) reproduces the sequential factorisation on
 //! both host runtimes — under both the lock-free work-stealing
-//! executor and the mutex-scoreboard baseline, plus a randomized-spin
-//! stress test for the lock-free claim/release protocol.
+//! executor and the mutex-scoreboard baseline, plus randomized-spin /
+//! real-kernel stress tests for the lock-free claim/release protocol
+//! on both engine workloads (SparseLU and tiled Cholesky) and CSR
+//! structural invariants over randomized sparsity patterns.
 
+use gprm::apps::cholesky::cholesky_dataflow;
 use gprm::apps::sparselu::{sparselu_dataflow, DataflowRt, LuRunConfig};
 use gprm::coordinator::GprmRuntime;
+use gprm::linalg::cholesky::{cholesky_seq, gen_spd};
 use gprm::linalg::genmat::{genmat, genmat_pattern};
 use gprm::linalg::lu::sparselu_seq;
 use gprm::linalg::verify::lu_residual_sparse;
 use gprm::omp::OmpRuntime;
 use gprm::sched::{
     check_event_ordering, execute_gprm_opts, execute_omp_opts, ExecOpts,
-    TaskGraph,
+    TaskGraph, TaskId,
 };
 use gprm::testkit::{check, Pair, Triple, UsizeRange};
+use gprm::util::prng::SplitMix64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 #[test]
@@ -187,6 +192,90 @@ fn prop_graph_edges_always_point_forward() {
     });
 }
 
+/// Structural invariants of the CSR layout: `succs`/`preds` must be
+/// mutual inverses (every edge present in exactly one slot on each
+/// side) and the graph cycle-free (a Kahn drain starting from
+/// `roots()`/`indegrees()` must consume every task).
+fn check_csr_invariants(g: &TaskGraph) -> Result<(), String> {
+    let n = g.len();
+    let mut pred_edges = 0usize;
+    for t in 0..n {
+        for &p in g.preds(TaskId(t)) {
+            if p >= t {
+                return Err(format!("edge {p} -> {t} not forward"));
+            }
+            if !g.succs(TaskId(p)).contains(&t) {
+                return Err(format!("pred edge {p}->{t} missing in succs"));
+            }
+            pred_edges += 1;
+        }
+        for &s in g.succs(TaskId(t)) {
+            if !g.preds(TaskId(s)).contains(&t) {
+                return Err(format!("succ edge {t}->{s} missing in preds"));
+            }
+        }
+        if g.indegrees()[t] != g.preds(TaskId(t)).len() {
+            return Err(format!("indegree of {t} disagrees with preds"));
+        }
+    }
+    if pred_edges != g.n_edges() {
+        return Err(format!(
+            "edge count mismatch: preds {pred_edges} vs CSR {}",
+            g.n_edges()
+        ));
+    }
+    let want_roots: Vec<usize> =
+        (0..n).filter(|&t| g.indegrees()[t] == 0).collect();
+    if g.roots() != want_roots.as_slice() {
+        return Err("roots disagree with zero in-degrees".into());
+    }
+    // Kahn drain: cycle-free iff everything pops.
+    let mut indeg = g.indegrees().to_vec();
+    let mut queue: Vec<usize> = g.roots().to_vec();
+    let mut popped = 0usize;
+    while let Some(t) = queue.pop() {
+        popped += 1;
+        for &s in g.succs(TaskId(t)) {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                queue.push(s);
+            }
+        }
+    }
+    if popped != n {
+        return Err(format!("cycle: drained {popped} of {n}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_csr_succs_preds_mutual_inverse_and_acyclic() {
+    // Satellite: randomized sparsity patterns, nb ∈ [2, 24], for both
+    // the SparseLU and the Cholesky graph constructors. The pattern
+    // keeps the tridiagonal band allocated (like every BOTS input) and
+    // flips the rest with a seeded coin.
+    check(
+        "csr-mutual-inverse",
+        40,
+        &Pair(UsizeRange(2, 25), UsizeRange(0, 1 << 16)),
+        |&(nb, seed)| {
+            let mut rng = SplitMix64::new(seed as u64 | 1);
+            let mut pattern = vec![false; nb * nb];
+            for ii in 0..nb {
+                for jj in 0..nb {
+                    pattern[ii * nb + jj] = ii.abs_diff(jj) <= 1
+                        || rng.chance(0.4);
+                }
+            }
+            check_csr_invariants(&TaskGraph::sparselu(&pattern, nb))
+                .map_err(|e| format!("sparselu: {e}"))?;
+            check_csr_invariants(&TaskGraph::cholesky(nb))
+                .map_err(|e| format!("cholesky: {e}"))?;
+            Ok(())
+        },
+    );
+}
+
 /// Cheap deterministic per-task spin: xorshift the task id with the
 /// case seed into a busy-wait length, so claim/steal/park interleavings
 /// vary wildly from case to case.
@@ -298,6 +387,55 @@ fn stress_steal_executor_bit_identical_factorisation() {
                 if got.to_dense().as_slice() != want_dense.as_slice() {
                     return Err(format!(
                         "{name}: dataflow result not bit-identical to seq"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stress_cholesky_dataflow_bit_identical_both_executors() {
+    // The second workload's acceptance criterion, stress-tested: the
+    // Cholesky dataflow factorisation must be *bit-identical* to
+    // `cholesky_seq` under both executors (work stealing and the mutex
+    // scoreboard) on the omp runtime, and under work stealing on the
+    // gprm runtime, for random (nb, workers, bs). Run in release mode
+    // by CI alongside the SparseLU stress tests.
+    check(
+        "stress-cholesky-bit-identical",
+        50,
+        &Triple(UsizeRange(2, 25), UsizeRange(2, 9), UsizeRange(0, 1 << 16)),
+        |&(nb, workers, seed)| {
+            let bs = 4 + (seed % 5); // bs ∈ [4, 8]
+            let mut want = gen_spd(nb, bs);
+            cholesky_seq(&mut want);
+            let want_dense = want.to_dense();
+
+            let omp = OmpRuntime::new(workers);
+            let mut results: Vec<(String, _)> = Vec::new();
+            for exec in [ExecOpts::default(), ExecOpts::mutex_baseline()] {
+                let mut a = gen_spd(nb, bs);
+                cholesky_dataflow(&DataflowRt::Omp(&omp), &mut a, exec);
+                results.push((format!("omp steal={}", exec.steal), a));
+            }
+            omp.shutdown();
+
+            let gprm = GprmRuntime::with_tiles(workers);
+            let mut a = gen_spd(nb, bs);
+            cholesky_dataflow(
+                &DataflowRt::Gprm(&gprm),
+                &mut a,
+                ExecOpts::default(),
+            );
+            results.push(("gprm steal=true".into(), a));
+            gprm.shutdown();
+
+            for (name, got) in results {
+                if got.to_dense().as_slice() != want_dense.as_slice() {
+                    return Err(format!(
+                        "{name}: cholesky dataflow not bit-identical to seq"
                     ));
                 }
             }
