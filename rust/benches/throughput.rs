@@ -1,0 +1,234 @@
+//! Bench: multi-job throughput — a stream of 8 mixed jobs (4×
+//! SparseLU + 4× tiled Cholesky, alternating, NB=16/BS=16) pushed
+//! through ONE persistent pool (`sched::pool::Pool`, jobs submitted
+//! before any wait, cross-job stealing) vs the pre-pool regime of one
+//! one-shot executor launch per job (a fresh `OmpRuntime` team
+//! spawned and joined around every factorisation). Reports jobs/sec
+//! and tasks/sec from both the tilesim launch models
+//! (`LaunchModel::{PersistentPool, OneShotPerJob}`) and host
+//! wall-clock, appending JSON rows to `BENCH_sched.json` (the
+//! committed baseline rows were produced by the tilesim model).
+//!
+//! `cargo bench --bench throughput`
+
+use gprm::apps::cholesky::{cholesky_dataflow, CHOLESKY_RUST_KERNELS};
+use gprm::apps::dataflow::{run_dataflow_batch, PoolJob};
+use gprm::apps::sparselu::{
+    sparselu_dataflow, DataflowRt, LuRunConfig, LU_RUST_KERNELS,
+};
+use gprm::linalg::blocked::BlockedSparseMatrix;
+use gprm::linalg::cholesky::gen_spd;
+use gprm::linalg::genmat::{genmat, genmat_pattern};
+use gprm::omp::OmpRuntime;
+use gprm::sched::{ExecOpts, Pool, PoolConfig, TaskGraph};
+use gprm::tilesim::{CostModel, DataflowSim, LaunchModel};
+use std::io::Write as _;
+
+const NB: usize = 16;
+const BS: usize = 16;
+const N_JOBS: usize = 8;
+const WORKERS: [usize; 5] = [1, 2, 4, 8, 16];
+
+struct Row {
+    source: &'static str,
+    workers: usize,
+    exec: &'static str,
+    secs: f64,
+    jobs_per_sec: f64,
+    tasks_per_sec: f64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "{{\"workload\": \"mixed{N_JOBS} NB={NB} BS={BS}\", \
+             \"source\": \"{}\", \"workers\": {}, \"exec\": \"{}\", \
+             \"secs\": {:.6}, \"jobs_per_sec\": {:.1}, \
+             \"tasks_per_sec\": {:.0}}}",
+            self.source, self.workers, self.exec, self.secs,
+            self.jobs_per_sec, self.tasks_per_sec
+        )
+    }
+}
+
+/// One timed pass of the whole stream through a warm persistent pool.
+fn host_pool_once(
+    pool: &Pool,
+    lu_graph: &TaskGraph,
+    ch_graph: &TaskGraph,
+    lu0_mat: &BlockedSparseMatrix,
+    ch0_mat: &BlockedSparseMatrix,
+) -> f64 {
+    let mut mats: Vec<BlockedSparseMatrix> = (0..N_JOBS)
+        .map(|i| {
+            if i % 2 == 0 { lu0_mat.deep_clone() } else { ch0_mat.deep_clone() }
+        })
+        .collect();
+    let mut jobs: Vec<PoolJob> = mats
+        .iter_mut()
+        .enumerate()
+        .map(|(i, a)| {
+            if i % 2 == 0 {
+                PoolJob { a, graph: lu_graph, kernels: &LU_RUST_KERNELS }
+            } else {
+                PoolJob {
+                    a,
+                    graph: ch_graph,
+                    kernels: &CHOLESKY_RUST_KERNELS,
+                }
+            }
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    run_dataflow_batch(pool, &mut jobs).expect("pool batch failed");
+    let secs = t0.elapsed().as_secs_f64();
+    drop(jobs);
+    gprm::bench::black_box(
+        mats.iter().map(|m| m.allocated_blocks()).sum::<usize>(),
+    );
+    secs
+}
+
+/// One timed pass of the stream through per-launch one-shot
+/// executors: every job pays a fresh team spawn + join. Input clones
+/// happen before the clock starts, exactly like the pool pass, so
+/// the regimes differ only in how jobs reach workers.
+fn host_one_shot_once(
+    workers: usize,
+    lu0_mat: &BlockedSparseMatrix,
+    ch0_mat: &BlockedSparseMatrix,
+) -> f64 {
+    let mut inputs: Vec<BlockedSparseMatrix> = (0..N_JOBS)
+        .map(|i| {
+            if i % 2 == 0 { lu0_mat.deep_clone() } else { ch0_mat.deep_clone() }
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    for (i, a) in inputs.iter_mut().enumerate() {
+        let rt = OmpRuntime::new(workers);
+        if i % 2 == 0 {
+            sparselu_dataflow(
+                &DataflowRt::Omp(&rt),
+                a,
+                &LuRunConfig::default(),
+            );
+        } else {
+            cholesky_dataflow(&DataflowRt::Omp(&rt), a, ExecOpts::default());
+        }
+        gprm::bench::black_box(a.allocated_blocks());
+        rt.shutdown();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let lu_graph = TaskGraph::sparselu(&genmat_pattern(NB), NB);
+    let ch_graph = TaskGraph::cholesky(NB);
+    let n_tasks = (N_JOBS / 2) * (lu_graph.len() + ch_graph.len());
+    let sim_jobs: Vec<(&TaskGraph, usize)> = (0..N_JOBS)
+        .map(|i| (if i % 2 == 0 { &lu_graph } else { &ch_graph }, BS))
+        .collect();
+    println!(
+        "### mixed{N_JOBS} NB={NB} BS={BS} — {n_tasks} tasks \
+         ({} sparselu + {} cholesky per stream)",
+        lu_graph.len() * N_JOBS / 2,
+        ch_graph.len() * N_JOBS / 2,
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    let hz = CostModel::default().clock_hz;
+    println!("== tilesim launch models (virtual time @866 MHz) ==");
+    for &w in &WORKERS {
+        let sim = DataflowSim::tilepro(w);
+        for (name, launch) in [
+            ("pool", LaunchModel::PersistentPool),
+            ("oneshot", LaunchModel::OneShotPerJob),
+        ] {
+            let r = sim.run_jobs(&sim_jobs, launch);
+            let secs = r.cycles as f64 / hz;
+            let row = Row {
+                source: "tilesim-model",
+                workers: w,
+                exec: name,
+                secs,
+                jobs_per_sec: N_JOBS as f64 / secs,
+                tasks_per_sec: n_tasks as f64 / secs,
+            };
+            println!(
+                "  {name:>7} @{w:>2} workers: {secs:>8.4}s  {:>7.1} jobs/s  {:>9.0} tasks/s",
+                row.jobs_per_sec, row.tasks_per_sec
+            );
+            rows.push(row);
+        }
+    }
+
+    const SAMPLES: usize = 5;
+    let lu0_mat = genmat(NB, BS);
+    let ch0_mat = gen_spd(NB, BS);
+    println!("== host wall-clock (pool vs per-launch omp team) ==");
+    let mut failed = false;
+    for &w in &WORKERS {
+        let pool = Pool::with_config(PoolConfig {
+            workers: w,
+            task_capacity: n_tasks,
+            max_jobs: N_JOBS,
+        });
+        let mut best = [f64::MAX; 2];
+        // Warmups, then best-of-SAMPLES for each regime.
+        host_pool_once(&pool, &lu_graph, &ch_graph, &lu0_mat, &ch0_mat);
+        host_one_shot_once(w, &lu0_mat, &ch0_mat);
+        for _ in 0..SAMPLES {
+            best[0] = best[0].min(host_pool_once(
+                &pool, &lu_graph, &ch_graph, &lu0_mat, &ch0_mat,
+            ));
+            best[1] =
+                best[1].min(host_one_shot_once(w, &lu0_mat, &ch0_mat));
+        }
+        pool.shutdown();
+        for (name, secs) in [("pool", best[0]), ("oneshot", best[1])] {
+            let row = Row {
+                source: "host-wall-clock",
+                workers: w,
+                exec: name,
+                secs,
+                jobs_per_sec: N_JOBS as f64 / secs,
+                tasks_per_sec: n_tasks as f64 / secs,
+            };
+            println!(
+                "  {name:>7} @{w:>2} workers: {secs:>8.4}s  {:>7.1} jobs/s  {:>9.0} tasks/s",
+                row.jobs_per_sec, row.tasks_per_sec
+            );
+            rows.push(row);
+        }
+        let gain = best[1] / best[0];
+        if w >= 4 {
+            failed |= gain <= 1.0;
+            println!(
+                "  @{w} workers: pool/oneshot jobs-per-sec gain = {gain:.2}x {}",
+                if gain > 1.0 { "PASS" } else { "FAIL" }
+            );
+        }
+    }
+
+    // Append rows to the repo-root BENCH_sched.json (JSON lines; the
+    // committed baselines carry the tilesim-model rows).
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = manifest
+        .parent()
+        .unwrap_or(manifest)
+        .join("BENCH_sched.json");
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            for r in &rows {
+                let _ = writeln!(f, "{}", r.json());
+            }
+            println!("\nappended {} rows to {path:?}", rows.len());
+        }
+        Err(e) => eprintln!("cannot write {path:?}: {e}"),
+    }
+    if failed {
+        eprintln!(
+            "throughput bench FAILED: the pool lost to per-launch spawn at >= 4 workers"
+        );
+        std::process::exit(1);
+    }
+}

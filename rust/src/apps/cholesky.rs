@@ -17,10 +17,32 @@
 //! Kernels are pure rust (there are no AOT/PJRT artifacts for the
 //! Cholesky ops; the PJRT path remains SparseLU-only).
 
-use super::dataflow::{run_dataflow, BlockKernel, DataflowRt};
+use super::dataflow::{
+    run_dataflow, run_dataflow_batch, BlockKernel, DataflowRt, PoolJob,
+};
 use crate::linalg::blocked::BlockedSparseMatrix;
 use crate::linalg::cholesky::{gemm_nt, potrf, syrk, trsm};
-use crate::sched::{ExecOpts, ExecStats, TaskGraph};
+use crate::sched::{ExecOpts, ExecStats, Pool, SubmitError, TaskGraph};
+
+fn rk_potrf(_r: &[&[f32]], w: &mut [f32], bs: usize) {
+    potrf(w, bs)
+}
+fn rk_trsm(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    trsm(r[0], w, bs)
+}
+fn rk_syrk(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    syrk(r[0], w, bs)
+}
+fn rk_gemm(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    gemm_nt(r[0], r[1], w, bs)
+}
+
+/// The tiled-Cholesky kernel table, aligned with
+/// [`crate::sched::CHOLESKY_OPS`] — Cholesky kernels are rust-only
+/// (no PJRT artifacts), so every driver, the CLI pool path, benches
+/// and tests share this one definition.
+pub static CHOLESKY_RUST_KERNELS: [BlockKernel<'static>; 4] =
+    [&rk_potrf, &rk_trsm, &rk_syrk, &rk_gemm];
 
 /// Dataflow (DAG-scheduled) tiled Cholesky: factorises `a` (SPD,
 /// lower-triangle blocks allocated, e.g. from
@@ -38,17 +60,32 @@ pub fn cholesky_dataflow(
     exec: ExecOpts,
 ) -> ExecStats {
     let graph = TaskGraph::cholesky(a.nb());
-    let k_potrf = |_: &[&[f32]], w: &mut [f32], bs: usize| potrf(w, bs);
-    let k_trsm =
-        |r: &[&[f32]], w: &mut [f32], bs: usize| trsm(r[0], w, bs);
-    let k_syrk =
-        |r: &[&[f32]], w: &mut [f32], bs: usize| syrk(r[0], w, bs);
-    let k_gemm = |r: &[&[f32]], w: &mut [f32], bs: usize| {
-        gemm_nt(r[0], r[1], w, bs)
-    };
-    // Indexed by OP_POTRF..OP_GEMM, aligned with sched::CHOLESKY_OPS.
-    let kernels: [BlockKernel; 4] = [&k_potrf, &k_trsm, &k_syrk, &k_gemm];
-    run_dataflow(rt, a, &graph, &kernels, exec)
+    run_dataflow(rt, a, &graph, &CHOLESKY_RUST_KERNELS, exec)
+}
+
+/// Batched tiled Cholesky on the persistent pool — the Cholesky face
+/// of [`super::sparselu::sparselu_dataflow_batch`]: every matrix's
+/// DAG is submitted into one [`Pool::scope`] before any wait, so the
+/// factorisations overlap on the shared worker team. Each job's
+/// result stays bit-identical (f32) to
+/// [`cholesky_seq`](crate::linalg::cholesky::cholesky_seq) on its
+/// matrix alone.
+pub fn cholesky_dataflow_batch(
+    pool: &Pool,
+    mats: &mut [BlockedSparseMatrix],
+) -> Result<Vec<ExecStats>, SubmitError> {
+    let graphs: Vec<TaskGraph> =
+        mats.iter().map(|a| TaskGraph::cholesky(a.nb())).collect();
+    let mut jobs: Vec<PoolJob> = mats
+        .iter_mut()
+        .zip(&graphs)
+        .map(|(a, graph)| PoolJob {
+            a,
+            graph,
+            kernels: &CHOLESKY_RUST_KERNELS,
+        })
+        .collect();
+    run_dataflow_batch(pool, &mut jobs)
 }
 
 #[cfg(test)]
@@ -132,6 +169,42 @@ mod tests {
             );
         });
         rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_pool_bit_identical_to_seq() {
+        let pool = Pool::new(4);
+        check_bit_identical(|a| {
+            cholesky_dataflow(
+                &DataflowRt::Pool(&pool),
+                a,
+                ExecOpts::default(),
+            );
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dataflow_batch_every_job_bit_identical_to_seq() {
+        let pool = Pool::new(4);
+        let (nb, bs) = (8usize, 6usize);
+        let n_tasks = TaskGraph::cholesky(nb).len();
+        let mut want = gen_spd(nb, bs);
+        cholesky_seq(&mut want);
+        let want_dense = want.to_dense();
+        let mut mats: Vec<BlockedSparseMatrix> =
+            (0..4).map(|_| gen_spd(nb, bs)).collect();
+        let stats = cholesky_dataflow_batch(&pool, &mut mats).unwrap();
+        assert_eq!(stats.len(), 4);
+        for (m, s) in mats.iter().zip(&stats) {
+            assert_eq!(s.executed, n_tasks);
+            assert_eq!(
+                m.to_dense().as_slice(),
+                want_dense.as_slice(),
+                "batched cholesky job diverged from sequential"
+            );
+        }
+        pool.shutdown();
     }
 
     #[test]

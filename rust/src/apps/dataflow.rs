@@ -1,8 +1,9 @@
 //! The generic dataflow driver: runs *any* [`TaskGraph`] over a
 //! [`BlockedSparseMatrix`] by dispatching each task through a
-//! workload-supplied kernel table — the kernel-agnostic core both
-//! [`super::sparselu::sparselu_dataflow`] and
-//! [`super::cholesky::cholesky_dataflow`] funnel through.
+//! workload-supplied kernel table — the kernel-agnostic core that
+//! [`super::sparselu::sparselu_dataflow`],
+//! [`super::cholesky::cholesky_dataflow`] and
+//! [`super::matmul::matmul_dataflow`] all funnel through.
 //!
 //! A kernel receives the task's extra read blocks (shared slices) and
 //! its write block (exclusive slice), all split-borrowed zero-copy
@@ -11,21 +12,43 @@
 //! [`OpSpec`](crate::sched::OpSpec) vocabulary — adding a workload
 //! means a graph constructor plus a kernel table, never an executor
 //! change.
+//!
+//! # Hosts
+//!
+//! [`run_dataflow`] is a thin client over three hosts: the two
+//! **one-shot** executors (an OpenMP-style team or the GPRM machine
+//! spun up per launch — preserved so the PR-2/PR-3 drivers and BENCH
+//! rows stay comparable) and the **persistent pool**
+//! ([`DataflowRt::Pool`]), where the call becomes submit-and-wait on
+//! a long-lived worker team. [`run_dataflow_batch`] is the multi-job
+//! form: it submits every job into one [`Pool::scope`] and only then
+//! waits, so independent factorisations overlap and workers steal
+//! across job boundaries — mixed workloads welcome (each job carries
+//! its own graph and kernel table).
 
 use crate::coordinator::GprmRuntime;
 use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
 use crate::omp::OmpRuntime;
 use crate::sched::{
-    execute_gprm_opts, execute_omp_opts, ExecOpts, ExecStats, TaskGraph,
-    TaskId,
+    execute_gprm_opts, execute_omp_opts, ExecOpts, ExecStats, Pool,
+    SubmitError, TaskGraph, TaskId,
 };
 
-/// Which host runtime hosts the dataflow executor's workers.
+/// Which host runs the dataflow workers.
 pub enum DataflowRt<'r> {
-    /// OpenMP-style team: every team thread runs the worker loop.
+    /// OpenMP-style team: every team thread runs the worker loop
+    /// (one-shot: the team is dedicated to this graph until it
+    /// drains).
     Omp(&'r OmpRuntime),
-    /// GPRM machine: `CL` coordinator tasks map ready tasks onto tiles.
+    /// GPRM machine: `CL` coordinator tasks map ready tasks onto
+    /// tiles (one-shot).
     Gprm(&'r GprmRuntime),
+    /// Persistent multi-job pool: the call is a submit-and-wait
+    /// client; the pool's workers serve other jobs concurrently.
+    /// [`ExecOpts`] are not consulted on this host — the pool always
+    /// work-steals and records no event log (schedule audits belong
+    /// to the one-shot executors).
+    Pool(&'r Pool),
 }
 
 /// One entry of a workload's executable kernel table: `(reads, write,
@@ -34,43 +57,28 @@ pub enum DataflowRt<'r> {
 pub type BlockKernel<'k> =
     &'k (dyn Fn(&[&[f32]], &mut [f32], usize) + Sync);
 
-/// Execute `graph` over `a` on the selected host runtime, dispatching
-/// every task through `kernels[task.op]`. Factorises (or otherwise
-/// transforms) `a` in place and returns the executor statistics.
-///
-/// Results are bit-identical (f32) to the workload's sequential
-/// reference: the graph chains every pair of tasks touching the same
-/// block (RAW/WAW/WAR) in sequential program order, so only the
-/// inter-block interleaving varies between runs.
-pub fn run_dataflow(
-    rt: &DataflowRt,
-    a: &mut BlockedSparseMatrix,
-    graph: &TaskGraph,
-    kernels: &[BlockKernel],
-    exec: ExecOpts,
-) -> ExecStats {
-    assert_eq!(graph.nb(), a.nb(), "graph and matrix block grids differ");
-    assert_eq!(
-        graph.ops().len(),
-        kernels.len(),
-        "kernel table must cover the graph's op vocabulary"
-    );
-    let bs = a.bs();
-    let shared = SharedBlocked::new(std::mem::replace(
-        a,
-        BlockedSparseMatrix::empty(1, 1),
-    ));
-    let sh = &shared;
-    let run = |id: TaskId| {
+/// The per-task dispatch closure shared by every host: split-borrow
+/// the task's blocks zero-copy and fire `kernels[task.op]`. The
+/// closure is `Send + Sync` so the pool can run it from any worker;
+/// the access-set discipline that makes the unsafe block sound is
+/// documented inline.
+fn task_runner<'a>(
+    graph: &'a TaskGraph,
+    kernels: &'a [BlockKernel<'a>],
+    shared: &'a SharedBlocked,
+    bs: usize,
+) -> impl Fn(TaskId) + Send + Sync + 'a {
+    move |id: TaskId| {
         let t = *graph.task(id);
         // SAFETY: the task graph chains every touch of a given block
-        // (RAW/WAW/WAR) and the executor carries a release/acquire
-        // edge per dependency (see `SharedBlocked`'s Sync impl), so
-        // this task has exclusive access to the block it writes and
-        // read-only access to blocks finalised by its predecessors.
-        // Fill-in allocation mutates only the written block's own
-        // slot. Within the task the borrows split, zero-copy.
-        let m = unsafe { sh.get_mut() };
+        // (RAW/WAW/WAR) and every executor host carries a
+        // release/acquire edge per dependency (see `SharedBlocked`'s
+        // Sync impl), so this task has exclusive access to the block
+        // it writes and read-only access to blocks finalised by its
+        // predecessors. Fill-in allocation mutates only the written
+        // block's own slot. Within the task the borrows split,
+        // zero-copy.
+        let m = unsafe { shared.get_mut() };
         if t.alloc_write {
             m.allocate_clean_block(t.write.0, t.write.1);
         }
@@ -85,18 +93,116 @@ pub fn run_dataflow(
                 kernel(&[r], w, bs);
             }
             &[r0, r1] => {
-                let (a0, a1, w) =
-                    m.read2_write1(r0, r1, t.write).unwrap();
+                let (a0, a1, w) = m.read2_write1(r0, r1, t.write).unwrap();
                 kernel(&[a0, a1], w, bs);
             }
             _ => unreachable!("tasks carry at most two extra reads"),
         }
-    };
+    }
+}
+
+fn check_job(a: &BlockedSparseMatrix, graph: &TaskGraph, kernels: &[BlockKernel]) {
+    assert_eq!(graph.nb(), a.nb(), "graph and matrix block grids differ");
+    assert_eq!(
+        graph.ops().len(),
+        kernels.len(),
+        "kernel table must cover the graph's op vocabulary"
+    );
+}
+
+/// Execute `graph` over `a` on the selected host, dispatching every
+/// task through `kernels[task.op]`. Factorises (or otherwise
+/// transforms) `a` in place and returns the executor statistics.
+///
+/// Results are bit-identical (f32) to the workload's sequential
+/// reference: the graph chains every pair of tasks touching the same
+/// block (RAW/WAW/WAR) in sequential program order, so only the
+/// inter-block interleaving varies between runs — on every host.
+pub fn run_dataflow(
+    rt: &DataflowRt,
+    a: &mut BlockedSparseMatrix,
+    graph: &TaskGraph,
+    kernels: &[BlockKernel],
+    exec: ExecOpts,
+) -> ExecStats {
+    check_job(a, graph, kernels);
+    let bs = a.bs();
+    let shared = SharedBlocked::new(std::mem::replace(
+        a,
+        BlockedSparseMatrix::empty(1, 1),
+    ));
+    let run = task_runner(graph, kernels, &shared, bs);
     let stats = match rt {
-        DataflowRt::Omp(omp) => execute_omp_opts(omp, graph, run, exec),
-        DataflowRt::Gprm(gprm) => execute_gprm_opts(gprm, graph, run, exec),
+        DataflowRt::Omp(omp) => execute_omp_opts(omp, graph, &run, exec),
+        DataflowRt::Gprm(gprm) => execute_gprm_opts(gprm, graph, &run, exec),
+        DataflowRt::Pool(pool) => {
+            // The pool has no executor options — reject a silent
+            // mismatch instead of "auditing" an empty event log or
+            // mislabelling a stealing run as the mutex baseline.
+            assert!(
+                exec.steal && !exec.record_events,
+                "ExecOpts select one-shot executors; the pool host \
+                 always work-steals and records no event log"
+            );
+            pool.run(graph, &run)
+        }
     }
     .expect("dataflow execution failed");
+    drop(run);
     *a = shared.into_inner();
     stats
+}
+
+/// One job of a [`run_dataflow_batch`] stream: the matrix to
+/// transform in place, the graph over it, and the kernel table its op
+/// ids index. Jobs in one batch may come from different workloads.
+pub struct PoolJob<'a> {
+    pub a: &'a mut BlockedSparseMatrix,
+    pub graph: &'a TaskGraph,
+    pub kernels: &'a [BlockKernel<'a>],
+}
+
+/// Submit every job into one pool scope, then wait for all: the jobs
+/// execute **concurrently** on the shared worker team (cross-job
+/// stealing included), unlike a loop of [`run_dataflow`] calls which
+/// would serialise them. Returns per-job stats in submission order.
+///
+/// On [`SubmitError`] the already-submitted prefix still runs to
+/// completion (their matrices hold valid results) before the error is
+/// returned; nothing is ever silently dropped. A job poisoned by a
+/// panicking kernel panics here too (matching [`run_dataflow`]'s
+/// `expect`) — but only **after** every job finished and every
+/// matrix, including the healthy jobs' results, was restored.
+pub fn run_dataflow_batch(
+    pool: &Pool,
+    jobs: &mut [PoolJob<'_>],
+) -> Result<Vec<ExecStats>, SubmitError> {
+    for j in jobs.iter_mut() {
+        check_job(j.a, j.graph, j.kernels);
+    }
+    let shares: Vec<(SharedBlocked, usize)> = jobs
+        .iter_mut()
+        .map(|j| {
+            let bs = j.a.bs();
+            let m = std::mem::replace(j.a, BlockedSparseMatrix::empty(1, 1));
+            (SharedBlocked::new(m), bs)
+        })
+        .collect();
+    let result = pool.scope(|s| {
+        let mut handles = Vec::with_capacity(shares.len());
+        for (j, (sh, bs)) in jobs.iter().zip(&shares) {
+            let run = task_runner(j.graph, j.kernels, sh, *bs);
+            handles.push(s.submit(j.graph, run)?);
+        }
+        // Collect every outcome without unwinding mid-scope: one
+        // poisoned job must not cost the other jobs their results.
+        Ok(handles.iter().map(|h| h.wait()).collect::<Vec<_>>())
+    });
+    for (j, (sh, _)) in jobs.iter_mut().zip(shares) {
+        *j.a = sh.into_inner();
+    }
+    Ok(result?
+        .into_iter()
+        .map(|r| r.expect("pool dataflow job failed"))
+        .collect())
 }

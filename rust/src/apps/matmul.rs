@@ -2,10 +2,23 @@
 //!
 //! `A: m×n`, `B: n×p` (the paper fixes `p = n`), parallelised over the
 //! first loop: `m` jobs of `p·n` dot-product work each.
+//!
+//! Besides the paper's four row-parallel approaches, the workload is
+//! also ported onto the kernel-agnostic dataflow engine
+//! ([`matmul_dataflow`], graph [`TaskGraph::matmul`]): a *blocked*
+//! `C = A·B` whose per-`C`-block accumulation chains are derived by
+//! the same access-set machinery as SparseLU/Cholesky, so all three
+//! workloads share one scheduling path and can be mixed in a
+//! persistent-pool job stream.
 
+use super::dataflow::{
+    run_dataflow, run_dataflow_batch, BlockKernel, DataflowRt, PoolJob,
+};
 use crate::coordinator::{worksharing, GprmRuntime};
+use crate::linalg::blocked::BlockedSparseMatrix;
 use crate::linalg::dense::{matmul_rows_into, DenseMatrix};
 use crate::omp::{DynamicSched, OmpRuntime};
+use crate::sched::{ExecOpts, ExecStats, Pool, SubmitError, TaskGraph};
 
 /// The four approaches of Fig 2, plus the cutoff variant of Fig 4
 /// (Listing 4: only `m/cutoff` tasks are created).
@@ -168,6 +181,163 @@ pub fn run_matmul(
     (dt, c.max_abs_diff(&want))
 }
 
+// ---------------------------------------------------------------------
+// Blocked matmul on the dataflow engine
+// ---------------------------------------------------------------------
+
+/// The `madd` block kernel: `c += a·b` on row-major `bs×bs` blocks,
+/// j-inner accumulation. [`matmul_blocked_seq`] uses the identical
+/// loop, which is what makes every edge-respecting schedule
+/// bit-identical (f32) to it.
+pub fn madd(a: &[f32], b: &[f32], c: &mut [f32], bs: usize) {
+    debug_assert!(a.len() == bs * bs && b.len() == bs * bs && c.len() == bs * bs);
+    for i in 0..bs {
+        for j in 0..bs {
+            let mut acc = c[i * bs + j];
+            for k in 0..bs {
+                acc += a[i * bs + k] * b[k * bs + j];
+            }
+            c[i * bs + j] = acc;
+        }
+    }
+}
+
+/// Pack square `a` and `b` (each `nbc·bs` wide) plus a zeroed `C`
+/// into the `2·nbc`-grid blocked matrix [`TaskGraph::matmul`]
+/// schedules over: `C` in the top-left quadrant, `A` top-right
+/// (`A[i,k]` at block `(i, nbc+k)`), `B` bottom-left (`B[k,j]` at
+/// `(nbc+k, j)`); the fourth quadrant stays unallocated.
+pub fn matmul_blocked_input(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    nbc: usize,
+    bs: usize,
+) -> BlockedSparseMatrix {
+    let dim = nbc * bs;
+    assert_eq!((a.rows(), a.cols()), (dim, dim), "A shape");
+    assert_eq!((b.rows(), b.cols()), (dim, dim), "B shape");
+    let mut m = BlockedSparseMatrix::empty(2 * nbc, bs);
+    for bi in 0..nbc {
+        for bj in 0..nbc {
+            m.allocate_clean_block(bi, bj); // C, zeroed
+            let ab = m.allocate_clean_block(bi, nbc + bj);
+            for r in 0..bs {
+                for c in 0..bs {
+                    ab[r * bs + c] = a[(bi * bs + r, bj * bs + c)];
+                }
+            }
+            let bb = m.allocate_clean_block(nbc + bi, bj);
+            for r in 0..bs {
+                for c in 0..bs {
+                    bb[r * bs + c] = b[(bi * bs + r, bj * bs + c)];
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Read the `C` quadrant back out of the blocked layout.
+pub fn matmul_extract_c(
+    m: &BlockedSparseMatrix,
+    nbc: usize,
+) -> DenseMatrix {
+    let bs = m.bs();
+    let mut c = DenseMatrix::zeros(nbc * bs, nbc * bs);
+    for bi in 0..nbc {
+        for bj in 0..nbc {
+            let blk = m.block(bi, bj).expect("C block allocated");
+            for r in 0..bs {
+                for col in 0..bs {
+                    c[(bi * bs + r, bj * bs + col)] = blk[r * bs + col];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Sequential blocked reference: the same [`madd`] kernels in the
+/// graph's task order (`k` outer, then `i`, `j`) — the bit-identity
+/// baseline for [`matmul_dataflow`].
+pub fn matmul_blocked_seq(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    nbc: usize,
+    bs: usize,
+) -> DenseMatrix {
+    let mut m = matmul_blocked_input(a, b, nbc, bs);
+    for kk in 0..nbc {
+        for ii in 0..nbc {
+            for jj in 0..nbc {
+                let (ra, rb, w) = m
+                    .read2_write1((ii, nbc + kk), (nbc + kk, jj), (ii, jj))
+                    .unwrap();
+                madd(ra, rb, w, bs);
+            }
+        }
+    }
+    matmul_extract_c(&m, nbc)
+}
+
+fn rk_madd(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    madd(r[0], r[1], w, bs)
+}
+
+/// The blocked-matmul kernel table, aligned with
+/// [`crate::sched::MATMUL_OPS`] — one shared definition for drivers,
+/// the CLI pool path, benches and tests.
+pub static MATMUL_RUST_KERNELS: [BlockKernel<'static>; 1] = [&rk_madd];
+
+/// Blocked `C = A·B` on the dataflow engine (any host, including the
+/// persistent pool): builds the embedded blocked input, schedules
+/// [`TaskGraph::matmul`], and returns `C` plus the executor stats.
+/// Bit-identical (f32) to [`matmul_blocked_seq`].
+pub fn matmul_dataflow(
+    rt: &DataflowRt,
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    nbc: usize,
+    bs: usize,
+    exec: ExecOpts,
+) -> (DenseMatrix, ExecStats) {
+    let graph = TaskGraph::matmul(nbc);
+    let mut m = matmul_blocked_input(a, b, nbc, bs);
+    let stats =
+        run_dataflow(rt, &mut m, &graph, &MATMUL_RUST_KERNELS, exec);
+    (matmul_extract_c(&m, nbc), stats)
+}
+
+/// Batched blocked matmul on the persistent pool: all products are
+/// submitted into one [`Pool::scope`] and overlap on the shared
+/// worker team. Returns each `C` plus its executor stats, in
+/// submission order (the same shape as the factorisation batch
+/// APIs).
+pub fn matmul_dataflow_batch(
+    pool: &Pool,
+    pairs: &[(&DenseMatrix, &DenseMatrix)],
+    nbc: usize,
+    bs: usize,
+) -> Result<(Vec<DenseMatrix>, Vec<ExecStats>), SubmitError> {
+    let graph = TaskGraph::matmul(nbc);
+    let mut mats: Vec<BlockedSparseMatrix> = pairs
+        .iter()
+        .map(|&(a, b)| matmul_blocked_input(a, b, nbc, bs))
+        .collect();
+    let mut jobs: Vec<PoolJob> = mats
+        .iter_mut()
+        .map(|a| PoolJob {
+            a,
+            graph: &graph,
+            kernels: &MATMUL_RUST_KERNELS,
+        })
+        .collect();
+    let stats = run_dataflow_batch(pool, &mut jobs)?;
+    drop(jobs);
+    let cs = mats.iter().map(|m| matmul_extract_c(m, nbc)).collect();
+    Ok((cs, stats))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +371,66 @@ mod tests {
         }
         gprm.shutdown();
         omp.shutdown();
+    }
+
+    #[test]
+    fn blocked_seq_matches_dense_matmul() {
+        let (nbc, bs) = (4usize, 5usize);
+        let n = nbc * bs;
+        let a = DenseMatrix::bots_random(n, n, 7);
+        let b = DenseMatrix::bots_random(n, n, 8);
+        let blocked = matmul_blocked_seq(&a, &b, nbc, bs);
+        let dense = a.matmul(&b);
+        // Different summation order: close, not bit-equal.
+        assert!(blocked.max_abs_diff(&dense) < 1e-3);
+    }
+
+    #[test]
+    fn dataflow_matmul_bit_identical_to_blocked_seq() {
+        let (nbc, bs) = (4usize, 5usize);
+        let n = nbc * bs;
+        let a = DenseMatrix::bots_random(n, n, 31);
+        let b = DenseMatrix::bots_random(n, n, 32);
+        let want = matmul_blocked_seq(&a, &b, nbc, bs);
+        let omp = OmpRuntime::new(4);
+        for exec in [ExecOpts::default(), ExecOpts::mutex_baseline()] {
+            let (c, stats) = matmul_dataflow(
+                &DataflowRt::Omp(&omp),
+                &a,
+                &b,
+                nbc,
+                bs,
+                exec,
+            );
+            assert_eq!(stats.executed, nbc * nbc * nbc);
+            assert_eq!(
+                c.as_slice(),
+                want.as_slice(),
+                "dataflow matmul differs from blocked seq"
+            );
+        }
+        omp.shutdown();
+        // And on the persistent pool.
+        let pool = Pool::new(4);
+        let (c, _) = matmul_dataflow(
+            &DataflowRt::Pool(&pool),
+            &a,
+            &b,
+            nbc,
+            bs,
+            ExecOpts::default(),
+        );
+        assert_eq!(c.as_slice(), want.as_slice());
+        let (cs, stats) =
+            matmul_dataflow_batch(&pool, &[(&a, &b), (&a, &b)], nbc, bs)
+                .unwrap();
+        for c in cs {
+            assert_eq!(c.as_slice(), want.as_slice());
+        }
+        for s in stats {
+            assert_eq!(s.executed, nbc * nbc * nbc);
+        }
+        pool.shutdown();
     }
 
     #[test]

@@ -3,10 +3,14 @@
 //! counterparts live in [`crate::tilesim`].
 //!
 //! * [`matmul`] — the §V micro-benchmark: `C = A·B` as `m` row-jobs,
-//!   under the four approaches of Fig 2 (+ cutoff variant of Fig 4).
+//!   under the four approaches of Fig 2 (+ cutoff variant of Fig 4),
+//!   plus the blocked dataflow port (`matmul_dataflow`) sharing the
+//!   engine with the factorisations.
 //! * [`dataflow`] — the generic kernel-table driver: runs any
 //!   [`crate::sched::TaskGraph`] over a blocked matrix by dispatching
-//!   tasks through a per-workload kernel table.
+//!   tasks through a per-workload kernel table, on a one-shot host or
+//!   the persistent [`crate::sched::Pool`]
+//!   (`run_dataflow_batch` overlaps whole job streams).
 //! * [`sparselu`] — the §VI SparseLU factorisation: sequential
 //!   (BOTS reference), OpenMP tasking (Fig 5 port), GPRM hybrid
 //!   worksharing-tasking (Listings 5–6 port), and the barrier-free
@@ -20,9 +24,17 @@ pub mod dataflow;
 pub mod matmul;
 pub mod sparselu;
 
-pub use cholesky::cholesky_dataflow;
-pub use dataflow::{run_dataflow, BlockKernel, DataflowRt};
-pub use matmul::{run_matmul, MatmulApproach};
+pub use cholesky::{
+    cholesky_dataflow, cholesky_dataflow_batch, CHOLESKY_RUST_KERNELS,
+};
+pub use dataflow::{
+    run_dataflow, run_dataflow_batch, BlockKernel, DataflowRt, PoolJob,
+};
+pub use matmul::{
+    matmul_dataflow, matmul_dataflow_batch, run_matmul, MatmulApproach,
+    MATMUL_RUST_KERNELS,
+};
 pub use sparselu::{
-    sparselu_dataflow, sparselu_gprm, sparselu_omp, LuBackend, LuRunConfig,
+    sparselu_dataflow, sparselu_dataflow_batch, sparselu_gprm,
+    sparselu_omp, LuBackend, LuRunConfig, LU_RUST_KERNELS,
 };

@@ -22,14 +22,14 @@
 //! or through the AOT-compiled JAX/Pallas artifacts via PJRT
 //! ([`LuBackend::Pjrt`]).
 
-use super::dataflow::{run_dataflow, BlockKernel};
+use super::dataflow::{run_dataflow, run_dataflow_batch, BlockKernel, PoolJob};
 pub use super::dataflow::DataflowRt;
 use crate::coordinator::{worksharing, GprmRuntime};
 use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
 use crate::linalg::lu::{bdiv, bmod, fwd, lu0};
 use crate::omp::OmpRuntime;
 use crate::runtime::EngineService;
-use crate::sched::{ExecOpts, ExecStats, TaskGraph};
+use crate::sched::{ExecOpts, ExecStats, Pool, SubmitError, TaskGraph};
 
 /// How block kernels execute.
 pub enum LuBackend<'e> {
@@ -70,6 +70,27 @@ impl<'e> LuBackend<'e> {
         }
     }
 }
+
+fn rk_lu0(_r: &[&[f32]], w: &mut [f32], bs: usize) {
+    lu0(w, bs)
+}
+fn rk_fwd(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    fwd(r[0], w, bs)
+}
+fn rk_bdiv(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    bdiv(r[0], w, bs)
+}
+fn rk_bmod(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    bmod(r[0], r[1], w, bs)
+}
+
+/// The plain-rust SparseLU kernel table, aligned with
+/// [`crate::sched::LU_OPS`] — the single definition shared by the CLI
+/// pool driver, benches and tests, so the op-id ordering lives in one
+/// place. The backend-dispatching drivers below build closure tables
+/// instead (they must capture the [`LuBackend`]).
+pub static LU_RUST_KERNELS: [BlockKernel<'static>; 4] =
+    [&rk_lu0, &rk_fwd, &rk_bdiv, &rk_bmod];
 
 /// Options shared by the parallel drivers.
 pub struct LuRunConfig<'e> {
@@ -301,6 +322,46 @@ pub fn sparselu_dataflow(
     run_dataflow(rt, a, &graph, &kernels, cfg.exec)
 }
 
+/// Batched SparseLU on the persistent pool: one graph per matrix,
+/// every job submitted into one [`Pool::scope`] before any wait, so
+/// independent factorisations run **concurrently** on the shared
+/// worker team (the [`crate::sched::pool`] service model). Each
+/// matrix is factorised in place; per-job stats return in order.
+///
+/// Takes only the kernel `backend` — [`ExecOpts`] are one-shot
+/// executor options the pool does not consult (it always work-steals
+/// and records no event log), so the API does not accept them.
+///
+/// Every job's result is bit-identical (f32) to running
+/// [`sparselu_seq`] on that matrix alone — concurrency changes only
+/// the interleaving across jobs and blocks, never the per-block
+/// operation order.
+pub fn sparselu_dataflow_batch(
+    pool: &Pool,
+    mats: &mut [BlockedSparseMatrix],
+    backend: &LuBackend,
+) -> Result<Vec<ExecStats>, SubmitError> {
+    let graphs: Vec<TaskGraph> = mats
+        .iter()
+        .map(|a| TaskGraph::sparselu(&a.pattern(), a.nb()))
+        .collect();
+    let k_lu0 = |_: &[&[f32]], w: &mut [f32], bs: usize| backend.lu0(w, bs);
+    let k_fwd =
+        |r: &[&[f32]], w: &mut [f32], bs: usize| backend.fwd(r[0], w, bs);
+    let k_bdiv =
+        |r: &[&[f32]], w: &mut [f32], bs: usize| backend.bdiv(r[0], w, bs);
+    let k_bmod = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+        backend.bmod(r[0], r[1], w, bs)
+    };
+    let kernels: [BlockKernel; 4] = [&k_lu0, &k_fwd, &k_bdiv, &k_bmod];
+    let mut jobs: Vec<PoolJob> = mats
+        .iter_mut()
+        .zip(&graphs)
+        .map(|(a, graph)| PoolJob { a, graph, kernels: &kernels })
+        .collect();
+    run_dataflow_batch(pool, &mut jobs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,6 +479,53 @@ mod tests {
             );
         });
         rt.shutdown();
+    }
+
+    #[test]
+    fn dataflow_pool_matches_sequential() {
+        let pool = Pool::new(4);
+        check_against_seq(|a| {
+            sparselu_dataflow(
+                &DataflowRt::Pool(&pool),
+                a,
+                &LuRunConfig::default(),
+            );
+        });
+        // Pool is persistent: a second factorisation reuses the team.
+        check_against_seq(|a| {
+            sparselu_dataflow(
+                &DataflowRt::Pool(&pool),
+                a,
+                &LuRunConfig::default(),
+            );
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dataflow_batch_every_job_bit_identical_to_seq() {
+        use crate::linalg::genmat::genmat_pattern;
+        let pool = Pool::new(4);
+        let (nb, bs) = (8usize, 6usize);
+        let n_tasks = TaskGraph::sparselu(&genmat_pattern(nb), nb).len();
+        let mut want = genmat(nb, bs);
+        sparselu_seq(&mut want);
+        let want_dense = want.to_dense();
+        let mut mats: Vec<BlockedSparseMatrix> =
+            (0..4).map(|_| genmat(nb, bs)).collect();
+        let stats =
+            sparselu_dataflow_batch(&pool, &mut mats, &LuBackend::Rust)
+                .unwrap();
+        assert_eq!(stats.len(), 4);
+        for (m, s) in mats.iter().zip(&stats) {
+            assert_eq!(s.executed, n_tasks);
+            assert_eq!(
+                m.to_dense().as_slice(),
+                want_dense.as_slice(),
+                "batched job diverged from sequential"
+            );
+        }
+        pool.shutdown();
     }
 
     #[test]

@@ -30,11 +30,15 @@ impl Scale {
 }
 
 /// All experiment ids in paper order, plus the cost-model ablation
-/// (not a paper figure; attributes the OpenMP collapse to mechanisms)
-/// and the dataflow-vs-phase-barrier comparison (not a paper figure;
-/// quantifies what Listings 5–6 pay for their barriers).
+/// (not a paper figure; attributes the OpenMP collapse to mechanisms),
+/// the dataflow-vs-phase-barrier comparison (not a paper figure;
+/// quantifies what Listings 5–6 pay for their barriers), and the
+/// multi-job throughput comparison (not a paper figure; quantifies
+/// what a stream of factorisation requests pays for per-launch
+/// executor spawning vs the persistent pool).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig3", "fig4", "fig6", "table1", "fig7", "ablation", "dataflow",
+    "throughput",
 ];
 
 /// Dispatch by id.
@@ -48,6 +52,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> ExperimentReport {
         "fig7" => fig7(scale),
         "ablation" => ablation(scale),
         "dataflow" => dataflow(scale),
+        "throughput" => throughput(scale),
         other => panic!("unknown experiment {other:?} (want one of {ALL_EXPERIMENTS:?})"),
     }
 }
@@ -706,6 +711,94 @@ fn dataflow(scale: Scale) -> ExperimentReport {
     ExperimentReport { id: "dataflow".into(), tables, checks }
 }
 
+// --- Throughput: a job stream through one pool vs per-launch spawn ------
+
+/// Jobs/sec of a mixed 8-job stream (4× SparseLU + 4× Cholesky,
+/// alternating) on the virtual TILEPro64: one persistent pool
+/// (cross-job stealing, submissions costing `pool_submit` apiece)
+/// against the pre-pool regime of one one-shot executor launch per
+/// job (each paying a full worker-team spawn). Thresholds derived
+/// from the python port of the launch models, as in PRs 1–3; they
+/// hold from `Scale(0.1)` (NB=12) to `Scale(1.0)` (NB=16).
+fn throughput(scale: Scale) -> ExperimentReport {
+    use crate::sched::TaskGraph;
+    use crate::tilesim::{CostModel, DataflowSim, LaunchModel};
+    let nb = scale.nb(16);
+    let bs = 16usize;
+    let n_jobs = 8usize;
+    let lu = TaskGraph::sparselu(
+        &crate::linalg::genmat::genmat_pattern(nb),
+        nb,
+    );
+    let ch = TaskGraph::cholesky(nb);
+    let jobs: Vec<(&TaskGraph, usize)> = (0..n_jobs)
+        .map(|i| (if i % 2 == 0 { &lu } else { &ch }, bs))
+        .collect();
+    let hz = CostModel::default().clock_hz;
+    let workers = [1usize, 2, 4, 8, 16];
+    let mut t = Table::new(
+        &format!(
+            "Throughput — {n_jobs} mixed jobs (SparseLU+Cholesky) NB={nb}, \
+             BS={bs}: persistent pool vs per-launch spawn"
+        ),
+        &[
+            "workers", "pool (s)", "one-shot (s)", "pool jobs/s",
+            "one-shot jobs/s", "pool gain",
+        ],
+    );
+    let mut gains = Vec::new();
+    let mut overlaps = Vec::new();
+    for &w in &workers {
+        let sim = DataflowSim::tilepro(w);
+        let pool = sim.run_jobs(&jobs, LaunchModel::PersistentPool);
+        let oneshot = sim.run_jobs(&jobs, LaunchModel::OneShotPerJob);
+        // Cross-job overlap in isolation: serial launches with the
+        // spawn cost zeroed out (a plain sum of single-graph runs).
+        let serial_nospawn: u64 = jobs
+            .iter()
+            .map(|&(g, bs)| sim.run_graph(g, bs).cycles)
+            .sum();
+        let gain = oneshot.cycles as f64 / pool.cycles as f64;
+        gains.push((w, gain));
+        overlaps.push((w, serial_nospawn as f64 / pool.cycles as f64));
+        let jps = |c: u64| n_jobs as f64 / (c as f64 / hz);
+        t.row(vec![
+            w.to_string(),
+            vsec(pool.cycles),
+            vsec(oneshot.cycles),
+            format!("{:.0}", jps(pool.cycles)),
+            format!("{:.0}", jps(oneshot.cycles)),
+            spd(gain),
+        ]);
+    }
+    let checks = vec![
+        ShapeCheck::new(
+            "pool beats per-launch executor spawn on jobs/sec at every count >= 4 workers",
+            gains.iter().filter(|&&(w, _)| w >= 4).all(|&(_, g)| g > 1.05),
+            format!("{gains:?}"),
+        ),
+        ShapeCheck::new(
+            "pool never loses, even on 1-2 workers",
+            gains.iter().all(|&(_, g)| g > 0.98),
+            format!("{gains:?}"),
+        ),
+        ShapeCheck::new(
+            "the spawn tax scales with the team: pool gain widens with workers",
+            gains.windows(2).all(|w| w[1].1 > w[0].1),
+            format!("{gains:?}"),
+        ),
+        ShapeCheck::new(
+            "cross-job overlap alone beats even zero-spawn serial launches at >= 4 workers",
+            overlaps
+                .iter()
+                .filter(|&&(w, _)| w >= 4)
+                .all(|&(_, g)| g > 1.01),
+            format!("{overlaps:?}"),
+        ),
+    ];
+    ExperimentReport { id: "throughput".into(), tables: vec![t], checks }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -764,6 +857,19 @@ mod tests {
     fn dataflow_shape_holds_full_acceptance_config() {
         // NB=32, BS=16 — the unscaled acceptance workload.
         let r = dataflow(Scale(1.0));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn throughput_shape_holds_scaled() {
+        let r = throughput(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn throughput_shape_holds_full_acceptance_config() {
+        // NB=16, BS=16, 8 mixed jobs — the unscaled acceptance stream.
+        let r = throughput(Scale(1.0));
         assert!(r.all_pass(), "{}", r.render());
     }
 

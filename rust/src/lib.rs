@@ -19,14 +19,24 @@
 //!   block kernels in `artifacts/`.
 //! * [`sched`] — the **kernel-agnostic** dataflow (DAG) engine: a
 //!   `TaskGraph` of opaque op ids + block access sets (RAW/WAW/WAR
-//!   edges derived purely from the access sets) and a lock-free
-//!   work-stealing executor (Chase–Lev deques) running on both host
-//!   runtimes, with the mutex scoreboard kept as a baseline. Workload
-//!   constructors: `TaskGraph::sparselu`, `TaskGraph::cholesky`.
+//!   edges derived purely from the access sets), a lock-free
+//!   work-stealing one-shot executor (Chase–Lev deques) on both host
+//!   runtimes (mutex scoreboard kept as a baseline), and the
+//!   **persistent multi-job pool** (`sched::pool::Pool`): one
+//!   long-lived worker team executing many concurrent graphs with
+//!   job-tagged deque entries (cross-job stealing), FIFO capacity
+//!   admission with typed `SubmitError`, per-job poisoning and
+//!   graceful shutdown. Workload constructors:
+//!   `TaskGraph::{sparselu, cholesky, matmul}`.
 //! * [`apps`] — the paper's two workloads (SparseLU, MatMul) on every
 //!   runtime, plus tiled Cholesky on the dataflow engine; all dataflow
 //!   drivers funnel through the generic kernel-table driver
-//!   [`apps::dataflow::run_dataflow`].
+//!   [`apps::dataflow::run_dataflow`] (one-shot hosts or the pool) and
+//!   gain batched entry points
+//!   (`sparselu_dataflow_batch`, `cholesky_dataflow_batch`,
+//!   `matmul_dataflow_batch`, generic
+//!   [`apps::dataflow::run_dataflow_batch`]) that overlap whole job
+//!   streams on one pool.
 //! * [`bench`] / [`harness`] — measurement harness and the per-figure
 //!   experiment drivers.
 //!
@@ -81,6 +91,27 @@
 //! DAG-vs-phase and steal-vs-mutex tables for both workloads); see
 //! DIVERGENCES.md for where this deliberately departs from the paper
 //! (the paper's GPRM is steal-free and SparseLU-only).
+//!
+//! # Persistent multi-job runtime
+//!
+//! The one-shot executors spawn a worker team per graph. The
+//! **pool** ([`sched::pool`]) inverts that ownership: one team for
+//! the process lifetime, many concurrent graphs — the service shape
+//! a stream of factorisation requests needs. `Pool::scope` /
+//! `PoolScope::submit` → `JobHandle::wait` is the client surface;
+//! deque entries are job-tagged `(slot, generation, task)` packings
+//! so stealing crosses job boundaries; admission is FIFO under a
+//! task-capacity budget (typed `SubmitError`, queued — never
+//! panicked or dropped — when the stream outruns capacity); a
+//! panicking task poisons only its own job. Every workload keeps its
+//! f32 bit-identity to the sequential reference under concurrency,
+//! because per-block operation order is fixed by the graph, not the
+//! schedule. The launch-cost comparison lives in
+//! [`tilesim::LaunchModel`] (`gprm exp throughput`,
+//! `benches/throughput.rs`: pool vs per-launch spawn on jobs/sec,
+//! 1.09×–2.3× at ≥4 workers on the 8-job mixed stream, widening with
+//! the team size); the CLI front end is `gprm sparselu --runtime
+//! pool --jobs N --app sparselu|cholesky|matmul|mixed`.
 // CI enforces `cargo clippy -- -D warnings`; these style lints are
 // opted out crate-wide because they fight the paper-faithful shapes:
 // index-heavy numeric kernels (the explicit loop bounds document the

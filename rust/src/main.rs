@@ -7,29 +7,38 @@
 //!   fig7; default: all, at `--scale 1.0` = paper scale).
 //! * `sparselu` — blocked factorisation on a real runtime (host
 //!   threads), optionally through the PJRT artifacts. `--app
-//!   sparselu|cholesky` selects the workload: the BOTS sparse LU or
-//!   tiled dense Cholesky, both scheduled by the same kernel-agnostic
-//!   dataflow engine.
+//!   sparselu|cholesky|matmul|mixed` selects the workload(s) on the
+//!   shared kernel-agnostic dataflow engine; `--runtime pool --jobs N`
+//!   runs N independent instances concurrently through one persistent
+//!   worker pool and reports jobs/sec.
 //! * `matmul` — the §V micro-benchmark on a real runtime.
 //! * `artifacts` — inspect the AOT artifact manifest / PJRT platform.
 
-use gprm::apps::cholesky::cholesky_dataflow;
-use gprm::apps::matmul::{MatmulApproach, MatmulExec};
+use gprm::apps::cholesky::{cholesky_dataflow, CHOLESKY_RUST_KERNELS};
+use gprm::apps::dataflow::{run_dataflow_batch, PoolJob};
+use gprm::apps::matmul::{
+    matmul_blocked_input, matmul_blocked_seq, matmul_extract_c,
+    MatmulApproach, MatmulExec, MATMUL_RUST_KERNELS,
+};
 use gprm::apps::sparselu::{
     sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuBackend,
-    LuRunConfig,
+    LuRunConfig, LU_RUST_KERNELS,
 };
 use gprm::coordinator::kernel::Registry;
+use gprm::linalg::blocked::BlockedSparseMatrix;
 use gprm::linalg::cholesky::{cholesky_seq, gen_spd, sym_dense};
+use gprm::linalg::dense::DenseMatrix;
 use gprm::linalg::verify::chol_residual_sparse;
 use gprm::coordinator::{GprmConfig, GprmRuntime};
 use gprm::harness::{run_experiment, Scale, ALL_EXPERIMENTS};
-use gprm::linalg::genmat::genmat;
+use gprm::linalg::genmat::{genmat, genmat_pattern};
 use gprm::linalg::lu::sparselu_seq;
 use gprm::linalg::verify::lu_residual_sparse;
 use gprm::omp::OmpRuntime;
 use gprm::runtime::{default_artifact_dir, EngineService, Manifest};
-use gprm::sched::{check_event_ordering, ExecOpts, ExecStats, TaskGraph};
+use gprm::sched::{
+    check_event_ordering, ExecOpts, ExecStats, Pool, PoolConfig, TaskGraph,
+};
 use gprm::util::cli::{usage, Args, OptSpec};
 
 fn main() {
@@ -57,8 +66,10 @@ fn print_help() {
         "gprm — reproduction of 'A Parallel Task-based Approach to Linear \
          Algebra' (ISPDC 2014)\n\n\
          USAGE:\n  gprm <exp|sparselu|matmul|artifacts> [options]\n\n\
-         `gprm sparselu --app sparselu|cholesky` selects the blocked\n\
-         factorisation workload (both run on the dataflow engine).\n\n\
+         `gprm sparselu --app sparselu|cholesky|matmul|mixed` selects\n\
+         the workload(s) on the shared dataflow engine;\n\
+         `--runtime pool --jobs N` overlaps N instances on one\n\
+         persistent worker pool.\n\n\
          Run `gprm <subcommand> --help` for details."
     );
 }
@@ -114,11 +125,12 @@ fn cmd_exp(argv: &[String]) -> i32 {
 
 fn cmd_sparselu(argv: &[String]) -> i32 {
     let specs = [
-        OptSpec { name: "app", help: "workload: sparselu | cholesky (cholesky: seq + dataflow runtimes, rust kernels only)", default: Some("sparselu"), is_flag: false },
+        OptSpec { name: "app", help: "workload: sparselu | cholesky | matmul | mixed (matmul/mixed: pool runtime only)", default: Some("sparselu"), is_flag: false },
         OptSpec { name: "nb", help: "blocks per dimension", default: Some("25"), is_flag: false },
         OptSpec { name: "bs", help: "block size", default: Some("16"), is_flag: false },
-        OptSpec { name: "runtime", help: "gprm | omp | seq | dataflow-omp | dataflow-gprm", default: Some("gprm"), is_flag: false },
-        OptSpec { name: "threads", help: "threads / concurrency level", default: Some("8"), is_flag: false },
+        OptSpec { name: "runtime", help: "gprm | omp | seq | dataflow-omp | dataflow-gprm | pool", default: Some("gprm"), is_flag: false },
+        OptSpec { name: "threads", help: "threads / concurrency level / pool workers", default: Some("8"), is_flag: false },
+        OptSpec { name: "jobs", help: "independent job instances through one persistent pool (pool runtime)", default: Some("1"), is_flag: false },
         OptSpec { name: "contiguous", help: "contiguous worksharing (gprm)", default: None, is_flag: true },
         OptSpec { name: "pjrt", help: "execute block kernels via PJRT artifacts (sparselu only)", default: None, is_flag: true },
         OptSpec { name: "pin", help: "pin gprm tiles to cores", default: None, is_flag: true },
@@ -154,13 +166,39 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
         }
     };
     let exec = ExecOpts { steal, record_events: args.has_flag("events") };
-    match args.get("app").unwrap_or("sparselu") {
+    let n_jobs = args.get_parse("jobs", 1usize).unwrap();
+    let app = args.get("app").unwrap_or("sparselu").to_string();
+    if runtime == "pool" || n_jobs > 1 {
+        if runtime != "pool" {
+            eprintln!("--jobs > 1 requires --runtime pool");
+            return 2;
+        }
+        if args.has_flag("pjrt") {
+            eprintln!("--pjrt is not supported on the pool runtime");
+            return 2;
+        }
+        if !steal || args.has_flag("events") {
+            eprintln!(
+                "--steal off / --events are one-shot executor options; \
+                 the pool always work-steals and records no event log"
+            );
+            return 2;
+        }
+        return run_pool_jobs(&app, nb, bs, threads, n_jobs.max(1));
+    }
+    match app.as_str() {
         "sparselu" => {}
         "cholesky" => {
             return run_cholesky_app(nb, bs, &runtime, threads, &args, exec)
         }
+        "matmul" | "mixed" => {
+            eprintln!("--app {app} requires --runtime pool");
+            return 2;
+        }
         other => {
-            eprintln!("--app must be sparselu|cholesky, got {other:?}");
+            eprintln!(
+                "--app must be sparselu|cholesky|matmul|mixed, got {other:?}"
+            );
             return 2;
         }
     }
@@ -353,6 +391,199 @@ fn cmd_artifacts(argv: &[String]) -> i32 {
             }
             0
         }
+    }
+}
+
+/// `--runtime pool`: run `n_jobs` independent instances of the
+/// selected workload (or an alternating SparseLU/Cholesky/MatMul
+/// stream for `--app mixed`) through **one** persistent worker pool.
+/// All jobs are submitted before any wait, so they overlap on the
+/// shared team (cross-job stealing included); every job's result is
+/// then verified bit-identically (f32) against its sequential
+/// reference, and throughput is reported in jobs/sec.
+fn run_pool_jobs(
+    app: &str,
+    nb: usize,
+    bs: usize,
+    threads: usize,
+    n_jobs: usize,
+) -> i32 {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Kind {
+        Lu,
+        Chol,
+        Mm,
+    }
+    if !matches!(app, "sparselu" | "cholesky" | "matmul" | "mixed") {
+        eprintln!("--app must be sparselu|cholesky|matmul|mixed, got {app:?}");
+        return 2;
+    }
+    let kinds: Vec<Kind> = (0..n_jobs)
+        .map(|i| match app {
+            "sparselu" => Kind::Lu,
+            "cholesky" => Kind::Chol,
+            "matmul" => Kind::Mm,
+            _ => [Kind::Lu, Kind::Chol, Kind::Mm][i % 3],
+        })
+        .collect();
+    let has = |k: Kind| kinds.contains(&k);
+    // One graph per workload kind present in the stream, shared by
+    // all its instances (nothing is built for absent kinds).
+    let lu_graph =
+        has(Kind::Lu).then(|| TaskGraph::sparselu(&genmat_pattern(nb), nb));
+    let ch_graph = has(Kind::Chol).then(|| TaskGraph::cholesky(nb));
+    let mm_graph = has(Kind::Mm).then(|| TaskGraph::matmul(nb));
+    // Sequential references (identical inputs per kind, so one
+    // reference verifies every instance bit-for-bit).
+    let mut lu_orig = None;
+    let mut lu_want = None;
+    if has(Kind::Lu) {
+        let mut w = genmat(nb, bs);
+        lu_orig = Some(w.to_dense());
+        sparselu_seq(&mut w);
+        lu_want = Some(w.to_dense());
+    }
+    let mut ch_orig = None;
+    let mut ch_want = None;
+    if has(Kind::Chol) {
+        let mut w = gen_spd(nb, bs);
+        ch_orig = Some(sym_dense(&w));
+        cholesky_seq(&mut w);
+        ch_want = Some(w.to_dense());
+    }
+    let mm_in = has(Kind::Mm).then(|| {
+        (
+            DenseMatrix::bots_random(nb * bs, nb * bs, 41),
+            DenseMatrix::bots_random(nb * bs, nb * bs, 42),
+        )
+    });
+    let mm_want = mm_in
+        .as_ref()
+        .map(|(a, b)| matmul_blocked_seq(a, b, nb, bs));
+    let mut mats: Vec<BlockedSparseMatrix> = kinds
+        .iter()
+        .map(|k| match k {
+            Kind::Lu => genmat(nb, bs),
+            Kind::Chol => gen_spd(nb, bs),
+            Kind::Mm => {
+                let (a, b) = mm_in.as_ref().unwrap();
+                matmul_blocked_input(a, b, nb, bs)
+            }
+        })
+        .collect();
+    // Kernel tables: the shared plain-rust statics (the pool runtime
+    // has no PJRT path).
+    // Pool sized from the submitted graphs' task counts, so the whole
+    // stream admits at once (full overlap) and deque overflow is
+    // impossible by construction.
+    let glen = |g: &Option<TaskGraph>| g.as_ref().unwrap().len();
+    let total_tasks: usize = kinds
+        .iter()
+        .map(|k| match k {
+            Kind::Lu => glen(&lu_graph),
+            Kind::Chol => glen(&ch_graph),
+            Kind::Mm => glen(&mm_graph),
+        })
+        .sum();
+    let pool = Pool::with_config(PoolConfig {
+        workers: threads,
+        task_capacity: total_tasks,
+        max_jobs: n_jobs,
+    });
+    println!(
+        "pool: {threads} workers, {n_jobs} {app} job(s), {total_tasks} \
+         tasks total (deque capacity {})",
+        pool.task_capacity()
+    );
+    let mut jobs: Vec<PoolJob> = mats
+        .iter_mut()
+        .zip(&kinds)
+        .map(|(a, k)| match k {
+            Kind::Lu => PoolJob {
+                a,
+                graph: lu_graph.as_ref().unwrap(),
+                kernels: &LU_RUST_KERNELS,
+            },
+            Kind::Chol => PoolJob {
+                a,
+                graph: ch_graph.as_ref().unwrap(),
+                kernels: &CHOLESKY_RUST_KERNELS,
+            },
+            Kind::Mm => PoolJob {
+                a,
+                graph: mm_graph.as_ref().unwrap(),
+                kernels: &MATMUL_RUST_KERNELS,
+            },
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let stats = match run_dataflow_batch(&pool, &mut jobs) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("pool submission failed: {e}");
+            return 1;
+        }
+    };
+    let dt = t0.elapsed();
+    drop(jobs);
+    // Verify every job bit-identically against its kind's reference.
+    let mut ok = true;
+    for (i, (m, k)) in mats.iter().zip(&kinds).enumerate() {
+        let pass = match k {
+            Kind::Lu => {
+                m.to_dense().as_slice()
+                    == lu_want.as_ref().unwrap().as_slice()
+            }
+            Kind::Chol => {
+                m.to_dense().as_slice()
+                    == ch_want.as_ref().unwrap().as_slice()
+            }
+            Kind::Mm => {
+                matmul_extract_c(m, nb).as_slice()
+                    == mm_want.as_ref().unwrap().as_slice()
+            }
+        };
+        if !pass {
+            eprintln!(
+                "job {i}: result differs from its sequential reference"
+            );
+            ok = false;
+        }
+    }
+    // Residual spot checks on the first instance of each
+    // factorisation kind (bit-identity already covers the rest).
+    let mut seen = (false, false);
+    for (m, k) in mats.iter().zip(&kinds) {
+        match k {
+            Kind::Lu if !seen.0 => {
+                seen.0 = true;
+                let r = lu_residual_sparse(lu_orig.as_ref().unwrap(), m);
+                println!("sparselu residual ‖A−LU‖/‖A‖ = {r:.2e}");
+                ok &= r < 1e-3;
+            }
+            Kind::Chol if !seen.1 => {
+                seen.1 = true;
+                let r = chol_residual_sparse(ch_orig.as_ref().unwrap(), m);
+                println!("cholesky residual ‖A−LLᵀ‖/‖A‖ = {r:.2e}");
+                ok &= r < 1e-3;
+            }
+            _ => {}
+        }
+    }
+    let total_exec: usize = stats.iter().map(|s| s.executed).sum();
+    println!(
+        "{n_jobs} jobs in {dt:.2?} ({:.1} jobs/s, {total_exec} tasks \
+         executed); bit-identity vs sequential references: {}",
+        n_jobs as f64 / dt.as_secs_f64(),
+        if ok { "all jobs PASS" } else { "FAIL" },
+    );
+    pool.shutdown();
+    if ok {
+        println!("verification PASS");
+        0
+    } else {
+        println!("verification FAIL");
+        1
     }
 }
 

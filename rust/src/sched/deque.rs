@@ -76,18 +76,31 @@ impl StealDeque {
     /// task (executor hang) or let a thief claim it twice (a data
     /// race on the block it writes). Executors size the deque to the
     /// whole task graph, so the branch never fires for them; the cost
-    /// is one cold compare per push.
+    /// is one cold compare per push. Callers that cannot statically
+    /// rule overflow out (the multi-job [`super::pool`]) use
+    /// [`Self::try_push`] and divert the task instead.
     pub fn push(&self, task: usize) {
-        let b = self.bottom.load(Ordering::Relaxed);
-        let t = self.top.load(Ordering::Acquire);
         assert!(
-            b - t <= self.mask,
+            self.try_push(task).is_ok(),
             "StealDeque over capacity: sized below graph length"
         );
+    }
+
+    /// Owner-only: push `task` at the bottom (LIFO end), or hand it
+    /// back if the deque is full — the lossless form of [`Self::push`]
+    /// (a task is never overwritten or dropped; the caller reroutes
+    /// it, e.g. to the pool's injector queue).
+    pub fn try_push(&self, task: usize) -> Result<(), usize> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b - t > self.mask {
+            return Err(task);
+        }
         self.slot(b).store(task, Ordering::Relaxed);
         // Publish the slot before the new bottom becomes visible.
         fence(Ordering::Release);
         self.bottom.store(b + 1, Ordering::Relaxed);
+        Ok(())
     }
 
     /// Owner-only: pop from the bottom (LIFO end).
@@ -186,6 +199,19 @@ mod tests {
         // Owner takes the newest, thief took the oldest.
         assert_eq!(d.pop(), Some(3));
         assert_eq!(d.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn try_push_full_hands_task_back() {
+        let d = StealDeque::with_capacity(2);
+        assert_eq!(d.try_push(1), Ok(()));
+        assert_eq!(d.try_push(2), Ok(()));
+        // Capacity 2: the third push must hand the task back losslessly.
+        assert_eq!(d.try_push(3), Err(3));
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.try_push(3), Ok(()));
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), Some(1));
     }
 
     #[test]

@@ -158,8 +158,11 @@ pub fn check_event_ordering(graph: &TaskGraph, events: &[Event]) -> Result<(), S
 /// yield the timeslice, then park on a bounded timer. Nobody ever
 /// unparks a worker — new work is discovered by re-scanning the
 /// deques, and termination by the `remaining` counter — so the park
-/// stage is a pure bounded nap, not a lost-wakeup hazard.
-struct Backoff {
+/// stage is a pure bounded nap, not a lost-wakeup hazard. (Also the
+/// busy-idle protocol of the persistent pool, [`super::pool`], which
+/// adds an unbounded park stage of its own for the jobless deep-idle
+/// state.)
+pub(crate) struct Backoff {
     fails: u32,
 }
 
@@ -168,15 +171,15 @@ impl Backoff {
     const YIELD_LIMIT: u32 = 16;
     const PARK_US: u64 = 50;
 
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self { fails: 0 }
     }
 
-    fn reset(&mut self) {
+    pub(crate) fn reset(&mut self) {
         self.fails = 0;
     }
 
-    fn idle(&mut self) {
+    pub(crate) fn idle(&mut self) {
         if self.fails < Self::SPIN_LIMIT {
             for _ in 0..(1u32 << self.fails) {
                 std::hint::spin_loop();

@@ -109,6 +109,19 @@ pub const CHOLESKY_OPS: &[OpSpec] = &[
     OpSpec { name: "gemm", flops: flops_gemm },
 ];
 
+/// Blocked-matmul op id into [`MATMUL_OPS`].
+pub const OP_MADD: OpId = OpId(0);
+
+fn flops_madd(bs: usize) -> u64 {
+    let b = bs as u64;
+    2 * b * b * b
+}
+
+/// The blocked-matmul kernel vocabulary: a single multiply-accumulate
+/// op (`C[i,j] += A[i,k]·B[k,j]` on `bs×bs` blocks).
+pub const MATMUL_OPS: &[OpSpec] =
+    &[OpSpec { name: "madd", flops: flops_madd }];
+
 /// One block task: an op id plus its block access sets. Every kernel
 /// in both workloads reads at most two blocks *besides* its write
 /// target and read-modify-writes exactly one block, so the read set is
@@ -243,6 +256,38 @@ impl TaskGraph {
             }
         }
         b.build(CHOLESKY_OPS)
+    }
+
+    /// Build the blocked dense matmul DAG `C = A·B` on an `nbc×nbc`
+    /// block grid — the paper's §V micro-benchmark workload ported
+    /// onto the dataflow engine so all three workloads share one
+    /// scheduling path (and can be mixed in a pool job stream).
+    ///
+    /// The three matrices are embedded in one `2·nbc`-wide block grid
+    /// so the access-set machinery applies unchanged: `C[i,j]` lives
+    /// at block `(i, j)`, `A[i,k]` at `(i, nbc+k)`, `B[k,j]` at
+    /// `(nbc+k, j)` (the fourth quadrant stays unallocated). Each task
+    /// is one multiply-accumulate `C[i,j] += A[i,k]·B[k,j]`; A/B
+    /// blocks are never written, so the only edges are the per-`C`-
+    /// block WAW/RAW chains over `k` — `nbc²` independent chains of
+    /// length `nbc`, reproducing the sequential accumulation order
+    /// bit-for-bit while exposing `nbc²`-way parallelism.
+    pub fn matmul(nbc: usize) -> Self {
+        assert!(nbc > 0);
+        let mut b = GraphBuilder::new(2 * nbc);
+        for kk in 0..nbc {
+            for ii in 0..nbc {
+                for jj in 0..nbc {
+                    b.add_task(
+                        OP_MADD,
+                        &[(ii, nbc + kk), (nbc + kk, jj)],
+                        (ii, jj),
+                        false,
+                    );
+                }
+            }
+        }
+        b.build(MATMUL_OPS)
     }
 
     pub fn nb(&self) -> usize {
@@ -603,6 +648,53 @@ mod tests {
     }
 
     #[test]
+    fn matmul_graph_shape() {
+        for nbc in [1usize, 2, 4, 6] {
+            let g = TaskGraph::matmul(nbc);
+            assert_eq!(g.nb(), 2 * nbc);
+            assert_eq!(g.len(), nbc * nbc * nbc, "one madd per (k,i,j)");
+            // k = 0 layer is the root front; every other task chains on
+            // the previous writer of its C block.
+            assert_eq!(g.roots().len(), nbc * nbc);
+            assert_eq!(g.n_edges(), nbc * nbc * (nbc - 1));
+            for t in 0..g.len() {
+                let task = *g.task(TaskId(t));
+                assert_eq!(task.op, OP_MADD);
+                // Write lands in the C quadrant, reads in A/B quadrants.
+                assert!(task.write.0 < nbc && task.write.1 < nbc);
+                let [a, b] = [task.reads()[0], task.reads()[1]];
+                assert!(a.0 < nbc && a.1 >= nbc, "A-quadrant read {a:?}");
+                assert!(b.0 >= nbc && b.1 < nbc, "B-quadrant read {b:?}");
+                assert!(g.preds(TaskId(t)).len() <= 1, "chains only");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_chains_preserve_accumulation_order() {
+        // Writers of each C block must form a k-ordered chain — the
+        // bit-identity guarantee for the dataflow matmul.
+        let nbc = 4;
+        let g = TaskGraph::matmul(nbc);
+        use std::collections::HashMap;
+        let mut writers: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        for t in 0..g.len() {
+            writers.entry(g.task(TaskId(t)).write).or_default().push(t);
+        }
+        assert_eq!(writers.len(), nbc * nbc);
+        for (blk, ws) in writers {
+            assert_eq!(ws.len(), nbc, "block {blk:?}");
+            for pair in ws.windows(2) {
+                assert_eq!(
+                    g.preds(TaskId(pair[1])),
+                    &[pair[0]],
+                    "writers of {blk:?} not chained"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn ops_tables_align_with_op_ids() {
         assert_eq!(LU_OPS[OP_LU0.0].name, "lu0");
         assert_eq!(LU_OPS[OP_FWD.0].name, "fwd");
@@ -616,5 +708,8 @@ mod tests {
         assert_eq!(g.ops()[g.task(TaskId(0)).op.0].name, "lu0");
         let c = TaskGraph::cholesky(1);
         assert_eq!(c.ops()[c.task(TaskId(0)).op.0].name, "potrf");
+        assert_eq!(MATMUL_OPS[OP_MADD.0].name, "madd");
+        let m = TaskGraph::matmul(1);
+        assert_eq!(m.ops()[m.task(TaskId(0)).op.0].name, "madd");
     }
 }

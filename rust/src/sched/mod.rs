@@ -21,19 +21,33 @@
 //!   slices — nothing allocates per executor launch.
 //! * [`deque`] — [`deque::StealDeque`]: a hand-rolled, fixed-capacity
 //!   Chase–Lev work-stealing deque (owner-LIFO / stealer-FIFO).
-//! * [`exec`] — the executors over both host runtimes
+//! * [`exec`] — the **one-shot** executors over both host runtimes
 //!   ([`exec::execute_omp_opts`], [`exec::execute_gprm_opts`]): the
 //!   lock-free work-stealing executor by default, the PR-1 mutex
 //!   scoreboard behind [`exec::ExecOpts`] as the measurable baseline,
 //!   and an opt-in event log for schedule-validity checks.
+//! * [`pool`] — the **persistent multi-job runtime**: one long-lived
+//!   worker team ([`pool::Pool`]) accepting concurrent job
+//!   submissions ([`pool::Pool::scope`] /
+//!   [`pool::PoolScope::submit`] → [`pool::JobHandle::wait`]).
+//!   Deque entries are job-tagged so workers steal across jobs;
+//!   admission is FIFO under a task-capacity budget (typed
+//!   [`pool::SubmitError`], never panic/drop); a panicking task
+//!   poisons only its own job; shutdown is graceful. This is the
+//!   service layer the one-shot executors lack: a stream of
+//!   factorisation requests shares one warm team and overlaps
+//!   independent DAGs.
 //!
-//! The simulator counterpart is [`crate::tilesim::sim_dataflow`]; the
-//! SparseLU driver wired to this scheduler is
-//! [`crate::apps::sparselu::sparselu_dataflow`].
+//! The simulator counterpart is [`crate::tilesim::sim_dataflow`]
+//! (including the pool-vs-one-shot launch models); the drivers wired
+//! to this scheduler are in [`crate::apps`]
+//! (`sparselu_dataflow`, `cholesky_dataflow`, `matmul_dataflow` and
+//! their `_batch` forms).
 
 pub mod deque;
 pub mod exec;
 pub mod graph;
+pub mod pool;
 
 pub use deque::{Steal, StealDeque};
 pub use exec::{
@@ -42,6 +56,7 @@ pub use exec::{
 };
 pub use graph::{
     GraphBuilder, OpId, OpSpec, Task, TaskGraph, TaskId, CHOLESKY_OPS,
-    LU_OPS, OP_BDIV, OP_BMOD, OP_FWD, OP_GEMM, OP_LU0, OP_POTRF, OP_SYRK,
-    OP_TRSM,
+    LU_OPS, MATMUL_OPS, OP_BDIV, OP_BMOD, OP_FWD, OP_GEMM, OP_LU0,
+    OP_MADD, OP_POTRF, OP_SYRK, OP_TRSM,
 };
+pub use pool::{JobHandle, Pool, PoolConfig, PoolScope, SubmitError};

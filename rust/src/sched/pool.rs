@@ -1,0 +1,1061 @@
+//! The persistent multi-job dataflow runtime: **one** long-lived
+//! worker pool executing **many** concurrent [`TaskGraph`]s.
+//!
+//! The one-shot executors ([`super::exec`]) spawn workers, drain a
+//! single graph, and join — which means a stream of factorisation
+//! requests pays full thread-team latency per request and can never
+//! overlap independent jobs. The GPRM companion paper
+//! (arXiv:1312.2703) instead keeps a *persistent* machine of
+//! communicating threads alive across requests, and the tiled-algorithm
+//! line (Buttari et al., arXiv:0709.1272) assumes a long-lived
+//! scheduler fed a stream of DAGs. [`Pool`] is that service:
+//!
+//! * **one worker team for the process lifetime** — spawned once, fed
+//!   jobs forever, with the same Chase–Lev deques
+//!   ([`super::deque::StealDeque`]) and atomic in-degree countdowns as
+//!   the one-shot executor;
+//! * **job-tagged tasks** — a deque entry packs `(slot, generation,
+//!   task)` into one `usize`, so workers steal across job boundaries
+//!   exactly like within a job: an idle worker finishing job A's tail
+//!   immediately picks up job B's tasks;
+//! * **fair admission** — submissions are admitted FIFO while the
+//!   in-flight task total fits the deque capacity; jobs that do not
+//!   fit yet queue (never panic, never drop) and are admitted as
+//!   running jobs retire. A job larger than the capacity itself is
+//!   rejected up front with the typed
+//!   [`SubmitError::GraphTooLarge`];
+//! * **per-job completion countdowns and poisoning** — a panicking
+//!   task poisons *its job only* (siblings of that job skip their
+//!   kernels, the countdown still drains, the waiter gets `Err`);
+//!   other jobs and the pool itself are untouched;
+//! * **graceful shutdown** — admitted jobs drain, queued jobs are
+//!   failed with a typed error, workers then exit and join.
+//!
+//! # Submission and borrow safety
+//!
+//! Workers are `'static` threads, but jobs borrow their graph, their
+//! matrix and their kernel closures from the caller's stack. The
+//! scoped API makes that sound the same way `std::thread::scope`
+//! does: [`Pool::scope`] hands out a [`PoolScope`] whose submissions
+//! may borrow anything outliving the scope (`'env`), and the scope
+//! **blocks at the end until every submitted job completed** — even
+//! if the caller never called [`JobHandle::wait`], leaked the handle,
+//! or panicked. Internally the erased closure is freed by the
+//! completing worker *before* the waiter is released, so no borrow is
+//! touched after `scope` returns.
+//!
+//! # Slot/generation protocol (why the hot path needs no lock)
+//!
+//! A deque entry's `(slot, generation)` prefix identifies the job in
+//! the pool's slot registry. The registry entry (an
+//! `Arc<JobInner>`) is cleared only at job completion — and a job
+//! cannot complete while any of its tasks sits unexecuted in a deque,
+//! because completion *is* the count of executed tasks reaching the
+//! graph size. A popped task therefore always resolves to the live
+//! job of its generation; each worker caches the `(slot, generation) →
+//! Arc` mapping so resolving costs one compare on the hot path and
+//! takes the slot mutex only on first contact with a job (the
+//! generation tag makes stale cache entries self-evident when a slot
+//! is recycled).
+//!
+//! The per-dependency happens-before contract of the one-shot
+//! executor is preserved verbatim: in-degree decrements `Release`, the
+//! zero-observer fences `Acquire`, and the deque/injector publish
+//! edges carry the predecessor's block writes to whichever worker —
+//! of whichever job — claims the successor (see the `SharedBlocked`
+//! `Sync` notes in `linalg/blocked.rs`).
+//!
+//! Schedule auditing (the opt-in event log) stays with the one-shot
+//! executors; the pool's hot path records only the per-job
+//! `executed`/`peak_ready` stats.
+
+use super::deque::{Steal, StealDeque};
+use super::exec::{Backoff, ExecStats};
+use super::graph::{TaskGraph, TaskId};
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{
+    fence, AtomicBool, AtomicUsize, Ordering,
+};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+// Packed deque entries need slot + generation + task in one usize.
+const _: () = assert!(usize::BITS >= 64, "pool task tags need 64-bit usize");
+
+/// Bit layout of a deque entry: `[slot:8][generation:32][task:24]`.
+const TASK_BITS: u32 = 24;
+const SLOT_SHIFT: u32 = 56;
+const TASK_MASK: usize = (1 << TASK_BITS) - 1;
+/// Hard ceiling on per-job task count (packing limit; the admission
+/// capacity is far below this in practice).
+pub const MAX_JOB_TASKS: usize = 1 << TASK_BITS;
+/// Hard ceiling on concurrently-admitted jobs (slot bits).
+pub const MAX_SLOTS: usize = 1 << (64 - SLOT_SHIFT);
+
+#[inline]
+fn pack_base(slot: usize, gen: u32) -> usize {
+    (slot << SLOT_SHIFT) | ((gen as usize) << TASK_BITS)
+}
+
+/// Why a submission was not accepted. Typed — capacity pressure never
+/// panics and never drops work (jobs that merely do not fit *yet* are
+/// queued, not errored).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The graph alone exceeds the pool's task capacity (or the
+    /// packing limit), so no amount of draining could ever admit it.
+    /// Resize the pool ([`PoolConfig::task_capacity`]) or split the
+    /// job.
+    GraphTooLarge { tasks: usize, capacity: usize },
+    /// [`Pool::shutdown`] already began; the pool accepts no new jobs.
+    ShutDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::GraphTooLarge { tasks, capacity } => write!(
+                f,
+                "graph of {tasks} tasks exceeds the pool task capacity \
+                 {capacity}"
+            ),
+            SubmitError::ShutDown => write!(f, "pool is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Pool sizing. The deques are fixed-capacity (the Chase–Lev resize
+/// path stays statically unreachable), so capacity is an admission
+/// budget: the sum of admitted-but-unfinished graphs' task counts
+/// never exceeds `task_capacity`, which is also each worker deque's
+/// size — overflow is impossible by admission control, and
+/// [`StealDeque::try_push`] diverts to the shared injector as a
+/// lossless backstop even so.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Worker threads (≥ 1).
+    pub workers: usize,
+    /// Max in-flight tasks across all admitted jobs; also each
+    /// deque's capacity. Size this from the graphs you will submit
+    /// (e.g. `jobs × graph.len()` for full overlap).
+    pub task_capacity: usize,
+    /// Max concurrently-admitted jobs (slot table size, ≤
+    /// [`MAX_SLOTS`]); further jobs queue.
+    pub max_jobs: usize,
+}
+
+impl PoolConfig {
+    /// Defaults sized for the evaluation workloads: 32 Ki in-flight
+    /// tasks, 64 concurrent jobs.
+    pub fn new(workers: usize) -> Self {
+        Self { workers, task_capacity: 1 << 15, max_jobs: 64 }
+    }
+}
+
+/// The erased per-job work: the graph borrow and the kernel-dispatch
+/// closure. Freed by the completing worker (or the shutdown path for
+/// never-admitted jobs) *before* the job's waiter is released, so the
+/// `'env` borrows inside never outlive their scope.
+struct JobWork {
+    /// Borrow of the submitted graph; valid until completion (the
+    /// scope blocks). Raw so a lingering worker cache entry after
+    /// completion holds no dangling reference.
+    graph: *const TaskGraph,
+    run: Box<dyn Fn(TaskId) + Send + Sync>,
+}
+
+/// One submitted job's shared state.
+struct JobInner {
+    /// `(slot, generation)` prefix of this job's packed task ids; set
+    /// at admission (under the admission lock, before any root is
+    /// published).
+    packed_base: AtomicUsize,
+    n_tasks: usize,
+    /// `Some` until completion; see [`JobWork`].
+    work: UnsafeCell<Option<JobWork>>,
+    /// Per-task countdown to readiness (same Release/Acquire contract
+    /// as the one-shot executor).
+    indegree: Box<[AtomicUsize]>,
+    /// Unexecuted-task count; the worker that brings it to zero
+    /// completes the job.
+    remaining: AtomicUsize,
+    /// Set by the first panicking task; later tasks of this job skip
+    /// their kernels but still drain the countdown.
+    poisoned: AtomicBool,
+    panic_msg: Mutex<Option<String>>,
+    /// Completion cell: `Some(result)` once finished; `cv` signals.
+    done: Mutex<Option<Result<ExecStats, String>>>,
+    cv: Condvar,
+    /// Ready-set stats (relaxed, approximate — like the one-shot
+    /// stealing executor's).
+    ready_len: AtomicUsize,
+    peak_ready: AtomicUsize,
+}
+
+// SAFETY: `work` holds a raw graph pointer and an erased closure whose
+// borrows are kept alive by the scope contract (PoolScope blocks until
+// completion). The cell itself is accessed (a) read-only by workers
+// while the job has unexecuted tasks, (b) exactly once mutably by the
+// single thread that observes `remaining` reach zero — ordered after
+// every reader by the AcqRel countdown — and (c) mutably on the
+// never-admitted shutdown path, where no worker ever saw the job.
+unsafe impl Send for JobInner {}
+unsafe impl Sync for JobInner {}
+
+impl JobInner {
+    /// SAFETY: caller must hold a popped-but-uncounted task of this
+    /// job, or otherwise know the job is not complete.
+    unsafe fn work_ref(&self) -> &JobWork {
+        (*self.work.get()).as_ref().expect("job work already freed")
+    }
+
+    fn finish(&self, result: Result<ExecStats, String>) {
+        let mut done = self.done.lock().unwrap();
+        debug_assert!(done.is_none(), "job finished twice");
+        *done = Some(result);
+        self.cv.notify_all();
+    }
+
+    fn wait_done(&self) -> Result<ExecStats, String> {
+        let mut done = self.done.lock().unwrap();
+        loop {
+            if let Some(r) = done.as_ref() {
+                return r.clone();
+            }
+            done = self.cv.wait(done).unwrap();
+        }
+    }
+}
+
+/// FIFO admission state.
+struct Admission {
+    /// Submitted jobs not yet admitted, in submission order.
+    pending: VecDeque<Arc<JobInner>>,
+    free_slots: Vec<usize>,
+    /// Next generation per slot (bumped on every registration).
+    next_gen: Vec<u32>,
+    /// Sum of admitted-but-unfinished graphs' task counts.
+    inflight: usize,
+    shutting_down: bool,
+}
+
+/// One slot of the job registry: the live job, if any.
+type SlotEntry = Mutex<Option<Arc<JobInner>>>;
+
+struct PoolShared {
+    deques: Box<[StealDeque]>,
+    /// Slot registry: the live job per slot (taken by workers on
+    /// cache miss; cleared at completion).
+    slots: Box<[SlotEntry]>,
+    /// Root-seeding queue: deques are owner-push-only, so admission
+    /// publishes a job's roots here; workers drain it between their
+    /// own pops and stealing. Also the lossless overflow backstop for
+    /// `try_push`.
+    injector: Mutex<VecDeque<usize>>,
+    /// Fast emptiness check so idle scans skip the injector lock.
+    injector_len: AtomicUsize,
+    adm: Mutex<Admission>,
+    shutdown: AtomicBool,
+    /// Admitted-but-unfinished job count; zero means workers may
+    /// deep-park (and, with `shutdown`, exit).
+    active_jobs: AtomicUsize,
+    /// Worker thread handles for deep-idle unparking.
+    threads: Mutex<Vec<std::thread::Thread>>,
+    task_capacity: usize,
+}
+
+impl PoolShared {
+    fn push_injector(&self, packed: usize) {
+        let mut inj = self.injector.lock().unwrap();
+        inj.push_back(packed);
+        self.injector_len.store(inj.len(), Ordering::Release);
+    }
+
+    fn pop_injector(&self) -> Option<usize> {
+        if self.injector_len.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let mut inj = self.injector.lock().unwrap();
+        let p = inj.pop_front();
+        self.injector_len.store(inj.len(), Ordering::Release);
+        p
+    }
+
+    /// One round of stealing: scan every other deque once, starting
+    /// after our own.
+    fn try_steal(&self, w: usize, n_workers: usize) -> Option<usize> {
+        for k in 1..n_workers {
+            match self.deques[(w + k) % n_workers].steal() {
+                Steal::Taken(t) => return Some(t),
+                Steal::Empty | Steal::Abort => {}
+            }
+        }
+        None
+    }
+
+    fn wake_all(&self) {
+        for th in self.threads.lock().unwrap().iter() {
+            th.unpark();
+        }
+    }
+
+    /// Admit pending jobs FIFO while a slot is free and the in-flight
+    /// task budget holds; seed their roots through the injector.
+    /// Head-of-line blocking is deliberate: admission order equals
+    /// submission order (fairness over packing).
+    fn try_admit(&self) {
+        let mut admitted_any = false;
+        let mut adm = self.adm.lock().unwrap();
+        loop {
+            let Some(head) = adm.pending.front() else { break };
+            let n = head.n_tasks;
+            if adm.free_slots.is_empty()
+                || adm.inflight + n > self.task_capacity
+            {
+                break;
+            }
+            let job = adm.pending.pop_front().unwrap();
+            let slot = adm.free_slots.pop().unwrap();
+            let gen = adm.next_gen[slot];
+            adm.next_gen[slot] = gen.wrapping_add(1);
+            adm.inflight += n;
+            let base = pack_base(slot, gen);
+            job.packed_base.store(base, Ordering::Release);
+            *self.slots[slot].lock().unwrap() = Some(job.clone());
+            self.active_jobs.fetch_add(1, Ordering::SeqCst);
+            // SAFETY: the job just got admitted — not complete.
+            let graph = unsafe { &*job.work_ref().graph };
+            let roots = graph.roots();
+            job.ready_len.store(roots.len(), Ordering::Relaxed);
+            job.peak_ready.store(roots.len(), Ordering::Relaxed);
+            {
+                let mut inj = self.injector.lock().unwrap();
+                for &t in roots {
+                    inj.push_back(base | t);
+                }
+                self.injector_len.store(inj.len(), Ordering::Release);
+            }
+            admitted_any = true;
+        }
+        drop(adm);
+        if admitted_any {
+            self.wake_all();
+        }
+    }
+
+    /// Called by the worker whose decrement drained the job: free the
+    /// borrowed work (before the waiter can return and end the
+    /// scope!), clear the slot, release the admission budget, signal
+    /// the waiter, then admit whatever now fits.
+    fn complete(&self, job: &JobInner) {
+        let base = job.packed_base.load(Ordering::Relaxed);
+        let slot = base >> SLOT_SHIFT;
+        // SAFETY: remaining reached zero — every task executed, and
+        // each execution happens-before the final AcqRel decrement, so
+        // no other thread touches the cell again.
+        unsafe {
+            *job.work.get() = None;
+        }
+        *self.slots[slot].lock().unwrap() = None;
+        {
+            let mut adm = self.adm.lock().unwrap();
+            adm.free_slots.push(slot);
+            adm.inflight -= job.n_tasks;
+        }
+        self.active_jobs.fetch_sub(1, Ordering::SeqCst);
+        let result = match job.panic_msg.lock().unwrap().take() {
+            Some(msg) => Err(msg),
+            None => Ok(ExecStats {
+                executed: job.n_tasks,
+                events: Vec::new(),
+                peak_ready: job.peak_ready.load(Ordering::Relaxed),
+            }),
+        };
+        job.finish(result);
+        self.try_admit();
+    }
+}
+
+/// Per-worker `(slot, generation) → job` cache (hot-path lock
+/// avoidance; see module docs).
+type JobCache = [Option<(usize, Arc<JobInner>)>];
+
+fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
+    }
+}
+
+fn run_one(
+    shared: &PoolShared,
+    me: &StealDeque,
+    cache: &mut JobCache,
+    packed: usize,
+) {
+    let slot = packed >> SLOT_SHIFT;
+    let base = packed & !TASK_MASK;
+    let task = packed & TASK_MASK;
+    let hit = matches!(&cache[slot], Some((b, _)) if *b == base);
+    if !hit {
+        let arc = shared.slots[slot]
+            .lock()
+            .unwrap()
+            .clone()
+            .expect("task popped for an unregistered job");
+        debug_assert_eq!(arc.packed_base.load(Ordering::Relaxed), base);
+        cache[slot] = Some((base, arc));
+    }
+    let job: &JobInner = &cache[slot].as_ref().unwrap().1;
+    // SAFETY: this task is popped but not yet counted, so the job
+    // cannot complete concurrently and the work cell is live.
+    let work = unsafe { job.work_ref() };
+    let graph = unsafe { &*work.graph };
+    job.ready_len.fetch_sub(1, Ordering::Relaxed);
+    if !job.poisoned.load(Ordering::Relaxed) {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (work.run)(TaskId(task))
+        }));
+        if let Err(e) = r {
+            // Poison the *job*, never the pool: siblings of this job
+            // skip their kernels, the countdown still drains (so the
+            // slot recycles and the waiter unblocks), and every other
+            // job is untouched.
+            let msg = panic_message(e);
+            let mut m = job.panic_msg.lock().unwrap();
+            if m.is_none() {
+                *m = Some(msg);
+            }
+            drop(m);
+            job.poisoned.store(true, Ordering::Release);
+        }
+    }
+    let mut batch_peak = 0usize;
+    for &s in graph.succs(TaskId(task)) {
+        // Release: our block writes become visible to whichever worker
+        // observes this counter reach zero (same contract as the
+        // one-shot executor).
+        if job.indegree[s].fetch_sub(1, Ordering::Release) == 1 {
+            fence(Ordering::Acquire);
+            let len = job.ready_len.fetch_add(1, Ordering::Relaxed) + 1;
+            batch_peak = batch_peak.max(len);
+            let p = base | s;
+            // Admission bounds in-flight tasks to the deque capacity,
+            // so the overflow arm is unreachable in practice; it stays
+            // lossless regardless (never panic, never drop).
+            if me.try_push(p).is_err() {
+                shared.push_injector(p);
+            }
+        }
+    }
+    if batch_peak > 0 {
+        job.peak_ready.fetch_max(batch_peak, Ordering::Relaxed);
+    }
+    if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        shared.complete(job);
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, w: usize) {
+    let me = &shared.deques[w];
+    let n_workers = shared.deques.len();
+    let mut cache: Vec<Option<(usize, Arc<JobInner>)>> =
+        (0..shared.slots.len()).map(|_| None).collect();
+    let mut backoff = Backoff::new();
+    loop {
+        let task = me
+            .pop()
+            .or_else(|| shared.pop_injector())
+            .or_else(|| shared.try_steal(w, n_workers));
+        match task {
+            Some(p) => {
+                backoff.reset();
+                run_one(&shared, me, &mut cache, p);
+            }
+            None => {
+                if shared.active_jobs.load(Ordering::SeqCst) == 0 {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    // Deep idle: no admitted job anywhere, so work can
+                    // only arrive through an admission, and admissions
+                    // unpark every worker after publishing the job —
+                    // the park token makes this check-then-park
+                    // lossless. A persistent pool must not burn CPU
+                    // between job bursts, so this park is unbounded.
+                    // It is also the moment to drop the cached job
+                    // Arcs: with no job active every entry is stale,
+                    // and a process-lifetime pool must not pin
+                    // completed jobs' countdown state while parked
+                    // (during a stream, staleness is bounded to one
+                    // completed job per slot until this lull).
+                    for c in cache.iter_mut() {
+                        *c = None;
+                    }
+                    std::thread::park();
+                    backoff.reset();
+                } else {
+                    backoff.idle();
+                }
+            }
+        }
+    }
+}
+
+/// The persistent worker pool. See module docs.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool with default capacities
+    /// ([`PoolConfig::new`]).
+    pub fn new(workers: usize) -> Self {
+        Self::with_config(PoolConfig::new(workers))
+    }
+
+    /// Spawn a pool with explicit sizing.
+    pub fn with_config(cfg: PoolConfig) -> Self {
+        assert!(cfg.workers >= 1, "pool needs at least one worker");
+        let max_jobs = cfg.max_jobs.clamp(1, MAX_SLOTS);
+        let cap = cfg.task_capacity.clamp(1, MAX_JOB_TASKS - 1);
+        let shared = Arc::new(PoolShared {
+            deques: (0..cfg.workers)
+                .map(|_| StealDeque::with_capacity(cap))
+                .collect(),
+            slots: (0..max_jobs).map(|_| Mutex::new(None)).collect(),
+            injector: Mutex::new(VecDeque::new()),
+            injector_len: AtomicUsize::new(0),
+            adm: Mutex::new(Admission {
+                pending: VecDeque::new(),
+                free_slots: (0..max_jobs).rev().collect(),
+                next_gen: vec![0; max_jobs],
+                inflight: 0,
+                shutting_down: false,
+            }),
+            shutdown: AtomicBool::new(false),
+            active_jobs: AtomicUsize::new(0),
+            threads: Mutex::new(Vec::new()),
+            task_capacity: cap,
+        });
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let sh = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pool-worker-{w}"))
+                    .spawn(move || worker_loop(sh, w))
+                    .expect("spawn pool worker"),
+            );
+        }
+        *shared.threads.lock().unwrap() =
+            handles.iter().map(|h| h.thread().clone()).collect();
+        // A submission may have raced the handle registration only in
+        // test-sized interleavings of this constructor's caller; no
+        // job can exist yet, so nothing to wake.
+        Self { shared, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn task_capacity(&self) -> usize {
+        self.shared.task_capacity
+    }
+
+    /// Admitted-but-unfinished jobs right now (racy; diagnostics).
+    pub fn active_jobs(&self) -> usize {
+        self.shared.active_jobs.load(Ordering::SeqCst)
+    }
+
+    /// Run `f` with a submission scope. Jobs submitted through the
+    /// scope may borrow anything that outlives `'env`; the scope
+    /// blocks until every one of them completed (even on leak or
+    /// panic), which is what makes the borrows sound — see module
+    /// docs.
+    pub fn scope<'env, R>(
+        &'env self,
+        f: impl FnOnce(&PoolScope<'_, 'env>) -> R,
+    ) -> R {
+        let scope = PoolScope {
+            pool: self,
+            jobs: Mutex::new(Vec::new()),
+            _env: PhantomData,
+        };
+        // The guard waits even when `f` unwinds.
+        struct Guard<'g>(&'g Mutex<Vec<Arc<JobInner>>>);
+        impl Drop for Guard<'_> {
+            fn drop(&mut self) {
+                for job in self.0.lock().unwrap().drain(..) {
+                    let _ = job.wait_done();
+                }
+            }
+        }
+        let guard = Guard(&scope.jobs);
+        let r = f(&scope);
+        drop(guard);
+        r
+    }
+
+    /// Submit-and-wait convenience for a single job.
+    pub fn run(
+        &self,
+        graph: &TaskGraph,
+        run: impl Fn(TaskId) + Send + Sync,
+    ) -> Result<ExecStats, String> {
+        self.scope(|s| {
+            s.submit(graph, run)
+                .map_err(|e| e.to_string())?
+                .wait()
+        })
+    }
+
+    /// Graceful shutdown: stop accepting jobs, fail anything still
+    /// queued, let admitted jobs drain, then join the workers. Also
+    /// runs on drop.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.handles.is_empty() {
+            return;
+        }
+        let failed: Vec<Arc<JobInner>> = {
+            let mut adm = self.shared.adm.lock().unwrap();
+            adm.shutting_down = true;
+            adm.pending.drain(..).collect()
+        };
+        for job in failed {
+            // SAFETY: drained from `pending` under the admission lock
+            // — never admitted, so no worker ever saw this job.
+            unsafe {
+                *job.work.get() = None;
+            }
+            job.finish(Err(SubmitError::ShutDown.to_string()));
+        }
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.wake_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Submission capability of one [`Pool::scope`] invocation.
+pub struct PoolScope<'p, 'env> {
+    pool: &'p Pool,
+    jobs: Mutex<Vec<Arc<JobInner>>>,
+    /// Invariant over `'env`, like `std::thread::Scope`.
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> PoolScope<'_, 'env> {
+    /// Submit `graph` for execution; `run` is invoked once per task
+    /// (from any worker, concurrently across tasks) exactly like the
+    /// one-shot executors' `run`. Returns immediately; the job runs
+    /// as capacity allows. Never blocks, never panics on capacity:
+    /// jobs that do not fit *yet* queue FIFO, only impossible jobs
+    /// are rejected.
+    pub fn submit(
+        &self,
+        graph: &'env TaskGraph,
+        run: impl Fn(TaskId) + Send + Sync + 'env,
+    ) -> Result<JobHandle, SubmitError> {
+        let shared = &self.pool.shared;
+        let n = graph.len();
+        if n > shared.task_capacity || n >= MAX_JOB_TASKS {
+            return Err(SubmitError::GraphTooLarge {
+                tasks: n,
+                capacity: shared.task_capacity.min(MAX_JOB_TASKS - 1),
+            });
+        }
+        // SAFETY (lifetime erasure): the scope blocks until this job
+        // completes, and `complete` frees the closure and graph borrow
+        // before releasing the waiter — so nothing borrowed is touched
+        // after `'env` ends. Same pattern as the host runtimes'
+        // region erasure (omp/runtime.rs, coordinator par_invoke).
+        let run: Box<dyn Fn(TaskId) + Send + Sync + 'env> = Box::new(run);
+        let run: Box<dyn Fn(TaskId) + Send + Sync + 'static> = unsafe {
+            std::mem::transmute::<
+                Box<dyn Fn(TaskId) + Send + Sync + 'env>,
+                Box<dyn Fn(TaskId) + Send + Sync + 'static>,
+            >(run)
+        };
+        let job = Arc::new(JobInner {
+            packed_base: AtomicUsize::new(0),
+            n_tasks: n,
+            work: UnsafeCell::new(Some(JobWork {
+                graph: graph as *const TaskGraph,
+                run,
+            })),
+            indegree: graph
+                .indegrees()
+                .iter()
+                .map(|&d| AtomicUsize::new(d))
+                .collect(),
+            remaining: AtomicUsize::new(n),
+            poisoned: AtomicBool::new(false),
+            panic_msg: Mutex::new(None),
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+            ready_len: AtomicUsize::new(0),
+            peak_ready: AtomicUsize::new(0),
+        });
+        if n == 0 {
+            // Degenerate empty graph: complete on the spot (no worker
+            // involvement, so free the work cell here).
+            unsafe {
+                *job.work.get() = None;
+            }
+            job.finish(Ok(ExecStats::default()));
+        } else {
+            {
+                let mut adm = shared.adm.lock().unwrap();
+                if adm.shutting_down {
+                    return Err(SubmitError::ShutDown);
+                }
+                adm.pending.push_back(job.clone());
+            }
+            shared.try_admit();
+        }
+        self.jobs.lock().unwrap().push(job.clone());
+        Ok(JobHandle { job })
+    }
+}
+
+/// Handle to one submitted job. Dropping it does **not** detach or
+/// cancel the job — the owning scope still waits for completion;
+/// `wait` just surfaces this job's result early.
+pub struct JobHandle {
+    job: Arc<JobInner>,
+}
+
+impl JobHandle {
+    /// Block until the job finishes; returns its stats, or the panic
+    /// message if the job was poisoned. Idempotent. Must not be
+    /// called from inside a pool task (the worker would wait on
+    /// itself).
+    pub fn wait(&self) -> Result<ExecStats, String> {
+        self.job.wait_done()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.job.done.lock().unwrap().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::genmat::genmat_pattern;
+    use crate::sched::GraphBuilder;
+    use std::sync::atomic::AtomicUsize;
+
+    fn lu_graph(nb: usize) -> TaskGraph {
+        TaskGraph::sparselu(&genmat_pattern(nb), nb)
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let base = pack_base(MAX_SLOTS - 1, u32::MAX);
+        let p = base | (MAX_JOB_TASKS - 1);
+        assert_eq!(p >> SLOT_SHIFT, MAX_SLOTS - 1);
+        assert_eq!(p & !TASK_MASK, base);
+        assert_eq!(p & TASK_MASK, MAX_JOB_TASKS - 1);
+        // No bit overlap between the three fields.
+        assert_eq!(pack_base(0, 0), 0);
+    }
+
+    #[test]
+    fn single_job_runs_every_task_once() {
+        let pool = Pool::new(4);
+        let g = lu_graph(8);
+        let hits: Vec<AtomicUsize> =
+            (0..g.len()).map(|_| AtomicUsize::new(0)).collect();
+        let stats = pool
+            .run(&g, |t| {
+                hits[t.0].fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        assert_eq!(stats.executed, g.len());
+        assert!(stats.events.is_empty());
+        assert!(stats.peak_ready >= 1);
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_survives_many_sequential_jobs() {
+        // The whole point: one spawn, many graphs.
+        let pool = Pool::new(3);
+        for nb in [2usize, 5, 8, 3, 6] {
+            let g = lu_graph(nb);
+            let n = AtomicUsize::new(0);
+            let stats = pool
+                .run(&g, |_| {
+                    n.fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
+            assert_eq!(stats.executed, g.len());
+            assert_eq!(n.load(Ordering::Relaxed), g.len());
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn concurrent_jobs_all_drain() {
+        let pool = Pool::new(4);
+        let graphs: Vec<TaskGraph> =
+            [4usize, 6, 8, 5, 7, 3, 9, 2].iter().map(|&nb| lu_graph(nb)).collect();
+        let counts: Vec<AtomicUsize> =
+            graphs.iter().map(|_| AtomicUsize::new(0)).collect();
+        pool.scope(|s| {
+            let handles: Vec<JobHandle> = graphs
+                .iter()
+                .zip(&counts)
+                .map(|(g, c)| {
+                    s.submit(g, move |_| {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    })
+                    .unwrap()
+                })
+                .collect();
+            for (h, g) in handles.iter().zip(&graphs) {
+                assert_eq!(h.wait().unwrap().executed, g.len());
+            }
+        });
+        for (c, g) in counts.iter().zip(&graphs) {
+            assert_eq!(c.load(Ordering::Relaxed), g.len());
+        }
+        assert_eq!(pool.active_jobs(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn scope_waits_even_without_explicit_wait() {
+        let pool = Pool::new(2);
+        let g = lu_graph(10);
+        let n = AtomicUsize::new(0);
+        pool.scope(|s| {
+            // Handle dropped immediately; scope end must still block
+            // until the job drained (this is the borrow-soundness
+            // contract).
+            let _ = s
+                .submit(&g, |_| {
+                    n.fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
+        });
+        assert_eq!(n.load(Ordering::Relaxed), g.len());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn graph_too_large_is_typed_and_harmless() {
+        let pool = Pool::with_config(PoolConfig {
+            workers: 2,
+            task_capacity: 10,
+            max_jobs: 4,
+        });
+        let big = lu_graph(8); // hundreds of tasks
+        let small = lu_graph(2);
+        pool.scope(|s| {
+            let err = s.submit(&big, |_| {}).unwrap_err();
+            assert_eq!(
+                err,
+                SubmitError::GraphTooLarge {
+                    tasks: big.len(),
+                    capacity: 10
+                }
+            );
+            assert!(err.to_string().contains("exceeds"));
+            // Pool still fully functional for jobs that fit.
+            let h = s.submit(&small, |_| {}).unwrap();
+            assert_eq!(h.wait().unwrap().executed, small.len());
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn over_capacity_jobs_queue_fifo_and_all_finish() {
+        // Capacity fits exactly one copy of the graph: three
+        // submissions must serialise through admission, not panic,
+        // not drop, not deadlock.
+        let g = lu_graph(6);
+        let pool = Pool::with_config(PoolConfig {
+            workers: 3,
+            task_capacity: g.len(),
+            max_jobs: 8,
+        });
+        let n = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let hs: Vec<JobHandle> = (0..3)
+                .map(|_| {
+                    s.submit(&g, |_| {
+                        n.fetch_add(1, Ordering::Relaxed);
+                    })
+                    .unwrap()
+                })
+                .collect();
+            for h in &hs {
+                assert_eq!(h.wait().unwrap().executed, g.len());
+            }
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 3 * g.len());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn slot_exhaustion_queues_and_recycles() {
+        // One slot: every job runs alone; generations must recycle
+        // the slot safely across many jobs.
+        let g = lu_graph(4);
+        let pool = Pool::with_config(PoolConfig {
+            workers: 2,
+            task_capacity: 1 << 12,
+            max_jobs: 1,
+        });
+        pool.scope(|s| {
+            let hs: Vec<JobHandle> =
+                (0..6).map(|_| s.submit(&g, |_| {}).unwrap()).collect();
+            for h in &hs {
+                assert_eq!(h.wait().unwrap().executed, g.len());
+            }
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn panic_poisons_only_its_job() {
+        let pool = Pool::new(4);
+        let g = lu_graph(8);
+        let ok_count = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let bad = s
+                .submit(&g, |t| {
+                    if t.0 == 3 {
+                        panic!("pool job exploded");
+                    }
+                })
+                .unwrap();
+            let good = s
+                .submit(&g, |_| {
+                    ok_count.fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
+            let e = bad.wait().unwrap_err();
+            assert!(e.contains("pool job exploded"), "{e}");
+            // Idempotent error.
+            assert!(bad.wait().is_err());
+            assert_eq!(good.wait().unwrap().executed, g.len());
+        });
+        assert_eq!(ok_count.load(Ordering::Relaxed), g.len());
+        // Pool survives for the next scope.
+        let n = AtomicUsize::new(0);
+        pool.run(&g, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(n.load(Ordering::Relaxed), g.len());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn deep_idle_pool_accepts_late_jobs() {
+        let pool = Pool::new(2);
+        let g = lu_graph(6);
+        pool.run(&g, |_| {}).unwrap();
+        // Let every worker reach the unbounded park.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let n = AtomicUsize::new(0);
+        pool.run(&g, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(n.load(Ordering::Relaxed), g.len());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn empty_graph_completes_immediately() {
+        let pool = Pool::new(1);
+        let g = GraphBuilder::new(1).build(crate::sched::LU_OPS);
+        assert_eq!(g.len(), 0);
+        pool.scope(|s| {
+            let h = s.submit(&g, |_| unreachable!()).unwrap();
+            assert!(h.is_done());
+            assert_eq!(h.wait().unwrap().executed, 0);
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_pending_jobs_with_typed_message() {
+        // Fill the single slot with a long job, queue another, then
+        // drop the pool from a second thread while the scope waits:
+        // the pending job must fail (not hang). Easier deterministic
+        // variant: mark shutting_down first, then submit.
+        let pool = Pool::new(2);
+        let g = lu_graph(4);
+        pool.shared.adm.lock().unwrap().shutting_down = true;
+        pool.scope(|s| {
+            let err = s.submit(&g, |_| {}).unwrap_err();
+            assert_eq!(err, SubmitError::ShutDown);
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn cross_job_stealing_spreads_work() {
+        // Two single-root jobs on four workers: tasks are pushed to
+        // the running worker's own deque, so with slow kernels more
+        // than one thread can only be busy via (cross-job) stealing.
+        let pool = Pool::new(4);
+        let g1 = lu_graph(10);
+        let g2 = lu_graph(10);
+        let threads = Mutex::new(std::collections::HashSet::new());
+        let slow = |_: TaskId| {
+            for _ in 0..5_000 {
+                std::hint::spin_loop();
+            }
+            threads.lock().unwrap().insert(std::thread::current().id());
+        };
+        pool.scope(|s| {
+            let a = s.submit(&g1, &slow).unwrap();
+            let b = s.submit(&g2, &slow).unwrap();
+            a.wait().unwrap();
+            b.wait().unwrap();
+        });
+        assert!(
+            threads.lock().unwrap().len() > 1,
+            "only one worker ever ran a task — stealing is dead"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let pool = Pool::new(3);
+        let g = lu_graph(5);
+        pool.run(&g, |_| {}).unwrap();
+        drop(pool); // must join without hanging
+    }
+}

@@ -72,6 +72,18 @@ pub struct CostModel {
     /// One successful steal: `SeqCst` CAS on a remote deque's `top`
     /// plus the cache-line transfer across the mesh.
     pub steal_cost: f64,
+
+    // --- Job-launch costs (multi-job model) --------------------------
+    /// Per-worker cost of spawning **and** joining one host thread for
+    /// a one-shot executor launch (`clone`/futex round trips, stack
+    /// setup, first-touch faults — ~52 µs at 866 MHz, the Linux
+    /// pthread ballpark). A one-shot launch pays this once per
+    /// worker per job; the persistent pool never pays it again after
+    /// startup.
+    pub thread_spawn: f64,
+    /// Client-side cost of one pool submission (admission lock, root
+    /// seeding through the injector, worker wakeup).
+    pub pool_submit: f64,
 }
 
 impl Default for CostModel {
@@ -94,6 +106,8 @@ impl Default for CostModel {
             gprm_task_fire: 60.0,
             steal_deque_op: 25.0,
             steal_cost: 220.0,
+            thread_spawn: 45_000.0,
+            pool_submit: 500.0,
         }
     }
 }
@@ -159,6 +173,16 @@ mod tests {
         );
         // GPRM per-iteration cost must be negligible vs the job.
         assert!((c.gprm_iter_check as u64) * 100 < job);
+    }
+
+    #[test]
+    fn launch_cost_calibration() {
+        // One one-shot launch spawns a whole team; a pool submission
+        // is orders of magnitude cheaper than even one thread spawn,
+        // while still dearer than a steal (it takes locks).
+        let c = CostModel::default();
+        assert!(c.thread_spawn > 50.0 * c.pool_submit);
+        assert!(c.pool_submit > c.steal_cost);
     }
 
     #[test]

@@ -27,11 +27,14 @@
 //!   `omp for` (static / dynamic) and single-producer tasking with a
 //!   contended central queue, plus the cutoff variant.
 //! * [`sim_dataflow`] — virtual-time list scheduling of *any*
-//!   [`crate::sched`] dependence DAG (SparseLU, Cholesky, …): no phase
-//!   barriers; isolates what the level-synchronous models pay for
-//!   theirs, and models both executor claim-cost regimes (mutex
+//!   [`crate::sched`] dependence DAG (SparseLU, Cholesky, matmul, …):
+//!   no phase barriers; isolates what the level-synchronous models pay
+//!   for theirs, and models both executor claim-cost regimes (mutex
 //!   scoreboard vs lock-free work stealing with a per-steal mesh
-//!   penalty).
+//!   penalty) **and** both job-launch regimes
+//!   ([`sim_dataflow::LaunchModel`]: one persistent pool shared by a
+//!   whole job stream, with cross-job stealing, vs serial one-shot
+//!   executor launches each paying a worker-team spawn).
 //!
 //! All simulators share [`cost::CostModel`] and the memory-bandwidth
 //! ceiling, so who-wins comparisons are apples to apples.
@@ -46,7 +49,7 @@ pub mod workload;
 
 pub use cost::CostModel;
 pub use mesh::Mesh;
-pub use sim_dataflow::{DataflowSim, SchedModel};
+pub use sim_dataflow::{DataflowSim, LaunchModel, SchedModel};
 pub use sim_gprm::{GprmAssign, GprmSim};
 pub use sim_omp::{OmpSim, OmpStrategy};
 pub use workload::{Phase, SimTask, Workload};

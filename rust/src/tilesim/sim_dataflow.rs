@@ -51,6 +51,23 @@ pub enum SchedModel {
     WorkSteal,
 }
 
+/// How a *stream of jobs* reaches the workers — the launch-cost model
+/// behind the `throughput` experiment and `benches/throughput.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaunchModel {
+    /// One persistent pool (`sched::pool::Pool`): the client submits
+    /// each job serially at [`CostModel::pool_submit`] cycles apiece,
+    /// all jobs share the tile team from t≈0, and a task dispatched
+    /// to a tile other than the one that made it ready pays the usual
+    /// steal — whether the readying task belonged to the same job or
+    /// not (cross-job stealing is priced identically to within-job).
+    PersistentPool,
+    /// The pre-pool regime: one one-shot executor per job, run
+    /// serially, each paying `n_tiles ×` [`CostModel::thread_spawn`]
+    /// before its graph even starts.
+    OneShotPerJob,
+}
+
 /// DAG-scheduling machine simulator.
 pub struct DataflowSim {
     /// Physical tiles.
@@ -172,6 +189,132 @@ impl DataflowSim {
         let cycles = makespan.max(self.cost.mem_floor(total_bytes));
         SimReport { cycles, tasks: fired, busy, lock_wait, producer: 0 }
     }
+
+    /// Schedule a **stream of jobs** — `(graph, bs)` pairs over
+    /// independent matrices — under the given launch model. This is
+    /// the virtual-time counterpart of
+    /// [`crate::apps::dataflow::run_dataflow_batch`]
+    /// (`PersistentPool`) vs a loop of fresh executor launches
+    /// (`OneShotPerJob`); the gap between the two is exactly what the
+    /// `throughput` experiment measures.
+    pub fn run_jobs(
+        &self,
+        jobs: &[(&TaskGraph, usize)],
+        launch: LaunchModel,
+    ) -> SimReport {
+        match launch {
+            LaunchModel::OneShotPerJob => self.run_jobs_one_shot(jobs),
+            LaunchModel::PersistentPool => self.run_jobs_pool(jobs),
+        }
+    }
+
+    /// Serial one-shot launches: per job, a full worker-team spawn +
+    /// join, then the single-graph schedule. Totals are sums.
+    fn run_jobs_one_shot(&self, jobs: &[(&TaskGraph, usize)]) -> SimReport {
+        let spawn =
+            (self.n_tiles as f64 * self.cost.thread_spawn) as u64;
+        let mut cycles = 0u64;
+        let mut tasks = 0u64;
+        let mut lock_wait = 0u64;
+        let mut busy = vec![0u64; self.n_tiles];
+        for &(graph, bs) in jobs {
+            let r = self.run_graph(graph, bs);
+            cycles += spawn + r.cycles;
+            tasks += r.tasks;
+            lock_wait += r.lock_wait;
+            for (acc, b) in busy.iter_mut().zip(&r.busy) {
+                *acc += *b;
+            }
+        }
+        SimReport { cycles, tasks, busy, lock_wait, producer: 0 }
+    }
+
+    /// Merged list schedule of all jobs on one tile team: job `j`'s
+    /// roots become ready once the client's serial submissions reach
+    /// it (`(j+1) × pool_submit`), each job tracks locality in its own
+    /// directory (independent matrices), and the shared-DRAM floor
+    /// applies to the total traffic. Roots are seeded round-robin with
+    /// a per-job offset, mirroring the pool's injector draining across
+    /// idle workers.
+    fn run_jobs_pool(&self, jobs: &[(&TaskGraph, usize)]) -> SimReport {
+        assert!(self.n_tiles >= 1);
+        let dispatch =
+            (self.cost.gprm_packet + self.cost.gprm_task_fire) as u64;
+        let mut dirs: Vec<Directory> = Vec::with_capacity(jobs.len());
+        let mut indeg: Vec<Vec<usize>> = Vec::with_capacity(jobs.len());
+        let mut home: Vec<Vec<usize>> = Vec::with_capacity(jobs.len());
+        let mut finish: Vec<Vec<u64>> = Vec::with_capacity(jobs.len());
+        let mut task_tile: Vec<Vec<usize>> = Vec::with_capacity(jobs.len());
+        // Ready tasks, earliest ready-time first; ties broken by
+        // (job, task) id for determinism.
+        let mut ready: BinaryHeap<Reverse<(u64, usize, usize)>> =
+            BinaryHeap::new();
+        for (j, &(graph, bs)) in jobs.iter().enumerate() {
+            let nb = graph.nb();
+            dirs.push(Directory::new(nb * nb, (bs * bs * 4) as u64));
+            indeg.push(graph.indegrees().to_vec());
+            home.push(vec![0usize; graph.len()]);
+            finish.push(vec![0u64; graph.len()]);
+            task_tile.push(vec![0usize; graph.len()]);
+            let submit = (j + 1) as u64 * self.cost.pool_submit as u64;
+            for (i, &t) in graph.roots().iter().enumerate() {
+                home[j][t] = (i + j) % self.n_tiles;
+                ready.push(Reverse((submit, j, t)));
+            }
+        }
+        let mut tiles: BinaryHeap<Reverse<(u64, usize)>> =
+            (0..self.n_tiles).map(|t| Reverse((0u64, t))).collect();
+        let mut busy = vec![0u64; self.n_tiles];
+        let mut total_bytes = 0u64;
+        let mut makespan = 0u64;
+        let mut fired = 0u64;
+        let mut lock_wait = 0u64;
+        while let Some(Reverse((ready_t, j, t))) = ready.pop() {
+            let Reverse((avail, tile)) = tiles.pop().expect("tile pool");
+            let sched = match self.sched {
+                SchedModel::MutexScoreboard => {
+                    let c = 2 * self.cost.lock_op(self.n_tiles - 1);
+                    lock_wait += c;
+                    c
+                }
+                SchedModel::WorkSteal => {
+                    let stolen = tile != home[j][t];
+                    self.cost.steal_deque_op as u64
+                        + if stolen { self.cost.steal_cost as u64 } else { 0 }
+                }
+            };
+            let (graph, bs) = jobs[j];
+            let st =
+                dag_sim_task(graph.task(TaskId(t)), graph.ops(), graph.nb(), bs, 0);
+            let work = self.cost.work(st.flops);
+            let extra = dirs[j].access(&self.cost, &self.mesh, tile, &st);
+            let end = ready_t.max(avail) + dispatch + sched + work + extra;
+            finish[j][t] = end;
+            task_tile[j][t] = tile;
+            busy[tile] += work;
+            total_bytes += st.mem_bytes;
+            fired += 1;
+            makespan = makespan.max(end);
+            tiles.push(Reverse((end, tile)));
+            for &s in graph.succs(TaskId(t)) {
+                indeg[j][s] -= 1;
+                if indeg[j][s] == 0 {
+                    let (r, rp) = graph
+                        .preds(TaskId(s))
+                        .iter()
+                        .map(|&p| (finish[j][p], p))
+                        .max()
+                        .unwrap_or((0, t));
+                    home[j][s] = task_tile[j][rp];
+                    ready.push(Reverse((r, j, s)));
+                }
+            }
+        }
+        let n_total: usize = jobs.iter().map(|&(g, _)| g.len()).sum();
+        debug_assert_eq!(fired as usize, n_total, "job stream not drained");
+        let cycles = makespan.max(self.cost.mem_floor(total_bytes));
+        SimReport { cycles, tasks: fired, busy, lock_wait, producer: 0 }
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +433,143 @@ mod tests {
             .map(|p| p.task_count() as u64)
             .sum();
         assert_eq!(dag.tasks, phase_tasks);
+    }
+
+    /// The bench/experiment job stream: 8 mixed jobs (SparseLU and
+    /// Cholesky alternating) on an NB×NB grid of 16×16 blocks.
+    fn mixed_stream(nb: usize) -> (TaskGraph, TaskGraph) {
+        (TaskGraph::sparselu(&genmat_pattern(nb), nb), TaskGraph::cholesky(nb))
+    }
+
+    fn as_jobs<'g>(
+        lu: &'g TaskGraph,
+        ch: &'g TaskGraph,
+        bs: usize,
+        n_jobs: usize,
+    ) -> Vec<(&'g TaskGraph, usize)> {
+        (0..n_jobs)
+            .map(|i| (if i % 2 == 0 { lu } else { ch }, bs))
+            .collect()
+    }
+
+    #[test]
+    fn single_job_pool_is_one_run_plus_submit() {
+        // With one job the merged schedule degenerates to run_graph
+        // shifted by exactly one pool_submit (config chosen so the
+        // memory floor is not binding).
+        let (nb, bs) = (12, 8);
+        let sim = DataflowSim::tilepro(4);
+        let solo = sim.run_sparselu(nb, bs);
+        let graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+        let pool =
+            sim.run_jobs(&[(&graph, bs)], LaunchModel::PersistentPool);
+        assert_eq!(
+            pool.cycles,
+            solo.cycles + CostModel::default().pool_submit as u64
+        );
+        assert_eq!(pool.tasks, solo.tasks);
+    }
+
+    #[test]
+    fn one_shot_is_sum_of_launches() {
+        let (nb, bs) = (12, 8);
+        let sim = DataflowSim::tilepro(4);
+        let graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+        let solo = sim.run_graph(&graph, bs);
+        let jobs = [(&graph, bs), (&graph, bs), (&graph, bs)];
+        let serial = sim.run_jobs(&jobs, LaunchModel::OneShotPerJob);
+        let spawn = (4.0 * CostModel::default().thread_spawn) as u64;
+        assert_eq!(serial.cycles, 3 * (spawn + solo.cycles));
+        assert_eq!(serial.tasks, 3 * solo.tasks);
+    }
+
+    #[test]
+    fn pool_beats_one_shot_launches_at_scale() {
+        // The tentpole's acceptance criterion in virtual time: on the
+        // 8-job mixed stream (NB=16, BS=16) the persistent pool beats
+        // serial one-shot launches on jobs/sec from 4 workers up
+        // (1.09x-2.3x, thresholds from the python port of this
+        // model), and never loses below that.
+        let (lu, ch) = mixed_stream(16);
+        let jobs = as_jobs(&lu, &ch, 16, 8);
+        let mut last_gain = 0.0f64;
+        for tiles in [1usize, 2, 4, 8, 16] {
+            let sim = DataflowSim::tilepro(tiles);
+            let pool = sim.run_jobs(&jobs, LaunchModel::PersistentPool);
+            let oneshot = sim.run_jobs(&jobs, LaunchModel::OneShotPerJob);
+            let gain = oneshot.cycles as f64 / pool.cycles as f64;
+            if tiles >= 4 {
+                assert!(
+                    gain > 1.05,
+                    "{tiles} tiles: pool {} must beat one-shot {} (gain {gain:.3})",
+                    pool.cycles,
+                    oneshot.cycles
+                );
+            } else {
+                assert!(gain > 0.98, "{tiles} tiles: gain {gain:.3}");
+            }
+            // Spawn cost scales with the team, so the gain widens.
+            assert!(
+                gain > last_gain,
+                "{tiles} tiles: gain {gain:.3} must widen (prev {last_gain:.3})"
+            );
+            last_gain = gain;
+            assert_eq!(pool.tasks, oneshot.tasks);
+        }
+    }
+
+    #[test]
+    fn pool_overlap_beats_serial_even_without_spawn_cost() {
+        // Cross-job overlap is a real win, not just spawn-cost
+        // amortisation: the merged schedule beats even a zero-cost
+        // serial loop of run_graph calls once there are enough
+        // workers to leave phase-tail gaps to fill (>= 4 workers:
+        // 1.02x-1.58x in the python port).
+        let (lu, ch) = mixed_stream(16);
+        let jobs = as_jobs(&lu, &ch, 16, 8);
+        for tiles in [4usize, 8, 16] {
+            let sim = DataflowSim::tilepro(tiles);
+            let pool = sim.run_jobs(&jobs, LaunchModel::PersistentPool);
+            let serial: u64 =
+                jobs.iter().map(|&(g, bs)| sim.run_graph(g, bs).cycles).sum();
+            let overlap = serial as f64 / pool.cycles as f64;
+            assert!(
+                overlap > 1.01,
+                "{tiles} tiles: overlap gain {overlap:.3} (pool {}, serial {serial})",
+                pool.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn pool_stream_conserves_work() {
+        let (lu, ch) = mixed_stream(12);
+        let jobs = as_jobs(&lu, &ch, 8, 6);
+        let sim = DataflowSim::tilepro(8);
+        let pool = sim.run_jobs(&jobs, LaunchModel::PersistentPool);
+        let expect_tasks: u64 =
+            jobs.iter().map(|&(g, _)| g.len() as u64).sum();
+        assert_eq!(pool.tasks, expect_tasks);
+        let busy: u64 = pool.busy.iter().sum();
+        let solo_busy: u64 = jobs
+            .iter()
+            .map(|&(g, bs)| sim.run_graph(g, bs).busy.iter().sum::<u64>())
+            .sum();
+        assert_eq!(busy, solo_busy, "merged schedule must conserve flops");
+        // Makespan at least the per-tile work share.
+        assert!(pool.cycles >= busy / 8);
+    }
+
+    #[test]
+    fn matmul_stream_runs_on_the_same_machinery() {
+        // The third workload rides the identical multi-job model.
+        let mm = TaskGraph::matmul(6);
+        let jobs = [(&mm, 16usize), (&mm, 16usize)];
+        let sim = DataflowSim::tilepro(8);
+        let pool = sim.run_jobs(&jobs, LaunchModel::PersistentPool);
+        assert_eq!(pool.tasks, 2 * mm.len() as u64);
+        let oneshot = sim.run_jobs(&jobs, LaunchModel::OneShotPerJob);
+        assert!(pool.cycles < oneshot.cycles);
     }
 
     #[test]

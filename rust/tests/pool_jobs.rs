@@ -1,0 +1,298 @@
+//! Concurrent-submission stress tests for the persistent multi-job
+//! pool (`sched::pool`): ≥8 mixed SparseLU/Cholesky jobs race through
+//! ONE pool — under randomized kernel spins so claim/steal/park and
+//! cross-job interleavings vary wildly — and every job's matrix must
+//! come out **bit-identical** (f32) to its sequential reference, with
+//! no deadlock (a stuck pool hangs the test). Admission is stressed
+//! too: the capacity is set so only part of the stream fits at once,
+//! forcing FIFO queuing, and one test drives three successive waves
+//! through the same pool to exercise slot recycling and deep-idle
+//! parking between waves.
+
+use gprm::apps::cholesky::CHOLESKY_RUST_KERNELS;
+use gprm::apps::dataflow::{run_dataflow_batch, BlockKernel, PoolJob};
+use gprm::apps::matmul::{
+    matmul_blocked_input, matmul_blocked_seq, matmul_extract_c,
+    MATMUL_RUST_KERNELS,
+};
+use gprm::apps::sparselu::LU_RUST_KERNELS;
+use gprm::linalg::blocked::BlockedSparseMatrix;
+use gprm::linalg::cholesky::{
+    cholesky_seq, gemm_nt, gen_spd, potrf, syrk, trsm,
+};
+use gprm::linalg::dense::DenseMatrix;
+use gprm::linalg::genmat::{genmat, genmat_pattern};
+use gprm::linalg::lu::{bdiv, bmod, fwd, lu0, sparselu_seq};
+use gprm::sched::{Pool, PoolConfig, TaskGraph};
+use gprm::testkit::{check, Triple, UsizeRange};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Cheap deterministic spin: xorshift a counter with the case seed
+/// into a busy-wait length, so schedules differ run to run and case
+/// to case.
+fn spin_for(x: usize, seed: usize) {
+    let mut v = (x as u64)
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        .wrapping_add(seed as u64 | 1);
+    v ^= v >> 12;
+    v ^= v << 25;
+    v ^= v >> 27;
+    for _ in 0..(v % 2_000) as u32 {
+        std::hint::spin_loop();
+    }
+}
+
+#[test]
+fn stress_concurrent_mixed_jobs_bit_identical() {
+    // The satellite's acceptance test: 8 mixed jobs (4 SparseLU + 4
+    // Cholesky, alternating) through one pool whose capacity only
+    // fits about half the stream (queued admission in every case),
+    // with randomized kernel spins. Per-job f32 bit-identity against
+    // the sequential references, every case.
+    check(
+        "pool-mixed-stress",
+        20,
+        &Triple(UsizeRange(3, 13), UsizeRange(1, 9), UsizeRange(0, 1 << 16)),
+        |&(nb, workers, seed)| {
+            let bs = 4 + (seed % 4); // bs ∈ [4, 7]
+            let mut lu_want = genmat(nb, bs);
+            sparselu_seq(&mut lu_want);
+            let lu_want = lu_want.to_dense();
+            let mut ch_want = gen_spd(nb, bs);
+            cholesky_seq(&mut ch_want);
+            let ch_want = ch_want.to_dense();
+
+            let lu_graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+            let ch_graph = TaskGraph::cholesky(nb);
+            let mut mats: Vec<BlockedSparseMatrix> = (0..8)
+                .map(|i| {
+                    if i % 2 == 0 { genmat(nb, bs) } else { gen_spd(nb, bs) }
+                })
+                .collect();
+
+            let ctr = AtomicUsize::new(0);
+            let sp = || spin_for(ctr.fetch_add(1, Ordering::Relaxed), seed);
+            let k_lu0 = |_: &[&[f32]], w: &mut [f32], bs: usize| {
+                sp();
+                lu0(w, bs)
+            };
+            let k_fwd = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+                sp();
+                fwd(r[0], w, bs)
+            };
+            let k_bdiv = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+                sp();
+                bdiv(r[0], w, bs)
+            };
+            let k_bmod = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+                sp();
+                bmod(r[0], r[1], w, bs)
+            };
+            let lu_kernels: [BlockKernel; 4] =
+                [&k_lu0, &k_fwd, &k_bdiv, &k_bmod];
+            let k_potrf = |_: &[&[f32]], w: &mut [f32], bs: usize| {
+                sp();
+                potrf(w, bs)
+            };
+            let k_trsm = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+                sp();
+                trsm(r[0], w, bs)
+            };
+            let k_syrk = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+                sp();
+                syrk(r[0], w, bs)
+            };
+            let k_gemm = |r: &[&[f32]], w: &mut [f32], bs: usize| {
+                sp();
+                gemm_nt(r[0], r[1], w, bs)
+            };
+            let ch_kernels: [BlockKernel; 4] =
+                [&k_potrf, &k_trsm, &k_syrk, &k_gemm];
+
+            // Half-stream capacity: forces FIFO queuing, never drops.
+            let total = 4 * (lu_graph.len() + ch_graph.len());
+            let cap = (total / 2).max(lu_graph.len().max(ch_graph.len()));
+            let pool = Pool::with_config(PoolConfig {
+                workers,
+                task_capacity: cap,
+                max_jobs: 8,
+            });
+            let mut jobs: Vec<PoolJob> = mats
+                .iter_mut()
+                .enumerate()
+                .map(|(i, a)| {
+                    if i % 2 == 0 {
+                        PoolJob { a, graph: &lu_graph, kernels: &lu_kernels }
+                    } else {
+                        PoolJob { a, graph: &ch_graph, kernels: &ch_kernels }
+                    }
+                })
+                .collect();
+            let stats = run_dataflow_batch(&pool, &mut jobs)
+                .map_err(|e| e.to_string())?;
+            drop(jobs);
+            for (i, s) in stats.iter().enumerate() {
+                let want =
+                    if i % 2 == 0 { lu_graph.len() } else { ch_graph.len() };
+                if s.executed != want {
+                    return Err(format!(
+                        "job {i}: executed {} of {want}",
+                        s.executed
+                    ));
+                }
+            }
+            for (i, m) in mats.iter().enumerate() {
+                let want = if i % 2 == 0 { &lu_want } else { &ch_want };
+                if m.to_dense().as_slice() != want.as_slice() {
+                    return Err(format!(
+                        "job {i} not bit-identical to its sequential \
+                         reference (nb={nb} bs={bs} workers={workers})"
+                    ));
+                }
+            }
+            pool.shutdown();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stress_three_waves_through_one_pool() {
+    // Persistence across bursts: three successive 8-job waves reuse
+    // one pool (slot recycling, deep-idle park between waves), each
+    // wave fully verified.
+    check(
+        "pool-wave-stress",
+        8,
+        &Triple(UsizeRange(3, 10), UsizeRange(2, 9), UsizeRange(0, 1 << 16)),
+        |&(nb, workers, seed)| {
+            let bs = 4 + (seed % 4);
+            let mut lu_want = genmat(nb, bs);
+            sparselu_seq(&mut lu_want);
+            let lu_want = lu_want.to_dense();
+            let mut ch_want = gen_spd(nb, bs);
+            cholesky_seq(&mut ch_want);
+            let ch_want = ch_want.to_dense();
+            let lu_graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+            let ch_graph = TaskGraph::cholesky(nb);
+            let pool = Pool::new(workers);
+            for wave in 0..3 {
+                let mut mats: Vec<BlockedSparseMatrix> = (0..8)
+                    .map(|i| {
+                        if i % 2 == 0 {
+                            genmat(nb, bs)
+                        } else {
+                            gen_spd(nb, bs)
+                        }
+                    })
+                    .collect();
+                let mut jobs: Vec<PoolJob> = mats
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(i, a)| {
+                        if i % 2 == 0 {
+                            PoolJob {
+                                a,
+                                graph: &lu_graph,
+                                kernels: &LU_RUST_KERNELS,
+                            }
+                        } else {
+                            PoolJob {
+                                a,
+                                graph: &ch_graph,
+                                kernels: &CHOLESKY_RUST_KERNELS,
+                            }
+                        }
+                    })
+                    .collect();
+                run_dataflow_batch(&pool, &mut jobs)
+                    .map_err(|e| e.to_string())?;
+                drop(jobs);
+                for (i, m) in mats.iter().enumerate() {
+                    let want = if i % 2 == 0 { &lu_want } else { &ch_want };
+                    if m.to_dense().as_slice() != want.as_slice() {
+                        return Err(format!(
+                            "wave {wave} job {i} not bit-identical"
+                        ));
+                    }
+                }
+                if wave == 1 {
+                    // Let the workers reach the deep-idle park before
+                    // the next wave hits the injector.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+            pool.shutdown();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn all_three_workloads_share_one_pool() {
+    // 12-job stream mixing SparseLU, Cholesky AND the blocked matmul:
+    // the engine is kernel-agnostic, so one pool serves all three,
+    // each bit-identical to its own sequential reference.
+    let (nb, bs) = (6usize, 5usize);
+    let mut lu_want = genmat(nb, bs);
+    sparselu_seq(&mut lu_want);
+    let lu_want = lu_want.to_dense();
+    let mut ch_want = gen_spd(nb, bs);
+    cholesky_seq(&mut ch_want);
+    let ch_want = ch_want.to_dense();
+    let mm_a = DenseMatrix::bots_random(nb * bs, nb * bs, 91);
+    let mm_b = DenseMatrix::bots_random(nb * bs, nb * bs, 92);
+    let mm_want = matmul_blocked_seq(&mm_a, &mm_b, nb, bs);
+
+    let lu_graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+    let ch_graph = TaskGraph::cholesky(nb);
+    let mm_graph = TaskGraph::matmul(nb);
+    let mut mats: Vec<BlockedSparseMatrix> = (0..12)
+        .map(|i| match i % 3 {
+            0 => genmat(nb, bs),
+            1 => gen_spd(nb, bs),
+            _ => matmul_blocked_input(&mm_a, &mm_b, nb, bs),
+        })
+        .collect();
+    let pool = Pool::new(4);
+    let mut jobs: Vec<PoolJob> = mats
+        .iter_mut()
+        .enumerate()
+        .map(|(i, a)| match i % 3 {
+            0 => PoolJob { a, graph: &lu_graph, kernels: &LU_RUST_KERNELS },
+            1 => PoolJob {
+                a,
+                graph: &ch_graph,
+                kernels: &CHOLESKY_RUST_KERNELS,
+            },
+            _ => PoolJob {
+                a,
+                graph: &mm_graph,
+                kernels: &MATMUL_RUST_KERNELS,
+            },
+        })
+        .collect();
+    let stats = run_dataflow_batch(&pool, &mut jobs).unwrap();
+    assert_eq!(stats.len(), 12);
+    drop(jobs);
+    for (i, m) in mats.iter().enumerate() {
+        match i % 3 {
+            0 => assert_eq!(
+                m.to_dense().as_slice(),
+                lu_want.as_slice(),
+                "sparselu job {i}"
+            ),
+            1 => assert_eq!(
+                m.to_dense().as_slice(),
+                ch_want.as_slice(),
+                "cholesky job {i}"
+            ),
+            _ => assert_eq!(
+                matmul_extract_c(m, nb).as_slice(),
+                mm_want.as_slice(),
+                "matmul job {i}"
+            ),
+        }
+    }
+    pool.shutdown();
+}
