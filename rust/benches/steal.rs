@@ -1,23 +1,23 @@
 //! Bench: mutex-scoreboard vs lock-free work-stealing executor on the
 //! Fig-6 workload shape (NB=32, BS=16) at 1/2/4/8/16 workers — for
-//! **both** engine workloads (SparseLU and tiled Cholesky; the engine
-//! is kernel-agnostic, so the race uses identical machinery). Reports
-//! tasks/sec and GFLOP/s (flops via each graph's op table), host
-//! wall-clock on the omp runtime plus the tilesim claim-cost models,
-//! appended as JSON rows to `BENCH_sched.json` with a `workload` field
-//! (the committed baseline rows were produced by the tilesim model;
-//! machines with real cores append `host-wall-clock` rows next to
-//! them).
+//! **every workload in the registry** (`sched::workload::registry`):
+//! the engine is kernel-agnostic, so the race uses identical
+//! machinery and adding a workload adds a table here with zero bench
+//! edits. Reports tasks/sec and GFLOP/s (flops via each graph's op
+//! table), host wall-clock on the omp runtime plus the tilesim
+//! claim-cost models, appended as JSON rows to `BENCH_sched.json`
+//! with a `workload` field (the committed baseline rows were produced
+//! by the tilesim model; machines with real cores append
+//! `host-wall-clock` rows next to them).
 //!
 //! `cargo bench --bench steal`
 
-use gprm::apps::cholesky::cholesky_dataflow;
-use gprm::apps::sparselu::{sparselu_dataflow, DataflowRt, LuRunConfig};
-use gprm::linalg::cholesky::gen_spd;
-use gprm::linalg::genmat::{genmat, genmat_pattern};
+use gprm::apps::dataflow::{run_workload, DataflowRt};
+use gprm::linalg::blocked::BlockedSparseMatrix;
 use gprm::omp::OmpRuntime;
+use gprm::sched::workload::{registry, Params, Workload};
 use gprm::sched::{ExecOpts, TaskGraph};
-use gprm::tilesim::{CostModel, DataflowSim, SchedModel, SimReport};
+use gprm::tilesim::{CostModel, DataflowSim, SchedModel};
 use std::io::Write as _;
 
 const NB: usize = 32;
@@ -57,18 +57,19 @@ fn graph_flops(graph: &TaskGraph, bs: usize) -> u64 {
         .sum()
 }
 
-/// Race mutex vs steal for one workload: tilesim model rows + host
-/// wall-clock rows. `host_once` runs one full factorisation on a
-/// fresh input and returns the seconds spent in the factorisation
-/// alone (input cloning excluded from the timed region). Returns true
-/// if stealing lost anywhere at >= 4 workers (host rows).
+/// Race mutex vs steal for one registry entry: tilesim model rows +
+/// host wall-clock rows (whole dataflow runs on fresh clones of the
+/// declaration's canonical input; cloning is excluded from the timed
+/// region). Returns true if stealing lost anywhere at >= 4 workers
+/// (host rows).
 fn bench_workload(
-    workload: &'static str,
+    w: &'static dyn Workload,
+    p: &Params,
     graph: &TaskGraph,
-    sim: &dyn Fn(usize, SchedModel) -> SimReport,
-    host_once: &dyn Fn(&OmpRuntime, ExecOpts) -> f64,
+    input: &BlockedSparseMatrix,
     rows: &mut Vec<Row>,
 ) -> bool {
+    let workload = w.name();
     let n_tasks = graph.len();
     let total_flops = graph_flops(graph, BS);
     println!(
@@ -77,35 +78,45 @@ fn bench_workload(
     );
     let hz = CostModel::default().clock_hz;
     println!("== tilesim model (virtual time @866 MHz) ==");
-    for &w in &WORKERS {
+    for &workers in &WORKERS {
         for (name, sched) in [
             ("mutex", SchedModel::MutexScoreboard),
             ("steal", SchedModel::WorkSteal),
         ] {
-            let r = sim(w, sched);
+            let r = DataflowSim::with_sched(workers, sched)
+                .run_workload(w, p);
             let secs = r.cycles as f64 / hz;
             let row = Row {
                 workload,
                 source: "tilesim-model",
-                workers: w,
+                workers,
                 exec: name,
                 secs,
                 tasks_per_sec: n_tasks as f64 / secs,
                 gflops: total_flops as f64 / secs / 1e9,
             };
             println!(
-                "  {name:>5} @{w:>2} workers: {secs:>8.4}s  {:>9.0} tasks/s  {:>6.3} GFLOP/s",
+                "  {name:>5} @{workers:>2} workers: {secs:>8.4}s  {:>9.0} tasks/s  {:>6.3} GFLOP/s",
                 row.tasks_per_sec, row.gflops
             );
             rows.push(row);
         }
     }
 
-    // Host wall-clock: whole dataflow factorisations, best of SAMPLES.
+    // Host wall-clock: whole dataflow runs, best of SAMPLES.
     const SAMPLES: usize = 5;
+    let host_once = |rt: &OmpRuntime, exec: ExecOpts| -> f64 {
+        let mut a = input.deep_clone();
+        let t0 = std::time::Instant::now();
+        run_workload(&DataflowRt::Omp(rt), w, &mut a, exec)
+            .expect("bench dataflow run failed");
+        let secs = t0.elapsed().as_secs_f64();
+        gprm::bench::black_box(a.allocated_blocks());
+        secs
+    };
     println!("== host wall-clock (omp-backed dataflow driver) ==");
-    for &w in &WORKERS {
-        let rt = OmpRuntime::new(w);
+    for &workers in &WORKERS {
+        let rt = OmpRuntime::new(workers);
         for (name, exec) in [
             ("mutex", ExecOpts::mutex_baseline()),
             ("steal", ExecOpts::default()),
@@ -118,14 +129,14 @@ fn bench_workload(
             let row = Row {
                 workload,
                 source: "host-wall-clock",
-                workers: w,
+                workers,
                 exec: name,
                 secs: best,
                 tasks_per_sec: n_tasks as f64 / best,
                 gflops: total_flops as f64 / best / 1e9,
             };
             println!(
-                "  {name:>5} @{w:>2} workers: {best:>8.4}s  {:>9.0} tasks/s  {:>6.3} GFLOP/s",
+                "  {name:>5} @{workers:>2} workers: {best:>8.4}s  {:>9.0} tasks/s  {:>6.3} GFLOP/s",
                 row.tasks_per_sec, row.gflops
             );
             rows.push(row);
@@ -136,13 +147,13 @@ fn bench_workload(
     // Acceptance: work stealing must win on tasks/sec at >= 4 workers
     // (host rows; the tilesim rows assert the same in unit tests).
     let mut failed = false;
-    for &w in WORKERS.iter().filter(|&&w| w >= 4) {
+    for &workers in WORKERS.iter().filter(|&&workers| workers >= 4) {
         let tps = |exec: &str| {
             rows.iter()
                 .find(|r| {
                     r.workload == workload
                         && r.source == "host-wall-clock"
-                        && r.workers == w
+                        && r.workers == workers
                         && r.exec == exec
                 })
                 .map(|r| r.tasks_per_sec)
@@ -151,7 +162,7 @@ fn bench_workload(
         let (m, s) = (tps("mutex"), tps("steal"));
         failed |= s <= m;
         println!(
-            "  @{w} workers: steal/mutex = {:.2}x {}",
+            "  @{workers} workers: steal/mutex = {:.2}x {}",
             s / m,
             if s > m { "PASS" } else { "FAIL" }
         );
@@ -160,50 +171,20 @@ fn bench_workload(
 }
 
 fn main() {
+    let p = Params::new(NB, BS);
     let mut rows: Vec<Row> = Vec::new();
     let mut failed = false;
 
-    // SparseLU — the original acceptance workload.
-    let lu_graph = TaskGraph::sparselu(&genmat_pattern(NB), NB);
-    let a0 = genmat(NB, BS);
-    failed |= bench_workload(
-        "sparselu",
-        &lu_graph,
-        &|w, sched| DataflowSim::with_sched(w, sched).run_sparselu(NB, BS),
-        &|rt, exec| {
-            let mut a = a0.deep_clone();
-            let cfg = LuRunConfig { exec, ..Default::default() };
-            let t0 = std::time::Instant::now();
-            sparselu_dataflow(&DataflowRt::Omp(rt), &mut a, &cfg);
-            let secs = t0.elapsed().as_secs_f64();
-            gprm::bench::black_box(a.allocated_blocks());
-            secs
-        },
-        &mut rows,
-    );
-
-    // Cholesky — the second workload on the same engine; same race.
-    let chol_graph = TaskGraph::cholesky(NB);
-    let c0 = gen_spd(NB, BS);
-    failed |= bench_workload(
-        "cholesky",
-        &chol_graph,
-        &|w, sched| DataflowSim::with_sched(w, sched).run_cholesky(NB, BS),
-        &|rt, exec| {
-            let mut a = c0.deep_clone();
-            let t0 = std::time::Instant::now();
-            cholesky_dataflow(&DataflowRt::Omp(rt), &mut a, exec);
-            let secs = t0.elapsed().as_secs_f64();
-            gprm::bench::black_box(a.allocated_blocks());
-            secs
-        },
-        &mut rows,
-    );
+    // Every registered workload races on the identical machinery.
+    for w in registry() {
+        let graph = w.graph(&p);
+        let input = w.make_input(&p, 0);
+        failed |= bench_workload(*w, &p, &graph, &input, &mut rows);
+    }
 
     // Append all rows to the repo-root BENCH_sched.json (JSON lines;
-    // the committed file carries the tilesim baseline rows for both
-    // workloads). Anchored via the manifest dir — `cargo bench` runs
-    // with cwd = rust/.
+    // the committed file carries the tilesim baseline rows). Anchored
+    // via the manifest dir — `cargo bench` runs with cwd = rust/.
     let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
     let path = manifest
         .parent()

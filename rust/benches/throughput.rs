@@ -1,27 +1,27 @@
-//! Bench: multi-job throughput — a stream of 8 mixed jobs (4×
-//! SparseLU + 4× tiled Cholesky, alternating, NB=16/BS=16) pushed
-//! through ONE persistent pool (`sched::pool::Pool`, jobs submitted
-//! before any wait, cross-job stealing) vs the pre-pool regime of one
-//! one-shot executor launch per job (a fresh `OmpRuntime` team
-//! spawned and joined around every factorisation). Reports jobs/sec
-//! and tasks/sec from both the tilesim launch models
-//! (`LaunchModel::{PersistentPool, OneShotPerJob}`) and host
-//! wall-clock, appending JSON rows to `BENCH_sched.json` (the
+//! Bench: multi-job throughput — a stream of 8 mixed jobs
+//! (NB=16/BS=16) pushed through ONE persistent pool
+//! (`sched::pool::Pool`, jobs submitted before any wait, cross-job
+//! stealing) vs the pre-pool regime of one one-shot executor launch
+//! per job (a fresh `OmpRuntime` team spawned and joined around every
+//! job). The stream composition is derived from the **workload
+//! registry**: it cycles the phase-capable (factorisation) entries —
+//! SparseLU and Cholesky alternating at the current registry, exactly
+//! the committed `mixed8` baseline — so the bench never names a
+//! workload. Reports jobs/sec and tasks/sec from both the tilesim
+//! launch models (`LaunchModel::{PersistentPool, OneShotPerJob}`) and
+//! host wall-clock, appending JSON rows to `BENCH_sched.json` (the
 //! committed baseline rows were produced by the tilesim model).
 //!
 //! `cargo bench --bench throughput`
 
-use gprm::apps::cholesky::{cholesky_dataflow, CHOLESKY_RUST_KERNELS};
-use gprm::apps::dataflow::{run_dataflow_batch, PoolJob};
-use gprm::apps::sparselu::{
-    sparselu_dataflow, DataflowRt, LuRunConfig, LU_RUST_KERNELS,
+use gprm::apps::dataflow::{
+    run_dataflow_batch, run_workload, DataflowRt, PoolJob,
 };
 use gprm::linalg::blocked::BlockedSparseMatrix;
-use gprm::linalg::cholesky::gen_spd;
-use gprm::linalg::genmat::{genmat, genmat_pattern};
 use gprm::omp::OmpRuntime;
+use gprm::sched::workload::{registry, Params, Workload};
 use gprm::sched::{ExecOpts, Pool, PoolConfig, TaskGraph};
-use gprm::tilesim::{CostModel, DataflowSim, LaunchModel};
+use gprm::tilesim::{CostModel, DataflowSim, LaunchModel, SimJob};
 use std::io::Write as _;
 
 const NB: usize = 16;
@@ -51,32 +51,25 @@ impl Row {
     }
 }
 
+/// One kind of the mixed stream: the registry entry, its canonical
+/// input and the matching graph.
+struct Kind {
+    w: &'static dyn Workload,
+    input: BlockedSparseMatrix,
+    graph: TaskGraph,
+}
+
 /// One timed pass of the whole stream through a warm persistent pool.
-fn host_pool_once(
-    pool: &Pool,
-    lu_graph: &TaskGraph,
-    ch_graph: &TaskGraph,
-    lu0_mat: &BlockedSparseMatrix,
-    ch0_mat: &BlockedSparseMatrix,
-) -> f64 {
+fn host_pool_once(pool: &Pool, kinds: &[Kind]) -> f64 {
     let mut mats: Vec<BlockedSparseMatrix> = (0..N_JOBS)
-        .map(|i| {
-            if i % 2 == 0 { lu0_mat.deep_clone() } else { ch0_mat.deep_clone() }
-        })
+        .map(|i| kinds[i % kinds.len()].input.deep_clone())
         .collect();
     let mut jobs: Vec<PoolJob> = mats
         .iter_mut()
         .enumerate()
         .map(|(i, a)| {
-            if i % 2 == 0 {
-                PoolJob { a, graph: lu_graph, kernels: &LU_RUST_KERNELS }
-            } else {
-                PoolJob {
-                    a,
-                    graph: ch_graph,
-                    kernels: &CHOLESKY_RUST_KERNELS,
-                }
-            }
+            let k = &kinds[i % kinds.len()];
+            PoolJob { a, graph: &k.graph, kernels: k.w.kernels() }
         })
         .collect();
     let t0 = std::time::Instant::now();
@@ -93,28 +86,20 @@ fn host_pool_once(
 /// executors: every job pays a fresh team spawn + join. Input clones
 /// happen before the clock starts, exactly like the pool pass, so
 /// the regimes differ only in how jobs reach workers.
-fn host_one_shot_once(
-    workers: usize,
-    lu0_mat: &BlockedSparseMatrix,
-    ch0_mat: &BlockedSparseMatrix,
-) -> f64 {
+fn host_one_shot_once(workers: usize, kinds: &[Kind]) -> f64 {
     let mut inputs: Vec<BlockedSparseMatrix> = (0..N_JOBS)
-        .map(|i| {
-            if i % 2 == 0 { lu0_mat.deep_clone() } else { ch0_mat.deep_clone() }
-        })
+        .map(|i| kinds[i % kinds.len()].input.deep_clone())
         .collect();
     let t0 = std::time::Instant::now();
     for (i, a) in inputs.iter_mut().enumerate() {
         let rt = OmpRuntime::new(workers);
-        if i % 2 == 0 {
-            sparselu_dataflow(
-                &DataflowRt::Omp(&rt),
-                a,
-                &LuRunConfig::default(),
-            );
-        } else {
-            cholesky_dataflow(&DataflowRt::Omp(&rt), a, ExecOpts::default());
-        }
+        run_workload(
+            &DataflowRt::Omp(&rt),
+            kinds[i % kinds.len()].w,
+            a,
+            ExecOpts::default(),
+        )
+        .expect("one-shot run failed");
         gprm::bench::black_box(a.allocated_blocks());
         rt.shutdown();
     }
@@ -122,17 +107,35 @@ fn host_one_shot_once(
 }
 
 fn main() {
-    let lu_graph = TaskGraph::sparselu(&genmat_pattern(NB), NB);
-    let ch_graph = TaskGraph::cholesky(NB);
-    let n_tasks = (N_JOBS / 2) * (lu_graph.len() + ch_graph.len());
-    let sim_jobs: Vec<(&TaskGraph, usize)> = (0..N_JOBS)
-        .map(|i| (if i % 2 == 0 { &lu_graph } else { &ch_graph }, BS))
+    let p = Params::new(NB, BS);
+    // The stream cycles the registry's phase-capable entries.
+    let kinds: Vec<Kind> = registry()
+        .iter()
+        .copied()
+        .filter(|w| w.phases(&p).is_some())
+        .map(|w| {
+            let input = w.make_input(&p, 0);
+            let graph = w.graph_for(&input);
+            Kind { w, input, graph }
+        })
+        .collect();
+    assert!(!kinds.is_empty(), "registry has no phase-capable entries");
+    let n_tasks: usize =
+        (0..N_JOBS).map(|i| kinds[i % kinds.len()].graph.len()).sum();
+    let sim_jobs: Vec<SimJob> = (0..N_JOBS)
+        .map(|i| {
+            let k = &kinds[i % kinds.len()];
+            SimJob { workload: k.w, graph: &k.graph, bs: BS }
+        })
         .collect();
     println!(
-        "### mixed{N_JOBS} NB={NB} BS={BS} — {n_tasks} tasks \
-         ({} sparselu + {} cholesky per stream)",
-        lu_graph.len() * N_JOBS / 2,
-        ch_graph.len() * N_JOBS / 2,
+        "### mixed{N_JOBS} NB={NB} BS={BS} — {n_tasks} tasks (stream \
+         cycles: {})",
+        kinds
+            .iter()
+            .map(|k| k.w.name())
+            .collect::<Vec<_>>()
+            .join(", ")
     );
     let mut rows: Vec<Row> = Vec::new();
     let hz = CostModel::default().clock_hz;
@@ -162,8 +165,6 @@ fn main() {
     }
 
     const SAMPLES: usize = 5;
-    let lu0_mat = genmat(NB, BS);
-    let ch0_mat = gen_spd(NB, BS);
     println!("== host wall-clock (pool vs per-launch omp team) ==");
     let mut failed = false;
     for &w in &WORKERS {
@@ -174,14 +175,11 @@ fn main() {
         });
         let mut best = [f64::MAX; 2];
         // Warmups, then best-of-SAMPLES for each regime.
-        host_pool_once(&pool, &lu_graph, &ch_graph, &lu0_mat, &ch0_mat);
-        host_one_shot_once(w, &lu0_mat, &ch0_mat);
+        host_pool_once(&pool, &kinds);
+        host_one_shot_once(w, &kinds);
         for _ in 0..SAMPLES {
-            best[0] = best[0].min(host_pool_once(
-                &pool, &lu_graph, &ch_graph, &lu0_mat, &ch0_mat,
-            ));
-            best[1] =
-                best[1].min(host_one_shot_once(w, &lu0_mat, &ch0_mat));
+            best[0] = best[0].min(host_pool_once(&pool, &kinds));
+            best[1] = best[1].min(host_one_shot_once(w, &kinds));
         }
         pool.shutdown();
         for (name, secs) in [("pool", best[0]), ("oneshot", best[1])] {

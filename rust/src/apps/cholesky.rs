@@ -17,32 +17,15 @@
 //! Kernels are pure rust (there are no AOT/PJRT artifacts for the
 //! Cholesky ops; the PJRT path remains SparseLU-only).
 
-use super::dataflow::{
-    run_dataflow, run_dataflow_batch, BlockKernel, DataflowRt, PoolJob,
-};
+use super::dataflow::{run_dataflow, run_workload_batch, DataflowRt};
 use crate::linalg::blocked::BlockedSparseMatrix;
-use crate::linalg::cholesky::{gemm_nt, potrf, syrk, trsm};
-use crate::sched::{ExecOpts, ExecStats, Pool, SubmitError, TaskGraph};
+use crate::sched::workload::Cholesky;
+use crate::sched::{Error, ExecOpts, ExecStats, Pool, TaskGraph};
 
-fn rk_potrf(_r: &[&[f32]], w: &mut [f32], bs: usize) {
-    potrf(w, bs)
-}
-fn rk_trsm(r: &[&[f32]], w: &mut [f32], bs: usize) {
-    trsm(r[0], w, bs)
-}
-fn rk_syrk(r: &[&[f32]], w: &mut [f32], bs: usize) {
-    syrk(r[0], w, bs)
-}
-fn rk_gemm(r: &[&[f32]], w: &mut [f32], bs: usize) {
-    gemm_nt(r[0], r[1], w, bs)
-}
-
-/// The tiled-Cholesky kernel table, aligned with
-/// [`crate::sched::CHOLESKY_OPS`] — Cholesky kernels are rust-only
-/// (no PJRT artifacts), so every driver, the CLI pool path, benches
-/// and tests share this one definition.
-pub static CHOLESKY_RUST_KERNELS: [BlockKernel<'static>; 4] =
-    [&rk_potrf, &rk_trsm, &rk_syrk, &rk_gemm];
+/// The tiled-Cholesky kernel table — declared once by the
+/// [`Cholesky`] registry entry ([`crate::sched::workload`]) and
+/// re-exported here for the existing call sites.
+pub use crate::sched::workload::CHOLESKY_RUST_KERNELS;
 
 /// Dataflow (DAG-scheduled) tiled Cholesky: factorises `a` (SPD,
 /// lower-triangle blocks allocated, e.g. from
@@ -61,31 +44,22 @@ pub fn cholesky_dataflow(
 ) -> ExecStats {
     let graph = TaskGraph::cholesky(a.nb());
     run_dataflow(rt, a, &graph, &CHOLESKY_RUST_KERNELS, exec)
+        .expect("cholesky dataflow failed")
 }
 
-/// Batched tiled Cholesky on the persistent pool — the Cholesky face
-/// of [`super::sparselu::sparselu_dataflow_batch`]: every matrix's
-/// DAG is submitted into one [`Pool::scope`] before any wait, so the
-/// factorisations overlap on the shared worker team. Each job's
-/// result stays bit-identical (f32) to
+/// Batched tiled Cholesky on the persistent pool — a thin call into
+/// the registry-generic
+/// [`run_workload_batch`](super::dataflow::run_workload_batch):
+/// every matrix's DAG is submitted into one [`Pool::scope`] before
+/// any wait, so the factorisations overlap on the shared worker team.
+/// Each job's result stays bit-identical (f32) to
 /// [`cholesky_seq`](crate::linalg::cholesky::cholesky_seq) on its
 /// matrix alone.
 pub fn cholesky_dataflow_batch(
     pool: &Pool,
     mats: &mut [BlockedSparseMatrix],
-) -> Result<Vec<ExecStats>, SubmitError> {
-    let graphs: Vec<TaskGraph> =
-        mats.iter().map(|a| TaskGraph::cholesky(a.nb())).collect();
-    let mut jobs: Vec<PoolJob> = mats
-        .iter_mut()
-        .zip(&graphs)
-        .map(|(a, graph)| PoolJob {
-            a,
-            graph,
-            kernels: &CHOLESKY_RUST_KERNELS,
-        })
-        .collect();
-    run_dataflow_batch(pool, &mut jobs)
+) -> Result<Vec<ExecStats>, Error> {
+    run_workload_batch(pool, &Cholesky, mats)
 }
 
 #[cfg(test)]

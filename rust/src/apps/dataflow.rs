@@ -5,13 +5,20 @@
 //! [`super::cholesky::cholesky_dataflow`] and
 //! [`super::matmul::matmul_dataflow`] all funnel through.
 //!
+//! Since the workload redesign, the preferred entry points are the
+//! **registry-generic** [`run_workload`] / [`run_workload_batch`]: a
+//! `&dyn Workload` from [`crate::sched::workload::registry`] supplies
+//! the graph ([`Workload::graph_for`]) and the kernel table
+//! ([`Workload::kernels`]), so callers (CLI, harness, benches, tests)
+//! never name a concrete workload. The raw [`run_dataflow`] /
+//! [`run_dataflow_batch`] remain for callers bringing their own graph
+//! or kernel closures (the PJRT-backed SparseLU driver).
+//!
 //! A kernel receives the task's extra read blocks (shared slices) and
 //! its write block (exclusive slice), all split-borrowed zero-copy
-//! from the one matrix. The table is indexed by the task's
-//! [`OpId`](crate::sched::OpId), mirroring the graph's
-//! [`OpSpec`](crate::sched::OpSpec) vocabulary — adding a workload
-//! means a graph constructor plus a kernel table, never an executor
-//! change.
+//! from the one matrix ([`crate::sched::workload::kernel_runner`]).
+//! The table is indexed by the task's [`OpId`](crate::sched::OpId),
+//! mirroring the graph's [`OpSpec`](crate::sched::OpSpec) vocabulary.
 //!
 //! # Hosts
 //!
@@ -24,15 +31,22 @@
 //! form: it submits every job into one [`Pool::scope`] and only then
 //! waits, so independent factorisations overlap and workers steal
 //! across job boundaries — mixed workloads welcome (each job carries
-//! its own graph and kernel table).
+//! its own graph and kernel table). Every failure mode is the typed
+//! [`Error`]; nothing on an error path panics.
+//!
+//! [`Workload::graph_for`]: crate::sched::workload::Workload::graph_for
+//! [`Workload::kernels`]: crate::sched::workload::Workload::kernels
 
 use crate::coordinator::GprmRuntime;
 use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
 use crate::omp::OmpRuntime;
+use crate::sched::workload::{kernel_runner, Workload};
 use crate::sched::{
-    execute_gprm_opts, execute_omp_opts, ExecOpts, ExecStats, Pool,
-    SubmitError, TaskGraph, TaskId,
+    execute_gprm_opts, execute_omp_opts, Error, ExecOpts, ExecStats,
+    Pool, TaskGraph,
 };
+
+pub use crate::sched::workload::BlockKernel;
 
 /// Which host runs the dataflow workers.
 pub enum DataflowRt<'r> {
@@ -51,68 +65,31 @@ pub enum DataflowRt<'r> {
     Pool(&'r Pool),
 }
 
-/// One entry of a workload's executable kernel table: `(reads, write,
-/// bs)` — the extra read blocks in task order, then the (exclusive)
-/// write block. Indexed by op id, aligned with the graph's op table.
-pub type BlockKernel<'k> =
-    &'k (dyn Fn(&[&[f32]], &mut [f32], usize) + Sync);
-
-/// The per-task dispatch closure shared by every host: split-borrow
-/// the task's blocks zero-copy and fire `kernels[task.op]`. The
-/// closure is `Send + Sync` so the pool can run it from any worker;
-/// the access-set discipline that makes the unsafe block sound is
-/// documented inline.
-fn task_runner<'a>(
-    graph: &'a TaskGraph,
-    kernels: &'a [BlockKernel<'a>],
-    shared: &'a SharedBlocked,
-    bs: usize,
-) -> impl Fn(TaskId) + Send + Sync + 'a {
-    move |id: TaskId| {
-        let t = *graph.task(id);
-        // SAFETY: the task graph chains every touch of a given block
-        // (RAW/WAW/WAR) and every executor host carries a
-        // release/acquire edge per dependency (see `SharedBlocked`'s
-        // Sync impl), so this task has exclusive access to the block
-        // it writes and read-only access to blocks finalised by its
-        // predecessors. Fill-in allocation mutates only the written
-        // block's own slot. Within the task the borrows split,
-        // zero-copy.
-        let m = unsafe { shared.get_mut() };
-        if t.alloc_write {
-            m.allocate_clean_block(t.write.0, t.write.1);
-        }
-        let kernel = kernels[t.op.0];
-        match t.reads() {
-            [] => {
-                let w = m.block_mut(t.write.0, t.write.1).unwrap();
-                kernel(&[], w, bs);
-            }
-            &[r0] => {
-                let (r, w) = m.block_and_mut(r0, t.write).unwrap();
-                kernel(&[r], w, bs);
-            }
-            &[r0, r1] => {
-                let (a0, a1, w) = m.read2_write1(r0, r1, t.write).unwrap();
-                kernel(&[a0, a1], w, bs);
-            }
-            _ => unreachable!("tasks carry at most two extra reads"),
-        }
+fn check_job(
+    a: &BlockedSparseMatrix,
+    graph: &TaskGraph,
+    kernels: &[BlockKernel],
+) -> Result<(), Error> {
+    if graph.nb() != a.nb() {
+        return Err(Error::GridMismatch {
+            graph_nb: graph.nb(),
+            matrix_nb: a.nb(),
+        });
     }
-}
-
-fn check_job(a: &BlockedSparseMatrix, graph: &TaskGraph, kernels: &[BlockKernel]) {
-    assert_eq!(graph.nb(), a.nb(), "graph and matrix block grids differ");
-    assert_eq!(
-        graph.ops().len(),
-        kernels.len(),
-        "kernel table must cover the graph's op vocabulary"
-    );
+    if graph.ops().len() != kernels.len() {
+        return Err(Error::KernelTable {
+            ops: graph.ops().len(),
+            kernels: kernels.len(),
+        });
+    }
+    Ok(())
 }
 
 /// Execute `graph` over `a` on the selected host, dispatching every
 /// task through `kernels[task.op]`. Factorises (or otherwise
-/// transforms) `a` in place and returns the executor statistics.
+/// transforms) `a` in place and returns the executor statistics; all
+/// failures (grid/kernel-table mismatch, executor-option misuse on
+/// the pool host, a poisoned job) surface as the typed [`Error`].
 ///
 /// Results are bit-identical (f32) to the workload's sequential
 /// reference: the graph chains every pair of tasks touching the same
@@ -124,33 +101,54 @@ pub fn run_dataflow(
     graph: &TaskGraph,
     kernels: &[BlockKernel],
     exec: ExecOpts,
-) -> ExecStats {
-    check_job(a, graph, kernels);
+) -> Result<ExecStats, Error> {
+    check_job(a, graph, kernels)?;
+    if matches!(rt, DataflowRt::Pool(_))
+        && (!exec.steal || exec.record_events)
+    {
+        // Reject a silent mismatch instead of "auditing" an empty
+        // event log or mislabelling a stealing run as the mutex
+        // baseline.
+        return Err(Error::ExecOpts(
+            "ExecOpts select one-shot executors; the pool host always \
+             work-steals and records no event log",
+        ));
+    }
     let bs = a.bs();
     let shared = SharedBlocked::new(std::mem::replace(
         a,
         BlockedSparseMatrix::empty(1, 1),
     ));
-    let run = task_runner(graph, kernels, &shared, bs);
+    let run = kernel_runner(graph, kernels, &shared, bs);
     let stats = match rt {
-        DataflowRt::Omp(omp) => execute_omp_opts(omp, graph, &run, exec),
-        DataflowRt::Gprm(gprm) => execute_gprm_opts(gprm, graph, &run, exec),
-        DataflowRt::Pool(pool) => {
-            // The pool has no executor options — reject a silent
-            // mismatch instead of "auditing" an empty event log or
-            // mislabelling a stealing run as the mutex baseline.
-            assert!(
-                exec.steal && !exec.record_events,
-                "ExecOpts select one-shot executors; the pool host \
-                 always work-steals and records no event log"
-            );
-            pool.run(graph, &run)
+        DataflowRt::Omp(omp) => {
+            execute_omp_opts(omp, graph, &run, exec).map_err(Error::Host)
         }
-    }
-    .expect("dataflow execution failed");
+        DataflowRt::Gprm(gprm) => {
+            execute_gprm_opts(gprm, graph, &run, exec)
+                .map_err(Error::Host)
+        }
+        DataflowRt::Pool(pool) => pool.run(graph, &run),
+    };
     drop(run);
+    // The matrix is restored even on failure (a poisoned pool job
+    // leaves a partial but owned result).
     *a = shared.into_inner();
     stats
+}
+
+/// Registry-generic single-job driver: the workload declaration
+/// supplies the graph (matching this input's structure) and the
+/// kernel table. This is what the CLI, benches and conformance tests
+/// call — adding a workload never adds a caller-side arm.
+pub fn run_workload(
+    rt: &DataflowRt,
+    w: &dyn Workload,
+    a: &mut BlockedSparseMatrix,
+    exec: ExecOpts,
+) -> Result<ExecStats, Error> {
+    let graph = w.graph_for(a);
+    run_dataflow(rt, a, &graph, w.kernels(), exec)
 }
 
 /// One job of a [`run_dataflow_batch`] stream: the matrix to
@@ -167,18 +165,18 @@ pub struct PoolJob<'a> {
 /// stealing included), unlike a loop of [`run_dataflow`] calls which
 /// would serialise them. Returns per-job stats in submission order.
 ///
-/// On [`SubmitError`] the already-submitted prefix still runs to
-/// completion (their matrices hold valid results) before the error is
-/// returned; nothing is ever silently dropped. A job poisoned by a
-/// panicking kernel panics here too (matching [`run_dataflow`]'s
-/// `expect`) — but only **after** every job finished and every
-/// matrix, including the healthy jobs' results, was restored.
+/// On a submission [`Error`] the already-submitted prefix still runs
+/// to completion (their matrices hold valid results) before the error
+/// is returned; nothing is ever silently dropped. A job poisoned by a
+/// panicking kernel surfaces as [`Error::Job`] — but only **after**
+/// every job finished and every matrix, including the healthy jobs'
+/// results, was restored.
 pub fn run_dataflow_batch(
     pool: &Pool,
     jobs: &mut [PoolJob<'_>],
-) -> Result<Vec<ExecStats>, SubmitError> {
+) -> Result<Vec<ExecStats>, Error> {
     for j in jobs.iter_mut() {
-        check_job(j.a, j.graph, j.kernels);
+        check_job(j.a, j.graph, j.kernels)?;
     }
     let shares: Vec<(SharedBlocked, usize)> = jobs
         .iter_mut()
@@ -191,7 +189,7 @@ pub fn run_dataflow_batch(
     let result = pool.scope(|s| {
         let mut handles = Vec::with_capacity(shares.len());
         for (j, (sh, bs)) in jobs.iter().zip(&shares) {
-            let run = task_runner(j.graph, j.kernels, sh, *bs);
+            let run = kernel_runner(j.graph, j.kernels, sh, *bs);
             handles.push(s.submit(j.graph, run)?);
         }
         // Collect every outcome without unwinding mid-scope: one
@@ -201,8 +199,24 @@ pub fn run_dataflow_batch(
     for (j, (sh, _)) in jobs.iter_mut().zip(shares) {
         *j.a = sh.into_inner();
     }
-    Ok(result?
-        .into_iter()
-        .map(|r| r.expect("pool dataflow job failed"))
-        .collect())
+    result?.into_iter().collect()
+}
+
+/// Registry-generic batch driver: one graph per matrix (derived from
+/// each input's structure via the workload declaration), all jobs
+/// overlapped on one pool. The three `*_dataflow_batch` wrappers are
+/// thin calls into this.
+pub fn run_workload_batch(
+    pool: &Pool,
+    w: &dyn Workload,
+    mats: &mut [BlockedSparseMatrix],
+) -> Result<Vec<ExecStats>, Error> {
+    let graphs: Vec<TaskGraph> =
+        mats.iter().map(|a| w.graph_for(a)).collect();
+    let mut jobs: Vec<PoolJob> = mats
+        .iter_mut()
+        .zip(&graphs)
+        .map(|(a, graph)| PoolJob { a, graph, kernels: w.kernels() })
+        .collect();
+    run_dataflow_batch(pool, &mut jobs)
 }

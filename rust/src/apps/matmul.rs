@@ -11,14 +11,13 @@
 //! workloads share one scheduling path and can be mixed in a
 //! persistent-pool job stream.
 
-use super::dataflow::{
-    run_dataflow, run_dataflow_batch, BlockKernel, DataflowRt, PoolJob,
-};
+use super::dataflow::{run_dataflow, DataflowRt};
 use crate::coordinator::{worksharing, GprmRuntime};
 use crate::linalg::blocked::BlockedSparseMatrix;
 use crate::linalg::dense::{matmul_rows_into, DenseMatrix};
 use crate::omp::{DynamicSched, OmpRuntime};
-use crate::sched::{ExecOpts, ExecStats, Pool, SubmitError, TaskGraph};
+use crate::sched::workload::{Matmul, Workload as _};
+use crate::sched::{Error, ExecOpts, ExecStats, Pool, TaskGraph};
 
 /// The four approaches of Fig 2, plus the cutoff variant of Fig 4
 /// (Listing 4: only `m/cutoff` tasks are created).
@@ -185,109 +184,14 @@ pub fn run_matmul(
 // Blocked matmul on the dataflow engine
 // ---------------------------------------------------------------------
 
-/// The `madd` block kernel: `c += a·b` on row-major `bs×bs` blocks,
-/// j-inner accumulation. [`matmul_blocked_seq`] uses the identical
-/// loop, which is what makes every edge-respecting schedule
-/// bit-identical (f32) to it.
-pub fn madd(a: &[f32], b: &[f32], c: &mut [f32], bs: usize) {
-    debug_assert!(a.len() == bs * bs && b.len() == bs * bs && c.len() == bs * bs);
-    for i in 0..bs {
-        for j in 0..bs {
-            let mut acc = c[i * bs + j];
-            for k in 0..bs {
-                acc += a[i * bs + k] * b[k * bs + j];
-            }
-            c[i * bs + j] = acc;
-        }
-    }
-}
-
-/// Pack square `a` and `b` (each `nbc·bs` wide) plus a zeroed `C`
-/// into the `2·nbc`-grid blocked matrix [`TaskGraph::matmul`]
-/// schedules over: `C` in the top-left quadrant, `A` top-right
-/// (`A[i,k]` at block `(i, nbc+k)`), `B` bottom-left (`B[k,j]` at
-/// `(nbc+k, j)`); the fourth quadrant stays unallocated.
-pub fn matmul_blocked_input(
-    a: &DenseMatrix,
-    b: &DenseMatrix,
-    nbc: usize,
-    bs: usize,
-) -> BlockedSparseMatrix {
-    let dim = nbc * bs;
-    assert_eq!((a.rows(), a.cols()), (dim, dim), "A shape");
-    assert_eq!((b.rows(), b.cols()), (dim, dim), "B shape");
-    let mut m = BlockedSparseMatrix::empty(2 * nbc, bs);
-    for bi in 0..nbc {
-        for bj in 0..nbc {
-            m.allocate_clean_block(bi, bj); // C, zeroed
-            let ab = m.allocate_clean_block(bi, nbc + bj);
-            for r in 0..bs {
-                for c in 0..bs {
-                    ab[r * bs + c] = a[(bi * bs + r, bj * bs + c)];
-                }
-            }
-            let bb = m.allocate_clean_block(nbc + bi, bj);
-            for r in 0..bs {
-                for c in 0..bs {
-                    bb[r * bs + c] = b[(bi * bs + r, bj * bs + c)];
-                }
-            }
-        }
-    }
-    m
-}
-
-/// Read the `C` quadrant back out of the blocked layout.
-pub fn matmul_extract_c(
-    m: &BlockedSparseMatrix,
-    nbc: usize,
-) -> DenseMatrix {
-    let bs = m.bs();
-    let mut c = DenseMatrix::zeros(nbc * bs, nbc * bs);
-    for bi in 0..nbc {
-        for bj in 0..nbc {
-            let blk = m.block(bi, bj).expect("C block allocated");
-            for r in 0..bs {
-                for col in 0..bs {
-                    c[(bi * bs + r, bj * bs + col)] = blk[r * bs + col];
-                }
-            }
-        }
-    }
-    c
-}
-
-/// Sequential blocked reference: the same [`madd`] kernels in the
-/// graph's task order (`k` outer, then `i`, `j`) — the bit-identity
-/// baseline for [`matmul_dataflow`].
-pub fn matmul_blocked_seq(
-    a: &DenseMatrix,
-    b: &DenseMatrix,
-    nbc: usize,
-    bs: usize,
-) -> DenseMatrix {
-    let mut m = matmul_blocked_input(a, b, nbc, bs);
-    for kk in 0..nbc {
-        for ii in 0..nbc {
-            for jj in 0..nbc {
-                let (ra, rb, w) = m
-                    .read2_write1((ii, nbc + kk), (nbc + kk, jj), (ii, jj))
-                    .unwrap();
-                madd(ra, rb, w, bs);
-            }
-        }
-    }
-    matmul_extract_c(&m, nbc)
-}
-
-fn rk_madd(r: &[&[f32]], w: &mut [f32], bs: usize) {
-    madd(r[0], r[1], w, bs)
-}
-
-/// The blocked-matmul kernel table, aligned with
-/// [`crate::sched::MATMUL_OPS`] — one shared definition for drivers,
-/// the CLI pool path, benches and tests.
-pub static MATMUL_RUST_KERNELS: [BlockKernel<'static>; 1] = [&rk_madd];
+/// The blocked-matmul kernels, embedding/extraction helpers and
+/// sequential reference — declared once by the [`Matmul`] registry
+/// entry ([`crate::sched::workload`]) and re-exported here for the
+/// existing call sites.
+pub use crate::sched::workload::{
+    madd, matmul_blocked_input, matmul_blocked_seq, matmul_extract_c,
+    MATMUL_RUST_KERNELS,
+};
 
 /// Blocked `C = A·B` on the dataflow engine (any host, including the
 /// persistent pool): builds the embedded blocked input, schedules
@@ -304,21 +208,27 @@ pub fn matmul_dataflow(
     let graph = TaskGraph::matmul(nbc);
     let mut m = matmul_blocked_input(a, b, nbc, bs);
     let stats =
-        run_dataflow(rt, &mut m, &graph, &MATMUL_RUST_KERNELS, exec);
+        run_dataflow(rt, &mut m, &graph, &MATMUL_RUST_KERNELS, exec)
+            .expect("matmul dataflow failed");
     (matmul_extract_c(&m, nbc), stats)
 }
 
 /// Batched blocked matmul on the persistent pool: all products are
 /// submitted into one [`Pool::scope`] and overlap on the shared
 /// worker team. Returns each `C` plus its executor stats, in
-/// submission order (the same shape as the factorisation batch
-/// APIs).
+/// submission order (the same shape as the factorisation batch APIs).
+///
+/// The matmul graph is sizing-only (independent of the operand
+/// values), so — unlike the pattern-dependent SparseLU batch — one
+/// [`TaskGraph::matmul`] is shared by every job; graph and kernels
+/// still come from the [`Matmul`] declaration.
 pub fn matmul_dataflow_batch(
     pool: &Pool,
     pairs: &[(&DenseMatrix, &DenseMatrix)],
     nbc: usize,
     bs: usize,
-) -> Result<(Vec<DenseMatrix>, Vec<ExecStats>), SubmitError> {
+) -> Result<(Vec<DenseMatrix>, Vec<ExecStats>), Error> {
+    use super::dataflow::{run_dataflow_batch, PoolJob};
     let graph = TaskGraph::matmul(nbc);
     let mut mats: Vec<BlockedSparseMatrix> = pairs
         .iter()
@@ -326,11 +236,7 @@ pub fn matmul_dataflow_batch(
         .collect();
     let mut jobs: Vec<PoolJob> = mats
         .iter_mut()
-        .map(|a| PoolJob {
-            a,
-            graph: &graph,
-            kernels: &MATMUL_RUST_KERNELS,
-        })
+        .map(|a| PoolJob { a, graph: &graph, kernels: Matmul.kernels() })
         .collect();
     let stats = run_dataflow_batch(pool, &mut jobs)?;
     drop(jobs);

@@ -10,7 +10,10 @@
 //!   [`crate::sched::TaskGraph`] over a blocked matrix by dispatching
 //!   tasks through a per-workload kernel table, on a one-shot host or
 //!   the persistent [`crate::sched::Pool`]
-//!   (`run_dataflow_batch` overlaps whole job streams).
+//!   (`run_dataflow_batch` overlaps whole job streams). The
+//!   registry-generic forms (`run_workload`, `run_workload_batch`)
+//!   take a [`crate::sched::workload::Workload`] and derive graph and
+//!   kernels from the declaration.
 //! * [`sparselu`] — the §VI SparseLU factorisation: sequential
 //!   (BOTS reference), OpenMP tasking (Fig 5 port), GPRM hybrid
 //!   worksharing-tasking (Listings 5–6 port), and the barrier-free
@@ -28,7 +31,8 @@ pub use cholesky::{
     cholesky_dataflow, cholesky_dataflow_batch, CHOLESKY_RUST_KERNELS,
 };
 pub use dataflow::{
-    run_dataflow, run_dataflow_batch, BlockKernel, DataflowRt, PoolJob,
+    run_dataflow, run_dataflow_batch, run_workload, run_workload_batch,
+    BlockKernel, DataflowRt, PoolJob,
 };
 pub use matmul::{
     matmul_dataflow, matmul_dataflow_batch, run_matmul, MatmulApproach,

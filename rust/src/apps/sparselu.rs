@@ -22,14 +22,15 @@
 //! or through the AOT-compiled JAX/Pallas artifacts via PJRT
 //! ([`LuBackend::Pjrt`]).
 
-use super::dataflow::{run_dataflow, run_dataflow_batch, BlockKernel, PoolJob};
+use super::dataflow::{run_dataflow, run_workload_batch, BlockKernel};
 pub use super::dataflow::DataflowRt;
 use crate::coordinator::{worksharing, GprmRuntime};
 use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
 use crate::linalg::lu::{bdiv, bmod, fwd, lu0};
 use crate::omp::OmpRuntime;
 use crate::runtime::EngineService;
-use crate::sched::{ExecOpts, ExecStats, Pool, SubmitError, TaskGraph};
+use crate::sched::workload::Sparselu;
+use crate::sched::{Error, ExecOpts, ExecStats, Pool, TaskGraph};
 
 /// How block kernels execute.
 pub enum LuBackend<'e> {
@@ -71,26 +72,12 @@ impl<'e> LuBackend<'e> {
     }
 }
 
-fn rk_lu0(_r: &[&[f32]], w: &mut [f32], bs: usize) {
-    lu0(w, bs)
-}
-fn rk_fwd(r: &[&[f32]], w: &mut [f32], bs: usize) {
-    fwd(r[0], w, bs)
-}
-fn rk_bdiv(r: &[&[f32]], w: &mut [f32], bs: usize) {
-    bdiv(r[0], w, bs)
-}
-fn rk_bmod(r: &[&[f32]], w: &mut [f32], bs: usize) {
-    bmod(r[0], r[1], w, bs)
-}
-
-/// The plain-rust SparseLU kernel table, aligned with
-/// [`crate::sched::LU_OPS`] — the single definition shared by the CLI
-/// pool driver, benches and tests, so the op-id ordering lives in one
-/// place. The backend-dispatching drivers below build closure tables
-/// instead (they must capture the [`LuBackend`]).
-pub static LU_RUST_KERNELS: [BlockKernel<'static>; 4] =
-    [&rk_lu0, &rk_fwd, &rk_bdiv, &rk_bmod];
+/// The plain-rust SparseLU kernel table — now declared once by the
+/// [`Sparselu`] registry entry ([`crate::sched::workload`]) and
+/// re-exported here for the existing call sites. The
+/// backend-dispatching drivers below build closure tables instead
+/// (they must capture the [`LuBackend`]).
+pub use crate::sched::workload::LU_RUST_KERNELS;
 
 /// Options shared by the parallel drivers.
 pub struct LuRunConfig<'e> {
@@ -320,46 +307,29 @@ pub fn sparselu_dataflow(
     // Indexed by OP_LU0..OP_BMOD, aligned with sched::LU_OPS.
     let kernels: [BlockKernel; 4] = [&k_lu0, &k_fwd, &k_bdiv, &k_bmod];
     run_dataflow(rt, a, &graph, &kernels, cfg.exec)
+        .expect("sparselu dataflow failed")
 }
 
-/// Batched SparseLU on the persistent pool: one graph per matrix,
-/// every job submitted into one [`Pool::scope`] before any wait, so
-/// independent factorisations run **concurrently** on the shared
-/// worker team (the [`crate::sched::pool`] service model). Each
-/// matrix is factorised in place; per-job stats return in order.
-///
-/// Takes only the kernel `backend` — [`ExecOpts`] are one-shot
-/// executor options the pool does not consult (it always work-steals
-/// and records no event log), so the API does not accept them.
+/// Batched SparseLU on the persistent pool — a thin call into the
+/// registry-generic [`run_workload_batch`]: one graph per matrix
+/// (derived from each input's sparsity pattern), every job submitted
+/// into one [`Pool::scope`] before any wait, so independent
+/// factorisations run **concurrently** on the shared worker team.
+/// Each matrix is factorised in place; per-job stats return in
+/// order. Kernels are the [`Sparselu`] declaration's plain-rust table
+/// (the pool path has no PJRT backend).
 ///
 /// Every job's result is bit-identical (f32) to running
 /// [`sparselu_seq`] on that matrix alone — concurrency changes only
 /// the interleaving across jobs and blocks, never the per-block
 /// operation order.
+///
+/// [`sparselu_seq`]: crate::linalg::lu::sparselu_seq
 pub fn sparselu_dataflow_batch(
     pool: &Pool,
     mats: &mut [BlockedSparseMatrix],
-    backend: &LuBackend,
-) -> Result<Vec<ExecStats>, SubmitError> {
-    let graphs: Vec<TaskGraph> = mats
-        .iter()
-        .map(|a| TaskGraph::sparselu(&a.pattern(), a.nb()))
-        .collect();
-    let k_lu0 = |_: &[&[f32]], w: &mut [f32], bs: usize| backend.lu0(w, bs);
-    let k_fwd =
-        |r: &[&[f32]], w: &mut [f32], bs: usize| backend.fwd(r[0], w, bs);
-    let k_bdiv =
-        |r: &[&[f32]], w: &mut [f32], bs: usize| backend.bdiv(r[0], w, bs);
-    let k_bmod = |r: &[&[f32]], w: &mut [f32], bs: usize| {
-        backend.bmod(r[0], r[1], w, bs)
-    };
-    let kernels: [BlockKernel; 4] = [&k_lu0, &k_fwd, &k_bdiv, &k_bmod];
-    let mut jobs: Vec<PoolJob> = mats
-        .iter_mut()
-        .zip(&graphs)
-        .map(|(a, graph)| PoolJob { a, graph, kernels: &kernels })
-        .collect();
-    run_dataflow_batch(pool, &mut jobs)
+) -> Result<Vec<ExecStats>, Error> {
+    run_workload_batch(pool, &Sparselu, mats)
 }
 
 #[cfg(test)]
@@ -514,8 +484,7 @@ mod tests {
         let mut mats: Vec<BlockedSparseMatrix> =
             (0..4).map(|_| genmat(nb, bs)).collect();
         let stats =
-            sparselu_dataflow_batch(&pool, &mut mats, &LuBackend::Rust)
-                .unwrap();
+            sparselu_dataflow_batch(&pool, &mut mats).unwrap();
         assert_eq!(stats.len(), 4);
         for (m, s) in mats.iter().zip(&stats) {
             assert_eq!(s.executed, n_tasks);

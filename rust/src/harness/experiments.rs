@@ -6,6 +6,9 @@
 //! hold from `Scale(0.1)` upwards.
 
 use super::report::{spd, vsec, ExperimentReport, ShapeCheck, Table};
+use crate::sched::workload::{
+    registry, Params, Workload as SchedWorkload,
+};
 use crate::tilesim::{
     GprmAssign, GprmSim, OmpSim, OmpStrategy, Phase, Workload,
 };
@@ -556,24 +559,38 @@ fn ablation(scale: Scale) -> ExperimentReport {
     ExperimentReport { id: "ablation".into(), tables: vec![t], checks }
 }
 
-// --- Dataflow: DAG scheduling vs phase barriers, both workloads ---------
+// --- Dataflow: DAG scheduling vs phase barriers, per registry entry -----
 
-/// One workload's pair of dataflow tables + checks: DAG-vs-phase
+/// One registry entry's pair of dataflow tables + checks: DAG-vs-phase
 /// makespans across tile counts, and the mutex-scoreboard vs
-/// work-stealing executor comparison. `dag` runs the DAG simulator
-/// under the given claim-cost model; `phased` the level-synchronous
-/// phase simulator under the given assignment. The engine is
-/// kernel-agnostic, so SparseLU and Cholesky share every threshold.
+/// work-stealing executor comparison. Everything is read from the
+/// workload declaration — the level-synchronous straw man from
+/// [`SchedWorkload::phases`], the DAG costs from
+/// [`SchedWorkload::sim_cost`] — so the thresholds are shared by every
+/// phase-capable entry and no per-workload arm exists here.
 fn dataflow_workload(
-    name: &str,
-    nb: usize,
-    bs: usize,
-    phased: &dyn Fn(usize, GprmAssign) -> u64,
-    dag: &dyn Fn(usize, crate::tilesim::SchedModel) -> crate::tilesim::SimReport,
+    w: &dyn SchedWorkload,
+    p: Params,
     tables: &mut Vec<Table>,
     checks: &mut Vec<ShapeCheck>,
 ) {
-    use crate::tilesim::SchedModel;
+    use crate::tilesim::{DataflowSim, SchedModel};
+    let name = w.name();
+    let (nb, bs) = (p.nb, p.bs);
+    let phased = |tiles: usize, assign: GprmAssign| -> u64 {
+        let mut sim = GprmSim::tilepro(tiles);
+        sim.n_tiles = tiles;
+        sim.assign = assign;
+        sim.run(
+            w.phases(&p).expect("phase-capable registry entry"),
+            nb * nb,
+            (bs * bs * 4) as u64,
+        )
+        .cycles
+    };
+    let dag = |workers: usize, sched: SchedModel| {
+        DataflowSim::with_sched(workers, sched).run_workload(w, &p)
+    };
     let tile_counts = [4usize, 8, 16, 32, 63];
     let mut t = Table::new(
         &format!(
@@ -663,51 +680,23 @@ fn dataflow_workload(
 }
 
 fn dataflow(scale: Scale) -> ExperimentReport {
-    use crate::tilesim::{DataflowSim, SchedModel};
-    // The acceptance workloads, Fig-6-shaped (scaled down by NB only,
-    // like fig6, so per-task granularity is preserved): SparseLU with
-    // NB=32, BS=16, and tiled dense Cholesky on the same grid — the
-    // second workload riding the same kernel-agnostic engine.
-    let nb = scale.nb(32);
-    let bs = 16usize;
+    // The acceptance shape, Fig-6-like (scaled down by NB only, like
+    // fig6, so per-task granularity is preserved): NB=32, BS=16.
+    // The experiment iterates the workload registry — every entry
+    // declaring a level-synchronous phase straw man
+    // ([`SchedWorkload::phases`]) is raced DAG-vs-phase and
+    // steal-vs-mutex on identical machinery; entries without one (the
+    // §V matmul, whose phase form is the fig2–4 domain) are skipped
+    // here and measured by the `throughput` experiment instead.
+    let p = Params::new(scale.nb(32), 16);
     let mut tables = Vec::new();
     let mut checks = Vec::new();
-    let phase_sim = |tiles: usize, assign: GprmAssign| -> GprmSim {
-        let mut sim = GprmSim::tilepro(tiles);
-        sim.n_tiles = tiles;
-        sim.assign = assign;
-        sim
-    };
-    dataflow_workload(
-        "SparseLU",
-        nb,
-        bs,
-        &|tiles, assign| {
-            phase_sim(tiles, assign)
-                .run(Workload::sparselu(nb, bs), nb * nb, (bs * bs * 4) as u64)
-                .cycles
-        },
-        &|workers, sched: SchedModel| {
-            DataflowSim::with_sched(workers, sched).run_sparselu(nb, bs)
-        },
-        &mut tables,
-        &mut checks,
-    );
-    dataflow_workload(
-        "Cholesky",
-        nb,
-        bs,
-        &|tiles, assign| {
-            phase_sim(tiles, assign)
-                .run(Workload::cholesky(nb, bs), nb * nb, (bs * bs * 4) as u64)
-                .cycles
-        },
-        &|workers, sched: SchedModel| {
-            DataflowSim::with_sched(workers, sched).run_cholesky(nb, bs)
-        },
-        &mut tables,
-        &mut checks,
-    );
+    for w in registry() {
+        if w.phases(&p).is_none() {
+            continue;
+        }
+        dataflow_workload(*w, p, &mut tables, &mut checks);
+    }
     ExperimentReport { id: "dataflow".into(), tables, checks }
 }
 
@@ -722,17 +711,28 @@ fn dataflow(scale: Scale) -> ExperimentReport {
 /// hold from `Scale(0.1)` (NB=12) to `Scale(1.0)` (NB=16).
 fn throughput(scale: Scale) -> ExperimentReport {
     use crate::sched::TaskGraph;
-    use crate::tilesim::{CostModel, DataflowSim, LaunchModel};
+    use crate::tilesim::{CostModel, DataflowSim, LaunchModel, SimJob};
     let nb = scale.nb(16);
     let bs = 16usize;
     let n_jobs = 8usize;
-    let lu = TaskGraph::sparselu(
-        &crate::linalg::genmat::genmat_pattern(nb),
-        nb,
-    );
-    let ch = TaskGraph::cholesky(nb);
-    let jobs: Vec<(&TaskGraph, usize)> = (0..n_jobs)
-        .map(|i| (if i % 2 == 0 { &lu } else { &ch }, bs))
+    let p = Params::new(nb, bs);
+    // The mixed stream cycles the registry's phase-capable entries —
+    // the factorisation workloads (SparseLU, Cholesky alternating at
+    // the current registry) — so the stream composition follows the
+    // registry, never a name list.
+    let facts: Vec<&'static dyn SchedWorkload> = registry()
+        .iter()
+        .copied()
+        .filter(|w| w.phases(&p).is_some())
+        .collect();
+    let graphs: Vec<TaskGraph> =
+        facts.iter().map(|w| w.graph(&p)).collect();
+    let jobs: Vec<SimJob> = (0..n_jobs)
+        .map(|i| SimJob {
+            workload: facts[i % facts.len()],
+            graph: &graphs[i % facts.len()],
+            bs,
+        })
         .collect();
     let hz = CostModel::default().clock_hz;
     let workers = [1usize, 2, 4, 8, 16];
@@ -756,7 +756,7 @@ fn throughput(scale: Scale) -> ExperimentReport {
         // spawn cost zeroed out (a plain sum of single-graph runs).
         let serial_nospawn: u64 = jobs
             .iter()
-            .map(|&(g, bs)| sim.run_graph(g, bs).cycles)
+            .map(|j| sim.run_graph(j.workload, j.graph, j.bs).cycles)
             .sum();
         let gain = oneshot.cycles as f64 / pool.cycles as f64;
         gains.push((w, gain));

@@ -21,24 +21,30 @@
 //!   `TaskGraph` of opaque op ids + block access sets (RAW/WAW/WAR
 //!   edges derived purely from the access sets), a lock-free
 //!   work-stealing one-shot executor (Chase–Lev deques) on both host
-//!   runtimes (mutex scoreboard kept as a baseline), and the
+//!   runtimes (mutex scoreboard kept as a baseline), the
 //!   **persistent multi-job pool** (`sched::pool::Pool`): one
 //!   long-lived worker team executing many concurrent graphs with
 //!   job-tagged deque entries (cross-job stealing), FIFO capacity
-//!   admission with typed `SubmitError`, per-job poisoning and
-//!   graceful shutdown. Workload constructors:
-//!   `TaskGraph::{sparselu, cholesky, matmul}`.
+//!   admission, **inter-job dependencies**
+//!   ([`sched::pool::PoolScope::submit_after`] — admission deferred
+//!   until named predecessors complete), per-job poisoning and
+//!   graceful shutdown — plus the **workload layer**: the
+//!   [`sched::workload::Workload`] trait and
+//!   [`sched::workload::registry`] (one declaration drives engine,
+//!   pool, simulator, CLI, harness and benches), the fluent
+//!   [`sched::session::Session`] front end, and the unified typed
+//!   [`sched::Error`].
 //! * [`apps`] — the paper's two workloads (SparseLU, MatMul) on every
 //!   runtime, plus tiled Cholesky on the dataflow engine; all dataflow
 //!   drivers funnel through the generic kernel-table driver
-//!   [`apps::dataflow::run_dataflow`] (one-shot hosts or the pool) and
-//!   gain batched entry points
-//!   (`sparselu_dataflow_batch`, `cholesky_dataflow_batch`,
-//!   `matmul_dataflow_batch`, generic
-//!   [`apps::dataflow::run_dataflow_batch`]) that overlap whole job
-//!   streams on one pool.
+//!   [`apps::dataflow::run_dataflow`] (one-shot hosts or the pool).
+//!   The registry-generic forms [`apps::dataflow::run_workload`] /
+//!   [`apps::dataflow::run_workload_batch`] derive graph + kernels
+//!   from a workload declaration; the per-workload
+//!   `*_dataflow_batch` wrappers are thin calls into them.
 //! * [`bench`] / [`harness`] — measurement harness and the per-figure
-//!   experiment drivers.
+//!   experiment drivers (the `dataflow`/`throughput` experiments
+//!   iterate the workload registry).
 //!
 //! # Dataflow scheduling
 //!
@@ -61,16 +67,48 @@
 //! (f32) to the sequential reference ([`linalg::lu::sparselu_seq`] /
 //! [`linalg::cholesky::cholesky_seq`]).
 //!
-//! Two workloads prove the abstraction: the BOTS SparseLU DAG
+//! Three workloads prove the abstraction: the BOTS SparseLU DAG
 //! ([`sched::TaskGraph::sparselu`], driver
-//! [`apps::sparselu::sparselu_dataflow`], CLI `--app sparselu`) and
+//! [`apps::sparselu::sparselu_dataflow`], CLI `--app sparselu`),
 //! tiled dense Cholesky in the style of Buttari et al.
-//! ([`sched::TaskGraph::cholesky`], driver
-//! [`apps::cholesky::cholesky_dataflow`], CLI `--app cholesky`; not in
-//! the source paper — see DIVERGENCES.md). Adding a workload (tiled
-//! QR, …) means one graph constructor plus one kernel table — the
-//! executors, the simulator cost encoding
-//! ([`tilesim::workload::dag_sim_task`]) and the benches are untouched.
+//! ([`sched::TaskGraph::cholesky`], CLI `--app cholesky`; not in the
+//! source paper — see DIVERGENCES.md) and the blocked matmul
+//! ([`sched::TaskGraph::matmul`], CLI `--app matmul`). All three are
+//! **registry entries** — see "Defining a workload" below.
+//!
+//! # Defining a workload (the one-file recipe)
+//!
+//! A workload is declared exactly once, as an impl of
+//! [`sched::workload::Workload`] in `sched/workload.rs`, and
+//! registered by adding it to the `REGISTRY` array in the same file.
+//! Everything else — drivers, pool, simulator, CLI (`--app`,
+//! `--list-apps`, the `mixed` stream), harness experiments, benches
+//! and the conformance suite (`tests/workload_conformance.rs`) —
+//! iterates the registry and picks the new entry up untouched. The
+//! impl supplies:
+//!
+//! 1. `name`/`description` — the registry identity (CLI `--app`
+//!    value);
+//! 2. `ops` — the kernel vocabulary (`&'static [OpSpec]`: display
+//!    names + per-`bs` flop pricing);
+//! 3. `build` — the task stream in sequential program order
+//!    (`b.add_task(op, reads, write, alloc_write)` per kernel; the
+//!    builder derives all RAW/WAW/WAR edges from the access sets);
+//! 4. `kernels` — the executable table (`&'static [BlockKernel]`,
+//!    one `fn(reads, write, bs)` per op, same indexing as `ops`);
+//! 5. `make_input` / `reference_seq` / `residual` — deterministic
+//!    input generator, in-place sequential reference (the
+//!    bit-identity baseline) and ground-truth residual;
+//! 6. optionally `grid`/`graph_for` (input-dependent structure, like
+//!    SparseLU's sparsity pattern or matmul's embedded `2·nb` grid),
+//!    `sim_cost` (unusual memory behaviour; the default prices the
+//!    access-set shape) and `phases` (a level-synchronous phase
+//!    straw man for DAG-vs-barrier experiments).
+//!
+//! Cross-job pipelines use the fluent session
+//! ([`sched::session::Session`]):
+//! `session.job(Sparselu::params(nb, bs)).after(&handle).submit()?`
+//! — the pool defers admission until the named predecessors complete.
 //!
 //! The executor itself is **lock-free work stealing** by default
 //! ([`sched::ExecOpts`]): per-worker Chase–Lev deques
@@ -98,7 +136,13 @@
 //! **pool** ([`sched::pool`]) inverts that ownership: one team for
 //! the process lifetime, many concurrent graphs — the service shape
 //! a stream of factorisation requests needs. `Pool::scope` /
-//! `PoolScope::submit` → `JobHandle::wait` is the client surface;
+//! `PoolScope::submit` → `JobHandle::wait` is the low-level client
+//! surface (the fluent [`sched::session::Session`] sits above it for
+//! registry workloads), and `PoolScope::submit_after` /
+//! `Session`'s `.after(&handle)` add **inter-job dependencies**:
+//! admission of a job is deferred until its named predecessors
+//! complete, ordering cross-job read-after-write pipelines inside the
+//! pool itself;
 //! deque entries are job-tagged `(slot, generation, task)` packings
 //! so stealing crosses job boundaries; admission is FIFO under a
 //! task-capacity budget (typed `SubmitError`, queued — never

@@ -5,39 +5,40 @@
 //! * `exp [ids…] [--scale f]` — regenerate the paper's figures/tables
 //!   on the TILEPro64 simulator substrate (fig2 fig3 fig4 fig6 table1
 //!   fig7; default: all, at `--scale 1.0` = paper scale).
-//! * `sparselu` — blocked factorisation on a real runtime (host
-//!   threads), optionally through the PJRT artifacts. `--app
-//!   sparselu|cholesky|matmul|mixed` selects the workload(s) on the
-//!   shared kernel-agnostic dataflow engine; `--runtime pool --jobs N`
-//!   runs N independent instances concurrently through one persistent
-//!   worker pool and reports jobs/sec.
+//! * `sparselu` — blocked workloads on a real runtime (host threads).
+//!   `--app` selects any workload from the **registry**
+//!   (`sched::workload::registry`; `--list-apps` prints it) on the
+//!   shared kernel-agnostic dataflow engine; `--runtime pool
+//!   --jobs N` runs N independent instances concurrently through one
+//!   persistent worker pool (fluent `Session` API) and reports
+//!   jobs/sec. The SparseLU phase-barrier drivers (omp/gprm) and the
+//!   PJRT backend remain `--app sparselu`-only.
 //! * `matmul` — the §V micro-benchmark on a real runtime.
 //! * `artifacts` — inspect the AOT artifact manifest / PJRT platform.
+//!
+//! The CLI never names a workload: help text, `--app` validation, the
+//! `mixed` job stream and `--list-apps` are all derived from the
+//! registry, so a newly registered workload is immediately drivable.
 
-use gprm::apps::cholesky::{cholesky_dataflow, CHOLESKY_RUST_KERNELS};
-use gprm::apps::dataflow::{run_dataflow_batch, PoolJob};
-use gprm::apps::matmul::{
-    matmul_blocked_input, matmul_blocked_seq, matmul_extract_c,
-    MatmulApproach, MatmulExec, MATMUL_RUST_KERNELS,
-};
+use gprm::apps::dataflow::run_workload;
+use gprm::apps::matmul::{MatmulApproach, MatmulExec};
 use gprm::apps::sparselu::{
     sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuBackend,
-    LuRunConfig, LU_RUST_KERNELS,
+    LuRunConfig,
 };
 use gprm::coordinator::kernel::Registry;
-use gprm::linalg::blocked::BlockedSparseMatrix;
-use gprm::linalg::cholesky::{cholesky_seq, gen_spd, sym_dense};
-use gprm::linalg::dense::DenseMatrix;
-use gprm::linalg::verify::chol_residual_sparse;
 use gprm::coordinator::{GprmConfig, GprmRuntime};
 use gprm::harness::{run_experiment, Scale, ALL_EXPERIMENTS};
-use gprm::linalg::genmat::{genmat, genmat_pattern};
+use gprm::linalg::blocked::BlockedSparseMatrix;
+use gprm::linalg::genmat::genmat;
 use gprm::linalg::lu::sparselu_seq;
 use gprm::linalg::verify::lu_residual_sparse;
 use gprm::omp::OmpRuntime;
 use gprm::runtime::{default_artifact_dir, EngineService, Manifest};
+use gprm::sched::workload::{self, Params, Workload};
 use gprm::sched::{
-    check_event_ordering, ExecOpts, ExecStats, Pool, PoolConfig, TaskGraph,
+    check_event_ordering, ExecOpts, ExecStats, JobSpec, Pool, PoolConfig,
+    Session, TaskGraph,
 };
 use gprm::util::cli::{usage, Args, OptSpec};
 
@@ -66,12 +67,55 @@ fn print_help() {
         "gprm — reproduction of 'A Parallel Task-based Approach to Linear \
          Algebra' (ISPDC 2014)\n\n\
          USAGE:\n  gprm <exp|sparselu|matmul|artifacts> [options]\n\n\
-         `gprm sparselu --app sparselu|cholesky|matmul|mixed` selects\n\
-         the workload(s) on the shared dataflow engine;\n\
+         `gprm sparselu --app {}` selects the workload on the shared\n\
+         dataflow engine (`--list-apps` describes the registry);\n\
          `--runtime pool --jobs N` overlaps N instances on one\n\
          persistent worker pool.\n\n\
-         Run `gprm <subcommand> --help` for details."
+         Run `gprm <subcommand> --help` for details.",
+        app_values()
     );
+}
+
+/// The `--app` value list, derived from the workload registry (plus
+/// the registry-cycling `mixed` stream).
+fn app_values() -> String {
+    let mut names = workload::names().join("|");
+    names.push_str("|mixed");
+    names
+}
+
+/// Registry-derived help text for `--app` (leaked once: OptSpec holds
+/// `&'static str`).
+fn app_help() -> &'static str {
+    Box::leak(
+        format!(
+            "workload from the registry: {} (mixed: pool runtime only; \
+             see --list-apps)",
+            app_values()
+        )
+        .into_boxed_str(),
+    )
+}
+
+/// `--list-apps`: print the registry — name, description, kernel
+/// vocabulary — and exit. The completeness of this listing is
+/// CI-checked against the registered workloads.
+fn list_apps() -> i32 {
+    println!(
+        "registered workloads ({} entries; `--app` accepts each name \
+         or `mixed` to cycle them):",
+        workload::registry().len()
+    );
+    for w in workload::registry() {
+        let ops: Vec<&str> = w.ops().iter().map(|o| o.name).collect();
+        println!(
+            "  {:<10} {}  [ops: {}]",
+            w.name(),
+            w.description(),
+            ops.join(", ")
+        );
+    }
+    0
 }
 
 fn parse(argv: &[String], flags: &[&str]) -> Result<Args, String> {
@@ -125,10 +169,10 @@ fn cmd_exp(argv: &[String]) -> i32 {
 
 fn cmd_sparselu(argv: &[String]) -> i32 {
     let specs = [
-        OptSpec { name: "app", help: "workload: sparselu | cholesky | matmul | mixed (matmul/mixed: pool runtime only)", default: Some("sparselu"), is_flag: false },
+        OptSpec { name: "app", help: app_help(), default: Some(workload::registry()[0].name()), is_flag: false },
         OptSpec { name: "nb", help: "blocks per dimension", default: Some("25"), is_flag: false },
         OptSpec { name: "bs", help: "block size", default: Some("16"), is_flag: false },
-        OptSpec { name: "runtime", help: "gprm | omp | seq | dataflow-omp | dataflow-gprm | pool", default: Some("gprm"), is_flag: false },
+        OptSpec { name: "runtime", help: "gprm | omp | seq | dataflow-omp | dataflow-gprm | pool (omp/gprm phase drivers: sparselu only)", default: Some("gprm"), is_flag: false },
         OptSpec { name: "threads", help: "threads / concurrency level / pool workers", default: Some("8"), is_flag: false },
         OptSpec { name: "jobs", help: "independent job instances through one persistent pool (pool runtime)", default: Some("1"), is_flag: false },
         OptSpec { name: "contiguous", help: "contiguous worksharing (gprm)", default: None, is_flag: true },
@@ -136,8 +180,12 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
         OptSpec { name: "pin", help: "pin gprm tiles to cores", default: None, is_flag: true },
         OptSpec { name: "steal", help: "dataflow executor: on = lock-free work stealing (default), off = mutex-scoreboard baseline", default: Some("on"), is_flag: false },
         OptSpec { name: "events", help: "dataflow: record the schedule event log and audit it", default: None, is_flag: true },
+        OptSpec { name: "list-apps", help: "print the workload registry and exit", default: None, is_flag: true },
     ];
-    let args = match parse(argv, &["contiguous", "pjrt", "pin", "events", "help"]) {
+    let args = match parse(
+        argv,
+        &["contiguous", "pjrt", "pin", "events", "list-apps", "help"],
+    ) {
         Ok(a) => a,
         Err(e) => return err_usage("gprm sparselu", &e, &specs),
     };
@@ -146,12 +194,16 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             "{}",
             usage(
                 "gprm sparselu",
-                "Blocked factorisation on a real runtime (host threads); \
-                 --app selects the workload on the shared dataflow engine",
+                "Blocked workloads on a real runtime (host threads); \
+                 --app selects any registered workload on the shared \
+                 dataflow engine",
                 &specs
             )
         );
         return 0;
+    }
+    if args.has_flag("list-apps") {
+        return list_apps();
     }
     let nb = args.get_parse("nb", 25usize).unwrap();
     let bs = args.get_parse("bs", 16usize).unwrap();
@@ -168,6 +220,14 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
     let exec = ExecOpts { steal, record_events: args.has_flag("events") };
     let n_jobs = args.get_parse("jobs", 1usize).unwrap();
     let app = args.get("app").unwrap_or("sparselu").to_string();
+    if app != "mixed" && workload::find(&app).is_none() {
+        eprintln!(
+            "{} — --app must be {}",
+            gprm::sched::Error::UnknownWorkload(app),
+            app_values()
+        );
+        return 2;
+    }
     if runtime == "pool" || n_jobs > 1 {
         if runtime != "pool" {
             eprintln!("--jobs > 1 requires --runtime pool");
@@ -186,21 +246,15 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
         }
         return run_pool_jobs(&app, nb, bs, threads, n_jobs.max(1));
     }
-    match app.as_str() {
-        "sparselu" => {}
-        "cholesky" => {
-            return run_cholesky_app(nb, bs, &runtime, threads, &args, exec)
-        }
-        "matmul" | "mixed" => {
-            eprintln!("--app {app} requires --runtime pool");
-            return 2;
-        }
-        other => {
-            eprintln!(
-                "--app must be sparselu|cholesky|matmul|mixed, got {other:?}"
-            );
-            return 2;
-        }
+    if app == "mixed" {
+        eprintln!("--app mixed requires --runtime pool");
+        return 2;
+    }
+    if app != "sparselu" {
+        // Every non-SparseLU registry workload runs through the
+        // generic registry path (seq + dataflow runtimes).
+        let w = workload::find(&app).unwrap();
+        return run_registry_app(w, nb, bs, &runtime, threads, &args, exec);
     }
     let engine = if args.has_flag("pjrt") {
         match EngineService::start(default_artifact_dir()) {
@@ -394,13 +448,13 @@ fn cmd_artifacts(argv: &[String]) -> i32 {
     }
 }
 
-/// `--runtime pool`: run `n_jobs` independent instances of the
-/// selected workload (or an alternating SparseLU/Cholesky/MatMul
-/// stream for `--app mixed`) through **one** persistent worker pool.
-/// All jobs are submitted before any wait, so they overlap on the
-/// shared team (cross-job stealing included); every job's result is
-/// then verified bit-identically (f32) against its sequential
-/// reference, and throughput is reported in jobs/sec.
+/// `--runtime pool`: run `n_jobs` instances of the selected workload
+/// (or, for `--app mixed`, a stream cycling the whole registry)
+/// through **one** persistent worker pool via the fluent [`Session`]
+/// API. All jobs are submitted before any wait, so they overlap on
+/// the shared team (cross-job stealing included); every job's result
+/// is then verified bit-identically (f32) against its workload's
+/// sequential reference, and throughput is reported in jobs/sec.
 fn run_pool_jobs(
     app: &str,
     nb: usize,
@@ -408,83 +462,54 @@ fn run_pool_jobs(
     threads: usize,
     n_jobs: usize,
 ) -> i32 {
-    #[derive(Clone, Copy, PartialEq)]
-    enum Kind {
-        Lu,
-        Chol,
-        Mm,
-    }
-    if !matches!(app, "sparselu" | "cholesky" | "matmul" | "mixed") {
-        eprintln!("--app must be sparselu|cholesky|matmul|mixed, got {app:?}");
-        return 2;
-    }
-    let kinds: Vec<Kind> = (0..n_jobs)
-        .map(|i| match app {
-            "sparselu" => Kind::Lu,
-            "cholesky" => Kind::Chol,
-            "matmul" => Kind::Mm,
-            _ => [Kind::Lu, Kind::Chol, Kind::Mm][i % 3],
-        })
-        .collect();
-    let has = |k: Kind| kinds.contains(&k);
-    // One graph per workload kind present in the stream, shared by
-    // all its instances (nothing is built for absent kinds).
-    let lu_graph =
-        has(Kind::Lu).then(|| TaskGraph::sparselu(&genmat_pattern(nb), nb));
-    let ch_graph = has(Kind::Chol).then(|| TaskGraph::cholesky(nb));
-    let mm_graph = has(Kind::Mm).then(|| TaskGraph::matmul(nb));
-    // Sequential references (identical inputs per kind, so one
-    // reference verifies every instance bit-for-bit).
-    let mut lu_orig = None;
-    let mut lu_want = None;
-    if has(Kind::Lu) {
-        let mut w = genmat(nb, bs);
-        lu_orig = Some(w.to_dense());
-        sparselu_seq(&mut w);
-        lu_want = Some(w.to_dense());
-    }
-    let mut ch_orig = None;
-    let mut ch_want = None;
-    if has(Kind::Chol) {
-        let mut w = gen_spd(nb, bs);
-        ch_orig = Some(sym_dense(&w));
-        cholesky_seq(&mut w);
-        ch_want = Some(w.to_dense());
-    }
-    let mm_in = has(Kind::Mm).then(|| {
-        (
-            DenseMatrix::bots_random(nb * bs, nb * bs, 41),
-            DenseMatrix::bots_random(nb * bs, nb * bs, 42),
-        )
-    });
-    let mm_want = mm_in
-        .as_ref()
-        .map(|(a, b)| matmul_blocked_seq(a, b, nb, bs));
-    let mut mats: Vec<BlockedSparseMatrix> = kinds
-        .iter()
-        .map(|k| match k {
-            Kind::Lu => genmat(nb, bs),
-            Kind::Chol => gen_spd(nb, bs),
-            Kind::Mm => {
-                let (a, b) = mm_in.as_ref().unwrap();
-                matmul_blocked_input(a, b, nb, bs)
+    let reg = workload::registry();
+    let stream: Vec<&'static dyn Workload> = if app == "mixed" {
+        (0..n_jobs).map(|i| reg[i % reg.len()]).collect()
+    } else {
+        match workload::find(app) {
+            Some(w) => vec![w; n_jobs],
+            None => {
+                // Unreachable from the CLI (validated in
+                // cmd_sparselu); kept typed for direct callers.
+                eprintln!(
+                    "{} — --app must be {}",
+                    gprm::sched::Error::UnknownWorkload(app.into()),
+                    app_values()
+                );
+                return 2;
             }
-        })
-        .collect();
-    // Kernel tables: the shared plain-rust statics (the pool runtime
-    // has no PJRT path).
-    // Pool sized from the submitted graphs' task counts, so the whole
-    // stream admits at once (full overlap) and deque overflow is
-    // impossible by construction.
-    let glen = |g: &Option<TaskGraph>| g.as_ref().unwrap().len();
-    let total_tasks: usize = kinds
-        .iter()
-        .map(|k| match k {
-            Kind::Lu => glen(&lu_graph),
-            Kind::Chol => glen(&ch_graph),
-            Kind::Mm => glen(&mm_graph),
-        })
-        .sum();
+        }
+    };
+    let p = Params::new(nb, bs);
+    // Per-kind sizing, untouched input and sequential reference (one
+    // per distinct registry entry in the stream: every instance of a
+    // kind shares the same deterministic input, so one reference
+    // verifies them all bit-for-bit).
+    struct KindRef {
+        w: &'static dyn Workload,
+        tasks: usize,
+        orig: BlockedSparseMatrix,
+        want: BlockedSparseMatrix,
+    }
+    let mut refs: Vec<KindRef> = Vec::new();
+    for w in &stream {
+        if refs.iter().any(|k| k.w.name() == w.name()) {
+            continue;
+        }
+        let orig = w.make_input(&p, 0);
+        let tasks = w.graph_for(&orig).len();
+        let mut want = orig.deep_clone();
+        w.reference_seq(&mut want);
+        refs.push(KindRef { w: *w, tasks, orig, want });
+    }
+    let kind = |name: &str| {
+        refs.iter().find(|k| k.w.name() == name).expect("kind")
+    };
+    // Pool sized from the stream's task counts, so the whole stream
+    // admits at once (full overlap) and deque overflow is impossible
+    // by construction.
+    let total_tasks: usize =
+        stream.iter().map(|w| kind(w.name()).tasks).sum();
     let pool = Pool::with_config(PoolConfig {
         workers: threads,
         task_capacity: total_tasks,
@@ -495,82 +520,59 @@ fn run_pool_jobs(
          tasks total (deque capacity {})",
         pool.task_capacity()
     );
-    let mut jobs: Vec<PoolJob> = mats
-        .iter_mut()
-        .zip(&kinds)
-        .map(|(a, k)| match k {
-            Kind::Lu => PoolJob {
-                a,
-                graph: lu_graph.as_ref().unwrap(),
-                kernels: &LU_RUST_KERNELS,
-            },
-            Kind::Chol => PoolJob {
-                a,
-                graph: ch_graph.as_ref().unwrap(),
-                kernels: &CHOLESKY_RUST_KERNELS,
-            },
-            Kind::Mm => PoolJob {
-                a,
-                graph: mm_graph.as_ref().unwrap(),
-                kernels: &MATMUL_RUST_KERNELS,
-            },
-        })
+    let mut session = Session::new(&pool);
+    // Inputs and graphs are prepared before the clock starts (as the
+    // PR-4 driver and benches/throughput.rs do), so the timed region
+    // measures submission + scheduling + execution only.
+    for k in &refs {
+        session.prepare(JobSpec::new(k.w, nb, bs));
+    }
+    let inputs: Vec<BlockedSparseMatrix> = stream
+        .iter()
+        .map(|w| kind(w.name()).orig.deep_clone())
         .collect();
     let t0 = std::time::Instant::now();
-    let stats = match run_dataflow_batch(&pool, &mut jobs) {
-        Ok(s) => s,
-        Err(e) => {
+    for (w, input) in stream.iter().zip(inputs) {
+        let job = session
+            .job(JobSpec::new(*w, nb, bs))
+            .canonical_input(input);
+        if let Err(e) = job.submit() {
             eprintln!("pool submission failed: {e}");
+            return 1;
+        }
+    }
+    let results = match session.finish() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pool job failed: {e}");
             return 1;
         }
     };
     let dt = t0.elapsed();
-    drop(jobs);
     // Verify every job bit-identically against its kind's reference.
     let mut ok = true;
-    for (i, (m, k)) in mats.iter().zip(&kinds).enumerate() {
-        let pass = match k {
-            Kind::Lu => {
-                m.to_dense().as_slice()
-                    == lu_want.as_ref().unwrap().as_slice()
-            }
-            Kind::Chol => {
-                m.to_dense().as_slice()
-                    == ch_want.as_ref().unwrap().as_slice()
-            }
-            Kind::Mm => {
-                matmul_extract_c(m, nb).as_slice()
-                    == mm_want.as_ref().unwrap().as_slice()
-            }
-        };
-        if !pass {
-            eprintln!(
-                "job {i}: result differs from its sequential reference"
-            );
+    for (i, r) in results.iter().enumerate() {
+        if let Err(e) = r
+            .workload
+            .verify_bits(&r.output, &kind(r.workload.name()).want)
+        {
+            eprintln!("job {i}: {e}");
             ok = false;
         }
     }
-    // Residual spot checks on the first instance of each
-    // factorisation kind (bit-identity already covers the rest).
-    let mut seen = (false, false);
-    for (m, k) in mats.iter().zip(&kinds) {
-        match k {
-            Kind::Lu if !seen.0 => {
-                seen.0 = true;
-                let r = lu_residual_sparse(lu_orig.as_ref().unwrap(), m);
-                println!("sparselu residual ‖A−LU‖/‖A‖ = {r:.2e}");
-                ok &= r < 1e-3;
-            }
-            Kind::Chol if !seen.1 => {
-                seen.1 = true;
-                let r = chol_residual_sparse(ch_orig.as_ref().unwrap(), m);
-                println!("cholesky residual ‖A−LLᵀ‖/‖A‖ = {r:.2e}");
-                ok &= r < 1e-3;
-            }
-            _ => {}
-        }
+    // Residual spot checks on the first instance of each kind
+    // (bit-identity already covers the rest).
+    for k in &refs {
+        let r = results
+            .iter()
+            .find(|r| r.workload.name() == k.w.name())
+            .expect("instance of kind");
+        let res = k.w.residual(&k.orig, &r.output);
+        println!("{} residual = {res:.2e}", k.w.name());
+        ok &= res < 1e-3;
     }
-    let total_exec: usize = stats.iter().map(|s| s.executed).sum();
+    let total_exec: usize =
+        results.iter().map(|r| r.stats.executed).sum();
     println!(
         "{n_jobs} jobs in {dt:.2?} ({:.1} jobs/s, {total_exec} tasks \
          executed); bit-identity vs sequential references: {}",
@@ -587,11 +589,13 @@ fn run_pool_jobs(
     }
 }
 
-/// Factorise an SPD matrix with the tiled-Cholesky workload on the
-/// shared dataflow engine (`--app cholesky`). Supports the seq and
-/// dataflow runtimes; kernels are rust-only (no PJRT artifacts exist
-/// for POTRF/TRSM/SYRK/GEMM).
-fn run_cholesky_app(
+/// The generic single-workload path for every registry entry except
+/// the richer SparseLU driver: input, graph, kernels, reference and
+/// verification all come from the workload declaration. Supports the
+/// seq and dataflow runtimes (phase-barrier drivers and PJRT remain
+/// SparseLU-specific).
+fn run_registry_app(
+    w: &'static dyn Workload,
     nb: usize,
     bs: usize,
     runtime: &str,
@@ -600,24 +604,26 @@ fn run_cholesky_app(
     exec: ExecOpts,
 ) -> i32 {
     if args.has_flag("pjrt") {
-        eprintln!("--pjrt is sparselu-only (no Cholesky artifacts)");
+        eprintln!("--pjrt is sparselu-only (no {} artifacts)", w.name());
         return 2;
     }
     println!(
-        "cholesky: {nb}x{nb} blocks of {bs}x{bs} ({} SPD matrix), runtime={runtime}, threads={threads}",
-        nb * bs
+        "{}: nb={nb}, bs={bs} ({}), runtime={runtime}, threads={threads}",
+        w.name(),
+        w.description()
     );
-    let mut a = gen_spd(nb, bs);
-    let orig = sym_dense(&a);
+    let p = Params::new(nb, bs);
+    let mut a = w.make_input(&p, 0);
+    let orig = a.deep_clone();
     let t0 = std::time::Instant::now();
     match runtime {
-        "seq" => cholesky_seq(&mut a),
+        "seq" => w.reference_seq(&mut a),
         "dataflow-omp" => {
             let rt = OmpRuntime::new(threads);
-            let stats =
-                cholesky_dataflow(&DataflowRt::Omp(&rt), &mut a, exec);
+            let stats = run_workload(&DataflowRt::Omp(&rt), w, &mut a, exec)
+                .expect("dataflow run failed");
             rt.shutdown();
-            if !report_dataflow(|| TaskGraph::cholesky(nb), &exec, &stats) {
+            if !report_dataflow(|| w.graph_for(&orig), &exec, &stats) {
                 return 1;
             }
         }
@@ -627,25 +633,32 @@ fn run_cholesky_app(
                 Registry::new(),
             );
             let stats =
-                cholesky_dataflow(&DataflowRt::Gprm(&rt), &mut a, exec);
+                run_workload(&DataflowRt::Gprm(&rt), w, &mut a, exec)
+                    .expect("dataflow run failed");
             rt.shutdown();
-            if !report_dataflow(|| TaskGraph::cholesky(nb), &exec, &stats) {
+            if !report_dataflow(|| w.graph_for(&orig), &exec, &stats) {
                 return 1;
             }
         }
         other => {
             eprintln!(
-                "cholesky supports seq | dataflow-omp | dataflow-gprm, got {other:?}"
+                "{} supports seq | dataflow-omp | dataflow-gprm | pool, \
+                 got {other:?}",
+                w.name()
             );
             return 2;
         }
     }
     let dt = t0.elapsed();
-    let res = chol_residual_sparse(&orig, &a);
-    println!(
-        "factorised in {dt:.2?}; residual ‖A−LLᵀ‖/‖A‖ = {res:.2e}"
-    );
-    if res < 1e-3 {
+    let mut want = orig.deep_clone();
+    w.reference_seq(&mut want);
+    let bits = w.verify_bits(&a, &want);
+    let res = w.residual(&orig, &a);
+    println!("done in {dt:.2?}; residual = {res:.2e}");
+    if let Err(e) = &bits {
+        eprintln!("{e}");
+    }
+    if bits.is_ok() && res < 1e-3 {
         println!("verification PASS");
         0
     } else {

@@ -1,0 +1,118 @@
+//! The crate-level scheduling error — one typed surface for
+//! everything that can go wrong between declaring a workload and
+//! collecting its result.
+//!
+//! PR 4 introduced the typed [`SubmitError`] for capacity/shutdown
+//! pressure but left the other failure modes scattered: graph/matrix
+//! mismatches were `assert!`s, a poisoned pool job surfaced as a bare
+//! `String`, and executor-option misuse panicked. [`Error`] unifies
+//! them: every fallible entry point of the scheduling stack
+//! ([`crate::apps::dataflow::run_dataflow`],
+//! [`super::pool::PoolScope::submit`], [`super::pool::JobHandle::wait`],
+//! [`super::session::Session`]) returns this one type, which is
+//! `Display` + [`std::error::Error`] and never panics on an error
+//! path.
+
+use super::pool::SubmitError;
+
+/// Why a scheduling operation failed. Clonable (job results are
+/// broadcast to every waiter) and comparable (tests match variants).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// The pool did not accept the submission (graph too large for the
+    /// capacity, or the pool is shutting down). See [`SubmitError`].
+    Submit(SubmitError),
+    /// A task of the job panicked; the job was poisoned and the
+    /// message captured. Sibling jobs and the pool are unaffected.
+    Job(String),
+    /// The task graph's block grid does not match the matrix it was
+    /// asked to run over.
+    GridMismatch { graph_nb: usize, matrix_nb: usize },
+    /// The kernel table does not cover the graph's op vocabulary
+    /// (lengths must match — op ids index both).
+    KernelTable { ops: usize, kernels: usize },
+    /// No registered workload carries this name; see
+    /// [`super::workload::registry`] (CLI: `--list-apps`).
+    UnknownWorkload(String),
+    /// An inter-job dependency handle belongs to a different pool —
+    /// a foreign predecessor's completion could never re-run this
+    /// pool's admission pass, so the submission is rejected instead
+    /// of deadlocking.
+    CrossPoolDependency,
+    /// One-shot executor options ([`super::exec::ExecOpts`]) were
+    /// passed to a host that does not consult them (the persistent
+    /// pool always work-steals and records no event log).
+    ExecOpts(&'static str),
+    /// A host runtime refused the execution region (e.g. a nested or
+    /// shut-down runtime).
+    Host(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Submit(e) => write!(f, "{e}"),
+            Error::Job(msg) => write!(f, "job failed: {msg}"),
+            Error::GridMismatch { graph_nb, matrix_nb } => write!(
+                f,
+                "graph block grid {graph_nb}x{graph_nb} does not match \
+                 matrix grid {matrix_nb}x{matrix_nb}"
+            ),
+            Error::KernelTable { ops, kernels } => write!(
+                f,
+                "kernel table covers {kernels} ops but the graph's \
+                 vocabulary has {ops}"
+            ),
+            Error::UnknownWorkload(name) => write!(
+                f,
+                "unknown workload {name:?} (see `--list-apps` for the \
+                 registry)"
+            ),
+            Error::CrossPoolDependency => write!(
+                f,
+                "inter-job dependency handle belongs to a different \
+                 pool"
+            ),
+            Error::ExecOpts(msg) => write!(f, "{msg}"),
+            Error::Host(msg) => write!(f, "host runtime failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Submit(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<SubmitError> for Error {
+    fn from(e: SubmitError) -> Self {
+        Error::Submit(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_source() {
+        let e = Error::from(SubmitError::ShutDown);
+        assert_eq!(e.to_string(), "pool is shut down");
+        assert!(std::error::Error::source(&e).is_some());
+        let e = Error::Job("boom".into());
+        assert!(e.to_string().contains("boom"));
+        assert!(std::error::Error::source(&e).is_none());
+        let e = Error::GridMismatch { graph_nb: 4, matrix_nb: 5 };
+        assert!(e.to_string().contains("4x4"));
+        let e = Error::UnknownWorkload("qr".into());
+        assert!(e.to_string().contains("qr"));
+        let e = Error::KernelTable { ops: 4, kernels: 3 };
+        assert!(e.to_string().contains('3'));
+        let e = Error::CrossPoolDependency;
+        assert!(e.to_string().contains("different"));
+    }
+}

@@ -193,69 +193,24 @@ impl TaskGraph {
     /// Build the SparseLU DAG for an `nb×nb` allocation `pattern`
     /// (row-major booleans), tracking fill-in exactly like the
     /// sequential factorisation. Task order matches `sparselu_seq`.
+    /// The task stream itself is declared once, by the
+    /// [`Sparselu`](super::workload::Sparselu) registry entry.
     pub fn sparselu(pattern: &[bool], nb: usize) -> Self {
-        assert_eq!(pattern.len(), nb * nb, "pattern shape");
-        let mut alloc = pattern.to_vec();
         let mut b = GraphBuilder::new(nb);
-        for kk in 0..nb {
-            b.add_task(OP_LU0, &[], (kk, kk), false);
-            for jj in kk + 1..nb {
-                if alloc[kk * nb + jj] {
-                    b.add_task(OP_FWD, &[(kk, kk)], (kk, jj), false);
-                }
-            }
-            for ii in kk + 1..nb {
-                if alloc[ii * nb + kk] {
-                    b.add_task(OP_BDIV, &[(kk, kk)], (ii, kk), false);
-                }
-            }
-            for ii in kk + 1..nb {
-                if !alloc[ii * nb + kk] {
-                    continue;
-                }
-                for jj in kk + 1..nb {
-                    if !alloc[kk * nb + jj] {
-                        continue;
-                    }
-                    let fill_in = !alloc[ii * nb + jj];
-                    alloc[ii * nb + jj] = true;
-                    b.add_task(
-                        OP_BMOD,
-                        &[(ii, kk), (kk, jj)],
-                        (ii, jj),
-                        fill_in,
-                    );
-                }
-            }
-        }
+        super::workload::Sparselu::build_pattern(&mut b, pattern, nb);
         b.build(LU_OPS)
     }
 
     /// Build the tiled dense Cholesky DAG (lower-triangular storage)
     /// for an `nb×nb` block grid — Buttari et al.'s right-looking
-    /// tiled algorithm. Task order matches
-    /// [`crate::linalg::cholesky::cholesky_seq`], so any edge-
-    /// respecting execution is bit-identical (f32) to it.
+    /// tiled algorithm, declared by the
+    /// [`Cholesky`](super::workload::Cholesky) registry entry. Task
+    /// order matches [`crate::linalg::cholesky::cholesky_seq`], so any
+    /// edge-respecting execution is bit-identical (f32) to it.
     pub fn cholesky(nb: usize) -> Self {
-        let mut b = GraphBuilder::new(nb);
-        for kk in 0..nb {
-            b.add_task(OP_POTRF, &[], (kk, kk), false);
-            for ii in kk + 1..nb {
-                b.add_task(OP_TRSM, &[(kk, kk)], (ii, kk), false);
-            }
-            for ii in kk + 1..nb {
-                b.add_task(OP_SYRK, &[(ii, kk)], (ii, ii), false);
-                for jj in kk + 1..ii {
-                    b.add_task(
-                        OP_GEMM,
-                        &[(ii, kk), (jj, kk)],
-                        (ii, jj),
-                        false,
-                    );
-                }
-            }
-        }
-        b.build(CHOLESKY_OPS)
+        use super::workload::{Cholesky, Params, Workload as _};
+        // Block size is irrelevant to the graph structure.
+        Cholesky.graph(&Params::new(nb, 1))
     }
 
     /// Build the blocked dense matmul DAG `C = A·B` on an `nbc×nbc`
@@ -271,23 +226,11 @@ impl TaskGraph {
     /// blocks are never written, so the only edges are the per-`C`-
     /// block WAW/RAW chains over `k` — `nbc²` independent chains of
     /// length `nbc`, reproducing the sequential accumulation order
-    /// bit-for-bit while exposing `nbc²`-way parallelism.
+    /// bit-for-bit while exposing `nbc²`-way parallelism. Declared by
+    /// the [`Matmul`](super::workload::Matmul) registry entry.
     pub fn matmul(nbc: usize) -> Self {
-        assert!(nbc > 0);
-        let mut b = GraphBuilder::new(2 * nbc);
-        for kk in 0..nbc {
-            for ii in 0..nbc {
-                for jj in 0..nbc {
-                    b.add_task(
-                        OP_MADD,
-                        &[(ii, nbc + kk), (nbc + kk, jj)],
-                        (ii, jj),
-                        false,
-                    );
-                }
-            }
-        }
-        b.build(MATMUL_OPS)
+        use super::workload::{Matmul, Params, Workload as _};
+        Matmul.graph(&Params::new(nbc, 1))
     }
 
     pub fn nb(&self) -> usize {

@@ -36,20 +36,42 @@
 //!   poisons only its own job; shutdown is graceful. This is the
 //!   service layer the one-shot executors lack: a stream of
 //!   factorisation requests shares one warm team and overlaps
-//!   independent DAGs.
+//!   independent DAGs. Submissions may name prior jobs as
+//!   predecessors ([`pool::PoolScope::submit_after`]): admission is
+//!   deferred until they complete, ordering cross-job pipelines
+//!   without client-side waits.
+//! * [`workload`] — the **first-class workload layer**: the
+//!   [`workload::Workload`] trait bundles what used to be scattered
+//!   (task stream, kernel table, input generator, sequential
+//!   reference, verifier, flop pricing, simulator cost, phase straw
+//!   man) and [`workload::registry`] is the single inventory the
+//!   drivers, simulator, CLI, harness and benches iterate.
+//! * [`session`] — the fluent submission front end:
+//!   [`session::Session`] owns inputs/graphs, submits registry jobs
+//!   (`.job(Sparselu::params(nb, bs)).after(&h).submit()?`) and
+//!   collects outputs, replacing the raw scope/submit pairing for
+//!   workload jobs.
+//! * [`error`] — [`error::Error`]: the one typed failure surface of
+//!   the whole stack (`Display` + `std::error::Error`, never panics
+//!   on an error path).
 //!
 //! The simulator counterpart is [`crate::tilesim::sim_dataflow`]
 //! (including the pool-vs-one-shot launch models); the drivers wired
 //! to this scheduler are in [`crate::apps`]
 //! (`sparselu_dataflow`, `cholesky_dataflow`, `matmul_dataflow` and
-//! their `_batch` forms).
+//! their `_batch` forms, all thin wrappers over the registry-generic
+//! [`crate::apps::dataflow::run_workload`]).
 
 pub mod deque;
+pub mod error;
 pub mod exec;
 pub mod graph;
 pub mod pool;
+pub mod session;
+pub mod workload;
 
 pub use deque::{Steal, StealDeque};
+pub use error::Error;
 pub use exec::{
     check_event_ordering, execute_gprm, execute_gprm_opts, execute_omp,
     execute_omp_opts, Event, ExecOpts, ExecStats,
@@ -60,3 +82,7 @@ pub use graph::{
     OP_MADD, OP_POTRF, OP_SYRK, OP_TRSM,
 };
 pub use pool::{JobHandle, Pool, PoolConfig, PoolScope, SubmitError};
+pub use session::{JobBuilder, JobResult, JobSpec, Session};
+pub use workload::{
+    BlockKernel, Cholesky, Matmul, Params, Sparselu, TaskCost, Workload,
+};

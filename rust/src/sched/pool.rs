@@ -29,7 +29,21 @@
 //!   kernels, the countdown still drains, the waiter gets `Err`);
 //!   other jobs and the pool itself are untouched;
 //! * **graceful shutdown** — admitted jobs drain, queued jobs are
-//!   failed with a typed error, workers then exit and join.
+//!   failed with a typed error, workers then exit and join;
+//! * **inter-job dependencies** — a submission may name prior
+//!   [`JobHandle`]s as predecessors ([`PoolScope::submit_after`], or
+//!   [`super::session::Session`]'s fluent `.after(&h)`): the pool
+//!   defers *admission* of the job until every named predecessor
+//!   completed, so none of its tasks is even published before the
+//!   predecessors' results are final. Handles can only name
+//!   earlier-submitted jobs, so the dependency relation is acyclic by
+//!   construction and the FIFO head's predecessors are never queued
+//!   behind it — deferred admission cannot deadlock (handles from a
+//!   *different* pool are rejected with a typed error for the same
+//!   reason). Dependencies are ordering-only: a dependent still runs
+//!   (on whatever state its predecessor left) if the predecessor was
+//!   poisoned. An empty graph completes at its admission point, so it
+//!   serves as a join/barrier node in dependency chains.
 //!
 //! # Submission and borrow safety
 //!
@@ -70,6 +84,7 @@
 //! `executed`/`peak_ready` stats.
 
 use super::deque::{Steal, StealDeque};
+use super::error::Error;
 use super::exec::{Backoff, ExecStats};
 use super::graph::{TaskGraph, TaskId};
 use std::cell::UnsafeCell;
@@ -168,8 +183,10 @@ struct JobWork {
     run: Box<dyn Fn(TaskId) + Send + Sync>,
 }
 
-/// One submitted job's shared state.
-struct JobInner {
+/// One submitted job's shared state. `pub(crate)` so the fluent
+/// [`super::session::Session`] front end can hold and wait on jobs;
+/// every field stays private to this module.
+pub(crate) struct JobInner {
     /// `(slot, generation)` prefix of this job's packed task ids; set
     /// at admission (under the admission lock, before any root is
     /// published).
@@ -187,8 +204,16 @@ struct JobInner {
     /// their kernels but still drain the countdown.
     poisoned: AtomicBool,
     panic_msg: Mutex<Option<String>>,
+    /// Identity of the owning pool (address of its `PoolShared`):
+    /// dependency handles are validated against it at submission, so
+    /// a foreign pool's handle is a typed error instead of a stalled
+    /// admission.
+    pool_id: usize,
+    /// Jobs that must complete before this one is admitted
+    /// (inter-job dependencies; ordering-only). Fixed at submission.
+    deps: Vec<Arc<JobInner>>,
     /// Completion cell: `Some(result)` once finished; `cv` signals.
-    done: Mutex<Option<Result<ExecStats, String>>>,
+    done: Mutex<Option<Result<ExecStats, Error>>>,
     cv: Condvar,
     /// Ready-set stats (relaxed, approximate — like the one-shot
     /// stealing executor's).
@@ -213,14 +238,14 @@ impl JobInner {
         (*self.work.get()).as_ref().expect("job work already freed")
     }
 
-    fn finish(&self, result: Result<ExecStats, String>) {
+    fn finish(&self, result: Result<ExecStats, Error>) {
         let mut done = self.done.lock().unwrap();
         debug_assert!(done.is_none(), "job finished twice");
         *done = Some(result);
         self.cv.notify_all();
     }
 
-    fn wait_done(&self) -> Result<ExecStats, String> {
+    pub(crate) fn wait_done(&self) -> Result<ExecStats, Error> {
         let mut done = self.done.lock().unwrap();
         loop {
             if let Some(r) = done.as_ref() {
@@ -228,6 +253,15 @@ impl JobInner {
             }
             done = self.cv.wait(done).unwrap();
         }
+    }
+
+    /// Every named predecessor has completed (ordering-only: a failed
+    /// predecessor still counts as done). Called under the admission
+    /// lock; the `adm → done` lock order is the one `complete` uses.
+    fn deps_done(&self) -> bool {
+        self.deps
+            .iter()
+            .all(|d| d.done.lock().unwrap().is_some())
     }
 }
 
@@ -303,16 +337,35 @@ impl PoolShared {
         }
     }
 
-    /// Admit pending jobs FIFO while a slot is free and the in-flight
-    /// task budget holds; seed their roots through the injector.
-    /// Head-of-line blocking is deliberate: admission order equals
-    /// submission order (fairness over packing).
+    /// Admit pending jobs FIFO while a slot is free, the in-flight
+    /// task budget holds, and the head's inter-job dependencies have
+    /// completed; seed their roots through the injector. Head-of-line
+    /// blocking is deliberate: admission order equals submission
+    /// order (fairness over packing). Dependency stalls resolve
+    /// because a predecessor's `complete` re-runs this admission pass
+    /// after marking itself done, and predecessors are always
+    /// submitted (hence queued) ahead of their dependents.
     fn try_admit(&self) {
         let mut admitted_any = false;
         let mut adm = self.adm.lock().unwrap();
         loop {
             let Some(head) = adm.pending.front() else { break };
+            if !head.deps_done() {
+                break;
+            }
             let n = head.n_tasks;
+            if n == 0 {
+                // Empty graph: completes at its admission point (no
+                // slot, no budget, no worker) — a join/barrier node
+                // whose dependents may now follow.
+                let job = adm.pending.pop_front().unwrap();
+                // SAFETY: never admitted, so no worker ever saw it.
+                unsafe {
+                    *job.work.get() = None;
+                }
+                job.finish(Ok(ExecStats::default()));
+                continue;
+            }
             if adm.free_slots.is_empty()
                 || adm.inflight + n > self.task_capacity
             {
@@ -368,7 +421,7 @@ impl PoolShared {
         }
         self.active_jobs.fetch_sub(1, Ordering::SeqCst);
         let result = match job.panic_msg.lock().unwrap().take() {
-            Some(msg) => Err(msg),
+            Some(msg) => Err(Error::Job(msg)),
             None => Ok(ExecStats {
                 executed: job.n_tasks,
                 events: Vec::new(),
@@ -611,12 +664,74 @@ impl Pool {
         &self,
         graph: &TaskGraph,
         run: impl Fn(TaskId) + Send + Sync,
-    ) -> Result<ExecStats, String> {
-        self.scope(|s| {
-            s.submit(graph, run)
-                .map_err(|e| e.to_string())?
-                .wait()
-        })
+    ) -> Result<ExecStats, Error> {
+        self.scope(|s| s.submit(graph, run)?.wait())
+    }
+
+    /// Core submission path shared by [`PoolScope`] and the fluent
+    /// [`super::session::Session`]: register a job whose `graph` and
+    /// `run` borrows have already been erased to `'static`, naming
+    /// `deps` as admission predecessors.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee every borrow behind `graph` and
+    /// inside `run` stays valid until the job completes — `complete`
+    /// frees both before releasing any waiter, so "completes" is the
+    /// exact lifetime bound. Both front ends uphold it: a `PoolScope`
+    /// blocks at scope end, a `Session` waits in its destructor.
+    pub(crate) unsafe fn submit_erased(
+        &self,
+        graph: *const TaskGraph,
+        run: Box<dyn Fn(TaskId) + Send + Sync + 'static>,
+        deps: Vec<Arc<JobInner>>,
+    ) -> Result<Arc<JobInner>, Error> {
+        let shared = &self.shared;
+        let pool_id = Arc::as_ptr(shared) as usize;
+        if deps.iter().any(|d| d.pool_id != pool_id) {
+            // A foreign predecessor's completion would never re-run
+            // this pool's admission pass: reject instead of stalling.
+            return Err(Error::CrossPoolDependency);
+        }
+        let n = (*graph).len();
+        if n > shared.task_capacity || n >= MAX_JOB_TASKS {
+            return Err(Error::Submit(SubmitError::GraphTooLarge {
+                tasks: n,
+                capacity: shared.task_capacity.min(MAX_JOB_TASKS - 1),
+            }));
+        }
+        let job = Arc::new(JobInner {
+            packed_base: AtomicUsize::new(0),
+            n_tasks: n,
+            work: UnsafeCell::new(Some(JobWork { graph, run })),
+            indegree: (*graph)
+                .indegrees()
+                .iter()
+                .map(|&d| AtomicUsize::new(d))
+                .collect(),
+            remaining: AtomicUsize::new(n),
+            poisoned: AtomicBool::new(false),
+            panic_msg: Mutex::new(None),
+            pool_id,
+            deps,
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+            ready_len: AtomicUsize::new(0),
+            peak_ready: AtomicUsize::new(0),
+        });
+        // Every job — including an empty graph — goes through the
+        // FIFO queue: an empty job completes at its *admission* point
+        // (once its dependencies drained), so it works as a join/
+        // barrier node and keeps transitive ordering intact.
+        {
+            let mut adm = shared.adm.lock().unwrap();
+            if adm.shutting_down {
+                return Err(Error::Submit(SubmitError::ShutDown));
+            }
+            adm.pending.push_back(job.clone());
+        }
+        shared.try_admit();
+        Ok(job)
     }
 
     /// Graceful shutdown: stop accepting jobs, fail anything still
@@ -641,7 +756,7 @@ impl Pool {
             unsafe {
                 *job.work.get() = None;
             }
-            job.finish(Err(SubmitError::ShutDown.to_string()));
+            job.finish(Err(Error::Submit(SubmitError::ShutDown)));
         }
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.wake_all();
@@ -671,20 +786,35 @@ impl<'env> PoolScope<'_, 'env> {
     /// one-shot executors' `run`. Returns immediately; the job runs
     /// as capacity allows. Never blocks, never panics on capacity:
     /// jobs that do not fit *yet* queue FIFO, only impossible jobs
-    /// are rejected.
+    /// are rejected (typed [`Error`]).
     pub fn submit(
         &self,
         graph: &'env TaskGraph,
         run: impl Fn(TaskId) + Send + Sync + 'env,
-    ) -> Result<JobHandle, SubmitError> {
-        let shared = &self.pool.shared;
-        let n = graph.len();
-        if n > shared.task_capacity || n >= MAX_JOB_TASKS {
-            return Err(SubmitError::GraphTooLarge {
-                tasks: n,
-                capacity: shared.task_capacity.min(MAX_JOB_TASKS - 1),
-            });
-        }
+    ) -> Result<JobHandle, Error> {
+        self.submit_after(graph, run, &[])
+    }
+
+    /// [`Self::submit`], with inter-job dependencies: the pool defers
+    /// this job's admission until every job in `after` completed, so
+    /// cross-job read-after-write chains (job B consuming job A's
+    /// output) are ordered without any caller-side waiting — the
+    /// handles themselves are the dependency declaration.
+    ///
+    /// Dependencies are ordering-only (a poisoned predecessor still
+    /// releases its dependents). A handle from a *different* pool is
+    /// rejected with [`Error::CrossPoolDependency`] — a foreign
+    /// completion could never re-run this pool's admission. Handles
+    /// can only name earlier submissions, so cycles are impossible by
+    /// construction. An empty graph submitted with dependencies acts
+    /// as a join/barrier node: it completes once its predecessors
+    /// drained, and jobs named `after` it stay transitively ordered.
+    pub fn submit_after(
+        &self,
+        graph: &'env TaskGraph,
+        run: impl Fn(TaskId) + Send + Sync + 'env,
+        after: &[&JobHandle],
+    ) -> Result<JobHandle, Error> {
         // SAFETY (lifetime erasure): the scope blocks until this job
         // completes, and `complete` frees the closure and graph borrow
         // before releasing the waiter — so nothing borrowed is touched
@@ -697,43 +827,14 @@ impl<'env> PoolScope<'_, 'env> {
                 Box<dyn Fn(TaskId) + Send + Sync + 'static>,
             >(run)
         };
-        let job = Arc::new(JobInner {
-            packed_base: AtomicUsize::new(0),
-            n_tasks: n,
-            work: UnsafeCell::new(Some(JobWork {
-                graph: graph as *const TaskGraph,
-                run,
-            })),
-            indegree: graph
-                .indegrees()
-                .iter()
-                .map(|&d| AtomicUsize::new(d))
-                .collect(),
-            remaining: AtomicUsize::new(n),
-            poisoned: AtomicBool::new(false),
-            panic_msg: Mutex::new(None),
-            done: Mutex::new(None),
-            cv: Condvar::new(),
-            ready_len: AtomicUsize::new(0),
-            peak_ready: AtomicUsize::new(0),
-        });
-        if n == 0 {
-            // Degenerate empty graph: complete on the spot (no worker
-            // involvement, so free the work cell here).
-            unsafe {
-                *job.work.get() = None;
-            }
-            job.finish(Ok(ExecStats::default()));
-        } else {
-            {
-                let mut adm = shared.adm.lock().unwrap();
-                if adm.shutting_down {
-                    return Err(SubmitError::ShutDown);
-                }
-                adm.pending.push_back(job.clone());
-            }
-            shared.try_admit();
-        }
+        let deps: Vec<Arc<JobInner>> =
+            after.iter().map(|h| h.job.clone()).collect();
+        // SAFETY: the scope guard waits for completion before `'env`
+        // ends (even on leak or panic), which is exactly the
+        // `submit_erased` contract.
+        let job = unsafe {
+            self.pool.submit_erased(graph as *const TaskGraph, run, deps)
+        }?;
         self.jobs.lock().unwrap().push(job.clone());
         Ok(JobHandle { job })
     }
@@ -741,17 +842,29 @@ impl<'env> PoolScope<'_, 'env> {
 
 /// Handle to one submitted job. Dropping it does **not** detach or
 /// cancel the job — the owning scope still waits for completion;
-/// `wait` just surfaces this job's result early.
+/// `wait` just surfaces this job's result early, and the handle is
+/// how later submissions name this job as a predecessor
+/// ([`PoolScope::submit_after`]).
+#[must_use = "a JobHandle is how a job's result (or failure) is \
+              observed and how later jobs depend on it"]
 pub struct JobHandle {
     job: Arc<JobInner>,
 }
 
 impl JobHandle {
-    /// Block until the job finishes; returns its stats, or the panic
-    /// message if the job was poisoned. Idempotent. Must not be
-    /// called from inside a pool task (the worker would wait on
+    pub(crate) fn from_inner(job: Arc<JobInner>) -> Self {
+        Self { job }
+    }
+
+    pub(crate) fn inner(&self) -> &Arc<JobInner> {
+        &self.job
+    }
+
+    /// Block until the job finishes; returns its stats, or
+    /// [`Error::Job`] if the job was poisoned. Idempotent. Must not
+    /// be called from inside a pool task (the worker would wait on
     /// itself).
-    pub fn wait(&self) -> Result<ExecStats, String> {
+    pub fn wait(&self) -> Result<ExecStats, Error> {
         self.job.wait_done()
     }
 
@@ -881,10 +994,10 @@ mod tests {
             let err = s.submit(&big, |_| {}).unwrap_err();
             assert_eq!(
                 err,
-                SubmitError::GraphTooLarge {
+                Error::Submit(SubmitError::GraphTooLarge {
                     tasks: big.len(),
                     capacity: 10
-                }
+                })
             );
             assert!(err.to_string().contains("exceeds"));
             // Pool still fully functional for jobs that fit.
@@ -962,7 +1075,11 @@ mod tests {
                 })
                 .unwrap();
             let e = bad.wait().unwrap_err();
-            assert!(e.contains("pool job exploded"), "{e}");
+            assert!(
+                e.to_string().contains("pool job exploded"),
+                "{e}"
+            );
+            assert!(matches!(e, Error::Job(_)));
             // Idempotent error.
             assert!(bad.wait().is_err());
             assert_eq!(good.wait().unwrap().executed, g.len());
@@ -1018,7 +1135,7 @@ mod tests {
         pool.shared.adm.lock().unwrap().shutting_down = true;
         pool.scope(|s| {
             let err = s.submit(&g, |_| {}).unwrap_err();
-            assert_eq!(err, SubmitError::ShutDown);
+            assert_eq!(err, Error::Submit(SubmitError::ShutDown));
         });
         pool.shutdown();
     }
@@ -1057,5 +1174,202 @@ mod tests {
         let g = lu_graph(5);
         pool.run(&g, |_| {}).unwrap();
         drop(pool); // must join without hanging
+    }
+
+    #[test]
+    fn after_dependency_orders_cross_job() {
+        // Job B names job A as a predecessor: not one task of B may
+        // start before every task of A completed, even though both
+        // are submitted back-to-back and A's kernels are slow.
+        let pool = Pool::new(4);
+        let g1 = lu_graph(8);
+        let g2 = lu_graph(8);
+        let a_done = AtomicUsize::new(0);
+        let violated = AtomicBool::new(false);
+        pool.scope(|s| {
+            let a = s
+                .submit(&g1, |_| {
+                    for _ in 0..2_000 {
+                        std::hint::spin_loop();
+                    }
+                    a_done.fetch_add(1, Ordering::SeqCst);
+                })
+                .unwrap();
+            let b = s
+                .submit_after(
+                    &g2,
+                    |_| {
+                        if a_done.load(Ordering::SeqCst) != g1.len() {
+                            violated.store(true, Ordering::SeqCst);
+                        }
+                    },
+                    &[&a],
+                )
+                .unwrap();
+            assert_eq!(b.wait().unwrap().executed, g2.len());
+            assert!(a.is_done(), "predecessor must have completed");
+        });
+        assert!(
+            !violated.load(Ordering::SeqCst),
+            "a task of B ran before A drained"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn after_dependency_on_finished_job_admits_immediately() {
+        let pool = Pool::new(2);
+        let g = lu_graph(5);
+        pool.scope(|s| {
+            let a = s.submit(&g, |_| {}).unwrap();
+            a.wait().unwrap();
+            let b = s.submit_after(&g, |_| {}, &[&a]).unwrap();
+            assert_eq!(b.wait().unwrap().executed, g.len());
+        });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dependency_chain_of_three_is_fully_serial() {
+        let pool = Pool::new(4);
+        let g = lu_graph(6);
+        let n = g.len();
+        let counter = AtomicUsize::new(0);
+        let bad = AtomicBool::new(false);
+        pool.scope(|s| {
+            let check = |lo: usize| {
+                let counter = &counter;
+                let bad = &bad;
+                move |_: TaskId| {
+                    let c = counter.fetch_add(1, Ordering::SeqCst);
+                    if c < lo {
+                        bad.store(true, Ordering::SeqCst);
+                    }
+                }
+            };
+            let a = s.submit(&g, check(0)).unwrap();
+            let b = s.submit_after(&g, check(n), &[&a]).unwrap();
+            let c = s.submit_after(&g, check(2 * n), &[&a, &b]).unwrap();
+            assert_eq!(c.wait().unwrap().executed, n);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 3 * g.len());
+        assert!(!bad.load(Ordering::SeqCst), "chain order violated");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn poisoned_dependency_still_releases_dependent() {
+        // Ordering-only semantics: a failed predecessor completes,
+        // so its dependents run (on whatever state it left).
+        let pool = Pool::new(3);
+        let g = lu_graph(6);
+        let ran = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let a = s
+                .submit(&g, |t| {
+                    if t.0 == 1 {
+                        panic!("dep exploded");
+                    }
+                })
+                .unwrap();
+            let b = s
+                .submit_after(
+                    &g,
+                    |_| {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    },
+                    &[&a],
+                )
+                .unwrap();
+            assert!(a.wait().is_err());
+            assert_eq!(b.wait().unwrap().executed, g.len());
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), g.len());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn cross_pool_dependency_is_rejected_not_deadlocked() {
+        let pool_a = Pool::new(2);
+        let pool_b = Pool::new(2);
+        let g = lu_graph(5);
+        pool_a.scope(|sa| {
+            let a = sa.submit(&g, |_| {}).unwrap();
+            pool_b.scope(|sb| {
+                let err = sb.submit_after(&g, |_| {}, &[&a]).unwrap_err();
+                assert_eq!(err, Error::CrossPoolDependency);
+                // pool_b stays fully usable.
+                let ok = sb.submit(&g, |_| {}).unwrap();
+                assert_eq!(ok.wait().unwrap().executed, g.len());
+            });
+            a.wait().unwrap();
+        });
+        pool_a.shutdown();
+        pool_b.shutdown();
+    }
+
+    #[test]
+    fn empty_job_is_a_barrier_preserving_transitive_order() {
+        // A (slow) -> E (empty) -> C: C's tasks must observe all of
+        // A's, even though E carries no tasks of its own — the empty
+        // job completes at its admission point, after its deps.
+        let pool = Pool::new(4);
+        let g = lu_graph(7);
+        let empty = GraphBuilder::new(1).build(crate::sched::LU_OPS);
+        assert_eq!(empty.len(), 0);
+        let a_done = AtomicUsize::new(0);
+        let violated = AtomicBool::new(false);
+        pool.scope(|s| {
+            let a = s
+                .submit(&g, |_| {
+                    for _ in 0..2_000 {
+                        std::hint::spin_loop();
+                    }
+                    a_done.fetch_add(1, Ordering::SeqCst);
+                })
+                .unwrap();
+            let e = s.submit_after(&empty, |_| unreachable!(), &[&a]).unwrap();
+            let c = s
+                .submit_after(
+                    &g,
+                    |_| {
+                        if a_done.load(Ordering::SeqCst) != g.len() {
+                            violated.store(true, Ordering::SeqCst);
+                        }
+                    },
+                    &[&e],
+                )
+                .unwrap();
+            assert_eq!(c.wait().unwrap().executed, g.len());
+            assert!(e.is_done());
+        });
+        assert!(
+            !violated.load(Ordering::SeqCst),
+            "a task of C ran before A drained (through the empty join)"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dependency_plus_capacity_pressure_no_deadlock() {
+        // Capacity admits only one copy of the graph at a time AND
+        // the stream carries dependency edges: admission must stay
+        // live (FIFO + deps resolve front-to-back).
+        let g = lu_graph(6);
+        let pool = Pool::with_config(PoolConfig {
+            workers: 3,
+            task_capacity: g.len(),
+            max_jobs: 8,
+        });
+        pool.scope(|s| {
+            let a = s.submit(&g, |_| {}).unwrap();
+            let b = s.submit_after(&g, |_| {}, &[&a]).unwrap();
+            let c = s.submit(&g, |_| {}).unwrap();
+            let d = s.submit_after(&g, |_| {}, &[&b, &c]).unwrap();
+            for h in [&a, &b, &c, &d] {
+                assert_eq!(h.wait().unwrap().executed, g.len());
+            }
+        });
+        pool.shutdown();
     }
 }

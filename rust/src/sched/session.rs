@@ -1,0 +1,534 @@
+//! The fluent, registry-driven client of the persistent pool:
+//! [`Session`] replaces the raw [`Pool::scope`] /
+//! [`PoolScope::submit`](super::pool::PoolScope::submit) pairing for
+//! workload jobs.
+//!
+//! A session owns everything a job needs — the input matrix (built
+//! from the workload's declaration or supplied by the caller), the
+//! task graph (cached per workload/size, so a stream of identical
+//! jobs builds it once) and the erased kernel closure — and submits
+//! it to a borrowed [`Pool`]. Because the session *owns* the borrows
+//! and waits for every job in its destructor, the usual
+//! scope-callback shape disappears; submissions read like a plan:
+//!
+//! ```text
+//! let pool = Pool::new(8);
+//! let mut s = Session::new(&pool);
+//! let a = s.job(Sparselu::params(nb, bs)).submit()?;
+//! let b = s.job(Cholesky::params(nb, bs)).after(&a).submit()?;
+//! let stats = b.wait()?;                 // b ran strictly after a
+//! let results = s.finish()?;             // outputs + stats, in order
+//! ```
+//!
+//! `.after(&handle)` declares an **inter-job dependency**: the pool
+//! defers the job's admission until the named predecessors completed
+//! (see [`super::pool`] — this is a pool capability, not a client-side
+//! wait), so cross-job read-after-write pipelines order themselves.
+//! A handle from a different pool is rejected with
+//! [`Error::CrossPoolDependency`].
+//!
+//! For a long-lived request stream, retire jobs as they finish:
+//! [`Session::take_output`] waits for one job, hands its matrix back
+//! and **frees all of the session's per-job state** (the completion
+//! record and, for per-input graphs, the graph itself), so a
+//! steady-state serve loop holds memory for in-flight jobs only.
+//!
+//! # Borrow safety
+//!
+//! Submitted closures reference the session-owned graph and matrix
+//! allocations. The erasure to `'static` is sound for the same reason
+//! [`Pool::scope`]'s is: the pool frees the closure *before*
+//! releasing any waiter, and the session waits for a job (in
+//! [`Session::finish`], [`Session::take_output`] or its `Drop`)
+//! before that job's allocations can drop. Graphs are held behind
+//! `Arc` and matrices behind `Box`, so growing or pruning the
+//! session's lists never moves a live job's referents.
+
+use super::error::Error;
+use super::exec::ExecStats;
+use super::graph::TaskGraph;
+use super::pool::{JobHandle, JobInner, Pool};
+use super::workload::{kernel_runner, Params, Workload};
+use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
+use std::sync::Arc;
+
+/// What to run: a registered workload plus its sizing. Construct via
+/// the workloads' inherent helpers ([`Sparselu::params`],
+/// [`Cholesky::params`], [`Matmul::params`]) or [`JobSpec::new`] for
+/// a dynamic registry entry.
+///
+/// [`Sparselu::params`]: super::workload::Sparselu::params
+/// [`Cholesky::params`]: super::workload::Cholesky::params
+/// [`Matmul::params`]: super::workload::Matmul::params
+#[derive(Clone, Copy)]
+pub struct JobSpec {
+    pub workload: &'static dyn Workload,
+    pub params: Params,
+}
+
+impl JobSpec {
+    pub fn new(
+        workload: &'static dyn Workload,
+        nb: usize,
+        bs: usize,
+    ) -> Self {
+        Self { workload, params: Params::new(nb, bs) }
+    }
+}
+
+/// One finished job's deliverables, in submission order (from
+/// [`Session::finish`]).
+pub struct JobResult {
+    /// The registry entry that defined the job.
+    pub workload: &'static dyn Workload,
+    /// The transformed matrix (factorised in place / product filled).
+    pub output: BlockedSparseMatrix,
+    pub stats: ExecStats,
+}
+
+/// Session-owned state of one submitted job.
+struct SessionJob {
+    workload: &'static dyn Workload,
+    /// Boxed so the erased closure's pointer survives list growth;
+    /// consumed by [`Session::take_output`] / [`Session::finish`].
+    shared: Box<SharedBlocked>,
+    /// Keeps the job's graph alive (shared with the canonical cache,
+    /// or this job's own for per-input graphs).
+    graph: Arc<TaskGraph>,
+    inner: Arc<JobInner>,
+}
+
+/// Canonical-graph cache key: `(workload, nb, bs)`.
+type GraphKey = (&'static str, usize, usize);
+
+/// Fluent submission front end over a borrowed [`Pool`]. See the
+/// module docs.
+pub struct Session<'p> {
+    pool: &'p Pool,
+    jobs: Vec<SessionJob>,
+    /// Canonical graphs only; per-input graphs are owned by their
+    /// [`SessionJob`] alone (and freed when the job is taken).
+    graphs: Vec<(GraphKey, Arc<TaskGraph>)>,
+}
+
+impl<'p> Session<'p> {
+    pub fn new(pool: &'p Pool) -> Self {
+        Self { pool, jobs: Vec::new(), graphs: Vec::new() }
+    }
+
+    /// Start describing a job. Chain [`JobBuilder::input`],
+    /// [`JobBuilder::canonical_input`], [`JobBuilder::seed`] and
+    /// [`JobBuilder::after`], then [`JobBuilder::submit`].
+    pub fn job(&mut self, spec: JobSpec) -> JobBuilder<'_, 'p> {
+        JobBuilder {
+            session: self,
+            spec,
+            seed: 0,
+            input: None,
+            canonical: true,
+            after: Vec::new(),
+        }
+    }
+
+    /// Pre-build (and cache) the canonical graph for `spec`, so later
+    /// submissions with canonical inputs pay no graph construction —
+    /// keeps timed submission loops down to queue operations.
+    pub fn prepare(&mut self, spec: JobSpec) {
+        let w = spec.workload;
+        let p = spec.params;
+        self.canonical_graph(w, &p);
+    }
+
+    fn canonical_graph(
+        &mut self,
+        w: &'static dyn Workload,
+        p: &Params,
+    ) -> Arc<TaskGraph> {
+        let key: GraphKey = (w.name(), p.nb, p.bs);
+        if let Some((_, g)) = self.graphs.iter().find(|(k, _)| *k == key)
+        {
+            return g.clone();
+        }
+        let g = Arc::new(w.graph(p));
+        self.graphs.push((key, g.clone()));
+        g
+    }
+
+    /// Jobs currently tracked by the session (submitted and not yet
+    /// taken).
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Wait for every tracked job; per-job stats in submission order,
+    /// or the first job failure (after all jobs drained — a poisoned
+    /// job never strands its siblings' results).
+    pub fn wait_all(&self) -> Result<Vec<ExecStats>, Error> {
+        let results: Vec<Result<ExecStats, Error>> =
+            self.jobs.iter().map(|j| j.inner.wait_done()).collect();
+        results.into_iter().collect()
+    }
+
+    /// Wait for `h`'s job, move its output matrix out of the session
+    /// and **retire the job**: its completion record and (for
+    /// per-input graphs) its graph are freed, so a long-lived session
+    /// serving a stream stays bounded by its in-flight jobs. `None`
+    /// if the handle does not belong to this session or the job was
+    /// already taken. A poisoned job's (partial) matrix is still
+    /// returned — the typed failure is what [`JobHandle::wait`]
+    /// reports.
+    pub fn take_output(
+        &mut self,
+        h: &JobHandle,
+    ) -> Option<BlockedSparseMatrix> {
+        let idx = self
+            .jobs
+            .iter()
+            .position(|j| Arc::ptr_eq(&j.inner, h.inner()))?;
+        // Wait first: completion frees the erased closure, so no
+        // borrow of the graph or the shared cell survives this point
+        // and the whole SessionJob may drop.
+        let _ = self.jobs[idx].inner.wait_done();
+        let job = self.jobs.remove(idx);
+        Some(job.shared.into_inner())
+    }
+
+    /// Wait for everything and return each (not-yet-taken) job's
+    /// output and stats, in submission order. The first job failure
+    /// is propagated instead (after all jobs drained).
+    pub fn finish(mut self) -> Result<Vec<JobResult>, Error> {
+        let stats = self.wait_all()?;
+        let mut out = Vec::with_capacity(self.jobs.len());
+        for (job, stats) in self.jobs.drain(..).zip(stats) {
+            out.push(JobResult {
+                workload: job.workload,
+                output: job.shared.into_inner(),
+                stats,
+            });
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Session<'_> {
+    /// The borrow-soundness backstop: every tracked job completes
+    /// (and the pool frees its erased closure) before the session's
+    /// graphs and matrices drop — even on panic or early return.
+    fn drop(&mut self) {
+        for job in &self.jobs {
+            let _ = job.inner.wait_done();
+        }
+    }
+}
+
+/// In-flight description of one job (see [`Session::job`]).
+pub struct JobBuilder<'s, 'p> {
+    session: &'s mut Session<'p>,
+    spec: JobSpec,
+    seed: u32,
+    input: Option<BlockedSparseMatrix>,
+    /// The supplied input is structurally the canonical one, so the
+    /// shared graph cache applies.
+    canonical: bool,
+    after: Vec<Arc<JobInner>>,
+}
+
+impl JobBuilder<'_, '_> {
+    /// Supply the input matrix instead of generating it from the
+    /// workload's declaration. The graph is then derived from *this*
+    /// matrix ([`Workload::graph_for`]) and not shared with other
+    /// jobs.
+    pub fn input(mut self, a: BlockedSparseMatrix) -> Self {
+        self.input = Some(a);
+        self.canonical = false;
+        self
+    }
+
+    /// Supply a pre-built input that is structurally identical to the
+    /// workload's own `make_input` output for these params (e.g. a
+    /// `deep_clone` made outside a timed region): the session's
+    /// shared per-`(workload, nb, bs)` graph cache is used, unlike
+    /// [`Self::input`] which derives a fresh per-input graph.
+    ///
+    /// Sizing mismatches are rejected with a typed error at
+    /// [`Self::submit`]. The structural part of the promise is the
+    /// caller's contract: an input whose sparsity pattern *differs*
+    /// from the canonical one either poisons the job typed
+    /// ([`Error::Job`], a task names a missing block) or — for a
+    /// strict superset pattern — yields a result that is not the
+    /// transform of the supplied matrix (exactly as with a stale
+    /// graph on the raw [`crate::apps::dataflow::run_dataflow`]
+    /// path). When in doubt, use [`Self::input`].
+    pub fn canonical_input(mut self, a: BlockedSparseMatrix) -> Self {
+        self.input = Some(a);
+        self.canonical = true;
+        self
+    }
+
+    /// Seed for the workload's input generator (default 0; ignored
+    /// when an input was supplied).
+    pub fn seed(mut self, seed: u32) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Declare an inter-job dependency: this job is not admitted
+    /// until `h`'s job completed. May be chained for multiple
+    /// predecessors. A handle from a different pool is rejected at
+    /// [`Self::submit`] with [`Error::CrossPoolDependency`].
+    pub fn after(mut self, h: &JobHandle) -> Self {
+        self.after.push(h.inner().clone());
+        self
+    }
+
+    /// Submit the job; returns immediately with the pool's
+    /// [`JobHandle`] (capacity pressure queues; impossible jobs,
+    /// shutdown, sizing mismatches and cross-pool dependencies are
+    /// typed [`Error`]s).
+    pub fn submit(self) -> Result<JobHandle, Error> {
+        let JobBuilder { session, spec, seed, input, canonical, after } =
+            self;
+        let w = spec.workload;
+        let p = spec.params;
+        let input = match input {
+            Some(a) => a,
+            None => w.make_input(&p, seed),
+        };
+        let graph: Arc<TaskGraph> = if canonical {
+            session.canonical_graph(w, &p)
+        } else {
+            Arc::new(w.graph_for(&input))
+        };
+        // Pre-flight, mirroring `run_dataflow`'s job check: typed
+        // errors instead of a poisoned job for sizing mismatches.
+        if graph.nb() != input.nb() {
+            return Err(Error::GridMismatch {
+                graph_nb: graph.nb(),
+                matrix_nb: input.nb(),
+            });
+        }
+        if graph.ops().len() != w.kernels().len() {
+            return Err(Error::KernelTable {
+                ops: graph.ops().len(),
+                kernels: w.kernels().len(),
+            });
+        }
+        let graph_ptr: *const TaskGraph = &*graph;
+        let bs = input.bs();
+        let shared = Box::new(SharedBlocked::new(input));
+        let shared_ptr: *const SharedBlocked = &*shared;
+        // SAFETY (lifetime erasure): both pointers target allocations
+        // owned (or co-owned via Arc) by the SessionJob pushed below,
+        // and the session waits for this job's completion before that
+        // entry drops (Drop / finish / take_output all wait) — the
+        // `submit_erased` contract.
+        let run: Box<dyn Fn(super::graph::TaskId) + Send + Sync> =
+            unsafe {
+                Box::new(kernel_runner(
+                    &*graph_ptr,
+                    w.kernels(),
+                    &*shared_ptr,
+                    bs,
+                ))
+            };
+        let inner =
+            unsafe { session.pool.submit_erased(graph_ptr, run, after) }?;
+        session.jobs.push(SessionJob {
+            workload: w,
+            shared,
+            graph,
+            inner: inner.clone(),
+        });
+        Ok(JobHandle::from_inner(inner))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::workload::{registry, Cholesky, Matmul, Sparselu};
+    use crate::sched::SubmitError;
+
+    #[test]
+    fn fluent_jobs_for_every_registry_entry_verify() {
+        let pool = Pool::new(4);
+        let mut s = Session::new(&pool);
+        let mut handles = Vec::new();
+        for w in registry() {
+            let h = s.job(JobSpec::new(*w, 6, 4)).submit().unwrap();
+            handles.push(h);
+        }
+        let results = s.finish().unwrap();
+        assert_eq!(results.len(), registry().len());
+        for (r, w) in results.iter().zip(registry()) {
+            assert_eq!(r.workload.name(), w.name());
+            assert_eq!(
+                r.stats.executed,
+                w.graph(&Params::new(6, 4)).len()
+            );
+            let mut want = w.make_input(&Params::new(6, 4), 0);
+            let orig = want.deep_clone();
+            w.reference_seq(&mut want);
+            w.verify_bits(&r.output, &want).unwrap();
+            let res = w.residual(&orig, &r.output);
+            assert!(res < 1e-3, "{}: residual {res}", w.name());
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn inherent_param_helpers_name_their_workloads() {
+        assert_eq!(Sparselu::params(4, 4).workload.name(), "sparselu");
+        assert_eq!(Cholesky::params(4, 4).workload.name(), "cholesky");
+        assert_eq!(Matmul::params(4, 4).workload.name(), "matmul");
+    }
+
+    #[test]
+    fn after_orders_jobs_and_outputs_are_takeable() {
+        let pool = Pool::new(4);
+        let mut s = Session::new(&pool);
+        let a = s.job(Sparselu::params(7, 4)).submit().unwrap();
+        let b = s
+            .job(Cholesky::params(7, 4))
+            .after(&a)
+            .submit()
+            .unwrap();
+        b.wait().unwrap();
+        assert!(a.is_done(), "dependency must have completed first");
+        let out_a = s.take_output(&a).unwrap();
+        let mut want = Sparselu.make_input(&Params::new(7, 4), 0);
+        Sparselu.reference_seq(&mut want);
+        Sparselu.verify_bits(&out_a, &want).unwrap();
+        assert!(s.take_output(&a).is_none(), "second take must fail");
+        assert_eq!(s.len(), 1, "taken job is retired from the session");
+        let rest = s.finish().unwrap();
+        assert_eq!(rest.len(), 1, "only b's output remains");
+        assert_eq!(rest[0].workload.name(), "cholesky");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn cross_pool_after_is_typed_not_deadlocked() {
+        let pool_a = Pool::new(2);
+        let pool_b = Pool::new(2);
+        let mut sa = Session::new(&pool_a);
+        let mut sb = Session::new(&pool_b);
+        let ha = sa.job(Sparselu::params(5, 4)).submit().unwrap();
+        let err = sb
+            .job(Sparselu::params(5, 4))
+            .after(&ha)
+            .submit()
+            .unwrap_err();
+        assert_eq!(err, Error::CrossPoolDependency);
+        ha.wait().unwrap();
+        drop(sb);
+        drop(sa);
+        pool_a.shutdown();
+        pool_b.shutdown();
+    }
+
+    #[test]
+    fn canonical_input_reuses_the_prepared_graph() {
+        let pool = Pool::new(2);
+        let mut s = Session::new(&pool);
+        s.prepare(Sparselu::params(6, 4));
+        assert_eq!(s.graphs.len(), 1);
+        let m = Sparselu.make_input(&Params::new(6, 4), 0);
+        let h = s
+            .job(Sparselu::params(6, 4))
+            .canonical_input(m)
+            .submit()
+            .unwrap();
+        assert_eq!(s.graphs.len(), 1, "prepared graph must be reused");
+        h.wait().unwrap();
+        let out = s.take_output(&h).unwrap();
+        let mut want = Sparselu.make_input(&Params::new(6, 4), 0);
+        Sparselu.reference_seq(&mut want);
+        Sparselu.verify_bits(&out, &want).unwrap();
+        drop(s);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn custom_input_graphs_are_per_job_and_retired_with_it() {
+        let pool = Pool::new(3);
+        let mut s = Session::new(&pool);
+        // Two canonical jobs share one cached graph; a custom-input
+        // job owns its own (nothing enters the cache for it).
+        let _h1 = s.job(Sparselu::params(6, 4)).submit().unwrap();
+        let _h2 = s.job(Sparselu::params(6, 4)).submit().unwrap();
+        let custom = Sparselu.make_input(&Params::new(6, 4), 0);
+        let h3 = s
+            .job(Sparselu::params(6, 4))
+            .input(custom)
+            .submit()
+            .unwrap();
+        assert_eq!(s.graphs.len(), 1, "custom input must not be cached");
+        assert_eq!(s.len(), 3);
+        let out3 = s.take_output(&h3).unwrap();
+        assert_eq!(s.len(), 2, "taken job retired (graph freed with it)");
+        let results = s.finish().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].output.to_dense().as_slice(),
+            out3.to_dense().as_slice(),
+            "custom input was the canonical input — same result"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn sizing_mismatch_is_a_typed_preflight_error() {
+        let pool = Pool::new(2);
+        let mut s = Session::new(&pool);
+        // Canonical-input promise broken on sizing: nb=5 input under
+        // an nb=6 spec must be rejected before anything runs.
+        let wrong = Sparselu.make_input(&Params::new(5, 4), 0);
+        let err = s
+            .job(Sparselu::params(6, 4))
+            .canonical_input(wrong)
+            .submit()
+            .unwrap_err();
+        assert_eq!(err, Error::GridMismatch { graph_nb: 6, matrix_nb: 5 });
+        assert!(s.is_empty());
+        drop(s);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn session_drop_waits_without_explicit_finish() {
+        let pool = Pool::new(2);
+        {
+            let mut s = Session::new(&pool);
+            let _ = s.job(Sparselu::params(6, 4)).submit().unwrap();
+            // Session dropped here: must block until the job drained
+            // (borrow soundness), then release cleanly.
+        }
+        assert_eq!(pool.active_jobs(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn oversized_job_is_typed_not_fatal() {
+        let pool = Pool::with_config(crate::sched::PoolConfig {
+            workers: 2,
+            task_capacity: 8,
+            max_jobs: 2,
+        });
+        let mut s = Session::new(&pool);
+        let err = s.job(Sparselu::params(8, 4)).submit().unwrap_err();
+        assert!(matches!(
+            err,
+            Error::Submit(SubmitError::GraphTooLarge { .. })
+        ));
+        // Session still usable for jobs that fit (nb=2 → 3 tasks).
+        let h = s.job(Sparselu::params(2, 4)).submit().unwrap();
+        h.wait().unwrap();
+        drop(s);
+        pool.shutdown();
+    }
+}

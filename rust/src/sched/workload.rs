@@ -1,0 +1,867 @@
+//! First-class workload declarations: the [`Workload`] trait and the
+//! [`registry`] that drives every layer from one definition.
+//!
+//! Before this module, adding a workload to the engine cost six
+//! parallel edits: a graph constructor in `sched/graph.rs`, a kernel
+//! table in `apps/`, a `*_dataflow_batch` wrapper, a tilesim cost
+//! encoder hook, a CLI `--app` arm and a verifier. Following the
+//! PLASMA-style separation of algorithm-as-DAG from runtime (Buttari
+//! et al., arXiv:0709.1272) and GPRM's task-composition front end
+//! (arXiv:1312.2703), a workload is now **declared once** — task
+//! stream, kernel table, input generator, sequential reference,
+//! verifier, flop pricing and simulator cost — and every consumer
+//! reads the declaration:
+//!
+//! * the **engine** builds the DAG from [`Workload::build`] (access
+//!   sets in, RAW/WAW/WAR edges out);
+//! * the **drivers and the pool** dispatch through
+//!   [`Workload::kernels`] (see
+//!   [`crate::apps::dataflow::run_workload`] and
+//!   [`super::session::Session`]);
+//! * the **simulator** prices every task through
+//!   [`Workload::sim_cost`] (see
+//!   [`crate::tilesim::workload::dag_sim_task`]) and replays the
+//!   paper's level-synchronous straw man from [`Workload::phases`];
+//! * the **CLI, harness and benches** iterate [`registry`] instead of
+//!   matching on names, so they can never drift from the registered
+//!   workloads.
+//!
+//! Adding workload #4 (tiled QR, triangular solve, …) is now one impl
+//! block in this file plus one line in [`registry`] — see the
+//! "Defining a workload" walkthrough in the crate docs
+//! ([`crate`]).
+
+use super::graph::{
+    GraphBuilder, OpId, OpSpec, Task, TaskGraph, TaskId, CHOLESKY_OPS,
+    LU_OPS, MATMUL_OPS, OP_BDIV, OP_BMOD, OP_FWD, OP_GEMM, OP_LU0,
+    OP_MADD, OP_POTRF, OP_SYRK, OP_TRSM,
+};
+use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
+use crate::linalg::cholesky::{
+    cholesky_seq, gemm_nt, gen_spd, potrf, sym_dense, syrk, trsm,
+};
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::genmat::{genmat, genmat_pattern};
+use crate::linalg::lu::{bdiv, bmod, fwd, lu0, sparselu_seq};
+use crate::linalg::verify::{chol_residual_sparse, lu_residual_sparse};
+use crate::tilesim::workload::Phase;
+
+/// Problem sizing shared by every workload: `nb` blocks per grid
+/// dimension, `bs × bs` elements per block. (For the blocked matmul
+/// `nb` counts the *logical* `C` grid; the embedded scheduling grid is
+/// `2·nb` wide — see [`Matmul`].)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Params {
+    pub nb: usize,
+    pub bs: usize,
+}
+
+impl Params {
+    pub fn new(nb: usize, bs: usize) -> Self {
+        Self { nb, bs }
+    }
+}
+
+/// Simulator-facing cost of one task: useful flops plus the bytes of
+/// shared-fabric/DRAM traffic it generates regardless of locality.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskCost {
+    pub flops: u64,
+    pub mem_bytes: u64,
+}
+
+impl TaskCost {
+    /// The default cost encoding, derived purely from the op table and
+    /// the task's access-set shape: flops from the op's pricing
+    /// function; shared-fabric bytes are one block for a streaming
+    /// kernel, plus one block per read stream beyond the first, plus
+    /// one more for materialising a fresh fill-in block
+    /// (`alloc_write`). This is byte-for-byte the encoding the PR-2
+    /// SparseLU model charged (the committed `BENCH_sched.json`
+    /// baseline rows re-derive from it to the digit).
+    pub fn from_access_sets(t: &Task, ops: &[OpSpec], bs: usize) -> Self {
+        let bb = (bs * bs * 4) as u64;
+        let extra = t.n_reads as u64;
+        Self {
+            flops: (ops[t.op.0].flops)(bs),
+            mem_bytes: bb
+                * (1 + extra.saturating_sub(1) + u64::from(t.alloc_write)),
+        }
+    }
+}
+
+/// One entry of a workload's executable kernel table: `(reads, write,
+/// bs)` — the extra read blocks in task order, then the (exclusive)
+/// write block. Indexed by op id, aligned with the workload's
+/// [`OpSpec`] table.
+pub type BlockKernel<'k> =
+    &'k (dyn Fn(&[&[f32]], &mut [f32], usize) + Sync);
+
+/// A workload, declared once: everything the engine, the pool, the
+/// simulator, the CLI, the harness and the benches need to run it.
+///
+/// Implementations are zero-sized registry entries ([`Sparselu`],
+/// [`Cholesky`], [`Matmul`]); consumers hold `&'static dyn Workload`
+/// from [`registry`] / [`find`]. Only [`Workload::build`],
+/// [`Workload::kernels`], [`Workload::make_input`],
+/// [`Workload::reference_seq`], [`Workload::residual`] and the naming
+/// methods are mandatory — graph assembly, bit-verification, flop
+/// pricing and the simulator cost encoding all have derived defaults.
+pub trait Workload: Send + Sync {
+    /// Registry name — also the CLI `--app` value.
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `--list-apps`.
+    fn description(&self) -> &'static str;
+
+    /// The kernel vocabulary (display names + flop pricing) the
+    /// graph's op ids index into.
+    fn ops(&self) -> &'static [OpSpec];
+
+    /// Side of the block grid the graph is built over (defaults to
+    /// `p.nb`; the embedded matmul uses `2·nb`).
+    fn grid(&self, p: &Params) -> usize {
+        p.nb
+    }
+
+    /// Declare the task stream in sequential program order: one
+    /// `b.add_task(op, reads, write, alloc_write)` per block kernel.
+    /// The builder derives every RAW/WAW/WAR edge from the access
+    /// sets, which is what keeps any edge-respecting schedule
+    /// bit-identical (f32) to [`Workload::reference_seq`].
+    fn build(&self, b: &mut GraphBuilder, p: &Params);
+
+    /// Assemble the canonical task graph for `p` (derived from
+    /// [`Workload::build`]).
+    fn graph(&self, p: &Params) -> TaskGraph {
+        let mut b = GraphBuilder::new(self.grid(p));
+        self.build(&mut b, p);
+        b.build(self.ops())
+    }
+
+    /// Assemble the graph matching a *specific* input matrix.
+    /// Defaults to the canonical graph for the matrix's sizing;
+    /// workloads whose structure depends on the input (SparseLU's
+    /// sparsity pattern) override it.
+    fn graph_for(&self, a: &BlockedSparseMatrix) -> TaskGraph {
+        self.graph(&Params::new(a.nb(), a.bs()))
+    }
+
+    /// The executable plain-rust kernel table, indexed by op id and
+    /// aligned with [`Workload::ops`].
+    fn kernels(&self) -> &'static [BlockKernel<'static>];
+
+    /// Generate a deterministic input matrix for `p`. `seed` selects
+    /// among input families where the generator supports it (the
+    /// matmul operands); the BOTS/SPD factorisation generators are
+    /// seed-independent by construction.
+    fn make_input(&self, p: &Params, seed: u32) -> BlockedSparseMatrix;
+
+    /// The sequential reference: transform `a` in place using exactly
+    /// the kernels and per-block order the graph encodes. Every
+    /// parallel schedule is bit-compared against this.
+    fn reference_seq(&self, a: &mut BlockedSparseMatrix);
+
+    /// Mathematical residual of `result` against ground truth
+    /// reconstructed from the untouched input `orig` (e.g.
+    /// `‖A − LU‖/‖A‖`). Small (`< 1e-3`) on a correct run.
+    fn residual(
+        &self,
+        orig: &BlockedSparseMatrix,
+        result: &BlockedSparseMatrix,
+    ) -> f64;
+
+    /// Bit-exactness check of a parallel result against the sequential
+    /// reference output (not merely "close": the graph chains every
+    /// touch of a block in program order, so f32 equality is the
+    /// contract).
+    fn verify_bits(
+        &self,
+        got: &BlockedSparseMatrix,
+        reference: &BlockedSparseMatrix,
+    ) -> Result<(), String> {
+        if got.pattern() != reference.pattern() {
+            return Err(format!(
+                "{}: result allocation pattern differs from the \
+                 sequential reference",
+                self.name()
+            ));
+        }
+        if got.to_dense().as_slice() != reference.to_dense().as_slice() {
+            return Err(format!(
+                "{}: result not bit-identical (f32) to the sequential \
+                 reference",
+                self.name()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Useful flops one `bs×bs` instance of `op` performs (from the op
+    /// table).
+    fn flops(&self, op: OpId, bs: usize) -> u64 {
+        (self.ops()[op.0].flops)(bs)
+    }
+
+    /// Simulator cost of one task. The default derives it from the op
+    /// table and the access-set shape
+    /// ([`TaskCost::from_access_sets`]) — the single encoding every
+    /// committed `BENCH_sched.json` baseline row was produced by.
+    /// Workloads with unusual memory behaviour may override.
+    fn sim_cost(&self, t: &Task, bs: usize) -> TaskCost {
+        TaskCost::from_access_sets(t, self.ops(), bs)
+    }
+
+    /// The paper-style *level-synchronous phase stream* for this
+    /// workload, if it has one — the barrier straw man the DAG
+    /// schedule is raced against in the `dataflow` experiment. `None`
+    /// (the default) skips the workload in phase-vs-DAG comparisons;
+    /// it still runs everywhere else.
+    fn phases(
+        &self,
+        _p: &Params,
+    ) -> Option<Box<dyn Iterator<Item = Phase>>> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// Generic kernel dispatch (shared by the one-shot drivers, the pool
+// batch path and the Session front end)
+// ---------------------------------------------------------------------
+
+/// The per-task dispatch closure shared by every host: split-borrow
+/// the task's blocks zero-copy from `shared` and fire
+/// `kernels[task.op]`. The closure is `Send + Sync` so the pool can
+/// run it from any worker; the access-set discipline that makes the
+/// unsafe block sound is documented inline.
+pub fn kernel_runner<'a>(
+    graph: &'a TaskGraph,
+    kernels: &'a [BlockKernel<'a>],
+    shared: &'a SharedBlocked,
+    bs: usize,
+) -> impl Fn(TaskId) + Send + Sync + 'a {
+    move |id: TaskId| {
+        let t = *graph.task(id);
+        // SAFETY: the task graph chains every touch of a given block
+        // (RAW/WAW/WAR) and every executor host carries a
+        // release/acquire edge per dependency (see `SharedBlocked`'s
+        // Sync impl), so this task has exclusive access to the block
+        // it writes and read-only access to blocks finalised by its
+        // predecessors. Fill-in allocation mutates only the written
+        // block's own slot. Within the task the borrows split,
+        // zero-copy.
+        let m = unsafe { shared.get_mut() };
+        if t.alloc_write {
+            m.allocate_clean_block(t.write.0, t.write.1);
+        }
+        let kernel = kernels[t.op.0];
+        match t.reads() {
+            [] => {
+                let w = m.block_mut(t.write.0, t.write.1).unwrap();
+                kernel(&[], w, bs);
+            }
+            &[r0] => {
+                let (r, w) = m.block_and_mut(r0, t.write).unwrap();
+                kernel(&[r], w, bs);
+            }
+            &[r0, r1] => {
+                let (a0, a1, w) = m.read2_write1(r0, r1, t.write).unwrap();
+                kernel(&[a0, a1], w, bs);
+            }
+            _ => unreachable!("tasks carry at most two extra reads"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SparseLU
+// ---------------------------------------------------------------------
+
+fn rk_lu0(_r: &[&[f32]], w: &mut [f32], bs: usize) {
+    lu0(w, bs)
+}
+fn rk_fwd(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    fwd(r[0], w, bs)
+}
+fn rk_bdiv(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    bdiv(r[0], w, bs)
+}
+fn rk_bmod(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    bmod(r[0], r[1], w, bs)
+}
+
+/// The plain-rust SparseLU kernel table, aligned with [`LU_OPS`] —
+/// the single definition shared by every driver, the CLI, benches and
+/// tests. (The PJRT-dispatching SparseLU driver builds a closure
+/// table instead; it must capture the backend.)
+pub static LU_RUST_KERNELS: [BlockKernel<'static>; 4] =
+    [&rk_lu0, &rk_fwd, &rk_bdiv, &rk_bmod];
+
+/// BOTS SparseLU with fill-in — the paper's §VI workload
+/// (registry name `"sparselu"`).
+pub struct Sparselu;
+
+impl Sparselu {
+    /// Fluent-session job spec for an `nb × nb` grid of `bs × bs`
+    /// blocks (see [`super::session::Session`]).
+    pub fn params(nb: usize, bs: usize) -> super::session::JobSpec {
+        super::session::JobSpec::new(&Sparselu, nb, bs)
+    }
+
+    /// Declare the SparseLU task stream for an explicit allocation
+    /// `pattern` (row-major booleans), tracking fill-in exactly like
+    /// the sequential factorisation. Task order matches
+    /// [`sparselu_seq`]; [`TaskGraph::sparselu`] is the assembled
+    /// form.
+    pub fn build_pattern(
+        b: &mut GraphBuilder,
+        pattern: &[bool],
+        nb: usize,
+    ) {
+        assert_eq!(pattern.len(), nb * nb, "pattern shape");
+        let mut alloc = pattern.to_vec();
+        for kk in 0..nb {
+            b.add_task(OP_LU0, &[], (kk, kk), false);
+            for jj in kk + 1..nb {
+                if alloc[kk * nb + jj] {
+                    b.add_task(OP_FWD, &[(kk, kk)], (kk, jj), false);
+                }
+            }
+            for ii in kk + 1..nb {
+                if alloc[ii * nb + kk] {
+                    b.add_task(OP_BDIV, &[(kk, kk)], (ii, kk), false);
+                }
+            }
+            for ii in kk + 1..nb {
+                if !alloc[ii * nb + kk] {
+                    continue;
+                }
+                for jj in kk + 1..nb {
+                    if !alloc[kk * nb + jj] {
+                        continue;
+                    }
+                    let fill_in = !alloc[ii * nb + jj];
+                    alloc[ii * nb + jj] = true;
+                    b.add_task(
+                        OP_BMOD,
+                        &[(ii, kk), (kk, jj)],
+                        (ii, jj),
+                        fill_in,
+                    );
+                }
+            }
+        }
+    }
+}
+
+impl Workload for Sparselu {
+    fn name(&self) -> &'static str {
+        "sparselu"
+    }
+
+    fn description(&self) -> &'static str {
+        "BOTS sparse LU factorisation with fill-in (paper §VI)"
+    }
+
+    fn ops(&self) -> &'static [OpSpec] {
+        LU_OPS
+    }
+
+    fn build(&self, b: &mut GraphBuilder, p: &Params) {
+        Self::build_pattern(b, &genmat_pattern(p.nb), p.nb);
+    }
+
+    fn graph_for(&self, a: &BlockedSparseMatrix) -> TaskGraph {
+        // The DAG depends on the input's sparsity pattern, not just
+        // its sizing.
+        TaskGraph::sparselu(&a.pattern(), a.nb())
+    }
+
+    fn kernels(&self) -> &'static [BlockKernel<'static>] {
+        &LU_RUST_KERNELS
+    }
+
+    fn make_input(&self, p: &Params, _seed: u32) -> BlockedSparseMatrix {
+        genmat(p.nb, p.bs)
+    }
+
+    fn reference_seq(&self, a: &mut BlockedSparseMatrix) {
+        sparselu_seq(a);
+    }
+
+    fn residual(
+        &self,
+        orig: &BlockedSparseMatrix,
+        result: &BlockedSparseMatrix,
+    ) -> f64 {
+        lu_residual_sparse(&orig.to_dense(), result)
+    }
+
+    fn phases(
+        &self,
+        p: &Params,
+    ) -> Option<Box<dyn Iterator<Item = Phase>>> {
+        Some(Box::new(crate::tilesim::workload::Workload::sparselu(
+            p.nb, p.bs,
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tiled dense Cholesky
+// ---------------------------------------------------------------------
+
+fn rk_potrf(_r: &[&[f32]], w: &mut [f32], bs: usize) {
+    potrf(w, bs)
+}
+fn rk_trsm(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    trsm(r[0], w, bs)
+}
+fn rk_syrk(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    syrk(r[0], w, bs)
+}
+fn rk_gemm(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    gemm_nt(r[0], r[1], w, bs)
+}
+
+/// The tiled-Cholesky kernel table, aligned with [`CHOLESKY_OPS`].
+pub static CHOLESKY_RUST_KERNELS: [BlockKernel<'static>; 4] =
+    [&rk_potrf, &rk_trsm, &rk_syrk, &rk_gemm];
+
+/// Tiled dense Cholesky, lower-triangle storage (Buttari et al.'s
+/// right-looking tiled algorithm; registry name `"cholesky"`).
+pub struct Cholesky;
+
+impl Cholesky {
+    /// Fluent-session job spec (see [`super::session::Session`]).
+    pub fn params(nb: usize, bs: usize) -> super::session::JobSpec {
+        super::session::JobSpec::new(&Cholesky, nb, bs)
+    }
+}
+
+impl Workload for Cholesky {
+    fn name(&self) -> &'static str {
+        "cholesky"
+    }
+
+    fn description(&self) -> &'static str {
+        "tiled dense Cholesky on an SPD lower-triangle block grid"
+    }
+
+    fn ops(&self) -> &'static [OpSpec] {
+        CHOLESKY_OPS
+    }
+
+    fn build(&self, b: &mut GraphBuilder, p: &Params) {
+        let nb = p.nb;
+        for kk in 0..nb {
+            b.add_task(OP_POTRF, &[], (kk, kk), false);
+            for ii in kk + 1..nb {
+                b.add_task(OP_TRSM, &[(kk, kk)], (ii, kk), false);
+            }
+            for ii in kk + 1..nb {
+                b.add_task(OP_SYRK, &[(ii, kk)], (ii, ii), false);
+                for jj in kk + 1..ii {
+                    b.add_task(
+                        OP_GEMM,
+                        &[(ii, kk), (jj, kk)],
+                        (ii, jj),
+                        false,
+                    );
+                }
+            }
+        }
+    }
+
+    fn kernels(&self) -> &'static [BlockKernel<'static>] {
+        &CHOLESKY_RUST_KERNELS
+    }
+
+    fn make_input(&self, p: &Params, _seed: u32) -> BlockedSparseMatrix {
+        gen_spd(p.nb, p.bs)
+    }
+
+    fn reference_seq(&self, a: &mut BlockedSparseMatrix) {
+        cholesky_seq(a);
+    }
+
+    fn residual(
+        &self,
+        orig: &BlockedSparseMatrix,
+        result: &BlockedSparseMatrix,
+    ) -> f64 {
+        chol_residual_sparse(&sym_dense(orig), result)
+    }
+
+    fn phases(
+        &self,
+        p: &Params,
+    ) -> Option<Box<dyn Iterator<Item = Phase>>> {
+        Some(Box::new(crate::tilesim::workload::Workload::cholesky(
+            p.nb, p.bs,
+        )))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blocked matmul
+// ---------------------------------------------------------------------
+
+/// The `madd` block kernel: `c += a·b` on row-major `bs×bs` blocks,
+/// j-inner accumulation. The sequential reference uses the identical
+/// loop, which is what makes every edge-respecting schedule
+/// bit-identical (f32) to it.
+pub fn madd(a: &[f32], b: &[f32], c: &mut [f32], bs: usize) {
+    debug_assert!(
+        a.len() == bs * bs && b.len() == bs * bs && c.len() == bs * bs
+    );
+    for i in 0..bs {
+        for j in 0..bs {
+            let mut acc = c[i * bs + j];
+            for k in 0..bs {
+                acc += a[i * bs + k] * b[k * bs + j];
+            }
+            c[i * bs + j] = acc;
+        }
+    }
+}
+
+fn rk_madd(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    madd(r[0], r[1], w, bs)
+}
+
+/// The blocked-matmul kernel table, aligned with [`MATMUL_OPS`].
+pub static MATMUL_RUST_KERNELS: [BlockKernel<'static>; 1] = [&rk_madd];
+
+/// Pack square `a` and `b` (each `nbc·bs` wide) plus a zeroed `C`
+/// into the `2·nbc`-grid blocked matrix [`TaskGraph::matmul`]
+/// schedules over: `C` in the top-left quadrant, `A` top-right
+/// (`A[i,k]` at block `(i, nbc+k)`), `B` bottom-left (`B[k,j]` at
+/// `(nbc+k, j)`); the fourth quadrant stays unallocated.
+pub fn matmul_blocked_input(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    nbc: usize,
+    bs: usize,
+) -> BlockedSparseMatrix {
+    let dim = nbc * bs;
+    assert_eq!((a.rows(), a.cols()), (dim, dim), "A shape");
+    assert_eq!((b.rows(), b.cols()), (dim, dim), "B shape");
+    let mut m = BlockedSparseMatrix::empty(2 * nbc, bs);
+    for bi in 0..nbc {
+        for bj in 0..nbc {
+            m.allocate_clean_block(bi, bj); // C, zeroed
+            let ab = m.allocate_clean_block(bi, nbc + bj);
+            for r in 0..bs {
+                for c in 0..bs {
+                    ab[r * bs + c] = a[(bi * bs + r, bj * bs + c)];
+                }
+            }
+            let bb = m.allocate_clean_block(nbc + bi, bj);
+            for r in 0..bs {
+                for c in 0..bs {
+                    bb[r * bs + c] = b[(bi * bs + r, bj * bs + c)];
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Read one `nbc × nbc` quadrant of the embedded layout back out as a
+/// dense matrix (`ro`/`co` are the block offsets of the quadrant).
+fn extract_quadrant(
+    m: &BlockedSparseMatrix,
+    nbc: usize,
+    ro: usize,
+    co: usize,
+) -> DenseMatrix {
+    let bs = m.bs();
+    let mut c = DenseMatrix::zeros(nbc * bs, nbc * bs);
+    for bi in 0..nbc {
+        for bj in 0..nbc {
+            let blk = m.block(ro + bi, co + bj).expect("quadrant block");
+            for r in 0..bs {
+                for col in 0..bs {
+                    c[(bi * bs + r, bj * bs + col)] = blk[r * bs + col];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Read the `C` quadrant back out of the blocked layout.
+pub fn matmul_extract_c(
+    m: &BlockedSparseMatrix,
+    nbc: usize,
+) -> DenseMatrix {
+    extract_quadrant(m, nbc, 0, 0)
+}
+
+/// Sequential blocked reference: the same [`madd`] kernels in the
+/// graph's task order (`k` outer, then `i`, `j`) — the bit-identity
+/// baseline for the dataflow matmul.
+pub fn matmul_blocked_seq(
+    a: &DenseMatrix,
+    b: &DenseMatrix,
+    nbc: usize,
+    bs: usize,
+) -> DenseMatrix {
+    let mut m = matmul_blocked_input(a, b, nbc, bs);
+    Matmul.reference_seq(&mut m);
+    matmul_extract_c(&m, nbc)
+}
+
+/// Blocked dense `C = A·B`, quadrant-embedded so the access-set
+/// machinery applies unchanged (registry name `"matmul"`; the paper's
+/// §V workload ported onto the dataflow engine).
+pub struct Matmul;
+
+impl Matmul {
+    /// Fluent-session job spec: `nb × nb` logical `C` blocks of
+    /// `bs × bs` (the scheduling grid is `2·nb` wide).
+    pub fn params(nb: usize, bs: usize) -> super::session::JobSpec {
+        super::session::JobSpec::new(&Matmul, nb, bs)
+    }
+}
+
+impl Workload for Matmul {
+    fn name(&self) -> &'static str {
+        "matmul"
+    }
+
+    fn description(&self) -> &'static str {
+        "blocked dense C = A·B, quadrant-embedded (paper §V workload \
+         on the dataflow engine)"
+    }
+
+    fn ops(&self) -> &'static [OpSpec] {
+        MATMUL_OPS
+    }
+
+    fn grid(&self, p: &Params) -> usize {
+        2 * p.nb
+    }
+
+    fn build(&self, b: &mut GraphBuilder, p: &Params) {
+        let nbc = p.nb;
+        assert!(nbc > 0);
+        for kk in 0..nbc {
+            for ii in 0..nbc {
+                for jj in 0..nbc {
+                    b.add_task(
+                        OP_MADD,
+                        &[(ii, nbc + kk), (nbc + kk, jj)],
+                        (ii, jj),
+                        false,
+                    );
+                }
+            }
+        }
+    }
+
+    fn graph_for(&self, a: &BlockedSparseMatrix) -> TaskGraph {
+        // The embedded grid is twice the logical C grid.
+        assert_eq!(a.nb() % 2, 0, "embedded matmul grid must be even");
+        self.graph(&Params::new(a.nb() / 2, a.bs()))
+    }
+
+    fn kernels(&self) -> &'static [BlockKernel<'static>] {
+        &MATMUL_RUST_KERNELS
+    }
+
+    fn make_input(&self, p: &Params, seed: u32) -> BlockedSparseMatrix {
+        let dim = p.nb * p.bs;
+        let a = DenseMatrix::bots_random(
+            dim,
+            dim,
+            41u32.wrapping_add(seed.wrapping_mul(2)),
+        );
+        let b = DenseMatrix::bots_random(
+            dim,
+            dim,
+            42u32.wrapping_add(seed.wrapping_mul(2)),
+        );
+        matmul_blocked_input(&a, &b, p.nb, p.bs)
+    }
+
+    fn reference_seq(&self, a: &mut BlockedSparseMatrix) {
+        let nbc = a.nb() / 2;
+        let bs = a.bs();
+        for kk in 0..nbc {
+            for ii in 0..nbc {
+                for jj in 0..nbc {
+                    let (ra, rb, w) = a
+                        .read2_write1(
+                            (ii, nbc + kk),
+                            (nbc + kk, jj),
+                            (ii, jj),
+                        )
+                        .unwrap();
+                    madd(ra, rb, w, bs);
+                }
+            }
+        }
+    }
+
+    fn residual(
+        &self,
+        orig: &BlockedSparseMatrix,
+        result: &BlockedSparseMatrix,
+    ) -> f64 {
+        let nbc = orig.nb() / 2;
+        let a = extract_quadrant(orig, nbc, 0, nbc);
+        let b = extract_quadrant(orig, nbc, nbc, 0);
+        let want = a.matmul(&b);
+        let got = matmul_extract_c(result, nbc);
+        let scale = want
+            .as_slice()
+            .iter()
+            .fold(0f32, |m, &v| m.max(v.abs()))
+            .max(1e-30);
+        f64::from(got.max_abs_diff(&want)) / f64::from(scale)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// The inventory of registered workloads, in canonical order. This is
+/// the single list the CLI (`--app`, `--list-apps`, the `mixed`
+/// stream), the harness experiments, the benches and the conformance
+/// suite iterate — adding a workload here is the *only* registration
+/// step.
+static REGISTRY: [&dyn Workload; 3] = [&Sparselu, &Cholesky, &Matmul];
+
+/// Every registered workload, in canonical order.
+pub fn registry() -> &'static [&'static dyn Workload] {
+    &REGISTRY
+}
+
+/// Look a workload up by its registry name.
+pub fn find(name: &str) -> Option<&'static dyn Workload> {
+    registry().iter().copied().find(|w| w.name() == name)
+}
+
+/// The registered names, in canonical order (CLI help / diagnostics).
+pub fn names() -> Vec<&'static str> {
+    registry().iter().map(|w| w.name()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique_and_resolvable() {
+        let ns = names();
+        assert_eq!(ns.len(), 3);
+        for (i, n) in ns.iter().enumerate() {
+            assert!(!ns[i + 1..].contains(n), "duplicate name {n}");
+            assert_eq!(find(n).unwrap().name(), *n);
+        }
+        assert!(find("qr").is_none());
+        assert_eq!(ns, vec!["sparselu", "cholesky", "matmul"]);
+    }
+
+    #[test]
+    fn kernel_tables_cover_op_vocabularies() {
+        for w in registry() {
+            assert_eq!(
+                w.kernels().len(),
+                w.ops().len(),
+                "{}: kernel table must cover the op table",
+                w.name()
+            );
+        }
+    }
+
+    #[test]
+    fn graphs_match_legacy_constructors() {
+        let p = Params::new(8, 4);
+        let lu = Sparselu.graph(&p);
+        let legacy = TaskGraph::sparselu(&genmat_pattern(8), 8);
+        assert_eq!(lu.len(), legacy.len());
+        assert_eq!(lu.n_edges(), legacy.n_edges());
+        let ch = Cholesky.graph(&p);
+        assert_eq!(ch.len(), TaskGraph::cholesky(8).len());
+        let mm = Matmul.graph(&p);
+        assert_eq!(mm.len(), TaskGraph::matmul(8).len());
+        assert_eq!(mm.nb(), 16);
+    }
+
+    #[test]
+    fn graph_for_reads_the_input_pattern() {
+        let a = genmat(6, 4);
+        let g = Sparselu.graph_for(&a);
+        assert_eq!(g.len(), TaskGraph::sparselu(&a.pattern(), 6).len());
+        let m = Matmul.make_input(&Params::new(3, 4), 0);
+        assert_eq!(Matmul.graph_for(&m).len(), 27);
+    }
+
+    #[test]
+    fn sim_cost_reproduces_the_access_set_encoding() {
+        // The default must charge exactly what the PR-2 encoder did:
+        // one block for a streaming kernel, +1 per extra read stream
+        // beyond the first, +1 for fill-in materialisation.
+        let bs = 16usize;
+        let bb = (bs * bs * 4) as u64;
+        let lu0 = Task::new(OP_LU0, &[], (0, 0), false);
+        assert_eq!(
+            Sparselu.sim_cost(&lu0, bs),
+            TaskCost { flops: (LU_OPS[0].flops)(bs), mem_bytes: bb }
+        );
+        let fwd = Task::new(OP_FWD, &[(0, 0)], (0, 1), false);
+        assert_eq!(Sparselu.sim_cost(&fwd, bs).mem_bytes, bb);
+        let bmod = Task::new(OP_BMOD, &[(1, 0), (0, 1)], (1, 1), false);
+        assert_eq!(Sparselu.sim_cost(&bmod, bs).mem_bytes, 2 * bb);
+        let fill = Task::new(OP_BMOD, &[(1, 0), (0, 1)], (1, 1), true);
+        assert_eq!(Sparselu.sim_cost(&fill, bs).mem_bytes, 3 * bb);
+        assert_eq!(
+            Sparselu.flops(OP_BMOD, bs),
+            (LU_OPS[OP_BMOD.0].flops)(bs)
+        );
+    }
+
+    #[test]
+    fn references_are_deterministic_and_verify() {
+        for w in registry() {
+            let p = Params::new(5, 4);
+            let orig = w.make_input(&p, 0);
+            let mut r1 = orig.deep_clone();
+            let mut r2 = orig.deep_clone();
+            w.reference_seq(&mut r1);
+            w.reference_seq(&mut r2);
+            w.verify_bits(&r1, &r2).unwrap();
+            let res = w.residual(&orig, &r1);
+            assert!(res < 1e-3, "{}: residual {res}", w.name());
+        }
+    }
+
+    #[test]
+    fn matmul_seed_selects_operands() {
+        let p = Params::new(3, 4);
+        let a = Matmul.make_input(&p, 0);
+        let b = Matmul.make_input(&p, 7);
+        assert_ne!(a.to_dense().as_slice(), b.to_dense().as_slice());
+    }
+
+    #[test]
+    fn phases_available_exactly_for_the_factorisations() {
+        let p = Params::new(6, 4);
+        for w in registry() {
+            let has = w.phases(&p).is_some();
+            assert_eq!(has, w.name() != "matmul", "{}", w.name());
+        }
+        // And the stream matches the DAG's task count.
+        let total: usize = Sparselu
+            .phases(&p)
+            .unwrap()
+            .map(|ph| ph.task_count())
+            .sum();
+        assert_eq!(total, Sparselu.graph(&p).len());
+    }
+}

@@ -37,7 +37,9 @@ use super::locality::Directory;
 use super::mesh::Mesh;
 use super::workload::dag_sim_task;
 use super::SimReport;
-use crate::linalg::genmat::genmat_pattern;
+use crate::sched::workload::{
+    Cholesky, Params, Sparselu, Workload as EngineWorkload,
+};
 use crate::sched::{TaskGraph, TaskId};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -66,6 +68,17 @@ pub enum LaunchModel {
     /// serially, each paying `n_tiles ×` [`CostModel::thread_spawn`]
     /// before its graph even starts.
     OneShotPerJob,
+}
+
+/// One job of a simulated multi-job stream: the workload declaration
+/// (which prices every task via [`EngineWorkload::sim_cost`]), the
+/// graph to schedule, and the block size. Mixed streams are just
+/// mixed slices — the registry makes building them a `map`.
+#[derive(Clone, Copy)]
+pub struct SimJob<'a> {
+    pub workload: &'a dyn EngineWorkload,
+    pub graph: &'a TaskGraph,
+    pub bs: usize,
 }
 
 /// DAG-scheduling machine simulator.
@@ -98,19 +111,37 @@ impl DataflowSim {
     /// Simulate the BOTS SparseLU structure (the Fig 6 workload when
     /// `nb * bs == 4000`).
     pub fn run_sparselu(&self, nb: usize, bs: usize) -> SimReport {
-        let graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
-        self.run_graph(&graph, bs)
+        self.run_workload(&Sparselu, &Params::new(nb, bs))
     }
 
     /// Simulate the tiled dense Cholesky DAG (lower-triangle block
     /// grid) — the second workload on the kernel-agnostic engine.
     pub fn run_cholesky(&self, nb: usize, bs: usize) -> SimReport {
-        self.run_graph(&TaskGraph::cholesky(nb), bs)
+        self.run_workload(&Cholesky, &Params::new(nb, bs))
     }
 
-    /// List-schedule `graph` in virtual time; `bs` sizes the block
-    /// kernels (flops and transfer bytes).
-    pub fn run_graph(&self, graph: &TaskGraph, bs: usize) -> SimReport {
+    /// Simulate any registered workload at sizing `p`: the declaration
+    /// supplies both the canonical graph and (via
+    /// [`EngineWorkload::sim_cost`]) the per-task pricing — this is
+    /// the entry point the harness and benches iterate the registry
+    /// through.
+    pub fn run_workload(
+        &self,
+        w: &dyn EngineWorkload,
+        p: &Params,
+    ) -> SimReport {
+        self.run_graph(w, &w.graph(p), p.bs)
+    }
+
+    /// List-schedule `graph` in virtual time; `w` prices every task
+    /// ([`EngineWorkload::sim_cost`]) and `bs` sizes the block
+    /// kernels.
+    pub fn run_graph(
+        &self,
+        w: &dyn EngineWorkload,
+        graph: &TaskGraph,
+        bs: usize,
+    ) -> SimReport {
         assert!(self.n_tiles >= 1);
         let nb = graph.nb();
         let bb = (bs * bs * 4) as u64;
@@ -158,7 +189,7 @@ impl DataflowSim {
                         + if stolen { self.cost.steal_cost as u64 } else { 0 }
                 }
             };
-            let st = dag_sim_task(graph.task(TaskId(t)), graph.ops(), nb, bs, 0);
+            let st = dag_sim_task(graph.task(TaskId(t)), w, nb, bs, 0);
             let work = self.cost.work(st.flops);
             let extra = dir.access(&self.cost, &self.mesh, tile, &st);
             let end = ready_t.max(avail) + dispatch + sched + work + extra;
@@ -190,16 +221,16 @@ impl DataflowSim {
         SimReport { cycles, tasks: fired, busy, lock_wait, producer: 0 }
     }
 
-    /// Schedule a **stream of jobs** — `(graph, bs)` pairs over
-    /// independent matrices — under the given launch model. This is
-    /// the virtual-time counterpart of
+    /// Schedule a **stream of jobs** ([`SimJob`]s over independent
+    /// matrices) under the given launch model. This is the
+    /// virtual-time counterpart of
     /// [`crate::apps::dataflow::run_dataflow_batch`]
     /// (`PersistentPool`) vs a loop of fresh executor launches
     /// (`OneShotPerJob`); the gap between the two is exactly what the
     /// `throughput` experiment measures.
     pub fn run_jobs(
         &self,
-        jobs: &[(&TaskGraph, usize)],
+        jobs: &[SimJob],
         launch: LaunchModel,
     ) -> SimReport {
         match launch {
@@ -210,15 +241,15 @@ impl DataflowSim {
 
     /// Serial one-shot launches: per job, a full worker-team spawn +
     /// join, then the single-graph schedule. Totals are sums.
-    fn run_jobs_one_shot(&self, jobs: &[(&TaskGraph, usize)]) -> SimReport {
+    fn run_jobs_one_shot(&self, jobs: &[SimJob]) -> SimReport {
         let spawn =
             (self.n_tiles as f64 * self.cost.thread_spawn) as u64;
         let mut cycles = 0u64;
         let mut tasks = 0u64;
         let mut lock_wait = 0u64;
         let mut busy = vec![0u64; self.n_tiles];
-        for &(graph, bs) in jobs {
-            let r = self.run_graph(graph, bs);
+        for j in jobs {
+            let r = self.run_graph(j.workload, j.graph, j.bs);
             cycles += spawn + r.cycles;
             tasks += r.tasks;
             lock_wait += r.lock_wait;
@@ -236,7 +267,7 @@ impl DataflowSim {
     /// applies to the total traffic. Roots are seeded round-robin with
     /// a per-job offset, mirroring the pool's injector draining across
     /// idle workers.
-    fn run_jobs_pool(&self, jobs: &[(&TaskGraph, usize)]) -> SimReport {
+    fn run_jobs_pool(&self, jobs: &[SimJob]) -> SimReport {
         assert!(self.n_tiles >= 1);
         let dispatch =
             (self.cost.gprm_packet + self.cost.gprm_task_fire) as u64;
@@ -249,7 +280,8 @@ impl DataflowSim {
         // (job, task) id for determinism.
         let mut ready: BinaryHeap<Reverse<(u64, usize, usize)>> =
             BinaryHeap::new();
-        for (j, &(graph, bs)) in jobs.iter().enumerate() {
+        for (j, job) in jobs.iter().enumerate() {
+            let (graph, bs) = (job.graph, job.bs);
             let nb = graph.nb();
             dirs.push(Directory::new(nb * nb, (bs * bs * 4) as u64));
             indeg.push(graph.indegrees().to_vec());
@@ -283,9 +315,14 @@ impl DataflowSim {
                         + if stolen { self.cost.steal_cost as u64 } else { 0 }
                 }
             };
-            let (graph, bs) = jobs[j];
-            let st =
-                dag_sim_task(graph.task(TaskId(t)), graph.ops(), graph.nb(), bs, 0);
+            let (graph, bs) = (jobs[j].graph, jobs[j].bs);
+            let st = dag_sim_task(
+                graph.task(TaskId(t)),
+                jobs[j].workload,
+                graph.nb(),
+                bs,
+                0,
+            );
             let work = self.cost.work(st.flops);
             let extra = dirs[j].access(&self.cost, &self.mesh, tile, &st);
             let end = ready_t.max(avail) + dispatch + sched + work + extra;
@@ -310,7 +347,7 @@ impl DataflowSim {
                 }
             }
         }
-        let n_total: usize = jobs.iter().map(|&(g, _)| g.len()).sum();
+        let n_total: usize = jobs.iter().map(|j| j.graph.len()).sum();
         debug_assert_eq!(fired as usize, n_total, "job stream not drained");
         let cycles = makespan.max(self.cost.mem_floor(total_bytes));
         SimReport { cycles, tasks: fired, busy, lock_wait, producer: 0 }
@@ -320,6 +357,8 @@ impl DataflowSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::genmat::genmat_pattern;
+    use crate::sched::workload::Matmul;
     use crate::tilesim::sim_gprm::GprmSim;
     use crate::tilesim::workload::Workload;
     use crate::tilesim::GprmAssign;
@@ -446,9 +485,15 @@ mod tests {
         ch: &'g TaskGraph,
         bs: usize,
         n_jobs: usize,
-    ) -> Vec<(&'g TaskGraph, usize)> {
+    ) -> Vec<SimJob<'g>> {
         (0..n_jobs)
-            .map(|i| (if i % 2 == 0 { lu } else { ch }, bs))
+            .map(|i| {
+                if i % 2 == 0 {
+                    SimJob { workload: &Sparselu, graph: lu, bs }
+                } else {
+                    SimJob { workload: &Cholesky, graph: ch, bs }
+                }
+            })
             .collect()
     }
 
@@ -461,8 +506,10 @@ mod tests {
         let sim = DataflowSim::tilepro(4);
         let solo = sim.run_sparselu(nb, bs);
         let graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
-        let pool =
-            sim.run_jobs(&[(&graph, bs)], LaunchModel::PersistentPool);
+        let pool = sim.run_jobs(
+            &[SimJob { workload: &Sparselu, graph: &graph, bs }],
+            LaunchModel::PersistentPool,
+        );
         assert_eq!(
             pool.cycles,
             solo.cycles + CostModel::default().pool_submit as u64
@@ -475,8 +522,9 @@ mod tests {
         let (nb, bs) = (12, 8);
         let sim = DataflowSim::tilepro(4);
         let graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
-        let solo = sim.run_graph(&graph, bs);
-        let jobs = [(&graph, bs), (&graph, bs), (&graph, bs)];
+        let solo = sim.run_graph(&Sparselu, &graph, bs);
+        let job = SimJob { workload: &Sparselu, graph: &graph, bs };
+        let jobs = [job, job, job];
         let serial = sim.run_jobs(&jobs, LaunchModel::OneShotPerJob);
         let spawn = (4.0 * CostModel::default().thread_spawn) as u64;
         assert_eq!(serial.cycles, 3 * (spawn + solo.cycles));
@@ -530,8 +578,10 @@ mod tests {
         for tiles in [4usize, 8, 16] {
             let sim = DataflowSim::tilepro(tiles);
             let pool = sim.run_jobs(&jobs, LaunchModel::PersistentPool);
-            let serial: u64 =
-                jobs.iter().map(|&(g, bs)| sim.run_graph(g, bs).cycles).sum();
+            let serial: u64 = jobs
+                .iter()
+                .map(|j| sim.run_graph(j.workload, j.graph, j.bs).cycles)
+                .sum();
             let overlap = serial as f64 / pool.cycles as f64;
             assert!(
                 overlap > 1.01,
@@ -548,12 +598,17 @@ mod tests {
         let sim = DataflowSim::tilepro(8);
         let pool = sim.run_jobs(&jobs, LaunchModel::PersistentPool);
         let expect_tasks: u64 =
-            jobs.iter().map(|&(g, _)| g.len() as u64).sum();
+            jobs.iter().map(|j| j.graph.len() as u64).sum();
         assert_eq!(pool.tasks, expect_tasks);
         let busy: u64 = pool.busy.iter().sum();
         let solo_busy: u64 = jobs
             .iter()
-            .map(|&(g, bs)| sim.run_graph(g, bs).busy.iter().sum::<u64>())
+            .map(|j| {
+                sim.run_graph(j.workload, j.graph, j.bs)
+                    .busy
+                    .iter()
+                    .sum::<u64>()
+            })
             .sum();
         assert_eq!(busy, solo_busy, "merged schedule must conserve flops");
         // Makespan at least the per-tile work share.
@@ -564,7 +619,8 @@ mod tests {
     fn matmul_stream_runs_on_the_same_machinery() {
         // The third workload rides the identical multi-job model.
         let mm = TaskGraph::matmul(6);
-        let jobs = [(&mm, 16usize), (&mm, 16usize)];
+        let job = SimJob { workload: &Matmul, graph: &mm, bs: 16 };
+        let jobs = [job, job];
         let sim = DataflowSim::tilepro(8);
         let pool = sim.run_jobs(&jobs, LaunchModel::PersistentPool);
         assert_eq!(pool.tasks, 2 * mm.len() as u64);
@@ -658,7 +714,8 @@ mod tests {
         let mut chain = vec![0u64; graph.len()];
         let mut longest = 0u64;
         for t in 0..graph.len() {
-            let st = dag_sim_task(graph.task(TaskId(t)), graph.ops(), nb, bs, 0);
+            let st =
+                dag_sim_task(graph.task(TaskId(t)), &Sparselu, nb, bs, 0);
             let base = graph
                 .preds(TaskId(t))
                 .iter()

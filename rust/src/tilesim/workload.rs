@@ -10,9 +10,12 @@
 use crate::linalg::cholesky::CholOp;
 use crate::linalg::genmat::bots_null_entry;
 use crate::linalg::lu::BlockOp;
+use crate::sched::workload::{
+    Cholesky, Sparselu, Workload as EngineWorkload,
+};
 use crate::sched::{
-    OpSpec, Task, CHOLESKY_OPS, LU_OPS, OP_BDIV, OP_BMOD, OP_FWD, OP_GEMM,
-    OP_LU0, OP_POTRF, OP_SYRK, OP_TRSM,
+    Task, OP_BDIV, OP_BMOD, OP_FWD, OP_GEMM, OP_LU0, OP_POTRF, OP_SYRK,
+    OP_TRSM,
 };
 
 /// "No write target" marker for [`SimTask::write`].
@@ -102,27 +105,27 @@ impl Phase {
     }
 }
 
-/// Build the [`SimTask`] for one generic DAG task — the single source
-/// of truth for the per-op cost encoding, shared by every phase-
-/// barrier workload stream below and the DAG simulator
+/// Build the [`SimTask`] for one generic DAG task — the single entry
+/// point of the per-op cost encoding, shared by every phase-barrier
+/// workload stream below and the DAG simulator
 /// ([`crate::tilesim::sim_dataflow`]), for *any* workload on the
 /// kernel-agnostic engine.
 ///
-/// Encoding: flops come from the op table; the locality-tracked read
-/// set is the task's extra reads followed by its (read-modify-write)
-/// target; shared-fabric bytes are one block for a streaming kernel,
-/// plus one block per read stream beyond the first, plus one more for
-/// materialising a fresh fill-in block (`alloc_write`) — exactly the
-/// per-op costs the PR-1/PR-2 SparseLU encoding charged, now derived
-/// from access-set shape instead of a kernel match.
+/// Flops and shared-fabric bytes come from the **workload
+/// declaration** ([`EngineWorkload::sim_cost`], whose default prices
+/// the access-set shape through the op table — exactly the per-op
+/// costs the PR-1/PR-2 SparseLU encoding charged, and what every
+/// committed `BENCH_sched.json` baseline row re-derives from); the
+/// locality-tracked read set is the task's extra reads followed by
+/// its (read-modify-write) target.
 pub fn dag_sim_task(
     t: &Task,
-    ops: &[OpSpec],
+    w: &dyn EngineWorkload,
     nb: usize,
     bs: usize,
     iter: u64,
 ) -> SimTask {
-    let bb = (bs * bs * 4) as u64;
+    let cost = w.sim_cost(t, bs);
     let id = |(a, b): (usize, usize)| (a * nb + b) as u32;
     let extra = t.n_reads as u64;
     let mut reads = [0u32; 3];
@@ -131,9 +134,8 @@ pub fn dag_sim_task(
     }
     reads[extra as usize] = id(t.write);
     SimTask {
-        flops: (ops[t.op.0].flops)(bs),
-        mem_bytes: bb
-            * (1 + extra.saturating_sub(1) + u64::from(t.alloc_write)),
+        flops: cost.flops,
+        mem_bytes: cost.mem_bytes,
         reads,
         n_reads: (extra + 1) as u8,
         write: id(t.write),
@@ -163,7 +165,7 @@ pub fn lu_sim_task(
             Task::new(OP_BMOD, &[(ii, kk), (kk, jj)], (ii, jj), fresh)
         }
     };
-    dag_sim_task(&t, LU_OPS, nb, bs, iter)
+    dag_sim_task(&t, &Sparselu, nb, bs, iter)
 }
 
 /// Cholesky wrapper over [`dag_sim_task`] (block row `ii`, column
@@ -185,7 +187,7 @@ pub fn chol_sim_task(
             Task::new(OP_GEMM, &[(ii, kk), (jj, kk)], (ii, jj), false)
         }
     };
-    dag_sim_task(&t, CHOLESKY_OPS, nb, bs, iter)
+    dag_sim_task(&t, &Cholesky, nb, bs, iter)
 }
 
 /// Workload constructors.
