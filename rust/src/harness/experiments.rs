@@ -41,7 +41,7 @@ impl Scale {
 /// executor spawning vs the persistent pool).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig3", "fig4", "fig6", "table1", "fig7", "ablation", "dataflow",
-    "throughput",
+    "throughput", "scenario",
 ];
 
 /// Dispatch by id.
@@ -56,6 +56,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> ExperimentReport {
         "ablation" => ablation(scale),
         "dataflow" => dataflow(scale),
         "throughput" => throughput(scale),
+        "scenario" => scenario(scale),
         other => panic!("unknown experiment {other:?} (want one of {ALL_EXPERIMENTS:?})"),
     }
 }
@@ -799,6 +800,187 @@ fn throughput(scale: Scale) -> ExperimentReport {
     ExperimentReport { id: "throughput".into(), tables: vec![t], checks }
 }
 
+// --- Scenario engine: adversarial streams, executable invariants --------
+
+/// The pinned seed set for the full `scenario` experiment sweep — three
+/// distinct seeds, matching the acceptance bar ("deterministic under 3
+/// distinct seeds"). One-off repro with any other seed goes through
+/// [`scenario_repro`].
+pub const SCENARIO_SEEDS: &[u64] = &[1, 2, 3];
+
+/// `scenario` experiment: every named scenario
+/// ([`crate::sched::scenario::ALL_SCENARIOS`]) replayed on the host
+/// pool in both executor modes and on the simulator, under the pinned
+/// seeds. `Scale` is deliberately ignored — scenario plans are already
+/// sized for fast deterministic replay, and their invariants (capacity
+/// bounds, straggler overlap) are calibrated to the planned sizes.
+fn scenario(_scale: Scale) -> ExperimentReport {
+    scenario_report(None, SCENARIO_SEEDS)
+}
+
+/// One-off repro of a single named scenario under one seed — the CLI's
+/// `gprm exp scenario --scenario <name> --seed N` entry point. `Err`
+/// lists the registry on an unknown name.
+pub fn scenario_repro(
+    name: &str,
+    seed: u64,
+) -> Result<ExperimentReport, String> {
+    use crate::sched::scenario::{find, names};
+    if find(name).is_none() {
+        return Err(format!(
+            "unknown scenario {name:?} (want one of {:?})",
+            names()
+        ));
+    }
+    Ok(scenario_report(Some(name), &[seed]))
+}
+
+/// Shared body of [`scenario`]/[`scenario_repro`]: replay the selected
+/// scenarios under `seeds` on the host pool (both [`ExecMode`]s) and
+/// the simulator (both executor models, both launch models), render a
+/// registry table plus a per-replay table, and turn every declared
+/// invariant, host/sim agreement, and simulator determinism into shape
+/// checks.
+///
+/// [`ExecMode`]: crate::sched::scenario::ExecMode
+pub fn scenario_report(
+    filter: Option<&str>,
+    seeds: &[u64],
+) -> ExperimentReport {
+    use crate::sched::scenario::{
+        check_invariants, host_sim_agreement, run_host, run_sim, ExecMode,
+        ALL_SCENARIOS,
+    };
+    use crate::tilesim::SchedModel;
+
+    let scenarios: Vec<_> = ALL_SCENARIOS
+        .iter()
+        .filter(|s| filter.is_none_or(|f| s.name == f))
+        .collect();
+    let mut reg_t = Table::new(
+        "Scenario registry — reason to exist, machine-checked invariants",
+        &["scenario", "invariants", "reason"],
+    );
+    for sc in &scenarios {
+        reg_t.row(vec![
+            sc.name.to_string(),
+            sc.invariants.join(", "),
+            sc.reason.to_string(),
+        ]);
+    }
+    let mut runs_t = Table::new(
+        &format!("Scenario replays — seeds {seeds:?}, both host modes"),
+        &[
+            "scenario", "seed", "mode", "workers", "jobs", "tasks",
+            "peak pending", "invariants",
+        ],
+    );
+    let mut checks = Vec::new();
+    for sc in &scenarios {
+        let mut violations: Vec<String> = Vec::new();
+        let mut sim_bad: Vec<String> = Vec::new();
+        for &seed in seeds {
+            let mut overlapped = None;
+            for mode in [ExecMode::Overlapped, ExecMode::Serial] {
+                let o = run_host(sc, seed, mode);
+                let inv = check_invariants(sc, &o);
+                let passed = inv.iter().filter(|r| r.pass).count();
+                runs_t.row(vec![
+                    sc.name.to_string(),
+                    seed.to_string(),
+                    format!("{mode:?}"),
+                    o.workers.to_string(),
+                    o.jobs.len().to_string(),
+                    o.jobs
+                        .iter()
+                        .map(|j| j.tasks)
+                        .sum::<usize>()
+                        .to_string(),
+                    o.peak_pending.to_string(),
+                    format!("{passed}/{}", inv.len()),
+                ]);
+                for r in inv.into_iter().filter(|r| !r.pass) {
+                    violations.push(format!(
+                        "seed {seed} {mode:?} [{}]: {}",
+                        r.invariant, r.detail
+                    ));
+                }
+                if mode == ExecMode::Overlapped {
+                    overlapped = Some(o);
+                }
+            }
+            // Simulator replay of the same plan: agreement with the
+            // overlapped host run, under both executor models, and
+            // bit-equal cycles on a re-run (full determinism).
+            let o = overlapped.expect("overlapped replay always runs");
+            for sched in
+                [SchedModel::WorkSteal, SchedModel::MutexScoreboard]
+            {
+                let s = run_sim(sc, seed, 8, sched);
+                let agree = host_sim_agreement(&o, &s);
+                if !agree.pass {
+                    sim_bad.push(format!(
+                        "seed {seed} {sched:?}: {}",
+                        agree.detail
+                    ));
+                }
+                let again = run_sim(sc, seed, 8, sched);
+                if (s.pool_cycles, s.oneshot_cycles)
+                    != (again.pool_cycles, again.oneshot_cycles)
+                {
+                    sim_bad.push(format!(
+                        "seed {seed} {sched:?}: simulator replay is \
+                         not deterministic"
+                    ));
+                }
+            }
+        }
+        checks.push(ShapeCheck::new(
+            &format!(
+                "{}: every declared invariant holds on both host modes \
+                 under all seeds",
+                sc.name
+            ),
+            violations.is_empty(),
+            if violations.is_empty() {
+                format!("{} invariants", sc.invariants.len())
+            } else {
+                violations.join("; ")
+            },
+        ));
+        checks.push(ShapeCheck::new(
+            &format!(
+                "{}: host and simulator agree on completion structure \
+                 (deterministically, both executor models)",
+                sc.name
+            ),
+            sim_bad.is_empty(),
+            if sim_bad.is_empty() {
+                "task totals match, cycles bit-equal on re-run".into()
+            } else {
+                sim_bad.join("; ")
+            },
+        ));
+    }
+    checks.push(ShapeCheck::new(
+        "scenario registry meets the acceptance bar",
+        filter.is_some()
+            || (scenarios.len() >= 6
+                && scenarios.iter().all(|s| {
+                    !s.reason.is_empty() && s.invariants.len() >= 2
+                })),
+        format!(
+            "{} scenarios, each with a reason and >= 2 invariants",
+            scenarios.len()
+        ),
+    ));
+    ExperimentReport {
+        id: "scenario".into(),
+        tables: vec![reg_t, runs_t],
+        checks,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -870,6 +1052,25 @@ mod tests {
     fn throughput_shape_holds_full_acceptance_config() {
         // NB=16, BS=16, 8 mixed jobs — the unscaled acceptance stream.
         let r = throughput(Scale(1.0));
+        assert!(r.all_pass(), "{}", r.render());
+    }
+
+    #[test]
+    fn scenario_shape_holds_with_one_pinned_seed() {
+        // The 3-seed x all-scenarios sweep lives in tests/scenarios.rs
+        // and the CI scenario step; one off-sweep seed here proves the
+        // report machinery end to end.
+        let r = scenario_report(None, &[5]);
+        assert!(r.all_pass(), "{}", r.render());
+        assert!(r.tables.len() == 2 && !r.checks.is_empty());
+    }
+
+    #[test]
+    fn scenario_repro_rejects_unknown_names() {
+        let e = scenario_repro("no-such-scenario", 1).unwrap_err();
+        assert!(e.contains("unknown scenario"), "{e}");
+        assert!(e.contains("mixed-sizes"), "should list the registry: {e}");
+        let r = scenario_repro("poison-mid-stream", 7).unwrap();
         assert!(r.all_pass(), "{}", r.render());
     }
 

@@ -6,5 +6,8 @@
 pub mod experiments;
 pub mod report;
 
-pub use experiments::{run_experiment, Scale, ALL_EXPERIMENTS};
+pub use experiments::{
+    run_experiment, scenario_report, scenario_repro, Scale,
+    ALL_EXPERIMENTS, SCENARIO_SEEDS,
+};
 pub use report::{ExperimentReport, ShapeCheck, Table};

@@ -156,6 +156,32 @@
 //! 1.09×–2.3× at ≥4 workers on the 8-job mixed stream, widening with
 //! the team size); the CLI front end is `gprm sparselu --runtime
 //! pool --jobs N --app sparselu|cholesky|matmul|mixed`.
+//!
+//! # Scenario engine
+//!
+//! The pool's contracts are exercised beyond uniform streams by the
+//! **scenario engine** ([`sched::scenario`]): named, seeded
+//! adversarial job streams over the registry — mixed sizes, bursty
+//! submission, `submit_after` fan-out/fan-in, poisoned and straggler
+//! jobs mid-stream, half-capacity admission churn
+//! ([`sched::scenario::ALL_SCENARIOS`]). Each scenario declares a
+//! reason-to-exist and machine-checked invariants (bit-identity,
+//! poison containment, FIFO admission via the pool's event clock,
+//! no starvation, bounded pending depth, dependency ordering),
+//! replayed on the host pool in both executor modes
+//! ([`sched::scenario::ExecMode`]) and on the virtual-time simulator
+//! with host/sim completion-structure agreement
+//! ([`sched::scenario::host_sim_agreement`]).
+//!
+//! **Declaring a new scenario is a one-file change**: add one entry
+//! to `ALL_SCENARIOS` in `sched/scenario.rs` — a `name`, a one-line
+//! `reason`, the invariant names it must uphold (vocabulary in
+//! [`sched::scenario::check_invariants`]), and a `plan_fn` deriving
+//! the job stream from the provided seeded PRNG. The conformance
+//! suite (`tests/scenarios.rs`), the `scenario` harness experiment
+//! (`gprm exp scenario`, pinned seeds) and the CLI one-off repro
+//! (`gprm exp scenario --scenario <name> --seed N`) all iterate the
+//! slice and pick the new entry up untouched.
 // CI enforces `cargo clippy -- -D warnings`; these style lints are
 // opted out crate-wide because they fight the paper-faithful shapes:
 // index-heavy numeric kernels (the explicit loop bounds document the

@@ -4,7 +4,10 @@
 //!
 //! * `exp [ids…] [--scale f]` — regenerate the paper's figures/tables
 //!   on the TILEPro64 simulator substrate (fig2 fig3 fig4 fig6 table1
-//!   fig7; default: all, at `--scale 1.0` = paper scale).
+//!   fig7; default: all, at `--scale 1.0` = paper scale). The
+//!   `scenario` id sweeps the scenario engine (seeded adversarial job
+//!   streams with machine-checked invariants, host pool + simulator);
+//!   `exp --scenario <name> --seed N` reruns one stream for repro.
 //! * `sparselu` — blocked workloads on a real runtime (host threads).
 //!   `--app` selects any workload from the **registry**
 //!   (`sched::workload::registry`; `--list-apps` prints it) on the
@@ -28,7 +31,9 @@ use gprm::apps::sparselu::{
 };
 use gprm::coordinator::kernel::Registry;
 use gprm::coordinator::{GprmConfig, GprmRuntime};
-use gprm::harness::{run_experiment, Scale, ALL_EXPERIMENTS};
+use gprm::harness::{
+    run_experiment, scenario_repro, Scale, ALL_EXPERIMENTS,
+};
 use gprm::linalg::blocked::BlockedSparseMatrix;
 use gprm::linalg::genmat::genmat;
 use gprm::linalg::lu::sparselu_seq;
@@ -123,12 +128,27 @@ fn parse(argv: &[String], flags: &[&str]) -> Result<Args, String> {
 }
 
 fn cmd_exp(argv: &[String]) -> i32 {
-    let specs = [OptSpec {
-        name: "scale",
-        help: "workload scale, 1.0 = paper scale",
-        default: Some("1.0"),
-        is_flag: false,
-    }];
+    let specs = [
+        OptSpec {
+            name: "scale",
+            help: "workload scale, 1.0 = paper scale",
+            default: Some("1.0"),
+            is_flag: false,
+        },
+        OptSpec {
+            name: "scenario",
+            help: "one-off repro of a single named scenario (with \
+                   --seed); see the `scenario` experiment",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "seed",
+            help: "seed for --scenario repro",
+            default: Some("1"),
+            is_flag: false,
+        },
+    ];
     let args = match parse(argv, &["help"]) {
         Ok(a) => a,
         Err(e) => return err_usage("gprm exp", &e, &specs),
@@ -138,11 +158,32 @@ fn cmd_exp(argv: &[String]) -> i32 {
             "{}",
             usage(
                 "gprm exp [ids…]",
-                "Regenerate paper figures/tables (simulator)",
+                "Regenerate paper figures/tables (simulator); \
+                 `gprm exp scenario` sweeps the scenario engine, \
+                 `--scenario <name> --seed N` reruns one stream",
                 &specs
             )
         );
         return 0;
+    }
+    if let Some(name) = args.get("scenario") {
+        let seed = match args.get_parse::<u64>("seed", 1) {
+            Ok(s) => s,
+            Err(e) => return err_usage("gprm exp", &e, &specs),
+        };
+        return match scenario_repro(name, seed) {
+            Ok(report) => {
+                println!("{}", report.render());
+                if report.all_pass() {
+                    println!("all shape checks PASS");
+                    0
+                } else {
+                    println!("some shape checks FAILED");
+                    1
+                }
+            }
+            Err(e) => err_usage("gprm exp", &e, &specs),
+        };
     }
     let scale = Scale(args.get_parse::<f64>("scale", 1.0).unwrap_or(1.0));
     let ids: Vec<String> = if args.positional().is_empty() {

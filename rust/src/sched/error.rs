@@ -39,6 +39,11 @@ pub enum Error {
     /// pool's admission pass, so the submission is rejected instead
     /// of deadlocking.
     CrossPoolDependency,
+    /// The handle names no job tracked by this
+    /// [`super::session::Session`] — it was never submitted through
+    /// it, or its output was already retired by
+    /// [`super::session::Session::take_output`].
+    UnknownJob,
     /// One-shot executor options ([`super::exec::ExecOpts`]) were
     /// passed to a host that does not consult them (the persistent
     /// pool always work-steals and records no event log).
@@ -72,6 +77,11 @@ impl std::fmt::Display for Error {
                 f,
                 "inter-job dependency handle belongs to a different \
                  pool"
+            ),
+            Error::UnknownJob => write!(
+                f,
+                "handle names no job tracked by this session (never \
+                 submitted through it, or already retired)"
             ),
             Error::ExecOpts(msg) => write!(f, "{msg}"),
             Error::Host(msg) => write!(f, "host runtime failed: {msg}"),
@@ -114,5 +124,8 @@ mod tests {
         assert!(e.to_string().contains('3'));
         let e = Error::CrossPoolDependency;
         assert!(e.to_string().contains("different"));
+        let e = Error::UnknownJob;
+        assert!(e.to_string().contains("retired"));
+        assert!(std::error::Error::source(&e).is_none());
     }
 }

@@ -51,6 +51,14 @@
 //!   (`.job(Sparselu::params(nb, bs)).after(&h).submit()?`) and
 //!   collects outputs, replacing the raw scope/submit pairing for
 //!   workload jobs.
+//! * [`scenario`] — the **scenario engine**: named, seeded
+//!   adversarial job streams over the registry
+//!   ([`scenario::ALL_SCENARIOS`]), each declaring a reason-to-exist
+//!   and machine-checked invariants, replayed on the host pool
+//!   ([`scenario::run_host`]) and the virtual-time simulator
+//!   ([`scenario::run_sim`]) with host/sim completion-structure
+//!   agreement. The module docs carry the one-file recipe for
+//!   declaring a new scenario.
 //! * [`error`] — [`error::Error`]: the one typed failure surface of
 //!   the whole stack (`Display` + `std::error::Error`, never panics
 //!   on an error path).
@@ -67,6 +75,7 @@ pub mod error;
 pub mod exec;
 pub mod graph;
 pub mod pool;
+pub mod scenario;
 pub mod session;
 pub mod workload;
 

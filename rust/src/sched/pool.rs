@@ -219,7 +219,21 @@ pub(crate) struct JobInner {
     /// stealing executor's).
     ready_len: AtomicUsize,
     peak_ready: AtomicUsize,
+    /// Position of this job's admission in the pool-wide event order
+    /// ([`SEQ_UNSET`] until admitted). Admission and completion draw
+    /// stamps from ONE counter, so "predecessor completed before
+    /// dependent was admitted" is a comparison, not a race — the
+    /// observability hooks behind [`JobHandle::admission_index`] and
+    /// the scenario engine's FIFO/dependency invariants.
+    admission_seq: AtomicUsize,
+    /// Position of this job's completion in the same event order
+    /// ([`SEQ_UNSET`] until finished).
+    completion_seq: AtomicUsize,
 }
+
+/// Sentinel for "event has not happened yet" in the admission/
+/// completion stamps.
+const SEQ_UNSET: usize = usize::MAX;
 
 // SAFETY: `work` holds a raw graph pointer and an erased closure whose
 // borrows are kept alive by the scope contract (PoolScope blocks until
@@ -274,6 +288,10 @@ struct Admission {
     next_gen: Vec<u32>,
     /// Sum of admitted-but-unfinished graphs' task counts.
     inflight: usize,
+    /// High-water mark of jobs still pending *after* an admission
+    /// pass — i.e. jobs that genuinely queued behind capacity or
+    /// dependencies, not ones merely in transit through the queue.
+    peak_pending: usize,
     shutting_down: bool,
 }
 
@@ -300,6 +318,10 @@ struct PoolShared {
     /// Worker thread handles for deep-idle unparking.
     threads: Mutex<Vec<std::thread::Thread>>,
     task_capacity: usize,
+    /// Pool-wide event clock: admissions and completions each take
+    /// one tick, so their stamps are mutually ordered (see
+    /// [`JobInner::admission_seq`]).
+    event_seq: AtomicUsize,
 }
 
 impl PoolShared {
@@ -363,6 +385,13 @@ impl PoolShared {
                 unsafe {
                     *job.work.get() = None;
                 }
+                // An empty job's admission IS its completion: stamp
+                // both events (in that order) before any waiter or
+                // dependent can observe it done.
+                let a = self.event_seq.fetch_add(1, Ordering::SeqCst);
+                job.admission_seq.store(a, Ordering::Release);
+                let c = self.event_seq.fetch_add(1, Ordering::SeqCst);
+                job.completion_seq.store(c, Ordering::Release);
                 job.finish(Ok(ExecStats::default()));
                 continue;
             }
@@ -378,6 +407,8 @@ impl PoolShared {
             adm.inflight += n;
             let base = pack_base(slot, gen);
             job.packed_base.store(base, Ordering::Release);
+            let a = self.event_seq.fetch_add(1, Ordering::SeqCst);
+            job.admission_seq.store(a, Ordering::Release);
             *self.slots[slot].lock().unwrap() = Some(job.clone());
             self.active_jobs.fetch_add(1, Ordering::SeqCst);
             // SAFETY: the job just got admitted — not complete.
@@ -393,6 +424,12 @@ impl PoolShared {
                 self.injector_len.store(inj.len(), Ordering::Release);
             }
             admitted_any = true;
+        }
+        // Whatever is still queued after this pass truly waited (on
+        // capacity or a dependency) rather than passing through.
+        let depth = adm.pending.len();
+        if depth > adm.peak_pending {
+            adm.peak_pending = depth;
         }
         drop(adm);
         if admitted_any {
@@ -428,6 +465,11 @@ impl PoolShared {
                 peak_ready: job.peak_ready.load(Ordering::Relaxed),
             }),
         };
+        // Completion stamp strictly precedes `finish` — so once a
+        // dependent admits (it must first observe `done`), its
+        // admission stamp is strictly greater than this one.
+        let c = self.event_seq.fetch_add(1, Ordering::SeqCst);
+        job.completion_seq.store(c, Ordering::Release);
         job.finish(result);
         self.try_admit();
     }
@@ -592,12 +634,14 @@ impl Pool {
                 free_slots: (0..max_jobs).rev().collect(),
                 next_gen: vec![0; max_jobs],
                 inflight: 0,
+                peak_pending: 0,
                 shutting_down: false,
             }),
             shutdown: AtomicBool::new(false),
             active_jobs: AtomicUsize::new(0),
             threads: Mutex::new(Vec::new()),
             task_capacity: cap,
+            event_seq: AtomicUsize::new(0),
         });
         let mut handles = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
@@ -628,6 +672,20 @@ impl Pool {
     /// Admitted-but-unfinished jobs right now (racy; diagnostics).
     pub fn active_jobs(&self) -> usize {
         self.shared.active_jobs.load(Ordering::SeqCst)
+    }
+
+    /// Submitted-but-unadmitted jobs right now (racy; diagnostics).
+    /// Zero once a stream has fully drained.
+    pub fn pending_jobs(&self) -> usize {
+        self.shared.adm.lock().unwrap().pending.len()
+    }
+
+    /// High-water mark of the pending queue, counted *after* each
+    /// admission pass — so it measures jobs that genuinely waited on
+    /// capacity or dependencies, not jobs merely in transit. A
+    /// half-capacity stream of `n` jobs must show `0 < peak ≤ n-1`.
+    pub fn peak_pending(&self) -> usize {
+        self.shared.adm.lock().unwrap().peak_pending
     }
 
     /// Run `f` with a submission scope. Jobs submitted through the
@@ -718,6 +776,8 @@ impl Pool {
             cv: Condvar::new(),
             ready_len: AtomicUsize::new(0),
             peak_ready: AtomicUsize::new(0),
+            admission_seq: AtomicUsize::new(SEQ_UNSET),
+            completion_seq: AtomicUsize::new(SEQ_UNSET),
         });
         // Every job — including an empty graph — goes through the
         // FIFO queue: an empty job completes at its *admission* point
@@ -870,6 +930,29 @@ impl JobHandle {
 
     pub fn is_done(&self) -> bool {
         self.job.done.lock().unwrap().is_some()
+    }
+
+    /// Position of this job's admission on the pool-wide event clock,
+    /// or `None` while it still queues. Admissions are stamped FIFO
+    /// under the admission lock, so across any set of handles from one
+    /// pool these indices strictly follow submission order.
+    pub fn admission_index(&self) -> Option<usize> {
+        match self.job.admission_seq.load(Ordering::Acquire) {
+            SEQ_UNSET => None,
+            s => Some(s),
+        }
+    }
+
+    /// Position of this job's completion on the same event clock, or
+    /// `None` while it runs or queues. A dependent's
+    /// [`Self::admission_index`] is strictly greater than each of its
+    /// predecessors' completion indices — the machine-checkable form
+    /// of the `submit_after` ordering contract.
+    pub fn completion_index(&self) -> Option<usize> {
+        match self.job.completion_seq.load(Ordering::Acquire) {
+            SEQ_UNSET => None,
+            s => Some(s),
+        }
     }
 }
 
@@ -1033,6 +1116,75 @@ mod tests {
             }
         });
         assert_eq!(n.load(Ordering::Relaxed), 3 * g.len());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn event_clock_orders_admissions_and_completions() {
+        // One slot + a gated first job: the rest of the stream is
+        // provably queued (pending == 3, no admission stamp) until the
+        // gate opens; afterwards the stamps must show FIFO admission,
+        // serial completion, and slot-recycling order.
+        let g = lu_graph(4);
+        let pool = Pool::with_config(PoolConfig {
+            workers: 2,
+            task_capacity: 1 << 12,
+            max_jobs: 1,
+        });
+        let gate = AtomicBool::new(false);
+        pool.scope(|s| {
+            let h0 = s
+                .submit(&g, |_| {
+                    while !gate.load(Ordering::Acquire) {
+                        std::hint::spin_loop();
+                    }
+                })
+                .unwrap();
+            let rest: Vec<JobHandle> =
+                (0..3).map(|_| s.submit(&g, |_| {}).unwrap()).collect();
+            assert_eq!(pool.pending_jobs(), 3);
+            for h in &rest {
+                assert!(h.admission_index().is_none(), "still queued");
+                assert!(h.completion_index().is_none());
+            }
+            gate.store(true, Ordering::Release);
+            let mut hs = vec![h0];
+            hs.extend(rest);
+            for h in &hs {
+                h.wait().unwrap();
+            }
+            let adm: Vec<usize> =
+                hs.iter().map(|h| h.admission_index().unwrap()).collect();
+            let cpl: Vec<usize> =
+                hs.iter().map(|h| h.completion_index().unwrap()).collect();
+            assert!(adm.windows(2).all(|w| w[0] < w[1]), "FIFO: {adm:?}");
+            for (a, c) in adm.iter().zip(&cpl) {
+                assert!(a < c, "admission precedes completion");
+            }
+            // Single slot: job k+1 admits only after job k completed.
+            for k in 0..hs.len() - 1 {
+                assert!(cpl[k] < adm[k + 1], "{cpl:?} vs {adm:?}");
+            }
+        });
+        assert!(pool.peak_pending() >= 3, "the tail genuinely queued");
+        assert_eq!(pool.pending_jobs(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dependency_completion_precedes_dependent_admission() {
+        let pool = Pool::new(3);
+        let g = lu_graph(5);
+        pool.scope(|s| {
+            let a = s.submit(&g, |_| {}).unwrap();
+            let b = s.submit_after(&g, |_| {}, &[&a]).unwrap();
+            b.wait().unwrap();
+            assert!(
+                a.completion_index().unwrap()
+                    < b.admission_index().unwrap(),
+                "dependent admitted before its predecessor completed"
+            );
+        });
         pool.shutdown();
     }
 

@@ -1,0 +1,1056 @@
+//! Scenario engine: seeded adversarial workload streams with
+//! executable invariants, replayed on the host pool *and* the
+//! virtual-time simulator.
+//!
+//! The paper's claim is not just speed but task-management
+//! **stability** — the pool must keep its contracts under any mix of
+//! job sizes, submission rhythms, dependency shapes and failures, not
+//! only under the uniform 8-job streams the stress tests drive. This
+//! module turns that claim into a deterministic test surface:
+//!
+//! * A [`Scenario`] is a *named, seeded stream generator* over the
+//!   [`registry`]: [`Scenario::plan`] expands `(scenario, seed)` into
+//!   a [`ScenarioPlan`] — a concrete job list (sizes, workloads,
+//!   per-job seeds, `submit_after` dependency edges, poisoned jobs,
+//!   submission batches) plus pool sizing. Same seed, same plan,
+//!   always; the PRNG is [`SplitMix64`] keyed by scenario name and
+//!   seed.
+//! * Each scenario declares a `reason` (why it exists — what it would
+//!   catch) and the names of its machine-checked `invariants`,
+//!   evaluated by [`check_invariants`] over a replay's
+//!   [`ScenarioOutcome`]. Invariants only use *deterministic
+//!   observables*: per-job f32 bit-identity against the workload's
+//!   own sequential reference, poison containment, the pool's
+//!   admission/completion event clock
+//!   ([`JobHandle::admission_index`]), pending-queue bounds, and
+//!   completion structure — never wall-clock or completion *timing*,
+//!   which a host thread scheduler is free to vary.
+//! * [`run_host`] replays a plan through the fluent [`Session`] API
+//!   on a real [`Pool`], in either [`ExecMode`]: `Overlapped` (the
+//!   whole stream in flight at once — cross-job stealing, capacity
+//!   churn, dependency deferral all live) or `Serial` (one job at a
+//!   time — the reference execution of the same stream). Every
+//!   invariant must hold in both modes.
+//! * [`run_sim`] replays the same plan's job stream through
+//!   [`DataflowSim::run_scenario`] under both launch models (and any
+//!   [`SchedModel`]); [`host_sim_agreement`] asserts host and
+//!   simulator agree on the completion structure (every job drains
+//!   its full graph — identical task totals on both substrates).
+//!
+//! Poisoned jobs need no special kernel hook: the plan submits the
+//! *canonical* input with its `(0,0)` block removed
+//! ([`BlockedSparseMatrix::take_block`]), so the first factorisation
+//! kernel to touch the missing diagonal panics inside the worker —
+//! exactly the documented poison path
+//! ([`super::session::JobBuilder::canonical_input`]) — and the pool
+//! must contain the failure to that one job.
+//!
+//! # Declaring a new scenario (the one-file recipe)
+//!
+//! Add one entry to [`ALL_SCENARIOS`]: a `name`, a one-line `reason`
+//! to exist, the list of invariant names it must uphold (see
+//! [`check_invariants`] for the vocabulary), and a `plan_fn` that
+//! derives a [`ScenarioPlan`] from the provided PRNG. Everything else
+//! — the conformance suite (`tests/scenarios.rs`), the `scenario`
+//! harness experiment, and the CLI one-off repro
+//! (`gprm exp scenario --scenario <name> --seed N`) — picks the new
+//! scenario up from the slice; no other file changes.
+//!
+//! [`registry`]: super::workload::registry
+//! [`JobHandle::admission_index`]: super::pool::JobHandle::admission_index
+//! [`BlockedSparseMatrix::take_block`]: crate::linalg::blocked::BlockedSparseMatrix::take_block
+//! [`DataflowSim::run_scenario`]: crate::tilesim::DataflowSim::run_scenario
+//! [`SchedModel`]: crate::tilesim::SchedModel
+
+use super::error::Error;
+use super::pool::{JobHandle, Pool, PoolConfig};
+use super::session::{JobSpec, Session};
+use super::workload::{registry, Params, Workload};
+use crate::linalg::blocked::BlockedSparseMatrix;
+use crate::tilesim::{DataflowSim, LaunchModel, SchedModel};
+use crate::util::prng::SplitMix64;
+
+// --- the plan: what a (scenario, seed) pair expands to ------------------
+
+/// One planned job of a scenario stream, in submission order.
+pub struct JobPlan {
+    pub workload: &'static dyn Workload,
+    pub nb: usize,
+    pub bs: usize,
+    /// Input-generator seed (only matmul's generator consults it).
+    pub seed: u32,
+    /// Indices of earlier jobs this one is submitted `after`
+    /// (admission deferred until they complete; ordering-only).
+    pub deps: Vec<usize>,
+    /// Submit the canonical input with its `(0,0)` block removed: the
+    /// first kernel touching the missing diagonal panics and poisons
+    /// exactly this job.
+    pub poison: bool,
+    /// Oversized job meant to run long while small jobs race past it.
+    pub straggler: bool,
+    /// Submission batch; [`BatchPacing`] says what happens between
+    /// batches in an `Overlapped` replay.
+    pub batch: usize,
+}
+
+impl JobPlan {
+    pub fn params(&self) -> Params {
+        Params::new(self.nb, self.bs)
+    }
+}
+
+/// Pool task-budget sizing relative to the stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CapacityPlan {
+    /// Budget fits the whole stream at once.
+    FullStream,
+    /// Budget is half the stream's task total (never below the
+    /// largest single graph): admission must run in FIFO waves.
+    HalfStream,
+}
+
+/// What an `Overlapped` replay does at a batch boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchPacing {
+    /// Nothing: batches are a labelling only.
+    Immediate,
+    /// Sleep briefly so the workers can reach the deep-idle park
+    /// between bursts.
+    Gap,
+    /// Wait for every prior handle: the next batch hits a drained
+    /// pool (fresh-wave semantics).
+    Drain,
+}
+
+/// A fully-expanded scenario: pool sizing plus the job stream.
+pub struct ScenarioPlan {
+    pub workers: usize,
+    pub capacity: CapacityPlan,
+    pub pacing: BatchPacing,
+    pub jobs: Vec<JobPlan>,
+}
+
+// --- the registry of scenarios ------------------------------------------
+
+/// A named, seeded adversarial stream with machine-checked
+/// invariants. See the module docs for the declaration recipe.
+pub struct Scenario {
+    pub name: &'static str,
+    /// Why this scenario exists — what failure it would catch.
+    pub reason: &'static str,
+    /// Names of the invariants [`check_invariants`] must uphold on
+    /// every replay (each scenario declares at least two).
+    pub invariants: &'static [&'static str],
+    plan_fn: fn(&mut SplitMix64) -> ScenarioPlan,
+}
+
+impl Scenario {
+    /// Deterministically expand this scenario under `seed`: the PRNG
+    /// is keyed by scenario name and seed, so plans never change
+    /// between runs, platforms, or replay substrates.
+    pub fn plan(&self, seed: u64) -> ScenarioPlan {
+        let key = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ name_hash(self.name);
+        (self.plan_fn)(&mut SplitMix64::new(key))
+    }
+}
+
+/// FNV-1a, so each scenario's PRNG stream is decorrelated from its
+/// siblings' even under equal seeds.
+fn name_hash(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Any registry entry, uniformly.
+fn pick(rng: &mut SplitMix64) -> &'static dyn Workload {
+    let r = registry();
+    r[rng.range(0, r.len())]
+}
+
+/// A factorisation entry (phase-capable: SparseLU/Cholesky at the
+/// current registry) — the workloads whose root kernel writes the
+/// `(0,0)` diagonal, which the poison tamper removes.
+fn pick_factorisation(rng: &mut SplitMix64) -> &'static dyn Workload {
+    let p = Params::new(4, 4);
+    let f: Vec<&'static dyn Workload> = registry()
+        .iter()
+        .copied()
+        .filter(|w| w.phases(&p).is_some())
+        .collect();
+    f[rng.range(0, f.len())]
+}
+
+fn job(
+    rng: &mut SplitMix64,
+    workload: &'static dyn Workload,
+    nb: usize,
+    bs: usize,
+) -> JobPlan {
+    JobPlan {
+        workload,
+        nb,
+        bs,
+        seed: rng.next_below(1 << 30) as u32,
+        deps: Vec::new(),
+        poison: false,
+        straggler: false,
+        batch: 0,
+    }
+}
+
+fn plan_mixed_sizes(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let jobs = (0..8)
+        .map(|i| {
+            let nb = if i % 2 == 0 {
+                rng.range(2, 4)
+            } else {
+                rng.range(8, 12)
+            };
+            let w = pick(rng);
+            job(rng, w, nb, bs)
+        })
+        .collect();
+    ScenarioPlan {
+        workers: rng.range(2, 9),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Immediate,
+        jobs,
+    }
+}
+
+fn plan_bursty(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let jobs = (0..9)
+        .map(|i| {
+            let w = pick(rng);
+            let mut j = job(rng, w, rng.range(3, 7), bs);
+            j.batch = i / 3;
+            j
+        })
+        .collect();
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Gap,
+        jobs,
+    }
+}
+
+fn plan_fan_out_fan_in(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let fan = rng.range(3, 6);
+    let root = pick(rng);
+    let mut jobs = vec![job(rng, root, rng.range(5, 8), bs)];
+    for _ in 0..fan {
+        let w = pick(rng);
+        let mut j = job(rng, w, rng.range(3, 6), bs);
+        j.deps = vec![0];
+        jobs.push(j);
+    }
+    let w = pick(rng);
+    let mut joiner = job(rng, w, rng.range(3, 6), bs);
+    joiner.deps = (1..=fan).collect();
+    jobs.push(joiner);
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Immediate,
+        jobs,
+    }
+}
+
+fn plan_poison_mid_stream(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let bad = rng.range(2, 6);
+    let jobs = (0..8)
+        .map(|i| {
+            let w = if i == bad {
+                pick_factorisation(rng)
+            } else {
+                pick(rng)
+            };
+            let mut j = job(rng, w, rng.range(4, 8), bs);
+            j.poison = i == bad;
+            j
+        })
+        .collect();
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Immediate,
+        jobs,
+    }
+}
+
+fn plan_capacity_churn(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    // Job 0 is big enough to dominate the half-stream budget: while
+    // it runs (milliseconds), the whole tail must queue behind it —
+    // deterministic pressure, not a submission-speed race.
+    let head = pick_factorisation(rng);
+    let mut jobs = vec![job(rng, head, 10, bs)];
+    for _ in 0..9 {
+        let w = pick(rng);
+        jobs.push(job(rng, w, rng.range(4, 7), bs));
+    }
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::HalfStream,
+        pacing: BatchPacing::Immediate,
+        jobs,
+    }
+}
+
+fn plan_straggler_shadow(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let big = pick_factorisation(rng);
+    let mut straggler = job(rng, big, 12, bs);
+    straggler.straggler = true;
+    let mut jobs = vec![straggler];
+    for _ in 0..7 {
+        let w = pick(rng);
+        jobs.push(job(rng, w, rng.range(2, 4), bs));
+    }
+    ScenarioPlan {
+        workers: rng.range(4, 9),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Immediate,
+        jobs,
+    }
+}
+
+fn plan_fresh_wave_after_poison(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let bad = rng.range(0, 4);
+    let mut jobs: Vec<JobPlan> = (0..4)
+        .map(|i| {
+            let w = if i == bad {
+                pick_factorisation(rng)
+            } else {
+                pick(rng)
+            };
+            let mut j = job(rng, w, rng.range(4, 7), bs);
+            j.poison = i == bad;
+            j
+        })
+        .collect();
+    for _ in 0..4 {
+        let w = pick(rng);
+        let mut j = job(rng, w, rng.range(4, 7), bs);
+        j.batch = 1;
+        jobs.push(j);
+    }
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Drain,
+        jobs,
+    }
+}
+
+/// Every scenario, in documentation order. Tests, the harness
+/// experiment and the CLI all iterate this slice.
+pub static ALL_SCENARIOS: &[Scenario] = &[
+    Scenario {
+        name: "mixed-sizes",
+        reason: "tiny jobs race huge ones through one team: cross-job \
+                 stealing must corrupt neither extreme, and every \
+                 admitted job must still complete",
+        invariants: &["bit-identity", "fifo-admission", "no-starvation"],
+        plan_fn: plan_mixed_sizes,
+    },
+    Scenario {
+        name: "bursty-vs-steady",
+        reason: "submission arrives in bursts separated by idle gaps: \
+                 the deep-idle park/unpark handshake must not lose a \
+                 wakeup between waves",
+        invariants: &["no-starvation", "bit-identity", "bounded-pending"],
+        plan_fn: plan_bursty,
+    },
+    Scenario {
+        name: "fan-out-fan-in",
+        reason: "one producer fans out to several dependents which fan \
+                 back into a joiner via submit_after: deferred \
+                 admission must respect every edge without deadlock",
+        invariants: &[
+            "dependency-order",
+            "fifo-admission",
+            "no-starvation",
+            "bit-identity",
+        ],
+        plan_fn: plan_fan_out_fan_in,
+    },
+    Scenario {
+        name: "poison-mid-stream",
+        reason: "a panicking kernel mid-stream must poison exactly its \
+                 own job: siblings keep bit-identity and the waiter \
+                 gets the typed error",
+        invariants: &["poison-containment", "bit-identity", "no-starvation"],
+        plan_fn: plan_poison_mid_stream,
+    },
+    Scenario {
+        name: "capacity-churn",
+        reason: "a stream larger than the admission budget must queue \
+                 FIFO behind the head (never drop, never deadlock) and \
+                 drain in submission order as the budget recycles",
+        invariants: &[
+            "fifo-admission",
+            "bounded-pending",
+            "queued-under-pressure",
+            "no-starvation",
+        ],
+        plan_fn: plan_capacity_churn,
+    },
+    Scenario {
+        name: "straggler-shadow",
+        reason: "one oversized straggler admitted first must not shadow \
+                 the tail: with spare workers, small jobs overtake it \
+                 (admission is FIFO, execution overlaps)",
+        invariants: &[
+            "no-starvation",
+            "bit-identity",
+            "overlap-completion",
+            "fifo-admission",
+        ],
+        plan_fn: plan_straggler_shadow,
+    },
+    Scenario {
+        name: "fresh-wave-after-poison",
+        reason: "the pool must serve a clean wave after a poisoned one: \
+                 slot recycling and admission state survive a failed \
+                 job",
+        invariants: &["poison-containment", "bit-identity", "no-starvation"],
+        plan_fn: plan_fresh_wave_after_poison,
+    },
+];
+
+/// Look a scenario up by name.
+pub fn find(name: &str) -> Option<&'static Scenario> {
+    ALL_SCENARIOS.iter().find(|s| s.name == name)
+}
+
+/// All scenario names, in registry order (CLI error messages).
+pub fn names() -> Vec<&'static str> {
+    ALL_SCENARIOS.iter().map(|s| s.name).collect()
+}
+
+// --- host replay ---------------------------------------------------------
+
+/// How the host replay drives the stream through the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The whole stream in flight at once: cross-job stealing,
+    /// capacity churn, dependency deferral and batch pacing all live.
+    Overlapped,
+    /// One job at a time (submit, wait, next): the reference
+    /// execution of the same stream, against which `Overlapped` must
+    /// show no observable difference in any invariant.
+    Serial,
+}
+
+/// One job's deterministic observables after a host replay.
+pub struct JobOutcome {
+    pub workload: &'static str,
+    /// Canonical graph size — what "fully drained" means for this job
+    /// on either substrate.
+    pub tasks: usize,
+    /// Event-clock stamps ([`JobHandle::admission_index`]).
+    pub admission: Option<usize>,
+    pub completion: Option<usize>,
+    /// Executed-task count, or the typed failure from
+    /// [`JobHandle::wait`].
+    pub result: Result<usize, Error>,
+    /// Bit-identity vs the workload's own sequential reference
+    /// (`None` for poisoned jobs — their output is partial by
+    /// design).
+    pub bits: Option<Result<(), String>>,
+}
+
+/// Everything [`check_invariants`] looks at after a host replay.
+pub struct ScenarioOutcome {
+    pub scenario: &'static str,
+    pub seed: u64,
+    pub mode: ExecMode,
+    pub workers: usize,
+    pub task_capacity: usize,
+    pub plan: ScenarioPlan,
+    pub jobs: Vec<JobOutcome>,
+    pub peak_pending: usize,
+    pub final_pending: usize,
+    pub final_active: usize,
+}
+
+/// Canonical input with the `(0,0)` block removed — the deterministic
+/// poison tamper (see module docs).
+fn tampered_input(
+    w: &'static dyn Workload,
+    p: &Params,
+    seed: u32,
+) -> BlockedSparseMatrix {
+    let mut m = w.make_input(p, seed);
+    let _ = m.take_block(0, 0);
+    m
+}
+
+/// Replay `sc` under `seed` through the fluent [`Session`] API on a
+/// fresh [`Pool`], collecting every deterministic observable. Panics
+/// only on engine misuse (a plan whose submissions cannot be
+/// accepted), never on job failure — poisoned jobs are data.
+pub fn run_host(sc: &Scenario, seed: u64, mode: ExecMode) -> ScenarioOutcome {
+    let plan = sc.plan(seed);
+
+    // Canonical graph sizes per distinct (workload, nb, bs) — what
+    // both substrates must drain per job.
+    let mut sizes = Vec::new();
+    let mut task_count = |j: &JobPlan| -> usize {
+        let key = (j.workload.name(), j.nb, j.bs);
+        if let Some((_, n)) = sizes.iter().find(|(k, _)| *k == key) {
+            return *n;
+        }
+        let n = j.workload.graph(&j.params()).len();
+        sizes.push((key, n));
+        n
+    };
+    let counts: Vec<usize> = plan.jobs.iter().map(&mut task_count).collect();
+    let total: usize = counts.iter().sum();
+    let biggest: usize = counts.iter().copied().max().unwrap_or(1);
+    let capacity = match plan.capacity {
+        CapacityPlan::FullStream => total.max(1),
+        CapacityPlan::HalfStream => (total / 2).max(biggest),
+    };
+
+    let pool = Pool::with_config(PoolConfig {
+        workers: plan.workers,
+        task_capacity: capacity,
+        max_jobs: 64,
+    });
+    let mut session = Session::new(&pool);
+    let mut handles: Vec<JobHandle> = Vec::with_capacity(plan.jobs.len());
+    for (i, j) in plan.jobs.iter().enumerate() {
+        if mode == ExecMode::Overlapped
+            && i > 0
+            && plan.jobs[i - 1].batch != j.batch
+        {
+            match plan.pacing {
+                BatchPacing::Immediate => {}
+                BatchPacing::Gap => std::thread::sleep(
+                    std::time::Duration::from_millis(2),
+                ),
+                BatchPacing::Drain => {
+                    for h in &handles {
+                        let _ = h.wait();
+                    }
+                }
+            }
+        }
+        let spec = JobSpec::new(j.workload, j.nb, j.bs);
+        let mut b = session.job(spec);
+        b = if j.poison {
+            b.canonical_input(tampered_input(j.workload, &spec.params, j.seed))
+        } else {
+            b.seed(j.seed)
+        };
+        for &d in &j.deps {
+            b = b.after(&handles[d]);
+        }
+        let h = b
+            .submit()
+            .expect("scenario plans are pre-sized to fit their pool");
+        if mode == ExecMode::Serial {
+            let _ = h.wait();
+        }
+        handles.push(h);
+    }
+
+    let mut jobs: Vec<JobOutcome> = plan
+        .jobs
+        .iter()
+        .zip(&handles)
+        .zip(&counts)
+        .map(|((j, h), &tasks)| {
+            let result = h.wait().map(|s| s.executed);
+            JobOutcome {
+                workload: j.workload.name(),
+                tasks,
+                admission: h.admission_index(),
+                completion: h.completion_index(),
+                result,
+                bits: None,
+            }
+        })
+        .collect();
+
+    // All jobs done: the queue must already be empty, and the peak is
+    // final.
+    let final_pending = pool.pending_jobs();
+    let peak_pending = pool.peak_pending();
+
+    // Take every output through the typed API and verify bit-identity
+    // against per-(workload, sizing, seed) sequential references.
+    let mut refs = Vec::new();
+    for (i, j) in plan.jobs.iter().enumerate() {
+        let out = session
+            .take_output(&handles[i])
+            .expect("the session tracks every scenario job");
+        if j.poison {
+            continue;
+        }
+        let key = (j.workload.name(), j.nb, j.bs, j.seed);
+        if !refs.iter().any(|(k, _)| *k == key) {
+            let mut want = j.workload.make_input(&j.params(), j.seed);
+            j.workload.reference_seq(&mut want);
+            refs.push((key, want));
+        }
+        let want = &refs.iter().find(|(k, _)| *k == key).unwrap().1;
+        jobs[i].bits = Some(j.workload.verify_bits(&out, want));
+    }
+    drop(session);
+    let final_active = pool.active_jobs();
+    let (workers, task_capacity) = (pool.workers(), pool.task_capacity());
+    pool.shutdown();
+
+    ScenarioOutcome {
+        scenario: sc.name,
+        seed,
+        mode,
+        workers,
+        task_capacity,
+        plan,
+        jobs,
+        peak_pending,
+        final_pending,
+        final_active,
+    }
+}
+
+// --- invariants ----------------------------------------------------------
+
+/// One invariant's verdict over a replay.
+#[derive(Clone, Debug)]
+pub struct InvariantResult {
+    pub invariant: &'static str,
+    pub pass: bool,
+    pub detail: String,
+}
+
+impl InvariantResult {
+    fn ok(invariant: &'static str, detail: String) -> Self {
+        Self { invariant, pass: true, detail }
+    }
+
+    fn violated(invariant: &'static str, detail: String) -> Self {
+        Self {
+            invariant,
+            pass: false,
+            detail: format!("invariant violated: {detail}"),
+        }
+    }
+}
+
+/// Evaluate every invariant `sc` declares against `o`. Unknown
+/// invariant names fail loudly — a scenario cannot claim a check this
+/// module does not implement.
+pub fn check_invariants(
+    sc: &Scenario,
+    o: &ScenarioOutcome,
+) -> Vec<InvariantResult> {
+    sc.invariants.iter().map(|&inv| eval(inv, o)).collect()
+}
+
+fn eval(inv: &'static str, o: &ScenarioOutcome) -> InvariantResult {
+    match inv {
+        // Every non-poisoned job's output is f32 bit-identical to its
+        // workload's own sequential reference.
+        "bit-identity" => {
+            let bad: Vec<String> = o
+                .jobs
+                .iter()
+                .enumerate()
+                .filter_map(|(i, j)| match &j.bits {
+                    Some(Err(e)) => {
+                        Some(format!("job {i} ({}): {e}", j.workload))
+                    }
+                    _ => None,
+                })
+                .collect();
+            if bad.is_empty() {
+                InvariantResult::ok(
+                    inv,
+                    format!(
+                        "{} non-poisoned jobs bit-identical to their \
+                         sequential references",
+                        o.jobs.iter().filter(|j| j.bits.is_some()).count()
+                    ),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // Exactly the planned-poison jobs fail, each with the typed
+        // job error; every sibling succeeds.
+        "poison-containment" => {
+            let bad: Vec<String> = o
+                .plan
+                .jobs
+                .iter()
+                .zip(&o.jobs)
+                .enumerate()
+                .filter_map(|(i, (p, j))| match (p.poison, &j.result) {
+                    (true, Err(Error::Job(_))) => None,
+                    (true, r) => Some(format!(
+                        "poisoned job {i} did not fail typed: {r:?}"
+                    )),
+                    (false, Ok(_)) => None,
+                    (false, Err(e)) => {
+                        Some(format!("clean job {i} failed: {e}"))
+                    }
+                })
+                .collect();
+            if bad.is_empty() {
+                let n =
+                    o.plan.jobs.iter().filter(|p| p.poison).count();
+                InvariantResult::ok(
+                    inv,
+                    format!("{n} poisoned, all contained"),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // Admission stamps strictly follow submission order.
+        "fifo-admission" => {
+            let adm: Option<Vec<usize>> =
+                o.jobs.iter().map(|j| j.admission).collect();
+            match adm {
+                None => InvariantResult::violated(
+                    inv,
+                    "a job was never admitted".into(),
+                ),
+                Some(v) if v.windows(2).all(|w| w[0] < w[1]) => {
+                    InvariantResult::ok(
+                        inv,
+                        format!("admission stamps {v:?}"),
+                    )
+                }
+                Some(v) => InvariantResult::violated(
+                    inv,
+                    format!(
+                        "admission order differs from submission \
+                         order: {v:?}"
+                    ),
+                ),
+            }
+        }
+        // Every submitted job completes and (if clean) drains its
+        // full graph; nothing is left pending or active.
+        "no-starvation" => {
+            let mut bad: Vec<String> = Vec::new();
+            for (i, j) in o.jobs.iter().enumerate() {
+                if j.completion.is_none() {
+                    bad.push(format!("job {i} never completed"));
+                }
+                if let Ok(executed) = j.result {
+                    if executed != j.tasks {
+                        bad.push(format!(
+                            "job {i} executed {executed} of {} tasks",
+                            j.tasks
+                        ));
+                    }
+                }
+            }
+            if o.final_pending != 0 {
+                bad.push(format!("{} jobs left pending", o.final_pending));
+            }
+            if o.final_active != 0 {
+                bad.push(format!("{} jobs left active", o.final_active));
+            }
+            if bad.is_empty() {
+                InvariantResult::ok(
+                    inv,
+                    format!("all {} jobs completed", o.jobs.len()),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // The pending queue never exceeds the submitted backlog (the
+        // first job of an idle pool always admits) and drains to
+        // zero.
+        "bounded-pending" => {
+            let bound = o.jobs.len().saturating_sub(1);
+            if o.peak_pending <= bound && o.final_pending == 0 {
+                InvariantResult::ok(
+                    inv,
+                    format!("peak {} <= {bound}, drained", o.peak_pending),
+                )
+            } else {
+                InvariantResult::violated(
+                    inv,
+                    format!(
+                        "peak pending {} (bound {bound}), final {}",
+                        o.peak_pending, o.final_pending
+                    ),
+                )
+            }
+        }
+        // The capacity squeeze really queued jobs (otherwise the
+        // scenario tested nothing). Serial replays never queue.
+        "queued-under-pressure" => match o.mode {
+            ExecMode::Serial => InvariantResult::ok(
+                inv,
+                "serial replay never queues (not applicable)".into(),
+            ),
+            ExecMode::Overlapped => {
+                if o.peak_pending >= 1 {
+                    InvariantResult::ok(
+                        inv,
+                        format!("peak pending {}", o.peak_pending),
+                    )
+                } else {
+                    InvariantResult::violated(
+                        inv,
+                        "half-capacity stream never queued".into(),
+                    )
+                }
+            }
+        },
+        // Every dependency edge: the predecessor's completion stamp
+        // precedes the dependent's admission stamp (one event clock).
+        "dependency-order" => {
+            let mut bad: Vec<String> = Vec::new();
+            for (i, p) in o.plan.jobs.iter().enumerate() {
+                for &d in &p.deps {
+                    match (o.jobs[d].completion, o.jobs[i].admission) {
+                        (Some(c), Some(a)) if c < a => {}
+                        (c, a) => bad.push(format!(
+                            "edge {d}->{i}: completion {c:?} vs \
+                             admission {a:?}"
+                        )),
+                    }
+                }
+            }
+            if bad.is_empty() {
+                InvariantResult::ok(inv, "every edge ordered".into())
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // With spare workers, at least one small job completes before
+        // the oversized straggler (execution overlaps admission
+        // order). Timing-free in serial mode, where the straggler
+        // legitimately finishes first.
+        "overlap-completion" => match o.mode {
+            ExecMode::Serial => InvariantResult::ok(
+                inv,
+                "serial replay runs jobs back-to-back (not applicable)"
+                    .into(),
+            ),
+            ExecMode::Overlapped => {
+                let strag = o
+                    .plan
+                    .jobs
+                    .iter()
+                    .position(|j| j.straggler)
+                    .expect("scenario declares a straggler");
+                let strag_c = o.jobs[strag].completion;
+                let first_small = o
+                    .jobs
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| i != strag)
+                    .filter_map(|(_, j)| j.completion)
+                    .min();
+                match (first_small, strag_c) {
+                    (Some(s), Some(c)) if s < c => InvariantResult::ok(
+                        inv,
+                        format!("first small job at {s}, straggler at {c}"),
+                    ),
+                    (s, c) => InvariantResult::violated(
+                        inv,
+                        format!(
+                            "no small job overtook the straggler \
+                             (small {s:?}, straggler {c:?})"
+                        ),
+                    ),
+                }
+            }
+        },
+        other => InvariantResult::violated(
+            other,
+            "unknown invariant name (see check_invariants)".into(),
+        ),
+    }
+}
+
+/// [`run_host`] + [`check_invariants`] in one call (tests, CLI).
+pub fn run_and_check(
+    sc: &Scenario,
+    seed: u64,
+    mode: ExecMode,
+) -> (ScenarioOutcome, Vec<InvariantResult>) {
+    let o = run_host(sc, seed, mode);
+    let inv = check_invariants(sc, &o);
+    (o, inv)
+}
+
+// --- simulator replay ----------------------------------------------------
+
+/// Virtual-time replay of a scenario's job stream under both launch
+/// models (see [`run_sim`]).
+pub struct SimReplay {
+    /// Tasks drained by the persistent-pool launch model.
+    pub tasks: u64,
+    /// Tasks drained by the one-shot-per-job launch model.
+    pub oneshot_tasks: u64,
+    pub pool_cycles: u64,
+    pub oneshot_cycles: u64,
+}
+
+/// Replay `sc`'s stream on the virtual-time TILEPro64
+/// ([`DataflowSim::run_scenario`]) under the given executor model,
+/// through both launch models. Fully deterministic: equal inputs give
+/// bit-equal cycle counts.
+pub fn run_sim(
+    sc: &Scenario,
+    seed: u64,
+    tiles: usize,
+    sched: SchedModel,
+) -> SimReplay {
+    let plan = sc.plan(seed);
+    let sim = DataflowSim::with_sched(tiles, sched);
+    let pool = sim.run_scenario(&plan, LaunchModel::PersistentPool);
+    let oneshot = sim.run_scenario(&plan, LaunchModel::OneShotPerJob);
+    SimReplay {
+        tasks: pool.tasks,
+        oneshot_tasks: oneshot.tasks,
+        pool_cycles: pool.cycles,
+        oneshot_cycles: oneshot.cycles,
+    }
+}
+
+/// Host and simulator agree on completion structure: every job drains
+/// its full canonical graph on both substrates, so the task totals
+/// match exactly (poisoned jobs drain too — their kernels are
+/// skipped, not their countdown).
+pub fn host_sim_agreement(
+    o: &ScenarioOutcome,
+    s: &SimReplay,
+) -> InvariantResult {
+    let host: u64 = o.jobs.iter().map(|j| j.tasks as u64).sum();
+    if s.tasks == host && s.oneshot_tasks == host {
+        InvariantResult::ok(
+            "host-sim-agreement",
+            format!("{host} tasks on both substrates"),
+        )
+    } else {
+        InvariantResult::violated(
+            "host-sim-agreement",
+            format!(
+                "host drains {host} tasks, sim pool {} / one-shot {}",
+                s.tasks, s.oneshot_tasks
+            ),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_shape_holds() {
+        assert!(ALL_SCENARIOS.len() >= 6, "at least six named scenarios");
+        for (i, sc) in ALL_SCENARIOS.iter().enumerate() {
+            assert!(!sc.reason.is_empty(), "{}", sc.name);
+            assert!(
+                sc.invariants.len() >= 2,
+                "{}: needs at least two invariants",
+                sc.name
+            );
+            for later in &ALL_SCENARIOS[i + 1..] {
+                assert_ne!(sc.name, later.name, "duplicate scenario");
+            }
+            assert_eq!(find(sc.name).unwrap().name, sc.name);
+        }
+        assert!(find("no-such-scenario").is_none());
+        assert_eq!(names().len(), ALL_SCENARIOS.len());
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_seed_sensitive() {
+        for sc in ALL_SCENARIOS {
+            let (a, b) = (sc.plan(9), sc.plan(9));
+            assert_eq!(a.workers, b.workers, "{}", sc.name);
+            assert_eq!(a.capacity, b.capacity, "{}", sc.name);
+            assert_eq!(a.pacing, b.pacing, "{}", sc.name);
+            assert_eq!(a.jobs.len(), b.jobs.len(), "{}", sc.name);
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.workload.name(), y.workload.name());
+                assert_eq!((x.nb, x.bs, x.seed), (y.nb, y.bs, y.seed));
+                assert_eq!(x.deps, y.deps);
+                assert_eq!(
+                    (x.poison, x.straggler, x.batch),
+                    (y.poison, y.straggler, y.batch)
+                );
+            }
+            // Different seeds must not all collapse to one stream.
+            let c = sc.plan(10);
+            let differs = a.jobs.len() != c.jobs.len()
+                || a.workers != c.workers
+                || a.jobs.iter().zip(&c.jobs).any(|(x, y)| {
+                    x.nb != y.nb
+                        || x.seed != y.seed
+                        || x.workload.name() != y.workload.name()
+                });
+            assert!(differs, "{}: seed-insensitive plan", sc.name);
+        }
+    }
+
+    #[test]
+    fn poison_plans_poison_factorisations_only() {
+        // The (0,0) tamper is only deterministic for workloads whose
+        // root kernel writes the diagonal — the factorisations.
+        for sc in ALL_SCENARIOS {
+            for seed in [1u64, 7, 23] {
+                for j in sc.plan(seed).jobs.iter().filter(|j| j.poison) {
+                    assert!(
+                        j.workload.phases(&j.params()).is_some(),
+                        "{}: poisoned {} is not a factorisation",
+                        sc.name,
+                        j.workload.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_invariant_names_fail_loudly() {
+        let sc = &ALL_SCENARIOS[0];
+        let o = run_host(sc, 3, ExecMode::Serial);
+        let r = eval("no-such-invariant", &o);
+        assert!(!r.pass);
+        assert!(r.detail.contains("unknown invariant"));
+    }
+
+    #[test]
+    fn one_scenario_round_trips_host_and_sim() {
+        // The full matrix lives in tests/scenarios.rs; one cheap
+        // smoke here keeps the module self-verifying.
+        let sc = find("poison-mid-stream").unwrap();
+        let (o, inv) = run_and_check(sc, 1, ExecMode::Overlapped);
+        for r in &inv {
+            assert!(r.pass, "{}: {}", r.invariant, r.detail);
+        }
+        let s = run_sim(sc, 1, 8, SchedModel::WorkSteal);
+        let agree = host_sim_agreement(&o, &s);
+        assert!(agree.pass, "{}", agree.detail);
+    }
+}

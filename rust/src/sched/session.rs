@@ -176,25 +176,27 @@ impl<'p> Session<'p> {
     /// Wait for `h`'s job, move its output matrix out of the session
     /// and **retire the job**: its completion record and (for
     /// per-input graphs) its graph are freed, so a long-lived session
-    /// serving a stream stays bounded by its in-flight jobs. `None`
-    /// if the handle does not belong to this session or the job was
-    /// already taken. A poisoned job's (partial) matrix is still
-    /// returned — the typed failure is what [`JobHandle::wait`]
-    /// reports.
+    /// serving a stream stays bounded by its in-flight jobs.
+    /// [`Error::UnknownJob`] if the handle does not belong to this
+    /// session or the job was already taken — never a panic, so a
+    /// server loop can treat a stale handle as a client error. A
+    /// poisoned job's (partial) matrix is still returned — the typed
+    /// failure is what [`JobHandle::wait`] reports.
     pub fn take_output(
         &mut self,
         h: &JobHandle,
-    ) -> Option<BlockedSparseMatrix> {
+    ) -> Result<BlockedSparseMatrix, Error> {
         let idx = self
             .jobs
             .iter()
-            .position(|j| Arc::ptr_eq(&j.inner, h.inner()))?;
+            .position(|j| Arc::ptr_eq(&j.inner, h.inner()))
+            .ok_or(Error::UnknownJob)?;
         // Wait first: completion frees the erased closure, so no
         // borrow of the graph or the shared cell survives this point
         // and the whole SessionJob may drop.
         let _ = self.jobs[idx].inner.wait_done();
         let job = self.jobs.remove(idx);
-        Some(job.shared.into_inner())
+        Ok(job.shared.into_inner())
     }
 
     /// Wait for everything and return each (not-yet-taken) job's
@@ -403,7 +405,11 @@ mod tests {
         let mut want = Sparselu.make_input(&Params::new(7, 4), 0);
         Sparselu.reference_seq(&mut want);
         Sparselu.verify_bits(&out_a, &want).unwrap();
-        assert!(s.take_output(&a).is_none(), "second take must fail");
+        assert_eq!(
+            s.take_output(&a).err(),
+            Some(Error::UnknownJob),
+            "second take must be the typed error"
+        );
         assert_eq!(s.len(), 1, "taken job is retired from the session");
         let rest = s.finish().unwrap();
         assert_eq!(rest.len(), 1, "only b's output remains");

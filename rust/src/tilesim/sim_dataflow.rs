@@ -239,6 +239,35 @@ impl DataflowSim {
         }
     }
 
+    /// Replay a scenario plan's job stream ([`ScenarioPlan`], the
+    /// expansion of a named seeded scenario) in virtual time: every
+    /// planned job contributes its canonical graph, and the stream
+    /// runs under the given launch model. Dependency edges, poison
+    /// and batch pacing are host-replay concerns — the simulator
+    /// prices the drained structure, which is what
+    /// [`crate::sched::scenario::host_sim_agreement`] compares
+    /// across substrates.
+    ///
+    /// [`ScenarioPlan`]: crate::sched::scenario::ScenarioPlan
+    pub fn run_scenario(
+        &self,
+        plan: &crate::sched::scenario::ScenarioPlan,
+        launch: LaunchModel,
+    ) -> SimReport {
+        let graphs: Vec<TaskGraph> = plan
+            .jobs
+            .iter()
+            .map(|j| j.workload.graph(&j.params()))
+            .collect();
+        let jobs: Vec<SimJob> = plan
+            .jobs
+            .iter()
+            .zip(&graphs)
+            .map(|(j, g)| SimJob { workload: j.workload, graph: g, bs: j.bs })
+            .collect();
+        self.run_jobs(&jobs, launch)
+    }
+
     /// Serial one-shot launches: per job, a full worker-team spawn +
     /// join, then the single-graph schedule. Totals are sums.
     fn run_jobs_one_shot(&self, jobs: &[SimJob]) -> SimReport {

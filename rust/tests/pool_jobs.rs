@@ -16,15 +16,17 @@ use gprm::apps::matmul::{
     MATMUL_RUST_KERNELS,
 };
 use gprm::apps::sparselu::LU_RUST_KERNELS;
-use gprm::linalg::blocked::BlockedSparseMatrix;
+use gprm::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
 use gprm::linalg::cholesky::{
     cholesky_seq, gemm_nt, gen_spd, potrf, syrk, trsm,
 };
 use gprm::linalg::dense::DenseMatrix;
 use gprm::linalg::genmat::{genmat, genmat_pattern};
 use gprm::linalg::lu::{bdiv, bmod, fwd, lu0, sparselu_seq};
-use gprm::sched::{Pool, PoolConfig, TaskGraph};
+use gprm::sched::workload::kernel_runner;
+use gprm::sched::{JobHandle, Pool, PoolConfig, TaskGraph, TaskId};
 use gprm::testkit::{check, Triple, UsizeRange};
+use gprm::util::prng::SplitMix64;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Cheap deterministic spin: xorshift a counter with the case seed
@@ -226,6 +228,191 @@ fn stress_three_waves_through_one_pool() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn fifo_admission_order_under_capacity_churn() {
+    // Property test: randomized seeded submit/wait interleavings
+    // against a pool whose task budget (and job-slot count) only fits
+    // part of the stream. Two invariants, every case: admission order
+    // (the pool's event clock, `JobHandle::admission_index`) equals
+    // submission order, and the pending queue never exceeds the
+    // submitted backlog — neither while submitting nor at the end.
+    check(
+        "pool-fifo-churn",
+        25,
+        &Triple(UsizeRange(3, 8), UsizeRange(1, 7), UsizeRange(0, 1 << 16)),
+        |&(nb, workers, seed)| {
+            let g = TaskGraph::cholesky(nb);
+            // Budget for one or two graphs depending on the case, and
+            // only 3 job slots for 8 jobs: both admission paths
+            // (capacity and slot exhaustion) queue mid-stream.
+            let cap = g.len() * (1 + seed % 2);
+            let pool = Pool::with_config(PoolConfig {
+                workers,
+                task_capacity: cap,
+                max_jobs: 3,
+            });
+            let n_jobs = 8usize;
+            let mut rng = SplitMix64::new(seed as u64 ^ 0xD1CE);
+            pool.scope(|s| {
+                let mut handles: Vec<JobHandle> = Vec::new();
+                for i in 0..n_jobs {
+                    let h = s
+                        .submit(&g, move |t: TaskId| {
+                            spin_for(t.0 * 31 + i, seed)
+                        })
+                        .map_err(|e| e.to_string())?;
+                    handles.push(h);
+                    let depth = pool.pending_jobs();
+                    if depth > n_jobs - 1 {
+                        return Err(format!(
+                            "pending depth {depth} exceeds the \
+                             submitted backlog after job {i}"
+                        ));
+                    }
+                    // Churn: randomly wait on an arbitrary earlier
+                    // handle mid-stream, draining part of the queue.
+                    if rng.chance(0.4) {
+                        let k = rng.range(0, handles.len());
+                        handles[k].wait().map_err(|e| e.to_string())?;
+                    }
+                }
+                for h in &handles {
+                    h.wait().map_err(|e| e.to_string())?;
+                }
+                let adm: Option<Vec<usize>> =
+                    handles.iter().map(|h| h.admission_index()).collect();
+                let adm = adm.ok_or("a completed job has no \
+                                     admission stamp")?;
+                if !adm.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!(
+                        "admission order differs from submission \
+                         order: {adm:?} (workers={workers} cap={cap})"
+                    ));
+                }
+                Ok(())
+            })?;
+            if pool.peak_pending() > n_jobs - 1 {
+                return Err(format!(
+                    "peak pending {} exceeds the submitted backlog",
+                    pool.peak_pending()
+                ));
+            }
+            if pool.pending_jobs() != 0 {
+                return Err("queue not drained after all waits".into());
+            }
+            pool.shutdown();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn poisoned_job_mid_stream_contains_and_pool_serves_fresh_wave() {
+    // Regression test for poison containment: job 3 of a 6-job mixed
+    // wave panics mid-graph; every sibling's output must still be
+    // bit-identical to its solo sequential run, and the same pool
+    // must then serve a fully clean second wave (slot recycling and
+    // admission state survive the failure).
+    let (nb, bs) = (7usize, 5usize);
+    let mut lu_want = genmat(nb, bs);
+    sparselu_seq(&mut lu_want);
+    let lu_want = lu_want.to_dense();
+    let mut ch_want = gen_spd(nb, bs);
+    cholesky_seq(&mut ch_want);
+    let ch_want = ch_want.to_dense();
+    let lu_graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+    let ch_graph = TaskGraph::cholesky(nb);
+    let pool = Pool::new(4);
+    for wave in 0..2 {
+        let poison_at = if wave == 0 { Some(3usize) } else { None };
+        let shares: Vec<SharedBlocked> = (0..6)
+            .map(|i| {
+                SharedBlocked::new(if i % 2 == 0 {
+                    genmat(nb, bs)
+                } else {
+                    gen_spd(nb, bs)
+                })
+            })
+            .collect();
+        // Runners are built outside the scope: submit borrows them
+        // for the scope's 'env lifetime.
+        let runners: Vec<Box<dyn Fn(TaskId) + Send + Sync + '_>> = shares
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let graph =
+                    if i % 2 == 0 { &lu_graph } else { &ch_graph };
+                let kernels: &[BlockKernel] = if i % 2 == 0 {
+                    &LU_RUST_KERNELS
+                } else {
+                    &CHOLESKY_RUST_KERNELS
+                };
+                let base = kernel_runner(graph, kernels, sh, bs);
+                let poisoned = poison_at == Some(i);
+                Box::new(move |t: TaskId| {
+                    if poisoned && t.0 == 1 {
+                        panic!("scenario poison: injected kernel failure");
+                    }
+                    base(t)
+                }) as Box<dyn Fn(TaskId) + Send + Sync + '_>
+            })
+            .collect();
+        pool.scope(|s| {
+            let handles: Vec<JobHandle> = runners
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    let graph =
+                        if i % 2 == 0 { &lu_graph } else { &ch_graph };
+                    s.submit(graph, move |t| r(t)).unwrap()
+                })
+                .collect();
+            for (i, h) in handles.iter().enumerate() {
+                match h.wait() {
+                    Err(e) if poison_at == Some(i) => assert!(
+                        e.to_string().contains("scenario poison"),
+                        "wave {wave} job {i}: wrong poison message: {e}"
+                    ),
+                    Err(e) => {
+                        panic!("wave {wave} job {i} not contained: {e}")
+                    }
+                    Ok(stats) => {
+                        assert_ne!(
+                            poison_at,
+                            Some(i),
+                            "wave {wave}: poisoned job reported success"
+                        );
+                        let want = if i % 2 == 0 {
+                            lu_graph.len()
+                        } else {
+                            ch_graph.len()
+                        };
+                        assert_eq!(
+                            stats.executed, want,
+                            "wave {wave} job {i} did not drain"
+                        );
+                    }
+                }
+            }
+        });
+        drop(runners);
+        for (i, sh) in shares.into_iter().enumerate() {
+            if poison_at == Some(i) {
+                continue; // poisoned output is partial by design
+            }
+            let got = sh.into_inner().to_dense();
+            let want = if i % 2 == 0 { &lu_want } else { &ch_want };
+            assert_eq!(
+                got.as_slice(),
+                want.as_slice(),
+                "wave {wave} job {i} not bit-identical to its solo run"
+            );
+        }
+        assert_eq!(pool.active_jobs(), 0, "wave {wave} left jobs active");
+    }
+    pool.shutdown();
 }
 
 #[test]

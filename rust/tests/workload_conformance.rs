@@ -264,3 +264,55 @@ fn interjob_dependency_chain_races_100_randomized_schedules() {
         },
     );
 }
+
+#[test]
+fn take_output_misuse_is_typed_and_finish_accounts_for_the_rest() {
+    use gprm::sched::workload::{Cholesky, Sparselu};
+    use gprm::sched::{Error, Session};
+
+    let pool = Pool::new(4);
+    let mut s = Session::new(&pool);
+    let _h1 = s.job(Sparselu::params(5, 4)).submit().unwrap();
+    let h2 = s.job(Cholesky::params(5, 4)).submit().unwrap();
+    let _h3 = s.job(Matmul::params(3, 4)).submit().unwrap();
+
+    // A handle that was never submitted through this session (a raw
+    // scope job on the same pool): typed error, no panic.
+    let p = Params::new(3, 4);
+    let foreign_graph = Matmul.graph(&p);
+    let foreign_shared = SharedBlocked::new(Matmul.make_input(&p, 0));
+    let base =
+        kernel_runner(&foreign_graph, Matmul.kernels(), &foreign_shared, 4);
+    let foreign =
+        pool.scope(|sc| sc.submit(&foreign_graph, &base).unwrap());
+    assert_eq!(
+        s.take_output(&foreign).err(),
+        Some(Error::UnknownJob),
+        "foreign handle must be the typed error"
+    );
+    assert_eq!(s.len(), 3, "a failed take must not retire anything");
+
+    // Retire one job mid-session; the second take of the same handle
+    // is the typed already-retired error.
+    let out2 = s.take_output(&h2).unwrap();
+    assert_eq!(
+        s.take_output(&h2).err(),
+        Some(Error::UnknownJob),
+        "second take must be the typed error"
+    );
+    assert_eq!(s.len(), 2);
+    let pc = Params::new(5, 4);
+    let mut want = Cholesky.make_input(&pc, 0);
+    Cholesky.reference_seq(&mut want);
+    Cholesky
+        .verify_bits(&out2, &want)
+        .expect("retired output is the real factorisation");
+
+    // finish() after the partial take accounts for exactly the
+    // remaining jobs, in submission order.
+    let rest = s.finish().unwrap();
+    assert_eq!(rest.len(), 2);
+    assert_eq!(rest[0].workload.name(), "sparselu");
+    assert_eq!(rest[1].workload.name(), "matmul");
+    pool.shutdown();
+}
