@@ -18,8 +18,9 @@ use gprm::apps::dataflow::{
     run_dataflow_batch, run_workload, DataflowRt, PoolJob,
 };
 use gprm::linalg::blocked::BlockedSparseMatrix;
+use gprm::linalg::genmat::genmat_pattern;
 use gprm::omp::OmpRuntime;
-use gprm::sched::workload::{registry, Params, Workload};
+use gprm::sched::workload::{registry, Cholesky, Params, Sparselu, Workload};
 use gprm::sched::{ExecOpts, Pool, PoolConfig, TaskGraph};
 use gprm::tilesim::{CostModel, DataflowSim, LaunchModel, SimJob};
 use std::io::Write as _;
@@ -49,6 +50,91 @@ impl Row {
             self.jobs_per_sec, self.tasks_per_sec
         )
     }
+}
+
+/// Sizing of the recovery-overhead rows — matches the `faults`
+/// experiment's virtual-time table so the committed fault-tagged
+/// baselines and `gprm exp faults` price the identical stream.
+const FAULT_NB: usize = 12;
+const FAULT_BS: usize = 8;
+const FAULT_TILES: usize = 8;
+
+/// One fault-tagged row: the virtual-time cost of the mixed stream
+/// under a retry regime (`DataflowSim::run_jobs_recovering`, guard
+/// always on).
+struct FaultRow {
+    exec: &'static str,
+    rate: f64,
+    retries: u64,
+    secs: f64,
+    cycles: u64,
+    retry_cycles: u64,
+    guard_cycles: u64,
+    overhead_pct: f64,
+}
+
+impl FaultRow {
+    fn json(&self) -> String {
+        format!(
+            "{{\"workload\": \"mixed{N_JOBS} NB={FAULT_NB} \
+             BS={FAULT_BS}\", \"source\": \"tilesim-model\", \
+             \"workers\": {FAULT_TILES}, \"exec\": \"{}\", \
+             \"fault_rate\": {:.2}, \"retries\": {}, \"secs\": {:.6}, \
+             \"cycles\": {}, \"retry_cycles\": {}, \
+             \"guard_cycles\": {}, \"overhead_pct\": {:.2}}}",
+            self.exec, self.rate, self.retries, self.secs, self.cycles,
+            self.retry_cycles, self.guard_cycles, self.overhead_pct
+        )
+    }
+}
+
+/// Price the fault/recovery regimes on the virtual machine: the
+/// committed fault-tagged baseline rows re-derive from exactly this
+/// loop (fault rate 0 / 1% / 5% × both launch models, NB=12/BS=8,
+/// 8 tiles, cancellation guard on).
+fn fault_rows(hz: f64) -> Vec<FaultRow> {
+    let lu = TaskGraph::sparselu(&genmat_pattern(FAULT_NB), FAULT_NB);
+    let ch = TaskGraph::cholesky(FAULT_NB);
+    let jobs: Vec<SimJob> = (0..N_JOBS)
+        .map(|i| {
+            if i % 2 == 0 {
+                SimJob { workload: &Sparselu, graph: &lu, bs: FAULT_BS }
+            } else {
+                SimJob { workload: &Cholesky, graph: &ch, bs: FAULT_BS }
+            }
+        })
+        .collect();
+    let sim = DataflowSim::tilepro(FAULT_TILES);
+    let mut rows = Vec::new();
+    println!("== tilesim recovery overhead (NB={FAULT_NB} BS={FAULT_BS}, {FAULT_TILES} tiles, guard on) ==");
+    for (name, launch) in [
+        ("pool", LaunchModel::PersistentPool),
+        ("oneshot", LaunchModel::OneShotPerJob),
+    ] {
+        for rate in [0.0f64, 0.01, 0.05] {
+            let retries: Vec<usize> = jobs
+                .iter()
+                .map(|j| (rate * j.graph.len() as f64).round() as usize)
+                .collect();
+            let r = sim.run_jobs_recovering(&jobs, launch, &retries, true);
+            let row = FaultRow {
+                exec: name,
+                rate,
+                retries: r.retries,
+                secs: r.cycles as f64 / hz,
+                cycles: r.cycles,
+                retry_cycles: r.retry_cycles,
+                guard_cycles: r.guard_cycles,
+                overhead_pct: r.overhead() * 100.0,
+            };
+            println!(
+                "  {name:>7} @{rate:>4.2} fault rate: {:>8.4}s  {:>4} retries  {:>+9.2}% overhead",
+                row.secs, row.retries, row.overhead_pct
+            );
+            rows.push(row);
+        }
+    }
+    rows
 }
 
 /// One kind of the mixed stream: the registry entry, its canonical
@@ -164,6 +250,8 @@ fn main() {
         }
     }
 
+    let frows = fault_rows(hz);
+
     const SAMPLES: usize = 5;
     println!("== host wall-clock (pool vs per-launch omp team) ==");
     let mut failed = false;
@@ -172,6 +260,7 @@ fn main() {
             workers: w,
             task_capacity: n_tasks,
             max_jobs: N_JOBS,
+            max_pending: None,
         });
         let mut best = [f64::MAX; 2];
         // Warmups, then best-of-SAMPLES for each regime.
@@ -219,7 +308,13 @@ fn main() {
             for r in &rows {
                 let _ = writeln!(f, "{}", r.json());
             }
-            println!("\nappended {} rows to {path:?}", rows.len());
+            for r in &frows {
+                let _ = writeln!(f, "{}", r.json());
+            }
+            println!(
+                "\nappended {} rows to {path:?}",
+                rows.len() + frows.len()
+            );
         }
         Err(e) => eprintln!("cannot write {path:?}: {e}"),
     }

@@ -7,7 +7,7 @@ pub mod experiments;
 pub mod report;
 
 pub use experiments::{
-    run_experiment, scenario_report, scenario_repro, Scale,
-    ALL_EXPERIMENTS, SCENARIO_SEEDS,
+    fault_report, fault_repro, run_experiment, scenario_report,
+    scenario_repro, Scale, ALL_EXPERIMENTS, SCENARIO_SEEDS,
 };
 pub use report::{ExperimentReport, ShapeCheck, Table};

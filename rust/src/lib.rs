@@ -182,6 +182,52 @@
 //! (`gprm exp scenario`, pinned seeds) and the CLI one-off repro
 //! (`gprm exp scenario --scenario <name> --seed N`) all iterate the
 //! slice and pick the new entry up untouched.
+//!
+//! # Fault model & recovery
+//!
+//! Failure is a first-class, *seeded* input ([`sched::fault`]; the
+//! paper's GPRM has no failure story — see DIVERGENCES.md). A
+//! [`sched::FaultKind`] names one way a kernel can misbehave — panic
+//! persistently, panic a fixed number of times and heal
+//! (`TransientPanic`), straggle (`Delay`), or silently corrupt its
+//! own write block (`Corrupt`, catchable only by the workload's
+//! bit-identity verifier) — and a [`sched::FaultSet`] pins faults to
+//! task coordinates inside one job
+//! ([`sched::session::JobBuilder::inject`]). Recovery is layered on
+//! the same typed surfaces:
+//!
+//! * **Retry with backoff** ([`sched::RetryPolicy`],
+//!   `JobBuilder::retry`): the session retains the pristine input and
+//!   deterministically resubmits a poisoned job — transient faults
+//!   heal *bit-identically*; persistent faults exhaust into
+//!   [`sched::Error::Job`] carrying the full per-attempt history
+//!   ([`sched::JobFailure`]: failing op, task index, attempt number,
+//!   panic message).
+//! * **Cancellation & deadlines** ([`sched::CancelToken`],
+//!   `JobBuilder::deadline`): cooperative, wall-clock-free — a
+//!   deadline is a *completed-task budget* enforced by an atomic
+//!   ticket protocol (exactly `min(deadline, tasks)` kernels run,
+//!   schedule-independently), surfacing as the typed
+//!   [`sched::Error::Cancelled`]. Cancelled jobs are never retried.
+//! * **Overload shedding & drain**
+//!   ([`sched::PoolConfig::max_pending`], [`sched::Pool::drain`]):
+//!   a bounded pending queue rejects overflow *at the door*
+//!   (`SubmitError::Overloaded`) and never drops an accepted job;
+//!   drain completes everything admitted, then rejects late
+//!   submissions (`SubmitError::Draining`).
+//!
+//! The suite mirrors the scenario engine: a second registry
+//! ([`sched::fault::FAULT_SCENARIOS`]) of seeded fault streams
+//! (transient storms under retry, deadline misses under churn,
+//! shedding at capacity, cancellation mid-stream), each replayable
+//! via `gprm exp faults` / `gprm exp --fault <name> --seed N`, with
+//! machine-checked invariants (retry bit-identity, retry exhaustion,
+//! corruption detection, exact deadline cancellation,
+//! no-retry-of-cancelled, shed-never-drops-admitted,
+//! drain-completes-all-admitted) and a virtual-time recovery-overhead
+//! model ([`tilesim::DataflowSim::run_jobs_recovering`]: fault rate ×
+//! launch model, priced by [`tilesim::CostModel`]'s
+//! `retry_resubmit`/`cancel_check`).
 // CI enforces `cargo clippy -- -D warnings`; these style lints are
 // opted out crate-wide because they fight the paper-faithful shapes:
 // index-heavy numeric kernels (the explicit loop bounds document the

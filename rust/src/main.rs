@@ -7,7 +7,10 @@
 //!   fig7; default: all, at `--scale 1.0` = paper scale). The
 //!   `scenario` id sweeps the scenario engine (seeded adversarial job
 //!   streams with machine-checked invariants, host pool + simulator);
-//!   `exp --scenario <name> --seed N` reruns one stream for repro.
+//!   the `faults` id sweeps the fault-injection/recovery suite
+//!   (seeded kernel faults, retries, deadlines, shedding, drain);
+//!   `exp --scenario <name> --seed N` / `exp --fault <name> --seed N`
+//!   rerun one stream for repro.
 //! * `sparselu` — blocked workloads on a real runtime (host threads).
 //!   `--app` selects any workload from the **registry**
 //!   (`sched::workload::registry`; `--list-apps` prints it) on the
@@ -32,7 +35,7 @@ use gprm::apps::sparselu::{
 use gprm::coordinator::kernel::Registry;
 use gprm::coordinator::{GprmConfig, GprmRuntime};
 use gprm::harness::{
-    run_experiment, scenario_repro, Scale, ALL_EXPERIMENTS,
+    fault_repro, run_experiment, scenario_repro, Scale, ALL_EXPERIMENTS,
 };
 use gprm::linalg::blocked::BlockedSparseMatrix;
 use gprm::linalg::genmat::genmat;
@@ -143,8 +146,15 @@ fn cmd_exp(argv: &[String]) -> i32 {
             is_flag: false,
         },
         OptSpec {
+            name: "fault",
+            help: "one-off repro of a single named fault scenario \
+                   (with --seed); see the `faults` experiment",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
             name: "seed",
-            help: "seed for --scenario repro",
+            help: "seed for --scenario / --fault repro",
             default: Some("1"),
             is_flag: false,
         },
@@ -160,18 +170,30 @@ fn cmd_exp(argv: &[String]) -> i32 {
                 "gprm exp [ids…]",
                 "Regenerate paper figures/tables (simulator); \
                  `gprm exp scenario` sweeps the scenario engine, \
-                 `--scenario <name> --seed N` reruns one stream",
+                 `gprm exp faults` the fault/recovery suite; \
+                 `--scenario <name>` / `--fault <name>` (with \
+                 --seed N) rerun one stream",
                 &specs
             )
         );
         return 0;
     }
-    if let Some(name) = args.get("scenario") {
-        let seed = match args.get_parse::<u64>("seed", 1) {
-            Ok(s) => s,
-            Err(e) => return err_usage("gprm exp", &e, &specs),
+    let repro: Option<Result<gprm::harness::ExperimentReport, String>> =
+        if let Some(name) = args.get("scenario") {
+            match args.get_parse::<u64>("seed", 1) {
+                Ok(seed) => Some(scenario_repro(name, seed)),
+                Err(e) => return err_usage("gprm exp", &e, &specs),
+            }
+        } else if let Some(name) = args.get("fault") {
+            match args.get_parse::<u64>("seed", 1) {
+                Ok(seed) => Some(fault_repro(name, seed)),
+                Err(e) => return err_usage("gprm exp", &e, &specs),
+            }
+        } else {
+            None
         };
-        return match scenario_repro(name, seed) {
+    if let Some(outcome) = repro {
+        return match outcome {
             Ok(report) => {
                 println!("{}", report.render());
                 if report.all_pass() {
@@ -555,6 +577,7 @@ fn run_pool_jobs(
         workers: threads,
         task_capacity: total_tasks,
         max_jobs: n_jobs,
+        max_pending: None,
     });
     println!(
         "pool: {threads} workers, {n_jobs} {app} job(s), {total_tasks} \

@@ -12,19 +12,92 @@
 //! [`super::session::Session`]) returns this one type, which is
 //! `Display` + [`std::error::Error`] and never panics on an error
 //! path.
+//!
+//! The fault/recovery layer (PR 7) sharpened the job-failure story:
+//! a poisoned job now carries a structured [`JobFailure`] — every
+//! attempt's failing `(op, task index, panic message)` — instead of a
+//! bare string, and cooperative cancellation surfaces as its own
+//! [`Error::Cancelled`] variant rather than masquerading as a panic.
 
 use super::pool::SubmitError;
+
+/// Where one attempt of a job died: the failing kernel's op name, the
+/// task index within the job's graph, the 1-based attempt number, and
+/// the captured panic message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FailedAttempt {
+    /// 1-based attempt number (1 = the original submission).
+    pub attempt: usize,
+    /// Display name of the failing task's op (e.g. `"potrf"`).
+    pub op: &'static str,
+    /// Task index within the job's graph.
+    pub task: usize,
+    /// The captured panic message.
+    pub msg: String,
+}
+
+impl std::fmt::Display for FailedAttempt {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "attempt {}: `{}` task {} panicked: {}",
+            self.attempt, self.op, self.task, self.msg
+        )
+    }
+}
+
+/// The full poison record of a failed job: one [`FailedAttempt`] per
+/// attempt, in attempt order. Under a
+/// [`super::fault::RetryPolicy`] this is the exhausted attempt
+/// history; without one it holds the single original attempt.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobFailure {
+    pub attempts: Vec<FailedAttempt>,
+}
+
+impl JobFailure {
+    /// The record of a first (and so far only) failed attempt.
+    pub fn single(op: &'static str, task: usize, msg: String) -> Self {
+        Self { attempts: vec![FailedAttempt { attempt: 1, op, task, msg }] }
+    }
+
+    /// The most recent attempt's record.
+    pub fn last(&self) -> &FailedAttempt {
+        self.attempts.last().expect("a job failure records >= 1 attempt")
+    }
+}
+
+impl std::fmt::Display for JobFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for a in &self.attempts {
+            if !first {
+                write!(f, "; ")?;
+            }
+            write!(f, "{a}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
 
 /// Why a scheduling operation failed. Clonable (job results are
 /// broadcast to every waiter) and comparable (tests match variants).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Error {
     /// The pool did not accept the submission (graph too large for the
-    /// capacity, or the pool is shutting down). See [`SubmitError`].
+    /// capacity, overload shed, drain, or shutdown). See
+    /// [`SubmitError`].
     Submit(SubmitError),
-    /// A task of the job panicked; the job was poisoned and the
-    /// message captured. Sibling jobs and the pool are unaffected.
-    Job(String),
+    /// A task of the job panicked; the job was poisoned and every
+    /// attempt's failing coordinates captured. Sibling jobs and the
+    /// pool are unaffected.
+    Job(JobFailure),
+    /// The job was cooperatively cancelled (an explicit
+    /// [`super::pool::CancelToken`] or a missed deadline) after `ran`
+    /// of its kernels had executed. Cancellation is not poisoning:
+    /// the remaining tasks were skipped, not failed.
+    Cancelled { ran: usize },
     /// The task graph's block grid does not match the matrix it was
     /// asked to run over.
     GridMismatch { graph_nb: usize, matrix_nb: usize },
@@ -57,7 +130,15 @@ impl std::fmt::Display for Error {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Error::Submit(e) => write!(f, "{e}"),
-            Error::Job(msg) => write!(f, "job failed: {msg}"),
+            Error::Job(failure) => write!(
+                f,
+                "job failed after {} attempt(s): {failure}",
+                failure.attempts.len()
+            ),
+            Error::Cancelled { ran } => write!(
+                f,
+                "job cancelled after running {ran} of its tasks"
+            ),
             Error::GridMismatch { graph_nb, matrix_nb } => write!(
                 f,
                 "graph block grid {graph_nb}x{graph_nb} does not match \
@@ -109,23 +190,108 @@ mod tests {
     use super::*;
 
     #[test]
-    fn display_and_source() {
-        let e = Error::from(SubmitError::ShutDown);
-        assert_eq!(e.to_string(), "pool is shut down");
-        assert!(std::error::Error::source(&e).is_some());
-        let e = Error::Job("boom".into());
-        assert!(e.to_string().contains("boom"));
-        assert!(std::error::Error::source(&e).is_none());
-        let e = Error::GridMismatch { graph_nb: 4, matrix_nb: 5 };
-        assert!(e.to_string().contains("4x4"));
-        let e = Error::UnknownWorkload("qr".into());
-        assert!(e.to_string().contains("qr"));
-        let e = Error::KernelTable { ops: 4, kernels: 3 };
-        assert!(e.to_string().contains('3'));
-        let e = Error::CrossPoolDependency;
-        assert!(e.to_string().contains("different"));
-        let e = Error::UnknownJob;
-        assert!(e.to_string().contains("retired"));
-        assert!(std::error::Error::source(&e).is_none());
+    fn job_failure_records_where_each_attempt_died() {
+        let mut f = JobFailure::single("potrf", 3, "boom".into());
+        assert_eq!(f.last().attempt, 1);
+        f.attempts.push(FailedAttempt {
+            attempt: 2,
+            op: "trsm",
+            task: 7,
+            msg: "boom again".into(),
+        });
+        let e = Error::Job(f.clone());
+        let s = e.to_string();
+        assert!(s.contains("after 2 attempt(s)"), "{s}");
+        assert!(s.contains("attempt 1: `potrf` task 3 panicked: boom"));
+        assert!(
+            s.contains("attempt 2: `trsm` task 7 panicked: boom again")
+        );
+        assert_eq!(f.last().task, 7);
+    }
+
+    #[test]
+    fn display_covers_every_variant() {
+        // Submission rejections, including the recovery-layer ones.
+        let cases: Vec<(Error, &str)> = vec![
+            (Error::from(SubmitError::ShutDown), "pool is shut down"),
+            (
+                Error::from(SubmitError::GraphTooLarge {
+                    tasks: 9,
+                    capacity: 4,
+                }),
+                "9",
+            ),
+            (
+                Error::from(SubmitError::Overloaded {
+                    pending: 5,
+                    limit: 4,
+                }),
+                "shed limit 4",
+            ),
+            (
+                Error::from(SubmitError::Draining),
+                "draining",
+            ),
+            (
+                Error::Job(JobFailure::single("lu0", 0, "div".into())),
+                "`lu0` task 0 panicked: div",
+            ),
+            (
+                Error::Cancelled { ran: 12 },
+                "cancelled after running 12",
+            ),
+            (Error::GridMismatch { graph_nb: 4, matrix_nb: 5 }, "4x4"),
+            (Error::KernelTable { ops: 4, kernels: 3 }, "3"),
+            (Error::UnknownWorkload("qr".into()), "qr"),
+            (Error::CrossPoolDependency, "different"),
+            (Error::UnknownJob, "retired"),
+            (Error::ExecOpts("no events"), "no events"),
+            (Error::Host("nested".into()), "nested"),
+        ];
+        for (e, needle) in cases {
+            let s = e.to_string();
+            assert!(s.contains(needle), "{e:?} -> {s}");
+        }
+    }
+
+    #[test]
+    fn source_is_the_submit_error_and_nothing_else() {
+        for e in [
+            Error::from(SubmitError::ShutDown),
+            Error::from(SubmitError::Draining),
+            Error::from(SubmitError::Overloaded { pending: 1, limit: 1 }),
+            Error::from(SubmitError::GraphTooLarge {
+                tasks: 2,
+                capacity: 1,
+            }),
+        ] {
+            assert!(std::error::Error::source(&e).is_some(), "{e:?}");
+        }
+        for e in [
+            Error::Job(JobFailure::single("madd", 1, "x".into())),
+            Error::Cancelled { ran: 0 },
+            Error::GridMismatch { graph_nb: 1, matrix_nb: 2 },
+            Error::KernelTable { ops: 1, kernels: 2 },
+            Error::UnknownWorkload("x".into()),
+            Error::CrossPoolDependency,
+            Error::UnknownJob,
+            Error::ExecOpts("opts"),
+            Error::Host("h".into()),
+        ] {
+            assert!(std::error::Error::source(&e).is_none(), "{e:?}");
+        }
+    }
+
+    #[test]
+    fn errors_stay_comparable_and_clonable() {
+        // Job results are broadcast to every waiter: the error type
+        // must stay `Clone + PartialEq` even with structured payloads.
+        let a = Error::Job(JobFailure::single("syrk", 2, "m".into()));
+        assert_eq!(a.clone(), a);
+        assert_ne!(a, Error::Cancelled { ran: 2 });
+        assert_eq!(
+            Error::Cancelled { ran: 2 },
+            Error::Cancelled { ran: 2 }
+        );
     }
 }

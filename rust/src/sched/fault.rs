@@ -1,0 +1,662 @@
+//! Fault injection & recovery: deterministic, seeded failure as a
+//! first-class input to the pool.
+//!
+//! The paper's case for GPRM-style task management is "efficiency,
+//! stability, and flexibility" — but a runtime that only *contains*
+//! failure (PR 4's per-job poisoning) has no story for recovering
+//! from it, bounding it, or shedding it. This module makes every
+//! failure mode a replayable `(plan, seed)` pair, exactly like the
+//! scenario engine made adversarial load one:
+//!
+//! * A [`FaultKind`] names one way a kernel can misbehave: die
+//!   ([`FaultKind::Panic`]), die a fixed number of times and then
+//!   recover ([`FaultKind::TransientPanic`]), straggle
+//!   ([`FaultKind::Delay`]), or silently produce wrong bits
+//!   ([`FaultKind::Corrupt`] — caught by the workload's own
+//!   bit-identity verifier, never by the runtime).
+//! * A [`FaultSet`] pins faults to task coordinates inside one job;
+//!   [`faulty_kernel_runner`] wraps the ordinary
+//!   [`kernel_runner`] dispatch with the injection. Transient
+//!   counters are shared across retry attempts (an [`std::sync::Arc`]
+//!   of atomics), so "fails twice, then succeeds" means exactly that
+//!   even though every retry rebuilds the runner from pristine input.
+//! * A [`RetryPolicy`] tells the [`Session`] how often to resubmit a
+//!   poisoned job and how long to back off between attempts; the
+//!   deadline/cancel/shed/drain controls live on the pool itself
+//!   (see [`super::pool::CancelToken`], [`PoolConfig::max_pending`]
+//!   and [`Pool::drain`]).
+//! * [`FAULT_SCENARIOS`] is a second scenario registry — same
+//!   [`Scenario`] machinery, same SplitMix64 keying, same
+//!   invariant vocabulary — whose plans inject faults, deadlines,
+//!   cancellation, shedding and drain, each replayable via
+//!   `gprm exp --fault <name> --seed N`.
+//!
+//! Fault coordinates are stored raw in plans and wrapped onto the
+//! job's graph (`task % graph.len()`) when the runner is built, so a
+//! plan never needs to know a graph's exact size to be valid.
+//!
+//! Deadline- and cancel-flagged plan jobs only use workloads whose
+//! input pre-allocates every block the graph touches (Cholesky,
+//! matmul): a cancelled job skips an arbitrary suffix of its tasks,
+//! and SparseLU's skipped fill-in allocations would turn a clean
+//! cancellation into a missing-block panic downstream.
+//!
+//! [`kernel_runner`]: super::workload::kernel_runner
+//! [`Session`]: super::session::Session
+//! [`PoolConfig::max_pending`]: super::pool::PoolConfig::max_pending
+//! [`Pool::drain`]: super::pool::Pool::drain
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::graph::{TaskGraph, TaskId};
+use super::scenario::{
+    self, BatchPacing, CapacityPlan, JobPlan, Scenario, ScenarioPlan,
+};
+use super::workload::{kernel_runner, registry, BlockKernel, Workload};
+use crate::linalg::blocked::SharedBlocked;
+use crate::util::prng::SplitMix64;
+
+// --- fault vocabulary ----------------------------------------------------
+
+/// One named way a kernel invocation can misbehave.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The kernel panics on every attempt (a persistent fault —
+    /// retries exhaust into a typed [`super::error::JobFailure`]).
+    Panic,
+    /// The kernel panics on the first `fails` attempts and runs
+    /// cleanly afterwards (a transient fault — recoverable under a
+    /// [`RetryPolicy`] with `max_attempts > fails`).
+    TransientPanic { fails: u32 },
+    /// The kernel straggles: spin `spin` iterations, then run
+    /// normally. Harmless to correctness by construction.
+    Delay { spin: u32 },
+    /// The kernel runs normally, then flips the task's own write
+    /// block by `+1.0` at element `elem % block_len` — a silent
+    /// wrong-answer fault only the workload's bit-identity verifier
+    /// can catch.
+    Corrupt { elem: usize },
+}
+
+/// One fault pinned to a task coordinate inside a job. `task` is a
+/// raw coordinate; it is wrapped onto the job's graph
+/// (`task % graph.len()`) when the runner is built.
+#[derive(Debug)]
+pub struct InjectedFault {
+    pub task: usize,
+    pub kind: FaultKind,
+    /// Remaining panics for [`FaultKind::TransientPanic`]; shared
+    /// across retry attempts via the [`FaultSet`]'s `Arc`.
+    remaining: AtomicU32,
+}
+
+impl InjectedFault {
+    fn new(task: usize, kind: FaultKind) -> Self {
+        let remaining = match kind {
+            FaultKind::TransientPanic { fails } => fails,
+            _ => 0,
+        };
+        Self { task, kind, remaining: AtomicU32::new(remaining) }
+    }
+
+    /// Panics left before a transient fault heals (diagnostics).
+    pub fn remaining(&self) -> u32 {
+        self.remaining.load(Ordering::Acquire)
+    }
+}
+
+/// The faults injected into one job. Cloning shares the transient
+/// counters, which is exactly what retry resubmission needs: the
+/// healed/unhealed state survives the rebuild of the runner.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSet {
+    inner: Arc<Vec<InjectedFault>>,
+}
+
+impl FaultSet {
+    pub fn new(faults: &[(usize, FaultKind)]) -> Self {
+        Self {
+            inner: Arc::new(
+                faults
+                    .iter()
+                    .map(|&(t, k)| InjectedFault::new(t, k))
+                    .collect(),
+            ),
+        }
+    }
+
+    pub fn single(task: usize, kind: FaultKind) -> Self {
+        Self::new(&[(task, kind)])
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    /// The fault (if any) landing on task `id` of an `n`-task graph.
+    fn at(&self, id: usize, n: usize) -> Option<&InjectedFault> {
+        self.inner.iter().find(|f| f.task % n == id)
+    }
+}
+
+/// The fault-injecting counterpart of [`kernel_runner`]: identical
+/// dispatch, plus the [`FaultSet`]'s misbehaviour at its pinned
+/// coordinates. Used by [`super::session::JobBuilder::inject`].
+pub fn faulty_kernel_runner<'a>(
+    graph: &'a TaskGraph,
+    kernels: &'a [BlockKernel<'a>],
+    shared: &'a SharedBlocked,
+    bs: usize,
+    faults: FaultSet,
+) -> impl Fn(TaskId) + Send + Sync + 'a {
+    let base = kernel_runner(graph, kernels, shared, bs);
+    let n = graph.len().max(1);
+    move |id: TaskId| match faults.at(id.0, n) {
+        None => base(id),
+        Some(f) => match f.kind {
+            FaultKind::Panic => {
+                panic!("injected fault: kernel panic at task {}", id.0)
+            }
+            FaultKind::TransientPanic { .. } => {
+                let armed = f
+                    .remaining
+                    .fetch_update(
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                        |v| v.checked_sub(1),
+                    )
+                    .is_ok();
+                if armed {
+                    panic!(
+                        "injected fault: transient kernel panic at \
+                         task {}",
+                        id.0
+                    );
+                }
+                base(id)
+            }
+            FaultKind::Delay { spin } => {
+                for _ in 0..spin {
+                    std::hint::spin_loop();
+                }
+                base(id)
+            }
+            FaultKind::Corrupt { elem } => {
+                base(id);
+                let t = *graph.task(id);
+                // SAFETY: same exclusivity argument as
+                // `kernel_runner` — the graph chains every touch of
+                // the written block, and this task still owns it.
+                let m = unsafe { shared.get_mut() };
+                let w = m
+                    .block_mut(t.write.0, t.write.1)
+                    .expect("corrupt targets the task's own write block");
+                let e = elem % w.len();
+                w[e] += 1.0;
+            }
+        },
+    }
+}
+
+// --- recovery policy -----------------------------------------------------
+
+/// Sleep schedule between retry attempts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RetryBackoff {
+    /// Resubmit immediately.
+    None,
+    /// A fixed pause before every retry.
+    Fixed { millis: u64 },
+    /// `base_millis · 2^(k)` before the `k`-th retry (capped).
+    Exponential { base_millis: u64 },
+}
+
+/// How the [`super::session::Session`] retries a poisoned job:
+/// resubmit the cached graph over a fresh copy of the retained
+/// pristine input, up to `max_attempts` total attempts, sleeping per
+/// `backoff` between them. Cancelled jobs are never retried.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_attempts: usize,
+    pub backoff: RetryBackoff,
+}
+
+impl RetryPolicy {
+    /// Retry up to `max_attempts` total attempts, no backoff.
+    pub fn attempts(max_attempts: usize) -> Self {
+        Self { max_attempts: max_attempts.max(1), backoff: RetryBackoff::None }
+    }
+
+    pub fn with_backoff(mut self, backoff: RetryBackoff) -> Self {
+        self.backoff = backoff;
+        self
+    }
+
+    /// The pause before (2-based) attempt number `attempt`, if any.
+    pub fn delay_before(&self, attempt: usize) -> Option<Duration> {
+        match self.backoff {
+            RetryBackoff::None => None,
+            RetryBackoff::Fixed { millis } => {
+                Some(Duration::from_millis(millis))
+            }
+            RetryBackoff::Exponential { base_millis } => {
+                let shift = attempt.saturating_sub(2).min(16) as u32;
+                Some(Duration::from_millis(
+                    base_millis.saturating_mul(1u64 << shift),
+                ))
+            }
+        }
+    }
+}
+
+// --- the fault-scenario registry -----------------------------------------
+
+/// A registry entry whose input pre-allocates every block its graph
+/// touches (no fill-in): the only workloads a deadline or
+/// cancellation may legally truncate (see module docs).
+fn pick_dense(rng: &mut SplitMix64) -> &'static dyn Workload {
+    let d: Vec<&'static dyn Workload> = registry()
+        .iter()
+        .copied()
+        .filter(|w| w.name() != "sparselu")
+        .collect();
+    d[rng.range(0, d.len())]
+}
+
+fn plan_transient_storm(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let jobs: Vec<JobPlan> = (0..8)
+        .map(|i| {
+            let w = scenario::pick(rng);
+            let mut j = scenario::job(rng, w, rng.range(4, 7), bs);
+            j.fault_task = rng.next_below(1 << 16) as usize;
+            match i % 4 {
+                0 => {
+                    let fails = rng.range(1, 3) as u32;
+                    j.fault = Some(FaultKind::TransientPanic { fails });
+                    j.retry = Some(RetryPolicy::attempts(4));
+                }
+                1 => {
+                    j.fault = Some(FaultKind::Panic);
+                    j.retry = Some(
+                        RetryPolicy::attempts(2).with_backoff(
+                            RetryBackoff::Fixed { millis: 1 },
+                        ),
+                    );
+                }
+                2 => {
+                    j.fault = Some(FaultKind::Corrupt {
+                        elem: rng.next_below(64) as usize,
+                    });
+                }
+                _ => {
+                    j.fault = Some(FaultKind::Delay { spin: 1 << 12 });
+                }
+            }
+            j
+        })
+        .collect();
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Immediate,
+        max_pending: None,
+        drain_after: None,
+        jobs,
+    }
+}
+
+fn plan_deadline_churn(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let jobs: Vec<JobPlan> = (0..9)
+        .map(|i| match i % 3 {
+            0 => {
+                let w = pick_dense(rng);
+                let mut j = scenario::job(rng, w, rng.range(4, 7), bs);
+                // Far below any registry graph size at nb >= 4, so the
+                // deadline always fires.
+                j.deadline = Some(rng.range(1, 4));
+                j
+            }
+            1 => {
+                let w = pick_dense(rng);
+                let mut j = scenario::job(rng, w, rng.range(4, 7), bs);
+                // Effectively infinite: the job completes in full.
+                j.deadline = Some(1 << 20);
+                j
+            }
+            _ => {
+                let w = scenario::pick(rng);
+                scenario::job(rng, w, rng.range(4, 7), bs)
+            }
+        })
+        .collect();
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::HalfStream,
+        pacing: BatchPacing::Immediate,
+        max_pending: None,
+        drain_after: None,
+        jobs,
+    }
+}
+
+fn plan_shed_at_capacity(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    // The head is big enough to run for milliseconds while the tail
+    // submits in microseconds; its dependents are pinned pending
+    // behind it, so the shed bound trips deterministically — the same
+    // pressure construction capacity-churn uses.
+    let head = scenario::pick_factorisation(rng);
+    let mut jobs = vec![scenario::job(rng, head, 10, bs)];
+    for _ in 0..6 {
+        let w = scenario::pick(rng);
+        let mut j = scenario::job(rng, w, rng.range(3, 6), bs);
+        j.deps = vec![0];
+        jobs.push(j);
+    }
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Immediate,
+        max_pending: Some(rng.range(2, 4)),
+        drain_after: None,
+        jobs,
+    }
+}
+
+fn plan_cancel_mid_stream(rng: &mut SplitMix64) -> ScenarioPlan {
+    let bs = rng.range(3, 6);
+    let head = scenario::pick_factorisation(rng);
+    let mut jobs = vec![scenario::job(rng, head, 9, bs)];
+    for i in 0..6 {
+        let w = pick_dense(rng);
+        let mut j = scenario::job(rng, w, rng.range(3, 6), bs);
+        j.deps = vec![0];
+        j.cancel = i % 2 == 0;
+        jobs.push(j);
+    }
+    for _ in 0..2 {
+        let w = scenario::pick(rng);
+        jobs.push(scenario::job(rng, w, rng.range(3, 6), bs));
+    }
+    ScenarioPlan {
+        workers: rng.range(2, 7),
+        capacity: CapacityPlan::FullStream,
+        pacing: BatchPacing::Immediate,
+        max_pending: None,
+        drain_after: Some(7),
+        jobs,
+    }
+}
+
+/// The fault scenarios, in documentation order — a second registry on
+/// the same [`Scenario`] machinery, kept separate from
+/// [`scenario::ALL_SCENARIOS`] because its plans exercise controls
+/// (shedding, drain, cancellation) the generic host/sim agreement
+/// harness deliberately does not model.
+pub static FAULT_SCENARIOS: &[Scenario] = &[
+    Scenario {
+        name: "transient-storm-with-retry",
+        reason: "a storm of transient, persistent, corrupting and \
+                 straggling kernels in one stream: retries must heal \
+                 exactly the transient jobs bit-identically, exhaust \
+                 into typed attempt histories on the persistent ones, \
+                 and the verifier must catch every silent corruption",
+        invariants: &[
+            "retry-bit-identity",
+            "retry-exhaustion",
+            "corruption-detected",
+            "no-starvation",
+        ],
+        plan_fn: plan_transient_storm,
+    },
+    Scenario {
+        name: "deadline-misses-under-churn",
+        reason: "deadlines expressed in completed-task counts must \
+                 fire after exactly their budget and drain to a typed \
+                 cancellation without poisoning the pool, even while \
+                 the admission budget churns",
+        invariants: &[
+            "deadline-cancellation",
+            "no-retry-of-cancelled",
+            "bit-identity",
+            "no-starvation",
+        ],
+        plan_fn: plan_deadline_churn,
+    },
+    Scenario {
+        name: "shed-at-capacity",
+        reason: "a bounded pending queue must reject overflow with a \
+                 typed error at submission time and never drop a job \
+                 it already accepted",
+        invariants: &[
+            "shed-never-drops-admitted",
+            "bit-identity",
+            "no-starvation",
+        ],
+        plan_fn: plan_shed_at_capacity,
+    },
+    Scenario {
+        name: "cancel-mid-stream",
+        reason: "cancelling queued jobs and draining the pool \
+                 mid-stream must complete everything already admitted, \
+                 reject everything after the drain, and never retry a \
+                 cancelled job",
+        invariants: &[
+            "no-retry-of-cancelled",
+            "drain-completes-all-admitted",
+            "bit-identity",
+        ],
+        plan_fn: plan_cancel_mid_stream,
+    },
+];
+
+/// Look a fault scenario up by name.
+pub fn find(name: &str) -> Option<&'static Scenario> {
+    FAULT_SCENARIOS.iter().find(|s| s.name == name)
+}
+
+/// All fault-scenario names, in registry order (CLI error messages).
+pub fn names() -> Vec<&'static str> {
+    FAULT_SCENARIOS.iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::workload::{find as find_workload, Params};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn registry_shape_holds() {
+        assert_eq!(FAULT_SCENARIOS.len(), 4);
+        for (i, sc) in FAULT_SCENARIOS.iter().enumerate() {
+            assert!(!sc.reason.is_empty(), "{}", sc.name);
+            assert!(sc.invariants.len() >= 2, "{}", sc.name);
+            for later in &FAULT_SCENARIOS[i + 1..] {
+                assert_ne!(sc.name, later.name, "duplicate scenario");
+            }
+            assert_eq!(find(sc.name).unwrap().name, sc.name);
+            // The two registries must not shadow each other.
+            assert!(scenario::find(sc.name).is_none(), "{}", sc.name);
+        }
+        assert!(find("no-such-fault").is_none());
+        assert_eq!(names().len(), FAULT_SCENARIOS.len());
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_seed_sensitive() {
+        for sc in FAULT_SCENARIOS {
+            let (a, b) = (sc.plan(9), sc.plan(9));
+            assert_eq!(a.workers, b.workers, "{}", sc.name);
+            assert_eq!(a.max_pending, b.max_pending, "{}", sc.name);
+            assert_eq!(a.drain_after, b.drain_after, "{}", sc.name);
+            assert_eq!(a.jobs.len(), b.jobs.len(), "{}", sc.name);
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.workload.name(), y.workload.name());
+                assert_eq!((x.nb, x.bs, x.seed), (y.nb, y.bs, y.seed));
+                assert_eq!(x.fault, y.fault);
+                assert_eq!(x.fault_task, y.fault_task);
+                assert_eq!(x.retry, y.retry);
+                assert_eq!(x.deadline, y.deadline);
+                assert_eq!((x.cancel, x.deps.clone()), (y.cancel, y.deps.clone()));
+            }
+            let c = sc.plan(10);
+            let differs = a.workers != c.workers
+                || a.jobs.iter().zip(&c.jobs).any(|(x, y)| {
+                    x.nb != y.nb
+                        || x.seed != y.seed
+                        || x.fault_task != y.fault_task
+                        || x.workload.name() != y.workload.name()
+                });
+            assert!(differs, "{}: seed-insensitive plan", sc.name);
+        }
+    }
+
+    #[test]
+    fn truncatable_jobs_avoid_fill_in_workloads() {
+        // A deadline or cancellation skips an arbitrary task suffix;
+        // that is only panic-free for workloads without fill-in
+        // allocation (see module docs).
+        for sc in FAULT_SCENARIOS {
+            for seed in [1u64, 7, 23] {
+                for j in sc.plan(seed).jobs {
+                    let truncatable = j.cancel
+                        || j.deadline.map_or(false, |d| d < (1 << 20));
+                    if truncatable {
+                        assert_ne!(
+                            j.workload.name(),
+                            "sparselu",
+                            "{}: truncatable sparselu job",
+                            sc.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run a graph's tasks in program order (a valid topological
+    /// order by construction) through a runner.
+    fn run_seq(graph: &TaskGraph, run: impl Fn(TaskId)) {
+        for t in 0..graph.len() {
+            run(TaskId(t));
+        }
+    }
+
+    #[test]
+    fn corrupt_is_caught_by_bit_identity_and_delay_is_not() {
+        let w = find_workload("cholesky").unwrap();
+        let p = Params::new(4, 4);
+        let graph = w.graph(&p);
+        let mut want = w.make_input(&p, 0);
+        w.reference_seq(&mut want);
+
+        for (kind, clean) in [
+            (FaultKind::Corrupt { elem: 5 }, false),
+            (FaultKind::Delay { spin: 64 }, true),
+        ] {
+            let shared = SharedBlocked::new(w.make_input(&p, 0));
+            let run = faulty_kernel_runner(
+                &graph,
+                w.kernels(),
+                &shared,
+                p.bs,
+                FaultSet::single(7, kind),
+            );
+            run_seq(&graph, run);
+            let got = shared.into_inner();
+            assert_eq!(
+                w.verify_bits(&got, &want).is_ok(),
+                clean,
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn transient_counter_heals_across_rebuilds() {
+        let w = find_workload("cholesky").unwrap();
+        let p = Params::new(3, 4);
+        let graph = w.graph(&p);
+        let faults =
+            FaultSet::single(0, FaultKind::TransientPanic { fails: 2 });
+
+        // Attempts 1 and 2 panic at the fault task; attempt 3 runs
+        // clean and bit-identical — with the runner rebuilt from
+        // pristine input each time, exactly like a session retry.
+        for attempt in 1..=3 {
+            let shared = SharedBlocked::new(w.make_input(&p, 0));
+            let run = faulty_kernel_runner(
+                &graph,
+                w.kernels(),
+                &shared,
+                p.bs,
+                faults.clone(),
+            );
+            let hit = catch_unwind(AssertUnwindSafe(|| {
+                run_seq(&graph, run);
+            }));
+            if attempt <= 2 {
+                assert!(hit.is_err(), "attempt {attempt} must panic");
+            } else {
+                assert!(hit.is_ok(), "attempt {attempt} must heal");
+                let got = shared.into_inner();
+                let mut want = w.make_input(&p, 0);
+                w.reference_seq(&mut want);
+                w.verify_bits(&got, &want).unwrap();
+            }
+        }
+        assert_eq!(faults.inner[0].remaining(), 0);
+    }
+
+    #[test]
+    fn fault_coordinates_wrap_onto_the_graph() {
+        let w = find_workload("matmul").unwrap();
+        let p = Params::new(2, 3);
+        let graph = w.graph(&p); // 8 tasks
+        let n = graph.len();
+        let shared = SharedBlocked::new(w.make_input(&p, 0));
+        // A coordinate far past the graph lands on task (coord % n).
+        let coord = 5 * n + 3;
+        let run = faulty_kernel_runner(
+            &graph,
+            w.kernels(),
+            &shared,
+            p.bs,
+            FaultSet::single(coord, FaultKind::Panic),
+        );
+        for t in 0..n {
+            let r = catch_unwind(AssertUnwindSafe(|| run(TaskId(t))));
+            assert_eq!(r.is_err(), t == coord % n, "task {t}");
+        }
+    }
+
+    #[test]
+    fn retry_policy_backoff_schedule() {
+        let none = RetryPolicy::attempts(3);
+        assert_eq!(none.max_attempts, 3);
+        assert_eq!(none.delay_before(2), None);
+
+        let fixed = RetryPolicy::attempts(3)
+            .with_backoff(RetryBackoff::Fixed { millis: 7 });
+        assert_eq!(fixed.delay_before(2), Some(Duration::from_millis(7)));
+        assert_eq!(fixed.delay_before(5), Some(Duration::from_millis(7)));
+
+        let exp = RetryPolicy::attempts(5)
+            .with_backoff(RetryBackoff::Exponential { base_millis: 3 });
+        assert_eq!(exp.delay_before(2), Some(Duration::from_millis(3)));
+        assert_eq!(exp.delay_before(3), Some(Duration::from_millis(6)));
+        assert_eq!(exp.delay_before(4), Some(Duration::from_millis(12)));
+
+        // Zero clamps to one attempt: "no retry", not "no run".
+        assert_eq!(RetryPolicy::attempts(0).max_attempts, 1);
+    }
+}

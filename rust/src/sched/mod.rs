@@ -59,9 +59,18 @@
 //!   ([`scenario::run_sim`]) with host/sim completion-structure
 //!   agreement. The module docs carry the one-file recipe for
 //!   declaring a new scenario.
+//! * [`fault`] — the **fault-injection & recovery layer**: seeded,
+//!   deterministic kernel misbehaviour ([`fault::FaultKind`] —
+//!   panic, transient panic, straggle, silent corruption) pinned to
+//!   task coordinates ([`fault::FaultSet`]), session-level retry with
+//!   backoff ([`fault::RetryPolicy`]), and a second scenario registry
+//!   ([`fault::FAULT_SCENARIOS`]) whose plans drive retries,
+//!   deadlines, cancellation, overload shedding and drain through the
+//!   same machine-checked invariant machinery.
 //! * [`error`] — [`error::Error`]: the one typed failure surface of
 //!   the whole stack (`Display` + `std::error::Error`, never panics
-//!   on an error path).
+//!   on an error path), including structured per-attempt job-failure
+//!   records ([`error::JobFailure`]) and typed cancellation.
 //!
 //! The simulator counterpart is [`crate::tilesim::sim_dataflow`]
 //! (including the pool-vs-one-shot launch models); the drivers wired
@@ -73,6 +82,7 @@
 pub mod deque;
 pub mod error;
 pub mod exec;
+pub mod fault;
 pub mod graph;
 pub mod pool;
 pub mod scenario;
@@ -80,7 +90,8 @@ pub mod session;
 pub mod workload;
 
 pub use deque::{Steal, StealDeque};
-pub use error::Error;
+pub use error::{Error, FailedAttempt, JobFailure};
+pub use fault::{FaultKind, FaultSet, RetryBackoff, RetryPolicy};
 pub use exec::{
     check_event_ordering, execute_gprm, execute_gprm_opts, execute_omp,
     execute_omp_opts, Event, ExecOpts, ExecStats,
@@ -90,7 +101,9 @@ pub use graph::{
     LU_OPS, MATMUL_OPS, OP_BDIV, OP_BMOD, OP_FWD, OP_GEMM, OP_LU0,
     OP_MADD, OP_POTRF, OP_SYRK, OP_TRSM,
 };
-pub use pool::{JobHandle, Pool, PoolConfig, PoolScope, SubmitError};
+pub use pool::{
+    CancelToken, JobHandle, Pool, PoolConfig, PoolScope, SubmitError,
+};
 pub use session::{JobBuilder, JobResult, JobSpec, Session};
 pub use workload::{
     BlockKernel, Cholesky, Matmul, Params, Sparselu, TaskCost, Workload,

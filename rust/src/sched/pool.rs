@@ -84,7 +84,7 @@
 //! `executed`/`peak_ready` stats.
 
 use super::deque::{Steal, StealDeque};
-use super::error::Error;
+use super::error::{Error, JobFailure};
 use super::exec::{Backoff, ExecStats};
 use super::graph::{TaskGraph, TaskId};
 use std::cell::UnsafeCell;
@@ -126,6 +126,14 @@ pub enum SubmitError {
     GraphTooLarge { tasks: usize, capacity: usize },
     /// [`Pool::shutdown`] already began; the pool accepts no new jobs.
     ShutDown,
+    /// The pending queue is at the shed bound
+    /// ([`PoolConfig::max_pending`]): the pool rejects the overflow at
+    /// submission time instead of queueing unboundedly. Already-
+    /// accepted jobs are unaffected.
+    Overloaded { pending: usize, limit: usize },
+    /// [`Pool::drain`] began: in-flight and queued jobs complete, but
+    /// no new job is accepted.
+    Draining,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -137,6 +145,15 @@ impl std::fmt::Display for SubmitError {
                  {capacity}"
             ),
             SubmitError::ShutDown => write!(f, "pool is shut down"),
+            SubmitError::Overloaded { pending, limit } => write!(
+                f,
+                "pool overloaded: {pending} pending jobs at shed \
+                 limit {limit}"
+            ),
+            SubmitError::Draining => write!(
+                f,
+                "pool is draining and accepting no new jobs"
+            ),
         }
     }
 }
@@ -161,13 +178,31 @@ pub struct PoolConfig {
     /// Max concurrently-admitted jobs (slot table size, ≤
     /// [`MAX_SLOTS`]); further jobs queue.
     pub max_jobs: usize,
+    /// Overload shed bound: submissions arriving while this many jobs
+    /// already queue are rejected with
+    /// [`SubmitError::Overloaded`] instead of queueing unboundedly.
+    /// `None` (the default) keeps the original queue-everything
+    /// behaviour.
+    pub max_pending: Option<usize>,
 }
 
 impl PoolConfig {
     /// Defaults sized for the evaluation workloads: 32 Ki in-flight
-    /// tasks, 64 concurrent jobs.
+    /// tasks, 64 concurrent jobs, no shed bound.
     pub fn new(workers: usize) -> Self {
-        Self { workers, task_capacity: 1 << 15, max_jobs: 64 }
+        Self {
+            workers,
+            task_capacity: 1 << 15,
+            max_jobs: 64,
+            max_pending: None,
+        }
+    }
+
+    /// Bound the pending queue: reject submissions beyond
+    /// `max_pending` queued jobs with [`SubmitError::Overloaded`].
+    pub fn shed(mut self, max_pending: usize) -> Self {
+        self.max_pending = Some(max_pending);
+        self
     }
 }
 
@@ -203,7 +238,25 @@ pub(crate) struct JobInner {
     /// Set by the first panicking task; later tasks of this job skip
     /// their kernels but still drain the countdown.
     poisoned: AtomicBool,
-    panic_msg: Mutex<Option<String>>,
+    /// Where the job died: the first panicking task's op name, task
+    /// index and captured message (surfaced through
+    /// [`super::error::JobFailure`]).
+    poison: Mutex<Option<PoisonInfo>>,
+    /// Cooperative cancellation flag, checked at every task boundary:
+    /// once set, remaining tasks skip their kernels (the countdown
+    /// still drains) and the waiter gets [`Error::Cancelled`]. Shared
+    /// with [`CancelToken`]s and, on retry resubmission, with the
+    /// original attempt — cancelling a job cancels every attempt.
+    cancel: Arc<AtomicBool>,
+    /// Deadline in completed-task counts (wall-clock-free): the job
+    /// self-cancels once this many of its kernels have started, so
+    /// exactly `min(deadline, n_tasks)` kernels execute.
+    deadline: Option<usize>,
+    /// Deadline tickets drawn (each task draws one before running).
+    started: AtomicUsize,
+    /// Kernels that actually ran to completion (the `ran` count in
+    /// [`Error::Cancelled`]).
+    ran: AtomicUsize,
     /// Identity of the owning pool (address of its `PoolShared`):
     /// dependency handles are validated against it at submission, so
     /// a foreign pool's handle is a typed error instead of a stalled
@@ -234,6 +287,24 @@ pub(crate) struct JobInner {
 /// Sentinel for "event has not happened yet" in the admission/
 /// completion stamps.
 const SEQ_UNSET: usize = usize::MAX;
+
+/// The first panicking task's coordinates + message (see
+/// [`JobInner::poison`]).
+struct PoisonInfo {
+    op: &'static str,
+    task: usize,
+    msg: String,
+}
+
+/// Per-job execution controls a front end may attach at submission:
+/// a completed-task-count deadline and/or a pre-shared cancellation
+/// flag (how a retry resubmission keeps honouring the original
+/// attempt's [`CancelToken`]).
+#[derive(Default)]
+pub(crate) struct JobCtl {
+    pub(crate) deadline: Option<usize>,
+    pub(crate) cancel: Option<Arc<AtomicBool>>,
+}
 
 // SAFETY: `work` holds a raw graph pointer and an erased closure whose
 // borrows are kept alive by the scope contract (PoolScope blocks until
@@ -277,6 +348,13 @@ impl JobInner {
             .iter()
             .all(|d| d.done.lock().unwrap().is_some())
     }
+
+    /// The shared cancellation flag — what a retry resubmission passes
+    /// back through [`JobCtl`] so every attempt honours the original
+    /// [`CancelToken`].
+    pub(crate) fn cancel_flag(&self) -> Arc<AtomicBool> {
+        self.cancel.clone()
+    }
 }
 
 /// FIFO admission state.
@@ -293,6 +371,9 @@ struct Admission {
     /// dependencies, not ones merely in transit through the queue.
     peak_pending: usize,
     shutting_down: bool,
+    /// [`Pool::drain`] began: stop accepting submissions but let
+    /// everything already accepted (queued or admitted) complete.
+    draining: bool,
 }
 
 /// One slot of the job registry: the live job, if any.
@@ -318,6 +399,8 @@ struct PoolShared {
     /// Worker thread handles for deep-idle unparking.
     threads: Mutex<Vec<std::thread::Thread>>,
     task_capacity: usize,
+    /// Overload shed bound (see [`PoolConfig::max_pending`]).
+    max_pending: Option<usize>,
     /// Pool-wide event clock: admissions and completions each take
     /// one tick, so their stamps are mutually ordered (see
     /// [`JobInner::admission_seq`]).
@@ -457,8 +540,18 @@ impl PoolShared {
             adm.inflight -= job.n_tasks;
         }
         self.active_jobs.fetch_sub(1, Ordering::SeqCst);
-        let result = match job.panic_msg.lock().unwrap().take() {
-            Some(msg) => Err(Error::Job(msg)),
+        // Poison outranks cancellation (a real failure must never be
+        // reported as a clean cancel); cancellation outranks success.
+        let poison = job.poison.lock().unwrap().take();
+        let result = match poison {
+            Some(p) => Err(Error::Job(JobFailure::single(
+                p.op, p.task, p.msg,
+            ))),
+            None if job.cancel.load(Ordering::Acquire) => {
+                Err(Error::Cancelled {
+                    ran: job.ran.load(Ordering::Acquire),
+                })
+            }
             None => Ok(ExecStats {
                 executed: job.n_tasks,
                 events: Vec::new(),
@@ -514,22 +607,56 @@ fn run_one(
     let work = unsafe { job.work_ref() };
     let graph = unsafe { &*work.graph };
     job.ready_len.fetch_sub(1, Ordering::Relaxed);
-    if !job.poisoned.load(Ordering::Relaxed) {
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            (work.run)(TaskId(task))
-        }));
-        if let Err(e) = r {
-            // Poison the *job*, never the pool: siblings of this job
-            // skip their kernels, the countdown still drains (so the
-            // slot recycles and the waiter unblocks), and every other
-            // job is untouched.
-            let msg = panic_message(e);
-            let mut m = job.panic_msg.lock().unwrap();
-            if m.is_none() {
-                *m = Some(msg);
+    if !job.poisoned.load(Ordering::Relaxed)
+        && !job.cancel.load(Ordering::Acquire)
+    {
+        // Deadline tickets: each task draws one before running; the
+        // drawer of ticket `deadline` flips the shared cancel flag
+        // instead of running. Tickets 0..deadline were all granted
+        // before the flag could be set, so exactly
+        // `min(deadline, n_tasks)` kernels execute — deterministic,
+        // schedule-independent.
+        let granted = match job.deadline {
+            Some(d) => {
+                let n = job.started.fetch_add(1, Ordering::Relaxed);
+                if n >= d {
+                    job.cancel.store(true, Ordering::Release);
+                    false
+                } else {
+                    true
+                }
             }
-            drop(m);
-            job.poisoned.store(true, Ordering::Release);
+            None => true,
+        };
+        if granted {
+            let r = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    (work.run)(TaskId(task))
+                }),
+            );
+            match r {
+                Ok(()) => {
+                    job.ran.fetch_add(1, Ordering::Release);
+                }
+                Err(e) => {
+                    // Poison the *job*, never the pool: siblings of
+                    // this job skip their kernels, the countdown still
+                    // drains (so the slot recycles and the waiter
+                    // unblocks), and every other job is untouched. The
+                    // first failure's coordinates are the poison
+                    // record.
+                    let msg = panic_message(e);
+                    let mut m = job.poison.lock().unwrap();
+                    if m.is_none() {
+                        let op =
+                            graph.ops()[graph.task(TaskId(task)).op.0]
+                                .name;
+                        *m = Some(PoisonInfo { op, task, msg });
+                    }
+                    drop(m);
+                    job.poisoned.store(true, Ordering::Release);
+                }
+            }
         }
     }
     let mut batch_peak = 0usize;
@@ -636,11 +763,13 @@ impl Pool {
                 inflight: 0,
                 peak_pending: 0,
                 shutting_down: false,
+                draining: false,
             }),
             shutdown: AtomicBool::new(false),
             active_jobs: AtomicUsize::new(0),
             threads: Mutex::new(Vec::new()),
             task_capacity: cap,
+            max_pending: cfg.max_pending,
             event_seq: AtomicUsize::new(0),
         });
         let mut handles = Vec::with_capacity(cfg.workers);
@@ -743,6 +872,7 @@ impl Pool {
         graph: *const TaskGraph,
         run: Box<dyn Fn(TaskId) + Send + Sync + 'static>,
         deps: Vec<Arc<JobInner>>,
+        ctl: JobCtl,
     ) -> Result<Arc<JobInner>, Error> {
         let shared = &self.shared;
         let pool_id = Arc::as_ptr(shared) as usize;
@@ -769,7 +899,13 @@ impl Pool {
                 .collect(),
             remaining: AtomicUsize::new(n),
             poisoned: AtomicBool::new(false),
-            panic_msg: Mutex::new(None),
+            poison: Mutex::new(None),
+            cancel: ctl
+                .cancel
+                .unwrap_or_else(|| Arc::new(AtomicBool::new(false))),
+            deadline: ctl.deadline,
+            started: AtomicUsize::new(0),
+            ran: AtomicUsize::new(0),
             pool_id,
             deps,
             done: Mutex::new(None),
@@ -788,10 +924,59 @@ impl Pool {
             if adm.shutting_down {
                 return Err(Error::Submit(SubmitError::ShutDown));
             }
+            if adm.draining {
+                return Err(Error::Submit(SubmitError::Draining));
+            }
+            if let Some(limit) = shared.max_pending {
+                if adm.pending.len() >= limit {
+                    // Shed at the door: an accepted job is never
+                    // dropped, so overload is refused before
+                    // acceptance, with the queue depth in the error.
+                    return Err(Error::Submit(SubmitError::Overloaded {
+                        pending: adm.pending.len(),
+                        limit,
+                    }));
+                }
+            }
             adm.pending.push_back(job.clone());
         }
         shared.try_admit();
         Ok(job)
+    }
+
+    /// Graceful drain: stop accepting new submissions (they fail with
+    /// [`SubmitError::Draining`]) and block until every accepted job
+    /// — queued or admitted — has completed. The workers stay alive:
+    /// unlike [`Pool::shutdown`] this does not end the pool, it
+    /// quiesces it; queued jobs are *completed*, never failed.
+    pub fn drain(&self) {
+        self.shared.adm.lock().unwrap().draining = true;
+        loop {
+            let pending: Vec<Arc<JobInner>> = {
+                let adm = self.shared.adm.lock().unwrap();
+                adm.pending.iter().cloned().collect()
+            };
+            let running: Vec<Arc<JobInner>> = self
+                .shared
+                .slots
+                .iter()
+                .filter_map(|s| s.lock().unwrap().clone())
+                .collect();
+            if pending.is_empty() && running.is_empty() {
+                // A completing job clears its slot before dropping
+                // `active_jobs`; spin the brief window out.
+                if self.shared.active_jobs.load(Ordering::SeqCst) == 0 {
+                    return;
+                }
+                std::thread::yield_now();
+                continue;
+            }
+            // No new submissions can arrive, so waiting out this
+            // snapshot monotonically shrinks the accepted set.
+            for job in pending.into_iter().chain(running) {
+                let _ = job.wait_done();
+            }
+        }
     }
 
     /// Graceful shutdown: stop accepting jobs, fail anything still
@@ -893,7 +1078,12 @@ impl<'env> PoolScope<'_, 'env> {
         // ends (even on leak or panic), which is exactly the
         // `submit_erased` contract.
         let job = unsafe {
-            self.pool.submit_erased(graph as *const TaskGraph, run, deps)
+            self.pool.submit_erased(
+                graph as *const TaskGraph,
+                run,
+                deps,
+                JobCtl::default(),
+            )
         }?;
         self.jobs.lock().unwrap().push(job.clone());
         Ok(JobHandle { job })
@@ -953,6 +1143,36 @@ impl JobHandle {
             SEQ_UNSET => None,
             s => Some(s),
         }
+    }
+
+    /// A clonable cancellation token for this job (see
+    /// [`CancelToken::cancel`]).
+    pub fn cancel_token(&self) -> CancelToken {
+        CancelToken { flag: self.job.cancel.clone() }
+    }
+}
+
+/// Cooperative cancellation for one job. [`CancelToken::cancel`] asks
+/// the job to stop at the next task boundary: tasks not yet started
+/// skip their kernels (the completion countdown still drains, so the
+/// slot recycles and waiters unblock), tasks already running finish,
+/// and the waiter gets [`Error::Cancelled`] with the count of kernels
+/// that ran. Cancelling a never-started (queued) job deterministically
+/// runs zero kernels. Cancellation is sticky and shared across every
+/// retry attempt of the job; cancelling an already-finished job is a
+/// no-op on its result.
+#[derive(Clone)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
     }
 }
 
@@ -1070,6 +1290,7 @@ mod tests {
             workers: 2,
             task_capacity: 10,
             max_jobs: 4,
+            max_pending: None,
         });
         let big = lu_graph(8); // hundreds of tasks
         let small = lu_graph(2);
@@ -1100,6 +1321,7 @@ mod tests {
             workers: 3,
             task_capacity: g.len(),
             max_jobs: 8,
+            max_pending: None,
         });
         let n = AtomicUsize::new(0);
         pool.scope(|s| {
@@ -1130,6 +1352,7 @@ mod tests {
             workers: 2,
             task_capacity: 1 << 12,
             max_jobs: 1,
+            max_pending: None,
         });
         let gate = AtomicBool::new(false);
         pool.scope(|s| {
@@ -1197,6 +1420,7 @@ mod tests {
             workers: 2,
             task_capacity: 1 << 12,
             max_jobs: 1,
+            max_pending: None,
         });
         pool.scope(|s| {
             let hs: Vec<JobHandle> =
@@ -1232,6 +1456,18 @@ mod tests {
                 "{e}"
             );
             assert!(matches!(e, Error::Job(_)));
+            // The poison record names where the job died.
+            if let Error::Job(fail) = &e {
+                assert_eq!(fail.attempts.len(), 1);
+                assert_eq!(fail.last().attempt, 1);
+                assert_eq!(fail.last().task, 3);
+                assert!(
+                    ["lu0", "fwd", "bdiv", "bmod"]
+                        .contains(&fail.last().op),
+                    "{}",
+                    fail.last().op
+                );
+            }
             // Idempotent error.
             assert!(bad.wait().is_err());
             assert_eq!(good.wait().unwrap().executed, g.len());
@@ -1512,6 +1748,7 @@ mod tests {
             workers: 3,
             task_capacity: g.len(),
             max_jobs: 8,
+            max_pending: None,
         });
         pool.scope(|s| {
             let a = s.submit(&g, |_| {}).unwrap();
@@ -1521,6 +1758,187 @@ mod tests {
             for h in [&a, &b, &c, &d] {
                 assert_eq!(h.wait().unwrap().executed, g.len());
             }
+        });
+        pool.shutdown();
+    }
+
+    /// Test-only mirror of [`PoolScope::submit_after`] that attaches an
+    /// explicit [`JobCtl`] (the session front end's path to deadlines).
+    fn submit_ctl<'env>(
+        s: &PoolScope<'_, 'env>,
+        graph: &'env TaskGraph,
+        run: impl Fn(TaskId) + Send + Sync + 'env,
+        ctl: JobCtl,
+    ) -> Result<JobHandle, Error> {
+        let run: Box<dyn Fn(TaskId) + Send + Sync + 'env> = Box::new(run);
+        // SAFETY: same lifetime-erasure contract as `submit_after` —
+        // the enclosing scope blocks until the job completes.
+        let run: Box<dyn Fn(TaskId) + Send + Sync + 'static> =
+            unsafe { std::mem::transmute(run) };
+        let job = unsafe {
+            s.pool.submit_erased(
+                graph as *const TaskGraph,
+                run,
+                Vec::new(),
+                ctl,
+            )
+        }?;
+        s.jobs.lock().unwrap().push(job.clone());
+        Ok(JobHandle { job })
+    }
+
+    #[test]
+    fn cancel_token_on_pending_job_runs_zero_kernels() {
+        // Cancel a job while it is provably still queued (its
+        // predecessor is gated): not one of its kernels may run, and
+        // the waiter gets the typed `Cancelled { ran: 0 }`.
+        let pool = Pool::new(2);
+        let g = lu_graph(6);
+        let gate = AtomicBool::new(false);
+        let ran = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let a = s
+                .submit(&g, |_| {
+                    while !gate.load(Ordering::Acquire) {
+                        std::hint::spin_loop();
+                    }
+                })
+                .unwrap();
+            let b = s
+                .submit_after(
+                    &g,
+                    |_| {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    },
+                    &[&a],
+                )
+                .unwrap();
+            let tok = b.cancel_token();
+            assert!(!tok.is_cancelled());
+            tok.cancel();
+            assert!(tok.is_cancelled());
+            gate.store(true, Ordering::Release);
+            assert_eq!(
+                b.wait().unwrap_err(),
+                Error::Cancelled { ran: 0 }
+            );
+            // Idempotent, and the sibling is untouched.
+            assert!(b.wait().is_err());
+            assert_eq!(a.wait().unwrap().executed, g.len());
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 0);
+        // Cancellation never poisons the pool.
+        pool.run(&g, |_| {}).unwrap();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn deadline_caps_execution_at_exactly_d_kernels() {
+        // The ticket protocol makes a completed-task-count deadline
+        // schedule-independent: exactly `min(d, n)` kernels execute,
+        // whatever the worker interleaving.
+        let pool = Pool::new(3);
+        let g = lu_graph(6);
+        let n = g.len();
+        for d in [1usize, 3, n, n + 100] {
+            let ran = AtomicUsize::new(0);
+            pool.scope(|s| {
+                let h = submit_ctl(
+                    s,
+                    &g,
+                    |_| {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    },
+                    JobCtl { deadline: Some(d), cancel: None },
+                )
+                .unwrap();
+                if d >= n {
+                    assert_eq!(h.wait().unwrap().executed, n);
+                    assert_eq!(ran.load(Ordering::SeqCst), n);
+                } else {
+                    assert_eq!(
+                        h.wait().unwrap_err(),
+                        Error::Cancelled { ran: d }
+                    );
+                    assert_eq!(ran.load(Ordering::SeqCst), d);
+                }
+            });
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shed_bound_rejects_typed_and_never_drops_admitted() {
+        // Pending depth is capped at 2: with the head job gated (so
+        // its dependents provably queue), the third dependent is shed
+        // with the typed error; everything accepted still completes,
+        // and once the backlog drains the pool accepts again.
+        let g = lu_graph(5);
+        let pool = Pool::with_config(
+            PoolConfig {
+                workers: 2,
+                task_capacity: 1 << 12,
+                max_jobs: 8,
+                max_pending: None,
+            }
+            .shed(2),
+        );
+        let gate = AtomicBool::new(false);
+        let n = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let head = s
+                .submit(&g, |_| {
+                    while !gate.load(Ordering::Acquire) {
+                        std::hint::spin_loop();
+                    }
+                    n.fetch_add(1, Ordering::SeqCst);
+                })
+                .unwrap();
+            let count = |_: TaskId| {
+                n.fetch_add(1, Ordering::SeqCst);
+            };
+            let q1 = s.submit_after(&g, count, &[&head]).unwrap();
+            let q2 = s.submit_after(&g, count, &[&head]).unwrap();
+            let err = s.submit_after(&g, count, &[&head]).unwrap_err();
+            assert_eq!(
+                err,
+                Error::Submit(SubmitError::Overloaded {
+                    pending: 2,
+                    limit: 2
+                })
+            );
+            assert!(err.to_string().contains("overloaded"), "{err}");
+            gate.store(true, Ordering::Release);
+            for h in [&head, &q1, &q2] {
+                assert_eq!(h.wait().unwrap().executed, g.len());
+            }
+            // Backlog drained: the shed bound no longer bites.
+            let late = s.submit(&g, count).unwrap();
+            late.wait().unwrap();
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 4 * g.len());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn drain_completes_accepted_then_rejects_late_submissions() {
+        let pool = Pool::new(2);
+        let g = lu_graph(6);
+        let n = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let count = |_: TaskId| {
+                n.fetch_add(1, Ordering::SeqCst);
+            };
+            let a = s.submit(&g, count).unwrap();
+            let b = s.submit_after(&g, count, &[&a]).unwrap();
+            pool.drain();
+            // Drain returned only once everything accepted completed.
+            assert!(a.is_done() && b.is_done());
+            assert_eq!(n.load(Ordering::SeqCst), 2 * g.len());
+            assert_eq!(pool.active_jobs(), 0);
+            let err = s.submit(&g, count).unwrap_err();
+            assert_eq!(err, Error::Submit(SubmitError::Draining));
+            assert!(err.to_string().contains("draining"), "{err}");
         });
         pool.shutdown();
     }

@@ -63,7 +63,8 @@
 //! [`SchedModel`]: crate::tilesim::SchedModel
 
 use super::error::Error;
-use super::pool::{JobHandle, Pool, PoolConfig};
+use super::fault::{FaultKind, FaultSet, RetryPolicy};
+use super::pool::{JobHandle, Pool, PoolConfig, SubmitError};
 use super::session::{JobSpec, Session};
 use super::workload::{registry, Params, Workload};
 use crate::linalg::blocked::BlockedSparseMatrix;
@@ -91,6 +92,22 @@ pub struct JobPlan {
     /// Submission batch; [`BatchPacing`] says what happens between
     /// batches in an `Overlapped` replay.
     pub batch: usize,
+    /// Inject this fault into the job's kernel dispatch
+    /// ([`super::fault::FaultSet`]); coordinates come from
+    /// `fault_task`.
+    pub fault: Option<FaultKind>,
+    /// Raw fault coordinate, wrapped onto the job's graph
+    /// (`fault_task % tasks`) by the runner.
+    pub fault_task: usize,
+    /// Retry policy the session applies when this job poisons.
+    pub retry: Option<RetryPolicy>,
+    /// Completed-task-count deadline ([`JobBuilder::deadline`]).
+    ///
+    /// [`JobBuilder::deadline`]: super::session::JobBuilder::deadline
+    pub deadline: Option<usize>,
+    /// Cancel the job (via its [`super::pool::CancelToken`])
+    /// immediately after submission.
+    pub cancel: bool,
 }
 
 impl JobPlan {
@@ -127,6 +144,12 @@ pub struct ScenarioPlan {
     pub workers: usize,
     pub capacity: CapacityPlan,
     pub pacing: BatchPacing,
+    /// Overload shed bound ([`PoolConfig::max_pending`]).
+    pub max_pending: Option<usize>,
+    /// Call [`Pool::drain`] before submitting the job at this index:
+    /// everything accepted earlier completes, everything at or after
+    /// it is rejected with [`SubmitError::Draining`].
+    pub drain_after: Option<usize>,
     pub jobs: Vec<JobPlan>,
 }
 
@@ -141,7 +164,9 @@ pub struct Scenario {
     /// Names of the invariants [`check_invariants`] must uphold on
     /// every replay (each scenario declares at least two).
     pub invariants: &'static [&'static str],
-    plan_fn: fn(&mut SplitMix64) -> ScenarioPlan,
+    /// Crate-visible so [`super::fault::FAULT_SCENARIOS`] can build on
+    /// the same machinery.
+    pub(crate) plan_fn: fn(&mut SplitMix64) -> ScenarioPlan,
 }
 
 impl Scenario {
@@ -168,7 +193,7 @@ fn name_hash(name: &str) -> u64 {
 }
 
 /// Any registry entry, uniformly.
-fn pick(rng: &mut SplitMix64) -> &'static dyn Workload {
+pub(crate) fn pick(rng: &mut SplitMix64) -> &'static dyn Workload {
     let r = registry();
     r[rng.range(0, r.len())]
 }
@@ -176,7 +201,9 @@ fn pick(rng: &mut SplitMix64) -> &'static dyn Workload {
 /// A factorisation entry (phase-capable: SparseLU/Cholesky at the
 /// current registry) — the workloads whose root kernel writes the
 /// `(0,0)` diagonal, which the poison tamper removes.
-fn pick_factorisation(rng: &mut SplitMix64) -> &'static dyn Workload {
+pub(crate) fn pick_factorisation(
+    rng: &mut SplitMix64,
+) -> &'static dyn Workload {
     let p = Params::new(4, 4);
     let f: Vec<&'static dyn Workload> = registry()
         .iter()
@@ -186,7 +213,7 @@ fn pick_factorisation(rng: &mut SplitMix64) -> &'static dyn Workload {
     f[rng.range(0, f.len())]
 }
 
-fn job(
+pub(crate) fn job(
     rng: &mut SplitMix64,
     workload: &'static dyn Workload,
     nb: usize,
@@ -201,6 +228,11 @@ fn job(
         poison: false,
         straggler: false,
         batch: 0,
+        fault: None,
+        fault_task: 0,
+        retry: None,
+        deadline: None,
+        cancel: false,
     }
 }
 
@@ -221,6 +253,8 @@ fn plan_mixed_sizes(rng: &mut SplitMix64) -> ScenarioPlan {
         workers: rng.range(2, 9),
         capacity: CapacityPlan::FullStream,
         pacing: BatchPacing::Immediate,
+        max_pending: None,
+        drain_after: None,
         jobs,
     }
 }
@@ -239,6 +273,8 @@ fn plan_bursty(rng: &mut SplitMix64) -> ScenarioPlan {
         workers: rng.range(2, 7),
         capacity: CapacityPlan::FullStream,
         pacing: BatchPacing::Gap,
+        max_pending: None,
+        drain_after: None,
         jobs,
     }
 }
@@ -262,6 +298,8 @@ fn plan_fan_out_fan_in(rng: &mut SplitMix64) -> ScenarioPlan {
         workers: rng.range(2, 7),
         capacity: CapacityPlan::FullStream,
         pacing: BatchPacing::Immediate,
+        max_pending: None,
+        drain_after: None,
         jobs,
     }
 }
@@ -285,6 +323,8 @@ fn plan_poison_mid_stream(rng: &mut SplitMix64) -> ScenarioPlan {
         workers: rng.range(2, 7),
         capacity: CapacityPlan::FullStream,
         pacing: BatchPacing::Immediate,
+        max_pending: None,
+        drain_after: None,
         jobs,
     }
 }
@@ -304,6 +344,8 @@ fn plan_capacity_churn(rng: &mut SplitMix64) -> ScenarioPlan {
         workers: rng.range(2, 7),
         capacity: CapacityPlan::HalfStream,
         pacing: BatchPacing::Immediate,
+        max_pending: None,
+        drain_after: None,
         jobs,
     }
 }
@@ -322,6 +364,8 @@ fn plan_straggler_shadow(rng: &mut SplitMix64) -> ScenarioPlan {
         workers: rng.range(4, 9),
         capacity: CapacityPlan::FullStream,
         pacing: BatchPacing::Immediate,
+        max_pending: None,
+        drain_after: None,
         jobs,
     }
 }
@@ -351,6 +395,8 @@ fn plan_fresh_wave_after_poison(rng: &mut SplitMix64) -> ScenarioPlan {
         workers: rng.range(2, 7),
         capacity: CapacityPlan::FullStream,
         pacing: BatchPacing::Drain,
+        max_pending: None,
+        drain_after: None,
         jobs,
     }
 }
@@ -461,16 +507,25 @@ pub struct JobOutcome {
     /// Canonical graph size — what "fully drained" means for this job
     /// on either substrate.
     pub tasks: usize,
-    /// Event-clock stamps ([`JobHandle::admission_index`]).
+    /// Event-clock stamps ([`JobHandle::admission_index`]), for the
+    /// job's first attempt. `None` for submissions the pool rejected
+    /// (shed/drain).
     pub admission: Option<usize>,
     pub completion: Option<usize>,
-    /// Executed-task count, or the typed failure from
-    /// [`JobHandle::wait`].
+    /// Executed-task count, or the typed failure — from
+    /// [`Session::resolve_handle`], so retry policies have run their
+    /// course; rejected submissions carry their [`Error::Submit`].
     pub result: Result<usize, Error>,
+    /// Attempts the session consumed (1 = no retries; 0 = the
+    /// submission was rejected outright).
+    pub attempts: usize,
     /// Bit-identity vs the workload's own sequential reference
-    /// (`None` for poisoned jobs — their output is partial by
-    /// design).
+    /// (`None` for poisoned, corrupted, rejected and truncated jobs —
+    /// their output is partial or tampered by design).
     pub bits: Option<Result<(), String>>,
+    /// For [`FaultKind::Corrupt`] jobs: did the workload's verifier
+    /// catch the silent corruption?
+    pub tamper_detected: Option<bool>,
 }
 
 /// Everything [`check_invariants`] looks at after a host replay.
@@ -530,9 +585,13 @@ pub fn run_host(sc: &Scenario, seed: u64, mode: ExecMode) -> ScenarioOutcome {
         workers: plan.workers,
         task_capacity: capacity,
         max_jobs: 64,
+        max_pending: plan.max_pending,
     });
     let mut session = Session::new(&pool);
-    let mut handles: Vec<JobHandle> = Vec::with_capacity(plan.jobs.len());
+    // A rejected submission (overload shed, drain) is a first-class
+    // observable, not engine misuse — keep the typed error per slot.
+    let mut handles: Vec<Result<JobHandle, Error>> =
+        Vec::with_capacity(plan.jobs.len());
     for (i, j) in plan.jobs.iter().enumerate() {
         if mode == ExecMode::Overlapped
             && i > 0
@@ -544,11 +603,14 @@ pub fn run_host(sc: &Scenario, seed: u64, mode: ExecMode) -> ScenarioOutcome {
                     std::time::Duration::from_millis(2),
                 ),
                 BatchPacing::Drain => {
-                    for h in &handles {
+                    for h in handles.iter().flatten() {
                         let _ = h.wait();
                     }
                 }
             }
+        }
+        if plan.drain_after == Some(i) {
+            pool.drain();
         }
         let spec = JobSpec::new(j.workload, j.nb, j.bs);
         let mut b = session.job(spec);
@@ -558,13 +620,27 @@ pub fn run_host(sc: &Scenario, seed: u64, mode: ExecMode) -> ScenarioOutcome {
             b.seed(j.seed)
         };
         for &d in &j.deps {
-            b = b.after(&handles[d]);
+            if let Ok(h) = &handles[d] {
+                b = b.after(h);
+            }
         }
-        let h = b
-            .submit()
-            .expect("scenario plans are pre-sized to fit their pool");
-        if mode == ExecMode::Serial {
-            let _ = h.wait();
+        if let Some(kind) = j.fault {
+            b = b.inject(FaultSet::single(j.fault_task, kind));
+        }
+        if let Some(pol) = j.retry {
+            b = b.retry(pol);
+        }
+        if let Some(d) = j.deadline {
+            b = b.deadline(d);
+        }
+        let h = b.submit();
+        if let Ok(h) = &h {
+            if j.cancel {
+                h.cancel_token().cancel();
+            }
+            if mode == ExecMode::Serial {
+                let _ = session.resolve_handle(h);
+            }
         }
         handles.push(h);
     }
@@ -574,16 +650,31 @@ pub fn run_host(sc: &Scenario, seed: u64, mode: ExecMode) -> ScenarioOutcome {
         .iter()
         .zip(&handles)
         .zip(&counts)
-        .map(|((j, h), &tasks)| {
-            let result = h.wait().map(|s| s.executed);
-            JobOutcome {
+        .map(|((j, h), &tasks)| match h {
+            Ok(h) => {
+                let result =
+                    session.resolve_handle(h).map(|s| s.executed);
+                JobOutcome {
+                    workload: j.workload.name(),
+                    tasks,
+                    admission: h.admission_index(),
+                    completion: h.completion_index(),
+                    result,
+                    attempts: session.attempts(h).unwrap_or(1),
+                    bits: None,
+                    tamper_detected: None,
+                }
+            }
+            Err(e) => JobOutcome {
                 workload: j.workload.name(),
                 tasks,
-                admission: h.admission_index(),
-                completion: h.completion_index(),
-                result,
+                admission: None,
+                completion: None,
+                result: Err(e.clone()),
+                attempts: 0,
                 bits: None,
-            }
+                tamper_detected: None,
+            },
         })
         .collect();
 
@@ -594,12 +685,19 @@ pub fn run_host(sc: &Scenario, seed: u64, mode: ExecMode) -> ScenarioOutcome {
 
     // Take every output through the typed API and verify bit-identity
     // against per-(workload, sizing, seed) sequential references.
+    // Poisoned, rejected and truncated jobs have partial output by
+    // design; corrupted jobs are checked for tamper *detection*
+    // instead of identity.
     let mut refs = Vec::new();
     for (i, j) in plan.jobs.iter().enumerate() {
+        let h = match &handles[i] {
+            Ok(h) => h,
+            Err(_) => continue,
+        };
         let out = session
-            .take_output(&handles[i])
-            .expect("the session tracks every scenario job");
-        if j.poison {
+            .take_output(h)
+            .expect("the session tracks every accepted scenario job");
+        if j.poison || jobs[i].result.is_err() {
             continue;
         }
         let key = (j.workload.name(), j.nb, j.bs, j.seed);
@@ -609,7 +707,12 @@ pub fn run_host(sc: &Scenario, seed: u64, mode: ExecMode) -> ScenarioOutcome {
             refs.push((key, want));
         }
         let want = &refs.iter().find(|(k, _)| *k == key).unwrap().1;
-        jobs[i].bits = Some(j.workload.verify_bits(&out, want));
+        let check = j.workload.verify_bits(&out, want);
+        if let Some(FaultKind::Corrupt { .. }) = j.fault {
+            jobs[i].tamper_detected = Some(check.is_err());
+        } else {
+            jobs[i].bits = Some(check);
+        }
     }
     drop(session);
     let final_active = pool.active_jobs();
@@ -748,11 +851,17 @@ fn eval(inv: &'static str, o: &ScenarioOutcome) -> InvariantResult {
                 ),
             }
         }
-        // Every submitted job completes and (if clean) drains its
-        // full graph; nothing is left pending or active.
+        // Every accepted job completes and (if clean) drains its
+        // full graph; nothing is left pending or active. Jobs the
+        // pool rejected at the door (shed/drain) have no stamps and
+        // are exempt — whether the rejection was *correct* is the
+        // shed/drain invariants' business.
         "no-starvation" => {
             let mut bad: Vec<String> = Vec::new();
             for (i, j) in o.jobs.iter().enumerate() {
+                if matches!(j.result, Err(Error::Submit(_))) {
+                    continue;
+                }
                 if j.completion.is_none() {
                     bad.push(format!("job {i} never completed"));
                 }
@@ -879,6 +988,302 @@ fn eval(inv: &'static str, o: &ScenarioOutcome) -> InvariantResult {
                              (small {s:?}, straggler {c:?})"
                         ),
                     ),
+                }
+            }
+        },
+        // Every transient fault whose retry budget exceeds its panic
+        // count heals: full drain, exactly `fails + 1` attempts, and
+        // output bit-identical to the fault-free reference.
+        "retry-bit-identity" => {
+            let mut checked = 0usize;
+            let mut bad: Vec<String> = Vec::new();
+            for (i, (p, j)) in
+                o.plan.jobs.iter().zip(&o.jobs).enumerate()
+            {
+                let fails = match p.fault {
+                    Some(FaultKind::TransientPanic { fails }) => {
+                        fails as usize
+                    }
+                    _ => continue,
+                };
+                if p.retry.map_or(1, |r| r.max_attempts) <= fails {
+                    continue; // under-budgeted: exhausts by design
+                }
+                checked += 1;
+                if j.result != Ok(j.tasks) {
+                    bad.push(format!(
+                        "job {i} did not heal: {:?}",
+                        j.result
+                    ));
+                } else if j.attempts != fails + 1 {
+                    bad.push(format!(
+                        "job {i} took {} attempts, expected {}",
+                        j.attempts,
+                        fails + 1
+                    ));
+                } else if !matches!(&j.bits, Some(Ok(()))) {
+                    bad.push(format!(
+                        "job {i} healed but is not bit-identical: {:?}",
+                        j.bits
+                    ));
+                }
+            }
+            if checked == 0 {
+                InvariantResult::violated(
+                    inv,
+                    "plan injected no recoverable transient fault"
+                        .into(),
+                )
+            } else if bad.is_empty() {
+                InvariantResult::ok(
+                    inv,
+                    format!("{checked} transient jobs healed bit-identically"),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // Every persistent fault exhausts its whole retry budget into
+        // a typed failure whose attempt history is complete and
+        // 1-based.
+        "retry-exhaustion" => {
+            let mut checked = 0usize;
+            let mut bad: Vec<String> = Vec::new();
+            for (i, (p, j)) in
+                o.plan.jobs.iter().zip(&o.jobs).enumerate()
+            {
+                if p.fault != Some(FaultKind::Panic) {
+                    continue;
+                }
+                let budget = p.retry.map_or(1, |r| r.max_attempts);
+                checked += 1;
+                match &j.result {
+                    Err(Error::Job(f))
+                        if f.attempts.len() == budget
+                            && j.attempts == budget
+                            && f.attempts
+                                .iter()
+                                .enumerate()
+                                .all(|(k, a)| a.attempt == k + 1) => {}
+                    r => bad.push(format!(
+                        "job {i}: expected a {budget}-attempt typed \
+                         exhaustion, got {r:?} after {} attempts",
+                        j.attempts
+                    )),
+                }
+            }
+            if checked == 0 {
+                InvariantResult::violated(
+                    inv,
+                    "plan injected no persistent fault".into(),
+                )
+            } else if bad.is_empty() {
+                InvariantResult::ok(
+                    inv,
+                    format!(
+                        "{checked} persistent faults exhausted with \
+                         full attempt histories"
+                    ),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // The runtime cannot see a silent wrong-answer fault — the
+        // job drains "cleanly" — but the workload's own bit-identity
+        // verifier must catch every one.
+        "corruption-detected" => {
+            let mut checked = 0usize;
+            let mut bad: Vec<String> = Vec::new();
+            for (i, (p, j)) in
+                o.plan.jobs.iter().zip(&o.jobs).enumerate()
+            {
+                if !matches!(p.fault, Some(FaultKind::Corrupt { .. })) {
+                    continue;
+                }
+                checked += 1;
+                if j.result != Ok(j.tasks) {
+                    bad.push(format!(
+                        "corrupted job {i} did not drain: {:?}",
+                        j.result
+                    ));
+                } else if j.tamper_detected != Some(true) {
+                    bad.push(format!(
+                        "job {i}: silent corruption escaped the \
+                         verifier"
+                    ));
+                }
+            }
+            if checked == 0 {
+                InvariantResult::violated(
+                    inv,
+                    "plan injected no corruption".into(),
+                )
+            } else if bad.is_empty() {
+                InvariantResult::ok(
+                    inv,
+                    format!("{checked} corruptions caught by verifiers"),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // A deadline below the graph size cancels after *exactly* its
+        // budget (the started-ticket protocol is schedule-
+        // independent); a generous one never truncates.
+        "deadline-cancellation" => {
+            let mut checked = 0usize;
+            let mut bad: Vec<String> = Vec::new();
+            for (i, (p, j)) in
+                o.plan.jobs.iter().zip(&o.jobs).enumerate()
+            {
+                let d = match p.deadline {
+                    Some(d) => d,
+                    None => continue,
+                };
+                checked += 1;
+                if d < j.tasks {
+                    match &j.result {
+                        Err(Error::Cancelled { ran }) if *ran == d => {}
+                        r => bad.push(format!(
+                            "job {i} (deadline {d} of {} tasks): {r:?}",
+                            j.tasks
+                        )),
+                    }
+                } else if j.result != Ok(j.tasks) {
+                    bad.push(format!(
+                        "job {i}: generous deadline {d} still \
+                         truncated: {:?}",
+                        j.result
+                    ));
+                }
+            }
+            if checked == 0 {
+                InvariantResult::violated(
+                    inv,
+                    "plan set no deadlines".into(),
+                )
+            } else if bad.is_empty() {
+                InvariantResult::ok(
+                    inv,
+                    format!("{checked} deadlines fired/held exactly"),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // A cancellation is final: no job that settled as cancelled
+        // consumed more than its original attempt.
+        "no-retry-of-cancelled" => {
+            let mut cancelled = 0usize;
+            let mut bad: Vec<String> = Vec::new();
+            for (i, j) in o.jobs.iter().enumerate() {
+                if matches!(j.result, Err(Error::Cancelled { .. })) {
+                    cancelled += 1;
+                    if j.attempts != 1 {
+                        bad.push(format!(
+                            "cancelled job {i} was attempted {} times",
+                            j.attempts
+                        ));
+                    }
+                }
+            }
+            if bad.is_empty() {
+                InvariantResult::ok(
+                    inv,
+                    format!("{cancelled} cancellations, none retried"),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // Shedding happens at the door or not at all: every rejection
+        // is the typed overload error, and every accepted job drains
+        // its full graph. A serial replay (submit-wait-submit) never
+        // has a backlog to shed, so the pressure requirement only
+        // binds the overlapped replay.
+        "shed-never-drops-admitted" => {
+            let mut shed = 0usize;
+            let mut bad: Vec<String> = Vec::new();
+            for (i, j) in o.jobs.iter().enumerate() {
+                match &j.result {
+                    Ok(executed) if *executed == j.tasks => {}
+                    Ok(executed) => bad.push(format!(
+                        "admitted job {i} drained {executed} of {} \
+                         tasks",
+                        j.tasks
+                    )),
+                    Err(Error::Submit(SubmitError::Overloaded {
+                        ..
+                    })) => shed += 1,
+                    Err(e) => bad.push(format!(
+                        "job {i} failed with a non-shed error: {e}"
+                    )),
+                }
+            }
+            if o.mode == ExecMode::Overlapped && shed == 0 {
+                bad.push(
+                    "the bounded queue never shed (scenario tested \
+                     nothing)"
+                        .into(),
+                );
+            }
+            if bad.is_empty() {
+                InvariantResult::ok(
+                    inv,
+                    format!(
+                        "{shed} typed sheds, every accepted job \
+                         drained in full"
+                    ),
+                )
+            } else {
+                InvariantResult::violated(inv, bad.join("; "))
+            }
+        }
+        // Everything accepted before the drain point settles (drains
+        // in full, or completes as a clean cancellation); everything
+        // after it is rejected with the typed drain error.
+        "drain-completes-all-admitted" => match o.plan.drain_after {
+            None => InvariantResult::violated(
+                inv,
+                "plan declares no drain point".into(),
+            ),
+            Some(cut) => {
+                let mut bad: Vec<String> = Vec::new();
+                for (i, j) in o.jobs.iter().enumerate() {
+                    if i < cut {
+                        match &j.result {
+                            Ok(executed) if *executed == j.tasks => {}
+                            Err(Error::Cancelled { .. })
+                                if j.completion.is_some() => {}
+                            r => bad.push(format!(
+                                "admitted job {i} did not settle: \
+                                 {r:?}"
+                            )),
+                        }
+                    } else {
+                        match &j.result {
+                            Err(Error::Submit(
+                                SubmitError::Draining,
+                            )) => {}
+                            r => bad.push(format!(
+                                "post-drain job {i} was not rejected: \
+                                 {r:?}"
+                            )),
+                        }
+                    }
+                }
+                if bad.is_empty() {
+                    InvariantResult::ok(
+                        inv,
+                        format!(
+                            "{cut} admitted jobs settled, {} post-\
+                             drain submissions rejected",
+                            o.jobs.len() - cut
+                        ),
+                    )
+                } else {
+                    InvariantResult::violated(inv, bad.join("; "))
                 }
             }
         },

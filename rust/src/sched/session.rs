@@ -27,6 +27,34 @@
 //! A handle from a different pool is rejected with
 //! [`Error::CrossPoolDependency`].
 //!
+//! # Recovery (PR 7)
+//!
+//! The session is also the recovery layer:
+//!
+//! * [`JobBuilder::retry`] attaches a [`RetryPolicy`]. The session
+//!   retains a pristine copy of the job's input; when the job is
+//!   *resolved* (through [`Session::wait_all`], [`Session::finish`],
+//!   [`Session::take_output`] or [`Session::resolve_handle`]) and its
+//!   outcome is a poisoning, the session resubmits the cached graph
+//!   over a fresh copy of that input, up to `max_attempts` total
+//!   attempts, sleeping per the policy's backoff in between. A
+//!   transient fault therefore recovers **bit-identically** to a
+//!   clean run; a persistent fault exhausts into [`Error::Job`]
+//!   carrying the full attempt history. A cancelled job
+//!   ([`Error::Cancelled`]) is never retried.
+//! * [`JobBuilder::deadline`] bounds the job to a completed-task
+//!   count (wall-clock-free; see the pool's ticket protocol), and
+//!   [`JobHandle::cancel_token`] cancels cooperatively — both drain
+//!   to the typed [`Error::Cancelled`].
+//! * [`JobBuilder::inject`] wraps the kernel dispatch in a
+//!   [`FaultSet`] ([`super::fault`]), which is how the fault
+//!   scenarios and the `faults` harness experiment make failure a
+//!   deterministic, replayable input.
+//!
+//! Plain [`JobHandle::wait`] reports the job's **first attempt** as
+//! the pool saw it; the session's resolving accessors are what apply
+//! the retry policy.
+//!
 //! For a long-lived request stream, retire jobs as they finish:
 //! [`Session::take_output`] waits for one job, hands its matrix back
 //! and **frees all of the session's per-job state** (the completion
@@ -42,12 +70,19 @@
 //! [`Session::finish`], [`Session::take_output`] or its `Drop`)
 //! before that job's allocations can drop. Graphs are held behind
 //! `Arc` and matrices behind `Box`, so growing or pruning the
-//! session's lists never moves a live job's referents.
+//! session's lists never moves a live job's referents. A retry
+//! resubmission replaces the job's matrix box only after the failed
+//! attempt completed (completion freed its closure), so no borrow of
+//! the old allocation survives the swap.
+//!
+//! [`JobHandle::cancel_token`]: super::pool::JobHandle::cancel_token
+//! [`JobHandle::wait`]: super::pool::JobHandle::wait
 
-use super::error::Error;
+use super::error::{Error, FailedAttempt, JobFailure};
 use super::exec::ExecStats;
+use super::fault::{faulty_kernel_runner, FaultSet, RetryPolicy};
 use super::graph::TaskGraph;
-use super::pool::{JobHandle, JobInner, Pool};
+use super::pool::{JobCtl, JobHandle, JobInner, Pool};
 use super::workload::{kernel_runner, Params, Workload};
 use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
 use std::sync::Arc;
@@ -86,16 +121,38 @@ pub struct JobResult {
     pub stats: ExecStats,
 }
 
+/// Retry state retained for one job: the policy, a pristine copy of
+/// the input to rebuild attempts from, and the attempt history so
+/// far (each failed attempt's coordinates, renumbered 1-based).
+struct RecoveryCtx {
+    policy: RetryPolicy,
+    pristine: BlockedSparseMatrix,
+    history: Vec<FailedAttempt>,
+}
+
 /// Session-owned state of one submitted job.
 struct SessionJob {
     workload: &'static dyn Workload,
     /// Boxed so the erased closure's pointer survives list growth;
     /// consumed by [`Session::take_output`] / [`Session::finish`].
+    /// Replaced (never aliased) on a retry resubmission.
     shared: Box<SharedBlocked>,
     /// Keeps the job's graph alive (shared with the canonical cache,
     /// or this job's own for per-input graphs).
     graph: Arc<TaskGraph>,
+    /// The first attempt's pool-side job — the stable identity every
+    /// [`JobHandle`] for this job carries, and the owner of the
+    /// cancellation flag shared across attempts.
+    origin: Arc<JobInner>,
+    /// The latest attempt's pool-side job (== `origin` until a retry).
     inner: Arc<JobInner>,
+    faults: Option<FaultSet>,
+    deadline: Option<usize>,
+    recovery: Option<RecoveryCtx>,
+    /// Attempts submitted so far (1 = the original submission).
+    attempts: usize,
+    /// The post-recovery outcome, once resolved.
+    resolved: Option<Result<ExecStats, Error>>,
 }
 
 /// Canonical-graph cache key: `(workload, nb, bs)`.
@@ -117,8 +174,10 @@ impl<'p> Session<'p> {
     }
 
     /// Start describing a job. Chain [`JobBuilder::input`],
-    /// [`JobBuilder::canonical_input`], [`JobBuilder::seed`] and
-    /// [`JobBuilder::after`], then [`JobBuilder::submit`].
+    /// [`JobBuilder::canonical_input`], [`JobBuilder::seed`],
+    /// [`JobBuilder::after`], [`JobBuilder::retry`],
+    /// [`JobBuilder::deadline`] and [`JobBuilder::inject`], then
+    /// [`JobBuilder::submit`].
     pub fn job(&mut self, spec: JobSpec) -> JobBuilder<'_, 'p> {
         JobBuilder {
             session: self,
@@ -127,6 +186,9 @@ impl<'p> Session<'p> {
             input: None,
             canonical: true,
             after: Vec::new(),
+            retry: None,
+            faults: None,
+            deadline: None,
         }
     }
 
@@ -164,46 +226,171 @@ impl<'p> Session<'p> {
         self.jobs.is_empty()
     }
 
-    /// Wait for every tracked job; per-job stats in submission order,
-    /// or the first job failure (after all jobs drained — a poisoned
-    /// job never strands its siblings' results).
-    pub fn wait_all(&self) -> Result<Vec<ExecStats>, Error> {
-        let results: Vec<Result<ExecStats, Error>> =
-            self.jobs.iter().map(|j| j.inner.wait_done()).collect();
-        results.into_iter().collect()
+    /// The index of the job `h` names, matching either the original
+    /// attempt (what the handle carries) or the latest retry.
+    fn find(&self, h: &JobHandle) -> Option<usize> {
+        self.jobs.iter().position(|j| {
+            Arc::ptr_eq(&j.origin, h.inner())
+                || Arc::ptr_eq(&j.inner, h.inner())
+        })
     }
 
-    /// Wait for `h`'s job, move its output matrix out of the session
-    /// and **retire the job**: its completion record and (for
-    /// per-input graphs) its graph are freed, so a long-lived session
-    /// serving a stream stays bounded by its in-flight jobs.
-    /// [`Error::UnknownJob`] if the handle does not belong to this
-    /// session or the job was already taken — never a panic, so a
-    /// server loop can treat a stale handle as a client error. A
-    /// poisoned job's (partial) matrix is still returned — the typed
-    /// failure is what [`JobHandle::wait`] reports.
+    /// Resolve job `idx`: wait for its current attempt and run the
+    /// retry policy to completion. Idempotent (the outcome is cached).
+    fn resolve_idx(&mut self, idx: usize) -> Result<ExecStats, Error> {
+        if let Some(r) = &self.jobs[idx].resolved {
+            return r.clone();
+        }
+        let pool = self.pool;
+        let mut result = self.jobs[idx].inner.wait_done();
+        loop {
+            let job = &mut self.jobs[idx];
+            // Only a poisoning is retryable: cancellations are final
+            // by policy, everything else is final by nature.
+            let Err(Error::Job(failure)) = &result else { break };
+            let Some(rec) = &mut job.recovery else { break };
+            for a in &failure.attempts {
+                let mut a = a.clone();
+                a.attempt = rec.history.len() + 1;
+                rec.history.push(a);
+            }
+            if job.attempts >= rec.policy.max_attempts {
+                break;
+            }
+            job.attempts += 1;
+            if let Some(d) = rec.policy.delay_before(job.attempts) {
+                std::thread::sleep(d);
+            }
+            // Rebuild the attempt from pristine input: same graph,
+            // same faults (transient counters are shared through the
+            // FaultSet), same deadline budget, same cancel flag.
+            let bs = rec.pristine.bs();
+            let shared =
+                Box::new(SharedBlocked::new(rec.pristine.deep_clone()));
+            let shared_ptr: *const SharedBlocked = &*shared;
+            let graph_ptr: *const TaskGraph = &*job.graph;
+            let w = job.workload;
+            // SAFETY (lifetime erasure): identical to `submit`'s —
+            // the allocations are owned by this SessionJob, which the
+            // session keeps until the attempt completes.
+            let run: Box<dyn Fn(super::graph::TaskId) + Send + Sync> = unsafe {
+                match &job.faults {
+                    Some(f) => Box::new(faulty_kernel_runner(
+                        &*graph_ptr,
+                        w.kernels(),
+                        &*shared_ptr,
+                        bs,
+                        f.clone(),
+                    )),
+                    None => Box::new(kernel_runner(
+                        &*graph_ptr,
+                        w.kernels(),
+                        &*shared_ptr,
+                        bs,
+                    )),
+                }
+            };
+            let ctl = JobCtl {
+                deadline: job.deadline,
+                cancel: Some(job.origin.cancel_flag()),
+            };
+            // SAFETY: see above — the `submit_erased` borrow contract
+            // is upheld by the session's resolve-before-drop ordering.
+            let submitted = unsafe {
+                pool.submit_erased(graph_ptr, run, Vec::new(), ctl)
+            };
+            match submitted {
+                Ok(inner) => {
+                    // The failed attempt completed (its closure was
+                    // freed), so its matrix box may drop with this
+                    // swap.
+                    job.shared = shared;
+                    job.inner = inner.clone();
+                    result = inner.wait_done();
+                }
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            }
+        }
+        // On exhaustion, surface the *whole* attempt history.
+        let exhausted = matches!(&result, Err(Error::Job(_)))
+            && self.jobs[idx]
+                .recovery
+                .as_ref()
+                .map_or(false, |r| !r.history.is_empty());
+        let final_result = if exhausted {
+            let rec = self.jobs[idx].recovery.as_ref().unwrap();
+            Err(Error::Job(JobFailure {
+                attempts: rec.history.clone(),
+            }))
+        } else {
+            result
+        };
+        self.jobs[idx].resolved = Some(final_result.clone());
+        final_result
+    }
+
+    /// Resolve every tracked job (waiting and applying retry policies)
+    /// and return the per-job outcomes, in submission order. One
+    /// failure never hides a sibling's success — every job is drained
+    /// and reported, matching the scenario engine's per-job
+    /// accounting.
+    pub fn wait_all(&mut self) -> Vec<Result<ExecStats, Error>> {
+        (0..self.jobs.len()).map(|i| self.resolve_idx(i)).collect()
+    }
+
+    /// Resolve the job `h` names (waiting and applying its retry
+    /// policy) and return its outcome. [`Error::UnknownJob`] for a
+    /// handle the session does not track.
+    pub fn resolve_handle(
+        &mut self,
+        h: &JobHandle,
+    ) -> Result<ExecStats, Error> {
+        let idx = self.find(h).ok_or(Error::UnknownJob)?;
+        self.resolve_idx(idx)
+    }
+
+    /// How many attempts the job `h` names has consumed so far
+    /// (1 = the original submission only). `None` for an untracked
+    /// handle.
+    pub fn attempts(&self, h: &JobHandle) -> Option<usize> {
+        self.find(h).map(|i| self.jobs[i].attempts)
+    }
+
+    /// Wait for `h`'s job (running its retry policy to completion),
+    /// move its output matrix out of the session and **retire the
+    /// job**: its completion record and (for per-input graphs) its
+    /// graph are freed, so a long-lived session serving a stream
+    /// stays bounded by its in-flight jobs. [`Error::UnknownJob`] if
+    /// the handle does not belong to this session or the job was
+    /// already taken — never a panic, so a server loop can treat a
+    /// stale handle as a client error. A poisoned or cancelled job's
+    /// (partial) matrix is still returned — the typed failure is what
+    /// [`Session::resolve_handle`] reports.
     pub fn take_output(
         &mut self,
         h: &JobHandle,
     ) -> Result<BlockedSparseMatrix, Error> {
-        let idx = self
-            .jobs
-            .iter()
-            .position(|j| Arc::ptr_eq(&j.inner, h.inner()))
-            .ok_or(Error::UnknownJob)?;
-        // Wait first: completion frees the erased closure, so no
-        // borrow of the graph or the shared cell survives this point
-        // and the whole SessionJob may drop.
-        let _ = self.jobs[idx].inner.wait_done();
+        let idx = self.find(h).ok_or(Error::UnknownJob)?;
+        // Resolve first: completion frees the erased closure (for the
+        // final attempt too), so no borrow of the graph or the shared
+        // cell survives this point and the whole SessionJob may drop.
+        let _ = self.resolve_idx(idx);
         let job = self.jobs.remove(idx);
         Ok(job.shared.into_inner())
     }
 
-    /// Wait for everything and return each (not-yet-taken) job's
+    /// Resolve everything and return each (not-yet-taken) job's
     /// output and stats, in submission order. The first job failure
-    /// is propagated instead (after all jobs drained).
+    /// is propagated instead (after all jobs drained and retried).
     pub fn finish(mut self) -> Result<Vec<JobResult>, Error> {
-        let stats = self.wait_all()?;
+        let outcomes = self.wait_all();
+        let mut stats = Vec::with_capacity(outcomes.len());
+        for o in outcomes {
+            stats.push(o?);
+        }
         let mut out = Vec::with_capacity(self.jobs.len());
         for (job, stats) in self.jobs.drain(..).zip(stats) {
             out.push(JobResult {
@@ -217,9 +404,11 @@ impl<'p> Session<'p> {
 }
 
 impl Drop for Session<'_> {
-    /// The borrow-soundness backstop: every tracked job completes
-    /// (and the pool frees its erased closure) before the session's
-    /// graphs and matrices drop — even on panic or early return.
+    /// The borrow-soundness backstop: every tracked job's current
+    /// attempt completes (and the pool frees its erased closure)
+    /// before the session's graphs and matrices drop — even on panic
+    /// or early return. Unresolved retry policies are *not* run here:
+    /// dropping a session abandons recovery, it never spawns work.
     fn drop(&mut self) {
         for job in &self.jobs {
             let _ = job.inner.wait_done();
@@ -237,6 +426,9 @@ pub struct JobBuilder<'s, 'p> {
     /// shared graph cache applies.
     canonical: bool,
     after: Vec<Arc<JobInner>>,
+    retry: Option<RetryPolicy>,
+    faults: Option<FaultSet>,
+    deadline: Option<usize>,
 }
 
 impl JobBuilder<'_, '_> {
@@ -287,13 +479,47 @@ impl JobBuilder<'_, '_> {
         self
     }
 
+    /// Attach a [`RetryPolicy`]: the session retains a pristine copy
+    /// of the input and resubmits on poisoning when the job is
+    /// resolved (see the module docs). Cancelled jobs are never
+    /// retried.
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
+        self
+    }
+
+    /// Inject deterministic faults into this job's kernel dispatch
+    /// (see [`super::fault`]).
+    pub fn inject(mut self, faults: FaultSet) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Bound the job to at most `tasks` executed kernels: the pool's
+    /// ticket protocol runs exactly `min(tasks, graph len)` of them
+    /// and a truncated job resolves to [`Error::Cancelled`] — a
+    /// wall-clock-free deadline. The budget is per attempt.
+    pub fn deadline(mut self, tasks: usize) -> Self {
+        self.deadline = Some(tasks);
+        self
+    }
+
     /// Submit the job; returns immediately with the pool's
     /// [`JobHandle`] (capacity pressure queues; impossible jobs,
-    /// shutdown, sizing mismatches and cross-pool dependencies are
-    /// typed [`Error`]s).
+    /// shutdown, overload shed, drain, sizing mismatches and
+    /// cross-pool dependencies are typed [`Error`]s).
     pub fn submit(self) -> Result<JobHandle, Error> {
-        let JobBuilder { session, spec, seed, input, canonical, after } =
-            self;
+        let JobBuilder {
+            session,
+            spec,
+            seed,
+            input,
+            canonical,
+            after,
+            retry,
+            faults,
+            deadline,
+        } = self;
         let w = spec.workload;
         let p = spec.params;
         let input = match input {
@@ -319,6 +545,15 @@ impl JobBuilder<'_, '_> {
                 kernels: w.kernels().len(),
             });
         }
+        // A policy allowing retries needs the input retained pristine
+        // to rebuild attempts from.
+        let recovery = retry
+            .filter(|pol| pol.max_attempts > 1)
+            .map(|policy| RecoveryCtx {
+                policy,
+                pristine: input.deep_clone(),
+                history: Vec::new(),
+            });
         let graph_ptr: *const TaskGraph = &*graph;
         let bs = input.bs();
         let shared = Box::new(SharedBlocked::new(input));
@@ -328,22 +563,38 @@ impl JobBuilder<'_, '_> {
         // and the session waits for this job's completion before that
         // entry drops (Drop / finish / take_output all wait) — the
         // `submit_erased` contract.
-        let run: Box<dyn Fn(super::graph::TaskId) + Send + Sync> =
-            unsafe {
-                Box::new(kernel_runner(
+        let run: Box<dyn Fn(super::graph::TaskId) + Send + Sync> = unsafe {
+            match &faults {
+                Some(f) => Box::new(faulty_kernel_runner(
                     &*graph_ptr,
                     w.kernels(),
                     &*shared_ptr,
                     bs,
-                ))
-            };
-        let inner =
-            unsafe { session.pool.submit_erased(graph_ptr, run, after) }?;
+                    f.clone(),
+                )),
+                None => Box::new(kernel_runner(
+                    &*graph_ptr,
+                    w.kernels(),
+                    &*shared_ptr,
+                    bs,
+                )),
+            }
+        };
+        let ctl = JobCtl { deadline, cancel: None };
+        let inner = unsafe {
+            session.pool.submit_erased(graph_ptr, run, after, ctl)
+        }?;
         session.jobs.push(SessionJob {
             workload: w,
             shared,
             graph,
+            origin: inner.clone(),
             inner: inner.clone(),
+            faults,
+            deadline,
+            recovery,
+            attempts: 1,
+            resolved: None,
         });
         Ok(JobHandle::from_inner(inner))
     }
@@ -352,6 +603,7 @@ impl JobBuilder<'_, '_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::fault::{FaultKind, RetryBackoff};
     use crate::sched::workload::{registry, Cholesky, Matmul, Sparselu};
     use crate::sched::SubmitError;
 
@@ -524,6 +776,7 @@ mod tests {
             workers: 2,
             task_capacity: 8,
             max_jobs: 2,
+            max_pending: None,
         });
         let mut s = Session::new(&pool);
         let err = s.job(Sparselu::params(8, 4)).submit().unwrap_err();
@@ -534,6 +787,137 @@ mod tests {
         // Session still usable for jobs that fit (nb=2 → 3 tasks).
         let h = s.job(Sparselu::params(2, 4)).submit().unwrap();
         h.wait().unwrap();
+        drop(s);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn transient_retry_heals_bit_identical() {
+        // fails=2 with 4 attempts allowed: attempts 1–2 poison,
+        // attempt 3 runs clean — and the healed output must be
+        // bit-identical to the sequential reference, because every
+        // attempt restarts from pristine input.
+        let pool = Pool::new(3);
+        let mut s = Session::new(&pool);
+        let h = s
+            .job(Cholesky::params(5, 4))
+            .inject(FaultSet::single(
+                3,
+                FaultKind::TransientPanic { fails: 2 },
+            ))
+            .retry(RetryPolicy::attempts(4))
+            .submit()
+            .unwrap();
+        let stats = s.resolve_handle(&h).unwrap();
+        let g = Cholesky.graph(&Params::new(5, 4));
+        assert_eq!(stats.executed, g.len());
+        assert_eq!(s.attempts(&h), Some(3), "fails+1 attempts consumed");
+        let out = s.take_output(&h).unwrap();
+        let mut want = Cholesky.make_input(&Params::new(5, 4), 0);
+        Cholesky.reference_seq(&mut want);
+        Cholesky.verify_bits(&out, &want).unwrap();
+        drop(s);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn persistent_fault_exhausts_with_attempt_history() {
+        let pool = Pool::new(2);
+        let mut s = Session::new(&pool);
+        let h = s
+            .job(Matmul::params(4, 4))
+            .inject(FaultSet::single(2, FaultKind::Panic))
+            .retry(
+                RetryPolicy::attempts(3).with_backoff(
+                    RetryBackoff::Fixed { millis: 1 },
+                ),
+            )
+            .submit()
+            .unwrap();
+        let err = s.resolve_handle(&h).unwrap_err();
+        let Error::Job(f) = &err else { panic!("{err:?}") };
+        assert_eq!(f.attempts.len(), 3, "history covers every attempt");
+        for (k, a) in f.attempts.iter().enumerate() {
+            assert_eq!(a.attempt, k + 1, "renumbered 1-based");
+            assert_eq!(a.task, 2);
+            assert!(a.msg.contains("injected fault"), "{}", a.msg);
+        }
+        assert!(err.to_string().contains("after 3 attempt(s)"));
+        assert_eq!(s.attempts(&h), Some(3));
+        // Resolution is cached and the partial output still takeable.
+        assert_eq!(s.resolve_handle(&h).unwrap_err(), err);
+        let _partial = s.take_output(&h).unwrap();
+        drop(s);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn deadline_truncates_to_typed_cancellation() {
+        let pool = Pool::new(3);
+        let mut s = Session::new(&pool);
+        let g = Cholesky.graph(&Params::new(5, 4));
+        let h = s
+            .job(Cholesky::params(5, 4))
+            .deadline(2)
+            .submit()
+            .unwrap();
+        let full = s
+            .job(Cholesky::params(5, 4))
+            .deadline(g.len() + 7)
+            .submit()
+            .unwrap();
+        assert_eq!(
+            s.resolve_handle(&h).unwrap_err(),
+            Error::Cancelled { ran: 2 }
+        );
+        assert_eq!(
+            s.resolve_handle(&full).unwrap().executed,
+            g.len(),
+            "a generous deadline never truncates"
+        );
+        drop(s);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn cancelled_jobs_are_never_retried() {
+        // deadline(0) cancels deterministically before any kernel ran;
+        // the retry policy must not resurrect the job.
+        let pool = Pool::new(2);
+        let mut s = Session::new(&pool);
+        let h = s
+            .job(Matmul::params(4, 4))
+            .deadline(0)
+            .retry(RetryPolicy::attempts(5))
+            .submit()
+            .unwrap();
+        assert_eq!(
+            s.resolve_handle(&h).unwrap_err(),
+            Error::Cancelled { ran: 0 }
+        );
+        assert_eq!(s.attempts(&h), Some(1), "cancelled ⇒ no retries");
+        drop(s);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn wait_all_aggregates_instead_of_masking() {
+        // One poisoned job in a batch of three: both siblings' stats
+        // must still be reported.
+        let pool = Pool::new(3);
+        let mut s = Session::new(&pool);
+        let _a = s.job(Cholesky::params(5, 4)).submit().unwrap();
+        let _bad = s
+            .job(Matmul::params(4, 4))
+            .inject(FaultSet::single(0, FaultKind::Panic))
+            .submit()
+            .unwrap();
+        let _c = s.job(Matmul::params(4, 4)).submit().unwrap();
+        let outcomes = s.wait_all();
+        assert_eq!(outcomes.len(), 3);
+        assert!(outcomes[0].is_ok());
+        assert!(matches!(outcomes[1], Err(Error::Job(_))));
+        assert!(outcomes[2].is_ok());
         drop(s);
         pool.shutdown();
     }

@@ -84,6 +84,17 @@ pub struct CostModel {
     /// Client-side cost of one pool submission (admission lock, root
     /// seeding through the injector, worker wakeup).
     pub pool_submit: f64,
+
+    // --- Recovery costs (fault model) --------------------------------
+    /// Session-side cost of one retry resubmission: rebuilding the
+    /// job's working copy from the retained pristine input (a
+    /// deep-clone walk) plus the renewed admission pass. Paid once
+    /// per retry attempt on top of the re-executed work.
+    pub retry_resubmit: f64,
+    /// Per-task cost of the cooperative cancellation/deadline guard
+    /// on the worker hot path (one flag load + one counter
+    /// fetch-add on owned cache lines).
+    pub cancel_check: f64,
 }
 
 impl Default for CostModel {
@@ -108,6 +119,8 @@ impl Default for CostModel {
             steal_cost: 220.0,
             thread_spawn: 45_000.0,
             pool_submit: 500.0,
+            retry_resubmit: 650.0,
+            cancel_check: 2.0,
         }
     }
 }
@@ -183,6 +196,13 @@ mod tests {
         let c = CostModel::default();
         assert!(c.thread_spawn > 50.0 * c.pool_submit);
         assert!(c.pool_submit > c.steal_cost);
+        // A retry resubmission is a submission plus an input rebuild —
+        // dearer than a plain submit, vastly cheaper than respawning
+        // a team. The per-task cancel guard must stay noise-level
+        // next to even the cheapest deque op.
+        assert!(c.retry_resubmit > c.pool_submit);
+        assert!(c.thread_spawn > 20.0 * c.retry_resubmit);
+        assert!(c.cancel_check * 10.0 < c.steal_deque_op);
     }
 
     #[test]

@@ -49,7 +49,9 @@ pub mod workload;
 
 pub use cost::CostModel;
 pub use mesh::Mesh;
-pub use sim_dataflow::{DataflowSim, LaunchModel, SchedModel, SimJob};
+pub use sim_dataflow::{
+    DataflowSim, LaunchModel, RecoveryReport, SchedModel, SimJob,
+};
 pub use sim_gprm::{GprmAssign, GprmSim};
 pub use sim_omp::{OmpSim, OmpStrategy};
 pub use workload::{Phase, SimTask, Workload};

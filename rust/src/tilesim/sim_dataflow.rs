@@ -381,6 +381,86 @@ impl DataflowSim {
         let cycles = makespan.max(self.cost.mem_floor(total_bytes));
         SimReport { cycles, tasks: fired, busy, lock_wait, producer: 0 }
     }
+
+    /// Virtual-time cost of running `jobs` under a recovery regime:
+    /// the clean stream (exactly [`DataflowSim::run_jobs`] — the base
+    /// formulas are untouched) plus what the fault layer adds on top.
+    ///
+    /// `retries[j]` is the number of *failed attempts* job `j`
+    /// repeats; each one re-executes the whole job from its retained
+    /// pristine input (the session's deterministic resubmission) and
+    /// pays one [`CostModel::retry_resubmit`] on top of the launch
+    /// model's own resubmission cost (a pool submit, or a fresh
+    /// one-shot team spawn). `guarded` charges the cooperative
+    /// cancellation/deadline guard ([`CostModel::cancel_check`]) on
+    /// every executed task, including the re-executed ones — the
+    /// always-on price of making jobs cancellable.
+    pub fn run_jobs_recovering(
+        &self,
+        jobs: &[SimJob],
+        launch: LaunchModel,
+        retries: &[usize],
+        guarded: bool,
+    ) -> RecoveryReport {
+        assert_eq!(jobs.len(), retries.len(), "one retry count per job");
+        let base = self.run_jobs(jobs, launch);
+        let resubmit = self.cost.retry_resubmit as u64
+            + match launch {
+                LaunchModel::PersistentPool => self.cost.pool_submit as u64,
+                LaunchModel::OneShotPerJob => {
+                    (self.n_tiles as f64 * self.cost.thread_spawn) as u64
+                }
+            };
+        let mut retry_cycles = 0u64;
+        let mut retried_tasks = 0u64;
+        let mut total_retries = 0u64;
+        for (job, &r) in jobs.iter().zip(retries) {
+            if r == 0 {
+                continue;
+            }
+            let solo = self.run_graph(job.workload, job.graph, job.bs);
+            retry_cycles += r as u64 * (solo.cycles + resubmit);
+            retried_tasks += r as u64 * job.graph.len() as u64;
+            total_retries += r as u64;
+        }
+        let guard_cycles = if guarded {
+            ((base.tasks + retried_tasks) as f64 * self.cost.cancel_check)
+                as u64
+        } else {
+            0
+        };
+        RecoveryReport {
+            cycles: base.cycles + retry_cycles + guard_cycles,
+            retry_cycles,
+            guard_cycles,
+            retries: total_retries,
+            base,
+        }
+    }
+}
+
+/// What a fault/recovery regime adds on top of a clean job stream
+/// (see [`DataflowSim::run_jobs_recovering`]).
+pub struct RecoveryReport {
+    /// End-to-end cycles: `base.cycles + retry_cycles + guard_cycles`.
+    pub cycles: u64,
+    /// Cycles spent re-executing failed attempts and resubmitting
+    /// them.
+    pub retry_cycles: u64,
+    /// Cycles spent on the per-task cancellation/deadline guard.
+    pub guard_cycles: u64,
+    /// Total failed attempts replayed across the stream.
+    pub retries: u64,
+    /// The clean stream's report ([`DataflowSim::run_jobs`]).
+    pub base: SimReport,
+}
+
+impl RecoveryReport {
+    /// Recovery overhead as a fraction of the clean stream
+    /// (`0.0` = free).
+    pub fn overhead(&self) -> f64 {
+        (self.cycles as f64 / self.base.cycles as f64) - 1.0
+    }
 }
 
 #[cfg(test)]
@@ -732,6 +812,75 @@ mod tests {
             per_task_gap * steal.tasks,
             "single-tile gap must be exactly the claim-cost delta"
         );
+    }
+
+    #[test]
+    fn recovery_model_is_additive_over_the_clean_stream() {
+        // Zero retries, unguarded: bit-equal to run_jobs — the fault
+        // model must never perturb the calibrated base formulas.
+        let (lu, ch) = mixed_stream(12);
+        let jobs = as_jobs(&lu, &ch, 8, 4);
+        let sim = DataflowSim::tilepro(4);
+        for launch in [LaunchModel::PersistentPool, LaunchModel::OneShotPerJob]
+        {
+            let clean = sim.run_jobs(&jobs, launch);
+            let r = sim.run_jobs_recovering(&jobs, launch, &[0; 4], false);
+            assert_eq!(r.cycles, clean.cycles);
+            assert_eq!(r.base.tasks, clean.tasks);
+            assert_eq!((r.retry_cycles, r.guard_cycles, r.retries), (0, 0, 0));
+            assert_eq!(r.overhead(), 0.0);
+        }
+    }
+
+    #[test]
+    fn one_retry_costs_one_solo_run_plus_resubmission() {
+        let (lu, ch) = mixed_stream(12);
+        let jobs = as_jobs(&lu, &ch, 8, 4);
+        let sim = DataflowSim::tilepro(4);
+        let cost = CostModel::default();
+        let solo2 = sim.run_graph(jobs[2].workload, jobs[2].graph, 8);
+        let pool = sim.run_jobs_recovering(
+            &jobs,
+            LaunchModel::PersistentPool,
+            &[0, 0, 1, 0],
+            false,
+        );
+        assert_eq!(
+            pool.retry_cycles,
+            solo2.cycles
+                + (cost.retry_resubmit + cost.pool_submit) as u64
+        );
+        assert_eq!(pool.retries, 1);
+        // One-shot recovery respawns a whole team per retry, so the
+        // same fault costs strictly more there.
+        let oneshot = sim.run_jobs_recovering(
+            &jobs,
+            LaunchModel::OneShotPerJob,
+            &[0, 0, 1, 0],
+            false,
+        );
+        assert!(oneshot.retry_cycles > pool.retry_cycles);
+    }
+
+    #[test]
+    fn guard_charges_every_executed_task() {
+        let (lu, ch) = mixed_stream(12);
+        let jobs = as_jobs(&lu, &ch, 8, 4);
+        let sim = DataflowSim::tilepro(4);
+        let cost = CostModel::default();
+        let r = sim.run_jobs_recovering(
+            &jobs,
+            LaunchModel::PersistentPool,
+            &[1, 0, 0, 0],
+            true,
+        );
+        let tasks = r.base.tasks + jobs[0].graph.len() as u64;
+        assert_eq!(
+            r.guard_cycles,
+            (tasks as f64 * cost.cancel_check) as u64
+        );
+        assert!(r.overhead() > 0.0);
+        assert_eq!(r.cycles, r.base.cycles + r.retry_cycles + r.guard_cycles);
     }
 
     #[test]

@@ -118,6 +118,7 @@ fn stress_concurrent_mixed_jobs_bit_identical() {
                 workers,
                 task_capacity: cap,
                 max_jobs: 8,
+                max_pending: None,
             });
             let mut jobs: Vec<PoolJob> = mats
                 .iter_mut()
@@ -252,6 +253,7 @@ fn fifo_admission_order_under_capacity_churn() {
                 workers,
                 task_capacity: cap,
                 max_jobs: 3,
+                max_pending: None,
             });
             let n_jobs = 8usize;
             let mut rng = SplitMix64::new(seed as u64 ^ 0xD1CE);
