@@ -1,0 +1,200 @@
+//! Bench: the microkernel layer — per-op kernel GFLOP/s, scalar vs
+//! packed/SIMD vs SIMD+fast, per candidate block size, for every
+//! vectorised op in the registry vocabulary (`bmod`, `gemm`, `syrk`,
+//! `trsm`, `madd`).
+//!
+//! Two row families are appended to `BENCH_sched.json`:
+//!
+//! * `"source": "kernel"` — the TILEPro64 cycle model
+//!   ([`CostModel::kernel_scalar`] / [`CostModel::kernel_simd`]):
+//!   deterministic, machine-independent; these are the committed
+//!   baseline rows.
+//! * `"source": "kernel-host"` — this machine's wall clock through
+//!   each workload's [`Workload::kernels_for`] table (bit-identical
+//!   and fast modes; the `exec` field records the dispatched SIMD
+//!   level). Build with `--features simd` to exercise the vector
+//!   paths.
+//!
+//! Acceptance gate: the model must never price the packed/SIMD path
+//! slower than scalar at bs >= 8 (exit 1 otherwise).
+//!
+//! `cargo bench --bench kernels` (optionally `--features simd`)
+
+use gprm::linalg::autotune::{is_vectorised, CANDIDATE_BS};
+use gprm::linalg::dense::DenseMatrix;
+use gprm::linalg::microkernel::{simd_level, KernelMode};
+use gprm::sched::workload::{registry, Params, Workload};
+use gprm::tilesim::CostModel;
+use std::io::Write as _;
+
+struct Row {
+    workload: String,
+    source: &'static str,
+    exec: String,
+    secs: f64,
+    calls_per_sec: f64,
+    gflops: f64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            "{{\"workload\": \"{}\", \"source\": \"{}\", \
+             \"workers\": 1, \"exec\": \"{}\", \"secs\": {:.9}, \
+             \"tasks_per_sec\": {:.0}, \"gflops\": {:.3}}}",
+            self.workload, self.source, self.exec, self.secs,
+            self.calls_per_sec, self.gflops
+        )
+    }
+}
+
+/// The vectorised ops, deduped across the registry, with their
+/// declaring workload, op index and read arity (from a small canonical
+/// graph — the kernel table wants the right number of read blocks).
+fn vectorised_ops(
+) -> Vec<(&'static dyn Workload, usize, &'static str, usize)> {
+    let mut out: Vec<(&'static dyn Workload, usize, &'static str, usize)> =
+        Vec::new();
+    for w in registry() {
+        let g = w.graph(&Params::new(4, 8));
+        let mut arity = vec![0usize; w.ops().len()];
+        for t in g.tasks() {
+            arity[t.op.0] = t.reads().len();
+        }
+        for (i, op) in w.ops().iter().enumerate() {
+            if is_vectorised(op.name)
+                && !out.iter().any(|&(_, _, n, _)| n == op.name)
+            {
+                out.push((*w, i, op.name, arity[i]));
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let cost = CostModel::default();
+    let hz = cost.clock_hz;
+    let mut rows: Vec<Row> = Vec::new();
+    let mut failed = false;
+
+    println!("== kernel cycle model (virtual time @866 MHz) ==");
+    for (w, i, name, _arity) in vectorised_ops() {
+        for &bs in &CANDIDATE_BS {
+            let flops = (w.ops()[i].flops)(bs);
+            for (exec, cycles) in [
+                ("kernel-scalar", cost.kernel_scalar(flops, bs)),
+                ("kernel-simd", cost.kernel_simd(flops, bs, false)),
+                ("kernel-simd-fast", cost.kernel_simd(flops, bs, true)),
+            ] {
+                let secs = cycles / hz;
+                let row = Row {
+                    workload: format!("{name} BS={bs}"),
+                    source: "kernel",
+                    exec: exec.to_string(),
+                    secs,
+                    calls_per_sec: 1.0 / secs,
+                    gflops: flops as f64 / secs / 1e9,
+                };
+                println!(
+                    "  {name:>4} bs={bs:>2} {exec:>16}: {cycles:>8.0} cy  {:>7.3} GFLOP/s",
+                    row.gflops
+                );
+                rows.push(row);
+            }
+            if bs >= 8 {
+                let simd = cost.kernel_simd(flops, bs, false);
+                let scalar = cost.kernel_scalar(flops, bs);
+                if simd > scalar {
+                    eprintln!(
+                        "FAIL: {name} bs={bs}: simd {simd:.0} cy > scalar {scalar:.0} cy"
+                    );
+                    failed = true;
+                }
+            }
+        }
+    }
+
+    // Host wall-clock through the dispatched kernel tables (best of
+    // SAMPLES batches; the per-call cost is sub-microsecond, so each
+    // sample times a batch of calls).
+    const SAMPLES: usize = 5;
+    const BATCH: usize = 200;
+    println!(
+        "== host wall-clock (dispatch level: {}) ==",
+        simd_level().name()
+    );
+    for (w, i, name, arity) in vectorised_ops() {
+        for &bs in &CANDIDATE_BS {
+            let flops = (w.ops()[i].flops)(bs);
+            let srcs: Vec<Vec<f32>> = (0..2)
+                .map(|s| {
+                    DenseMatrix::bots_random(bs, bs, 81 + s)
+                        .as_slice()
+                        .to_vec()
+                })
+                .collect();
+            let reads: Vec<&[f32]> =
+                srcs[..arity].iter().map(|b| b.as_slice()).collect();
+            for (mode, label) in [
+                (KernelMode::BitIdentical, "bit"),
+                (KernelMode::Fast, "fast"),
+            ] {
+                let kernel = w.kernels_for(mode)[i];
+                let mut write = DenseMatrix::bots_random(bs, bs, 83)
+                    .as_slice()
+                    .to_vec();
+                kernel(&reads, &mut write, bs); // warmup
+                let mut best = f64::MAX;
+                for _ in 0..SAMPLES {
+                    let t0 = std::time::Instant::now();
+                    for _ in 0..BATCH {
+                        kernel(&reads, &mut write, bs);
+                    }
+                    best = best
+                        .min(t0.elapsed().as_secs_f64() / BATCH as f64);
+                }
+                gprm::bench::black_box(&write);
+                let row = Row {
+                    workload: format!("{name} BS={bs}"),
+                    source: "kernel-host",
+                    exec: format!("{label}-{}", simd_level().name()),
+                    secs: best,
+                    calls_per_sec: 1.0 / best,
+                    gflops: flops as f64 / best / 1e9,
+                };
+                println!(
+                    "  {name:>4} bs={bs:>2} {:>12}: {:>9.1} ns/call  {:>7.3} GFLOP/s",
+                    row.exec,
+                    best * 1e9,
+                    row.gflops
+                );
+                rows.push(row);
+            }
+        }
+    }
+
+    // Append to the repo-root BENCH_sched.json (JSON lines), anchored
+    // via the manifest dir — `cargo bench` runs with cwd = rust/.
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = manifest
+        .parent()
+        .unwrap_or(manifest)
+        .join("BENCH_sched.json");
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            for r in &rows {
+                let _ = writeln!(f, "{}", r.json());
+            }
+            println!("\nappended {} rows to {path:?}", rows.len());
+        }
+        Err(e) => eprintln!("cannot write {path:?}: {e}"),
+    }
+    if failed {
+        eprintln!(
+            "kernels bench FAILED: packed/SIMD modelled slower than \
+             scalar at bs >= 8"
+        );
+        std::process::exit(1);
+    }
+}

@@ -47,16 +47,6 @@ impl Row {
     }
 }
 
-/// Total useful flops of a graph, priced through its own op table —
-/// workload-agnostic.
-fn graph_flops(graph: &TaskGraph, bs: usize) -> u64 {
-    graph
-        .tasks()
-        .iter()
-        .map(|t| (graph.ops()[t.op.0].flops)(bs))
-        .sum()
-}
-
 /// Race mutex vs steal for one registry entry: tilesim model rows +
 /// host wall-clock rows (whole dataflow runs on fresh clones of the
 /// declaration's canonical input; cloning is excluded from the timed
@@ -71,7 +61,7 @@ fn bench_workload(
 ) -> bool {
     let workload = w.name();
     let n_tasks = graph.len();
-    let total_flops = graph_flops(graph, BS);
+    let total_flops = w.graph_flops(graph, BS);
     println!(
         "\n### {workload} NB={NB} BS={BS} — {n_tasks} tasks, {:.3} GFLOP",
         total_flops as f64 / 1e9

@@ -39,6 +39,7 @@
 
 use crate::coordinator::GprmRuntime;
 use crate::linalg::blocked::{BlockedSparseMatrix, SharedBlocked};
+use crate::linalg::microkernel::KernelMode;
 use crate::omp::OmpRuntime;
 use crate::sched::workload::{kernel_runner, Workload};
 use crate::sched::{
@@ -147,8 +148,26 @@ pub fn run_workload(
     a: &mut BlockedSparseMatrix,
     exec: ExecOpts,
 ) -> Result<ExecStats, Error> {
+    run_workload_mode(rt, w, a, exec, KernelMode::BitIdentical)
+}
+
+/// [`run_workload`] with an explicit kernel precision policy: the
+/// workload's [`Workload::kernels_for`] table for `mode` replaces the
+/// plain table. `BitIdentical` (what [`run_workload`] always passes —
+/// the conformance default) routes the update kernels through the
+/// microkernel layer's bit-identical paths, which produce the same
+/// f32 bits as the reference table on every build; `Fast` trades bit
+/// equality for the residual-bounded vectorised accumulation order
+/// (see DIVERGENCES.md).
+pub fn run_workload_mode(
+    rt: &DataflowRt,
+    w: &dyn Workload,
+    a: &mut BlockedSparseMatrix,
+    exec: ExecOpts,
+    mode: KernelMode,
+) -> Result<ExecStats, Error> {
     let graph = w.graph_for(a);
-    run_dataflow(rt, a, &graph, w.kernels(), exec)
+    run_dataflow(rt, a, &graph, w.kernels_for(mode), exec)
 }
 
 /// One job of a [`run_dataflow_batch`] stream: the matrix to

@@ -12,9 +12,11 @@
 //! * [`tilesim`] — a TILEPro64-like discrete-event many-core simulator
 //!   used as the measurement substrate (see DESIGN.md §2).
 //! * [`linalg`] — dense / blocked-sparse matrices, the BOTS SparseLU
-//!   generator, the lu0/fwd/bdiv/bmod block kernels, and the tiled
+//!   generator, the lu0/fwd/bdiv/bmod block kernels, the tiled
 //!   Cholesky substrate (potrf/trsm/syrk/gemm kernels, SPD generator,
-//!   sequential reference).
+//!   sequential reference), the packed/SIMD microkernel layer
+//!   ([`linalg::microkernel`]) and the startup block-size autotuner
+//!   ([`linalg::autotune`]) — see "Microkernel layer" below.
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   block kernels in `artifacts/`.
 //! * [`sched`] — the **kernel-agnostic** dataflow (DAG) engine: a
@@ -228,6 +230,36 @@
 //! model ([`tilesim::DataflowSim::run_jobs_recovering`]: fault rate ×
 //! launch model, priced by [`tilesim::CostModel`]'s
 //! `retry_resubmit`/`cancel_check`).
+//!
+//! # Microkernel layer
+//!
+//! The update kernels (`bmod`/`gemm`/`syrk`/`trsm`/`madd`) have
+//! packed, register-blocked variants in [`linalg::microkernel`]:
+//! tiles are copied into contiguous panel storage
+//! ([`linalg::microkernel::PackedTile`], transposed for the
+//! `k`-indexed operand so every inner loop is unit-stride), and the
+//! row-update helpers (`axpy`-style) carry the only `std::arch`
+//! intrinsics in the crate — SSE2/AVX bodies behind the **`simd`**
+//! cargo feature, selected by runtime CPU detection
+//! ([`linalg::microkernel::simd_level`]), with an always-available
+//! scalar fallback. The precision policy is explicit
+//! ([`linalg::microkernel::KernelMode`]):
+//!
+//! | mode | accumulation order | contract | default |
+//! |------|--------------------|----------|---------|
+//! | `BitIdentical` | the reference kernels' exact per-element order (packed or not, vectorised or not) | same f32 bits as [`sched::workload::Workload::kernels`] on every build and SIMD level; the conformance suites compare with `==` | **yes** — everywhere |
+//! | `Fast` | two-term paired accumulators (`x − (a₀b₀ + a₁b₁)`) | relative residual ≤ 1e-5 per kernel vs the bit path; end-to-end runs verified by the workload residual | opt-in: CLI `--kernels fast` (dataflow runtimes only) |
+//!
+//! Bit-identical stays the conformance default for every registered
+//! workload; `Fast` is a documented divergence (DIVERGENCES.md). The
+//! startup autotuner ([`linalg::autotune`]) sweeps candidate block
+//! sizes per registry workload — model calibration on the
+//! [`tilesim::CostModel`] kernel pricing
+//! (`kernel_scalar`/`kernel_simd`: lane throughput, pack overhead,
+//! L1-spill penalty) or a short host calibration — and caches each
+//! winner via [`sched::workload::set_tuned_bs`] (CLI
+//! `--autotune on`, harness `gprm exp kernels`,
+//! `benches/kernels.rs`).
 // CI enforces `cargo clippy -- -D warnings`; these style lints are
 // opted out crate-wide because they fight the paper-faithful shapes:
 // index-heavy numeric kernels (the explicit loop bounds document the

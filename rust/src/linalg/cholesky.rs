@@ -14,6 +14,11 @@
 //! * `syrk(panel, diag)`  — `diag ← diag − panel·panelᵀ` (symmetric
 //!   rank-bs update of a trailing diagonal block, lower part only).
 //! * `gemm_nt(a, b, c)`   — `c ← c − a·bᵀ` (general trailing update).
+//!
+//! These are the *reference* bodies — the bit-identity baseline every
+//! schedule is compared against. Packed/SIMD variants of the update
+//! kernels (`trsm`/`syrk`/`gemm_nt`) live in [`super::microkernel`]
+//! and are bit-identical to these loops in their default mode.
 
 use super::blocked::BlockedSparseMatrix;
 use super::dense::DenseMatrix;

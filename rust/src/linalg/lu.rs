@@ -327,6 +327,46 @@ mod tests {
     }
 
     #[test]
+    fn bmod_remainder_path_bit_identical_to_naive_triple_loop() {
+        // Property test over bs in 1..=9 — five of which have
+        // bs % 4 != 0, exercising the `chunks_exact` remainder path.
+        // The 4-wide unroll runs across *distinct* elements, so every
+        // element must accumulate its k-products in exactly the naive
+        // ijk order: f32 bit-identity, not approximate equality.
+        // Exact zeros are planted in `row` to also pin the `rik == 0`
+        // skip as a no-op (skipping `x -= 0.0 * c` can only flip
+        // signed zeros, which the generated inputs don't produce).
+        for bs in 1..=9usize {
+            let row_m = DenseMatrix::bots_random(bs, bs, 31);
+            let col_m = DenseMatrix::bots_random(bs, bs, 32);
+            let mut row = row_m.as_slice().to_vec();
+            let col = col_m.as_slice().to_vec();
+            if bs >= 3 {
+                row[1] = 0.0;
+                row[(bs - 1) * bs] = 0.0;
+            }
+            let inner0 = DenseMatrix::bots_random(bs, bs, 33)
+                .as_slice()
+                .to_vec();
+
+            let mut got = inner0.clone();
+            bmod(&row, &col, &mut got, bs);
+
+            let mut want = inner0.clone();
+            for i in 0..bs {
+                for j in 0..bs {
+                    let mut acc = want[i * bs + j];
+                    for k in 0..bs {
+                        acc -= row[i * bs + k] * col[k * bs + j];
+                    }
+                    want[i * bs + j] = acc;
+                }
+            }
+            assert_eq!(got, want, "bmod vs naive ijk at bs={bs}");
+        }
+    }
+
+    #[test]
     fn bmod_is_gemm_subtract() {
         let bs = 6;
         let a = DenseMatrix::bots_random(bs, bs, 1);

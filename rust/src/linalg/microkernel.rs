@@ -1,0 +1,1087 @@
+//! SIMD microkernel layer: packed, register-blocked f32 inner kernels
+//! for the block-update operations (`bmod`, `gemm_nt`, `syrk`, `trsm`,
+//! `madd`), with explicit precision policy and runtime CPU dispatch.
+//!
+//! # Why a layer, not a rewrite
+//!
+//! The factorisation kernels in [`super::lu`] / [`super::cholesky`]
+//! are the *reference semantics*: every scheduler claim in this repo
+//! rests on parallel results being **bit-identical (f32)** to those
+//! sequential loops. This module adds faster bodies for the hot
+//! *update* kernels only — the rank-`bs` GEMM-like operations that
+//! dominate flop counts — and leaves the recurrence kernels (`lu0`,
+//! `potrf`, `fwd`, `bdiv`) on their scalar reference: their pivot /
+//! square-root dependences and zero-skip short-circuits gain little
+//! from lanes and are where bit drift would be hardest to reason
+//! about.
+//!
+//! # Precision policy
+//!
+//! | mode | accumulation order | verified by | default? |
+//! |------|--------------------|-------------|----------|
+//! | [`KernelMode::BitIdentical`] | reference order, lanes across independent elements | `==` on f32 bits vs the scalar reference | **yes** (conformance) |
+//! | [`KernelMode::Fast`] | `k` processed in pairs (two-term sums), zero-skips dropped | relative residual `<= 1e-5` vs the reference | opt-in (`--kernels fast`) |
+//!
+//! The bit-identical vector paths work because each SIMD lane performs
+//! exactly the scalar per-element operation sequence: a lane computes
+//! `d - s·x` (one rounding per op, no FMA), and vectorisation runs
+//! across *independent* output elements — `j` columns of an update
+//! row, or independent rows of a triangular solve — never across the
+//! `k`-reduction, whose f32 addition order is the contract. Where the
+//! reference strides non-unit (`b[j,k]` in `gemm_nt`, `diag` columns
+//! in `trsm`), the operand is transpose-packed into a [`PackedTile`]
+//! first; an f32 store/reload is exact, so packing never perturbs a
+//! result. `Fast` instead restructures the reduction itself
+//! (`x−(a+b)` vs `((x−a)−b)`) for instruction-level parallelism; it
+//! also drops `bmod`'s `rik == 0` skip, which can flip a `-0.0` to
+//! `+0.0` — hence residual-bounded, never bit-compared (see
+//! DIVERGENCES.md).
+//!
+//! # Dispatch
+//!
+//! [`simd_level`] detects SSE2/AVX once at startup (cached) when the
+//! crate is built with `--features simd` on x86-64; every other build
+//! reports [`SimdLevel::Scalar`]. In a scalar build the
+//! `BitIdentical` entry points call the original reference kernels
+//! *verbatim*, so the default build's behaviour is byte-for-byte the
+//! pre-microkernel code path. Block-size autotuning on top of these
+//! kernels lives in [`super::autotune`].
+
+use super::cholesky::{gemm_nt, syrk, trsm};
+use super::lu::bmod;
+
+/// Precision policy for kernel dispatch (see the module docs' table).
+/// `BitIdentical` is the conformance default everywhere.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum KernelMode {
+    /// Reference accumulation order; results are f32-bit-equal to the
+    /// sequential reference kernels on every build and SIMD level.
+    #[default]
+    BitIdentical,
+    /// Paired-`k` (two-term) accumulation, zero-skips dropped:
+    /// faster reduction with more ILP, verified by residual bound
+    /// (`<= 1e-5` relative) instead of bit equality.
+    Fast,
+}
+
+impl KernelMode {
+    /// CLI value (`--kernels bit|fast`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "bit" => Some(KernelMode::BitIdentical),
+            "fast" => Some(KernelMode::Fast),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelMode::BitIdentical => "bit",
+            KernelMode::Fast => "fast",
+        }
+    }
+}
+
+/// Vector instruction set selected at runtime. Non-x86-64 targets and
+/// builds without `--features simd` always run `Scalar`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdLevel {
+    Scalar,
+    Sse2,
+    Avx,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx => "avx",
+        }
+    }
+}
+
+/// Runtime CPU detection, cached after the first call.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub fn simd_level() -> SimdLevel {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static LEVEL: AtomicU8 = AtomicU8::new(0); // 0 = undetected
+    match LEVEL.load(Ordering::Relaxed) {
+        1 => SimdLevel::Scalar,
+        2 => SimdLevel::Sse2,
+        3 => SimdLevel::Avx,
+        _ => {
+            let (l, tag) = if is_x86_feature_detected!("avx") {
+                (SimdLevel::Avx, 3)
+            } else if is_x86_feature_detected!("sse2") {
+                (SimdLevel::Sse2, 2)
+            } else {
+                (SimdLevel::Scalar, 1)
+            };
+            LEVEL.store(tag, Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+/// Runtime CPU detection: always `Scalar` without the `simd` feature
+/// (or off x86-64), so the default build never touches `std::arch`.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+pub fn simd_level() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+// ---------------------------------------------------------------------
+// Packed tile storage
+// ---------------------------------------------------------------------
+
+/// A `bs×bs` tile copied into contiguous, unit-stride panel storage.
+///
+/// [`PackedTile::pack`] preserves row-major layout (a row panel);
+/// [`PackedTile::pack_transposed`] stores the transpose, turning a
+/// column access pattern (`src[j·bs + k]` over `j`) into a unit-stride
+/// row sweep (`row(k)[j]`) the vector helpers can stream. Packing is
+/// a pure f32 copy — store/reload is exact — so packed kernels stay
+/// bit-identical to their unpacked reference.
+#[derive(Clone, Debug)]
+pub struct PackedTile {
+    data: Vec<f32>,
+    bs: usize,
+}
+
+impl PackedTile {
+    /// Pack row-major (identity layout; contiguous panel copy).
+    pub fn pack(src: &[f32], bs: usize) -> Self {
+        debug_assert_eq!(src.len(), bs * bs);
+        Self { data: src.to_vec(), bs }
+    }
+
+    /// Pack the transpose: `packed[k·bs + j] = src[j·bs + k]`.
+    pub fn pack_transposed(src: &[f32], bs: usize) -> Self {
+        debug_assert_eq!(src.len(), bs * bs);
+        let mut data = vec![0.0f32; bs * bs];
+        for j in 0..bs {
+            for k in 0..bs {
+                data[k * bs + j] = src[j * bs + k];
+            }
+        }
+        Self { data, bs }
+    }
+
+    pub fn bs(&self) -> usize {
+        self.bs
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// One packed panel row (unit stride).
+    pub fn row(&self, k: usize) -> &[f32] {
+        &self.data[k * self.bs..(k + 1) * self.bs]
+    }
+
+    pub fn row_mut(&mut self, k: usize) -> &mut [f32] {
+        &mut self.data[k * self.bs..(k + 1) * self.bs]
+    }
+
+    /// Split-borrow row `w` mutably together with an earlier row
+    /// `r < w` immutably (the triangular-solve sweep's access shape).
+    pub fn row_pair_mut(
+        &mut self,
+        w: usize,
+        r: usize,
+    ) -> (&mut [f32], &[f32]) {
+        debug_assert!(r < w, "read row must precede the written row");
+        let bs = self.bs;
+        let (lo, hi) = self.data.split_at_mut(w * bs);
+        (&mut hi[..bs], &lo[r * bs..(r + 1) * bs])
+    }
+
+    /// Undo [`PackedTile::pack`]: copy back row-major.
+    pub fn unpack_into(&self, dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), self.bs * self.bs);
+        dst.copy_from_slice(&self.data);
+    }
+
+    /// Undo [`PackedTile::pack_transposed`]:
+    /// `dst[j·bs + k] = packed[k·bs + j]`.
+    pub fn unpack_transposed_into(&self, dst: &mut [f32]) {
+        let bs = self.bs;
+        debug_assert_eq!(dst.len(), bs * bs);
+        for k in 0..bs {
+            for j in 0..bs {
+                dst[j * bs + k] = self.data[k * bs + j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Vector helpers: the entire intrinsic surface of the crate
+// ---------------------------------------------------------------------
+//
+// Three operations (and their two-term "fast" forms), each with a
+// scalar body, an SSE2 body and an AVX body. Every lane computes the
+// exact scalar per-element sequence — mul then sub/add (no FMA), or
+// mul+mul+add then sub/add for the paired forms — so a vector call is
+// bit-equal to its scalar body on the same inputs, in either mode.
+
+#[inline]
+fn axpy_sub_scalar(dst: &mut [f32], src: &[f32], s: f32) {
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d -= s * x;
+    }
+}
+
+#[inline]
+fn axpy_add_scalar(dst: &mut [f32], src: &[f32], s: f32) {
+    for (d, &x) in dst.iter_mut().zip(src) {
+        *d += s * x;
+    }
+}
+
+#[inline]
+fn axpy2_sub_scalar(
+    dst: &mut [f32],
+    s0: f32,
+    x0: &[f32],
+    s1: f32,
+    x1: &[f32],
+) {
+    for ((d, &a), &b) in dst.iter_mut().zip(x0).zip(x1) {
+        *d -= s0 * a + s1 * b;
+    }
+}
+
+#[inline]
+fn axpy2_add_scalar(
+    dst: &mut [f32],
+    s0: f32,
+    x0: &[f32],
+    s1: f32,
+    x1: &[f32],
+) {
+    for ((d, &a), &b) in dst.iter_mut().zip(x0).zip(x1) {
+        *d += s0 * a + s1 * b;
+    }
+}
+
+#[inline]
+fn div_by_scalar(dst: &mut [f32], s: f32) {
+    for d in dst.iter_mut() {
+        *d /= s;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    //! SSE2/AVX bodies. Each streams 4- (resp. 8-)wide over the
+    //! unit-stride slices with unaligned loads/stores and finishes the
+    //! remainder scalar — per element the operation sequence matches
+    //! the scalar helper exactly (IEEE mul/add/sub/div, no FMA).
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified SSE2 support (see [`super::simd_level`]).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy_sub_sse2(dst: &mut [f32], src: &[f32], s: f32) {
+        let n = dst.len().min(src.len());
+        let vs = _mm_set1_ps(s);
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm_loadu_ps(dst.as_ptr().add(i));
+            let x = _mm_loadu_ps(src.as_ptr().add(i));
+            _mm_storeu_ps(
+                dst.as_mut_ptr().add(i),
+                _mm_sub_ps(d, _mm_mul_ps(vs, x)),
+            );
+            i += 4;
+        }
+        while i < n {
+            dst[i] -= s * src[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified SSE2 support.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy_add_sse2(dst: &mut [f32], src: &[f32], s: f32) {
+        let n = dst.len().min(src.len());
+        let vs = _mm_set1_ps(s);
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm_loadu_ps(dst.as_ptr().add(i));
+            let x = _mm_loadu_ps(src.as_ptr().add(i));
+            _mm_storeu_ps(
+                dst.as_mut_ptr().add(i),
+                _mm_add_ps(d, _mm_mul_ps(vs, x)),
+            );
+            i += 4;
+        }
+        while i < n {
+            dst[i] += s * src[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified SSE2 support.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy2_sub_sse2(
+        dst: &mut [f32],
+        s0: f32,
+        x0: &[f32],
+        s1: f32,
+        x1: &[f32],
+    ) {
+        let n = dst.len().min(x0.len()).min(x1.len());
+        let v0 = _mm_set1_ps(s0);
+        let v1 = _mm_set1_ps(s1);
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm_loadu_ps(dst.as_ptr().add(i));
+            let a = _mm_loadu_ps(x0.as_ptr().add(i));
+            let b = _mm_loadu_ps(x1.as_ptr().add(i));
+            let t =
+                _mm_add_ps(_mm_mul_ps(v0, a), _mm_mul_ps(v1, b));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_sub_ps(d, t));
+            i += 4;
+        }
+        while i < n {
+            dst[i] -= s0 * x0[i] + s1 * x1[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified SSE2 support.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy2_add_sse2(
+        dst: &mut [f32],
+        s0: f32,
+        x0: &[f32],
+        s1: f32,
+        x1: &[f32],
+    ) {
+        let n = dst.len().min(x0.len()).min(x1.len());
+        let v0 = _mm_set1_ps(s0);
+        let v1 = _mm_set1_ps(s1);
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm_loadu_ps(dst.as_ptr().add(i));
+            let a = _mm_loadu_ps(x0.as_ptr().add(i));
+            let b = _mm_loadu_ps(x1.as_ptr().add(i));
+            let t =
+                _mm_add_ps(_mm_mul_ps(v0, a), _mm_mul_ps(v1, b));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_add_ps(d, t));
+            i += 4;
+        }
+        while i < n {
+            dst[i] += s0 * x0[i] + s1 * x1[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified SSE2 support. (IEEE division is
+    /// exactly rounded, so `_mm_div_ps` is bit-equal to scalar `/`.)
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn div_by_sse2(dst: &mut [f32], s: f32) {
+        let n = dst.len();
+        let vs = _mm_set1_ps(s);
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm_loadu_ps(dst.as_ptr().add(i));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_div_ps(d, vs));
+            i += 4;
+        }
+        while i < n {
+            dst[i] /= s;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy_sub_avx(dst: &mut [f32], src: &[f32], s: f32) {
+        let n = dst.len().min(src.len());
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let x = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(
+                dst.as_mut_ptr().add(i),
+                _mm256_sub_ps(d, _mm256_mul_ps(vs, x)),
+            );
+            i += 8;
+        }
+        while i < n {
+            dst[i] -= s * src[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy_add_avx(dst: &mut [f32], src: &[f32], s: f32) {
+        let n = dst.len().min(src.len());
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let x = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(
+                dst.as_mut_ptr().add(i),
+                _mm256_add_ps(d, _mm256_mul_ps(vs, x)),
+            );
+            i += 8;
+        }
+        while i < n {
+            dst[i] += s * src[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy2_sub_avx(
+        dst: &mut [f32],
+        s0: f32,
+        x0: &[f32],
+        s1: f32,
+        x1: &[f32],
+    ) {
+        let n = dst.len().min(x0.len()).min(x1.len());
+        let v0 = _mm256_set1_ps(s0);
+        let v1 = _mm256_set1_ps(s1);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let a = _mm256_loadu_ps(x0.as_ptr().add(i));
+            let b = _mm256_loadu_ps(x1.as_ptr().add(i));
+            let t = _mm256_add_ps(
+                _mm256_mul_ps(v0, a),
+                _mm256_mul_ps(v1, b),
+            );
+            _mm256_storeu_ps(
+                dst.as_mut_ptr().add(i),
+                _mm256_sub_ps(d, t),
+            );
+            i += 8;
+        }
+        while i < n {
+            dst[i] -= s0 * x0[i] + s1 * x1[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy2_add_avx(
+        dst: &mut [f32],
+        s0: f32,
+        x0: &[f32],
+        s1: f32,
+        x1: &[f32],
+    ) {
+        let n = dst.len().min(x0.len()).min(x1.len());
+        let v0 = _mm256_set1_ps(s0);
+        let v1 = _mm256_set1_ps(s1);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            let a = _mm256_loadu_ps(x0.as_ptr().add(i));
+            let b = _mm256_loadu_ps(x1.as_ptr().add(i));
+            let t = _mm256_add_ps(
+                _mm256_mul_ps(v0, a),
+                _mm256_mul_ps(v1, b),
+            );
+            _mm256_storeu_ps(
+                dst.as_mut_ptr().add(i),
+                _mm256_add_ps(d, t),
+            );
+            i += 8;
+        }
+        while i < n {
+            dst[i] += s0 * x0[i] + s1 * x1[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn div_by_avx(dst: &mut [f32], s: f32) {
+        let n = dst.len();
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            _mm256_storeu_ps(
+                dst.as_mut_ptr().add(i),
+                _mm256_div_ps(d, vs),
+            );
+            i += 8;
+        }
+        while i < n {
+            dst[i] /= s;
+            i += 1;
+        }
+    }
+}
+
+#[inline]
+fn axpy_sub(level: SimdLevel, dst: &mut [f32], src: &[f32], s: f32) {
+    match level {
+        SimdLevel::Scalar => axpy_sub_scalar(dst, src, s),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Sse2 => unsafe { x86::axpy_sub_sse2(dst, src, s) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx => unsafe { x86::axpy_sub_avx(dst, src, s) },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => axpy_sub_scalar(dst, src, s),
+    }
+}
+
+#[inline]
+fn axpy_add(level: SimdLevel, dst: &mut [f32], src: &[f32], s: f32) {
+    match level {
+        SimdLevel::Scalar => axpy_add_scalar(dst, src, s),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Sse2 => unsafe { x86::axpy_add_sse2(dst, src, s) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx => unsafe { x86::axpy_add_avx(dst, src, s) },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => axpy_add_scalar(dst, src, s),
+    }
+}
+
+#[inline]
+fn axpy2_sub(
+    level: SimdLevel,
+    dst: &mut [f32],
+    s0: f32,
+    x0: &[f32],
+    s1: f32,
+    x1: &[f32],
+) {
+    match level {
+        SimdLevel::Scalar => axpy2_sub_scalar(dst, s0, x0, s1, x1),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Sse2 => unsafe {
+            x86::axpy2_sub_sse2(dst, s0, x0, s1, x1)
+        },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx => unsafe {
+            x86::axpy2_sub_avx(dst, s0, x0, s1, x1)
+        },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => axpy2_sub_scalar(dst, s0, x0, s1, x1),
+    }
+}
+
+#[inline]
+fn axpy2_add(
+    level: SimdLevel,
+    dst: &mut [f32],
+    s0: f32,
+    x0: &[f32],
+    s1: f32,
+    x1: &[f32],
+) {
+    match level {
+        SimdLevel::Scalar => axpy2_add_scalar(dst, s0, x0, s1, x1),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Sse2 => unsafe {
+            x86::axpy2_add_sse2(dst, s0, x0, s1, x1)
+        },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx => unsafe {
+            x86::axpy2_add_avx(dst, s0, x0, s1, x1)
+        },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => axpy2_add_scalar(dst, s0, x0, s1, x1),
+    }
+}
+
+#[inline]
+fn div_by(level: SimdLevel, dst: &mut [f32], s: f32) {
+    match level {
+        SimdLevel::Scalar => div_by_scalar(dst, s),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Sse2 => unsafe { x86::div_by_sse2(dst, s) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx => unsafe { x86::div_by_avx(dst, s) },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => div_by_scalar(dst, s),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reference madd (moved here from the workload module: the microkernel
+// layer owns every flavour of the update kernels)
+// ---------------------------------------------------------------------
+
+/// The `madd` block kernel: `c += a·b` on row-major `bs×bs` blocks,
+/// j-inner accumulation. The sequential reference uses the identical
+/// loop, which is what makes every edge-respecting schedule
+/// bit-identical (f32) to it.
+pub fn madd(a: &[f32], b: &[f32], c: &mut [f32], bs: usize) {
+    debug_assert!(
+        a.len() == bs * bs && b.len() == bs * bs && c.len() == bs * bs
+    );
+    for i in 0..bs {
+        for j in 0..bs {
+            let mut acc = c[i * bs + j];
+            for k in 0..bs {
+                acc += a[i * bs + k] * b[k * bs + j];
+            }
+            c[i * bs + j] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Mode-dispatching microkernels
+// ---------------------------------------------------------------------
+
+/// `bmod` microkernel: `inner ← inner − row·col` (Schur update).
+///
+/// Bit-identical path: the reference [`bmod`] is already ikj with the
+/// j-loop streaming `col` rows unit-stride, so the vector form is a
+/// direct `axpy` per `(i, k)` — same per-element sequence, `rik == 0`
+/// skip preserved. Fast path: paired-`k` two-term updates, skip
+/// dropped.
+pub fn bmod_mk(
+    mode: KernelMode,
+    row: &[f32],
+    col: &[f32],
+    inner: &mut [f32],
+    bs: usize,
+) {
+    debug_assert!(
+        row.len() == bs * bs
+            && col.len() == bs * bs
+            && inner.len() == bs * bs
+    );
+    let level = simd_level();
+    match mode {
+        KernelMode::BitIdentical => {
+            if level == SimdLevel::Scalar {
+                return bmod(row, col, inner, bs);
+            }
+            for i in 0..bs {
+                let irow = &mut inner[i * bs..(i + 1) * bs];
+                for k in 0..bs {
+                    let rik = row[i * bs + k];
+                    if rik == 0.0 {
+                        continue;
+                    }
+                    axpy_sub(
+                        level,
+                        irow,
+                        &col[k * bs..(k + 1) * bs],
+                        rik,
+                    );
+                }
+            }
+        }
+        KernelMode::Fast => {
+            for i in 0..bs {
+                let irow = &mut inner[i * bs..(i + 1) * bs];
+                let mut k = 0;
+                while k + 1 < bs {
+                    axpy2_sub(
+                        level,
+                        irow,
+                        row[i * bs + k],
+                        &col[k * bs..(k + 1) * bs],
+                        row[i * bs + k + 1],
+                        &col[(k + 1) * bs..(k + 2) * bs],
+                    );
+                    k += 2;
+                }
+                if k < bs {
+                    axpy_sub(
+                        level,
+                        irow,
+                        &col[k * bs..(k + 1) * bs],
+                        row[i * bs + k],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `gemm_nt` microkernel: `c ← c − a·bᵀ`.
+///
+/// The reference reads `b[j,k]` column-wise; the packed form
+/// transposes `b` once ([`PackedTile::pack_transposed`]) and runs ikj
+/// with unit-stride j-sweeps. Each `c[i,j]` still accumulates its
+/// products in ascending-`k` order through an exact store/reload, so
+/// the bit-identical path is f32-equal to [`gemm_nt`].
+pub fn gemm_nt_mk(
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    bs: usize,
+) {
+    debug_assert!(
+        a.len() == bs * bs && b.len() == bs * bs && c.len() == bs * bs
+    );
+    let level = simd_level();
+    if mode == KernelMode::BitIdentical && level == SimdLevel::Scalar {
+        return gemm_nt(a, b, c, bs);
+    }
+    let bt = PackedTile::pack_transposed(b, bs);
+    match mode {
+        KernelMode::BitIdentical => {
+            for i in 0..bs {
+                let crow = &mut c[i * bs..(i + 1) * bs];
+                for k in 0..bs {
+                    axpy_sub(level, crow, bt.row(k), a[i * bs + k]);
+                }
+            }
+        }
+        KernelMode::Fast => {
+            for i in 0..bs {
+                let crow = &mut c[i * bs..(i + 1) * bs];
+                let mut k = 0;
+                while k + 1 < bs {
+                    let (r0, r1) = (bt.row(k), bt.row(k + 1));
+                    axpy2_sub(
+                        level,
+                        crow,
+                        a[i * bs + k],
+                        r0,
+                        a[i * bs + k + 1],
+                        r1,
+                    );
+                    k += 2;
+                }
+                if k < bs {
+                    axpy_sub(level, crow, bt.row(k), a[i * bs + k]);
+                }
+            }
+        }
+    }
+}
+
+/// `syrk` microkernel: `diag ← diag − panel·panelᵀ`, lower triangle
+/// only. Same packing strategy as [`gemm_nt_mk`], with the j-sweep
+/// clipped to `j <= i` so entries above the diagonal stay untouched.
+pub fn syrk_mk(
+    mode: KernelMode,
+    panel: &[f32],
+    diag: &mut [f32],
+    bs: usize,
+) {
+    debug_assert!(panel.len() == bs * bs && diag.len() == bs * bs);
+    let level = simd_level();
+    if mode == KernelMode::BitIdentical && level == SimdLevel::Scalar {
+        return syrk(panel, diag, bs);
+    }
+    let pt = PackedTile::pack_transposed(panel, bs);
+    match mode {
+        KernelMode::BitIdentical => {
+            for i in 0..bs {
+                let drow = &mut diag[i * bs..i * bs + i + 1];
+                for k in 0..bs {
+                    axpy_sub(
+                        level,
+                        drow,
+                        &pt.row(k)[..i + 1],
+                        panel[i * bs + k],
+                    );
+                }
+            }
+        }
+        KernelMode::Fast => {
+            for i in 0..bs {
+                let drow = &mut diag[i * bs..i * bs + i + 1];
+                let mut k = 0;
+                while k + 1 < bs {
+                    axpy2_sub(
+                        level,
+                        drow,
+                        panel[i * bs + k],
+                        &pt.row(k)[..i + 1],
+                        panel[i * bs + k + 1],
+                        &pt.row(k + 1)[..i + 1],
+                    );
+                    k += 2;
+                }
+                if k < bs {
+                    axpy_sub(
+                        level,
+                        drow,
+                        &pt.row(k)[..i + 1],
+                        panel[i * bs + k],
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `trsm` microkernel: `row ← row · L(diag)⁻ᵀ`.
+///
+/// The reference solves each row independently (forward substitution
+/// over columns); rows are therefore the vector dimension. The write
+/// tile is transpose-packed so "all rows at column c" is one
+/// unit-stride panel row, the column sweep runs subtract-then-divide
+/// exactly as the reference does per element, and the tile is
+/// transpose-unpacked at the end. Both modes share this body: the
+/// substitution recurrence admits no accumulation reorder, so `Fast`
+/// has nothing further to trade — it stays bit-identical.
+pub fn trsm_mk(
+    mode: KernelMode,
+    diag: &[f32],
+    row: &mut [f32],
+    bs: usize,
+) {
+    debug_assert!(diag.len() == bs * bs && row.len() == bs * bs);
+    let level = simd_level();
+    if mode == KernelMode::BitIdentical && level == SimdLevel::Scalar {
+        return trsm(diag, row, bs);
+    }
+    let mut xt = PackedTile::pack_transposed(row, bs);
+    for c in 0..bs {
+        for j in 0..c {
+            let dcj = diag[c * bs + j];
+            let (xc, xj) = xt.row_pair_mut(c, j);
+            axpy_sub(level, xc, xj, dcj);
+        }
+        div_by(level, xt.row_mut(c), diag[c * bs + c]);
+    }
+    xt.unpack_transposed_into(row);
+}
+
+/// `madd` microkernel: `c += a·b`. `b`'s rows are already unit-stride
+/// in `j`, so no packing is needed: ikj with an `axpy` per `(i, k)`
+/// (bit-identical), or paired-`k` two-term updates (fast).
+pub fn madd_mk(
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    bs: usize,
+) {
+    debug_assert!(
+        a.len() == bs * bs && b.len() == bs * bs && c.len() == bs * bs
+    );
+    let level = simd_level();
+    match mode {
+        KernelMode::BitIdentical => {
+            if level == SimdLevel::Scalar {
+                return madd(a, b, c, bs);
+            }
+            for i in 0..bs {
+                let crow = &mut c[i * bs..(i + 1) * bs];
+                for k in 0..bs {
+                    axpy_add(
+                        level,
+                        crow,
+                        &b[k * bs..(k + 1) * bs],
+                        a[i * bs + k],
+                    );
+                }
+            }
+        }
+        KernelMode::Fast => {
+            for i in 0..bs {
+                let crow = &mut c[i * bs..(i + 1) * bs];
+                let mut k = 0;
+                while k + 1 < bs {
+                    axpy2_add(
+                        level,
+                        crow,
+                        a[i * bs + k],
+                        &b[k * bs..(k + 1) * bs],
+                        a[i * bs + k + 1],
+                        &b[(k + 1) * bs..(k + 2) * bs],
+                    );
+                    k += 2;
+                }
+                if k < bs {
+                    axpy_add(
+                        level,
+                        crow,
+                        &b[k * bs..(k + 1) * bs],
+                        a[i * bs + k],
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::{gen_spd, potrf};
+    use crate::linalg::dense::DenseMatrix;
+
+    fn rel_diff(got: &[f32], want: &[f32]) -> f64 {
+        let scale = want
+            .iter()
+            .fold(0.0f32, |m, &v| m.max(v.abs()))
+            .max(1e-30);
+        let worst = got
+            .iter()
+            .zip(want)
+            .fold(0.0f32, |m, (&g, &w)| m.max((g - w).abs()));
+        f64::from(worst) / f64::from(scale)
+    }
+
+    fn blocks(bs: usize, seeds: [u32; 3]) -> [Vec<f32>; 3] {
+        seeds.map(|s| {
+            DenseMatrix::bots_random(bs, bs, s).as_slice().to_vec()
+        })
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        for bs in 1..=9 {
+            let src = DenseMatrix::bots_random(bs, bs, bs as u32)
+                .as_slice()
+                .to_vec();
+            let mut back = vec![0.0f32; bs * bs];
+            PackedTile::pack(&src, bs).unpack_into(&mut back);
+            assert_eq!(src, back, "identity pack bs={bs}");
+            let pt = PackedTile::pack_transposed(&src, bs);
+            for j in 0..bs {
+                for k in 0..bs {
+                    assert_eq!(pt.row(k)[j], src[j * bs + k]);
+                }
+            }
+            pt.unpack_transposed_into(&mut back);
+            assert_eq!(src, back, "transpose round trip bs={bs}");
+        }
+    }
+
+    #[test]
+    fn bit_identical_mode_matches_reference_kernels() {
+        // On a scalar build this is dispatch-identity; with
+        // `--features simd` it proves the vector paths produce the
+        // same f32 bits as the reference loops, remainders included.
+        for bs in [1usize, 2, 3, 4, 5, 7, 8, 9, 16] {
+            let [a, b, c0] = blocks(bs, [1, 2, 3]);
+            let m = KernelMode::BitIdentical;
+
+            let mut want = c0.clone();
+            bmod(&a, &b, &mut want, bs);
+            let mut got = c0.clone();
+            bmod_mk(m, &a, &b, &mut got, bs);
+            assert_eq!(got, want, "bmod bs={bs}");
+
+            let mut want = c0.clone();
+            gemm_nt(&a, &b, &mut want, bs);
+            let mut got = c0.clone();
+            gemm_nt_mk(m, &a, &b, &mut got, bs);
+            assert_eq!(got, want, "gemm_nt bs={bs}");
+
+            let mut want = c0.clone();
+            syrk(&a, &mut want, bs);
+            let mut got = c0.clone();
+            syrk_mk(m, &a, &mut got, bs);
+            assert_eq!(got, want, "syrk bs={bs}");
+
+            let mut want = c0.clone();
+            madd(&a, &b, &mut want, bs);
+            let mut got = c0.clone();
+            madd_mk(m, &a, &b, &mut got, bs);
+            assert_eq!(got, want, "madd bs={bs}");
+        }
+    }
+
+    #[test]
+    fn trsm_mk_matches_reference_both_modes() {
+        for bs in [2usize, 3, 4, 5, 8, 9] {
+            let mut diag = gen_spd(1, bs).block(0, 0).unwrap().to_vec();
+            potrf(&mut diag, bs);
+            let rhs = DenseMatrix::bots_random(bs, bs, 5)
+                .as_slice()
+                .to_vec();
+            let mut want = rhs.clone();
+            trsm(&diag, &mut want, bs);
+            for m in [KernelMode::BitIdentical, KernelMode::Fast] {
+                let mut got = rhs.clone();
+                trsm_mk(m, &diag, &mut got, bs);
+                assert_eq!(got, want, "trsm {} bs={bs}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fast_mode_stays_within_residual_bound() {
+        // The fast paths reorder the k-reduction, so results differ in
+        // bits but must stay within 1e-5 relative of the reference.
+        for bs in [4usize, 5, 8, 9, 16] {
+            let [a, b, c0] = blocks(bs, [11, 12, 13]);
+
+            let mut want = c0.clone();
+            bmod(&a, &b, &mut want, bs);
+            let mut got = c0.clone();
+            bmod_mk(KernelMode::Fast, &a, &b, &mut got, bs);
+            assert!(rel_diff(&got, &want) <= 1e-5, "bmod bs={bs}");
+
+            let mut want = c0.clone();
+            gemm_nt(&a, &b, &mut want, bs);
+            let mut got = c0.clone();
+            gemm_nt_mk(KernelMode::Fast, &a, &b, &mut got, bs);
+            assert!(rel_diff(&got, &want) <= 1e-5, "gemm bs={bs}");
+
+            let mut want = c0.clone();
+            syrk(&a, &mut want, bs);
+            let mut got = c0.clone();
+            syrk_mk(KernelMode::Fast, &a, &mut got, bs);
+            assert!(rel_diff(&got, &want) <= 1e-5, "syrk bs={bs}");
+
+            let mut want = c0.clone();
+            madd(&a, &b, &mut want, bs);
+            let mut got = c0.clone();
+            madd_mk(KernelMode::Fast, &a, &b, &mut got, bs);
+            assert!(rel_diff(&got, &want) <= 1e-5, "madd bs={bs}");
+        }
+    }
+
+    #[test]
+    fn fast_mode_genuinely_reorders_at_even_bs() {
+        // Sanity that the residual tests aren't vacuous: at bs >= 2
+        // the paired reduction produces different bits for generic
+        // inputs (if it ever matched exactly the mode split would be
+        // pointless).
+        let bs = 8;
+        let [a, b, c0] = blocks(bs, [21, 22, 23]);
+        let mut want = c0.clone();
+        madd(&a, &b, &mut want, bs);
+        let mut got = c0.clone();
+        madd_mk(KernelMode::Fast, &a, &b, &mut got, bs);
+        assert_ne!(got, want, "fast madd should reorder the reduction");
+    }
+
+    #[test]
+    fn mode_and_level_names() {
+        assert_eq!(KernelMode::parse("bit"), Some(KernelMode::BitIdentical));
+        assert_eq!(KernelMode::parse("fast"), Some(KernelMode::Fast));
+        assert_eq!(KernelMode::parse("x"), None);
+        assert_eq!(KernelMode::default().name(), "bit");
+        // Detection is total and cached; scalar builds report scalar.
+        let l = simd_level();
+        assert_eq!(l, simd_level());
+        if !cfg!(feature = "simd") {
+            assert_eq!(l, SimdLevel::Scalar);
+        }
+        assert!(!l.name().is_empty());
+    }
+}

@@ -18,12 +18,21 @@
 //!   source paper — see DIVERGENCES.md).
 //! * [`verify`] — ‖L·U − A‖ / ‖L·Lᵀ − A‖ reconstruction checks used
 //!   by tests and the end-to-end example.
+//! * [`microkernel`] — packed, register-blocked SIMD variants of the
+//!   update kernels (`bmod`/`gemm`/`syrk`/`trsm`/`madd`) behind the
+//!   `simd` feature, with an explicit bit-identical-vs-fast precision
+//!   policy ([`microkernel::KernelMode`]).
+//! * [`autotune`] — startup block-size tuner: sweeps candidate sizes
+//!   per registry workload against a calibrator and caches the winner
+//!   in the workload registry.
 
 pub mod dense;
+pub mod autotune;
 pub mod blocked;
 pub mod cholesky;
 pub mod genmat;
 pub mod lu;
+pub mod microkernel;
 pub mod verify;
 
 pub use blocked::BlockedSparseMatrix;

@@ -26,7 +26,7 @@
 //! `mixed` job stream and `--list-apps` are all derived from the
 //! registry, so a newly registered workload is immediately drivable.
 
-use gprm::apps::dataflow::run_workload;
+use gprm::apps::dataflow::run_workload_mode;
 use gprm::apps::matmul::{MatmulApproach, MatmulExec};
 use gprm::apps::sparselu::{
     sparselu_dataflow, sparselu_gprm, sparselu_omp, DataflowRt, LuBackend,
@@ -37,9 +37,11 @@ use gprm::coordinator::{GprmConfig, GprmRuntime};
 use gprm::harness::{
     fault_repro, run_experiment, scenario_repro, Scale, ALL_EXPERIMENTS,
 };
+use gprm::linalg::autotune::{autotune_registry, ModelCalibrator};
 use gprm::linalg::blocked::BlockedSparseMatrix;
 use gprm::linalg::genmat::genmat;
 use gprm::linalg::lu::sparselu_seq;
+use gprm::linalg::microkernel::{simd_level, KernelMode};
 use gprm::linalg::verify::lu_residual_sparse;
 use gprm::omp::OmpRuntime;
 use gprm::runtime::{default_artifact_dir, EngineService, Manifest};
@@ -243,6 +245,8 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
         OptSpec { name: "pin", help: "pin gprm tiles to cores", default: None, is_flag: true },
         OptSpec { name: "steal", help: "dataflow executor: on = lock-free work stealing (default), off = mutex-scoreboard baseline", default: Some("on"), is_flag: false },
         OptSpec { name: "events", help: "dataflow: record the schedule event log and audit it", default: None, is_flag: true },
+        OptSpec { name: "autotune", help: "on = sweep candidate block sizes at startup (cycle-model calibration), cache winners in the registry and re-derive nb/bs at fixed n (mixed keeps the requested sizing)", default: Some("off"), is_flag: false },
+        OptSpec { name: "kernels", help: "bit = bit-identical microkernels (conformance default) | fast = residual-bounded vectorised accumulation (dataflow runtimes only; see DIVERGENCES.md)", default: Some("bit"), is_flag: false },
         OptSpec { name: "list-apps", help: "print the workload registry and exit", default: None, is_flag: true },
     ];
     let args = match parse(
@@ -291,6 +295,77 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
         );
         return 2;
     }
+    let mode = match KernelMode::parse(args.get("kernels").unwrap_or("bit"))
+    {
+        Some(m) => m,
+        None => {
+            eprintln!(
+                "--kernels must be bit|fast, got {:?}",
+                args.get("kernels").unwrap_or("")
+            );
+            return 2;
+        }
+    };
+    if mode == KernelMode::Fast
+        && !matches!(runtime.as_str(), "dataflow-omp" | "dataflow-gprm")
+    {
+        eprintln!(
+            "--kernels fast requires --runtime dataflow-omp|dataflow-gprm \
+             (the phase drivers, the pool and seq stay on the \
+             bit-identical conformance default)"
+        );
+        return 2;
+    }
+    if mode == KernelMode::Fast && args.has_flag("pjrt") {
+        eprintln!("--kernels fast is incompatible with --pjrt");
+        return 2;
+    }
+    let (nb, bs) = match args.get("autotune").unwrap_or("off") {
+        "off" => (nb, bs),
+        "on" => {
+            let n = nb * bs;
+            let cal = ModelCalibrator::new(threads);
+            let results = autotune_registry(n, &cal);
+            for r in &results {
+                let sweep: Vec<String> = r
+                    .candidates
+                    .iter()
+                    .map(|(b, c)| format!("bs={b}:{c:.0}cy"))
+                    .collect();
+                println!(
+                    "autotune[{}] n={}: {} → bs={}",
+                    r.workload,
+                    r.n,
+                    sweep.join("  "),
+                    r.best_bs
+                );
+            }
+            if app == "mixed" {
+                println!(
+                    "autotune: --app mixed keeps the requested sizing \
+                     (per-kind winners are cached in the registry)"
+                );
+                (nb, bs)
+            } else {
+                let w = workload::find(&app).unwrap();
+                let tuned = workload::tuned_bs(w).unwrap_or(bs);
+                if tuned != 0 && n % tuned == 0 && n / tuned > 0 {
+                    println!(
+                        "autotune: {app} runs at bs={tuned} (nb={}) — \
+                         n={n} held fixed",
+                        n / tuned
+                    );
+                    (n / tuned, tuned)
+                } else {
+                    (nb, bs)
+                }
+            }
+        }
+        other => {
+            eprintln!("--autotune must be on|off, got {other:?}");
+            return 2;
+        }
+    };
     if runtime == "pool" || n_jobs > 1 {
         if runtime != "pool" {
             eprintln!("--jobs > 1 requires --runtime pool");
@@ -313,11 +388,15 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
         eprintln!("--app mixed requires --runtime pool");
         return 2;
     }
-    if app != "sparselu" {
+    if app != "sparselu" || mode == KernelMode::Fast {
         // Every non-SparseLU registry workload runs through the
-        // generic registry path (seq + dataflow runtimes).
+        // generic registry path (seq + dataflow runtimes) — and so
+        // does SparseLU itself in fast kernel mode, which only the
+        // mode-aware registry driver supports.
         let w = workload::find(&app).unwrap();
-        return run_registry_app(w, nb, bs, &runtime, threads, &args, exec);
+        return run_registry_app(
+            w, nb, bs, &runtime, threads, &args, exec, mode,
+        );
     }
     let engine = if args.has_flag("pjrt") {
         match EngineService::start(default_artifact_dir()) {
@@ -657,7 +736,10 @@ fn run_pool_jobs(
 /// the richer SparseLU driver: input, graph, kernels, reference and
 /// verification all come from the workload declaration. Supports the
 /// seq and dataflow runtimes (phase-barrier drivers and PJRT remain
-/// SparseLU-specific).
+/// SparseLU-specific). `mode` selects the kernel precision policy;
+/// fast mode is verified by residual only (bit-identity is not its
+/// contract — see DIVERGENCES.md).
+#[allow(clippy::too_many_arguments)]
 fn run_registry_app(
     w: &'static dyn Workload,
     nb: usize,
@@ -666,15 +748,19 @@ fn run_registry_app(
     threads: usize,
     args: &Args,
     exec: ExecOpts,
+    mode: KernelMode,
 ) -> i32 {
     if args.has_flag("pjrt") {
         eprintln!("--pjrt is sparselu-only (no {} artifacts)", w.name());
         return 2;
     }
     println!(
-        "{}: nb={nb}, bs={bs} ({}), runtime={runtime}, threads={threads}",
+        "{}: nb={nb}, bs={bs} ({}), runtime={runtime}, threads={threads}, \
+         kernels={} (simd level: {})",
         w.name(),
-        w.description()
+        w.description(),
+        mode.name(),
+        simd_level().name()
     );
     let p = Params::new(nb, bs);
     let mut a = w.make_input(&p, 0);
@@ -684,8 +770,14 @@ fn run_registry_app(
         "seq" => w.reference_seq(&mut a),
         "dataflow-omp" => {
             let rt = OmpRuntime::new(threads);
-            let stats = run_workload(&DataflowRt::Omp(&rt), w, &mut a, exec)
-                .expect("dataflow run failed");
+            let stats = run_workload_mode(
+                &DataflowRt::Omp(&rt),
+                w,
+                &mut a,
+                exec,
+                mode,
+            )
+            .expect("dataflow run failed");
             rt.shutdown();
             if !report_dataflow(|| w.graph_for(&orig), &exec, &stats) {
                 return 1;
@@ -696,9 +788,14 @@ fn run_registry_app(
                 GprmConfig { n_tiles: threads, pin: args.has_flag("pin") },
                 Registry::new(),
             );
-            let stats =
-                run_workload(&DataflowRt::Gprm(&rt), w, &mut a, exec)
-                    .expect("dataflow run failed");
+            let stats = run_workload_mode(
+                &DataflowRt::Gprm(&rt),
+                w,
+                &mut a,
+                exec,
+                mode,
+            )
+            .expect("dataflow run failed");
             rt.shutdown();
             if !report_dataflow(|| w.graph_for(&orig), &exec, &stats) {
                 return 1;
@@ -716,7 +813,16 @@ fn run_registry_app(
     let dt = t0.elapsed();
     let mut want = orig.deep_clone();
     w.reference_seq(&mut want);
-    let bits = w.verify_bits(&a, &want);
+    let bits = match mode {
+        KernelMode::BitIdentical => w.verify_bits(&a, &want),
+        KernelMode::Fast => {
+            println!(
+                "kernels=fast: residual-bounded verification \
+                 (bit-identity is not fast mode's contract)"
+            );
+            Ok(())
+        }
+    };
     let res = w.residual(&orig, &a);
     println!("done in {dt:.2?}; residual = {res:.2e}");
     if let Err(e) = &bits {

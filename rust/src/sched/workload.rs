@@ -43,8 +43,12 @@ use crate::linalg::cholesky::{
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::genmat::{genmat, genmat_pattern};
 use crate::linalg::lu::{bdiv, bmod, fwd, lu0, sparselu_seq};
+use crate::linalg::microkernel::{
+    bmod_mk, gemm_nt_mk, madd_mk, syrk_mk, trsm_mk, KernelMode,
+};
 use crate::linalg::verify::{chol_residual_sparse, lu_residual_sparse};
 use crate::tilesim::workload::Phase;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Problem sizing shared by every workload: `nb` blocks per grid
 /// dimension, `bs × bs` elements per block. (For the blocked matmul
@@ -151,6 +155,22 @@ pub trait Workload: Send + Sync {
     /// aligned with [`Workload::ops`].
     fn kernels(&self) -> &'static [BlockKernel<'static>];
 
+    /// The kernel table for an explicit precision policy (see
+    /// [`crate::linalg::microkernel`]). `BitIdentical` — the
+    /// conformance default everywhere — routes the update kernels
+    /// through the microkernel layer, whose bit-identical paths
+    /// produce the same f32 bits as [`Workload::kernels`] on every
+    /// build and SIMD level; `Fast` swaps in the residual-bounded
+    /// paired-accumulator variants (see DIVERGENCES.md). The default
+    /// impl ignores the mode, for workloads without microkernel
+    /// coverage.
+    fn kernels_for(
+        &self,
+        _mode: KernelMode,
+    ) -> &'static [BlockKernel<'static>] {
+        self.kernels()
+    }
+
     /// Generate a deterministic input matrix for `p`. `seed` selects
     /// among input families where the generator supports it (the
     /// matmul operands); the BOTS/SPD factorisation generators are
@@ -201,6 +221,13 @@ pub trait Workload: Send + Sync {
     /// table).
     fn flops(&self, op: OpId, bs: usize) -> u64 {
         (self.ops()[op.0].flops)(bs)
+    }
+
+    /// Total useful flops of a task graph at block size `bs` — the
+    /// single FLOP accounting the benches, the harness and the
+    /// autotuner all share (no per-consumer copies).
+    fn graph_flops(&self, graph: &TaskGraph, bs: usize) -> u64 {
+        graph.tasks().iter().map(|t| self.flops(t.op, bs)).sum()
     }
 
     /// Simulator cost of one task. The default derives it from the op
@@ -291,12 +318,29 @@ fn rk_bmod(r: &[&[f32]], w: &mut [f32], bs: usize) {
     bmod(r[0], r[1], w, bs)
 }
 
+fn rk_bmod_mk(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    bmod_mk(KernelMode::BitIdentical, r[0], r[1], w, bs)
+}
+fn rk_bmod_fast(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    bmod_mk(KernelMode::Fast, r[0], r[1], w, bs)
+}
+
 /// The plain-rust SparseLU kernel table, aligned with [`LU_OPS`] —
 /// the single definition shared by every driver, the CLI, benches and
 /// tests. (The PJRT-dispatching SparseLU driver builds a closure
 /// table instead; it must capture the backend.)
 pub static LU_RUST_KERNELS: [BlockKernel<'static>; 4] =
     [&rk_lu0, &rk_fwd, &rk_bdiv, &rk_bmod];
+
+/// SparseLU table with the update kernel routed through the
+/// microkernel layer, bit-identical mode. The recurrence kernels
+/// (`lu0`, `fwd`, `bdiv`) stay on their scalar reference by design.
+pub static LU_MK_KERNELS: [BlockKernel<'static>; 4] =
+    [&rk_lu0, &rk_fwd, &rk_bdiv, &rk_bmod_mk];
+
+/// SparseLU table in fast (residual-bounded) mode.
+pub static LU_MK_FAST_KERNELS: [BlockKernel<'static>; 4] =
+    [&rk_lu0, &rk_fwd, &rk_bdiv, &rk_bmod_fast];
 
 /// BOTS SparseLU with fill-in — the paper's §VI workload
 /// (registry name `"sparselu"`).
@@ -382,6 +426,16 @@ impl Workload for Sparselu {
         &LU_RUST_KERNELS
     }
 
+    fn kernels_for(
+        &self,
+        mode: KernelMode,
+    ) -> &'static [BlockKernel<'static>] {
+        match mode {
+            KernelMode::BitIdentical => &LU_MK_KERNELS,
+            KernelMode::Fast => &LU_MK_FAST_KERNELS,
+        }
+    }
+
     fn make_input(&self, p: &Params, _seed: u32) -> BlockedSparseMatrix {
         genmat(p.nb, p.bs)
     }
@@ -428,6 +482,35 @@ fn rk_gemm(r: &[&[f32]], w: &mut [f32], bs: usize) {
 /// The tiled-Cholesky kernel table, aligned with [`CHOLESKY_OPS`].
 pub static CHOLESKY_RUST_KERNELS: [BlockKernel<'static>; 4] =
     [&rk_potrf, &rk_trsm, &rk_syrk, &rk_gemm];
+
+fn rk_trsm_mk(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    trsm_mk(KernelMode::BitIdentical, r[0], w, bs)
+}
+fn rk_trsm_fast(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    trsm_mk(KernelMode::Fast, r[0], w, bs)
+}
+fn rk_syrk_mk(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    syrk_mk(KernelMode::BitIdentical, r[0], w, bs)
+}
+fn rk_syrk_fast(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    syrk_mk(KernelMode::Fast, r[0], w, bs)
+}
+fn rk_gemm_mk(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    gemm_nt_mk(KernelMode::BitIdentical, r[0], r[1], w, bs)
+}
+fn rk_gemm_fast(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    gemm_nt_mk(KernelMode::Fast, r[0], r[1], w, bs)
+}
+
+/// Cholesky table with the update kernels (`trsm`, `syrk`, `gemm`)
+/// routed through the microkernel layer, bit-identical mode
+/// (`potrf`'s square-root recurrence stays scalar).
+pub static CHOLESKY_MK_KERNELS: [BlockKernel<'static>; 4] =
+    [&rk_potrf, &rk_trsm_mk, &rk_syrk_mk, &rk_gemm_mk];
+
+/// Cholesky table in fast (residual-bounded) mode.
+pub static CHOLESKY_MK_FAST_KERNELS: [BlockKernel<'static>; 4] =
+    [&rk_potrf, &rk_trsm_fast, &rk_syrk_fast, &rk_gemm_fast];
 
 /// Tiled dense Cholesky, lower-triangle storage (Buttari et al.'s
 /// right-looking tiled algorithm; registry name `"cholesky"`).
@@ -478,6 +561,16 @@ impl Workload for Cholesky {
         &CHOLESKY_RUST_KERNELS
     }
 
+    fn kernels_for(
+        &self,
+        mode: KernelMode,
+    ) -> &'static [BlockKernel<'static>] {
+        match mode {
+            KernelMode::BitIdentical => &CHOLESKY_MK_KERNELS,
+            KernelMode::Fast => &CHOLESKY_MK_FAST_KERNELS,
+        }
+    }
+
     fn make_input(&self, p: &Params, _seed: u32) -> BlockedSparseMatrix {
         gen_spd(p.nb, p.bs)
     }
@@ -508,31 +601,31 @@ impl Workload for Cholesky {
 // Blocked matmul
 // ---------------------------------------------------------------------
 
-/// The `madd` block kernel: `c += a·b` on row-major `bs×bs` blocks,
-/// j-inner accumulation. The sequential reference uses the identical
-/// loop, which is what makes every edge-respecting schedule
-/// bit-identical (f32) to it.
-pub fn madd(a: &[f32], b: &[f32], c: &mut [f32], bs: usize) {
-    debug_assert!(
-        a.len() == bs * bs && b.len() == bs * bs && c.len() == bs * bs
-    );
-    for i in 0..bs {
-        for j in 0..bs {
-            let mut acc = c[i * bs + j];
-            for k in 0..bs {
-                acc += a[i * bs + k] * b[k * bs + j];
-            }
-            c[i * bs + j] = acc;
-        }
-    }
-}
+/// The `madd` reference kernel now lives with its vectorised variants
+/// in the microkernel layer; re-exported here so the workload module
+/// remains the one-stop import for kernel tables.
+pub use crate::linalg::microkernel::madd;
 
 fn rk_madd(r: &[&[f32]], w: &mut [f32], bs: usize) {
     madd(r[0], r[1], w, bs)
 }
+fn rk_madd_mk(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    madd_mk(KernelMode::BitIdentical, r[0], r[1], w, bs)
+}
+fn rk_madd_fast(r: &[&[f32]], w: &mut [f32], bs: usize) {
+    madd_mk(KernelMode::Fast, r[0], r[1], w, bs)
+}
 
 /// The blocked-matmul kernel table, aligned with [`MATMUL_OPS`].
 pub static MATMUL_RUST_KERNELS: [BlockKernel<'static>; 1] = [&rk_madd];
+
+/// Matmul table routed through the microkernel layer, bit-identical
+/// mode.
+pub static MATMUL_MK_KERNELS: [BlockKernel<'static>; 1] = [&rk_madd_mk];
+
+/// Matmul table in fast (residual-bounded) mode.
+pub static MATMUL_MK_FAST_KERNELS: [BlockKernel<'static>; 1] =
+    [&rk_madd_fast];
 
 /// Pack square `a` and `b` (each `nbc·bs` wide) plus a zeroed `C`
 /// into the `2·nbc`-grid blocked matrix [`TaskGraph::matmul`]
@@ -672,6 +765,16 @@ impl Workload for Matmul {
         &MATMUL_RUST_KERNELS
     }
 
+    fn kernels_for(
+        &self,
+        mode: KernelMode,
+    ) -> &'static [BlockKernel<'static>] {
+        match mode {
+            KernelMode::BitIdentical => &MATMUL_MK_KERNELS,
+            KernelMode::Fast => &MATMUL_MK_FAST_KERNELS,
+        }
+    }
+
     fn make_input(&self, p: &Params, seed: u32) -> BlockedSparseMatrix {
         let dim = p.nb * p.bs;
         let a = DenseMatrix::bots_random(
@@ -751,6 +854,60 @@ pub fn names() -> Vec<&'static str> {
     registry().iter().map(|w| w.name()).collect()
 }
 
+// ---------------------------------------------------------------------
+// Cached tuned block sizes (written by the startup autotuner)
+// ---------------------------------------------------------------------
+
+/// Per-registry-slot cached block size from the last autotune pass
+/// (0 = untuned). A plain atomic per slot: the autotuner writes once
+/// at startup, everyone else reads. Sized with headroom over the
+/// current registry.
+static TUNED: [AtomicUsize; 8] = [
+    AtomicUsize::new(0),
+    AtomicUsize::new(0),
+    AtomicUsize::new(0),
+    AtomicUsize::new(0),
+    AtomicUsize::new(0),
+    AtomicUsize::new(0),
+    AtomicUsize::new(0),
+    AtomicUsize::new(0),
+];
+
+fn registry_index(name: &str) -> Option<usize> {
+    registry().iter().position(|w| w.name() == name)
+}
+
+/// Record the autotuner's winning block size for `w`'s registry entry.
+pub fn set_tuned_bs(w: &dyn Workload, bs: usize) {
+    if let Some(i) = registry_index(w.name()) {
+        TUNED[i].store(bs, Ordering::Relaxed);
+    }
+}
+
+/// The cached tuned block size for `w`, if an autotune pass has run
+/// (see [`crate::linalg::autotune`]).
+pub fn tuned_bs(w: &dyn Workload) -> Option<usize> {
+    registry_index(w.name()).and_then(|i| {
+        match TUNED[i].load(Ordering::Relaxed) {
+            0 => None,
+            bs => Some(bs),
+        }
+    })
+}
+
+/// Drop every cached tuned size (test isolation).
+pub fn clear_tuned_bs() {
+    for t in &TUNED {
+        t.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Serialises tests that mutate the process-wide tuned-size cache
+/// (they run in parallel threads within one test binary).
+#[cfg(test)]
+pub(crate) static TUNED_LOCK: std::sync::Mutex<()> =
+    std::sync::Mutex::new(());
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -776,6 +933,96 @@ mod tests {
                 "{}: kernel table must cover the op table",
                 w.name()
             );
+            for mode in [KernelMode::BitIdentical, KernelMode::Fast] {
+                assert_eq!(
+                    w.kernels_for(mode).len(),
+                    w.ops().len(),
+                    "{}: {} table must cover the op table",
+                    w.name(),
+                    mode.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bit_identical_tables_match_the_reference_tables() {
+        // The conformance default: for every workload and op, the
+        // microkernel bit-identical table produces the same f32 bits
+        // as the plain reference table on the same operands.
+        let bs = 8usize;
+        let rand = |s: u32| {
+            DenseMatrix::bots_random(bs, bs, s).as_slice().to_vec()
+        };
+        let (a, b, c0) = (rand(61), rand(62), rand(63));
+        let spd = gen_spd(1, bs).block(0, 0).unwrap().to_vec();
+        let mut factor = spd.clone();
+        potrf(&mut factor, bs);
+        for w in registry() {
+            for (op, (kref, kmk)) in w
+                .kernels()
+                .iter()
+                .zip(w.kernels_for(KernelMode::BitIdentical))
+                .enumerate()
+            {
+                let name = w.ops()[op].name;
+                // Give each op arity-correct, domain-valid operands:
+                // the solves read a triangular factor, the pivot
+                // kernels factor an SPD block in place.
+                let reads: Vec<&[f32]> = match name {
+                    "lu0" | "potrf" => vec![],
+                    "fwd" | "bdiv" | "trsm" => vec![&factor],
+                    "syrk" => vec![&a],
+                    _ => vec![&a, &b],
+                };
+                let seed = if matches!(name, "lu0" | "potrf") {
+                    &spd
+                } else {
+                    &c0
+                };
+                let mut want = seed.clone();
+                kref(&reads, &mut want, bs);
+                let mut got = seed.clone();
+                kmk(&reads, &mut got, bs);
+                assert_eq!(
+                    got,
+                    want,
+                    "{}: op {} not bit-identical",
+                    w.name(),
+                    name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tuned_bs_cache_round_trips() {
+        let _g = TUNED_LOCK.lock().unwrap();
+        clear_tuned_bs();
+        for w in registry() {
+            assert_eq!(tuned_bs(*w), None, "{} starts untuned", w.name());
+        }
+        set_tuned_bs(&Cholesky, 16);
+        assert_eq!(tuned_bs(&Cholesky), Some(16));
+        assert_eq!(tuned_bs(&Sparselu), None);
+        set_tuned_bs(&Cholesky, 8);
+        assert_eq!(tuned_bs(&Cholesky), Some(8));
+        clear_tuned_bs();
+        assert_eq!(tuned_bs(&Cholesky), None);
+    }
+
+    #[test]
+    fn graph_flops_sums_the_op_table() {
+        let p = Params::new(5, 8);
+        for w in registry() {
+            let g = w.graph(&p);
+            let manual: u64 = g
+                .tasks()
+                .iter()
+                .map(|t| (w.ops()[t.op.0].flops)(p.bs))
+                .sum();
+            assert_eq!(w.graph_flops(&g, p.bs), manual, "{}", w.name());
+            assert!(manual > 0);
         }
     }
 

@@ -95,6 +95,26 @@ pub struct CostModel {
     /// on the worker hot path (one flag load + one counter
     /// fetch-add on owned cache lines).
     pub cancel_check: f64,
+
+    // --- Microkernel costs (SIMD + packing model) --------------------
+    /// Vector width in f32 lanes for the packed microkernel paths
+    /// (SSE-class baseline; the model is about shape, not peak).
+    pub simd_lanes: f64,
+    /// Cycles per element to pack/unpack a tile into contiguous panel
+    /// storage (one load + one store, mostly L1-resident).
+    pub simd_pack_cycles_per_elem: f64,
+    /// Fixed per-kernel-invocation cost of the vector path (CPU-level
+    /// dispatch, panel pointer setup, remainder bookkeeping).
+    pub simd_setup_cycles: f64,
+    /// Throughput gain of `KernelMode::Fast`'s paired-accumulator
+    /// reduction over the bit-identical order (ILP from breaking the
+    /// serial dependence chain).
+    pub fast_ilp_gain: f64,
+    /// Per-tile L1 data cache capacity in bytes (TILEPro64: 8 KB).
+    /// Three resident `bs×bs` f32 tiles beyond this spill to L2.
+    pub l1_data_bytes: f64,
+    /// Slowdown factor once a kernel's working set spills L1.
+    pub l1_spill_factor: f64,
 }
 
 impl Default for CostModel {
@@ -121,6 +141,12 @@ impl Default for CostModel {
             pool_submit: 500.0,
             retry_resubmit: 650.0,
             cancel_check: 2.0,
+            simd_lanes: 4.0,
+            simd_pack_cycles_per_elem: 0.5,
+            simd_setup_cycles: 40.0,
+            fast_ilp_gain: 1.3,
+            l1_data_bytes: 8192.0,
+            l1_spill_factor: 3.0,
         }
     }
 }
@@ -150,6 +176,42 @@ impl CostModel {
     /// regardless of how many tiles participate.
     pub fn mem_floor(&self, bytes: u64) -> u64 {
         (bytes as f64 / self.mem_bw_bytes_per_cycle) as u64
+    }
+
+    /// L1 spill multiplier for a block kernel at block size `bs`:
+    /// three `bs×bs` f32 tiles (two reads + one write) either fit in
+    /// the per-tile L1 or the whole kernel streams at L2 speed.
+    pub fn spill(&self, bs: usize) -> f64 {
+        if 3.0 * (bs * bs) as f64 * 4.0 > self.l1_data_bytes {
+            self.l1_spill_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Cycles for one scalar block-kernel invocation of `flops`
+    /// floating-point operations at block size `bs`.
+    pub fn kernel_scalar(&self, flops: u64, bs: usize) -> f64 {
+        flops as f64 * self.cycles_per_flop * self.spill(bs)
+    }
+
+    /// Cycles for one packed/SIMD block-kernel invocation: compute
+    /// divided by lane utilisation (rows of `bs` elements split into
+    /// `ceil(bs/lanes)` vectors), plus the pack copy and the fixed
+    /// dispatch/setup cost, all under the same spill multiplier.
+    /// `fast` applies the paired-accumulator ILP gain on top.
+    pub fn kernel_simd(&self, flops: u64, bs: usize, fast: bool) -> f64 {
+        let lanes = self.simd_lanes.max(1.0);
+        let rows = (bs as f64 / lanes).ceil().max(1.0);
+        let util = bs as f64 / (lanes * rows);
+        let mut compute =
+            flops as f64 * self.cycles_per_flop / (lanes * util);
+        if fast {
+            compute /= self.fast_ilp_gain;
+        }
+        let pack =
+            self.simd_pack_cycles_per_elem * (bs * bs) as f64;
+        (compute + pack + self.simd_setup_cycles) * self.spill(bs)
     }
 }
 
@@ -203,6 +265,60 @@ mod tests {
         assert!(c.retry_resubmit > c.pool_submit);
         assert!(c.thread_spawn > 20.0 * c.retry_resubmit);
         assert!(c.cancel_check * 10.0 < c.steal_deque_op);
+    }
+
+    #[test]
+    fn kernel_model_simd_wins_at_useful_block_sizes() {
+        // Acceptance shape: the packed/SIMD path must never model
+        // slower than scalar at bs >= 8 — lane utilisation is full
+        // there and the pack+setup overhead amortises over b³ work.
+        let c = CostModel::default();
+        for bs in [8usize, 16, 32] {
+            let flops = 2 * (bs as u64).pow(3); // the update kernels
+            assert!(
+                c.kernel_simd(flops, bs, false)
+                    <= c.kernel_scalar(flops, bs),
+                "simd slower than scalar at bs={bs}"
+            );
+            // Fast mode strictly improves on the bit-identical order.
+            assert!(
+                c.kernel_simd(flops, bs, true)
+                    < c.kernel_simd(flops, bs, false)
+            );
+        }
+        // Hand anchor at bs=8, 2b³ flops: scalar 1024*2 = 2048 cycles;
+        // simd = 2048/4 + 0.5*64 + 40 = 584.
+        assert_eq!(c.kernel_scalar(1024, 8), 2048.0);
+        assert_eq!(c.kernel_simd(1024, 8, false), 584.0);
+    }
+
+    #[test]
+    fn kernel_model_spill_threshold() {
+        // Three 32×32 f32 tiles are 12 KB > 8 KB L1: both paths take
+        // the same spill multiplier, so the simd/scalar ratio is
+        // preserved across the threshold.
+        let c = CostModel::default();
+        assert_eq!(c.spill(8), 1.0);
+        assert_eq!(c.spill(16), 1.0);
+        assert_eq!(c.spill(32), c.l1_spill_factor);
+        let flops = 2 * 32u64.pow(3);
+        let roomy = CostModel {
+            l1_data_bytes: 1e9,
+            ..c.clone()
+        };
+        let factor = c.l1_spill_factor;
+        assert!(
+            (c.kernel_scalar(flops, 32)
+                - factor * roomy.kernel_scalar(flops, 32))
+            .abs()
+                < 1e-9
+        );
+        assert!(
+            (c.kernel_simd(flops, 32, false)
+                - factor * roomy.kernel_simd(flops, 32, false))
+            .abs()
+                < 1e-9
+        );
     }
 
     #[test]

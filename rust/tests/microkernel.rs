@@ -1,0 +1,220 @@
+//! Integration suite for the microkernel layer through the public
+//! API: SIMD-vs-scalar dispatch equality, packed-tile round trips,
+//! the fast-mode residual bound, and the end-to-end conformance run
+//! with startup autotuning enabled. Runs in its own process, so the
+//! global tuned-size cache needs no cross-test serialisation here
+//! beyond using one test for everything that touches it.
+//!
+//! CI runs this suite twice — default features and `--features simd`
+//! — in release mode, so the intrinsic paths execute under the exact
+//! assertions the scalar build establishes.
+
+use gprm::apps::dataflow::{run_workload_mode, DataflowRt};
+use gprm::linalg::autotune::{
+    autotune_registry, tune, Calibrator, HostCalibrator, ModelCalibrator,
+    CANDIDATE_BS,
+};
+use gprm::linalg::dense::DenseMatrix;
+use gprm::linalg::microkernel::{
+    bmod_mk, gemm_nt_mk, madd_mk, simd_level, syrk_mk, trsm_mk,
+    KernelMode, PackedTile, SimdLevel,
+};
+use gprm::omp::OmpRuntime;
+use gprm::sched::workload::{
+    clear_tuned_bs, registry, tuned_bs, Params, Workload,
+};
+use gprm::sched::ExecOpts;
+use gprm::tilesim::CostModel;
+
+fn block(bs: usize, seed: u32) -> Vec<f32> {
+    DenseMatrix::bots_random(bs, bs, seed).as_slice().to_vec()
+}
+
+fn rel_diff(a: &[f32], b: &[f32]) -> f64 {
+    let scale = a
+        .iter()
+        .fold(0f64, |m, &x| m.max(f64::from(x).abs()))
+        .max(1e-30);
+    a.iter()
+        .zip(b)
+        .fold(0f64, |m, (&x, &y)| m.max((f64::from(x) - f64::from(y)).abs()))
+        / scale
+}
+
+#[test]
+fn dispatch_level_matches_build_features() {
+    // Without the `simd` feature the dispatcher is the scalar constant;
+    // with it, whatever the CPU supports (still allowed to be scalar).
+    if !cfg!(feature = "simd") {
+        assert_eq!(simd_level(), SimdLevel::Scalar);
+    }
+    // Either way the level must be stable across calls (cached).
+    assert_eq!(simd_level(), simd_level());
+}
+
+#[test]
+fn packed_tiles_round_trip_through_the_public_api() {
+    for bs in [1usize, 3, 4, 7, 8, 16] {
+        let src = block(bs, 11);
+        let mut back = vec![0.0f32; bs * bs];
+        PackedTile::pack(&src, bs).unpack_into(&mut back);
+        assert_eq!(src, back, "pack/unpack bs={bs}");
+        let mut tback = vec![0.0f32; bs * bs];
+        PackedTile::pack_transposed(&src, bs)
+            .unpack_transposed_into(&mut tback);
+        assert_eq!(src, tback, "transposed pack/unpack bs={bs}");
+    }
+}
+
+#[test]
+fn bit_identical_mode_is_exact_across_dispatch_levels() {
+    // Whatever level the build dispatches (scalar here; SSE2/AVX under
+    // `--features simd` on x86-64), BitIdentical must produce the same
+    // f32 bits as the scalar reference semantics. The in-crate unit
+    // tests pin the reference; this pins the public surface per build.
+    for bs in [4usize, 8, 16] {
+        let (a, b, c0) = (block(bs, 21), block(bs, 22), block(bs, 23));
+
+        let mut c1 = c0.clone();
+        bmod_mk(KernelMode::BitIdentical, &a, &b, &mut c1, bs);
+        let mut c2 = c0.clone();
+        gprm::linalg::lu::bmod(&a, &b, &mut c2, bs);
+        assert_eq!(c1, c2, "bmod bs={bs}");
+
+        let mut g1 = c0.clone();
+        gemm_nt_mk(KernelMode::BitIdentical, &a, &b, &mut g1, bs);
+        let mut g2 = c0.clone();
+        gprm::linalg::cholesky::gemm_nt(&a, &b, &mut g2, bs);
+        assert_eq!(g1, g2, "gemm_nt bs={bs}");
+
+        let mut s1 = c0.clone();
+        syrk_mk(KernelMode::BitIdentical, &a, &mut s1, bs);
+        let mut s2 = c0.clone();
+        gprm::linalg::cholesky::syrk(&a, &mut s2, bs);
+        assert_eq!(s1, s2, "syrk bs={bs}");
+
+        let spd = gprm::linalg::cholesky::gen_spd(1, bs);
+        let mut diag = spd.block(0, 0).unwrap().to_vec();
+        gprm::linalg::cholesky::potrf(&mut diag, bs);
+        let mut t1 = c0.clone();
+        trsm_mk(KernelMode::BitIdentical, &diag, &mut t1, bs);
+        let mut t2 = c0.clone();
+        gprm::linalg::cholesky::trsm(&diag, &mut t2, bs);
+        assert_eq!(t1, t2, "trsm bs={bs}");
+
+        let mut m1 = c0.clone();
+        madd_mk(KernelMode::BitIdentical, &a, &b, &mut m1, bs);
+        let mut m2 = c0.clone();
+        gprm::sched::workload::madd(&a, &b, &mut m2, bs);
+        assert_eq!(m1, m2, "madd bs={bs}");
+    }
+}
+
+#[test]
+fn fast_mode_is_residual_bounded_on_every_kernel() {
+    for bs in [4usize, 8, 9, 16] {
+        let (a, b, c0) = (block(bs, 41), block(bs, 42), block(bs, 43));
+        let mut bit = c0.clone();
+        let mut fast = c0.clone();
+        bmod_mk(KernelMode::BitIdentical, &a, &b, &mut bit, bs);
+        bmod_mk(KernelMode::Fast, &a, &b, &mut fast, bs);
+        assert!(rel_diff(&bit, &fast) <= 1e-5, "bmod bs={bs}");
+        let mut bit = c0.clone();
+        let mut fast = c0.clone();
+        madd_mk(KernelMode::BitIdentical, &a, &b, &mut bit, bs);
+        madd_mk(KernelMode::Fast, &a, &b, &mut fast, bs);
+        assert!(rel_diff(&bit, &fast) <= 1e-5, "madd bs={bs}");
+    }
+}
+
+#[test]
+fn conformance_holds_with_autotune_enabled() {
+    // The full `--autotune on` path: tune every workload, cache the
+    // winners, then run each at its tuned sizing on a real host —
+    // results must stay bit-identical to the sequential reference in
+    // the conformance default, and residual-bounded in fast mode.
+    // This test owns the process-global tuned cache (its own binary).
+    let n = 64;
+    let results = autotune_registry(n, &ModelCalibrator::new(4));
+    assert_eq!(results.len(), registry().len());
+    let rt = OmpRuntime::new(4);
+    for (w, r) in registry().iter().zip(&results) {
+        let bs = tuned_bs(*w).expect("autotune cached a winner");
+        assert_eq!(bs, r.best_bs);
+        assert!(n % bs == 0, "{}: tuned bs divides n", w.name());
+        let p = Params::new(n / bs, bs);
+        let orig = w.make_input(&p, 0);
+        let mut want = w.make_input(&p, 0);
+        w.reference_seq(&mut want);
+        let mut got = w.make_input(&p, 0);
+        run_workload_mode(
+            &DataflowRt::Omp(&rt),
+            *w,
+            &mut got,
+            ExecOpts::default(),
+            KernelMode::BitIdentical,
+        )
+        .unwrap_or_else(|e| panic!("{}: {e:?}", w.name()));
+        w.verify_bits(&got, &want)
+            .unwrap_or_else(|e| panic!("tuned bs={bs}: {e}"));
+        let mut fast = w.make_input(&p, 0);
+        run_workload_mode(
+            &DataflowRt::Omp(&rt),
+            *w,
+            &mut fast,
+            ExecOpts::default(),
+            KernelMode::Fast,
+        )
+        .unwrap_or_else(|e| panic!("{}: {e:?}", w.name()));
+        let res = w.residual(&orig, &fast);
+        assert!(res < 1e-3, "{} fast residual {res}", w.name());
+    }
+    rt.shutdown();
+    clear_tuned_bs();
+    assert!(registry().iter().all(|w| tuned_bs(*w).is_none()));
+}
+
+#[test]
+fn model_and_host_calibrators_agree_on_the_sweep_shape() {
+    // Both calibrators must produce a full sweep at n=128; the model's
+    // winner is interior by construction. The host winner depends on
+    // this machine, so only the sweep's completeness is asserted.
+    let w = &gprm::sched::workload::Cholesky;
+    let m = tune(w, 128, &ModelCalibrator::new(1));
+    assert_eq!(m.candidates.len(), CANDIDATE_BS.len());
+    assert!(m.best_bs == 8 || m.best_bs == 16, "model best {}", m.best_bs);
+    let h = tune(w, 128, &HostCalibrator::new());
+    assert_eq!(h.candidates.len(), CANDIDATE_BS.len());
+    assert!(h.candidates.iter().all(|&(_, c)| c > 0.0));
+}
+
+#[test]
+fn simd_pricing_never_slower_at_acceptance_sizes() {
+    // The acceptance machine-check, through the public API: packed/
+    // SIMD never prices above scalar at bs >= 8 in the cost model.
+    let c = CostModel::default();
+    for w in registry() {
+        for bs in [8usize, 16, 32] {
+            let p = Params::new(4, bs);
+            let scalar = ModelCalibrator {
+                cost: c.clone(),
+                workers: 1,
+                simd: false,
+                fast: false,
+            }
+            .cost(*w, &p);
+            let simd = ModelCalibrator {
+                cost: c.clone(),
+                workers: 1,
+                simd: true,
+                fast: false,
+            }
+            .cost(*w, &p);
+            assert!(
+                simd <= scalar,
+                "{} bs={bs}: {simd} > {scalar}",
+                w.name()
+            );
+        }
+    }
+}
