@@ -261,6 +261,7 @@ fn main() {
             task_capacity: n_tasks,
             max_jobs: N_JOBS,
             max_pending: None,
+            domains: 1,
         });
         let mut best = [f64::MAX; 2];
         // Warmups, then best-of-SAMPLES for each regime.

@@ -652,6 +652,40 @@ fn dataflow_workload(
         ]);
     }
     tables.push(t2);
+    // Locality comparison: uniform steal victims vs nearest-first
+    // stealing with distance-priced steal hits and home-domain
+    // placement (`SchedModel::LocalitySteal`, D = min(2, workers)
+    // affinity domains — the mesh model's random-vs-nearest crossover,
+    // predicted before any host measurement).
+    let mut t3 = Table::new(
+        &format!(
+            "Locality — {name} NB={nb}, BS={bs}: uniform vs nearest-first steal victims"
+        ),
+        &["workers", "steal (s)", "steal-local (s)", "steal ktask/s", "local ktask/s", "local gain"],
+    );
+    let mut local_gains = Vec::new();
+    let mut local_eq_at_one = true;
+    for &w in &workers {
+        let uniform = dag(w, SchedModel::WorkSteal);
+        let local = dag(
+            w,
+            SchedModel::LocalitySteal { domains: w.min(2) },
+        );
+        let gain = uniform.cycles as f64 / local.cycles as f64;
+        if w == 1 {
+            local_eq_at_one = uniform.cycles == local.cycles;
+        }
+        local_gains.push((w, gain));
+        t3.row(vec![
+            w.to_string(),
+            vsec(uniform.cycles),
+            vsec(local.cycles),
+            format!("{:.0}", ktps(&uniform)),
+            format!("{:.0}", ktps(&local)),
+            spd(gain),
+        ]);
+    }
+    tables.push(t3);
     checks.push(ShapeCheck::new(
         &format!("{name}: DAG beats the best phase-barrier schedule at every tile count >= 16"),
         at_scale.iter().all(|&g| g > 1.0),
@@ -679,6 +713,30 @@ fn dataflow_workload(
         &format!("{name}: the scoreboard's claim cost grows with workers (steal gain widens)"),
         steal_gains.windows(2).all(|w| w[1].1 > w[0].1),
         format!("{steal_gains:?}"),
+    ));
+    checks.push(ShapeCheck::new(
+        &format!("{name}: locality stealing is cycle-identical on one worker (nothing to steal)"),
+        local_eq_at_one,
+        format!("{local_gains:?}"),
+    ));
+    checks.push(ShapeCheck::new(
+        &format!("{name}: nearest-first victims beat uniform stealing at every count >= 8 workers"),
+        local_gains
+            .iter()
+            .filter(|&&(w, _)| w >= 8)
+            .all(|&(_, g)| g > 1.002),
+        format!("{local_gains:?}"),
+    ));
+    checks.push(ShapeCheck::new(
+        &format!("{name}: the locality win widens with the team (gain at 16 beats gain at 2)"),
+        local_gains.last().map(|&(_, g)| g)
+            > local_gains.get(1).map(|&(_, g)| g),
+        format!("{local_gains:?}"),
+    ));
+    checks.push(ShapeCheck::new(
+        &format!("{name}: distance-priced steals never lose, even on small teams"),
+        local_gains.iter().all(|&(_, g)| g > 0.999),
+        format!("{local_gains:?}"),
     ));
 }
 
@@ -774,6 +832,40 @@ fn throughput(scale: Scale) -> ExperimentReport {
             spd(gain),
         ]);
     }
+    // Pool locality: the same stream with nearest-first stealing and
+    // per-job home domains (`SchedModel::LocalitySteal`) against the
+    // uniform-victim pool — the persistent-pool half of the locality
+    // crossover prediction.
+    use crate::tilesim::SchedModel;
+    let mut t_loc = Table::new(
+        &format!(
+            "Locality — {n_jobs} mixed jobs NB={nb}, BS={bs}: pool with \
+             uniform vs nearest-first steal victims"
+        ),
+        &["workers", "steal (s)", "steal-local (s)", "local gain"],
+    );
+    let mut local_gains = Vec::new();
+    let mut local_eq_at_one = true;
+    for &w in &workers {
+        let uniform = DataflowSim::tilepro(w)
+            .run_jobs(&jobs, LaunchModel::PersistentPool);
+        let local = DataflowSim::with_sched(
+            w,
+            SchedModel::LocalitySteal { domains: w.min(2) },
+        )
+        .run_jobs(&jobs, LaunchModel::PersistentPool);
+        let gain = uniform.cycles as f64 / local.cycles as f64;
+        if w == 1 {
+            local_eq_at_one = uniform.cycles == local.cycles;
+        }
+        local_gains.push((w, gain));
+        t_loc.row(vec![
+            w.to_string(),
+            vsec(uniform.cycles),
+            vsec(local.cycles),
+            spd(gain),
+        ]);
+    }
     let checks = vec![
         ShapeCheck::new(
             "pool beats per-launch executor spawn on jobs/sec at every count >= 4 workers",
@@ -798,8 +890,30 @@ fn throughput(scale: Scale) -> ExperimentReport {
                 .all(|&(_, g)| g > 1.01),
             format!("{overlaps:?}"),
         ),
+        ShapeCheck::new(
+            "pool locality stealing is cycle-identical on one worker (nothing to steal)",
+            local_eq_at_one,
+            format!("{local_gains:?}"),
+        ),
+        ShapeCheck::new(
+            "nearest-first victims beat the uniform pool at every count >= 4 workers",
+            local_gains
+                .iter()
+                .filter(|&&(w, _)| w >= 4)
+                .all(|&(_, g)| g > 1.002),
+            format!("{local_gains:?}"),
+        ),
+        ShapeCheck::new(
+            "pool locality never loses, even on 1-2 workers",
+            local_gains.iter().all(|&(_, g)| g > 0.999),
+            format!("{local_gains:?}"),
+        ),
     ];
-    ExperimentReport { id: "throughput".into(), tables: vec![t], checks }
+    ExperimentReport {
+        id: "throughput".into(),
+        tables: vec![t, t_loc],
+        checks,
+    }
 }
 
 // --- Scenario engine: adversarial streams, executable invariants --------

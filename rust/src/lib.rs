@@ -159,6 +159,32 @@
 //! the team size); the CLI front end is `gprm sparselu --runtime
 //! pool --jobs N --app sparselu|cholesky|matmul|mixed`.
 //!
+//! # Locality & topology
+//!
+//! Work stealing is **locality-aware** ([`sched::topo::Topology`]):
+//! the worker team splits into contiguous **affinity domains**
+//! (`--domains N`, [`sched::ExecOpts::with_domains`] on the one-shot
+//! executors, [`sched::PoolConfig::with_domains`] on the pool;
+//! default 1 = the flat team, clamped to the worker count), each
+//! worker gets a precomputed **nearest-first victim order** — own
+//! domain first, then by domain distance, seeded rotation within each
+//! ring so same-domain workers don't convoy on one victim — and the
+//! pool adds **home-domain seeding**: jobs are assigned a preferred
+//! domain round-robin at admission, roots enter that domain's
+//! injector, and released successors chase the domain that last wrote
+//! their write-block (a relaxed last-writer hint table), so a block's
+//! producer and consumer tend to share a domain's caches. Workers pin
+//! to cores only when `domains > 1`. Locality is a pure scheduling
+//! change — it moves *where* a task runs, never the per-block
+//! operation order — so f32 bit-identity to the sequential reference
+//! is preserved verbatim (re-proved by the conformance suite with
+//! `domains = 2` on all hosts). The virtual-time counterpart is
+//! [`tilesim::SchedModel::LocalitySteal`], which prices each off-home
+//! claim by mesh distance (`CostModel::steal_hit`) and predicts the
+//! uniform-vs-nearest crossover before any host measurement (`gprm
+//! exp dataflow` / `gprm exp throughput` locality tables,
+//! `benches/locality.rs` → `steal-local` rows in `BENCH_sched.json`).
+//!
 //! # Scenario engine
 //!
 //! The pool's contracts are exercised beyond uniform streams by the

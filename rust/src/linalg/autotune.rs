@@ -9,14 +9,17 @@
 //! *matrix* size `n = nb·bs` fixed, re-derives `(nb, bs)` for each
 //! candidate, and scores each point with a [`Calibrator`]:
 //!
-//! * [`ModelCalibrator`] prices the full task graph on the TILEPro64
-//!   cycle model ([`CostModel`]) — deterministic, instant, the
-//!   default for `--autotune on` and the harness `kernels`
-//!   experiment;
 //! * [`HostCalibrator`] times the workload's flop-dominant block
 //!   kernel on this machine with a short warm calibration run and
-//!   extrapolates over the graph's total flops — a real measurement
-//!   for bench-style use.
+//!   extrapolates over the graph's total flops — a real measurement,
+//!   and the default behind `--autotune on` ([`cli_calibrator`] is
+//!   the CLI's routing table). If the host clock cannot resolve the
+//!   calibration kernel it falls back to the model below;
+//! * [`ModelCalibrator`] prices the full task graph on the TILEPro64
+//!   cycle model ([`CostModel`]) — deterministic, instant, selected
+//!   by `--autotune model` and used by the harness `kernels`
+//!   experiment (which asserts exact modelled crossovers, so it must
+//!   not depend on host noise).
 //!
 //! The winner is cached per registry entry via
 //! [`crate::sched::workload::set_tuned_bs`]; tuned sizes only ever
@@ -156,6 +159,13 @@ impl Calibrator for HostCalibrator {
         black_box(&write);
         let per_call =
             t0.elapsed().as_secs_f64() / f64::from(self.reps.max(1));
+        if per_call <= 0.0 || !per_call.is_finite() {
+            // The host clock could not resolve the kernel (coarse
+            // timer, or a degenerate sizing finished below tick
+            // granularity): fall back to the deterministic model so
+            // `--autotune on` always ranks candidates meaningfully.
+            return ModelCalibrator::new(1).cost(w, p);
+        }
         let per_call_flops =
             (w.ops()[dom].flops)(bs).max(1) as f64;
         w.graph_flops(&g, bs) as f64 * (per_call / per_call_flops)
@@ -219,6 +229,22 @@ pub fn tune(
         })
         .0;
     TuneResult { workload: w.name(), n, candidates, best_bs }
+}
+
+/// The CLI's `--autotune` routing table: `"on"` selects the
+/// runtime-measured [`HostCalibrator`] (the default tuning path —
+/// real block kernels on this machine), `"model"` the deterministic
+/// [`ModelCalibrator`] at `workers` workers. Anything else (including
+/// `"off"`, which the CLI handles before tuning) is `None`.
+pub fn cli_calibrator(
+    mode: &str,
+    workers: usize,
+) -> Option<Box<dyn Calibrator>> {
+    match mode {
+        "on" => Some(Box::new(HostCalibrator::new())),
+        "model" => Some(Box::new(ModelCalibrator::new(workers))),
+        _ => None,
+    }
 }
 
 /// The startup pass behind `--autotune on`: tune every registered
@@ -323,6 +349,17 @@ mod tests {
             assert_eq!(tuned_bs(*w), Some(r.best_bs));
         }
         clear_tuned_bs();
+    }
+
+    #[test]
+    fn cli_flag_routes_on_to_the_host_calibrator() {
+        // The satellite's acceptance: `--autotune on` must reach the
+        // runtime-measured path, `model` the deterministic one, and
+        // anything else (incl. `off`) must route nowhere.
+        assert_eq!(cli_calibrator("on", 4).unwrap().name(), "host");
+        assert_eq!(cli_calibrator("model", 4).unwrap().name(), "model");
+        assert!(cli_calibrator("off", 4).is_none());
+        assert!(cli_calibrator("sideways", 4).is_none());
     }
 
     #[test]

@@ -37,7 +37,7 @@ use gprm::coordinator::{GprmConfig, GprmRuntime};
 use gprm::harness::{
     fault_repro, run_experiment, scenario_repro, Scale, ALL_EXPERIMENTS,
 };
-use gprm::linalg::autotune::{autotune_registry, ModelCalibrator};
+use gprm::linalg::autotune::{autotune_registry, cli_calibrator};
 use gprm::linalg::blocked::BlockedSparseMatrix;
 use gprm::linalg::genmat::genmat;
 use gprm::linalg::lu::sparselu_seq;
@@ -244,8 +244,9 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
         OptSpec { name: "pjrt", help: "execute block kernels via PJRT artifacts (sparselu only)", default: None, is_flag: true },
         OptSpec { name: "pin", help: "pin gprm tiles to cores", default: None, is_flag: true },
         OptSpec { name: "steal", help: "dataflow executor: on = lock-free work stealing (default), off = mutex-scoreboard baseline", default: Some("on"), is_flag: false },
+        OptSpec { name: "domains", help: "affinity domains for locality-aware stealing (dataflow + pool runtimes): workers steal nearest-domain-first, pool jobs seed into per-job domains; 1 = flat team (default), clamped to the worker count", default: Some("1"), is_flag: false },
         OptSpec { name: "events", help: "dataflow: record the schedule event log and audit it", default: None, is_flag: true },
-        OptSpec { name: "autotune", help: "on = sweep candidate block sizes at startup (cycle-model calibration), cache winners in the registry and re-derive nb/bs at fixed n (mixed keeps the requested sizing)", default: Some("off"), is_flag: false },
+        OptSpec { name: "autotune", help: "on = sweep candidate block sizes at startup with runtime-measured host calibration (falls back to the cycle model if timing cannot resolve), model = deterministic cycle-model calibration, off = keep the requested sizing; winners are cached in the registry and nb/bs re-derived at fixed n (mixed keeps the requested sizing)", default: Some("off"), is_flag: false },
         OptSpec { name: "kernels", help: "bit = bit-identical microkernels (conformance default) | fast = residual-bounded vectorised accumulation (dataflow runtimes only; see DIVERGENCES.md)", default: Some("bit"), is_flag: false },
         OptSpec { name: "list-apps", help: "print the workload registry and exit", default: None, is_flag: true },
     ];
@@ -284,7 +285,12 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let exec = ExecOpts { steal, record_events: args.has_flag("events") };
+    let domains = args.get_parse("domains", 1usize).unwrap().max(1);
+    let exec = ExecOpts {
+        steal,
+        record_events: args.has_flag("events"),
+        domains,
+    };
     let n_jobs = args.get_parse("jobs", 1usize).unwrap();
     let app = args.get("app").unwrap_or("sparselu").to_string();
     if app != "mixed" && workload::find(&app).is_none() {
@@ -322,10 +328,13 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
     }
     let (nb, bs) = match args.get("autotune").unwrap_or("off") {
         "off" => (nb, bs),
-        "on" => {
+        mode if cli_calibrator(mode, threads).is_some() => {
             let n = nb * bs;
-            let cal = ModelCalibrator::new(threads);
-            let results = autotune_registry(n, &cal);
+            // "on" → runtime-measured host calibration (the default
+            // tuning path); "model" → the deterministic cycle model.
+            let cal = cli_calibrator(mode, threads).unwrap();
+            let results = autotune_registry(n, cal.as_ref());
+            println!("autotune: {} calibration", cal.name());
             for r in &results {
                 let sweep: Vec<String> = r
                     .candidates
@@ -362,7 +371,7 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             }
         }
         other => {
-            eprintln!("--autotune must be on|off, got {other:?}");
+            eprintln!("--autotune must be on|model|off, got {other:?}");
             return 2;
         }
     };
@@ -382,7 +391,7 @@ fn cmd_sparselu(argv: &[String]) -> i32 {
             );
             return 2;
         }
-        return run_pool_jobs(&app, nb, bs, threads, n_jobs.max(1));
+        return run_pool_jobs(&app, nb, bs, threads, n_jobs.max(1), domains);
     }
     if app == "mixed" {
         eprintln!("--app mixed requires --runtime pool");
@@ -603,6 +612,7 @@ fn run_pool_jobs(
     bs: usize,
     threads: usize,
     n_jobs: usize,
+    domains: usize,
 ) -> i32 {
     let reg = workload::registry();
     let stream: Vec<&'static dyn Workload> = if app == "mixed" {
@@ -657,10 +667,12 @@ fn run_pool_jobs(
         task_capacity: total_tasks,
         max_jobs: n_jobs,
         max_pending: None,
+        domains,
     });
     println!(
-        "pool: {threads} workers, {n_jobs} {app} job(s), {total_tasks} \
-         tasks total (deque capacity {})",
+        "pool: {threads} workers, {} affinity domain(s), {n_jobs} {app} \
+         job(s), {total_tasks} tasks total (deque capacity {})",
+        domains.clamp(1, threads),
         pool.task_capacity()
     );
     let mut session = Session::new(&pool);

@@ -74,23 +74,36 @@ pub struct ExecOpts {
     /// schedules turn it on and feed [`ExecStats::events`] to
     /// [`check_event_ordering`].
     pub record_events: bool,
+    /// Affinity domains for locality-aware victim selection
+    /// ([`crate::sched::topo::Topology`]): the steal scan probes
+    /// own-domain victims first, then outward by domain distance,
+    /// seeded-rotated within each ring. `1` (default) keeps a flat
+    /// team — the scan degenerates to a rotated ring over everyone.
+    /// Ignored by the mutex baseline (no deques to steal from).
+    pub domains: usize,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        Self { steal: true, record_events: false }
+        Self { steal: true, record_events: false, domains: 1 }
     }
 }
 
 impl ExecOpts {
     /// The mutex-scoreboard baseline, log off.
     pub fn mutex_baseline() -> Self {
-        Self { steal: false, record_events: false }
+        Self { steal: false, record_events: false, domains: 1 }
     }
 
     /// Same executor, with the event log on.
     pub fn with_events(self) -> Self {
         Self { record_events: true, ..self }
+    }
+
+    /// Same executor, with the team split into `domains` affinity
+    /// domains (clamped to the worker count at launch).
+    pub fn with_domains(self, domains: usize) -> Self {
+        Self { domains, ..self }
     }
 }
 
@@ -216,10 +229,23 @@ struct StealExec<'g> {
     /// when the log is off.
     logs: Vec<Mutex<EventBuf>>,
     record: bool,
+    /// Per-worker steal-victim orders (nearest affinity domain first;
+    /// see [`crate::sched::topo::Topology::victim_order`]).
+    victims: Vec<Vec<usize>>,
 }
 
+/// Fixed seed for the executor's victim-ring rotations: runs are
+/// reproducible, and different workers still rotate differently
+/// (the seed is mixed with the worker id).
+const VICTIM_SEED: u64 = 0x5eed_10ca_11ce_5a1e;
+
 impl<'g> StealExec<'g> {
-    fn new(graph: &'g TaskGraph, n_workers: usize, record: bool) -> Self {
+    fn new(
+        graph: &'g TaskGraph,
+        n_workers: usize,
+        record: bool,
+        domains: usize,
+    ) -> Self {
         let n = graph.len();
         let deques: Vec<StealDeque> =
             (0..n_workers).map(|_| StealDeque::with_capacity(n)).collect();
@@ -235,6 +261,10 @@ impl<'g> StealExec<'g> {
             deques[i % n_workers].push(t);
         }
         let cap = if record { 2 * n / n_workers.max(1) + 2 } else { 0 };
+        let topo = crate::sched::topo::Topology::new(n_workers, domains);
+        let victims = (0..n_workers)
+            .map(|w| topo.victim_order(w, VICTIM_SEED))
+            .collect();
         Self {
             graph,
             deques,
@@ -248,6 +278,7 @@ impl<'g> StealExec<'g> {
                 .map(|_| Mutex::new(Vec::with_capacity(cap)))
                 .collect(),
             record,
+            victims,
         }
     }
 
@@ -255,7 +286,6 @@ impl<'g> StealExec<'g> {
     /// else back off; until the graph drains or a sibling poisons.
     fn work(&self, w: usize, run: &(dyn Fn(TaskId) + Sync)) {
         let me = &self.deques[w];
-        let n_workers = self.deques.len();
         let mut log = if self.record {
             Some(self.logs[w].lock().unwrap())
         } else {
@@ -268,7 +298,7 @@ impl<'g> StealExec<'g> {
             {
                 return;
             }
-            let task = me.pop().or_else(|| self.try_steal(w, n_workers));
+            let task = me.pop().or_else(|| self.try_steal(w));
             match task {
                 Some(t) => {
                     backoff.reset();
@@ -279,12 +309,14 @@ impl<'g> StealExec<'g> {
         }
     }
 
-    /// One round of stealing: scan every other deque once, starting
-    /// after our own (`Abort` counts as a miss; the backoff loop
-    /// retries the whole scan).
-    fn try_steal(&self, w: usize, n_workers: usize) -> Option<usize> {
-        for k in 1..n_workers {
-            match self.deques[(w + k) % n_workers].steal() {
+    /// One round of stealing: probe every other deque once in this
+    /// worker's precomputed victim order — own affinity domain first,
+    /// then outward by domain distance, seeded-rotated within each
+    /// ring (`Abort` counts as a miss; the backoff loop retries the
+    /// whole scan). With one domain this is the classic rotated ring.
+    fn try_steal(&self, w: usize) -> Option<usize> {
+        for &v in &self.victims[w] {
+            match self.deques[v].steal() {
                 Steal::Taken(t) => return Some(t),
                 Steal::Empty | Steal::Abort => {}
             }
@@ -492,7 +524,12 @@ fn run_with(
     spawn: impl FnOnce(&(dyn Fn(usize) + Sync)) -> Result<(), String>,
 ) -> Result<ExecStats, String> {
     let stats = if opts.steal {
-        let ex = StealExec::new(graph, n_workers, opts.record_events);
+        let ex = StealExec::new(
+            graph,
+            n_workers,
+            opts.record_events,
+            opts.domains,
+        );
         let exr = &ex;
         spawn(&|w| exr.work(w, run))?;
         ex.into_stats()
@@ -614,6 +651,37 @@ mod tests {
             check_event_ordering(&g, &stats.events).unwrap();
         }
         rt.shutdown();
+    }
+
+    #[test]
+    fn locality_domains_execute_every_task_in_edge_order() {
+        // The locality layer changes victim *order*, never the
+        // protocol: with the team split into affinity domains the
+        // executor must still drain every task in a legal schedule,
+        // on both host runtimes.
+        let g = lu_graph(8);
+        let omp = OmpRuntime::new(4);
+        let gprm = GprmRuntime::with_tiles(4);
+        for domains in [2usize, 4, 7] {
+            let opts = ExecOpts::default().with_events().with_domains(domains);
+            let hits = AtomicUsize::new(0);
+            let stats = execute_omp_opts(
+                &omp,
+                &g,
+                |_| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                },
+                opts,
+            )
+            .unwrap();
+            assert_eq!(hits.load(Ordering::Relaxed), g.len());
+            check_event_ordering(&g, &stats.events).unwrap();
+            let stats = execute_gprm_opts(&gprm, &g, |_| {}, opts).unwrap();
+            assert_eq!(stats.executed, g.len());
+            check_event_ordering(&g, &stats.events).unwrap();
+        }
+        omp.shutdown();
+        gprm.shutdown();
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   slices — nothing allocates per executor launch.
 //! * [`deque`] — [`deque::StealDeque`]: a hand-rolled, fixed-capacity
 //!   Chase–Lev work-stealing deque (owner-LIFO / stealer-FIFO).
+//! * [`topo`] — [`topo::Topology`]: the locality layer — contiguous
+//!   affinity domains over the worker team and precomputed
+//!   nearest-first steal-victim orders (own domain first, then by
+//!   domain distance, seeded rotation within each ring), consulted by
+//!   both the one-shot executors and the persistent pool.
 //! * [`exec`] — the **one-shot** executors over both host runtimes
 //!   ([`exec::execute_omp_opts`], [`exec::execute_gprm_opts`]): the
 //!   lock-free work-stealing executor by default, the PR-1 mutex
@@ -87,6 +92,7 @@ pub mod graph;
 pub mod pool;
 pub mod scenario;
 pub mod session;
+pub mod topo;
 pub mod workload;
 
 pub use deque::{Steal, StealDeque};
@@ -105,6 +111,7 @@ pub use pool::{
     CancelToken, JobHandle, Pool, PoolConfig, PoolScope, SubmitError,
 };
 pub use session::{JobBuilder, JobResult, JobSpec, Session};
+pub use topo::Topology;
 pub use workload::{
     BlockKernel, Cholesky, Matmul, Params, Sparselu, TaskCost, Workload,
 };

@@ -87,6 +87,7 @@ use super::deque::{Steal, StealDeque};
 use super::error::{Error, JobFailure};
 use super::exec::{Backoff, ExecStats};
 use super::graph::{TaskGraph, TaskId};
+use super::topo::Topology;
 use std::cell::UnsafeCell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
@@ -113,6 +114,11 @@ pub const MAX_SLOTS: usize = 1 << (64 - SLOT_SHIFT);
 fn pack_base(slot: usize, gen: u32) -> usize {
     (slot << SLOT_SHIFT) | ((gen as usize) << TASK_BITS)
 }
+
+/// Fixed seed for the pool's victim-ring rotations: reproducible
+/// victim orders, still decorrelated across workers (the seed is
+/// mixed with the worker id).
+const VICTIM_SEED: u64 = 0x9001_5eed_0f_a5_7e11;
 
 /// Why a submission was not accepted. Typed — capacity pressure never
 /// panics and never drops work (jobs that merely do not fit *yet* are
@@ -184,17 +190,27 @@ pub struct PoolConfig {
     /// `None` (the default) keeps the original queue-everything
     /// behaviour.
     pub max_pending: Option<usize>,
+    /// Affinity domains ([`crate::sched::topo::Topology`], clamped to
+    /// the worker count): with more than one, workers steal
+    /// nearest-domain-first, each admitted job is seeded into its own
+    /// preferred domain's injector (round-robin across jobs, so
+    /// concurrent jobs stop shredding each other's caches), released
+    /// successors follow the domain that last wrote their write-block,
+    /// and workers are pinned to cores on Linux. `1` (the default) is
+    /// the flat pre-locality pool, bit-for-bit.
+    pub domains: usize,
 }
 
 impl PoolConfig {
     /// Defaults sized for the evaluation workloads: 32 Ki in-flight
-    /// tasks, 64 concurrent jobs, no shed bound.
+    /// tasks, 64 concurrent jobs, no shed bound, one (flat) domain.
     pub fn new(workers: usize) -> Self {
         Self {
             workers,
             task_capacity: 1 << 15,
             max_jobs: 64,
             max_pending: None,
+            domains: 1,
         }
     }
 
@@ -202,6 +218,13 @@ impl PoolConfig {
     /// `max_pending` queued jobs with [`SubmitError::Overloaded`].
     pub fn shed(mut self, max_pending: usize) -> Self {
         self.max_pending = Some(max_pending);
+        self
+    }
+
+    /// Split the team into `domains` affinity domains (clamped to the
+    /// worker count at spawn).
+    pub fn with_domains(mut self, domains: usize) -> Self {
+        self.domains = domains;
         self
     }
 }
@@ -282,6 +305,16 @@ pub(crate) struct JobInner {
     /// Position of this job's completion in the same event order
     /// ([`SEQ_UNSET`] until finished).
     completion_seq: AtomicUsize,
+    /// Preferred affinity domain, assigned round-robin at admission
+    /// (cross-job domain partitioning). Always 0 on a flat pool.
+    domain: AtomicUsize,
+    /// Last-writer table keyed by block id (`row * nb + col`): the
+    /// host analogue of the simulator's locality directory. Value 0 =
+    /// "no domain wrote this block yet", else `domain + 1`. Relaxed
+    /// everywhere — it is a placement *hint*, never a correctness
+    /// input (a stale read merely routes a task less locally). Empty
+    /// on a flat pool, so the hot path costs nothing there.
+    block_home: Box<[AtomicUsize]>,
 }
 
 /// Sentinel for "event has not happened yet" in the admission/
@@ -384,13 +417,28 @@ struct PoolShared {
     /// Slot registry: the live job per slot (taken by workers on
     /// cache miss; cleared at completion).
     slots: Box<[SlotEntry]>,
-    /// Root-seeding queue: deques are owner-push-only, so admission
-    /// publishes a job's roots here; workers drain it between their
-    /// own pops and stealing. Also the lossless overflow backstop for
-    /// `try_push`.
-    injector: Mutex<VecDeque<usize>>,
-    /// Fast emptiness check so idle scans skip the injector lock.
+    /// Root-seeding queues, one per affinity domain (a flat pool has
+    /// exactly one): deques are owner-push-only, so admission
+    /// publishes a job's roots into its preferred domain's queue;
+    /// workers drain them — own domain first, then outward by domain
+    /// distance — between their own pops and stealing. Also the
+    /// lossless overflow backstop for `try_push`, and the
+    /// cross-domain hand-off lane for home-domain task seeding.
+    injectors: Box<[Mutex<VecDeque<usize>>]>,
+    /// Fast emptiness check (total across all domains) so idle scans
+    /// skip the injector locks.
     injector_len: AtomicUsize,
+    /// Affinity-domain layout of the team.
+    topo: Topology,
+    /// Per-worker steal-victim orders (own domain first, then by
+    /// domain distance, seeded rotation within each ring).
+    victims: Box<[Box<[usize]>]>,
+    /// Per-worker injector drain order: domains sorted by distance
+    /// from the worker's own (own domain first).
+    inj_order: Box<[Box<[usize]>]>,
+    /// Round-robin cursor assigning each admitted job its preferred
+    /// domain.
+    next_domain: AtomicUsize,
     adm: Mutex<Admission>,
     shutdown: AtomicBool,
     /// Admitted-but-unfinished job count; zero means workers may
@@ -408,27 +456,37 @@ struct PoolShared {
 }
 
 impl PoolShared {
-    fn push_injector(&self, packed: usize) {
-        let mut inj = self.injector.lock().unwrap();
+    fn push_injector(&self, packed: usize, domain: usize) {
+        let mut inj = self.injectors[domain].lock().unwrap();
         inj.push_back(packed);
-        self.injector_len.store(inj.len(), Ordering::Release);
+        // Inside the lock, so the counter never under-reports a
+        // published entry to a popper that takes the same lock.
+        self.injector_len.fetch_add(1, Ordering::Release);
     }
 
-    fn pop_injector(&self) -> Option<usize> {
+    /// Drain one injector entry, scanning domains nearest-first from
+    /// worker `w`'s own.
+    fn pop_injector(&self, w: usize) -> Option<usize> {
         if self.injector_len.load(Ordering::Acquire) == 0 {
             return None;
         }
-        let mut inj = self.injector.lock().unwrap();
-        let p = inj.pop_front();
-        self.injector_len.store(inj.len(), Ordering::Release);
-        p
+        for &d in &self.inj_order[w] {
+            let mut inj = self.injectors[d].lock().unwrap();
+            if let Some(p) = inj.pop_front() {
+                self.injector_len.fetch_sub(1, Ordering::Release);
+                return Some(p);
+            }
+        }
+        None
     }
 
-    /// One round of stealing: scan every other deque once, starting
-    /// after our own.
-    fn try_steal(&self, w: usize, n_workers: usize) -> Option<usize> {
-        for k in 1..n_workers {
-            match self.deques[(w + k) % n_workers].steal() {
+    /// One round of stealing: probe every other deque once in worker
+    /// `w`'s precomputed victim order — own affinity domain first,
+    /// then outward by domain distance (a flat pool degenerates to
+    /// the classic rotated ring).
+    fn try_steal(&self, w: usize) -> Option<usize> {
+        for &v in &self.victims[w] {
+            match self.deques[v].steal() {
                 Steal::Taken(t) => return Some(t),
                 Steal::Empty | Steal::Abort => {}
             }
@@ -494,17 +552,27 @@ impl PoolShared {
             job.admission_seq.store(a, Ordering::Release);
             *self.slots[slot].lock().unwrap() = Some(job.clone());
             self.active_jobs.fetch_add(1, Ordering::SeqCst);
+            // Cross-job domain partitioning: each admitted job gets
+            // the next preferred domain round-robin, and its roots go
+            // into that domain's injector — so concurrent jobs start
+            // (and, via home-domain seeding, largely stay) on
+            // disjoint worker subsets. A flat pool has one domain and
+            // this degenerates to the old single injector.
+            let dom = self.next_domain.fetch_add(1, Ordering::Relaxed)
+                % self.topo.domains();
+            job.domain.store(dom, Ordering::Relaxed);
             // SAFETY: the job just got admitted — not complete.
             let graph = unsafe { &*job.work_ref().graph };
             let roots = graph.roots();
             job.ready_len.store(roots.len(), Ordering::Relaxed);
             job.peak_ready.store(roots.len(), Ordering::Relaxed);
             {
-                let mut inj = self.injector.lock().unwrap();
+                let mut inj = self.injectors[dom].lock().unwrap();
                 for &t in roots {
                     inj.push_back(base | t);
                 }
-                self.injector_len.store(inj.len(), Ordering::Release);
+                self.injector_len
+                    .fetch_add(roots.len(), Ordering::Release);
             }
             admitted_any = true;
         }
@@ -585,6 +653,7 @@ fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
 fn run_one(
     shared: &PoolShared,
     me: &StealDeque,
+    my_domain: usize,
     cache: &mut JobCache,
     packed: usize,
 ) {
@@ -659,6 +728,16 @@ fn run_one(
             }
         }
     }
+    // Home-domain task seeding (locality pools only): record that
+    // this domain wrote the task's write-block, so a successor whose
+    // write-block lives in another domain is handed to that domain's
+    // injector instead of our deque. Pure hint — Relaxed, and never
+    // consulted on a flat pool (`block_home` is empty there).
+    if !job.block_home.is_empty() {
+        let (wi, wj) = graph.task(TaskId(task)).write;
+        job.block_home[wi * graph.nb() + wj]
+            .store(my_domain + 1, Ordering::Relaxed);
+    }
     let mut batch_peak = 0usize;
     for &s in graph.succs(TaskId(task)) {
         // Release: our block writes become visible to whichever worker
@@ -669,11 +748,28 @@ fn run_one(
             let len = job.ready_len.fetch_add(1, Ordering::Relaxed) + 1;
             batch_peak = batch_peak.max(len);
             let p = base | s;
+            let home = if job.block_home.is_empty() {
+                my_domain
+            } else {
+                let (si, sj) = graph.task(TaskId(s)).write;
+                match job.block_home[si * graph.nb() + sj]
+                    .load(Ordering::Relaxed)
+                {
+                    0 => my_domain,
+                    d => d - 1,
+                }
+            };
+            if home != my_domain {
+                // Cross-domain release: seed the task toward the
+                // domain that last wrote its write-block.
+                shared.push_injector(p, home);
+                continue;
+            }
             // Admission bounds in-flight tasks to the deque capacity,
             // so the overflow arm is unreachable in practice; it stays
             // lossless regardless (never panic, never drop).
             if me.try_push(p).is_err() {
-                shared.push_injector(p);
+                shared.push_injector(p, my_domain);
             }
         }
     }
@@ -687,19 +783,30 @@ fn run_one(
 
 fn worker_loop(shared: Arc<PoolShared>, w: usize) {
     let me = &shared.deques[w];
-    let n_workers = shared.deques.len();
+    let my_domain = shared.topo.domain_of(w);
+    if shared.topo.domains() > 1 {
+        // Locality pools pin workers so the affinity domains describe
+        // actual cores (non-fatal, no-op off Linux — same FFI the
+        // coordinator uses).
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        crate::coordinator::pool::pin_to_core(
+            shared.topo.core_of(w, cores),
+        );
+    }
     let mut cache: Vec<Option<(usize, Arc<JobInner>)>> =
         (0..shared.slots.len()).map(|_| None).collect();
     let mut backoff = Backoff::new();
     loop {
         let task = me
             .pop()
-            .or_else(|| shared.pop_injector())
-            .or_else(|| shared.try_steal(w, n_workers));
+            .or_else(|| shared.pop_injector(w))
+            .or_else(|| shared.try_steal(w));
         match task {
             Some(p) => {
                 backoff.reset();
-                run_one(&shared, me, &mut cache, p);
+                run_one(&shared, me, my_domain, &mut cache, p);
             }
             None => {
                 if shared.active_jobs.load(Ordering::SeqCst) == 0 {
@@ -749,13 +856,31 @@ impl Pool {
         assert!(cfg.workers >= 1, "pool needs at least one worker");
         let max_jobs = cfg.max_jobs.clamp(1, MAX_SLOTS);
         let cap = cfg.task_capacity.clamp(1, MAX_JOB_TASKS - 1);
+        let topo = Topology::new(cfg.workers, cfg.domains);
+        let victims: Box<[Box<[usize]>]> = (0..cfg.workers)
+            .map(|w| topo.victim_order(w, VICTIM_SEED).into_boxed_slice())
+            .collect();
+        let inj_order: Box<[Box<[usize]>]> = (0..cfg.workers)
+            .map(|w| {
+                let my = topo.domain_of(w);
+                let mut order: Vec<usize> = (0..topo.domains()).collect();
+                order.sort_by_key(|&d| (d.abs_diff(my), d));
+                order.into_boxed_slice()
+            })
+            .collect();
         let shared = Arc::new(PoolShared {
             deques: (0..cfg.workers)
                 .map(|_| StealDeque::with_capacity(cap))
                 .collect(),
             slots: (0..max_jobs).map(|_| Mutex::new(None)).collect(),
-            injector: Mutex::new(VecDeque::new()),
+            injectors: (0..topo.domains())
+                .map(|_| Mutex::new(VecDeque::new()))
+                .collect(),
             injector_len: AtomicUsize::new(0),
+            topo,
+            victims,
+            inj_order,
+            next_domain: AtomicUsize::new(0),
             adm: Mutex::new(Admission {
                 pending: VecDeque::new(),
                 free_slots: (0..max_jobs).rev().collect(),
@@ -914,6 +1039,13 @@ impl Pool {
             peak_ready: AtomicUsize::new(0),
             admission_seq: AtomicUsize::new(SEQ_UNSET),
             completion_seq: AtomicUsize::new(SEQ_UNSET),
+            domain: AtomicUsize::new(0),
+            block_home: if shared.topo.domains() > 1 {
+                let nb = (*graph).nb();
+                (0..nb * nb).map(|_| AtomicUsize::new(0)).collect()
+            } else {
+                Vec::new().into_boxed_slice()
+            },
         });
         // Every job — including an empty graph — goes through the
         // FIFO queue: an empty job completes at its *admission* point
@@ -1291,6 +1423,7 @@ mod tests {
             task_capacity: 10,
             max_jobs: 4,
             max_pending: None,
+            domains: 1,
         });
         let big = lu_graph(8); // hundreds of tasks
         let small = lu_graph(2);
@@ -1322,6 +1455,7 @@ mod tests {
             task_capacity: g.len(),
             max_jobs: 8,
             max_pending: None,
+            domains: 1,
         });
         let n = AtomicUsize::new(0);
         pool.scope(|s| {
@@ -1342,6 +1476,67 @@ mod tests {
     }
 
     #[test]
+    fn locality_domains_complete_saturated_cross_domain_streams() {
+        // The satellite's no-starvation check: with one worker per
+        // affinity domain and six concurrent jobs round-robined across
+        // the two domains, every domain is saturated with pinned work
+        // — yet every job must complete with every task executed,
+        // because nearest-first stealing still crosses domains once
+        // the local sources dry up. Locality is a preference, never a
+        // partition.
+        let g = lu_graph(6);
+        let pool = Pool::with_config(PoolConfig {
+            workers: 2,
+            task_capacity: 1 << 12,
+            max_jobs: 8,
+            max_pending: None,
+            domains: 2,
+        });
+        let n = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let hs: Vec<JobHandle> = (0..6)
+                .map(|_| {
+                    s.submit(&g, |_| {
+                        n.fetch_add(1, Ordering::Relaxed);
+                    })
+                    .unwrap()
+                })
+                .collect();
+            for h in &hs {
+                assert_eq!(h.wait().unwrap().executed, g.len());
+            }
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 6 * g.len());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn locality_domains_clamp_and_degenerate_to_flat() {
+        // More domains than workers must clamp (every domain
+        // nonempty), and a single worker with "4 domains" is just the
+        // serial pool — the whole stream still drains.
+        let g = lu_graph(4);
+        let pool = Pool::with_config(PoolConfig {
+            workers: 1,
+            task_capacity: 1 << 10,
+            max_jobs: 4,
+            max_pending: None,
+            domains: 4,
+        });
+        let n = AtomicUsize::new(0);
+        pool.scope(|s| {
+            for _ in 0..3 {
+                s.submit(&g, |_| {
+                    n.fetch_add(1, Ordering::Relaxed);
+                })
+                .unwrap();
+            }
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 3 * g.len());
+        pool.shutdown();
+    }
+
+    #[test]
     fn event_clock_orders_admissions_and_completions() {
         // One slot + a gated first job: the rest of the stream is
         // provably queued (pending == 3, no admission stamp) until the
@@ -1353,6 +1548,7 @@ mod tests {
             task_capacity: 1 << 12,
             max_jobs: 1,
             max_pending: None,
+            domains: 1,
         });
         let gate = AtomicBool::new(false);
         pool.scope(|s| {
@@ -1421,6 +1617,7 @@ mod tests {
             task_capacity: 1 << 12,
             max_jobs: 1,
             max_pending: None,
+            domains: 1,
         });
         pool.scope(|s| {
             let hs: Vec<JobHandle> =
@@ -1749,6 +1946,7 @@ mod tests {
             task_capacity: g.len(),
             max_jobs: 8,
             max_pending: None,
+            domains: 1,
         });
         pool.scope(|s| {
             let a = s.submit(&g, |_| {}).unwrap();
@@ -1880,6 +2078,7 @@ mod tests {
                 task_capacity: 1 << 12,
                 max_jobs: 8,
                 max_pending: None,
+                domains: 1,
             }
             .shed(2),
         );

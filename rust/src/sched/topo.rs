@@ -1,0 +1,205 @@
+//! Worker topology: affinity domains and nearest-first victim orders
+//! for the locality-aware work-stealing layer.
+//!
+//! The paper's GPRM places tasks statically and never steals; our
+//! executors steal, and on any machine with more than one cache or
+//! memory domain a steal's cost depends on *where* the victim sits.
+//! [`Topology`] captures the minimum structure needed to exploit
+//! that: the worker team is split into `domains` contiguous affinity
+//! domains (on Linux, workers are additionally pinned to cores via
+//! the `sched_setaffinity` FFI in [`crate::coordinator::pool`]), and
+//! every worker gets a precomputed **victim order** — all other
+//! workers sorted own-domain-first, then by domain distance, with a
+//! seeded-random rotation inside each distance ring so concurrent
+//! thieves don't convoy on the same victim.
+//!
+//! The virtual-time counterpart is
+//! [`crate::tilesim::SchedModel::LocalitySteal`], which prices this
+//! exact policy on the simulated mesh and predicted the
+//! random-vs-nearest crossover before the host measured it.
+
+/// Affinity-domain layout of a worker team.
+///
+/// Workers `0..n_workers` are split into `domains` contiguous ranges
+/// (domain `d` holds workers `d*n/domains .. (d+1)*n/domains`, the
+/// same arithmetic the simulator and the pool's per-domain injectors
+/// use). `domains` is clamped to `[1, n_workers]` at construction, so
+/// every domain is nonempty and `domains == 1` means "no topology" —
+/// every distance is zero and the victim order degenerates to a
+/// seeded-rotated ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    n_workers: usize,
+    domains: usize,
+}
+
+/// SplitMix64 — the same tiny seeded mixer the scenario engine uses:
+/// deterministic, stateless, good enough to decorrelate per-worker
+/// ring rotations.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl Topology {
+    /// Lay out `n_workers` workers over `domains` contiguous affinity
+    /// domains. `domains` is clamped to `[1, n_workers]`; `n_workers`
+    /// must be at least 1.
+    pub fn new(n_workers: usize, domains: usize) -> Self {
+        assert!(n_workers >= 1, "a team needs at least one worker");
+        Self { n_workers, domains: domains.clamp(1, n_workers) }
+    }
+
+    /// Workers in the team.
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Affinity domains (post-clamp: `1 <= domains <= n_workers`).
+    pub fn domains(&self) -> usize {
+        self.domains
+    }
+
+    /// Domain of worker `w` — contiguous ranges, same formula as the
+    /// simulator's `SchedModel::LocalitySteal`.
+    pub fn domain_of(&self, w: usize) -> usize {
+        w * self.domains / self.n_workers
+    }
+
+    /// Distance between two workers' domains (0 = same domain).
+    pub fn domain_distance(&self, a: usize, b: usize) -> usize {
+        self.domain_of(a).abs_diff(self.domain_of(b))
+    }
+
+    /// The contiguous worker range of domain `d`.
+    pub fn workers_of(&self, d: usize) -> std::ops::Range<usize> {
+        let lo = d * self.n_workers / self.domains;
+        let hi = (d + 1) * self.n_workers / self.domains;
+        lo..hi
+    }
+
+    /// Core a worker pins to on an `n_cores` machine: domains are
+    /// contiguous worker ranges, so contiguous core ids keep a domain
+    /// on neighbouring cores (sharing L2/LLC where the machine has
+    /// them).
+    pub fn core_of(&self, w: usize, n_cores: usize) -> usize {
+        w % n_cores.max(1)
+    }
+
+    /// Worker `w`'s steal-victim order: every other worker, sorted
+    /// own-domain-first then by domain distance, with a
+    /// `seed`-derived rotation *within* each equal-distance ring so
+    /// different workers (and different seeds) probe the ring from
+    /// different starting points. Deterministic for a given
+    /// `(w, seed)`; always a permutation of the other workers.
+    pub fn victim_order(&self, w: usize, seed: u64) -> Vec<usize> {
+        let n = self.n_workers;
+        if n <= 1 {
+            return Vec::new();
+        }
+        let rot = splitmix64(seed ^ w as u64) as usize % n;
+        let start = (w + 1 + rot) % n;
+        let ring_pos = |v: usize| (v + n - start) % n;
+        let mut order: Vec<usize> = (0..n).filter(|&v| v != w).collect();
+        order.sort_by_key(|&v| (self.domain_distance(w, v), ring_pos(v)));
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn domains_are_contiguous_and_cover_the_team() {
+        for n in 1..=16 {
+            for d in 1..=5 {
+                let t = Topology::new(n, d);
+                let mut covered = 0;
+                for dom in 0..t.domains() {
+                    let r = t.workers_of(dom);
+                    assert!(!r.is_empty(), "n={n} d={d}: empty domain {dom}");
+                    for w in r.clone() {
+                        assert_eq!(t.domain_of(w), dom);
+                    }
+                    assert_eq!(r.start, covered, "domains must be contiguous");
+                    covered = r.end;
+                }
+                assert_eq!(covered, n, "domains must cover all workers");
+            }
+        }
+    }
+
+    #[test]
+    fn domains_clamp_to_team_size() {
+        let t = Topology::new(3, 8);
+        assert_eq!(t.domains(), 3);
+        let t = Topology::new(4, 0);
+        assert_eq!(t.domains(), 1);
+    }
+
+    #[test]
+    fn victim_order_is_a_distance_sorted_permutation() {
+        // The satellite's property test: for every worker, the victim
+        // order is exactly a permutation of the other workers, with
+        // nondecreasing domain distance and the own domain first.
+        for (n, d, seed) in
+            [(2, 2, 1u64), (7, 2, 9), (8, 2, 42), (12, 4, 7), (16, 3, 0)]
+        {
+            let t = Topology::new(n, d);
+            for w in 0..n {
+                let order = t.victim_order(w, seed);
+                let mut sorted = order.clone();
+                sorted.sort_unstable();
+                let expect: Vec<usize> = (0..n).filter(|&v| v != w).collect();
+                assert_eq!(
+                    sorted, expect,
+                    "n={n} d={d} w={w}: victims must be the other workers"
+                );
+                let dists: Vec<usize> = order
+                    .iter()
+                    .map(|&v| t.domain_distance(w, v))
+                    .collect();
+                assert!(
+                    dists.windows(2).all(|p| p[0] <= p[1]),
+                    "n={n} d={d} w={w}: distances {dists:?} not sorted"
+                );
+                // Every own-domain sibling precedes every outsider.
+                let own = t.workers_of(t.domain_of(w)).len() - 1;
+                assert!(
+                    dists[..own].iter().all(|&x| x == 0),
+                    "n={n} d={d} w={w}: own domain must come first"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn victim_order_is_deterministic_and_seed_rotates_rings() {
+        let t = Topology::new(8, 2);
+        for w in 0..8 {
+            assert_eq!(t.victim_order(w, 5), t.victim_order(w, 5));
+        }
+        // Some seed pair must reorder at least one worker's rings —
+        // the rotation is what spreads concurrent thieves out.
+        let differs = (0..8).any(|w| {
+            t.victim_order(w, 1) != t.victim_order(w, 2)
+        });
+        assert!(differs, "seed must influence ring rotation");
+    }
+
+    #[test]
+    fn single_worker_has_no_victims() {
+        assert!(Topology::new(1, 1).victim_order(0, 3).is_empty());
+    }
+
+    #[test]
+    fn core_mapping_wraps() {
+        let t = Topology::new(8, 2);
+        assert_eq!(t.core_of(3, 4), 3);
+        assert_eq!(t.core_of(5, 4), 1);
+        assert_eq!(t.core_of(5, 0), 0, "zero cores must not divide by zero");
+    }
+}

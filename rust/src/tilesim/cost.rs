@@ -72,6 +72,24 @@ pub struct CostModel {
     /// One successful steal: `SeqCst` CAS on a remote deque's `top`
     /// plus the cache-line transfer across the mesh.
     pub steal_cost: f64,
+    /// Distance-priced steal, base term: the CAS + line transfer from
+    /// a victim **zero hops** away. With the per-hop premium this
+    /// decomposes [`CostModel::steal_cost`] by victim distance:
+    /// `steal_base_cost + 7 × steal_hop_cycles == steal_cost` at the
+    /// 8×8 mesh's mean hop distance, so the locality-aware model
+    /// ([`crate::tilesim::SchedModel::LocalitySteal`]) prices the
+    /// *average* steal identically to the uniform model — any gain
+    /// comes from shortening distances, never from cheaper steals.
+    pub steal_base_cost: f64,
+    /// Distance-priced steal, per-hop premium on the cache-line
+    /// transfer (see [`CostModel::steal_base_cost`]).
+    pub steal_hop_cycles: f64,
+    /// Extra wait (cycles) the locality scheduler accepts to place a
+    /// ready task nearer its home domain instead of on the
+    /// earliest-free tile — the work-conservation bound: half a flat
+    /// steal, so locality never idles a tile longer than one steal
+    /// round trip would cost.
+    pub local_steal_slack: f64,
 
     // --- Job-launch costs (multi-job model) --------------------------
     /// Per-worker cost of spawning **and** joining one host thread for
@@ -137,6 +155,9 @@ impl Default for CostModel {
             gprm_task_fire: 60.0,
             steal_deque_op: 25.0,
             steal_cost: 220.0,
+            steal_base_cost: 80.0,
+            steal_hop_cycles: 20.0,
+            local_steal_slack: 110.0,
             thread_spawn: 45_000.0,
             pool_submit: 500.0,
             retry_resubmit: 650.0,
@@ -162,6 +183,15 @@ impl CostModel {
     pub fn transfer(&self, bytes: u64, hops: usize) -> u64 {
         (bytes as f64 * self.remote_byte_cycles
             + hops as f64 * self.hop_cycles) as u64
+    }
+
+    /// Distance-priced steal: the CAS + cache-line transfer from a
+    /// victim `hops` away — [`crate::tilesim::SchedModel::LocalitySteal`]'s
+    /// replacement for the flat mean-distance
+    /// [`CostModel::steal_cost`].
+    pub fn steal_hit(&self, hops: usize) -> u64 {
+        (self.steal_base_cost + hops as f64 * self.steal_hop_cycles)
+            as u64
     }
 
     /// One queue-lock operation with `contenders` other threads
@@ -265,6 +295,25 @@ mod tests {
         assert!(c.retry_resubmit > c.pool_submit);
         assert!(c.thread_spawn > 20.0 * c.retry_resubmit);
         assert!(c.cancel_check * 10.0 < c.steal_deque_op);
+    }
+
+    #[test]
+    fn locality_steal_pricing_calibration() {
+        // At the 8×8 mesh's mean hop distance (7) the distance-priced
+        // steal must equal the flat steal_cost: LocalitySteal and
+        // WorkSteal price the *average* steal identically, so any
+        // locality gain comes from shortening distances, not from
+        // cheaper steals. Nearer victims are strictly cheaper.
+        let c = CostModel::default();
+        assert_eq!(c.steal_hit(7), c.steal_cost as u64);
+        assert!(c.steal_hit(0) < c.steal_cost as u64);
+        for h in 1..=14 {
+            assert!(c.steal_hit(h) > c.steal_hit(h - 1));
+        }
+        // The wait accepted to run near home is half a flat steal —
+        // enough to matter, too small to idle a tile meaningfully.
+        assert_eq!(c.local_steal_slack * 2.0, c.steal_cost);
+        assert!(c.local_steal_slack as u64 > c.steal_deque_op as u64);
     }
 
     #[test]

@@ -15,6 +15,15 @@ pub struct Directory {
     block_bytes: u64,
 }
 
+/// Worker→mesh-node mapping: worker `w` computes on node `w + 1` —
+/// injective for `w < n_tiles - 1`, and node 0 (the PCI/IO tile,
+/// which runs no worker) is never used. Workers beyond the compute
+/// nodes wrap (a 64th worker would share node 1; no simulated
+/// machine exceeds `n_tiles - 1` workers).
+fn node_of(mesh: &Mesh, worker: usize) -> usize {
+    1 + (worker % (mesh.n_tiles() - 1))
+}
+
 impl Directory {
     /// `n_blocks == 0` disables locality tracking (workloads without
     /// block reuse, e.g. the MatMul jobs).
@@ -36,7 +45,7 @@ impl Directory {
         if self.home.is_empty() {
             return 0;
         }
-        let node = 1 + (tile % (mesh.n_tiles() - 1)); // node 0 = PCI tile
+        let node = node_of(mesh, tile);
         let mut extra = 0u64;
         for &b in task.reads() {
             let h = self.home[b as usize];
@@ -46,7 +55,7 @@ impl Directory {
                 extra +=
                     cost.transfer(self.block_bytes, mesh.diameter() / 2);
             } else {
-                let hn = 1 + (h as usize % (mesh.n_tiles() - 1));
+                let hn = node_of(mesh, h as usize);
                 if hn != node {
                     extra += cost.transfer(self.block_bytes, mesh.hops(hn, node));
                 }
@@ -103,6 +112,25 @@ mod tests {
         assert_eq!(d.access(&cost, &mesh, 3, &task(&[0], NO_BLOCK)), 0);
         d.access(&cost, &mesh, 9, &task(&[], 0));
         assert!(d.access(&cost, &mesh, 3, &task(&[0], NO_BLOCK)) > 0);
+    }
+
+    #[test]
+    fn worker_node_mapping_is_injective_and_skips_pci_tile() {
+        // Every worker the simulator can host (up to n_tiles - 1) maps
+        // to its own mesh node, and node 0 — the PCI/IO tile — never
+        // computes: two workers sharing a node would make their mutual
+        // block traffic free, silently flattering locality gains.
+        let mesh = Mesh::TILEPRO64;
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..mesh.n_tiles() - 1 {
+            let node = super::node_of(&mesh, w);
+            assert_ne!(node, 0, "worker {w} mapped to the PCI tile");
+            assert!(node < mesh.n_tiles(), "worker {w} off the mesh");
+            assert!(
+                seen.insert(node),
+                "workers must not share node {node} (worker {w})"
+            );
+        }
     }
 
     #[test]

@@ -29,9 +29,12 @@
 //! * [`sim_dataflow`] — virtual-time list scheduling of *any*
 //!   [`crate::sched`] dependence DAG (SparseLU, Cholesky, matmul, …):
 //!   no phase barriers; isolates what the level-synchronous models pay
-//!   for theirs, and models both executor claim-cost regimes (mutex
-//!   scoreboard vs lock-free work stealing with a per-steal mesh
-//!   penalty) **and** both job-launch regimes
+//!   for theirs, and models all three executor claim-cost regimes
+//!   (mutex scoreboard, lock-free work stealing with a flat per-steal
+//!   mesh penalty, and locality-aware stealing with distance-priced
+//!   steals + nearest-first placement —
+//!   [`sim_dataflow::SchedModel::LocalitySteal`]) **and** both
+//!   job-launch regimes
 //!   ([`sim_dataflow::LaunchModel`]: one persistent pool shared by a
 //!   whole job stream, with cross-job stealing, vs serial one-shot
 //!   executor launches each paying a worker-team spawn).

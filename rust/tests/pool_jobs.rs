@@ -119,6 +119,7 @@ fn stress_concurrent_mixed_jobs_bit_identical() {
                 task_capacity: cap,
                 max_jobs: 8,
                 max_pending: None,
+                domains: 1,
             });
             let mut jobs: Vec<PoolJob> = mats
                 .iter_mut()
@@ -254,6 +255,7 @@ fn fifo_admission_order_under_capacity_churn() {
                 task_capacity: cap,
                 max_jobs: 3,
                 max_pending: None,
+                domains: 1,
             });
             let n_jobs = 8usize;
             let mut rng = SplitMix64::new(seed as u64 ^ 0xD1CE);

@@ -7,8 +7,9 @@
 //! Covered per entry: graph acyclicity + CSR succ/pred mutual
 //! inverse, kernel-table/op-table alignment, f32 bit-identity of
 //! every host (both one-shot executors, in both executor modes, and
-//! the persistent pool) against the declaration's own sequential
-//! reference, and residual correctness. Plus the inter-job-dependency
+//! the persistent pool — flat and again split into 2 affinity
+//! domains) against the declaration's own sequential reference, and
+//! residual correctness. Plus the inter-job-dependency
 //! stress: job B *reading job A's output* (both jobs over one
 //! matrix) races 100 randomized schedules and must stay bit-identical
 //! to the chained sequential reference every time.
@@ -165,6 +166,67 @@ fn every_entry_is_bit_identical_on_all_hosts() {
                 assert!(
                     res < 1e-3,
                     "{} on {host}: residual {res}",
+                    w.name()
+                );
+            }
+        }
+    }
+    pool.shutdown();
+    gprm.shutdown();
+    omp.shutdown();
+}
+
+#[test]
+fn every_entry_is_bit_identical_with_locality_domains() {
+    // Locality-aware stealing must be a pure scheduling change: with
+    // the team split into 2 affinity domains (nearest-first victim
+    // orders on the one-shot executors, per-domain injectors +
+    // home-domain seeding on the pool), every registered workload
+    // must still match its sequential reference bit-for-bit — in both
+    // executor modes, on all three hosts.
+    use gprm::sched::PoolConfig;
+    let p = Params::new(7, 5);
+    let omp = OmpRuntime::new(4);
+    let gprm = GprmRuntime::with_tiles(4);
+    let pool = Pool::with_config(PoolConfig::new(4).with_domains(2));
+    for w in registry() {
+        let input = w.make_input(&p, 0);
+        let mut want = input.deep_clone();
+        w.reference_seq(&mut want);
+        let hosts: [(&str, DataflowRt); 3] = [
+            ("omp", DataflowRt::Omp(&omp)),
+            ("gprm", DataflowRt::Gprm(&gprm)),
+            ("pool", DataflowRt::Pool(&pool)),
+        ];
+        for (host, rt) in hosts {
+            let execs: Vec<ExecOpts> = if host == "pool" {
+                // The pool's domain split comes from its config.
+                vec![ExecOpts::default()]
+            } else {
+                vec![
+                    ExecOpts::default().with_domains(2),
+                    ExecOpts::mutex_baseline().with_domains(2),
+                ]
+            };
+            for &exec in &execs {
+                let mut a = input.deep_clone();
+                let stats = run_workload(&rt, *w, &mut a, exec)
+                    .unwrap_or_else(|e| {
+                        panic!("{} on {host} domains=2: {e}", w.name())
+                    });
+                assert_eq!(
+                    stats.executed,
+                    w.graph_for(&input).len(),
+                    "{} on {host} domains=2",
+                    w.name()
+                );
+                w.verify_bits(&a, &want).unwrap_or_else(|e| {
+                    panic!("{} on {host} domains=2: {e}", w.name())
+                });
+                let res = w.residual(&input, &a);
+                assert!(
+                    res < 1e-3,
+                    "{} on {host} domains=2: residual {res}",
                     w.name()
                 );
             }
