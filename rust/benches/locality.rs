@@ -51,7 +51,9 @@ impl Row {
 /// recomputed for the printed gain but not re-appended — the steal
 /// bench owns those rows) plus host wall-clock rows for both victim
 /// policies. Returns true if the locality executor lost badly
-/// (< 0.9x uniform) anywhere at >= 4 workers (host rows — a tolerant
+/// (< 0.9x uniform) at any gated worker count — >= 4 workers AND
+/// within the machine's available parallelism; oversubscribed counts
+/// are printed but never fail the bench (host rows — a tolerant
 /// bar, since host domains only pay off with real per-core caches).
 fn bench_workload(
     w: &'static dyn Workload,
@@ -141,9 +143,22 @@ fn bench_workload(
     // Acceptance: domains must never cost more than 10% on host
     // tasks/sec at >= 4 workers. (The model asserts strict wins in
     // unit tests; host wins depend on real cache topology, so the
-    // bench only refuses regressions.)
+    // bench only refuses regressions.) Worker counts above the
+    // machine's available parallelism are oversubscribed — their
+    // wall-clock is scheduler noise, not a victim-policy signal — so
+    // they are reported but never gate the exit code.
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
     let mut failed = false;
     for &workers in WORKERS.iter().filter(|&&workers| workers >= 4) {
+        if workers > cores {
+            println!(
+                "  @{workers} workers: oversubscribed ({cores} cores) — \
+                 reported only, not gating"
+            );
+            continue;
+        }
         let tps = |exec: &str| {
             rows.iter()
                 .find(|r| {

@@ -20,10 +20,13 @@
 
 /// Affinity-domain layout of a worker team.
 ///
-/// Workers `0..n_workers` are split into `domains` contiguous ranges
-/// (domain `d` holds workers `d*n/domains .. (d+1)*n/domains`, the
-/// same arithmetic the simulator and the pool's per-domain injectors
-/// use). `domains` is clamped to `[1, n_workers]` at construction, so
+/// Workers `0..n_workers` are split into `domains` contiguous ranges:
+/// worker `w` belongs to domain `w*domains/n` and, inversely, domain
+/// `d` holds workers `ceil(d*n/domains) .. ceil((d+1)*n/domains)` —
+/// [`Topology::workers_of`] is the exact inverse of
+/// [`Topology::domain_of`] even when `domains` does not divide `n`,
+/// and the simulator uses the same arithmetic. `domains` is clamped
+/// to `[1, n_workers]` at construction, so
 /// every domain is nonempty and `domains == 1` means "no topology" —
 /// every distance is zero and the victim order degenerates to a
 /// seeded-rotated ring.
@@ -73,10 +76,16 @@ impl Topology {
         self.domain_of(a).abs_diff(self.domain_of(b))
     }
 
-    /// The contiguous worker range of domain `d`.
+    /// The contiguous worker range of domain `d` — the exact inverse
+    /// of [`Topology::domain_of`]: `w` is in `workers_of(d)` iff
+    /// `domain_of(w) == d`. The ceiling split is forced by the floor
+    /// in `domain_of` (`floor(w*D/n) = d  ⟺  ceil(d*n/D) <= w <
+    /// ceil((d+1)*n/D)`); a floor split here would disagree with the
+    /// membership formula whenever `domains` does not divide
+    /// `n_workers`.
     pub fn workers_of(&self, d: usize) -> std::ops::Range<usize> {
-        let lo = d * self.n_workers / self.domains;
-        let hi = (d + 1) * self.n_workers / self.domains;
+        let lo = (d * self.n_workers).div_ceil(self.domains);
+        let hi = ((d + 1) * self.n_workers).div_ceil(self.domains);
         lo..hi
     }
 

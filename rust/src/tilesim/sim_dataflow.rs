@@ -136,11 +136,31 @@ impl DataflowSim {
         }
     }
 
+    /// Effective domain count: clamped to `[1, n_tiles]`, mirroring
+    /// `sched::topo::Topology::new` so an over-split machine never
+    /// yields empty domains or out-of-range home tiles.
+    fn n_domains(&self, domains: usize) -> usize {
+        domains.clamp(1, self.n_tiles)
+    }
+
     /// Affinity domain of `tile` under the locality model: tiles are
     /// split into `domains` contiguous ranges (the host analogue is
     /// `sched::topo::Topology::domain_of`).
     fn domain_of(&self, tile: usize, domains: usize) -> usize {
-        tile * domains / self.n_tiles
+        tile * self.n_domains(domains) / self.n_tiles
+    }
+
+    /// Tile range of affinity domain `dom` — the exact inverse of
+    /// [`Self::domain_of`], same ceiling arithmetic as
+    /// `sched::topo::Topology::workers_of`. Root seeding and distance
+    /// pricing MUST share this mapping: with a floor split here,
+    /// non-divisible tile counts would seed roots "into" a domain on
+    /// tiles the pricer assigns to the neighbouring one.
+    fn tiles_of(&self, dom: usize, domains: usize) -> std::ops::Range<usize> {
+        let d = self.n_domains(domains);
+        let lo = (dom * self.n_tiles).div_ceil(d);
+        let hi = ((dom + 1) * self.n_tiles).div_ceil(d);
+        lo..hi
     }
 
     /// Choose the tile a ready task (home tile `home`, ready at
@@ -420,10 +440,9 @@ impl DataflowSim {
             // whole-team round-robin (`lo = 0`, `width = n_tiles`).
             let (lo, width) = match self.sched {
                 SchedModel::LocalitySteal { domains } => {
-                    let dom = j % domains;
-                    let lo = dom * self.n_tiles / domains;
-                    let hi = (dom + 1) * self.n_tiles / domains;
-                    (lo, (hi - lo).max(1))
+                    let dom = j % self.n_domains(domains);
+                    let r = self.tiles_of(dom, domains);
+                    (r.start, r.len())
                 }
                 _ => (0, self.n_tiles),
             };
@@ -1014,6 +1033,40 @@ mod tests {
             tiles,
             SchedModel::LocalitySteal { domains: tiles.min(2) },
         )
+    }
+
+    #[test]
+    fn locality_domain_mapping_is_consistent_for_any_tile_count() {
+        // Root seeding (`tiles_of`) and distance pricing (`domain_of`)
+        // must agree on membership even when `domains` does not divide
+        // `n_tiles` — a floor/ceil mismatch here seeds roots onto
+        // tiles the pricer charges as a *neighbouring* domain,
+        // silently skewing every steal-local model row.
+        for n_tiles in 1..=16 {
+            let sim = DataflowSim::tilepro(n_tiles);
+            for domains in 1..=20 {
+                let d = sim.n_domains(domains);
+                let mut covered = 0;
+                for dom in 0..d {
+                    let r = sim.tiles_of(dom, domains);
+                    assert!(
+                        !r.is_empty(),
+                        "n={n_tiles} D={domains}: empty domain {dom}"
+                    );
+                    assert_eq!(r.start, covered, "domains must be contiguous");
+                    for t in r.clone() {
+                        assert_eq!(
+                            sim.domain_of(t, domains),
+                            dom,
+                            "n={n_tiles} D={domains}: tile {t} seeded into \
+                             domain {dom} but priced elsewhere"
+                        );
+                    }
+                    covered = r.end;
+                }
+                assert_eq!(covered, n_tiles, "domains must cover all tiles");
+            }
+        }
     }
 
     #[test]
