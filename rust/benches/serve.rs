@@ -1,0 +1,215 @@
+//! Bench: factorisation-as-a-service under open-loop load.
+//!
+//! Two regimes, both appended as JSON rows to `BENCH_sched.json`:
+//!
+//! * `"source": "serve"` — the deterministic virtual-time serving
+//!   model ([`gprm::serve::ServeModel`]) sweeping offered load from
+//!   20% to 400% of the pool's saturation rate at the paper-scale
+//!   mixed factorisation stream (NB=16/BS=16, 8 workers, shed bound
+//!   64, 2000 requests, seed 1). These are the committed baselines:
+//!   all-integer cycle arithmetic, so every row re-derives
+//!   digit-for-digit on any platform.
+//! * `"source": "serve-host"` — a real loopback `gprm serve` loop
+//!   driven by the in-process open-loop load generator with digest
+//!   verification on, at a below-saturation and an above-saturation
+//!   offered rate (wall-clock; machine-dependent, not committed).
+//!
+//! `cargo bench --bench serve`
+
+use gprm::serve::{
+    loadgen, LoadConfig, Request, Response, ServeConfig, ServeModel,
+    Server,
+};
+use std::io::Write as _;
+
+const NB: usize = 16;
+const BS: usize = 16;
+const WORKERS: usize = 8;
+const MAX_PENDING: usize = 64;
+const REQUESTS: usize = 2000;
+const SEED: u64 = 1;
+const PCTS: [u64; 7] = [20, 50, 80, 95, 120, 200, 400];
+
+struct ModelRow {
+    pct: u64,
+    offered: f64,
+    achieved: f64,
+    p50: u64,
+    p99: u64,
+    p999: u64,
+    shed: usize,
+    completed: usize,
+}
+
+impl ModelRow {
+    fn json(&self) -> String {
+        format!(
+            "{{\"workload\": \"serve mixed NB={NB} BS={BS}\", \
+             \"source\": \"serve\", \"workers\": {WORKERS}, \
+             \"exec\": \"model\", \"offered_pct\": {}, \
+             \"offered_jobs_per_sec\": {:.1}, \
+             \"achieved_jobs_per_sec\": {:.1}, \"p50_us\": {}, \
+             \"p99_us\": {}, \"p999_us\": {}, \"shed\": {}, \
+             \"completed\": {}}}",
+            self.pct, self.offered, self.achieved, self.p50, self.p99,
+            self.p999, self.shed, self.completed
+        )
+    }
+}
+
+/// Host loopback sizing: small jobs, verification on.
+const HOST_NB: usize = 8;
+const HOST_BS: usize = 8;
+const HOST_WORKERS: usize = 4;
+const HOST_REQUESTS: usize = 200;
+
+struct HostRow {
+    rate: f64,
+    achieved: f64,
+    p50: u64,
+    p99: u64,
+    p999: u64,
+    shed: usize,
+    completed: usize,
+}
+
+impl HostRow {
+    fn json(&self) -> String {
+        format!(
+            "{{\"workload\": \"serve mixed NB={HOST_NB} \
+             BS={HOST_BS}\", \"source\": \"serve-host\", \
+             \"workers\": {HOST_WORKERS}, \"exec\": \"host\", \
+             \"offered_jobs_per_sec\": {:.1}, \
+             \"achieved_jobs_per_sec\": {:.1}, \"p50_us\": {}, \
+             \"p99_us\": {}, \"p999_us\": {}, \"shed\": {}, \
+             \"completed\": {}}}",
+            self.rate, self.achieved, self.p50, self.p99, self.p999,
+            self.shed, self.completed
+        )
+    }
+}
+
+fn main() {
+    println!(
+        "### serve — open-loop offered load (mixed factorisation \
+         stream)"
+    );
+    println!(
+        "== serving model NB={NB} BS={BS}, {WORKERS} workers, shed \
+         bound {MAX_PENDING}, {REQUESTS} requests (virtual time \
+         @866 MHz) =="
+    );
+    let m = ServeModel::calibrate(WORKERS, NB, BS, MAX_PENDING);
+    println!(
+        "  calibrated: service {} cycles/job, makespan {} cycles",
+        m.service, m.makespan
+    );
+    let mut mrows = Vec::new();
+    for pct in PCTS {
+        let gap = m.gap_for_offered_pct(pct);
+        let o = m.run(gap, REQUESTS, SEED);
+        let row = ModelRow {
+            pct,
+            offered: m.clock_hz / gap as f64,
+            achieved: o.achieved_per_sec(),
+            p50: o.percentile_us(500),
+            p99: o.percentile_us(990),
+            p999: o.percentile_us(999),
+            shed: o.shed,
+            completed: o.completed(),
+        };
+        println!(
+            "  {pct:>4}% offered ({:>7.1}/s): achieved {:>7.1}/s  \
+             p50 {:>7} p99 {:>7} p999 {:>7} us  shed {}",
+            row.offered, row.achieved, row.p50, row.p99, row.p999,
+            row.shed
+        );
+        mrows.push(row);
+    }
+
+    println!(
+        "== host loopback NB={HOST_NB} BS={HOST_BS}, {HOST_WORKERS} \
+         workers, {HOST_REQUESTS} requests, verify on (wall clock) =="
+    );
+    let server = Server::bind(
+        "127.0.0.1:0",
+        ServeConfig::new(HOST_WORKERS),
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr().expect("local addr");
+    let run = std::thread::spawn(move || server.run());
+    let mut hrows = Vec::new();
+    let mut failed = false;
+    for rate in [100.0f64, 800.0] {
+        let cfg = LoadConfig {
+            rate_per_sec: rate,
+            requests: HOST_REQUESTS,
+            conns: 4,
+            nb: HOST_NB,
+            bs: HOST_BS,
+            seed: SEED,
+            verify: true,
+            ..LoadConfig::new(&addr.to_string())
+        };
+        let r = loadgen::run(&cfg).expect("loadgen run");
+        let verdict = if r.pass() { "PASS" } else { "FAIL" };
+        failed |= !r.pass();
+        println!(
+            "  {rate:>6.0}/s offered: achieved {:>7.1}/s  p50 {:>6} \
+             p99 {:>6} p999 {:>6} us  busy {} done {} — {verdict}",
+            r.achieved_per_sec,
+            r.hist.p50(),
+            r.hist.p99(),
+            r.hist.p999(),
+            r.busy,
+            r.done
+        );
+        hrows.push(HostRow {
+            rate,
+            achieved: r.achieved_per_sec,
+            p50: r.hist.p50(),
+            p99: r.hist.p99(),
+            p999: r.hist.p999(),
+            shed: r.busy,
+            completed: r.done,
+        });
+    }
+    // Drain the server and make sure it acknowledges.
+    let ack = gprm::serve::Client::connect(addr)
+        .ok()
+        .and_then(|mut c| c.request(&Request::Shutdown).ok());
+    let stats = run.join().expect("serve thread");
+    println!("  drained: ack={:?} stats={stats:?}", ack);
+    failed |= !matches!(ack, Some(Response::ShuttingDown));
+
+    // Append rows to the repo-root BENCH_sched.json (JSON lines; the
+    // committed baselines carry the model rows).
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = manifest
+        .parent()
+        .unwrap_or(manifest)
+        .join("BENCH_sched.json");
+    match std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+    {
+        Ok(mut f) => {
+            for r in &mrows {
+                let _ = writeln!(f, "{}", r.json());
+            }
+            for r in &hrows {
+                let _ = writeln!(f, "{}", r.json());
+            }
+            println!(
+                "\nappended {} rows to {path:?}",
+                mrows.len() + hrows.len()
+            );
+        }
+        Err(e) => eprintln!("cannot write {path:?}: {e}"),
+    }
+    if failed {
+        eprintln!("serve bench FAILED");
+        std::process::exit(1);
+    }
+}

@@ -41,7 +41,7 @@ impl Scale {
 /// executor spawning vs the persistent pool).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig2", "fig3", "fig4", "fig6", "table1", "fig7", "ablation", "dataflow",
-    "throughput", "scenario", "faults", "kernels",
+    "throughput", "scenario", "faults", "kernels", "serve",
 ];
 
 /// Dispatch by id.
@@ -59,6 +59,7 @@ pub fn run_experiment(id: &str, scale: Scale) -> ExperimentReport {
         "scenario" => scenario(scale),
         "faults" => faults(scale),
         "kernels" => kernels(scale),
+        "serve" => serve_exp(scale),
         other => panic!("unknown experiment {other:?} (want one of {ALL_EXPERIMENTS:?})"),
     }
 }
@@ -916,6 +917,272 @@ fn throughput(scale: Scale) -> ExperimentReport {
     }
 }
 
+// --- Serve: factorisation-as-a-service through saturation ---------------
+
+/// `serve` experiment: the deterministic virtual-time serving model's
+/// offered-load sweep (the committed `"source": "serve"` BENCH rows
+/// come from the same numbers), plus live loopback probes of the
+/// serving invariants on a real [`crate::serve::Server`] — typed
+/// overload shedding with the exact queue coordinates, bit-identical
+/// completion of everything admitted, and graceful drain.
+fn serve_exp(scale: Scale) -> ExperimentReport {
+    use crate::serve::ServeModel;
+    let workers = 8usize;
+    let nb = scale.nb(16);
+    let bs = 16usize;
+    let max_pending = 64usize;
+    let requests = scale.jobs(2000).max(300);
+    let seed = 1u64;
+    let m = ServeModel::calibrate(workers, nb, bs, max_pending);
+    let mut t = Table::new(
+        &format!(
+            "Serve — open-loop offered load sweep, mixed factorisation \
+             stream NB={nb} BS={bs}, {workers} workers, shed bound \
+             {max_pending}, {requests} requests (virtual time)"
+        ),
+        &[
+            "offered %", "offered jobs/s", "achieved jobs/s", "p50 us",
+            "p99 us", "p999 us", "shed", "completed",
+        ],
+    );
+    let pcts = [20u64, 50, 80, 95, 120, 200, 400];
+    let mut by = std::collections::HashMap::new();
+    for &pct in &pcts {
+        let gap = m.gap_for_offered_pct(pct);
+        let o = m.run(gap, requests, seed);
+        t.row(vec![
+            pct.to_string(),
+            format!("{:.1}", m.clock_hz / gap as f64),
+            format!("{:.1}", o.achieved_per_sec()),
+            o.percentile_us(500).to_string(),
+            o.percentile_us(990).to_string(),
+            o.percentile_us(999).to_string(),
+            o.shed.to_string(),
+            o.completed().to_string(),
+        ]);
+        by.insert(pct, o);
+    }
+    let mu = m.clock_hz / m.service as f64;
+    let mut checks = vec![
+        ShapeCheck::new(
+            "tail latency blows up through saturation: p99 at 20% offered < p99 at 200%",
+            by[&20].percentile_us(990) < by[&200].percentile_us(990),
+            format!(
+                "p99 {} us -> {} us",
+                by[&20].percentile_us(990),
+                by[&200].percentile_us(990)
+            ),
+        ),
+        ShapeCheck::new(
+            "no shedding at or below 80% offered load",
+            by[&20].shed == 0 && by[&50].shed == 0 && by[&80].shed == 0,
+            format!(
+                "shed at 20/50/80%: {}/{}/{}",
+                by[&20].shed, by[&50].shed, by[&80].shed
+            ),
+        ),
+        ShapeCheck::new(
+            "overload sheds at the bound and every offered request is accounted for",
+            by[&400].shed > 0
+                && pcts
+                    .iter()
+                    .all(|p| by[p].completed() + by[p].shed == requests),
+            format!("shed at 400%: {} of {requests}", by[&400].shed),
+        ),
+        ShapeCheck::new(
+            "achieved throughput plateaus at the pool's service rate under overload",
+            by[&400].achieved_per_sec() <= mu * 1.05
+                && by[&400].achieved_per_sec() > mu * 0.5,
+            format!(
+                "achieved {:.1}/s vs service rate {:.1}/s",
+                by[&400].achieved_per_sec(),
+                mu
+            ),
+        ),
+    ];
+    let (t_host, host_checks) = serve_host_checks();
+    checks.extend(host_checks);
+    ExperimentReport {
+        id: "serve".into(),
+        tables: vec![t, t_host],
+        checks,
+    }
+}
+
+/// Live loopback probes behind the `serve` experiment: real servers
+/// on ephemeral ports, probed with the blocking client. Sized to run
+/// in well under a second while keeping the overload gate's runtime
+/// orders of magnitude above a loopback round-trip.
+fn serve_host_checks() -> (Table, Vec<ShapeCheck>) {
+    use crate::serve::{
+        matrix_digest, Client, Request, Response, ServeConfig, Server,
+    };
+    use std::sync::atomic::Ordering;
+
+    fn ref_digest(name: &str, nb: usize, bs: usize, seed: u32) -> u64 {
+        let w = crate::sched::workload::find(name).expect("registry");
+        let mut m = w.make_input(&Params::new(nb, bs), seed);
+        w.reference_seq(&mut m);
+        matrix_digest(&m)
+    }
+    fn done_frame(r: Result<Response, crate::serve::client::RecvError>) -> Option<(u64, u64)> {
+        match r {
+            Ok(Response::Done { id, digest, .. }) => Some((id, digest)),
+            _ => None,
+        }
+    }
+    let sub = |id: u64, w: &str, nb: u32, bs: u32| Request::Submit {
+        id,
+        workload: w.to_string(),
+        nb,
+        bs,
+        seed: 7,
+        poison_task: None,
+        deadline: None,
+    };
+    let p_small = Params::new(4, 4);
+    let facts: Vec<&'static dyn SchedWorkload> = registry()
+        .iter()
+        .copied()
+        .filter(|w| w.phases(&p_small).is_some())
+        .collect();
+    let gate_w = facts[0].name();
+    let fill_w = facts[facts.len() - 1].name();
+    let mut t = Table::new(
+        "Serve — live loopback probes (host time)",
+        &["probe", "observed"],
+    );
+
+    // Overload: a 1-job pool with shed bound 1. The gate occupies the
+    // only job slot (an NB=28 factorisation runs for milliseconds on
+    // two workers, vs microseconds for three pipelined loopback
+    // submits), the filler sits in the pending queue at the bound,
+    // and the third submit must come back as a typed Busy carrying
+    // the exact queue coordinates — never a dropped connection.
+    let cfg = ServeConfig {
+        max_jobs: 1,
+        max_pending: Some(1),
+        ..ServeConfig::new(2)
+    };
+    let server = Server::bind("127.0.0.1:0", cfg).expect("bind loopback");
+    let addr = server.local_addr().expect("local addr");
+    let stop = server.stop_flag();
+    let run = std::thread::spawn(move || server.run());
+    let mut c = Client::connect(addr).expect("connect");
+    c.send(&sub(1, gate_w, 28, 8)).expect("send gate");
+    c.send(&sub(2, fill_w, 4, 4)).expect("send filler");
+    c.send(&sub(3, fill_w, 4, 4)).expect("send probe");
+    let r1 = c.recv();
+    let r2 = c.recv();
+    let r3 = c.recv();
+    let busy_typed = matches!(
+        (&r1, &r2, &r3),
+        (
+            Ok(Response::Accepted { id: 1 }),
+            Ok(Response::Accepted { id: 2 }),
+            Ok(Response::Busy { id: 3, pending: 1, limit: 1 })
+        )
+    );
+    // Both admitted jobs deliver Done frames with digests
+    // bit-identical to the local sequential reference.
+    let mut dones = vec![done_frame(c.recv()), done_frame(c.recv())];
+    dones.sort();
+    let admitted_exact = dones
+        == vec![
+            Some((1, ref_digest(gate_w, 28, 8, 7))),
+            Some((2, ref_digest(fill_w, 4, 4, 7))),
+        ];
+    stop.store(true, Ordering::SeqCst);
+    drop(c);
+    let stats = run.join().expect("serve thread");
+    t.row(vec!["overload: third submit".into(), format!("{r3:?}")]);
+    t.row(vec![
+        "overload: admitted digests (id, fnv64)".into(),
+        format!("{dones:?}"),
+    ]);
+    t.row(vec!["overload: server stats".into(), format!("{stats:?}")]);
+
+    // Drain: four connections each with one in-flight job, a fifth
+    // issues Shutdown while they run. Every admitted job must deliver
+    // its Done frame before the ack, and a submit arriving after the
+    // drain gets a typed Draining frame on a still-open socket.
+    let server = Server::bind("127.0.0.1:0", ServeConfig::new(2))
+        .expect("bind loopback");
+    let addr = server.local_addr().expect("local addr");
+    let run = std::thread::spawn(move || server.run());
+    let mut conns: Vec<Client> = (0..4)
+        .map(|_| Client::connect(addr).expect("connect"))
+        .collect();
+    for (i, c) in conns.iter_mut().enumerate() {
+        c.send(&sub(10 + i as u64, fill_w, 12, 8)).expect("send");
+    }
+    // All four admitted *before* the drain starts — Accepted frames
+    // are sent only after the pool accepted the job, so waiting for
+    // them removes the submit-vs-drain race from the probe.
+    let mut admitted = 0usize;
+    for (i, c) in conns.iter_mut().enumerate() {
+        let want = 10 + i as u64;
+        if matches!(c.recv(), Ok(Response::Accepted { id }) if id == want)
+        {
+            admitted += 1;
+        }
+    }
+    let mut shut = Client::connect(addr).expect("connect");
+    let ack = matches!(
+        shut.request(&Request::Shutdown),
+        Ok(Response::ShuttingDown)
+    );
+    let mut drained_done = 0usize;
+    for (i, c) in conns.iter_mut().enumerate() {
+        let want = 10 + i as u64;
+        if let Ok(Response::Done { id: d, digest, .. }) = c.recv() {
+            if d == want && digest == ref_digest(fill_w, 12, 8, 7) {
+                drained_done += 1;
+            }
+        }
+    }
+    let late = conns[0].send(&sub(99, fill_w, 4, 4)).is_ok()
+        && matches!(
+            conns[0].recv(),
+            Ok(Response::Draining { id: 99 })
+        );
+    drop(conns);
+    drop(shut);
+    let stats2 = run.join().expect("serve thread");
+    t.row(vec![
+        "drain: ack / terminals / late submit".into(),
+        format!("ack={ack} done={drained_done}/4 late_draining={late}"),
+    ]);
+    t.row(vec!["drain: server stats".into(), format!("{stats2:?}")]);
+
+    let checks = vec![
+        ShapeCheck::new(
+            "loopback overload: shed is typed at the exact bound and admitted work completes bit-identically",
+            busy_typed
+                && admitted_exact
+                && stats.accepted == 2
+                && stats.completed == 2
+                && stats.shed == 1,
+            format!("busy={r3:?} dones={dones:?} stats={stats:?}"),
+        ),
+        ShapeCheck::new(
+            "loopback drain: every admitted job finishes before the ack; late submits get typed Draining",
+            admitted == 4
+                && ack
+                && drained_done == 4
+                && late
+                && stats2.accepted == 4
+                && stats2.completed == 4
+                && stats2.drained == 1,
+            format!(
+                "admitted={admitted}/4 ack={ack} done={drained_done}/4 \
+                 late={late} stats={stats2:?}"
+            ),
+        ),
+    ];
+    (t, checks)
+}
+
 // --- Scenario engine: adversarial streams, executable invariants --------
 
 /// The pinned seed set for the full `scenario` experiment sweep — three
@@ -1690,5 +1957,11 @@ mod tests {
     #[should_panic(expected = "unknown experiment")]
     fn unknown_id_panics() {
         run_experiment("fig99", Scale(0.1));
+    }
+
+    #[test]
+    fn serve_shape_holds_scaled() {
+        let r = serve_exp(Scale(0.1));
+        assert!(r.all_pass(), "{}", r.render());
     }
 }

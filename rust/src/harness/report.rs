@@ -111,6 +111,159 @@ impl ExperimentReport {
     }
 }
 
+/// Nearest-rank percentile of a **sorted ascending** slice, with the
+/// percentile expressed in per-mille so p99.9 needs no floats:
+/// `per_mille = 500` → p50, `990` → p99, `999` → p99.9. The rank is
+/// `ceil(per_mille · n / 1000)` clamped to `[1, n]` — the classic
+/// nearest-rank definition, integer-exact and portable.
+///
+/// Panics on an empty slice (a latency distribution with no samples
+/// has no percentiles — callers check first).
+pub fn percentile_nearest_rank(sorted: &[u64], per_mille: u32) -> u64 {
+    assert!(!sorted.is_empty(), "percentile of an empty distribution");
+    let n = sorted.len() as u64;
+    let rank = (u64::from(per_mille) * n).div_ceil(1000).clamp(1, n);
+    sorted[(rank - 1) as usize]
+}
+
+/// A log-bucketed latency histogram: power-of-two buckets, each split
+/// into [`LatencyHistogram::SUB`] linear sub-buckets, so any `u64`
+/// value records in O(1) into a fixed ~1k-slot table with ≤ ~6%
+/// relative quantization error. The open-loop load generator records
+/// per-request latencies here; percentiles come out nearest-rank over
+/// the bucket counts (each bucket reports its lower bound — a
+/// conservative, deterministic representative). Exact `min`/`max` are
+/// tracked on the side and clamp the extreme percentiles.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// log2 of the linear sub-buckets per power-of-two bucket.
+    const LOG_SUB: u32 = 4;
+    /// Linear sub-buckets per power-of-two bucket.
+    const SUB: u64 = 1 << Self::LOG_SUB;
+
+    pub fn new() -> Self {
+        let buckets = ((64 - Self::LOG_SUB + 1) * Self::SUB as u32) as usize;
+        Self {
+            counts: vec![0; buckets],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    fn bucket(v: u64) -> usize {
+        if v < Self::SUB {
+            return v as usize;
+        }
+        let top = 63 - v.leading_zeros(); // >= LOG_SUB here
+        let shift = top - Self::LOG_SUB;
+        let sub = (v >> shift) & (Self::SUB - 1);
+        (((shift + 1) * Self::SUB as u32) + sub as u32) as usize
+    }
+
+    /// Lower bound of bucket `idx` — the value percentiles report.
+    fn bucket_floor(idx: usize) -> u64 {
+        let idx = idx as u64;
+        if idx < Self::SUB {
+            return idx;
+        }
+        let shift = (idx >> Self::LOG_SUB) - 1;
+        let sub = idx & (Self::SUB - 1);
+        (Self::SUB + sub) << shift
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += u128::from(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Nearest-rank percentile (per-mille, like
+    /// [`percentile_nearest_rank`]) over the bucketed counts,
+    /// clamped into the exact observed `[min, max]`. Zero if empty.
+    pub fn percentile(&self, per_mille: u32) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = (u64::from(per_mille) * self.total)
+            .div_ceil(1000)
+            .clamp(1, self.total);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_floor(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(500)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(990)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.percentile(999)
+    }
+
+    /// Merge another histogram into this one (per-connection
+    /// recorders folding into the run total).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+}
+
 /// Format a cycle count as virtual seconds on the TILEPro64.
 pub fn vsec(cycles: u64) -> String {
     format!("{:.3}", cycles as f64 / 866e6)
@@ -159,5 +312,97 @@ mod tests {
     fn formatting() {
         assert_eq!(vsec(866_000_000), "1.000");
         assert_eq!(spd(2.5), "2.50x");
+    }
+
+    #[test]
+    fn nearest_rank_matches_the_textbook_cases() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_nearest_rank(&v, 500), 50);
+        assert_eq!(percentile_nearest_rank(&v, 990), 99);
+        assert_eq!(percentile_nearest_rank(&v, 999), 100);
+        assert_eq!(percentile_nearest_rank(&v, 1000), 100);
+        assert_eq!(percentile_nearest_rank(&[7], 500), 7);
+        assert_eq!(percentile_nearest_rank(&[7], 999), 7);
+        // Five-element example from the nearest-rank definition.
+        let v = [15, 20, 35, 40, 50];
+        assert_eq!(percentile_nearest_rank(&v, 300), 20);
+        assert_eq!(percentile_nearest_rank(&v, 400), 20);
+        assert_eq!(percentile_nearest_rank(&v, 500), 35);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn nearest_rank_refuses_an_empty_distribution() {
+        percentile_nearest_rank(&[], 500);
+    }
+
+    #[test]
+    fn histogram_is_exact_for_small_values() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=10u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 10);
+        // Values below SUB land in exact unit buckets.
+        assert_eq!(h.p50(), 5);
+        assert_eq!(h.percentile(1000), 10);
+        assert!((h.mean() - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantization_error_is_bounded() {
+        let mut h = LatencyHistogram::new();
+        let exact: Vec<u64> =
+            (0..10_000u64).map(|i| 17 + i * 97 % 1_000_000).collect();
+        for &v in &exact {
+            h.record(v);
+        }
+        let mut sorted = exact.clone();
+        sorted.sort_unstable();
+        for pm in [500u32, 900, 990, 999] {
+            let want = percentile_nearest_rank(&sorted, pm) as f64;
+            let got = h.percentile(pm) as f64;
+            // Bucket floors undershoot by at most one sub-bucket
+            // width: 1/16 ≈ 6.25% relative.
+            assert!(
+                got <= want && got >= want * (1.0 - 0.07),
+                "p{pm}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_single_recorder() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 0..1000u64 {
+            let v = (i * 7919) % 50_000;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for pm in [500u32, 990, 999] {
+            assert_eq!(a.percentile(pm), all.percentile(pm));
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p999(), 0);
     }
 }

@@ -286,6 +286,49 @@
 //! winner via [`sched::workload::set_tuned_bs`] (CLI
 //! `--autotune on`, harness `gprm exp kernels`,
 //! `benches/kernels.rs`).
+//!
+//! # Serving front-end
+//!
+//! The paper's runtime factors one matrix per process invocation;
+//! [`serve`] keeps the persistent pool resident behind a TCP socket
+//! and turns it into *factorisation-as-a-service* — the deployment
+//! shape the persistent-pool launch model
+//! ([`tilesim::LaunchModel::PersistentPool`]) exists for. The wire
+//! protocol is deliberately primitive (no external dependencies):
+//! every frame is a `u32` little-endian length prefix (≤ 64 KiB)
+//! followed by that many payload bytes, and the payload's first byte
+//! tags the message. Requests: `Submit` (id, workload name, grid
+//! `nb`/`bs`, seed, optional poison task, optional deadline), `Poll`,
+//! `Shutdown`, `Ping`. Responses: `Accepted`, then exactly one
+//! terminal frame per submit — `Done` (FNV-1a digest over the result
+//! matrix's f32 bits, so a client verifies bit-identity against the
+//! sequential reference without shipping the matrix), or a *typed*
+//! refusal/failure (`Busy` with the pool's exact pending/limit,
+//! `Draining`, `Rejected`, `Failed` with the failing op/task/message,
+//! `Cancelled`). Overload and faults are answered on the wire, never
+//! with a dropped connection, and every admitted job delivers its
+//! terminal frame even across a drain ([`serve::server`]).
+//!
+//! Loopback quickstart:
+//!
+//! ```text
+//! $ gprm serve --addr 127.0.0.1:7979 --threads 8 --max-pending 64 &
+//! serving on 127.0.0.1:7979
+//! $ gprm loadgen --addr 127.0.0.1:7979 --rate 200 --requests 400 \
+//!       --conns 4 --nb 8 --bs 8 --verify --shutdown
+//! loadgen PASS ...
+//! ```
+//!
+//! `gprm loadgen` is *open-loop* ([`serve::loadgen`]): arrivals
+//! follow a precomputed SplitMix64 schedule and latency is measured
+//! from the scheduled arrival, so a stalling server shows up as tail
+//! latency instead of silently throttling the offered load. Latencies
+//! land in a log-bucketed histogram
+//! ([`harness::report::LatencyHistogram`], ≤ ~6% relative error) with
+//! nearest-rank p50/p99/p999. `gprm exp serve` sweeps offered load
+//! through saturation on the deterministic virtual-time serving model
+//! ([`serve::ServeModel`]) and machine-checks the serving invariants
+//! on a live loopback server.
 // CI enforces `cargo clippy -- -D warnings`; these style lints are
 // opted out crate-wide because they fight the paper-faithful shapes:
 // index-heavy numeric kernels (the explicit loop bounds document the
@@ -306,6 +349,7 @@ pub mod omp;
 pub mod tilesim;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod apps;
 pub mod bench;
 pub mod harness;

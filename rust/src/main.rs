@@ -20,6 +20,14 @@
 //!   jobs/sec. The SparseLU phase-barrier drivers (omp/gprm) and the
 //!   PJRT backend remain `--app sparselu`-only.
 //! * `matmul` — the §V micro-benchmark on a real runtime.
+//! * `serve` — factorisation-as-a-service: keep one persistent pool
+//!   resident behind a TCP socket, answering typed submit/poll frames
+//!   until a `shutdown` frame or SIGTERM drains it (see the
+//!   crate-level "Serving front-end" section for the wire format).
+//! * `loadgen` — open-loop load generator against a `serve` endpoint:
+//!   seeded arrival schedule, per-request latency percentiles from a
+//!   log-bucketed histogram, optional bit-exact digest verification
+//!   and poison/deadline fault injection.
 //! * `artifacts` — inspect the AOT artifact manifest / PJRT platform.
 //!
 //! The CLI never names a workload: help text, `--app` validation, the
@@ -58,6 +66,8 @@ fn main() {
         Some("exp") => cmd_exp(&argv[1..]),
         Some("sparselu") => cmd_sparselu(&argv[1..]),
         Some("matmul") => cmd_matmul(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
+        Some("loadgen") => cmd_loadgen(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
         Some("help") | Some("--help") | None => {
             print_help();
@@ -76,7 +86,8 @@ fn print_help() {
     println!(
         "gprm — reproduction of 'A Parallel Task-based Approach to Linear \
          Algebra' (ISPDC 2014)\n\n\
-         USAGE:\n  gprm <exp|sparselu|matmul|artifacts> [options]\n\n\
+         USAGE:\n  gprm <exp|sparselu|matmul|serve|loadgen|artifacts> \
+         [options]\n\n\
          `gprm sparselu --app {}` selects the workload on the shared\n\
          dataflow engine (`--list-apps` describes the registry);\n\
          `--runtime pool --jobs N` overlaps N instances on one\n\
@@ -160,11 +171,26 @@ fn cmd_exp(argv: &[String]) -> i32 {
             default: Some("1"),
             is_flag: false,
         },
+        OptSpec {
+            name: "list-scenarios",
+            help: "print the scenario registry (name, rationale, \
+                   invariants) and exit",
+            default: None,
+            is_flag: true,
+        },
+        OptSpec {
+            name: "list-faults",
+            help: "print the fault-scenario registry (name, rationale, \
+                   invariants) and exit",
+            default: None,
+            is_flag: true,
+        },
     ];
-    let args = match parse(argv, &["help"]) {
-        Ok(a) => a,
-        Err(e) => return err_usage("gprm exp", &e, &specs),
-    };
+    let args =
+        match parse(argv, &["help", "list-scenarios", "list-faults"]) {
+            Ok(a) => a,
+            Err(e) => return err_usage("gprm exp", &e, &specs),
+        };
     if args.has_flag("help") {
         println!(
             "{}",
@@ -179,6 +205,18 @@ fn cmd_exp(argv: &[String]) -> i32 {
             )
         );
         return 0;
+    }
+    if args.has_flag("list-scenarios") {
+        return list_scenarios(
+            "scenarios (gprm exp scenario; repro: --scenario <name> --seed N)",
+            gprm::sched::scenario::ALL_SCENARIOS,
+        );
+    }
+    if args.has_flag("list-faults") {
+        return list_scenarios(
+            "fault scenarios (gprm exp faults; repro: --fault <name> --seed N)",
+            gprm::sched::fault::FAULT_SCENARIOS,
+        );
     }
     let repro: Option<Result<gprm::harness::ExperimentReport, String>> =
         if let Some(name) = args.get("scenario") {
@@ -879,6 +917,192 @@ fn report_dataflow(
             eprintln!("event log INVALID: {e}");
             false
         }
+    }
+}
+
+/// `--list-scenarios` / `--list-faults`: print a scenario registry —
+/// name, rationale, declared invariants — and exit. Both registries
+/// share [`gprm::sched::scenario::Scenario`], so one renderer covers
+/// them; like `--list-apps`, the listing is derived from the
+/// registry, never a hand-kept table.
+fn list_scenarios(
+    title: &str,
+    scenarios: &[gprm::sched::scenario::Scenario],
+) -> i32 {
+    println!("{title} — {} entries:", scenarios.len());
+    for sc in scenarios {
+        println!("  {}", sc.name);
+        println!("      {}", sc.reason);
+        println!("      invariants: {}", sc.invariants.join(", "));
+    }
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    use gprm::serve::{install_term_handler, ServeConfig, Server};
+    let specs = [
+        OptSpec { name: "addr", help: "listen address; port 0 picks an ephemeral port (the bound address is printed)", default: Some("127.0.0.1:7979"), is_flag: false },
+        OptSpec { name: "threads", help: "pool workers", default: Some("8"), is_flag: false },
+        OptSpec { name: "max-pending", help: "shed bound: pending jobs beyond which submits get a typed Busy (0 = queue unboundedly)", default: Some("64"), is_flag: false },
+        OptSpec { name: "max-jobs", help: "concurrently active jobs", default: Some("64"), is_flag: false },
+        OptSpec { name: "capacity", help: "pool task deque capacity", default: Some("32768"), is_flag: false },
+        OptSpec { name: "domains", help: "affinity domains for locality-aware stealing", default: Some("1"), is_flag: false },
+        OptSpec { name: "max-nb", help: "largest accepted blocks-per-dimension in a submit", default: Some("64"), is_flag: false },
+        OptSpec { name: "max-bs", help: "largest accepted block size in a submit", default: Some("64"), is_flag: false },
+    ];
+    let args = match parse(argv, &["help"]) {
+        Ok(a) => a,
+        Err(e) => return err_usage("gprm serve", &e, &specs),
+    };
+    if args.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "gprm serve",
+                "Factorisation-as-a-service: a persistent pool behind \
+                 a TCP socket, serving typed submit/poll frames until \
+                 a shutdown frame or SIGTERM drains it (wire format: \
+                 crate docs, 'Serving front-end')",
+                &specs
+            )
+        );
+        return 0;
+    }
+    let max_pending = args.get_parse("max-pending", 64usize).unwrap();
+    let cfg = ServeConfig {
+        workers: args.get_parse("threads", 8usize).unwrap().max(1),
+        task_capacity: args.get_parse("capacity", 1usize << 15).unwrap(),
+        max_jobs: args.get_parse("max-jobs", 64usize).unwrap().max(1),
+        max_pending: (max_pending > 0).then_some(max_pending),
+        domains: args.get_parse("domains", 1usize).unwrap().max(1),
+        max_nb: args.get_parse("max-nb", 64usize).unwrap().max(1),
+        max_bs: args.get_parse("max-bs", 64usize).unwrap().max(1),
+    };
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7979");
+    let server = match Server::bind(addr, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot bind {addr}: {e}");
+            return 1;
+        }
+    };
+    install_term_handler();
+    match server.local_addr() {
+        Ok(a) => println!("serving on {a}"),
+        Err(_) => println!("serving on {addr}"),
+    }
+    // The banner is how scripts learn the bound address — make sure
+    // it leaves the process even when stdout is a pipe.
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let stats = server.run();
+    println!("serve drained: {stats:?}");
+    0
+}
+
+fn cmd_loadgen(argv: &[String]) -> i32 {
+    use gprm::serve::{loadgen, LoadConfig};
+    let specs = [
+        OptSpec { name: "addr", help: "serve endpoint to load", default: Some("127.0.0.1:7979"), is_flag: false },
+        OptSpec { name: "rate", help: "offered arrival rate, requests/sec (open-loop: the schedule does not slow down when the server does)", default: Some("100"), is_flag: false },
+        OptSpec { name: "requests", help: "total requests to offer", default: Some("100"), is_flag: false },
+        OptSpec { name: "conns", help: "connections to round-robin requests over", default: Some("4"), is_flag: false },
+        OptSpec { name: "nb", help: "blocks per dimension per job", default: Some("8"), is_flag: false },
+        OptSpec { name: "bs", help: "block size per job", default: Some("8"), is_flag: false },
+        OptSpec { name: "seed", help: "seeds the arrival jitter and the submitted jobs", default: Some("1"), is_flag: false },
+        OptSpec { name: "apps", help: "comma-separated workload names cycled per request (default: the registry's factorisation workloads)", default: None, is_flag: false },
+        OptSpec { name: "verify", help: "check every Done digest bit-exactly against the local sequential reference", default: None, is_flag: true },
+        OptSpec { name: "poison-every", help: "poison every Nth request with an injected kernel panic (0 = never); poisoned requests must come back as typed Failed frames", default: Some("0"), is_flag: false },
+        OptSpec { name: "deadline-every", help: "deadline every Nth request at 0 executed tasks (0 = never); deadlined requests come back Cancelled (or Done if they won the race)", default: Some("0"), is_flag: false },
+        OptSpec { name: "shutdown", help: "send a shutdown frame after the run and await the drain ack", default: None, is_flag: true },
+    ];
+    let args = match parse(argv, &["help", "verify", "shutdown"]) {
+        Ok(a) => a,
+        Err(e) => return err_usage("gprm loadgen", &e, &specs),
+    };
+    if args.has_flag("help") {
+        println!(
+            "{}",
+            usage(
+                "gprm loadgen",
+                "Open-loop load generator against a `gprm serve` \
+                 endpoint: seeded arrivals, log-bucketed latency \
+                 percentiles, typed-refusal accounting, optional \
+                 digest verification and fault injection",
+                &specs
+            )
+        );
+        return 0;
+    }
+    let workloads: Vec<String> = match args.get_list("apps", &[]) {
+        Ok(v) => v,
+        Err(e) => return err_usage("gprm loadgen", &e, &specs),
+    };
+    let cfg = LoadConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7979").to_string(),
+        rate_per_sec: args.get_parse("rate", 100.0f64).unwrap(),
+        requests: args.get_parse("requests", 100usize).unwrap(),
+        conns: args.get_parse("conns", 4usize).unwrap(),
+        nb: args.get_parse("nb", 8usize).unwrap(),
+        bs: args.get_parse("bs", 8usize).unwrap(),
+        seed: args.get_parse("seed", 1u64).unwrap(),
+        workloads,
+        verify: args.has_flag("verify"),
+        poison_every: args.get_parse("poison-every", 0usize).unwrap(),
+        deadline_every: args.get_parse("deadline-every", 0usize).unwrap(),
+        shutdown: args.has_flag("shutdown"),
+    };
+    let r = match loadgen::run(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("loadgen error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "offered {:.1} req/s, achieved {:.1} done/s over {:.2?}",
+        r.offered_per_sec, r.achieved_per_sec, r.elapsed
+    );
+    println!(
+        "sent {} accepted {} done {} failed {} cancelled {} busy {} \
+         draining {} rejected {} lost {}",
+        r.sent,
+        r.accepted,
+        r.done,
+        r.failed,
+        r.cancelled,
+        r.busy,
+        r.draining,
+        r.rejected,
+        r.lost
+    );
+    if r.hist.count() > 0 {
+        println!(
+            "latency us (from scheduled arrival, n={}): p50 {} p99 {} \
+             p999 {} min {} max {} mean {:.0}",
+            r.hist.count(),
+            r.hist.p50(),
+            r.hist.p99(),
+            r.hist.p999(),
+            r.hist.min(),
+            r.hist.max(),
+            r.hist.mean()
+        );
+    }
+    if r.pass() {
+        println!("loadgen PASS");
+        0
+    } else {
+        println!(
+            "loadgen FAIL (lost {} digest_mismatches {} \
+             unexpected_outcomes {} send_errors {} shutdown_acked {})",
+            r.lost,
+            r.digest_mismatches,
+            r.unexpected_outcomes,
+            r.send_errors,
+            r.shutdown_acked
+        );
+        1
     }
 }
 

@@ -1233,6 +1233,16 @@ pub struct JobHandle {
     job: Arc<JobInner>,
 }
 
+/// Cloning a handle is cheap (one `Arc` bump) and safe: dropping a
+/// handle never cancels the job, so any clone can wait on or resolve
+/// it. The serving layer relies on this to track one job from both a
+/// waiter thread and a poll map.
+impl Clone for JobHandle {
+    fn clone(&self) -> Self {
+        Self { job: self.job.clone() }
+    }
+}
+
 impl JobHandle {
     pub(crate) fn from_inner(job: Arc<JobInner>) -> Self {
         Self { job }

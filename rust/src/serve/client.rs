@@ -1,0 +1,93 @@
+//! A minimal blocking client for the serve wire protocol — the
+//! building block of [`super::loadgen`], the loopback tests, and any
+//! external tooling that wants to talk to `gprm serve`.
+//!
+//! One [`Client`] wraps one TCP connection. Requests and responses
+//! are *decoupled*: [`Client::send`] writes a frame and returns,
+//! [`Client::recv`] blocks for the next response frame whoever it
+//! belongs to (the server interleaves terminal frames of concurrent
+//! jobs in completion order). [`Client::request`] is the simple
+//! lock-step helper for callers that keep at most one request in
+//! flight.
+
+use super::frame::{read_frame, write_frame};
+use super::protocol::{Request, Response, WireError};
+use std::io;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+
+/// One connection to a serve loop.
+pub struct Client {
+    stream: TcpStream,
+}
+
+/// Client-side receive errors: transport vs. protocol decode.
+#[derive(Debug)]
+pub enum RecvError {
+    /// The socket failed or closed mid-frame.
+    Io(io::Error),
+    /// The server closed the connection cleanly (EOF between frames).
+    Closed,
+    /// The bytes arrived but did not decode as a [`Response`].
+    Wire(WireError),
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Io(e) => write!(f, "serve transport: {e}"),
+            RecvError::Closed => write!(f, "server closed connection"),
+            RecvError::Wire(e) => write!(f, "bad response frame: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+impl From<io::Error> for RecvError {
+    fn from(e: io::Error) -> Self {
+        RecvError::Io(e)
+    }
+}
+
+impl Client {
+    /// Connect to a serve loop (e.g. `"127.0.0.1:7979"`).
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        // Latency harness: don't batch tiny frames.
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream })
+    }
+
+    /// Write one request frame.
+    pub fn send(&mut self, req: &Request) -> io::Result<()> {
+        write_frame(&mut self.stream, &req.encode())
+    }
+
+    /// Block for the next response frame, in server send order.
+    pub fn recv(&mut self) -> Result<Response, RecvError> {
+        match read_frame(&mut self.stream)? {
+            None => Err(RecvError::Closed),
+            Some(buf) => {
+                Response::decode(&buf).map_err(RecvError::Wire)
+            }
+        }
+    }
+
+    /// Lock-step helper: send, then block for one response. Only
+    /// sound when no other request of this client is still pending a
+    /// frame.
+    pub fn request(
+        &mut self,
+        req: &Request,
+    ) -> Result<Response, RecvError> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Half-close the write side: tells the server this client is
+    /// done submitting, while terminal frames of in-flight jobs can
+    /// still be received.
+    pub fn finish_sending(&mut self) -> io::Result<()> {
+        self.stream.shutdown(Shutdown::Write)
+    }
+}

@@ -1,0 +1,338 @@
+//! Length-delimited framing and byte-level codec primitives.
+//!
+//! One frame = a little-endian `u32` payload length followed by the
+//! payload bytes. The length prefix is the *only* transport-level
+//! structure — everything else (request/response tags, fields) lives
+//! in [`super::protocol`]. Frames are capped at [`MAX_FRAME`] bytes so
+//! a corrupt or hostile length prefix can never make the server
+//! allocate unboundedly.
+//!
+//! [`ByteWriter`] / [`ByteReader`] are the payload codec: fixed-width
+//! little-endian integers, `u16`-length-prefixed UTF-8 strings, and
+//! flagged optionals. Decoding is total — every malformed input maps
+//! to a typed [`WireError`], never a panic — because the server feeds
+//! it bytes from the network.
+
+use std::io::{self, Read, Write};
+
+/// Hard cap on a frame payload (64 KiB). Requests and responses are
+/// tiny (well under 1 KiB); the cap exists to bound allocation on a
+/// garbage length prefix.
+pub const MAX_FRAME: usize = 1 << 16;
+
+/// Write one length-delimited frame and flush it.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame of {} bytes exceeds MAX_FRAME", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// What one read attempt produced.
+pub enum ReadOutcome {
+    /// A complete frame payload.
+    Frame(Vec<u8>),
+    /// The peer closed the stream cleanly at a frame boundary.
+    Eof,
+    /// A read timeout fired before *any* byte of the next frame
+    /// arrived (only with a socket read timeout set) — the caller can
+    /// poll its stop flag and retry. Once the first header byte is
+    /// in, the frame is read to completion regardless of timeouts.
+    Idle,
+}
+
+/// Fill `buf`, tolerating short reads. Returns `Ok(false)` on clean
+/// EOF before the first byte; timeouts before the first byte surface
+/// as `WouldBlock`/`TimedOut` errors only when `may_idle`.
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    may_idle: bool,
+) -> io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "stream closed mid-frame",
+                ));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Mid-frame the bytes are in flight: keep reading.
+                // Before the first byte, report idleness if allowed.
+                if got == 0 && may_idle {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame, distinguishing clean EOF and (when the stream has
+/// a read timeout) idleness before the next frame starts.
+pub fn read_frame_idle(r: &mut impl Read) -> io::Result<ReadOutcome> {
+    let mut len = [0u8; 4];
+    match read_full(r, &mut len, true) {
+        Ok(false) => return Ok(ReadOutcome::Eof),
+        Ok(true) => {}
+        Err(e)
+            if matches!(
+                e.kind(),
+                io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+            ) =>
+        {
+            return Ok(ReadOutcome::Idle)
+        }
+        Err(e) => return Err(e),
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {n} exceeds MAX_FRAME"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    read_full(r, &mut buf, false)?;
+    Ok(ReadOutcome::Frame(buf))
+}
+
+/// Read one frame from a stream without a read timeout: blocks until
+/// a frame or clean EOF (`None`).
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    loop {
+        match read_frame_idle(r)? {
+            ReadOutcome::Frame(f) => return Ok(Some(f)),
+            ReadOutcome::Eof => return Ok(None),
+            ReadOutcome::Idle => {}
+        }
+    }
+}
+
+/// Why a payload failed to decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The payload ended before the field being read.
+    Truncated,
+    /// An unknown request/response tag byte.
+    BadTag(u8),
+    /// A string field held invalid UTF-8.
+    BadUtf8,
+    /// Bytes remained after the last field (framing desync).
+    Trailing(usize),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "payload truncated"),
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::BadUtf8 => write!(f, "string field is not UTF-8"),
+            WireError::Trailing(n) => {
+                write!(f, "{n} trailing bytes after the last field")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Append-only payload builder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `u16` length + UTF-8 bytes. Strings longer than `u16::MAX`
+    /// bytes are truncated at a char boundary (fields are names and
+    /// panic messages; losing a tail beats failing the frame).
+    pub fn str(&mut self, s: &str) {
+        let mut end = s.len().min(u16::MAX as usize);
+        while !s.is_char_boundary(end) {
+            end -= 1;
+        }
+        let bytes = &s.as_bytes()[..end];
+        self.buf.extend_from_slice(&(bytes.len() as u16).to_le_bytes());
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Presence flag byte, then the value only when present.
+    pub fn opt_u32(&mut self, v: Option<u32>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u32(x);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+/// Cursor over a payload.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let n = u16::from_le_bytes(self.take(2)?.try_into().unwrap());
+        let bytes = self.take(n as usize)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    pub fn opt_u32(&mut self) -> Result<Option<u32>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            _ => Ok(Some(self.u32()?)),
+        }
+    }
+
+    /// Assert the payload is fully consumed.
+    pub fn finish(&self) -> Result<(), WireError> {
+        let left = self.buf.len() - self.pos;
+        if left == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Trailing(left))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_round_trips_through_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversize_frames_are_refused_both_ways() {
+        let mut buf = Vec::new();
+        let e = write_frame(&mut buf, &vec![0u8; MAX_FRAME + 1]);
+        assert!(e.is_err());
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let e = read_frame(&mut io::Cursor::new(wire)).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_a_hang() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&8u32.to_le_bytes());
+        wire.extend_from_slice(b"abc"); // 3 of 8 bytes
+        let e = read_frame(&mut io::Cursor::new(wire)).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn byte_codec_round_trips_every_field_kind() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.str("cholesky");
+        w.str("");
+        w.opt_u32(Some(42));
+        w.opt_u32(None);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.str().unwrap(), "cholesky");
+        assert_eq!(r.str().unwrap(), "");
+        assert_eq!(r.opt_u32().unwrap(), Some(42));
+        assert_eq!(r.opt_u32().unwrap(), None);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn decode_errors_are_typed() {
+        let mut r = ByteReader::new(&[1, 2]);
+        assert_eq!(r.u32(), Err(WireError::Truncated));
+        let mut w = ByteWriter::new();
+        w.u32(5);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        r.u8().unwrap();
+        assert_eq!(r.finish(), Err(WireError::Trailing(3)));
+        // Invalid UTF-8 in a string field.
+        let bad = [2u8, 0, 0xFF, 0xFE];
+        let mut r = ByteReader::new(&bad);
+        assert_eq!(r.str(), Err(WireError::BadUtf8));
+    }
+}

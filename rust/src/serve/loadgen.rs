@@ -1,0 +1,400 @@
+//! Open-loop load generator for a serve loop.
+//!
+//! **Open-loop** is the load-testing discipline that avoids
+//! coordinated omission: requests are sent on a precomputed arrival
+//! schedule (uniform inter-arrival jitter in `[Δ/2, 3Δ/2]` around the
+//! offered mean gap, drawn from the SplitMix64 seed discipline — the
+//! same process [`super::model`] integrates in virtual time), and a
+//! request's latency is measured from its *scheduled* arrival, not
+//! from when the sender got around to writing it. A server that
+//! stalls therefore inflates the recorded latencies instead of
+//! silently slowing the offered load, which is exactly the behaviour
+//! an operator sizing a service needs to see.
+//!
+//! The generator multiplexes requests round-robin over a fixed set of
+//! connections, each with its own reader thread feeding one shared
+//! log-bucketed [`LatencyHistogram`]; successful responses can be
+//! checked bit-exactly against locally computed sequential reference
+//! digests (`--verify`), and every Nth request can be poisoned
+//! (fault-injected — must come back as a typed failure frame, never a
+//! dropped connection) or deadlined.
+
+use super::frame::{read_frame, write_frame};
+use super::protocol::{matrix_digest, Request, Response};
+use crate::harness::report::LatencyHistogram;
+use crate::sched::workload::{self, Params};
+use crate::util::prng::SplitMix64;
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// What the generator offers the server.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub addr: String,
+    /// Offered arrival rate, requests per second.
+    pub rate_per_sec: f64,
+    pub requests: usize,
+    /// Connections to round-robin requests over.
+    pub conns: usize,
+    pub nb: usize,
+    pub bs: usize,
+    /// Seeds both the arrival jitter and the submitted jobs.
+    pub seed: u64,
+    /// Workload names, cycled per request; empty = the registry's
+    /// factorisation (phase-capable) workloads.
+    pub workloads: Vec<String>,
+    /// Check each `Done` digest against the sequential reference.
+    pub verify: bool,
+    /// Poison every Nth request (0 = never).
+    pub poison_every: usize,
+    /// Deadline every Nth request at 0 executed tasks (0 = never).
+    pub deadline_every: usize,
+    /// Send a `Shutdown` frame after the run and await the ack.
+    pub shutdown: bool,
+}
+
+impl LoadConfig {
+    pub fn new(addr: &str) -> Self {
+        LoadConfig {
+            addr: addr.to_string(),
+            rate_per_sec: 100.0,
+            requests: 100,
+            conns: 4,
+            nb: 8,
+            bs: 8,
+            seed: 1,
+            workloads: Vec::new(),
+            verify: false,
+            poison_every: 0,
+            deadline_every: 0,
+            shutdown: false,
+        }
+    }
+}
+
+/// What each request is expected to come back as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Kind {
+    Normal,
+    /// Fault-injected: the only acceptable terminal is `Failed`.
+    Poisoned,
+    /// Deadlined at 0 tasks: `Cancelled`, or `Done` if it won the
+    /// race (then the digest must still check out).
+    Deadlined,
+}
+
+struct Expect {
+    kind: Kind,
+    /// Reference digest for verification (`None` when not verifying
+    /// or when the request cannot complete normally).
+    digest: Option<u64>,
+}
+
+#[derive(Default)]
+struct Tally {
+    accepted: usize,
+    busy: usize,
+    draining: usize,
+    rejected: usize,
+    done: usize,
+    failed: usize,
+    cancelled: usize,
+    digest_mismatches: usize,
+    /// Failures/cancellations of requests that were not poisoned or
+    /// deadlined, and `Done`s of poisoned ones.
+    unexpected_outcomes: usize,
+    send_errors: usize,
+}
+
+/// One load run's results. Latencies (µs, from scheduled arrival to
+/// terminal frame) are recorded for successful responses only.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub offered_per_sec: f64,
+    pub achieved_per_sec: f64,
+    pub sent: usize,
+    pub accepted: usize,
+    pub busy: usize,
+    pub draining: usize,
+    pub rejected: usize,
+    pub done: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+    pub digest_mismatches: usize,
+    pub unexpected_outcomes: usize,
+    pub send_errors: usize,
+    /// Requests that never received a terminal frame — must be 0:
+    /// admitted work is never dropped, refusals are typed.
+    pub lost: usize,
+    pub shutdown_acked: bool,
+    pub hist: LatencyHistogram,
+    pub elapsed: Duration,
+}
+
+impl LoadReport {
+    /// The machine verdict `gprm loadgen` prints PASS/FAIL from.
+    /// Shedding (`busy`) and drain refusals are *expected* under
+    /// overload and are not failures; lost frames, digest mismatches,
+    /// and untyped outcomes are.
+    pub fn pass(&self) -> bool {
+        // `shutdown_acked` is pre-set to true when no shutdown was
+        // requested, so it only gates runs that sent one.
+        self.lost == 0
+            && self.digest_mismatches == 0
+            && self.unexpected_outcomes == 0
+            && self.send_errors == 0
+            && self.shutdown_acked
+    }
+}
+
+fn kind_of(cfg: &LoadConfig, i: usize) -> Kind {
+    if cfg.poison_every > 0 && (i + 1) % cfg.poison_every == 0 {
+        Kind::Poisoned
+    } else if cfg.deadline_every > 0
+        && (i + 1) % cfg.deadline_every == 0
+    {
+        Kind::Deadlined
+    } else {
+        Kind::Normal
+    }
+}
+
+/// Drive one open-loop run. Returns `Err` on setup problems (bad
+/// workload name, connect failure); server-side behaviour — typed
+/// refusals, failures, lost frames — is *data*, reported in the
+/// [`LoadReport`].
+pub fn run(cfg: &LoadConfig) -> Result<LoadReport, String> {
+    if cfg.rate_per_sec <= 0.0 {
+        return Err("rate must be positive".into());
+    }
+    if cfg.requests == 0 || cfg.conns == 0 {
+        return Err("requests and conns must be positive".into());
+    }
+    let p = Params::new(cfg.nb, cfg.bs);
+    let names: Vec<String> = if cfg.workloads.is_empty() {
+        workload::registry()
+            .iter()
+            .filter(|w| w.phases(&p).is_some())
+            .map(|w| w.name().to_string())
+            .collect()
+    } else {
+        cfg.workloads.clone()
+    };
+    let mut ref_digests: Vec<Option<u64>> = Vec::new();
+    for n in &names {
+        let w = workload::find(n)
+            .ok_or_else(|| format!("unknown workload '{n}'"))?;
+        ref_digests.push(if cfg.verify {
+            let mut m = w.make_input(&p, cfg.seed as u32);
+            w.reference_seq(&mut m);
+            Some(matrix_digest(&m))
+        } else {
+            None
+        });
+    }
+    // Per-request expectations, indexed by request id.
+    let expect: Vec<Expect> = (0..cfg.requests)
+        .map(|i| {
+            let kind = kind_of(cfg, i);
+            Expect {
+                kind,
+                digest: match kind {
+                    Kind::Poisoned => None,
+                    _ => ref_digests[i % names.len()],
+                },
+            }
+        })
+        .collect();
+
+    // Connect all conns up front; writer halves stay on this thread,
+    // reader halves go to per-connection reader threads.
+    let mut writers: Vec<TcpStream> = Vec::with_capacity(cfg.conns);
+    let mut reader_streams: Vec<TcpStream> =
+        Vec::with_capacity(cfg.conns);
+    for _ in 0..cfg.conns {
+        let s = TcpStream::connect(&cfg.addr)
+            .map_err(|e| format!("connect {}: {e}", cfg.addr))?;
+        s.set_nodelay(true).ok();
+        reader_streams.push(
+            s.try_clone().map_err(|e| format!("clone stream: {e}"))?,
+        );
+        writers.push(s);
+    }
+
+    // id -> scheduled arrival; inserted before the frame is written,
+    // removed by whichever reader sees the terminal frame. Leftovers
+    // at the end are lost requests.
+    let pending: Mutex<HashMap<u64, Instant>> =
+        Mutex::new(HashMap::new());
+    let hist: Mutex<LatencyHistogram> =
+        Mutex::new(LatencyHistogram::new());
+    let tally: Mutex<Tally> = Mutex::new(Tally::default());
+    let expect_ref = &expect;
+    let mean_gap_ns = (1e9 / cfg.rate_per_sec).max(1.0) as u64;
+    let mut rng = SplitMix64::new(cfg.seed);
+    let start = Instant::now();
+    let mut sent = 0usize;
+
+    std::thread::scope(|s| {
+        for rs in reader_streams {
+            let (pd, hs, tl) = (&pending, &hist, &tally);
+            s.spawn(move || {
+                reader_loop(rs, pd, hs, tl, expect_ref);
+            });
+        }
+        let mut sched = Duration::ZERO;
+        for i in 0..cfg.requests {
+            let gap =
+                mean_gap_ns / 2 + rng.next_u64() % (mean_gap_ns + 1);
+            sched += Duration::from_nanos(gap);
+            let target = start + sched;
+            if let Some(wait) =
+                target.checked_duration_since(Instant::now())
+            {
+                std::thread::sleep(wait);
+            }
+            let id = i as u64;
+            let kind = expect_ref[i].kind;
+            let req = Request::Submit {
+                id,
+                workload: names[i % names.len()].clone(),
+                nb: cfg.nb as u32,
+                bs: cfg.bs as u32,
+                seed: cfg.seed as u32,
+                poison_task: (kind == Kind::Poisoned).then_some(0),
+                deadline: (kind == Kind::Deadlined).then_some(0),
+            };
+            pending.lock().unwrap().insert(id, target);
+            let w = &mut writers[i % cfg.conns];
+            if write_frame(w, &req.encode()).is_err() {
+                pending.lock().unwrap().remove(&id);
+                tally.lock().unwrap().send_errors += 1;
+            } else {
+                sent += 1;
+            }
+        }
+        // Half-close every connection: the server finishes the
+        // in-flight jobs, streams their terminal frames, and closes —
+        // which is what pops the readers out of their loops.
+        for w in &writers {
+            let _ = w.shutdown(std::net::Shutdown::Write);
+        }
+    });
+
+    let elapsed = start.elapsed();
+    let mut shutdown_acked = true;
+    if cfg.shutdown {
+        shutdown_acked = matches!(
+            super::client::Client::connect(&cfg.addr)
+                .map_err(|e| e.to_string())
+                .and_then(|mut c| c
+                    .request(&Request::Shutdown)
+                    .map_err(|e| e.to_string())),
+            Ok(Response::ShuttingDown)
+        );
+    }
+    let t = tally.into_inner().unwrap();
+    let hist = hist.into_inner().unwrap();
+    let lost = pending.into_inner().unwrap().len();
+    let achieved = if elapsed.as_secs_f64() > 0.0 {
+        t.done as f64 / elapsed.as_secs_f64()
+    } else {
+        0.0
+    };
+    Ok(LoadReport {
+        offered_per_sec: cfg.rate_per_sec,
+        achieved_per_sec: achieved,
+        sent,
+        accepted: t.accepted,
+        busy: t.busy,
+        draining: t.draining,
+        rejected: t.rejected,
+        done: t.done,
+        failed: t.failed,
+        cancelled: t.cancelled,
+        digest_mismatches: t.digest_mismatches,
+        unexpected_outcomes: t.unexpected_outcomes,
+        send_errors: t.send_errors,
+        lost,
+        shutdown_acked,
+        hist,
+        elapsed,
+    })
+}
+
+fn reader_loop(
+    mut rs: TcpStream,
+    pending: &Mutex<HashMap<u64, Instant>>,
+    hist: &Mutex<LatencyHistogram>,
+    tally: &Mutex<Tally>,
+    expect: &[Expect],
+) {
+    while let Ok(Some(buf)) = read_frame(&mut rs) {
+        let rsp = match Response::decode(&buf) {
+            Ok(r) => r,
+            Err(_) => {
+                tally.lock().unwrap().unexpected_outcomes += 1;
+                continue;
+            }
+        };
+        let id = match rsp.id() {
+            Some(id) => id,
+            None => continue, // Pong / ShuttingDown
+        };
+        let exp = expect.get(id as usize);
+        let now = Instant::now();
+        // Accepted is a progress frame: keep the pending entry so
+        // the terminal frame can compute the latency.
+        if matches!(rsp, Response::Accepted { .. }) {
+            tally.lock().unwrap().accepted += 1;
+            continue;
+        }
+        if !rsp.is_terminal() {
+            continue; // Polled
+        }
+        let sched = pending.lock().unwrap().remove(&id);
+        let mut t = tally.lock().unwrap();
+        match rsp {
+            Response::Busy { .. } => t.busy += 1,
+            Response::Draining { .. } => t.draining += 1,
+            Response::Rejected { .. } => t.rejected += 1,
+            Response::Done { digest, .. } => {
+                t.done += 1;
+                match exp.map(|e| e.kind) {
+                    Some(Kind::Poisoned) => t.unexpected_outcomes += 1,
+                    _ => {
+                        if let Some(want) =
+                            exp.and_then(|e| e.digest)
+                        {
+                            if want != digest {
+                                t.digest_mismatches += 1;
+                            }
+                        }
+                    }
+                }
+                if let Some(sc) = sched {
+                    let us = now
+                        .saturating_duration_since(sc)
+                        .as_micros()
+                        as u64;
+                    hist.lock().unwrap().record(us);
+                }
+            }
+            Response::Failed { .. } => {
+                t.failed += 1;
+                if exp.map(|e| e.kind) != Some(Kind::Poisoned) {
+                    t.unexpected_outcomes += 1;
+                }
+            }
+            Response::Cancelled { .. } => {
+                t.cancelled += 1;
+                if exp.map(|e| e.kind) != Some(Kind::Deadlined) {
+                    t.unexpected_outcomes += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Factorisation-as-a-service: a serving front-end over the
+//! persistent [`Pool`](crate::sched::Pool).
+//!
+//! The paper benchmarks one factorisation at a time; this subsystem
+//! turns the same scheduler into a long-running service and measures
+//! it the way services are measured — offered load swept through
+//! saturation, tail latency percentiles, typed overload behaviour.
+//!
+//! * [`frame`] — length-delimited framing and byte-level codecs over
+//!   plain `std::net` (no external dependencies).
+//! * [`protocol`] — typed [`Request`](protocol::Request) /
+//!   [`Response`](protocol::Response) frames, the total mapping from
+//!   scheduler errors onto typed refusals, and the FNV-1a
+//!   [`matrix_digest`](protocol::matrix_digest) that lets a client
+//!   check a result bit-exactly without shipping the matrix.
+//! * [`server`] — the `gprm serve` loop: one shared pool + session,
+//!   per-connection reader/writer threads, per-job waiters, graceful
+//!   drain on `Shutdown` frames or SIGTERM.
+//! * [`client`] — a minimal blocking client.
+//! * [`loadgen`] — the `gprm loadgen` open-loop load generator
+//!   (coordinated-omission-free arrivals, shared log-bucketed
+//!   latency histogram, digest verification, poison/deadline
+//!   injection).
+//! * [`model`] — the deterministic virtual-time serving model behind
+//!   `gprm exp serve` and the committed BENCH rows.
+//!
+//! See the crate-level "Serving front-end" section for the wire
+//! format and a loopback quickstart.
+
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+pub mod model;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use loadgen::{LoadConfig, LoadReport};
+pub use model::{ModelOutcome, ServeModel};
+pub use protocol::{matrix_digest, Request, Response};
+pub use server::{
+    install_term_handler, ServeConfig, Server, ServeStats,
+};

@@ -1,0 +1,262 @@
+//! Deterministic virtual-time model of the serving loop: an open-loop
+//! arrival process against the persistent pool's calibrated service
+//! rate, in TILEPro64 cycles.
+//!
+//! The host load generator ([`super::loadgen`]) measures wall-clock
+//! latency, which varies machine to machine. Experiment tables and
+//! the committed BENCH rows instead come from this model, which is
+//! exact and portable: the pool's steady-state **service quantum**
+//! `S` (cycles consumed per admitted job, from the simulator's
+//! pool-stream run over the registry's mixed factorisation stream)
+//! and an isolated-job **makespan floor** `M` feed a Lindley-style
+//! recursion over a deterministic arrival schedule drawn from the
+//! SplitMix64 seed discipline — uniform inter-arrival jitter in
+//! `[Δ/2, 3Δ/2]` around the offered mean gap `Δ`. Admission mirrors
+//! the pool's shed rule: a request arriving with more than
+//! `max_pending` service quanta of backlog is shed (the model's
+//! [`SubmitError::Overloaded`]), everything admitted completes after
+//! `backlog + M` cycles. All arithmetic is integer, so every derived
+//! table and BENCH row reproduces digit-for-digit on any platform.
+//!
+//! The shapes this predicts — flat p99 below capacity, latency
+//! exploding through saturation while achieved throughput plateaus
+//! at the service rate, shedding only past the pending bound — are
+//! the machine checks of `gprm exp serve`, and the same predictions
+//! the host loopback harness probes in wall-clock time.
+//!
+//! [`SubmitError::Overloaded`]: crate::sched::pool::SubmitError::Overloaded
+
+use crate::harness::report::percentile_nearest_rank;
+use crate::sched::workload::{registry, Params, Workload};
+use crate::sched::TaskGraph;
+use crate::tilesim::{CostModel, DataflowSim, LaunchModel, SimJob};
+use crate::util::prng::SplitMix64;
+
+/// The calibrated serving model: all quantities in simulator cycles.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeModel {
+    /// Steady-state cycles one admitted job costs the pool (total
+    /// mixed-stream cycles / jobs, ceiling).
+    pub service: u64,
+    /// Latency floor: mean single-job pool makespan across the
+    /// stream's workload kinds.
+    pub makespan: u64,
+    /// Shed bound, in queued jobs ([`crate::sched::PoolConfig`]'s
+    /// `max_pending`).
+    pub max_pending: usize,
+    /// Clock the cycle counts are priced at (Hz).
+    pub clock_hz: f64,
+}
+
+/// Jobs in the calibration stream (matches the `throughput`
+/// experiment's mixed stream).
+pub const CALIBRATION_JOBS: usize = 8;
+
+impl ServeModel {
+    /// Calibrate `S` and `M` for a `workers`-tile pool serving the
+    /// registry's phase-capable (factorisation) workloads at
+    /// `nb`×`nb` blocks of `bs`×`bs`, with the given shed bound.
+    pub fn calibrate(
+        workers: usize,
+        nb: usize,
+        bs: usize,
+        max_pending: usize,
+    ) -> ServeModel {
+        let p = Params::new(nb, bs);
+        let facts: Vec<&'static dyn Workload> = registry()
+            .iter()
+            .copied()
+            .filter(|w| w.phases(&p).is_some())
+            .collect();
+        assert!(!facts.is_empty(), "registry has no factorisation entries");
+        let graphs: Vec<TaskGraph> =
+            facts.iter().map(|w| w.graph(&p)).collect();
+        let jobs: Vec<SimJob> = (0..CALIBRATION_JOBS)
+            .map(|i| SimJob {
+                workload: facts[i % facts.len()],
+                graph: &graphs[i % facts.len()],
+                bs,
+            })
+            .collect();
+        let sim = DataflowSim::tilepro(workers);
+        let stream =
+            sim.run_jobs(&jobs, LaunchModel::PersistentPool).cycles;
+        let service = stream.div_ceil(CALIBRATION_JOBS as u64);
+        // Isolated-job makespan: each kind alone through the pool,
+        // averaged — the latency an uncontended request sees.
+        let mks: u64 = facts
+            .iter()
+            .zip(&graphs)
+            .map(|(w, g)| {
+                let one = [SimJob { workload: *w, graph: g, bs }];
+                sim.run_jobs(&one, LaunchModel::PersistentPool).cycles
+            })
+            .sum();
+        let makespan = mks / facts.len() as u64;
+        ServeModel {
+            service,
+            makespan,
+            max_pending,
+            clock_hz: CostModel::default().clock_hz,
+        }
+    }
+
+    /// Mean inter-arrival gap (cycles) offering `pct`% of the pool's
+    /// saturation rate `1/S`.
+    pub fn gap_for_offered_pct(&self, pct: u64) -> u64 {
+        assert!(pct > 0, "offered load must be positive");
+        (self.service * 100) / pct
+    }
+
+    /// Drive `requests` arrivals with mean gap `mean_gap` through the
+    /// model. Deterministic for a given seed.
+    pub fn run(
+        &self,
+        mean_gap: u64,
+        requests: usize,
+        seed: u64,
+    ) -> ModelOutcome {
+        assert!(mean_gap > 0 && self.service > 0);
+        let mut rng = SplitMix64::new(seed);
+        let mut arrival: u64 = 0;
+        // When the server frees up: the end of the last admitted
+        // job's service quantum.
+        let mut free: u64 = 0;
+        let mut latencies: Vec<u64> = Vec::with_capacity(requests);
+        let mut shed = 0usize;
+        let mut horizon: u64 = 0;
+        for _ in 0..requests {
+            // Uniform jitter in [Δ/2, 3Δ/2]: deterministic, integer,
+            // bursty enough to queue near saturation.
+            let gap = mean_gap / 2 + rng.next_u64() % (mean_gap + 1);
+            arrival += gap;
+            let backlog = free.saturating_sub(arrival);
+            // Jobs ahead that have not started service yet.
+            let pending = backlog.div_ceil(self.service);
+            if pending > self.max_pending as u64 {
+                shed += 1;
+                continue;
+            }
+            free = free.max(arrival) + self.service;
+            let latency = backlog + self.makespan;
+            latencies.push(latency);
+            horizon = horizon.max(arrival + latency);
+        }
+        latencies.sort_unstable();
+        ModelOutcome {
+            latencies,
+            shed,
+            horizon,
+            clock_hz: self.clock_hz,
+        }
+    }
+}
+
+/// One model run's results. Latencies are sorted ascending, in
+/// cycles.
+#[derive(Clone, Debug)]
+pub struct ModelOutcome {
+    pub latencies: Vec<u64>,
+    pub shed: usize,
+    /// Completion time of the last admitted job (cycles from the
+    /// first arrival) — the denominator of the achieved rate.
+    pub horizon: u64,
+    pub clock_hz: f64,
+}
+
+impl ModelOutcome {
+    pub fn completed(&self) -> usize {
+        self.latencies.len()
+    }
+
+    /// Nearest-rank percentile latency in integer microseconds
+    /// (866 cycles/µs — integer division, platform-exact).
+    pub fn percentile_us(&self, per_mille: u32) -> u64 {
+        assert!(!self.latencies.is_empty(), "no admitted requests");
+        percentile_nearest_rank(&self.latencies, per_mille) / 866
+    }
+
+    /// Completed jobs per virtual second.
+    pub fn achieved_per_sec(&self) -> f64 {
+        if self.horizon == 0 {
+            return 0.0;
+        }
+        self.completed() as f64 / (self.horizon as f64 / self.clock_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ServeModel {
+        ServeModel::calibrate(8, 12, 16, 64)
+    }
+
+    #[test]
+    fn calibration_is_deterministic_and_sane() {
+        let a = model();
+        let b = model();
+        assert_eq!(a.service, b.service);
+        assert_eq!(a.makespan, b.makespan);
+        assert!(a.service > 0);
+        // A lone job cannot finish faster than the per-job share of a
+        // saturated stream, and an 8-job stream on 8 tiles overlaps:
+        // service quantum < isolated makespan.
+        assert!(
+            a.service < a.makespan,
+            "S={} M={}",
+            a.service,
+            a.makespan
+        );
+    }
+
+    #[test]
+    fn runs_are_seed_deterministic() {
+        let m = model();
+        let gap = m.gap_for_offered_pct(80);
+        let a = m.run(gap, 500, 1);
+        let b = m.run(gap, 500, 1);
+        assert_eq!(a.latencies, b.latencies);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.horizon, b.horizon);
+        let c = m.run(gap, 500, 2);
+        assert_ne!(a.latencies, c.latencies);
+    }
+
+    #[test]
+    fn latency_rises_through_saturation_and_throughput_plateaus() {
+        let m = model();
+        let low = m.run(m.gap_for_offered_pct(20), 1000, 1);
+        let sat = m.run(m.gap_for_offered_pct(200), 1000, 1);
+        assert_eq!(low.shed, 0, "shedding below capacity");
+        assert!(low.percentile_us(990) < sat.percentile_us(990));
+        // At 2x offered, achieved clamps near the service rate.
+        let mu = m.clock_hz / m.service as f64;
+        assert!(sat.achieved_per_sec() <= mu * 1.05);
+        assert!(sat.achieved_per_sec() > mu * 0.5);
+    }
+
+    #[test]
+    fn overload_sheds_and_a_tight_bound_sheds_more() {
+        let m = model();
+        let wide = m.run(m.gap_for_offered_pct(400), 1000, 1);
+        assert!(wide.shed > 0, "4x offered load must shed at bound 64");
+        let tight = ServeModel { max_pending: 2, ..m };
+        let t = tight.run(tight.gap_for_offered_pct(400), 1000, 1);
+        assert!(t.shed > wide.shed);
+        // Everything admitted completes: completed + shed = requests.
+        assert_eq!(t.completed() + t.shed, 1000);
+        assert_eq!(wide.completed() + wide.shed, 1000);
+    }
+
+    #[test]
+    fn uncontended_latency_is_the_makespan_floor() {
+        let m = model();
+        // 1% offered load: gaps dwarf service, queue never forms.
+        let idle = m.run(m.gap_for_offered_pct(1), 200, 7);
+        assert_eq!(idle.shed, 0);
+        assert_eq!(idle.latencies[0], m.makespan);
+        assert_eq!(*idle.latencies.last().unwrap(), m.makespan);
+    }
+}

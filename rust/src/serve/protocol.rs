@@ -1,0 +1,534 @@
+//! Typed request/response vocabulary of the serving protocol, and the
+//! output digest that makes results checkable over the wire.
+//!
+//! A client speaks [`Request`] frames; the server answers with
+//! [`Response`] frames. One `Submit` produces **two** responses on
+//! success — an immediate admission verdict (`Accepted`, or a typed
+//! rejection) and, later, a terminal frame (`Done` / `Failed` /
+//! `Cancelled`) when the job completes — correlated by the
+//! client-chosen `id`. Responses to different ids interleave freely:
+//! the server streams each job's terminal frame as it finishes, not
+//! in submission order.
+//!
+//! Every scheduling failure maps onto a typed frame via
+//! [`Response::failure`] — [`SubmitError::Overloaded`] → `Busy`,
+//! [`SubmitError::Draining`] → `Draining`, a poisoned job → `Failed`
+//! with the failing attempt's coordinates, a missed deadline →
+//! `Cancelled` — so overload, drain, poison and deadline are all
+//! observable client-side without ever dropping a connection.
+//!
+//! Results travel as a [`matrix_digest`] (FNV-1a over the blocked
+//! matrix's shape and f32 bit patterns), not the matrix itself: the
+//! client can compute the same digest over its own sequential
+//! reference, which makes "f32-bit-identical to the reference" an
+//! end-to-end wire-level check at eight bytes per response.
+//!
+//! [`SubmitError::Overloaded`]: crate::sched::pool::SubmitError::Overloaded
+//! [`SubmitError::Draining`]: crate::sched::pool::SubmitError::Draining
+
+use super::frame::{ByteReader, ByteWriter, WireError};
+use crate::linalg::blocked::BlockedSparseMatrix;
+use crate::sched::pool::SubmitError;
+use crate::sched::Error;
+
+/// A client-to-server frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// Submit one factorisation job. `id` is client-chosen and echoed
+    /// on every response for this job. `poison_task` injects a
+    /// persistent panic into that task (fault-path testing);
+    /// `deadline` bounds the job to that many executed tasks before
+    /// cooperative cancellation.
+    Submit {
+        id: u64,
+        workload: String,
+        nb: u32,
+        bs: u32,
+        seed: u32,
+        poison_task: Option<u32>,
+        deadline: Option<u32>,
+    },
+    /// Ask whether job `id` (previously submitted on this
+    /// connection) has finished.
+    Poll { id: u64 },
+    /// Graceful drain: the server stops accepting work, finishes
+    /// every admitted job, then acknowledges with
+    /// [`Response::ShuttingDown`] and exits.
+    Shutdown,
+    /// Liveness probe; answered with [`Response::Pong`].
+    Ping,
+}
+
+const REQ_SUBMIT: u8 = 1;
+const REQ_POLL: u8 = 2;
+const REQ_SHUTDOWN: u8 = 3;
+const REQ_PING: u8 = 4;
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Request::Submit {
+                id,
+                workload,
+                nb,
+                bs,
+                seed,
+                poison_task,
+                deadline,
+            } => {
+                w.u8(REQ_SUBMIT);
+                w.u64(*id);
+                w.str(workload);
+                w.u32(*nb);
+                w.u32(*bs);
+                w.u32(*seed);
+                w.opt_u32(*poison_task);
+                w.opt_u32(*deadline);
+            }
+            Request::Poll { id } => {
+                w.u8(REQ_POLL);
+                w.u64(*id);
+            }
+            Request::Shutdown => w.u8(REQ_SHUTDOWN),
+            Request::Ping => w.u8(REQ_PING),
+        }
+        w.into_inner()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let req = match r.u8()? {
+            REQ_SUBMIT => Request::Submit {
+                id: r.u64()?,
+                workload: r.str()?,
+                nb: r.u32()?,
+                bs: r.u32()?,
+                seed: r.u32()?,
+                poison_task: r.opt_u32()?,
+                deadline: r.opt_u32()?,
+            },
+            REQ_POLL => Request::Poll { id: r.u64()? },
+            REQ_SHUTDOWN => Request::Shutdown,
+            REQ_PING => Request::Ping,
+            t => return Err(WireError::BadTag(t)),
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+/// A server-to-client frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    /// The job was admitted (or queued); a terminal frame follows.
+    Accepted { id: u64 },
+    /// Overload shed ([`SubmitError::Overloaded`]): the pending queue
+    /// sits at the shed limit. The job was *not* accepted; `pending`
+    /// and `limit` carry the server-side queue coordinates.
+    Busy { id: u64, pending: u32, limit: u32 },
+    /// The server is draining ([`SubmitError::Draining`]); no new
+    /// work is accepted but every already-admitted job completes.
+    Draining { id: u64 },
+    /// The request itself was invalid (unknown workload, oversized
+    /// grid, undecodable frame, …) — a client error, not a server
+    /// state.
+    Rejected { id: u64, msg: String },
+    /// Terminal: the job completed; `digest` is the
+    /// [`matrix_digest`] of the output, `tasks` the executed kernel
+    /// count, `micros` the server-side service time.
+    Done { id: u64, digest: u64, tasks: u32, micros: u64 },
+    /// Terminal: the job was poisoned; coordinates of the last
+    /// failed attempt ([`crate::sched::JobFailure`]).
+    Failed { id: u64, attempts: u32, task: u32, op: String, msg: String },
+    /// Terminal: the job was cooperatively cancelled (deadline) after
+    /// `ran` executed kernels.
+    Cancelled { id: u64, ran: u32 },
+    /// Answer to [`Request::Poll`].
+    Polled { id: u64, known: bool, done: bool },
+    /// Answer to [`Request::Shutdown`], sent after the drain
+    /// completed — every admitted job has already produced its
+    /// terminal frame by the time this arrives.
+    ShuttingDown,
+    /// Answer to [`Request::Ping`].
+    Pong,
+}
+
+const RSP_ACCEPTED: u8 = 1;
+const RSP_BUSY: u8 = 2;
+const RSP_DRAINING: u8 = 3;
+const RSP_REJECTED: u8 = 4;
+const RSP_DONE: u8 = 5;
+const RSP_FAILED: u8 = 6;
+const RSP_CANCELLED: u8 = 7;
+const RSP_POLLED: u8 = 8;
+const RSP_SHUTTING_DOWN: u8 = 9;
+const RSP_PONG: u8 = 10;
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Response::Accepted { id } => {
+                w.u8(RSP_ACCEPTED);
+                w.u64(*id);
+            }
+            Response::Busy { id, pending, limit } => {
+                w.u8(RSP_BUSY);
+                w.u64(*id);
+                w.u32(*pending);
+                w.u32(*limit);
+            }
+            Response::Draining { id } => {
+                w.u8(RSP_DRAINING);
+                w.u64(*id);
+            }
+            Response::Rejected { id, msg } => {
+                w.u8(RSP_REJECTED);
+                w.u64(*id);
+                w.str(msg);
+            }
+            Response::Done { id, digest, tasks, micros } => {
+                w.u8(RSP_DONE);
+                w.u64(*id);
+                w.u64(*digest);
+                w.u32(*tasks);
+                w.u64(*micros);
+            }
+            Response::Failed { id, attempts, task, op, msg } => {
+                w.u8(RSP_FAILED);
+                w.u64(*id);
+                w.u32(*attempts);
+                w.u32(*task);
+                w.str(op);
+                w.str(msg);
+            }
+            Response::Cancelled { id, ran } => {
+                w.u8(RSP_CANCELLED);
+                w.u64(*id);
+                w.u32(*ran);
+            }
+            Response::Polled { id, known, done } => {
+                w.u8(RSP_POLLED);
+                w.u64(*id);
+                w.u8(u8::from(*known));
+                w.u8(u8::from(*done));
+            }
+            Response::ShuttingDown => w.u8(RSP_SHUTTING_DOWN),
+            Response::Pong => w.u8(RSP_PONG),
+        }
+        w.into_inner()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = ByteReader::new(buf);
+        let rsp = match r.u8()? {
+            RSP_ACCEPTED => Response::Accepted { id: r.u64()? },
+            RSP_BUSY => Response::Busy {
+                id: r.u64()?,
+                pending: r.u32()?,
+                limit: r.u32()?,
+            },
+            RSP_DRAINING => Response::Draining { id: r.u64()? },
+            RSP_REJECTED => {
+                Response::Rejected { id: r.u64()?, msg: r.str()? }
+            }
+            RSP_DONE => Response::Done {
+                id: r.u64()?,
+                digest: r.u64()?,
+                tasks: r.u32()?,
+                micros: r.u64()?,
+            },
+            RSP_FAILED => Response::Failed {
+                id: r.u64()?,
+                attempts: r.u32()?,
+                task: r.u32()?,
+                op: r.str()?,
+                msg: r.str()?,
+            },
+            RSP_CANCELLED => {
+                Response::Cancelled { id: r.u64()?, ran: r.u32()? }
+            }
+            RSP_POLLED => Response::Polled {
+                id: r.u64()?,
+                known: r.u8()? != 0,
+                done: r.u8()? != 0,
+            },
+            RSP_SHUTTING_DOWN => Response::ShuttingDown,
+            RSP_PONG => Response::Pong,
+            t => return Err(WireError::BadTag(t)),
+        };
+        r.finish()?;
+        Ok(rsp)
+    }
+
+    /// Map a scheduling [`Error`] for job `id` onto its typed frame.
+    /// Total: every error variant has a frame, so a failure path can
+    /// never fall back to dropping the connection.
+    pub fn failure(id: u64, e: &Error) -> Response {
+        match e {
+            Error::Submit(SubmitError::Overloaded { pending, limit }) => {
+                Response::Busy {
+                    id,
+                    pending: *pending as u32,
+                    limit: *limit as u32,
+                }
+            }
+            Error::Submit(SubmitError::Draining) => {
+                Response::Draining { id }
+            }
+            Error::Job(f) => {
+                let last = f.last();
+                Response::Failed {
+                    id,
+                    attempts: f.attempts.len() as u32,
+                    task: last.task as u32,
+                    op: last.op.to_string(),
+                    msg: last.msg.clone(),
+                }
+            }
+            Error::Cancelled { ran } => {
+                Response::Cancelled { id, ran: *ran as u32 }
+            }
+            // GraphTooLarge, ShutDown, UnknownWorkload and the rest
+            // are request errors: typed text is enough.
+            other => Response::Rejected { id, msg: other.to_string() },
+        }
+    }
+
+    /// Is this a terminal frame for a submitted id (exactly one per
+    /// accepted job / rejection)?
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            Response::Busy { .. }
+                | Response::Draining { .. }
+                | Response::Rejected { .. }
+                | Response::Done { .. }
+                | Response::Failed { .. }
+                | Response::Cancelled { .. }
+        )
+    }
+
+    /// The job id this frame speaks about, if any.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Response::Accepted { id }
+            | Response::Busy { id, .. }
+            | Response::Draining { id }
+            | Response::Rejected { id, .. }
+            | Response::Done { id, .. }
+            | Response::Failed { id, .. }
+            | Response::Cancelled { id, .. }
+            | Response::Polled { id, .. } => Some(*id),
+            Response::ShuttingDown | Response::Pong => None,
+        }
+    }
+}
+
+/// FNV-1a over a blocked matrix's shape and f32 bit patterns, block
+/// row-major, allocated blocks only (the null pattern is part of the
+/// digest by omission). Bit-identical outputs — and only those —
+/// digest equal, so comparing digests over the wire is exactly the
+/// workload's `verify_bits` check at a distance.
+pub fn matrix_digest(a: &BlockedSparseMatrix) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    eat(&(a.nb() as u64).to_le_bytes());
+    eat(&(a.bs() as u64).to_le_bytes());
+    for ii in 0..a.nb() {
+        for jj in 0..a.nb() {
+            if let Some(block) = a.block(ii, jj) {
+                eat(&(ii as u32).to_le_bytes());
+                eat(&(jj as u32).to_le_bytes());
+                for v in block {
+                    eat(&v.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::workload;
+    use crate::sched::workload::Params;
+    use crate::sched::{FailedAttempt, JobFailure};
+
+    fn round_trip_req(r: Request) {
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    fn round_trip_rsp(r: Response) {
+        assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn every_request_round_trips() {
+        round_trip_req(Request::Submit {
+            id: 9,
+            workload: "sparselu".into(),
+            nb: 8,
+            bs: 16,
+            seed: 3,
+            poison_task: None,
+            deadline: None,
+        });
+        round_trip_req(Request::Submit {
+            id: u64::MAX,
+            workload: "cholesky".into(),
+            nb: 1,
+            bs: 1,
+            seed: 0,
+            poison_task: Some(7),
+            deadline: Some(0),
+        });
+        round_trip_req(Request::Poll { id: 4 });
+        round_trip_req(Request::Shutdown);
+        round_trip_req(Request::Ping);
+    }
+
+    #[test]
+    fn every_response_round_trips() {
+        round_trip_rsp(Response::Accepted { id: 1 });
+        round_trip_rsp(Response::Busy { id: 2, pending: 64, limit: 64 });
+        round_trip_rsp(Response::Draining { id: 3 });
+        round_trip_rsp(Response::Rejected {
+            id: 4,
+            msg: "unknown workload \"qr\"".into(),
+        });
+        round_trip_rsp(Response::Done {
+            id: 5,
+            digest: 0xFEED_FACE_CAFE_BEEF,
+            tasks: 120,
+            micros: 1_000_000,
+        });
+        round_trip_rsp(Response::Failed {
+            id: 6,
+            attempts: 1,
+            task: 17,
+            op: "lu0".into(),
+            msg: "injected fault: panic".into(),
+        });
+        round_trip_rsp(Response::Cancelled { id: 7, ran: 3 });
+        round_trip_rsp(Response::Polled { id: 8, known: true, done: false });
+        round_trip_rsp(Response::ShuttingDown);
+        round_trip_rsp(Response::Pong);
+    }
+
+    #[test]
+    fn bad_tags_and_truncation_are_typed_errors() {
+        assert_eq!(Request::decode(&[99]), Err(WireError::BadTag(99)));
+        assert_eq!(Response::decode(&[99]), Err(WireError::BadTag(99)));
+        assert_eq!(Request::decode(&[]), Err(WireError::Truncated));
+        let mut buf = Request::Poll { id: 1 }.encode();
+        buf.pop();
+        assert_eq!(Request::decode(&buf), Err(WireError::Truncated));
+        buf = Request::Ping.encode();
+        buf.push(0);
+        assert_eq!(Request::decode(&buf), Err(WireError::Trailing(1)));
+    }
+
+    #[test]
+    fn every_scheduling_error_maps_to_a_typed_frame() {
+        let cases: Vec<(Error, Response)> = vec![
+            (
+                Error::Submit(SubmitError::Overloaded {
+                    pending: 5,
+                    limit: 4,
+                }),
+                Response::Busy { id: 1, pending: 5, limit: 4 },
+            ),
+            (
+                Error::Submit(SubmitError::Draining),
+                Response::Draining { id: 1 },
+            ),
+            (Error::Cancelled { ran: 2 }, Response::Cancelled { id: 1, ran: 2 }),
+        ];
+        for (e, want) in cases {
+            assert_eq!(Response::failure(1, &e), want);
+        }
+        let f = JobFailure {
+            attempts: vec![
+                FailedAttempt {
+                    attempt: 1,
+                    op: "lu0",
+                    task: 0,
+                    msg: "a".into(),
+                },
+                FailedAttempt {
+                    attempt: 2,
+                    op: "fwd",
+                    task: 9,
+                    msg: "b".into(),
+                },
+            ],
+        };
+        match Response::failure(3, &Error::Job(f)) {
+            Response::Failed { id, attempts, task, op, msg } => {
+                assert_eq!(
+                    (id, attempts, task, op.as_str(), msg.as_str()),
+                    (3, 2, 9, "fwd", "b")
+                );
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // Everything else degrades to a typed Rejected, never a drop.
+        for e in [
+            Error::Submit(SubmitError::ShutDown),
+            Error::Submit(SubmitError::GraphTooLarge {
+                tasks: 10,
+                capacity: 4,
+            }),
+            Error::UnknownWorkload("qr".into()),
+            Error::UnknownJob,
+        ] {
+            assert!(matches!(
+                Response::failure(0, &e),
+                Response::Rejected { .. }
+            ));
+        }
+    }
+
+    #[test]
+    fn terminal_classification_matches_the_protocol_contract() {
+        assert!(!Response::Accepted { id: 0 }.is_terminal());
+        assert!(!Response::Pong.is_terminal());
+        assert!(!Response::Polled { id: 0, known: false, done: false }
+            .is_terminal());
+        assert!(Response::Busy { id: 0, pending: 0, limit: 0 }
+            .is_terminal());
+        assert!(Response::Done { id: 0, digest: 0, tasks: 0, micros: 0 }
+            .is_terminal());
+    }
+
+    #[test]
+    fn digest_is_bit_exact_and_shape_sensitive() {
+        let w = workload::find("sparselu").unwrap();
+        let p = Params::new(5, 4);
+        let a = w.make_input(&p, 0);
+        let b = w.make_input(&p, 0);
+        assert_eq!(matrix_digest(&a), matrix_digest(&b));
+        // The digest moves on a single-bit value change…
+        let mut c = a.deep_clone();
+        {
+            let blk = c.block_mut(0, 0).unwrap();
+            blk[0] = f32::from_bits(blk[0].to_bits() ^ 1);
+        }
+        assert_ne!(matrix_digest(&a), matrix_digest(&c));
+        // …and the factorised matrix digests differently from the
+        // input but identically to the sequential reference.
+        let mut f1 = a.deep_clone();
+        w.reference_seq(&mut f1);
+        let mut f2 = b.deep_clone();
+        w.reference_seq(&mut f2);
+        assert_ne!(matrix_digest(&a), matrix_digest(&f1));
+        assert_eq!(matrix_digest(&f1), matrix_digest(&f2));
+    }
+}

@@ -1,0 +1,492 @@
+//! The serving loop: one shared persistent [`Pool`] behind a
+//! [`std::net::TcpListener`], translating wire requests into
+//! [`Session`] jobs and streaming typed responses back as jobs
+//! complete.
+//!
+//! # Threading
+//!
+//! Everything runs under one `std::thread::scope`: an accept loop
+//! (non-blocking, polling the stop flag), one reader thread per
+//! connection, one writer thread per connection (draining an mpsc
+//! channel of responses, so the reader and any number of job waiters
+//! can emit frames without interleaving partial writes), and one
+//! tiny waiter thread per in-flight job (blocks on
+//! [`JobHandle::wait`] *outside* the session lock, then briefly locks
+//! the shared [`Session`] to resolve and retire the output). The
+//! session mutex is only ever held for non-blocking calls — submits,
+//! and resolve/[`Session::take_output`] of already-finished jobs —
+//! so the server cannot deadlock on it.
+//!
+//! # Overload, drain, shutdown
+//!
+//! Admission control is the pool's own: past
+//! [`crate::sched::PoolConfig`]'s `max_pending` the submit returns
+//! [`SubmitError::Overloaded`] and the client sees a typed
+//! [`Response::Busy`] — the job was refused at the door, and jobs
+//! already accepted are never dropped. A [`Request::Shutdown`] frame
+//! (or SIGTERM, see [`install_term_handler`]) flips the stop flag and
+//! [`Pool::drain`]s: submissions racing the drain get typed
+//! [`Response::Draining`] frames, every admitted job still delivers
+//! its terminal frame, and the [`Response::ShuttingDown`] ack is sent
+//! only after the drain completed. Jobs are retired through
+//! [`Session::take_output`] as their terminal frames go out, so a
+//! long-running server's memory is bounded by its in-flight jobs.
+//!
+//! [`SubmitError::Overloaded`]: crate::sched::pool::SubmitError::Overloaded
+
+use super::frame::{read_frame_idle, write_frame, ReadOutcome};
+use super::protocol::{matrix_digest, Request, Response};
+use crate::sched::workload;
+use crate::sched::{
+    Error, FaultKind, FaultSet, JobSpec, Pool, PoolConfig, Session,
+};
+use crate::sched::pool::{JobHandle, SubmitError};
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server sizing. The pool fields mirror [`PoolConfig`]; `max_nb` /
+/// `max_bs` bound a *request's* grid so one hostile submit cannot
+/// make the server build an arbitrarily large graph.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub task_capacity: usize,
+    pub max_jobs: usize,
+    /// Shed bound (pool `max_pending`); `None` queues unboundedly.
+    pub max_pending: Option<usize>,
+    pub domains: usize,
+    pub max_nb: usize,
+    pub max_bs: usize,
+}
+
+impl ServeConfig {
+    /// Serving defaults: pool defaults plus a 64-job shed bound (a
+    /// server must shed, not queue unboundedly) and a 64×64-block
+    /// request ceiling.
+    pub fn new(workers: usize) -> Self {
+        let p = PoolConfig::new(workers);
+        Self {
+            workers,
+            task_capacity: p.task_capacity,
+            max_jobs: p.max_jobs,
+            max_pending: Some(64),
+            domains: p.domains,
+            max_nb: 64,
+            max_bs: 64,
+        }
+    }
+}
+
+/// What the server did over its lifetime (returned by
+/// [`Server::run`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub connections: usize,
+    /// Jobs admitted (each produced exactly one terminal frame).
+    pub accepted: usize,
+    /// Submissions shed with [`Response::Busy`].
+    pub shed: usize,
+    /// Submissions refused with [`Response::Draining`].
+    pub drained: usize,
+    /// Submissions refused with [`Response::Rejected`].
+    pub rejected: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections: AtomicUsize,
+    accepted: AtomicUsize,
+    shed: AtomicUsize,
+    drained: AtomicUsize,
+    rejected: AtomicUsize,
+    completed: AtomicUsize,
+    failed: AtomicUsize,
+    cancelled: AtomicUsize,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ServeStats {
+        let g = |a: &AtomicUsize| a.load(Ordering::SeqCst);
+        ServeStats {
+            connections: g(&self.connections),
+            accepted: g(&self.accepted),
+            shed: g(&self.shed),
+            drained: g(&self.drained),
+            rejected: g(&self.rejected),
+            completed: g(&self.completed),
+            failed: g(&self.failed),
+            cancelled: g(&self.cancelled),
+        }
+    }
+}
+
+/// Process-wide SIGTERM latch (see [`install_term_handler`]).
+static TERM: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_term(_sig: i32) {
+    // Async-signal-safe: a single relaxed store.
+    TERM.store(true, Ordering::Relaxed);
+}
+
+/// Install a SIGTERM handler that asks every [`Server::run`] loop in
+/// the process to drain gracefully (same path as a
+/// [`Request::Shutdown`] frame: admitted jobs finish, then the server
+/// exits). No-op off Unix.
+#[cfg(unix)]
+pub fn install_term_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGTERM: i32 = 15;
+    unsafe {
+        let _ = signal(SIGTERM, on_term);
+    }
+}
+
+/// No-op off Unix.
+#[cfg(not(unix))]
+pub fn install_term_handler() {
+    let _ = on_term; // keep the handler referenced on every target
+}
+
+/// Has SIGTERM been received (after [`install_term_handler`])?
+pub fn term_requested() -> bool {
+    TERM.load(Ordering::Relaxed)
+}
+
+fn stopping(stop: &AtomicBool) -> bool {
+    stop.load(Ordering::SeqCst) || term_requested()
+}
+
+/// A bound, not-yet-running server. [`Server::bind`] on port 0 picks
+/// an ephemeral loopback port — [`Server::local_addr`] reports it —
+/// which is how the tests and the in-process harness avoid port
+/// collisions.
+pub struct Server {
+    listener: TcpListener,
+    cfg: ServeConfig,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, cfg: ServeConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            listener,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// A flag that makes [`Server::run`] wind down as if a
+    /// [`Request::Shutdown`] frame had arrived (for embedding the
+    /// server in tests/benches).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve until a [`Request::Shutdown`] frame, the
+    /// [`Server::stop_flag`], or SIGTERM. Blocks. On return every
+    /// accepted job has completed and delivered its terminal frame.
+    pub fn run(self) -> ServeStats {
+        self.listener
+            .set_nonblocking(true)
+            .expect("serve listener nonblocking");
+        let cfg = self.cfg;
+        let stop = &*self.stop;
+        let counters = Counters::default();
+        let pool = Pool::with_config(PoolConfig {
+            workers: cfg.workers,
+            task_capacity: cfg.task_capacity,
+            max_jobs: cfg.max_jobs,
+            max_pending: cfg.max_pending,
+            domains: cfg.domains,
+        });
+        let session = Mutex::new(Session::new(&pool));
+        std::thread::scope(|s| {
+            while !stopping(stop) {
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        counters
+                            .connections
+                            .fetch_add(1, Ordering::SeqCst);
+                        let sess = &session;
+                        let ctr = &counters;
+                        let pl = &pool;
+                        let cf = &cfg;
+                        s.spawn(move || {
+                            handle_conn(
+                                s, stream, pl, sess, stop, ctr, cf,
+                            )
+                        });
+                    }
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            // The scope now waits for every connection (and its job
+            // waiters) to finish — each terminal frame is delivered
+            // before the writer threads exit.
+        });
+        // Quiesce regardless of how we stopped (flag/SIGTERM paths
+        // have not drained yet; after a Shutdown frame this returns
+        // immediately).
+        pool.drain();
+        counters.snapshot()
+    }
+}
+
+/// One connection: decode requests, answer small ones inline, fan
+/// submits out to per-job waiter threads. Never drops the connection
+/// on a request error — undecodable bytes get a final typed
+/// [`Response::Rejected`] (the stream is beyond resync at that
+/// point).
+#[allow(clippy::too_many_arguments)]
+fn handle_conn<'scope, 'env, 'p: 'env>(
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    stream: TcpStream,
+    pool: &'env Pool,
+    session: &'env Mutex<Session<'p>>,
+    stop: &'env AtomicBool,
+    ctr: &'env Counters,
+    cfg: &'env ServeConfig,
+) {
+    let mut ws = match stream.try_clone() {
+        Ok(x) => x,
+        Err(_) => return,
+    };
+    let (tx, rx) = std::sync::mpsc::channel::<Response>();
+    s.spawn(move || {
+        let mut alive = true;
+        for rsp in rx {
+            if alive && write_frame(&mut ws, &rsp.encode()).is_err() {
+                // Keep draining so senders' frames are consumed, but
+                // stop touching the dead socket.
+                alive = false;
+            }
+        }
+    });
+    let mut rs = stream;
+    // A short read timeout lets the reader poll the stop flag
+    // between frames without busy-spinning.
+    rs.set_read_timeout(Some(Duration::from_millis(5))).ok();
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let tracked: Arc<Mutex<HashMap<u64, JobHandle>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    // After a stop is observed with nothing in flight, keep reading
+    // for a grace window so a submit racing the drain still gets its
+    // typed Draining frame instead of a closed socket.
+    let mut stop_seen: Option<Instant> = None;
+    loop {
+        match read_frame_idle(&mut rs) {
+            Ok(ReadOutcome::Frame(buf)) => match Request::decode(&buf) {
+                Ok(req) => serve_request(
+                    s, req, pool, session, stop, ctr, cfg, &tx,
+                    &inflight, &tracked,
+                ),
+                Err(e) => {
+                    ctr.rejected.fetch_add(1, Ordering::SeqCst);
+                    let _ = tx.send(Response::Rejected {
+                        id: u64::MAX,
+                        msg: format!("undecodable request: {e}"),
+                    });
+                    break;
+                }
+            },
+            Ok(ReadOutcome::Eof) => break,
+            Ok(ReadOutcome::Idle) => {
+                if stopping(stop)
+                    && inflight.load(Ordering::SeqCst) == 0
+                {
+                    let since =
+                        *stop_seen.get_or_insert_with(Instant::now);
+                    if since.elapsed() > Duration::from_millis(100) {
+                        break;
+                    }
+                } else {
+                    stop_seen = None;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // Dropping the reader's sender lets the writer exit once the
+    // remaining waiters have sent their terminal frames.
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_request<'scope, 'env, 'p: 'env>(
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    req: Request,
+    pool: &'env Pool,
+    session: &'env Mutex<Session<'p>>,
+    stop: &'env AtomicBool,
+    ctr: &'env Counters,
+    cfg: &ServeConfig,
+    tx: &Sender<Response>,
+    inflight: &Arc<AtomicUsize>,
+    tracked: &Arc<Mutex<HashMap<u64, JobHandle>>>,
+) {
+    match req {
+        Request::Ping => {
+            let _ = tx.send(Response::Pong);
+        }
+        Request::Poll { id } => {
+            let done = tracked
+                .lock()
+                .unwrap()
+                .get(&id)
+                .map(|h| h.is_done());
+            let _ = tx.send(Response::Polled {
+                id,
+                known: done.is_some(),
+                done: done.unwrap_or(false),
+            });
+        }
+        Request::Shutdown => {
+            // Stop accepting, finish everything admitted (across
+            // *all* connections), then acknowledge. Late submits
+            // racing this drain get typed Draining frames.
+            stop.store(true, Ordering::SeqCst);
+            pool.drain();
+            let _ = tx.send(Response::ShuttingDown);
+        }
+        Request::Submit {
+            id,
+            workload,
+            nb,
+            bs,
+            seed,
+            poison_task,
+            deadline,
+        } => {
+            let w = match workload::find(&workload) {
+                Some(w) => w,
+                None => {
+                    ctr.rejected.fetch_add(1, Ordering::SeqCst);
+                    let e = Error::UnknownWorkload(workload);
+                    let _ = tx.send(Response::failure(id, &e));
+                    return;
+                }
+            };
+            if nb == 0
+                || bs == 0
+                || nb as usize > cfg.max_nb
+                || bs as usize > cfg.max_bs
+            {
+                ctr.rejected.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(Response::Rejected {
+                    id,
+                    msg: format!(
+                        "grid {nb}x{nb} blocks of {bs}x{bs} outside \
+                         the server's limit {}x{} blocks of {}x{}",
+                        cfg.max_nb, cfg.max_nb, cfg.max_bs, cfg.max_bs
+                    ),
+                });
+                return;
+            }
+            let t0 = Instant::now();
+            let submitted = {
+                let mut sess = session.lock().unwrap();
+                let mut b = sess
+                    .job(JobSpec::new(w, nb as usize, bs as usize))
+                    .seed(seed);
+                if let Some(t) = poison_task {
+                    b = b.inject(FaultSet::single(
+                        t as usize,
+                        FaultKind::Panic,
+                    ));
+                }
+                if let Some(d) = deadline {
+                    b = b.deadline(d as usize);
+                }
+                b.submit()
+            };
+            let h = match submitted {
+                Ok(h) => h,
+                Err(e) => {
+                    match &e {
+                        Error::Submit(SubmitError::Overloaded {
+                            ..
+                        }) => {
+                            ctr.shed.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Error::Submit(SubmitError::Draining) => {
+                            ctr.drained
+                                .fetch_add(1, Ordering::SeqCst);
+                        }
+                        _ => {
+                            ctr.rejected
+                                .fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                    let _ = tx.send(Response::failure(id, &e));
+                    return;
+                }
+            };
+            ctr.accepted.fetch_add(1, Ordering::SeqCst);
+            inflight.fetch_add(1, Ordering::SeqCst);
+            tracked.lock().unwrap().insert(id, h.clone());
+            let _ = tx.send(Response::Accepted { id });
+            let tx2 = tx.clone();
+            let tracked2 = tracked.clone();
+            let inflight2 = inflight.clone();
+            s.spawn(move || {
+                // Wait at the pool level, outside the session lock —
+                // other submits and waiters proceed meanwhile.
+                let _ = h.wait();
+                let rsp = {
+                    let mut sess = session.lock().unwrap();
+                    match sess.resolve_handle(&h) {
+                        Ok(stats) => match sess.take_output(&h) {
+                            Ok(out) => Response::Done {
+                                id,
+                                digest: matrix_digest(&out),
+                                tasks: stats.executed as u32,
+                                micros: t0.elapsed().as_micros()
+                                    as u64,
+                            },
+                            Err(e) => Response::failure(id, &e),
+                        },
+                        Err(e) => {
+                            // Retire the failed job's state too.
+                            let _ = sess.take_output(&h);
+                            Response::failure(id, &e)
+                        }
+                    }
+                };
+                match &rsp {
+                    Response::Done { .. } => {
+                        ctr.completed.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Response::Failed { .. } => {
+                        ctr.failed.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Response::Cancelled { .. } => {
+                        ctr.cancelled.fetch_add(1, Ordering::SeqCst);
+                    }
+                    _ => {}
+                }
+                tracked2.lock().unwrap().remove(&id);
+                let _ = tx2.send(rsp);
+                inflight2.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+    }
+}

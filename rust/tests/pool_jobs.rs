@@ -24,7 +24,9 @@ use gprm::linalg::dense::DenseMatrix;
 use gprm::linalg::genmat::{genmat, genmat_pattern};
 use gprm::linalg::lu::{bdiv, bmod, fwd, lu0, sparselu_seq};
 use gprm::sched::workload::kernel_runner;
-use gprm::sched::{JobHandle, Pool, PoolConfig, TaskGraph, TaskId};
+use gprm::sched::{
+    JobHandle, Pool, PoolConfig, SubmitError, TaskGraph, TaskId,
+};
 use gprm::testkit::{check, Triple, UsizeRange};
 use gprm::util::prng::SplitMix64;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -485,5 +487,195 @@ fn all_three_workloads_share_one_pool() {
             ),
         }
     }
+    pool.shutdown();
+}
+
+#[test]
+fn shed_boundary_is_exact_and_never_drops_admitted() {
+    // Property test for the overload shedding boundary: a 1-slot pool
+    // whose only active job is gated open, so the pending queue fills
+    // deterministically. Exactly `limit` further submissions are
+    // admitted; the next one must be refused with the typed
+    // `Overloaded` carrying the *exact* queue coordinates; and after
+    // the gate opens, every admitted job (and a whole second wave)
+    // completes — shedding never drops admitted work.
+    use std::sync::atomic::AtomicBool;
+    check(
+        "pool-shed-boundary",
+        12,
+        &Triple(UsizeRange(1, 5), UsizeRange(4, 6), UsizeRange(0, 1 << 16)),
+        |&(limit, nb, seed)| {
+            let g = TaskGraph::cholesky(nb);
+            let pool = Pool::with_config(PoolConfig {
+                workers: 2,
+                task_capacity: g.len() * (limit + 2),
+                max_jobs: 1,
+                max_pending: Some(limit),
+                domains: 1,
+            });
+            let release = AtomicBool::new(false);
+            let gate_runner = |_t: TaskId| {
+                while !release.load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+            };
+            pool.scope(|s| {
+                let gate =
+                    s.submit(&g, &gate_runner).map_err(|e| e.to_string())?;
+                let mut fillers = Vec::new();
+                for i in 0..limit {
+                    fillers.push(s.submit(&g, move |t: TaskId| {
+                        spin_for(t.0 + i, seed)
+                    }).map_err(|e| {
+                        format!("filler {i} refused below the bound: {e}")
+                    })?);
+                }
+                match s.submit(&g, |_t: TaskId| {}) {
+                    Err(gprm::sched::Error::Submit(
+                        SubmitError::Overloaded { pending, limit: l },
+                    )) => {
+                        if pending != limit || l != limit {
+                            return Err(format!(
+                                "Overloaded coordinates {pending}/{l}, \
+                                 want exactly {limit}/{limit}"
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        return Err(format!(
+                            "expected Overloaded at the bound, got {e}"
+                        ))
+                    }
+                    Ok(_) => {
+                        return Err(format!(
+                            "submission {} past the bound was admitted",
+                            limit + 1
+                        ))
+                    }
+                }
+                release.store(true, Ordering::Release);
+                gate.wait().map_err(|e| e.to_string())?;
+                for (i, f) in fillers.iter().enumerate() {
+                    f.wait().map_err(|e| {
+                        format!("admitted filler {i} was dropped: {e}")
+                    })?;
+                }
+                // Second wave: the shed state fully recovers once the
+                // queue drains — the same pool admits and completes a
+                // fresh batch of `limit + 1` jobs (serially waited, so
+                // the bound is never hit).
+                for i in 0..=limit {
+                    let h = s.submit(&g, move |t: TaskId| {
+                        spin_for(t.0 * 7 + i, seed)
+                    }).map_err(|e| {
+                        format!("wave-2 job {i} refused after drain: {e}")
+                    })?;
+                    h.wait().map_err(|e| e.to_string())?;
+                }
+                Ok(())
+            })?;
+            if pool.pending_jobs() != 0 {
+                return Err("queue not drained after all waits".into());
+            }
+            pool.shutdown();
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn drain_races_concurrent_submitters_typed_and_bit_identical() {
+    // `Pool::drain` racing multi-threaded submission: four submitter
+    // threads each push SparseLU jobs with real kernels; a barrier
+    // lines everyone up so the drain fires strictly between each
+    // thread's first and second half. Deterministic outcome: every
+    // pre-drain submission is admitted and completes bit-identically
+    // to the solo sequential run, every post-drain submission is
+    // refused with the typed `Draining` — nothing admitted is ever
+    // dropped, nothing refused is untyped.
+    use std::sync::Barrier;
+    let (nb, bs) = (7usize, 5usize);
+    let mut want = genmat(nb, bs);
+    sparselu_seq(&mut want);
+    let want = want.to_dense();
+    let graph = TaskGraph::sparselu(&genmat_pattern(nb), nb);
+    let n_sub = 4usize;
+    let per = 6usize; // jobs per submitter; first half pre-drain
+    let half = per / 2;
+    let pool = Pool::with_config(PoolConfig {
+        workers: 3,
+        task_capacity: graph.len() * 2,
+        max_jobs: 2,
+        max_pending: None,
+        domains: 1,
+    });
+    let shares: Vec<SharedBlocked> = (0..n_sub * per)
+        .map(|_| SharedBlocked::new(genmat(nb, bs)))
+        .collect();
+    let runners: Vec<_> = shares
+        .iter()
+        .map(|sh| kernel_runner(&graph, &LU_RUST_KERNELS, sh, bs))
+        .collect();
+    let barrier = Barrier::new(n_sub + 1);
+    // admitted[k] records whether submission k returned a handle.
+    let admitted: Vec<AtomicUsize> =
+        (0..n_sub * per).map(|_| AtomicUsize::new(0)).collect();
+    pool.scope(|s| {
+        std::thread::scope(|ts| {
+            for i in 0..n_sub {
+                let (graph, barrier) = (&graph, &barrier);
+                let (runners, admitted) = (&runners, &admitted);
+                ts.spawn(move || {
+                    let mut handles = Vec::new();
+                    for j in 0..half {
+                        let k = i * per + j;
+                        let h = s
+                            .submit(graph, &runners[k])
+                            .expect("pre-drain submission refused");
+                        admitted[k].store(1, Ordering::SeqCst);
+                        handles.push(h);
+                    }
+                    barrier.wait(); // all first halves submitted
+                    barrier.wait(); // drain completed
+                    for j in half..per {
+                        let k = i * per + j;
+                        match s.submit(graph, &runners[k]) {
+                            Err(gprm::sched::Error::Submit(
+                                SubmitError::Draining,
+                            )) => {}
+                            Err(e) => panic!(
+                                "post-drain submission {k}: want the \
+                                 typed Draining, got {e}"
+                            ),
+                            Ok(_) => panic!(
+                                "post-drain submission {k} was admitted"
+                            ),
+                        }
+                    }
+                    for (j, h) in handles.iter().enumerate() {
+                        h.wait().unwrap_or_else(|e| {
+                            panic!("admitted job {i}/{j} dropped: {e}")
+                        });
+                    }
+                });
+            }
+            barrier.wait(); // every submitter parked with half in
+            pool.drain(); // blocks until all admitted jobs complete
+            barrier.wait();
+        });
+    });
+    drop(runners);
+    for (k, sh) in shares.into_iter().enumerate() {
+        if admitted[k].load(Ordering::SeqCst) == 0 {
+            continue; // refused post-drain: input untouched by design
+        }
+        assert_eq!(
+            sh.into_inner().to_dense().as_slice(),
+            want.as_slice(),
+            "admitted job {k} not bit-identical to its solo run"
+        );
+    }
+    assert_eq!(pool.active_jobs(), 0);
+    assert_eq!(pool.pending_jobs(), 0);
     pool.shutdown();
 }

@@ -1,0 +1,273 @@
+//! End-to-end loopback tests for the serving front-end: real
+//! `Server`s on ephemeral ports, concurrent clients, a mixed
+//! factorisation stream with injected faults and deadlines, digest
+//! verification against the sequential references, typed refusals,
+//! and graceful drain. The acceptance bar of the serve subsystem: a
+//! failure or an overload is *always* answered with a typed frame on
+//! a live socket, and an admitted job *always* delivers a terminal
+//! frame whose success digest is f32-bit-identical to the sequential
+//! reference.
+
+use gprm::sched::workload::{self, Params};
+use gprm::serve::frame::{read_frame, write_frame};
+use gprm::serve::{
+    loadgen, matrix_digest, Client, LoadConfig, Request, Response,
+    ServeConfig, Server,
+};
+
+fn ref_digest(name: &str, nb: usize, bs: usize, seed: u32) -> u64 {
+    let w = workload::find(name).expect("registry workload");
+    let mut m = w.make_input(&Params::new(nb, bs), seed);
+    w.reference_seq(&mut m);
+    matrix_digest(&m)
+}
+
+/// The mixed stream's composition: the registry's factorisation
+/// (phase-capable) entries, like the throughput experiment.
+fn fact_names() -> Vec<&'static str> {
+    let p = Params::new(8, 8);
+    workload::registry()
+        .iter()
+        .filter(|w| w.phases(&p).is_some())
+        .map(|w| w.name())
+        .collect()
+}
+
+#[test]
+fn four_concurrent_clients_mixed_stream_end_to_end() {
+    let (nb, bs, seed) = (8usize, 8usize, 42u32);
+    let names = fact_names();
+    assert!(names.len() >= 2, "registry lost its mixed stream");
+    let digests: Vec<u64> = names
+        .iter()
+        .map(|n| ref_digest(n, nb, bs, seed))
+        .collect();
+    let server =
+        Server::bind("127.0.0.1:0", ServeConfig::new(4)).expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let run = std::thread::spawn(move || server.run());
+    let names = &names;
+    let digests = &digests;
+    std::thread::scope(|ts| {
+        for c in 0..4usize {
+            ts.spawn(move || {
+                let mut cl = Client::connect(addr).expect("connect");
+                assert!(matches!(
+                    cl.request(&Request::Ping),
+                    Ok(Response::Pong)
+                ));
+                // Poll of a never-submitted id: typed, not an error.
+                assert!(matches!(
+                    cl.request(&Request::Poll { id: 999 }),
+                    Ok(Response::Polled {
+                        id: 999,
+                        known: false,
+                        done: false
+                    })
+                ));
+                for j in 0..3usize {
+                    let id = (c * 10 + j) as u64;
+                    let wname = names[(c + j) % names.len()];
+                    let want = digests[(c + j) % names.len()];
+                    // One poisoned and one deadlined request ride the
+                    // otherwise-clean mixed stream.
+                    let poison = c == 0 && j == 1;
+                    let dead = c == 1 && j == 1;
+                    cl.send(&Request::Submit {
+                        id,
+                        workload: wname.to_string(),
+                        nb: nb as u32,
+                        bs: bs as u32,
+                        seed,
+                        poison_task: poison.then_some(0),
+                        deadline: dead.then_some(0),
+                    })
+                    .expect("send submit");
+                    match cl.recv().expect("accept frame") {
+                        Response::Accepted { id: a } => {
+                            assert_eq!(a, id)
+                        }
+                        other => panic!(
+                            "client {c} job {j}: expected Accepted, \
+                             got {other:?}"
+                        ),
+                    }
+                    let terminal = cl.recv().expect("terminal frame");
+                    match terminal {
+                        Response::Done { id: d, digest, tasks, .. } => {
+                            assert_eq!(d, id);
+                            assert!(
+                                !poison,
+                                "poisoned job {id} reported success"
+                            );
+                            // A deadlined job may win the race and
+                            // complete — then its digest must still
+                            // be bit-identical.
+                            assert_eq!(
+                                digest, want,
+                                "client {c} job {j} ({wname}): digest \
+                                 differs from the sequential reference"
+                            );
+                            assert!(tasks > 0);
+                        }
+                        Response::Failed {
+                            id: d,
+                            attempts,
+                            task,
+                            ref op,
+                            ref msg,
+                        } => {
+                            assert_eq!(d, id);
+                            assert!(
+                                poison,
+                                "clean job {id} failed: {op} {msg}"
+                            );
+                            assert!(attempts >= 1);
+                            assert_eq!(task, 0, "poison was on task 0");
+                            assert!(!op.is_empty());
+                        }
+                        Response::Cancelled { id: d, .. } => {
+                            assert_eq!(d, id);
+                            assert!(
+                                dead,
+                                "job {id} cancelled without a deadline"
+                            );
+                        }
+                        other => panic!(
+                            "client {c} job {j}: unexpected terminal \
+                             {other:?}"
+                        ),
+                    }
+                    // Terminal frames retire the id: a later poll is
+                    // typed and unknown.
+                    assert!(matches!(
+                        cl.request(&Request::Poll { id }),
+                        Ok(Response::Polled { known: false, .. })
+                    ));
+                }
+            });
+        }
+    });
+    // All clients done: drain. The ack arrives only after every
+    // admitted job has delivered its terminal frame.
+    let mut cl = Client::connect(addr).expect("connect");
+    assert!(matches!(
+        cl.request(&Request::Shutdown),
+        Ok(Response::ShuttingDown)
+    ));
+    drop(cl);
+    let stats = run.join().expect("serve thread");
+    assert_eq!(stats.accepted, 12);
+    assert_eq!(stats.failed, 1, "exactly the poisoned request fails");
+    // The deadlined request is Cancelled unless it won the race.
+    assert_eq!(
+        stats.completed + stats.failed + stats.cancelled,
+        stats.accepted,
+        "an admitted job vanished without a terminal frame: {stats:?}"
+    );
+    assert!(stats.cancelled <= 1);
+}
+
+#[test]
+fn undecodable_frame_gets_typed_rejection_and_other_conns_survive() {
+    let server =
+        Server::bind("127.0.0.1:0", ServeConfig::new(2)).expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let stop = server.stop_flag();
+    let run = std::thread::spawn(move || server.run());
+    // A healthy connection before, during and after the poisoned one.
+    let mut healthy = Client::connect(addr).expect("connect");
+    assert!(matches!(
+        healthy.request(&Request::Ping),
+        Ok(Response::Pong)
+    ));
+    let mut raw =
+        std::net::TcpStream::connect(addr).expect("raw connect");
+    write_frame(&mut raw, &[0xFF, 1, 2, 3]).expect("garbage frame");
+    match read_frame(&mut raw).expect("rejection frame") {
+        Some(buf) => match Response::decode(&buf).expect("decodes") {
+            Response::Rejected { id, msg } => {
+                assert_eq!(id, u64::MAX, "no request id to echo");
+                assert!(msg.contains("undecodable"), "{msg}");
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        },
+        None => panic!("connection dropped without a typed frame"),
+    }
+    // The stream is beyond resync: the server closes it...
+    assert!(read_frame(&mut raw).expect("clean close").is_none());
+    // ...but other connections are untouched.
+    assert!(matches!(
+        healthy.request(&Request::Ping),
+        Ok(Response::Pong)
+    ));
+    // Unknown workloads and oversized grids are also typed, on a
+    // socket that stays live.
+    let bad = |workload: &str, nb: u32| Request::Submit {
+        id: 5,
+        workload: workload.to_string(),
+        nb,
+        bs: 4,
+        seed: 1,
+        poison_task: None,
+        deadline: None,
+    };
+    assert!(matches!(
+        healthy.request(&bad("no-such-workload", 4)),
+        Ok(Response::Rejected { id: 5, .. })
+    ));
+    assert!(matches!(
+        healthy.request(&bad(fact_names()[0], 65)),
+        Ok(Response::Rejected { id: 5, .. })
+    ));
+    assert!(matches!(
+        healthy.request(&Request::Ping),
+        Ok(Response::Pong)
+    ));
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    drop(healthy);
+    drop(raw);
+    let stats = run.join().expect("serve thread");
+    assert_eq!(stats.accepted, 0);
+    assert_eq!(stats.rejected, 3);
+}
+
+#[test]
+fn loadgen_open_loop_clean_run_with_faults_and_shutdown() {
+    let server =
+        Server::bind("127.0.0.1:0", ServeConfig::new(4)).expect("bind");
+    let addr = server.local_addr().expect("local addr");
+    let run = std::thread::spawn(move || server.run());
+    let cfg = LoadConfig {
+        rate_per_sec: 300.0,
+        requests: 60,
+        conns: 4,
+        nb: 6,
+        bs: 4,
+        seed: 3,
+        verify: true,
+        poison_every: 10,
+        deadline_every: 7,
+        shutdown: true,
+        ..LoadConfig::new(&addr.to_string())
+    };
+    let r = loadgen::run(&cfg).expect("loadgen run");
+    assert!(r.pass(), "loadgen must pass: {r:?}");
+    assert_eq!(r.sent, 60);
+    assert_eq!(r.lost, 0, "every request got a terminal frame");
+    assert_eq!(
+        r.done + r.failed + r.cancelled,
+        r.accepted,
+        "admitted vs terminal frames disagree: {r:?}"
+    );
+    assert_eq!(r.failed, 6, "poison every 10th of 60 requests");
+    assert_eq!(r.digest_mismatches, 0);
+    assert!(r.hist.count() > 0, "successful latencies were recorded");
+    assert!(r.shutdown_acked);
+    let stats = run.join().expect("serve thread");
+    assert_eq!(stats.accepted, r.accepted);
+    assert_eq!(
+        stats.completed + stats.failed + stats.cancelled,
+        stats.accepted
+    );
+}
